@@ -1,0 +1,74 @@
+//! Delegate analysis (paper Sec. 3.1 + Figs. 7/8): run the delegate
+//! simulator and the pass pipeline over every emitted graph — ours at
+//! runtime scale and Stable Diffusion v2.1 at full scale — and report
+//! coverage, failures, rewrites, and the modeled latency effect.
+//!
+//!     cargo run --release --example delegate_analysis
+
+use std::path::Path;
+
+use mobile_diffusion::delegate::{graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740};
+use mobile_diffusion::graph::{self, OpType};
+use mobile_diffusion::passes;
+
+fn main() -> mobile_diffusion::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rules = RuleSet::default();
+
+    for name in [
+        "sd_v21_unet",
+        "sd_v21_text_encoder",
+        "sd_v21_decoder",
+        "small_unet",
+        "small_text_encoder",
+        "small_decoder",
+    ] {
+        let mut g = graph::load(&dir.join(format!("{name}.graph.json")))?;
+        println!("=== {name} ===");
+        println!(
+            "  {} ops, {} tensors, {:.1} MB weights (f32)",
+            g.ops.len(),
+            g.tensors.len(),
+            g.weight_bytes() as f64 / 1e6
+        );
+
+        let before = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+        let failures = rules.failures(&g);
+        let mut reasons = std::collections::BTreeMap::new();
+        for (_, v) in &failures {
+            *reasons.entry(format!("{v:?}").split('(').next().unwrap().
+                  split('{').next().unwrap().trim().to_string()).or_insert(0) += 1;
+        }
+        println!(
+            "  export form: coverage {:.1}%, {} failing ops {:?}",
+            rules.coverage(&g) * 100.0,
+            failures.len(),
+            reasons
+        );
+
+        let report = passes::run_all(&mut g);
+        for (pass, n) in &report.applied {
+            if *n > 0 {
+                println!("    {pass}: {n} site(s)");
+            }
+        }
+        let after = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+
+        // Fig. 7 invariants: no BroadcastTo, nothing above rank 4
+        assert_eq!(g.op_histogram().get(&OpType::BroadcastTo), None);
+        assert!(g.max_rank() <= 4);
+        // Fig. 8 invariant: every GELU now clamps
+        let minimums = g.op_histogram().get(&OpType::Minimum).copied().unwrap_or(0);
+        println!(
+            "  after passes: coverage {:.1}%, {} gamma_M clamps, \
+             modeled latency {:.1} ms -> {:.1} ms ({:.2}x)",
+            rules.coverage(&g) * 100.0,
+            minimums,
+            before.total() * 1e3,
+            after.total() * 1e3,
+            before.total() / after.total()
+        );
+        println!();
+    }
+    Ok(())
+}

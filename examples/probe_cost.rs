@@ -1,0 +1,27 @@
+use std::collections::BTreeMap;
+use std::path::Path;
+use mobile_diffusion::delegate::*;
+use mobile_diffusion::graph;
+use mobile_diffusion::passes;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut g = graph::load(&dir.join("sd_v21_unet.graph.json")).unwrap();
+    passes::run_all(&mut g);
+    let mut by_type: BTreeMap<&str, (f64, f64, usize)> = BTreeMap::new();
+    let mut total_flops = 0.0;
+    for op in &g.ops {
+        let t = op_latency(&g, op, &GPU_ADRENO740);
+        let f = mobile_diffusion::delegate::cost::op_flops(&g, op);
+        total_flops += f;
+        let e = by_type.entry(op.ty.name()).or_default();
+        e.0 += t; e.1 += f; e.2 += 1;
+    }
+    let fused = single_device_cost(&g, &GPU_ADRENO740);
+    println!("total flops {:.1} G, unfused {:.1} ms, fused {:.1} ms",
+        total_flops/1e9,
+        by_type.values().map(|v| v.0).sum::<f64>()*1e3, fused*1e3);
+    for (ty, (t, f, n)) in by_type {
+        println!("{:<26} {:>5}  {:>8.1} ms  {:>8.1} GF", ty, n, t*1e3, f/1e9);
+    }
+}

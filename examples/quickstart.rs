@@ -1,0 +1,39 @@
+//! Quickstart: generate one image through the serving API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Loads the AOT artifacts, starts the single-device server (the
+//! paper's pipelined executor behind a FIFO queue), generates one
+//! 256x256 image with a short distilled schedule, and writes a PNG.
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::util::image;
+
+fn main() -> mobile_diffusion::Result<()> {
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.num_steps = 4; // quick demo; use 20 for the paper's schedule
+    cfg.prompt = "a photograph of an astronaut riding a horse".into();
+
+    let mut server = Server::start(&cfg)?;
+    println!("generating \"{}\" ({} steps)...", cfg.prompt, cfg.num_steps);
+    let resp = server.generate(&cfg.prompt, 42)?;
+
+    println!(
+        "done in {:.2} s (denoise {:.2} s, decode {:.2} s), peak memory {:.1} MB",
+        resp.timings.total_s,
+        resp.timings.denoise_s,
+        resp.timings.decode_s,
+        resp.peak_memory as f64 / 1e6
+    );
+    let out = std::path::PathBuf::from("quickstart.png");
+    image::write_png(
+        &out,
+        resp.image_size,
+        resp.image_size,
+        &image::float_to_rgb8(&resp.image),
+    )?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Serving demo: push a batch of prompts through the coordinator (FIFO
+//! queue in front of the single-device pipelined executor, UNet resident
+//! across requests — the paper's app behaviour) and report the metrics.
+//!
+//!     cargo run --release --example serve
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+
+const PROMPTS: &[&str] = &[
+    "a photograph of an astronaut riding a horse",
+    "a cyberpunk city at night, neon lights",
+    "an oil painting of a lighthouse in a storm",
+    "a bowl of ramen, studio lighting",
+    "a golden retriever puppy in the snow",
+    "the skyline of Seoul at sunset",
+];
+
+fn main() -> mobile_diffusion::Result<()> {
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.num_steps = 4; // demo schedule; 20 for the paper's
+
+    let mut server = Server::start(&cfg)?;
+    println!("serving {} prompts, {} steps each...\n", PROMPTS.len(), cfg.num_steps);
+
+    let t0 = std::time::Instant::now();
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let resp = server.generate(prompt, i as u64 + 1)?;
+        println!(
+            "#{:<2} {:>6.2} s (queue {:>5.3} s, peak {:>5.1} MB)  {prompt}",
+            resp.id,
+            resp.timings.total_s,
+            resp.queue_s,
+            resp.peak_memory as f64 / 1e6
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nthroughput: {:.2} images/min over {:.1} s",
+        PROMPTS.len() as f64 / wall * 60.0,
+        wall
+    );
+    println!("{}", server.metrics_report()?);
+    Ok(())
+}

@@ -1,0 +1,241 @@
+"""AOT build: lower every component to HLO text + write weights and the
+manifest.  This is the ONLY Python entry point on the build path; the Rust
+binary is self-contained once ``make artifacts`` has run.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import graphspec, model, quantize, scheduler, tokenizer, weightsbin
+from .config import DEFAULT
+
+# UNet prune fraction for the int8+pruned artifact (paper: "huge
+# convolution layers"); kept modest to preserve output quality.
+PRUNE_FRAC = 0.125
+
+GOLDEN_PROMPTS = [
+    "a photograph of an astronaut riding a horse",
+    "mobile stable diffusion on a galaxy s23",
+    "The quick brown fox, jumps over the lazy dog!",
+    "",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_component(fn, arrays, act_specs) -> str:
+    param_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    lowered = jax.jit(fn).lower(param_specs, *act_specs)
+    return to_hlo_text(lowered)
+
+
+def spec_json(specs):
+    return [{"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+            for s in specs]
+
+
+def build_component(name: str, builder, variant: str, out_dir: str,
+                    manifest: dict, key: str = None):
+    key = key or name
+    t0 = time.time()
+    fn, paths, arrays, act_specs = builder(DEFAULT, variant)
+    hlo = lower_component(fn, arrays, act_specs)
+    hlo_file = f"{key}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(hlo)
+    out_specs = jax.eval_shape(
+        fn, [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays],
+        *act_specs)
+    manifest["components"][key] = {
+        "hlo": hlo_file,
+        "variant": variant,
+        "params": [
+            {"path": p, "shape": list(a.shape), "dtype": str(a.dtype)}
+            for p, a in zip(paths, arrays)
+        ],
+        "activations": spec_json(act_specs),
+        "outputs": spec_json(jax.tree_util.tree_leaves(out_specs)),
+        "param_bytes_f32": int(sum(a.size * 4 for a in arrays)),
+        "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+    }
+    print(f"  lowered {key:<16} ({len(hlo) / 1e6:.1f} MB HLO, "
+          f"{time.time() - t0:.1f}s)")
+    return paths, arrays
+
+
+def write_weight_files(out_dir: str, manifest: dict):
+    """fp32 weights for every component + int8 / int8-pruned for the UNet."""
+    weight_sets = {}
+    for comp, builder in (("text_encoder", model.build_text_encoder),
+                          ("unet", model.build_unet),
+                          ("decoder", model.build_decoder),
+                          ("block", model.build_block)):
+        _fn, paths, arrays, _ = builder(DEFAULT, "mobile")
+        fname = f"weights_{comp}_fp32.bin"
+        size = weightsbin.write(
+            os.path.join(out_dir, fname),
+            [{"path": p, "arr": a} for p, a in zip(paths, arrays)])
+        weight_sets.setdefault(comp, {})["fp32"] = {
+            "file": fname, "bytes": size}
+        if comp != "unet":
+            continue
+        for tag, frac in (("int8", 0.0), ("int8_pruned", PRUNE_FRAC)):
+            qmap = quantize.compress(paths, arrays, prune_frac=frac)
+            entries = []
+            for p, a in zip(paths, arrays):
+                if p in qmap:
+                    q = qmap[p]
+                    entries.append({"path": p, "q": q["q"],
+                                    "scale": q["scale"], "keep": q["keep"]})
+                else:
+                    entries.append({"path": p, "arr": a})
+            fname = f"weights_{comp}_{tag}.bin"
+            size = weightsbin.write(os.path.join(out_dir, fname), entries)
+            weight_sets[comp][tag] = {"file": fname, "bytes": size}
+    # block_w8 params are self-contained: int8 FFN weights live directly in
+    # the param list (the Rust side feeds them to the W8A16 kernel as-is,
+    # so their scales are separate f32 params, and the int8 payload is
+    # stored with identity scale here).
+    for key, frac in (("block_w8", 0.0), ("block_w8p", PRUNE_FRAC)):
+        _fn, paths, arrays, _ = model.build_block_w8(DEFAULT, "mobile", frac)
+        entries = []
+        for p, a in zip(paths, arrays):
+            if a.dtype == np.int8:
+                entries.append({"path": p, "q": a,
+                                "scale": np.ones(a.shape[-1], np.float32)})
+            else:
+                entries.append({"path": p,
+                                "arr": np.asarray(a, dtype=np.float32)})
+        fname = f"weights_{key}_fp32.bin"
+        size = weightsbin.write(os.path.join(out_dir, fname), entries)
+        weight_sets[key] = {"fp32": {"file": fname, "bytes": size}}
+    # attach weight sets to the manifest components that consume them
+    consumers = {
+        "text_encoder": ["text_encoder"],
+        "unet": ["unet_base", "unet_mobile"],
+        "decoder": ["decoder"],
+        "block": ["block_fp"],
+        "block_w8": ["block_w8"],
+        "block_w8p": ["block_w8p"],
+    }
+    for comp, sets in weight_sets.items():
+        for key in consumers.get(comp, []):
+            if key in manifest["components"]:
+                manifest["components"][key].setdefault(
+                    "weights", {}).update(sets)
+
+
+def scheduler_manifest() -> dict:
+    cfg = DEFAULT.scheduler
+    acp = scheduler.alphas_cumprod(cfg)
+    ts = scheduler.timesteps(cfg)
+    # golden DDIM trace: latent0 seeded, eps := 0.1 * latent each step
+    latent0 = np.random.default_rng(1234).normal(size=8).astype(np.float64)
+    latent = latent0.copy()
+    trace = []
+    for i, t in enumerate(ts[:5]):
+        t_prev = ts[i + 1] if i + 1 < len(ts) else -1
+        eps = 0.1 * latent
+        latent = scheduler.ddim_step(latent, eps, t, t_prev, acp)
+        trace.append([float(v) for v in latent])
+    return {
+        "num_train_timesteps": cfg.num_train_timesteps,
+        "beta_start": cfg.beta_start,
+        "beta_end": cfg.beta_end,
+        "num_inference_steps": cfg.num_inference_steps,
+        "guidance_scale": cfg.guidance_scale,
+        "alphas_cumprod": [float(a) for a in acp],
+        "timesteps": ts,
+        "golden": {
+            "latent0": [float(v) for v in latent0],
+            "eps_scale": 0.1,
+            "trace": trace,
+        },
+    }
+
+
+def tokenizer_manifest() -> dict:
+    cfg = DEFAULT.text
+    return {
+        "vocab_size": cfg.vocab_size,
+        "seq_len": cfg.seq_len,
+        "golden": [
+            {"text": p,
+             "ids": tokenizer.encode(p, cfg.vocab_size, cfg.seq_len)}
+            for p in GOLDEN_PROMPTS
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated component keys to rebuild")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "format_version": 1,
+        "model": "mobile-stable-diffusion-small",
+        "cfg_batch": model.CFG_BATCH,
+        "latent": {"size": DEFAULT.unet.latent_size,
+                   "channels": DEFAULT.unet.in_channels},
+        "image": {"size": DEFAULT.image_size,
+                  "channels": DEFAULT.decoder.out_channels},
+        "components": {},
+        "scheduler": scheduler_manifest(),
+        "tokenizer": tokenizer_manifest(),
+    }
+
+    plan = [
+        ("text_encoder", model.build_text_encoder, "mobile", "text_encoder"),
+        ("unet", model.build_unet, "base", "unet_base"),
+        ("unet", model.build_unet, "mobile", "unet_mobile"),
+        ("decoder", model.build_decoder, "mobile", "decoder"),
+        ("block", model.build_block, "base", "block_fp"),
+        ("block_w8", lambda c, v: model.build_block_w8(c, v, 0.0),
+         "mobile", "block_w8"),
+        ("block_w8", lambda c, v: model.build_block_w8(c, v, PRUNE_FRAC),
+         "mobile", "block_w8p"),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("lowering components:")
+    for name, builder, variant, key in plan:
+        if only and key not in only:
+            continue
+        build_component(name, builder, variant, out_dir, manifest, key=key)
+
+    print("writing weight files:")
+    write_weight_files(out_dir, manifest)
+
+    print("writing graph specs:")
+    graphspec.write_graphs(out_dir)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

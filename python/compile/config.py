@@ -1,0 +1,80 @@
+"""Model configuration for the Mobile Stable Diffusion reproduction.
+
+The architecture mirrors Stable Diffusion v2.1 (CLIP text encoder -> UNet
+denoiser with spatial-transformer blocks -> VAE decoder) at laptop scale.
+Shape *ratios* of the layers the paper identifies as problematic are kept:
+
+  * the post-skip-concat 3x3 conv at the highest resolution has a 3:1
+    input:output channel ratio (paper: 1920 -> 640 at 32x32);
+  * spatial-transformer FFN fully-connected layers operate on flattened
+    (H*W, C) activations (paper: 1x4096x320).
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class TextEncoderConfig:
+    vocab_size: int = 4096
+    seq_len: int = 16
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 4
+    out_channels: int = 4
+    latent_size: int = 32           # latent spatial resolution (square)
+    base_channels: int = 64
+    channel_mults: Tuple[int, ...] = (1, 2)
+    # spatial-transformer blocks at these level indices (0 = highest res)
+    attn_levels: Tuple[int, ...] = (1,)
+    n_res_blocks: int = 2
+    n_heads: int = 4
+    d_time: int = 256
+    context_dim: int = 128
+    groups: int = 8
+    ffn_mult: int = 4
+    # GELU clip constant of the numerically stable approximation (paper M=10)
+    gelu_clip: float = 10.0
+
+
+@dataclass(frozen=True)
+class DecoderConfig:
+    latent_channels: int = 4
+    base_channels: int = 64
+    # each upsample doubles resolution: 32 -> 256
+    n_upsamples: int = 3
+    out_channels: int = 3
+    groups: int = 8
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """DDPM beta schedule (scaled-linear, as in Stable Diffusion)."""
+    num_train_timesteps: int = 1000
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+    # effective inference steps after distillation (paper: 20)
+    num_inference_steps: int = 20
+    guidance_scale: float = 7.5
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    text: TextEncoderConfig = field(default_factory=TextEncoderConfig)
+    unet: UNetConfig = field(default_factory=UNetConfig)
+    decoder: DecoderConfig = field(default_factory=DecoderConfig)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    seed: int = 0
+
+    @property
+    def image_size(self) -> int:
+        return self.unet.latent_size * (2 ** self.decoder.n_upsamples)
+
+
+DEFAULT = ModelConfig()

@@ -1,0 +1,459 @@
+"""TFLite-level computation-graph specs for the Rust delegate simulator.
+
+The paper's Sec. 3.1 problems live at the *TFLite op* level (which ops the
+GPU delegate accepts), below the HLO we lower for execution.  This module
+emits that op-level graph as JSON for two scales:
+
+  * ``small``  — the model we actually execute (config.DEFAULT shapes);
+  * ``sd_v21`` — Stable Diffusion v2.1 at full scale (latent 64x64x4,
+    base 320, mults 1/2/4/4, attention at the three highest resolutions,
+    context 1024/seq 77).  At this scale the paper's exact failures
+    appear: the 1x4096x320 FULLY_CONNECTED of the level-0 spatial
+    transformer and the 1920 -> 640 3x3 conv at 32x32 in the up path.
+
+Graphs are emitted in the *export* form a stock TF->TFLite conversion
+produces: FULLY_CONNECTED (not conv) in transformer blocks, group norm
+decomposed with a rank-5 reshape + BROADCAST_TO, tanh-cubic GELU without
+clamps, unserialized convs.  The Rust pass pipeline (rust/src/passes/)
+rewrites them into the paper's mobile form.
+
+JSON schema (consumed by rust/src/graph/):
+  {"name": str,
+   "activation_dtype": "f16",
+   "tensors": [{"id", "name", "shape", "dtype", "const": bool}],
+   "ops": [{"id", "type", "name", "inputs": [tid], "outputs": [tid],
+            "attrs": {str: int|float|str}}]}
+"""
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .config import ModelConfig, DEFAULT
+
+F16 = "f16"
+F32 = "f32"
+I8 = "i8"
+I32 = "i32"
+
+
+@dataclass
+class UNetSpec:
+    latent_size: int
+    in_channels: int
+    base: int
+    mults: Tuple[int, ...]
+    attn_levels: Tuple[int, ...]
+    n_res_blocks: int
+    context_dim: int
+    seq_len: int
+    d_head: int
+    groups: int
+    ffn_mult: int = 4
+    d_time: int = 0
+
+    def __post_init__(self):
+        if not self.d_time:
+            self.d_time = 4 * self.base
+
+
+@dataclass
+class TextSpec:
+    seq_len: int
+    d_model: int
+    n_layers: int
+    d_ff: int
+    vocab: int
+
+
+@dataclass
+class DecoderSpec:
+    latent_size: int
+    latent_channels: int
+    channels: Tuple[int, ...]   # per upsample stage, highest first
+    out_channels: int
+    groups: int
+
+
+def small_specs(cfg: ModelConfig = DEFAULT):
+    u = cfg.unet
+    return {
+        "unet": UNetSpec(
+            latent_size=u.latent_size, in_channels=u.in_channels,
+            base=u.base_channels, mults=u.channel_mults,
+            attn_levels=u.attn_levels, n_res_blocks=u.n_res_blocks,
+            context_dim=u.context_dim, seq_len=cfg.text.seq_len,
+            d_head=u.base_channels // u.n_heads * u.channel_mults[0],
+            groups=u.groups, ffn_mult=u.ffn_mult, d_time=u.d_time,
+        ),
+        "text_encoder": TextSpec(
+            seq_len=cfg.text.seq_len, d_model=cfg.text.d_model,
+            n_layers=cfg.text.n_layers, d_ff=cfg.text.d_ff,
+            vocab=cfg.text.vocab_size,
+        ),
+        "decoder": DecoderSpec(
+            latent_size=u.latent_size,
+            latent_channels=cfg.decoder.latent_channels,
+            channels=(cfg.decoder.base_channels,) * cfg.decoder.n_upsamples,
+            out_channels=cfg.decoder.out_channels, groups=cfg.decoder.groups,
+        ),
+    }
+
+
+def sd_v21_specs():
+    """Stable Diffusion v2.1 architecture (865M-param UNet shape-level)."""
+    return {
+        "unet": UNetSpec(
+            latent_size=64, in_channels=4, base=320, mults=(1, 2, 4, 4),
+            attn_levels=(0, 1, 2), n_res_blocks=2, context_dim=1024,
+            seq_len=77, d_head=64, groups=32,
+        ),
+        # OpenCLIP ViT-H/14 text tower
+        "text_encoder": TextSpec(
+            seq_len=77, d_model=1024, n_layers=23, d_ff=4096, vocab=49408),
+        # SD VAE decoder: 64 -> 512 through 512/512/256/128 stages
+        "decoder": DecoderSpec(
+            latent_size=64, latent_channels=4,
+            channels=(512, 256, 128), out_channels=3, groups=32),
+    }
+
+
+class GraphBuilder:
+    """Accumulates tensors and ops; mirrors a TFLite flatbuffer layout."""
+
+    def __init__(self, name: str, activation_dtype: str = F16):
+        self.name = name
+        self.activation_dtype = activation_dtype
+        self.tensors: List[dict] = []
+        self.ops: List[dict] = []
+
+    # -- tensors ---------------------------------------------------------
+    def tensor(self, name: str, shape: List[int], dtype: Optional[str] = None,
+               const: bool = False) -> int:
+        tid = len(self.tensors)
+        self.tensors.append({
+            "id": tid, "name": name, "shape": list(shape),
+            "dtype": dtype or self.activation_dtype, "const": const,
+        })
+        return tid
+
+    def weight(self, name: str, shape: List[int], dtype: str = F32) -> int:
+        return self.tensor(name, shape, dtype=dtype, const=True)
+
+    def shape_of(self, tid: int) -> List[int]:
+        return self.tensors[tid]["shape"]
+
+    # -- ops -------------------------------------------------------------
+    def op(self, op_type: str, name: str, inputs: List[int],
+           out_shape: List[int], attrs: Optional[Dict] = None,
+           out_dtype: Optional[str] = None) -> int:
+        out = self.tensor(f"{name}:out", out_shape, dtype=out_dtype)
+        self.ops.append({
+            "id": len(self.ops), "type": op_type, "name": name,
+            "inputs": list(inputs), "outputs": [out], "attrs": attrs or {},
+        })
+        return out
+
+    # -- composite emitters ----------------------------------------------
+    def conv2d(self, name: str, x: int, cin: int, cout: int, k: int = 3,
+               stride: int = 1) -> int:
+        n, h, w, c = self.shape_of(x)
+        assert c == cin, (name, c, cin)
+        wt = self.weight(f"{name}/w", [k, k, cin, cout])
+        bt = self.weight(f"{name}/b", [cout])
+        oh, ow = h // stride, w // stride
+        return self.op("CONV_2D", name, [x, wt, bt], [n, oh, ow, cout],
+                       attrs={"kernel": k, "stride": stride})
+
+    def fully_connected(self, name: str, x: int, d_in: int, d_out: int) -> int:
+        shape = self.shape_of(x)
+        assert shape[-1] == d_in, (name, shape, d_in)
+        wt = self.weight(f"{name}/w", [d_in, d_out])
+        bt = self.weight(f"{name}/b", [d_out])
+        return self.op("FULLY_CONNECTED", name, [x, wt, bt],
+                       shape[:-1] + [d_out])
+
+    def binary(self, op_type: str, name: str, a: int, b: int) -> int:
+        sa, sb = self.shape_of(a), self.shape_of(b)
+        out = sa if len(sa) >= len(sb) else sb
+        return self.op(op_type, name, [a, b], out)
+
+    def reshape(self, name: str, x: int, shape: List[int]) -> int:
+        return self.op("RESHAPE", name, [x], shape)
+
+    def silu(self, name: str, x: int) -> int:
+        s = self.op("LOGISTIC", f"{name}/sigmoid", [x], self.shape_of(x))
+        return self.binary("MUL", f"{name}/mul", x, s)
+
+    def gelu(self, name: str, x: int, stable: bool = False) -> int:
+        """Decomposed tanh GELU (paper Fig. 8 when ``stable``)."""
+        sh = self.shape_of(x)
+        g = x
+        if stable:
+            g = self.op("MINIMUM", f"{name}/min", [g], sh)
+            g = self.op("MAXIMUM", f"{name}/max", [g], sh)
+        c1 = self.op("MUL", f"{name}/sq", [g, g], sh)
+        c2 = self.op("MUL", f"{name}/cube", [c1, g], sh)
+        c3 = self.op("MUL", f"{name}/scale_cube", [c2], sh)
+        s = self.op("ADD", f"{name}/add_cube", [g, c3], sh)
+        s = self.op("MUL", f"{name}/scale", [s], sh)
+        t = self.op("TANH", f"{name}/tanh", [s], sh)
+        t = self.op("ADD", f"{name}/one_plus", [t], sh)
+        hx = self.op("MUL", f"{name}/half_x", [x], sh)
+        return self.binary("MUL", f"{name}/out", hx, t)
+
+    def group_norm(self, name: str, x: int, groups: int,
+                   bcast_free: bool = False) -> int:
+        """TFLite group-norm subgraph.
+
+        Export form (paper Fig. 7 left): rank-5 reshape, MEAN,
+        SQUARED_DIFFERENCE, explicit BROADCAST_TO of mean/var.
+        Broadcast-free form (Fig. 7 right): rank-4 tensors, no broadcast.
+        """
+        n, h, w, c = self.shape_of(x)
+        cg = c // groups
+        gamma = self.weight(f"{name}/gamma", [c])
+        beta = self.weight(f"{name}/beta", [c])
+        if not bcast_free:
+            x5 = self.reshape(f"{name}/reshape5", x, [n, h, w, groups, cg])
+            mean = self.op("MEAN", f"{name}/mean", [x5], [n, 1, 1, groups, 1])
+            mean_b = self.op("BROADCAST_TO", f"{name}/mean_bcast", [mean],
+                             [n, h, w, groups, cg])
+            sqd = self.op("SQUARED_DIFFERENCE", f"{name}/sqdiff",
+                          [x5, mean_b], [n, h, w, groups, cg])
+            var = self.op("MEAN", f"{name}/var", [sqd], [n, 1, 1, groups, 1])
+            var_eps = self.op("ADD", f"{name}/var_eps", [var],
+                              [n, 1, 1, groups, 1])
+            rstd = self.op("RSQRT", f"{name}/rsqrt", [var_eps],
+                           [n, 1, 1, groups, 1])
+            rstd_b = self.op("BROADCAST_TO", f"{name}/rstd_bcast", [rstd],
+                             [n, h, w, groups, cg])
+            diff = self.op("SUB", f"{name}/center", [x5, mean_b],
+                           [n, h, w, groups, cg])
+            norm5 = self.op("MUL", f"{name}/normalize", [diff, rstd_b],
+                            [n, h, w, groups, cg])
+            norm = self.reshape(f"{name}/reshape4", norm5, [n, h, w, c])
+        else:
+            x4 = self.reshape(f"{name}/reshape4g", x, [n, h * w, groups, cg])
+            mean = self.op("MEAN", f"{name}/mean", [x4], [n, 1, groups, 1])
+            sqd = self.op("SQUARED_DIFFERENCE", f"{name}/sqdiff",
+                          [x4, mean], [n, h * w, groups, cg])
+            var = self.op("MEAN", f"{name}/var", [sqd], [n, 1, groups, 1])
+            var_eps = self.op("ADD", f"{name}/var_eps", [var],
+                              [n, 1, groups, 1])
+            rstd = self.op("RSQRT", f"{name}/rsqrt", [var_eps],
+                           [n, 1, groups, 1])
+            diff = self.op("SUB", f"{name}/center", [x4, mean],
+                           [n, h * w, groups, cg])
+            norm4 = self.op("MUL", f"{name}/normalize", [diff, rstd],
+                            [n, h * w, groups, cg])
+            norm = self.reshape(f"{name}/reshape4", norm4, [n, h, w, c])
+        scaled = self.op("MUL", f"{name}/gamma_mul", [norm, gamma],
+                         [n, h, w, c])
+        return self.op("ADD", f"{name}/beta_add", [scaled, beta],
+                       [n, h, w, c])
+
+    def layer_norm(self, name: str, x: int) -> int:
+        sh = self.shape_of(x)
+        red = sh[:-1] + [1]
+        gamma = self.weight(f"{name}/gamma", [sh[-1]])
+        beta = self.weight(f"{name}/beta", [sh[-1]])
+        mean = self.op("MEAN", f"{name}/mean", [x], red)
+        sqd = self.op("SQUARED_DIFFERENCE", f"{name}/sqdiff", [x, mean], sh)
+        var = self.op("MEAN", f"{name}/var", [sqd], red)
+        var_eps = self.op("ADD", f"{name}/var_eps", [var], red)
+        rstd = self.op("RSQRT", f"{name}/rsqrt", [var_eps], red)
+        diff = self.op("SUB", f"{name}/center", [x, mean], sh)
+        norm = self.op("MUL", f"{name}/normalize", [diff, rstd], sh)
+        scaled = self.op("MUL", f"{name}/gamma_mul", [norm, gamma], sh)
+        return self.op("ADD", f"{name}/beta_add", [scaled, beta], sh)
+
+    def attention(self, name: str, x: int, ctx: int, c: int, d_ctx: int,
+                  n_heads: int) -> int:
+        """Self- (ctx == x) or cross-attention over (B, S, C)."""
+        b, s, _ = self.shape_of(x)
+        _, s_kv, _ = self.shape_of(ctx)
+        d = c // n_heads
+        q = self.fully_connected(f"{name}/q", x, c, c)
+        k = self.fully_connected(f"{name}/k", ctx, d_ctx, c)
+        v = self.fully_connected(f"{name}/v", ctx, d_ctx, c)
+        qh = self.reshape(f"{name}/q_heads", q, [b * n_heads, s, d])
+        kh = self.reshape(f"{name}/k_heads", k, [b * n_heads, s_kv, d])
+        vh = self.reshape(f"{name}/v_heads", v, [b * n_heads, s_kv, d])
+        logits = self.op("BATCH_MATMUL", f"{name}/qk", [qh, kh],
+                         [b * n_heads, s, s_kv], attrs={"adj_y": 1})
+        probs = self.op("SOFTMAX", f"{name}/softmax", [logits],
+                        [b * n_heads, s, s_kv])
+        o = self.op("BATCH_MATMUL", f"{name}/pv", [probs, vh],
+                    [b * n_heads, s, d])
+        o = self.reshape(f"{name}/merge_heads", o, [b, s, c])
+        return self.fully_connected(f"{name}/o", o, c, c)
+
+    def transformer_block(self, name: str, x: int, context: int, c: int,
+                          d_ctx: int, n_heads: int, groups: int,
+                          ffn_mult: int, stable_gelu: bool = False,
+                          bcast_free_gn: bool = False) -> int:
+        n, h, w, _ = self.shape_of(x)
+        y = self.group_norm(f"{name}/gn", x, groups, bcast_free=bcast_free_gn)
+        y = self.conv2d(f"{name}/proj_in", y, c, c, k=1)
+        t = self.reshape(f"{name}/flatten", y, [n, h * w, c])
+        z = self.layer_norm(f"{name}/ln1", t)
+        sa = self.attention(f"{name}/self_attn", z, z, c, c, n_heads)
+        t = self.binary("ADD", f"{name}/res1", t, sa)
+        z = self.layer_norm(f"{name}/ln2", t)
+        ca = self.attention(f"{name}/cross_attn", z, context, c, d_ctx, n_heads)
+        t = self.binary("ADD", f"{name}/res2", t, ca)
+        z = self.layer_norm(f"{name}/ln3", t)
+        z = self.fully_connected(f"{name}/ff1", z, c, ffn_mult * c)
+        z = self.gelu(f"{name}/gelu", z, stable=stable_gelu)
+        z = self.fully_connected(f"{name}/ff2", z, ffn_mult * c, c)
+        t = self.binary("ADD", f"{name}/res3", t, z)
+        y = self.reshape(f"{name}/unflatten", t, [n, h, w, c])
+        y = self.conv2d(f"{name}/proj_out", y, c, c, k=1)
+        return self.binary("ADD", f"{name}/res_out", x, y)
+
+    def res_block(self, name: str, x: int, cin: int, cout: int,
+                  groups: int, bcast_free_gn: bool = False) -> int:
+        n, h, w, _ = self.shape_of(x)
+        y = self.group_norm(f"{name}/gn1", x, groups, bcast_free=bcast_free_gn)
+        y = self.silu(f"{name}/silu1", y)
+        y = self.conv2d(f"{name}/conv1", y, cin, cout)
+        # time injection: FC of the time embedding, added per-channel
+        y = self.op("ADD", f"{name}/time_add", [y], [n, h, w, cout])
+        y = self.group_norm(f"{name}/gn2", y, groups, bcast_free=bcast_free_gn)
+        y = self.silu(f"{name}/silu2", y)
+        y = self.conv2d(f"{name}/conv2", y, cout, cout)
+        if cin != cout:
+            x = self.conv2d(f"{name}/skip", x, cin, cout, k=1)
+        return self.binary("ADD", f"{name}/res", x, y)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "activation_dtype": self.activation_dtype,
+            "tensors": self.tensors,
+            "ops": self.ops,
+        }
+
+
+def build_unet_graph(spec: UNetSpec, name: str = "unet") -> GraphBuilder:
+    """The stock-export UNet graph (base variant; B = 1 per dispatch,
+    as the mobile pipeline unrolls the CFG pair)."""
+    g = GraphBuilder(name)
+    s = spec.latent_size
+    chans = [spec.base * m for m in spec.mults]
+    latent = g.tensor("latent", [1, s, s, spec.in_channels])
+    context = g.tensor("context", [1, spec.seq_len, spec.context_dim])
+    g.tensor("timestep", [1])
+
+    def heads(c):
+        return max(1, c // spec.d_head)
+
+    x = g.conv2d("conv_in", latent, spec.in_channels, chans[0])
+    skips = [(x, chans[0])]
+    ch = chans[0]
+    res = s
+    for lvl, lch in enumerate(chans):
+        for i in range(spec.n_res_blocks):
+            x = g.res_block(f"down_{lvl}_{i}/res", x, ch, lch, spec.groups)
+            ch = lch
+            if lvl in spec.attn_levels:
+                x = g.transformer_block(
+                    f"down_{lvl}_{i}/attn", x, context, ch,
+                    spec.context_dim, heads(ch), spec.groups, spec.ffn_mult)
+            skips.append((x, ch))
+        if lvl != len(chans) - 1:
+            x = g.conv2d(f"downsample_{lvl}", x, ch, ch, stride=2)
+            res //= 2
+            skips.append((x, ch))
+
+    x = g.res_block("mid/res1", x, ch, ch, spec.groups)
+    x = g.transformer_block("mid/attn", x, context, ch, spec.context_dim,
+                            heads(ch), spec.groups, spec.ffn_mult)
+    x = g.res_block("mid/res2", x, ch, ch, spec.groups)
+
+    for lvl in reversed(range(len(chans))):
+        lch = chans[lvl]
+        for i in range(spec.n_res_blocks + 1):
+            skip, sc = skips.pop()
+            n, h, w, c = g.shape_of(x)
+            x = g.op("CONCATENATION", f"up_{lvl}_{i}/concat", [x, skip],
+                     [n, h, w, c + sc])
+            x = g.res_block(f"up_{lvl}_{i}/res", x, c + sc, lch, spec.groups)
+            ch = lch
+            if lvl in spec.attn_levels:
+                x = g.transformer_block(
+                    f"up_{lvl}_{i}/attn", x, context, ch,
+                    spec.context_dim, heads(ch), spec.groups, spec.ffn_mult)
+        if lvl != 0:
+            n, h, w, c = g.shape_of(x)
+            x = g.op("RESIZE_NEAREST_NEIGHBOR", f"upsample_{lvl}/resize",
+                     [x], [n, 2 * h, 2 * w, c])
+            x = g.conv2d(f"upsample_{lvl}/conv", x, ch, ch)
+    assert not skips
+
+    x = g.group_norm("out_gn", x, spec.groups)
+    x = g.silu("out_silu", x)
+    g.conv2d("conv_out", x, chans[0], spec.in_channels)
+    return g
+
+
+def build_text_graph(spec: TextSpec, name: str = "text_encoder") -> GraphBuilder:
+    g = GraphBuilder(name)
+    tokens = g.tensor("tokens", [1, spec.seq_len], dtype=I32)
+    table = g.weight("tok_emb/table", [spec.vocab, spec.d_model])
+    x = g.op("GATHER", "tok_emb/gather", [table, tokens],
+             [1, spec.seq_len, spec.d_model])
+    pos = g.weight("pos_emb/table", [spec.seq_len, spec.d_model])
+    x = g.op("ADD", "pos_add", [x, pos], [1, spec.seq_len, spec.d_model])
+    for i in range(spec.n_layers):
+        z = g.layer_norm(f"layer_{i}/ln1", x)
+        a = g.attention(f"layer_{i}/attn", z, z, spec.d_model, spec.d_model,
+                        max(1, spec.d_model // 64))
+        x = g.binary("ADD", f"layer_{i}/res1", x, a)
+        z = g.layer_norm(f"layer_{i}/ln2", x)
+        z = g.fully_connected(f"layer_{i}/ff1", z, spec.d_model, spec.d_ff)
+        z = g.gelu(f"layer_{i}/gelu", z)
+        z = g.fully_connected(f"layer_{i}/ff2", z, spec.d_ff, spec.d_model)
+        x = g.binary("ADD", f"layer_{i}/res2", x, z)
+    g.layer_norm("final_ln", x)
+    return g
+
+
+def build_decoder_graph(spec: DecoderSpec, name: str = "decoder") -> GraphBuilder:
+    g = GraphBuilder(name)
+    s = spec.latent_size
+    latent = g.tensor("latent", [1, s, s, spec.latent_channels])
+    ch = spec.channels[0]
+    x = g.conv2d("conv_in", latent, spec.latent_channels, ch)
+    x = g.res_block("res_in", x, ch, ch, spec.groups)
+    for i, cnext in enumerate(spec.channels):
+        n, h, w, c = g.shape_of(x)
+        x = g.op("RESIZE_NEAREST_NEIGHBOR", f"up_{i}/resize", [x],
+                 [n, 2 * h, 2 * w, c])
+        x = g.conv2d(f"up_{i}/conv", x, c, cnext)
+        x = g.res_block(f"up_{i}/res", x, cnext, cnext, spec.groups)
+    n, h, w, c = g.shape_of(x)
+    x = g.group_norm("out_gn", x, spec.groups)
+    x = g.silu("out_silu", x)
+    g.conv2d("conv_out", x, c, spec.out_channels)
+    return g
+
+
+def build_all(scale: str) -> Dict[str, dict]:
+    specs = small_specs() if scale == "small" else sd_v21_specs()
+    return {
+        "unet": build_unet_graph(specs["unet"]).to_json(),
+        "text_encoder": build_text_graph(specs["text_encoder"]).to_json(),
+        "decoder": build_decoder_graph(specs["decoder"]).to_json(),
+    }
+
+
+def write_graphs(out_dir: str):
+    import os
+    for scale in ("small", "sd_v21"):
+        graphs = build_all(scale)
+        for comp, graph in graphs.items():
+            path = os.path.join(out_dir, f"{scale}_{comp}.graph.json")
+            with open(path, "w") as f:
+                json.dump(graph, f)

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time; lowered with interpret=True).
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and a pytest/hypothesis
+suite in ``python/tests/``.  Real-TPU lowering would emit Mosaic
+custom-calls the CPU PJRT plugin cannot execute, so every ``pallas_call``
+here passes ``interpret=True`` — structure (BlockSpec tiling, VMEM
+footprint) is authored for TPU, numerics are validated on CPU.
+"""
+
+from . import ref  # noqa: F401
+from .gelu import gelu_stable_kernel, gelu_tanh_kernel  # noqa: F401
+from .groupnorm import group_norm_kernel  # noqa: F401
+from .attention import attention_kernel  # noqa: F401
+from .serial_conv import conv3x3_input_serialized_kernel  # noqa: F401
+from .w8a16_matmul import w8a16_matmul_kernel  # noqa: F401

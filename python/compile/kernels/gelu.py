@@ -1,0 +1,67 @@
+"""Pallas GELU kernels — baseline tanh approximation and the paper's
+numerically stable clipped variant (Sec. 3.2 / Fig. 8).
+
+Elementwise VPU work: the input is flattened to (rows, LANE) and tiled row
+blocks are streamed HBM->VMEM.  The stable variant adds a Minimum/Maximum
+clamp (gamma_M) in front of the cubic term — the exact graph of paper
+Fig. 8 — which costs two extra VPU ops and keeps every intermediate finite
+in float16.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+GELU_CUBIC = 0.044715
+
+# VPU-friendly lane width; rows per grid step sized so a block stays well
+# under VMEM (BLOCK_ROWS * 128 lanes * 4 B * 2 buffers ~= 256 KiB).
+LANE = 128
+BLOCK_ROWS = 256
+
+
+def _gelu_body(x_ref, o_ref, *, clip):
+    x = x_ref[...]
+    if clip is None:
+        g = x
+    else:
+        # paper Fig. 8: Minimum / Maximum ops ahead of the cubic term
+        g = jnp.minimum(jnp.maximum(x, -clip), clip)
+    inner = SQRT_2_OVER_PI * (g + GELU_CUBIC * g * g * g)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def _run(x, clip):
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.size
+    # pad to a whole (BLOCK_ROWS, LANE) tile grid
+    per_block = BLOCK_ROWS * LANE
+    blocks = max(1, -(-n // per_block))
+    padded = blocks * per_block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    x2 = flat.reshape(blocks * BLOCK_ROWS, LANE)
+
+    out = pl.pallas_call(
+        lambda x_ref, o_ref: _gelu_body(x_ref, o_ref, clip=clip),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=True,
+    )(x2)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def gelu_tanh_kernel(x):
+    """Baseline tanh-approximated GELU (float16-unstable for |x| > ~40.3)."""
+    return _run(x, clip=None)
+
+
+def gelu_stable_kernel(x, clip: float = 10.0):
+    """Numerically stable GELU with the gamma_M clamp (paper M = 10)."""
+    return _run(x, clip=clip)

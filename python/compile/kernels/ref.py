@@ -1,0 +1,158 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suites compare against.
+They are also used directly by the *baseline* (non-mobile) model variant,
+so `unet_base` vs `unet_mobile` exercises reference-vs-kernel end to end.
+"""
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+GELU_CUBIC = 0.044715
+
+
+def gelu_tanh(x):
+    """The well-known tanh approximation of GELU (paper Sec. 3.2, eq. 1).
+
+    In float16 the cubic term overflows for |x| >~ 40.3 (x**3 > 65504),
+    which is exactly the instability the paper observed on mobile GPUs.
+    """
+    inner = SQRT_2_OVER_PI * (x + GELU_CUBIC * x * x * x)
+    return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def gelu_stable(x, clip: float = 10.0):
+    """Numerically stable GELU (paper Sec. 3.2, eq. 2).
+
+    The argument of the cubic tanh term is clipped to [-M, M] first
+    (gamma_M in the paper); tanh saturates to +-1 well before |x| = 10,
+    so the result is unchanged while every intermediate stays finite in
+    float16.
+    """
+    g = jnp.clip(x, -clip, clip)
+    inner = SQRT_2_OVER_PI * (g + GELU_CUBIC * g * g * g)
+    return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def group_norm_naive(x, gamma, beta, groups: int, eps: float = 1e-5):
+    """Group normalization the way TF/TFLite emits it: a rank-5 reshape and
+    explicit broadcast (paper Fig. 7, left).  x: (N, H, W, C) NHWC."""
+    n, h, w, c = x.shape
+    cg = c // groups
+    x5 = x.reshape(n, h, w, groups, cg)                    # rank-5 tensor
+    mean = jnp.mean(x5, axis=(1, 2, 4), keepdims=True)     # (N,1,1,G,1)
+    var = jnp.mean(jnp.square(x5 - mean), axis=(1, 2, 4), keepdims=True)
+    # BroadcastTo is explicit in the TFLite graph; jnp broadcasts implicitly
+    # but the *semantics* (rank-5 broadcast) are identical.
+    x5 = (x5 - mean) * lax.rsqrt(var + eps)
+    out = x5.reshape(n, h, w, c)
+    return out * gamma.reshape(1, 1, 1, c) + beta.reshape(1, 1, 1, c)
+
+
+def group_norm_bcast_free(x, gamma, beta, groups: int, eps: float = 1e-5):
+    """Broadcast-free group normalization (paper Fig. 7, right): all
+    intermediate tensors are rank <= 4, no BroadcastTo anywhere."""
+    n, h, w, c = x.shape
+    cg = c // groups
+    x4 = x.reshape(n, h * w, groups, cg)                   # rank-4
+    mean = jnp.mean(x4, axis=(1, 3), keepdims=True)        # (N,1,G,1)
+    var = jnp.mean(jnp.square(x4 - mean), axis=(1, 3), keepdims=True)
+    x4 = (x4 - mean) * lax.rsqrt(var + eps)
+    out = x4.reshape(n, h, w, c)
+    return out * gamma.reshape(1, 1, 1, c) + beta.reshape(1, 1, 1, c)
+
+
+def attention(q, k, v, scale=None):
+    """Scaled dot-product attention.  q: (H, Sq, D), k/v: (H, Skv, D)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def conv2d_3x3(x, w, b=None):
+    """3x3 same-padding conv, NHWC x HWIO -> NHWC."""
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b.reshape(1, 1, 1, -1)
+    return out
+
+
+def conv2d_3x3_input_serialized(x, w, b=None, factor: int = 2):
+    """Input-channel-serialized 3x3 conv (paper Fig. 1b, top path).
+
+    The input channels are split into ``factor`` groups; each group is
+    convolved against its slice of the kernel and the partial sums are
+    accumulated.  Mathematically identical to conv2d_3x3 up to float
+    summation order — the paper verified the output images are near
+    identical (Fig. 2).
+    """
+    cin = x.shape[-1]
+    assert cin % factor == 0, (cin, factor)
+    cg = cin // factor
+    out = None
+    for i in range(factor):
+        xs = x[..., i * cg:(i + 1) * cg]
+        ws = w[:, :, i * cg:(i + 1) * cg, :]
+        part = lax.conv_general_dilated(
+            xs, ws, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        out = part if out is None else out + part
+    if b is not None:
+        out = out + b.reshape(1, 1, 1, -1)
+    return out
+
+
+def conv2d_3x3_output_serialized(x, w, b=None, factor: int = 8):
+    """Output-channel-serialized 3x3 conv (paper Fig. 1b, bottom path):
+    each call produces a slice of the output channels; results concat."""
+    cout = w.shape[-1]
+    assert cout % factor == 0, (cout, factor)
+    cg = cout // factor
+    parts = []
+    for i in range(factor):
+        ws = w[..., i * cg:(i + 1) * cg]
+        part = lax.conv_general_dilated(
+            x, ws, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if b is not None:
+            part = part + b[i * cg:(i + 1) * cg].reshape(1, 1, 1, -1)
+        parts.append(part)
+    out = jnp.concatenate(parts, axis=-1)
+    return out
+
+
+def w8a16_matmul(x, w_q, scale):
+    """Dequantize-then-matmul (paper Sec. 3.4): weights stored int8 with a
+    per-output-channel scale, cast up before the matmul.
+    x: (M, K) float, w_q: (K, N) int8, scale: (N,) float."""
+    w = w_q.astype(x.dtype) * scale.reshape(1, -1)
+    return x @ w
+
+
+def fc_as_conv2d(x, w, b=None):
+    """FullyConnected expressed as Reshape -> 1x1 Conv2D -> Reshape
+    (paper Fig. 1a).  x: (S, K), w: (K, N).  Must equal x @ w + b."""
+    s, k = x.shape
+    n = w.shape[1]
+    x4 = x.reshape(1, 1, s, k)                 # 1xHxWxC with H=1, W=S
+    w4 = w.reshape(1, 1, k, n)                 # 1x1 conv kernel, HWIO
+    out = lax.conv_general_dilated(
+        x4, w4, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out.reshape(s, n)
+    if b is not None:
+        out = out + b.reshape(1, -1)
+    return out

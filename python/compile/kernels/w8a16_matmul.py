@@ -1,0 +1,46 @@
+"""Pallas W8A16-style dequantize-then-matmul (paper Sec. 3.4).
+
+Mobile GPUs have no integer matmul, so the paper stores weights as int8
+(4x smaller than f32, 2x smaller than f16) and casts them up to float16
+immediately before the matmul.  The TPU phrasing: stream int8 weight
+tiles HBM->VMEM (quarter the bandwidth of f32), dequantize on the VPU
+with the per-output-channel scale, and feed the MXU.
+
+  grid = (N / BLOCK_N,); per step: (M, K) activations stay resident,
+  one (K, BLOCK_N) int8 weight tile + (1, BLOCK_N) scale are staged,
+  output block (M, BLOCK_N) written once.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _body(x_ref, w_ref, s_ref, o_ref):
+    x = x_ref[...]                                   # (M, K) float
+    w = w_ref[...].astype(x.dtype) * s_ref[...]      # dequant on the VPU
+    o_ref[...] = jnp.dot(x, w)                       # MXU
+
+
+def w8a16_matmul_kernel(x, w_q, scale):
+    """x: (M, K) float; w_q: (K, N) int8; scale: (N,) float -> (M, N)."""
+    m, k = x.shape
+    kk, n = w_q.shape
+    assert k == kk
+    block_n = BLOCK_N if n % BLOCK_N == 0 else n
+    grid = n // block_n
+
+    return pl.pallas_call(
+        _body,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w_q, scale.reshape(1, n))

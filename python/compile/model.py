@@ -1,0 +1,153 @@
+"""Layer-2 assembly: the three SD components as flat-parameter functions.
+
+Every builder returns ``(fn, flat_paths, flat_arrays, act_specs)`` where
+``fn(param_leaves_list, *activations)`` is the jittable function whose HLO
+parameter order is exactly ``flat_paths`` followed by the activations —
+the contract the Rust runtime relies on (see params.py).
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, DEFAULT
+from .params import Init, flatten, unflatten
+from .modules import text_encoder, unet, vae, transformer2d, layers
+
+# CFG batch: uncond + cond halves evaluated in one UNet call
+CFG_BATCH = 2
+
+# Distinct, stable seeds per component so artifacts are independent of
+# build order.
+SEED_TEXT, SEED_UNET, SEED_DECODER, SEED_BLOCK = 101, 202, 303, 404
+
+
+def _split(params):
+    flat = flatten(params)
+    paths = [p for p, _ in flat]
+    arrays = [a for _, a in flat]
+    return paths, arrays
+
+
+def build_text_encoder(cfg: ModelConfig = DEFAULT, variant: str = "mobile"):
+    p = text_encoder.init(Init(cfg.seed + SEED_TEXT), cfg.text)
+    paths, arrays = _split(p)
+
+    def fn(leaves: List, tokens):
+        pp = unflatten(paths, leaves)
+        return text_encoder.apply(pp, tokens, cfg.text, variant)
+
+    act_specs = [jax.ShapeDtypeStruct((1, cfg.text.seq_len), jnp.int32)]
+    return fn, paths, arrays, act_specs
+
+
+def build_unet(cfg: ModelConfig = DEFAULT, variant: str = "mobile"):
+    p = unet.init(Init(cfg.seed + SEED_UNET), cfg.unet)
+    paths, arrays = _split(p)
+    s = cfg.unet.latent_size
+
+    def fn(leaves: List, latent, timestep, context):
+        pp = unflatten(paths, leaves)
+        return unet.apply(pp, latent, timestep, context, cfg.unet, variant)
+
+    act_specs = [
+        jax.ShapeDtypeStruct((CFG_BATCH, s, s, cfg.unet.in_channels), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((CFG_BATCH, cfg.text.seq_len, cfg.unet.context_dim),
+                             jnp.float32),
+    ]
+    return fn, paths, arrays, act_specs
+
+
+def build_decoder(cfg: ModelConfig = DEFAULT, variant: str = "mobile"):
+    p = vae.init(Init(cfg.seed + SEED_DECODER), cfg.decoder)
+    paths, arrays = _split(p)
+    s = cfg.unet.latent_size
+
+    def fn(leaves: List, latent):
+        pp = unflatten(paths, leaves)
+        return vae.apply(pp, latent, cfg.decoder, variant)
+
+    act_specs = [
+        jax.ShapeDtypeStruct((1, s, s, cfg.decoder.latent_channels), jnp.float32)
+    ]
+    return fn, paths, arrays, act_specs
+
+
+def build_block(cfg: ModelConfig = DEFAULT, variant: str = "mobile"):
+    """One spatial-transformer block in isolation — the unit of the
+    paper's block-wise reconstruction-error metric (Sec. 3.4, Fig. 5)."""
+    c = cfg.unet.base_channels * cfg.unet.channel_mults[-1]
+    size = cfg.unet.latent_size // 2      # resolution at the attn level
+    p = transformer2d.init(Init(cfg.seed + SEED_BLOCK), c, cfg.unet.n_heads,
+                           cfg.unet.context_dim, cfg.unet.ffn_mult)
+    paths, arrays = _split(p)
+
+    def fn(leaves: List, x, context):
+        pp = unflatten(paths, leaves)
+        return transformer2d.apply(pp, x, context, cfg.unet.groups,
+                                   cfg.unet.n_heads, variant,
+                                   gelu_clip=cfg.unet.gelu_clip)
+
+    act_specs = [
+        jax.ShapeDtypeStruct((1, size, size, c), jnp.float32),
+        jax.ShapeDtypeStruct((1, cfg.text.seq_len, cfg.unet.context_dim),
+                             jnp.float32),
+    ]
+    return fn, paths, arrays, act_specs
+
+
+def build_block_w8(cfg: ModelConfig = DEFAULT, variant: str = "mobile",
+                   prune_frac: float = 0.0):
+    """The same spatial-transformer block with its FFN weights stored as
+    int8 + per-channel scale *inputs*, executed through the W8A16 Pallas
+    kernel — the paper's on-device compute path for quantized weights."""
+    from . import quantize
+
+    c = cfg.unet.base_channels * cfg.unet.channel_mults[-1]
+    size = cfg.unet.latent_size // 2
+    p = transformer2d.init(Init(cfg.seed + SEED_BLOCK), c, cfg.unet.n_heads,
+                           cfg.unet.context_dim, cfg.unet.ffn_mult)
+    for key in ("ff1", "ff2"):
+        w = p[key].pop("w")
+        if prune_frac > 0:
+            w, _keep = quantize.prune_structured(w, prune_frac)
+        q, scale = quantize.quantize_per_channel(np.asarray(w))
+        p[key]["q"] = q
+        p[key]["scale"] = scale
+    paths, arrays = _split(p)
+
+    def fn(leaves: List, x, context):
+        pp = unflatten(paths, leaves)
+        return transformer2d.apply(pp, x, context, cfg.unet.groups,
+                                   cfg.unet.n_heads, variant,
+                                   gelu_clip=cfg.unet.gelu_clip)
+
+    act_specs = [
+        jax.ShapeDtypeStruct((1, size, size, c), jnp.float32),
+        jax.ShapeDtypeStruct((1, cfg.text.seq_len, cfg.unet.context_dim),
+                             jnp.float32),
+    ]
+    return fn, paths, arrays, act_specs
+
+
+COMPONENTS = {
+    "text_encoder": build_text_encoder,
+    "unet": build_unet,
+    "decoder": build_decoder,
+    "block": build_block,
+    "block_w8": build_block_w8,
+}
+
+
+def run_component(name: str, acts: List[np.ndarray],
+                  cfg: ModelConfig = DEFAULT, variant: str = "mobile",
+                  arrays_override=None):
+    """Eager helper for tests: run a component on concrete inputs."""
+    fn, _paths, arrays, _specs = COMPONENTS[name](cfg, variant)
+    if arrays_override is not None:
+        arrays = arrays_override
+    leaves = [jnp.asarray(a) for a in arrays]
+    return np.asarray(fn(leaves, *[jnp.asarray(a) for a in acts]))

@@ -1,0 +1,3 @@
+"""Layer-2 model modules: a from-scratch latent-diffusion pipeline
+(CLIP-like text encoder, UNet denoiser with spatial-transformer blocks,
+VAE decoder) mirroring Stable Diffusion v2.1 at laptop scale."""

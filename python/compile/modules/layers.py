@@ -1,0 +1,111 @@
+"""Primitive layers shared by every module.
+
+Each layer dispatches on the model *variant*:
+
+  * ``base``   — the graph a stock TF->TFLite export would produce
+                 (rank-5 group norm with broadcasts, tanh-cubic GELU,
+                 plain convs), built on the pure-jnp references.
+  * ``mobile`` — the paper's rewritten graph, built on the L1 Pallas
+                 kernels (broadcast-free group norm, clipped GELU,
+                 input-serialized bottleneck conv).
+"""
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ref
+from ..kernels.gelu import gelu_stable_kernel, gelu_tanh_kernel
+from ..kernels.groupnorm import group_norm_kernel
+from ..kernels.attention import attention_kernel
+
+BASE = "base"
+MOBILE = "mobile"
+VARIANTS = (BASE, MOBILE)
+
+
+def linear(p, x):
+    """x: (..., K) @ (K, N) + b."""
+    return x @ p["w"] + p["b"]
+
+
+def conv2d(p, x, stride: int = 1):
+    """NHWC 3x3/1x1 same-padding conv; p['w'] is HWIO."""
+    out = lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"].reshape(1, 1, 1, -1)
+
+
+def silu(x):
+    """SiLU/Swish: x * sigmoid(x) — the resnet-path nonlinearity of SD."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def gelu(x, variant: str, clip: float = 10.0):
+    """GELU dispatch: paper Sec. 3.2."""
+    if variant == MOBILE:
+        return gelu_stable_kernel(x, clip=clip)
+    return gelu_tanh_kernel(x)
+
+
+def group_norm(p, x, groups: int, variant: str, eps: float = 1e-5):
+    """GroupNorm dispatch: paper Sec. 3.1 (Fig. 7).
+
+    ``base`` keeps the TFLite-export semantics (rank-5 + broadcast);
+    ``mobile`` runs the broadcast-free Pallas kernel per batch element
+    (the mobile pipeline is batch-1 per delegate invocation; CFG batch-2
+    is unrolled, mirroring two sequential GPU dispatches).
+    """
+    if variant == MOBILE:
+        outs = [
+            group_norm_kernel(x[i:i + 1], p["gamma"], p["beta"], groups, eps=eps)
+            for i in range(x.shape[0])
+        ]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return ref.group_norm_naive(x, p["gamma"], p["beta"], groups, eps=eps)
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+
+
+def attention(q, k, v, n_heads: int, variant: str):
+    """Multi-head attention over (B, S, C) via the fused Pallas kernel
+    (mobile) or the jnp reference (base).  Returns (B, S, C)."""
+    b, sq, c = q.shape
+    skv = k.shape[1]
+    d = c // n_heads
+
+    def split(t, s):
+        return t.reshape(b, s, n_heads, d).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q, sq), split(k, skv), split(v, skv)
+    outs = []
+    for i in range(b):
+        if variant == MOBILE:
+            outs.append(attention_kernel(qh[i], kh[i], vh[i]))
+        else:
+            outs.append(ref.attention(qh[i], kh[i], vh[i]))
+    oh = jnp.stack(outs, axis=0)                   # (B, H, Sq, D)
+    return oh.transpose(0, 2, 1, 3).reshape(b, sq, c)
+
+
+def timestep_embedding(t, dim: int, max_period: float = 10000.0):
+    """Sinusoidal timestep embedding; t: (B,) float -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def upsample_nearest_2x(x):
+    """(N, H, W, C) -> (N, 2H, 2W, C) nearest-neighbour."""
+    n, h, w, c = x.shape
+    x = x[:, :, None, :, None, :]
+    x = jnp.broadcast_to(x, (n, h, 2, w, 2, c))
+    return x.reshape(n, 2 * h, 2 * w, c)

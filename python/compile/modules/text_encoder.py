@@ -1,0 +1,51 @@
+"""CLIP-like text encoder (paper: the first of the three SD components).
+
+A small pre-LN transformer over hash-vocabulary tokens.  Runs once per
+prompt on the request path, so the paper's pipelined executor (Sec. 3.3)
+loads it, encodes, and evicts it before the denoising loop starts.
+"""
+
+import jax.numpy as jnp
+
+from ..config import TextEncoderConfig
+from ..params import Init, Params
+from . import layers
+
+
+def init(rng: Init, cfg: TextEncoderConfig) -> Params:
+    p: Params = {
+        "tok_emb": rng.embedding(cfg.vocab_size, cfg.d_model),
+        "pos_emb": rng.embedding(cfg.seq_len, cfg.d_model),
+        "final_ln": rng.norm(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        p[f"layer_{i}"] = {
+            "ln1": rng.norm(cfg.d_model),
+            "q": rng.linear(cfg.d_model, cfg.d_model),
+            "k": rng.linear(cfg.d_model, cfg.d_model),
+            "v": rng.linear(cfg.d_model, cfg.d_model),
+            "o": rng.linear(cfg.d_model, cfg.d_model),
+            "ln2": rng.norm(cfg.d_model),
+            "ff1": rng.linear(cfg.d_model, cfg.d_ff),
+            "ff2": rng.linear(cfg.d_ff, cfg.d_model),
+        }
+    return p
+
+
+def apply(p: Params, tokens, cfg: TextEncoderConfig, variant: str):
+    """tokens: (B, S) int32 -> (B, S, d_model) context embeddings."""
+    b, s = tokens.shape
+    x = p["tok_emb"]["table"][tokens] + p["pos_emb"]["table"][jnp.arange(s)][None]
+    for i in range(cfg.n_layers):
+        lp = p[f"layer_{i}"]
+        h = layers.layer_norm(lp["ln1"], x)
+        q = layers.linear(lp["q"], h)
+        k = layers.linear(lp["k"], h)
+        v = layers.linear(lp["v"], h)
+        attn = layers.attention(q, k, v, cfg.n_heads, variant)
+        x = x + layers.linear(lp["o"], attn)
+        h = layers.layer_norm(lp["ln2"], x)
+        h = layers.linear(lp["ff1"], h)
+        h = layers.gelu(h, variant)
+        x = x + layers.linear(lp["ff2"], h)
+    return layers.layer_norm(p["final_ln"], x)

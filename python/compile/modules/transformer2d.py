@@ -1,0 +1,76 @@
+"""Spatial-transformer block (the paper's Sec. 3.1 FullyConnected host).
+
+GroupNorm -> 1x1 proj_in -> flatten to (B, H*W, C) -> [self-attention,
+cross-attention over the text context, GELU FFN] -> 1x1 proj_out ->
+residual.  The FFN fully-connected layers are the layers the paper
+converts to Conv2D for delegation; numerically FC == reshape-conv
+(ref.fc_as_conv2d; verified in tests), so the lowered compute graph here
+keeps plain matmuls while the TFLite-level graph spec (graphspec.py)
+records them as FULLY_CONNECTED for the Rust pass pipeline to rewrite.
+"""
+
+from ..kernels.w8a16_matmul import w8a16_matmul_kernel
+from ..params import Init, Params
+from . import layers
+
+
+def init(rng: Init, c: int, n_heads: int, context_dim: int, ffn_mult: int) -> Params:
+    return {
+        "gn": rng.norm(c),
+        "proj_in": rng.conv(1, 1, c, c),
+        "ln1": rng.norm(c),
+        "sa_q": rng.linear(c, c),
+        "sa_k": rng.linear(c, c),
+        "sa_v": rng.linear(c, c),
+        "sa_o": rng.linear(c, c),
+        "ln2": rng.norm(c),
+        "ca_q": rng.linear(c, c),
+        "ca_k": rng.linear(context_dim, c),
+        "ca_v": rng.linear(context_dim, c),
+        "ca_o": rng.linear(c, c),
+        "ln3": rng.norm(c),
+        "ff1": rng.linear(c, ffn_mult * c),
+        "ff2": rng.linear(ffn_mult * c, c),
+    }
+
+
+def _ff(p: Params, x):
+    """FFN linear that dispatches to the W8A16 Pallas kernel when the
+    params carry int8 weights (paper Sec. 3.4 deployment path)."""
+    if "q" in p:
+        b, s, k = x.shape
+        out = w8a16_matmul_kernel(x.reshape(b * s, k), p["q"], p["scale"])
+        return out.reshape(b, s, -1) + p["b"]
+    return layers.linear(p, x)
+
+
+def apply(p: Params, x, context, groups: int, n_heads: int, variant: str,
+          gelu_clip: float = 10.0):
+    """x: (B, H, W, C); context: (B, S_ctx, d_ctx)."""
+    b, h, w, c = x.shape
+    res = x
+    y = layers.group_norm(p["gn"], x, groups, variant)
+    y = layers.conv2d(p["proj_in"], y)
+    t = y.reshape(b, h * w, c)
+
+    # self-attention
+    z = layers.layer_norm(p["ln1"], t)
+    q = layers.linear(p["sa_q"], z)
+    k = layers.linear(p["sa_k"], z)
+    v = layers.linear(p["sa_v"], z)
+    t = t + layers.linear(p["sa_o"], layers.attention(q, k, v, n_heads, variant))
+
+    # cross-attention over the text context
+    z = layers.layer_norm(p["ln2"], t)
+    q = layers.linear(p["ca_q"], z)
+    k = layers.linear(p["ca_k"], context)
+    v = layers.linear(p["ca_v"], context)
+    t = t + layers.linear(p["ca_o"], layers.attention(q, k, v, n_heads, variant))
+
+    # GELU FFN — the float16-unstable op of paper Sec. 3.2
+    z = layers.layer_norm(p["ln3"], t)
+    z = _ff(p["ff1"], z)
+    z = layers.gelu(z, variant, clip=gelu_clip)
+    t = t + _ff(p["ff2"], z)
+
+    return res + t.reshape(b, h, w, c)

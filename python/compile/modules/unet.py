@@ -1,0 +1,130 @@
+"""Denoising UNet (the second, memory-resident SD component).
+
+Structure mirrors SD v2.1 at laptop scale: conv_in -> down levels (res
+blocks, spatial transformers at the attention levels, strided-conv
+downsample) -> mid (res / transformer / res) -> up levels with skip
+concatenation -> GroupNorm/SiLU/conv_out.
+
+The first up-level-0 res block receives the concat of the upsampled
+128-ch stream and the 64-ch skip: its 192 -> 64 conv at 32x32 is the
+paper's over-sized conv (1920 -> 640), serialized in the mobile variant.
+"""
+
+from typing import List
+
+import jax.numpy as jnp
+
+from ..config import UNetConfig
+from ..params import Init, Params
+from . import layers, resnet, transformer2d
+
+
+def _level_channels(cfg: UNetConfig) -> List[int]:
+    return [cfg.base_channels * m for m in cfg.channel_mults]
+
+
+def init(rng: Init, cfg: UNetConfig) -> Params:
+    chans = _level_channels(cfg)
+    d_t = cfg.d_time
+    p: Params = {
+        "time_mlp": {
+            "l1": rng.linear(cfg.base_channels, d_t),
+            "l2": rng.linear(d_t, d_t),
+        },
+        "conv_in": rng.conv(3, 3, cfg.in_channels, chans[0]),
+        "out_gn": rng.norm(chans[0]),
+        "conv_out": rng.conv(3, 3, chans[0], cfg.out_channels),
+    }
+
+    # --- down path ---
+    skip_chs = [chans[0]]
+    ch = chans[0]
+    for lvl, lch in enumerate(chans):
+        for i in range(cfg.n_res_blocks):
+            blk: Params = {"res": resnet.init(rng, ch, lch, d_t)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = transformer2d.init(
+                    rng, lch, cfg.n_heads, cfg.context_dim, cfg.ffn_mult)
+            p[f"down_{lvl}_{i}"] = blk
+            ch = lch
+            skip_chs.append(ch)
+        if lvl != len(chans) - 1:
+            p[f"downsample_{lvl}"] = rng.conv(3, 3, ch, ch)
+            skip_chs.append(ch)
+
+    # --- mid ---
+    p["mid_res1"] = resnet.init(rng, ch, ch, d_t)
+    p["mid_attn"] = transformer2d.init(
+        rng, ch, cfg.n_heads, cfg.context_dim, cfg.ffn_mult)
+    p["mid_res2"] = resnet.init(rng, ch, ch, d_t)
+
+    # --- up path ---
+    for lvl in reversed(range(len(chans))):
+        lch = chans[lvl]
+        for i in range(cfg.n_res_blocks + 1):
+            sc = skip_chs.pop()
+            blk = {"res": resnet.init(rng, ch + sc, lch, d_t)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = transformer2d.init(
+                    rng, lch, cfg.n_heads, cfg.context_dim, cfg.ffn_mult)
+            p[f"up_{lvl}_{i}"] = blk
+            ch = lch
+        if lvl != 0:
+            p[f"upsample_{lvl}"] = rng.conv(3, 3, ch, ch)
+    assert not skip_chs
+    return p
+
+
+def apply(p: Params, latent, timestep, context, cfg: UNetConfig, variant: str):
+    """latent: (B, H, W, Cin); timestep: (1,) f32; context: (B, S, d_ctx)
+    -> predicted noise (B, H, W, Cout).
+
+    B = 2 for classifier-free guidance (uncond/cond halves)."""
+    chans = _level_channels(cfg)
+    b = latent.shape[0]
+
+    t = jnp.broadcast_to(timestep.reshape(()), (b,))
+    t_emb = layers.timestep_embedding(t, cfg.base_channels)
+    t_emb = layers.linear(p["time_mlp"]["l1"], t_emb)
+    t_emb = layers.silu(t_emb)
+    t_emb = layers.linear(p["time_mlp"]["l2"], t_emb)
+
+    def res_attn(blk, x, bottleneck=False):
+        x = resnet.apply(blk["res"], x, t_emb, cfg.groups, variant,
+                         bottleneck=bottleneck)
+        if "attn" in blk:
+            x = transformer2d.apply(blk["attn"], x, context, cfg.groups,
+                                    cfg.n_heads, variant,
+                                    gelu_clip=cfg.gelu_clip)
+        return x
+
+    x = layers.conv2d(p["conv_in"], latent)
+    skips = [x]
+    for lvl in range(len(chans)):
+        for i in range(cfg.n_res_blocks):
+            x = res_attn(p[f"down_{lvl}_{i}"], x)
+            skips.append(x)
+        if lvl != len(chans) - 1:
+            x = layers.conv2d(p[f"downsample_{lvl}"], x, stride=2)
+            skips.append(x)
+
+    x = resnet.apply(p["mid_res1"], x, t_emb, cfg.groups, variant)
+    x = transformer2d.apply(p["mid_attn"], x, context, cfg.groups,
+                            cfg.n_heads, variant, gelu_clip=cfg.gelu_clip)
+    x = resnet.apply(p["mid_res2"], x, t_emb, cfg.groups, variant)
+
+    for lvl in reversed(range(len(chans))):
+        for i in range(cfg.n_res_blocks + 1):
+            x = jnp.concatenate([x, skips.pop()], axis=-1)
+            # the first highest-resolution up block hosts the paper's
+            # over-sized conv (input channels = 2 * base + base)
+            bott = (lvl == 0 and i == 0)
+            x = res_attn(p[f"up_{lvl}_{i}"], x, bottleneck=bott)
+        if lvl != 0:
+            x = layers.upsample_nearest_2x(x)
+            x = layers.conv2d(p[f"upsample_{lvl}"], x)
+    assert not skips
+
+    x = layers.group_norm(p["out_gn"], x, cfg.groups, variant)
+    x = layers.silu(x)
+    return layers.conv2d(p["conv_out"], x)

@@ -1,0 +1,65 @@
+"""VAE image decoder (the third SD component).
+
+latent (B, 32, 32, 4) -> RGB (B, 256, 256, 3) through three nearest-
+neighbour x2 upsample + conv stages with residual blocks, mirroring the
+SD VAE decoder's topology.  Loaded last by the pipelined executor
+(Sec. 3.3) after the text encoder has been evicted.
+"""
+
+from ..config import DecoderConfig
+from ..params import Init, Params
+from . import layers
+
+
+def _res_init(rng: Init, cin: int, cout: int) -> Params:
+    p: Params = {
+        "gn1": rng.norm(cin),
+        "conv1": rng.conv(3, 3, cin, cout),
+        "gn2": rng.norm(cout),
+        "conv2": rng.conv(3, 3, cout, cout),
+    }
+    if cin != cout:
+        p["skip"] = rng.conv(1, 1, cin, cout)
+    return p
+
+
+def _res_apply(p: Params, x, groups: int, variant: str):
+    h = layers.group_norm(p["gn1"], x, groups, variant)
+    h = layers.silu(h)
+    h = layers.conv2d(p["conv1"], h)
+    h = layers.group_norm(p["gn2"], h, groups, variant)
+    h = layers.silu(h)
+    h = layers.conv2d(p["conv2"], h)
+    if "skip" in p:
+        x = layers.conv2d(p["skip"], x)
+    return x + h
+
+
+def init(rng: Init, cfg: DecoderConfig) -> Params:
+    ch = cfg.base_channels
+    p: Params = {
+        "conv_in": rng.conv(3, 3, cfg.latent_channels, ch),
+        "res_in": _res_init(rng, ch, ch),
+        "out_gn": rng.norm(ch),
+        "conv_out": rng.conv(3, 3, ch, cfg.out_channels),
+    }
+    for i in range(cfg.n_upsamples):
+        p[f"up_{i}"] = {
+            "conv": rng.conv(3, 3, ch, ch),
+            "res": _res_init(rng, ch, ch),
+        }
+    return p
+
+
+def apply(p: Params, latent, cfg: DecoderConfig, variant: str):
+    """latent: (B, H, W, 4) -> image (B, 8H, 8W, 3) in [-1, 1]-ish."""
+    x = layers.conv2d(p["conv_in"], latent)
+    x = _res_apply(p["res_in"], x, cfg.groups, variant)
+    for i in range(cfg.n_upsamples):
+        up = p[f"up_{i}"]
+        x = layers.upsample_nearest_2x(x)
+        x = layers.conv2d(up["conv"], x)
+        x = _res_apply(up["res"], x, cfg.groups, variant)
+    x = layers.group_norm(p["out_gn"], x, cfg.groups, variant)
+    x = layers.silu(x)
+    return layers.conv2d(p["conv_out"], x)

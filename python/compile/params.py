@@ -1,0 +1,75 @@
+"""Parameter initialization and deterministic flattening.
+
+Weights are AOT-time *inputs* of every lowered HLO module, not baked
+constants.  This keeps the HLO text small and — crucially for the paper's
+Sec. 3.4 — lets the Rust coordinator own weight storage: it memory-maps
+``weights_*.bin``, optionally dequantizes int8 (W8A16) or reconstitutes
+pruned channels, and feeds the result as PJRT literals.
+
+The contract with Rust: parameters are flattened in sorted-path order and
+appear as HLO parameters 0..P-1, followed by the activation inputs.  The
+manifest (``artifacts/manifest.json``) records the path, shape, dtype and
+byte offset of every parameter.
+"""
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+Params = Dict[str, object]  # nested str -> ndarray | Params
+
+
+def flatten(params: Params, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
+    """Flatten a nested param dict to sorted (path, array) pairs."""
+    out: List[Tuple[str, np.ndarray]] = []
+    for key in sorted(params.keys()):
+        val = params[key]
+        path = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.extend(flatten(val, prefix=path + "/"))
+        else:
+            out.append((path, np.asarray(val)))
+    return out
+
+
+def unflatten(paths: List[str], leaves: List[object]) -> Params:
+    """Inverse of :func:`flatten` given the path list."""
+    root: Params = {}
+    for path, leaf in zip(paths, leaves):
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})  # type: ignore[assignment]
+        node[parts[-1]] = leaf
+    return root
+
+
+class Init:
+    """Seeded parameter factory (numpy Generator; fully deterministic)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def linear(self, d_in: int, d_out: int) -> Params:
+        std = 1.0 / np.sqrt(d_in)
+        return {
+            "w": self.rng.normal(0.0, std, size=(d_in, d_out)).astype(np.float32),
+            "b": np.zeros(d_out, dtype=np.float32),
+        }
+
+    def conv(self, kh: int, kw: int, cin: int, cout: int) -> Params:
+        std = 1.0 / np.sqrt(kh * kw * cin)
+        return {
+            "w": self.rng.normal(0.0, std, size=(kh, kw, cin, cout)).astype(np.float32),
+            "b": np.zeros(cout, dtype=np.float32),
+        }
+
+    def norm(self, c: int) -> Params:
+        return {
+            "gamma": np.ones(c, dtype=np.float32),
+            "beta": np.zeros(c, dtype=np.float32),
+        }
+
+    def embedding(self, n: int, d: int) -> Params:
+        return {"table": self.rng.normal(0.0, 0.02, size=(n, d)).astype(np.float32)}

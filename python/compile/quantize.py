@@ -1,0 +1,86 @@
+"""Weight compression (paper Sec. 3.4): per-channel symmetric int8
+quantization and structured output-channel pruning.
+
+The Python side quantizes at artifact-build time and writes the int8
+payload + scales; the Rust coordinator stores the 8-bit weights in its
+memory ledger (4x smaller) and casts them up at load — the W8A16
+deployment scheme (mobile GPUs have no integer matmul).
+"""
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def quantizable(path: str, arr: np.ndarray) -> bool:
+    """Weights of convs and linears are quantized; biases and norm
+    parameters stay float (standard practice, also what the paper's
+    block-wise-error tuning implies)."""
+    return path.endswith("/w") and arr.ndim >= 2
+
+
+def quantize_per_channel(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 over the last (output-channel) axis.
+    Returns (int8 weights, float32 per-channel scale)."""
+    flat = w.reshape(-1, w.shape[-1])
+    amax = np.abs(flat).max(axis=0)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+def prune_structured(w: np.ndarray, frac: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Zero the lowest-L2 output channels (structured pruning on the
+    'huge convolution layers', paper Sec. 3.4).  Returns (pruned weights,
+    bool keep-mask over output channels)."""
+    flat = w.reshape(-1, w.shape[-1])
+    norms = np.sqrt(np.square(flat).sum(axis=0))
+    n_prune = int(round(frac * w.shape[-1]))
+    keep = np.ones(w.shape[-1], dtype=bool)
+    if n_prune > 0:
+        drop = np.argsort(norms)[:n_prune]
+        keep[drop] = False
+    return w * keep.astype(w.dtype), keep
+
+
+def prune_targets(paths: List[str], arrays: List[np.ndarray],
+                  min_elems: int = 100_000) -> List[str]:
+    """The paper prunes only the 'huge convolution layers': select conv
+    kernels above a size threshold."""
+    out = []
+    for p, a in zip(paths, arrays):
+        if p.endswith("/w") and a.ndim == 4 and a.size >= min_elems:
+            out.append(p)
+    return out
+
+
+def compress(paths: List[str], arrays: List[np.ndarray],
+             prune_frac: float = 0.0) -> Dict[str, dict]:
+    """Quantize (and optionally prune) a flat parameter list.
+
+    Returns ``{path: {"q": int8, "scale": f32, "keep": bool mask | None}}``
+    for quantized entries; unquantized entries are omitted (stored f32).
+    """
+    targets = set(prune_targets(paths, arrays)) if prune_frac > 0 else set()
+    out: Dict[str, dict] = {}
+    for p, a in zip(paths, arrays):
+        if not quantizable(p, a):
+            continue
+        w = a
+        keep = None
+        if p in targets:
+            w, keep = prune_structured(w, prune_frac)
+        q, scale = quantize_per_channel(w)
+        out[p] = {"q": q, "scale": scale, "keep": keep}
+    return out
+
+
+def reconstruction_error(y_ref: np.ndarray, y_cmp: np.ndarray) -> float:
+    """Block-wise reconstruction error (Li et al. 2021 / Wei et al. 2022):
+    mean squared error of the block output vs the full-precision block."""
+    return float(np.mean(np.square(y_ref.astype(np.float64) -
+                                   y_cmp.astype(np.float64))))

@@ -1,0 +1,82 @@
+"""DDIM sampler (Song et al. 2021) + distilled step schedules.
+
+This is the *reference* implementation the Rust scheduler
+(rust/src/scheduler/) is validated against: ``aot.py`` dumps the full
+alphas_cumprod table and a golden 20-step trace into the manifest, and
+Rust tests replay them bit-for-bit (f64 -> f32 at the boundary).
+
+The paper reduces to "20 effective denoising steps" via progressive
+distillation (Salimans & Ho 2022; Meng et al. 2023).  We do not train a
+distilled student (out of scope of the deployment system — see DESIGN.md
+substitutions); the schedule machinery below supports both the plain
+DDIM stride schedule and the halved progressive schedules the distilled
+checkpoints would consume, which is the part the serving system touches.
+"""
+
+import math
+from typing import List
+
+import numpy as np
+
+from .config import SchedulerConfig
+
+
+def betas(cfg: SchedulerConfig) -> np.ndarray:
+    """Scaled-linear beta schedule (the SD default)."""
+    return (
+        np.linspace(math.sqrt(cfg.beta_start), math.sqrt(cfg.beta_end),
+                    cfg.num_train_timesteps, dtype=np.float64) ** 2
+    )
+
+
+def alphas_cumprod(cfg: SchedulerConfig) -> np.ndarray:
+    return np.cumprod(1.0 - betas(cfg))
+
+
+def timesteps(cfg: SchedulerConfig, num_steps: int = None) -> List[int]:
+    """DDIM stride schedule: evenly spaced, descending."""
+    n = num_steps or cfg.num_inference_steps
+    stride = cfg.num_train_timesteps // n
+    return list(range(0, cfg.num_train_timesteps, stride))[::-1]
+
+
+def progressive_timesteps(cfg: SchedulerConfig, halvings: int) -> List[int]:
+    """Progressive-distillation schedule: each halving doubles the stride
+    a distilled student takes (Salimans & Ho 2022)."""
+    n = cfg.num_inference_steps >> halvings
+    if n < 1:
+        raise ValueError("too many halvings")
+    return timesteps(cfg, num_steps=n)
+
+
+def ddim_step(latent: np.ndarray, eps: np.ndarray, t: int, t_prev: int,
+              acp: np.ndarray) -> np.ndarray:
+    """One deterministic (eta = 0) DDIM update."""
+    a_t = acp[t]
+    a_prev = acp[t_prev] if t_prev >= 0 else 1.0
+    x0 = (latent - math.sqrt(1.0 - a_t) * eps) / math.sqrt(a_t)
+    return math.sqrt(a_prev) * x0 + math.sqrt(1.0 - a_prev) * eps
+
+
+def guide(eps_uncond: np.ndarray, eps_cond: np.ndarray, scale: float) -> np.ndarray:
+    """Classifier-free guidance (Ho & Salimans 2022)."""
+    return eps_uncond + scale * (eps_cond - eps_uncond)
+
+
+def sample(unet_call, latent: np.ndarray, context2: np.ndarray,
+           cfg: SchedulerConfig, num_steps: int = None) -> np.ndarray:
+    """Full deterministic DDIM loop.
+
+    ``unet_call(latent2, t) -> eps2`` runs the CFG-batched UNet where
+    ``latent2`` duplicates the latent and ``context2`` stacks the uncond
+    and cond embeddings.  Mirrors the Rust denoise loop exactly.
+    """
+    acp = alphas_cumprod(cfg)
+    ts = timesteps(cfg, num_steps)
+    for i, t in enumerate(ts):
+        t_prev = ts[i + 1] if i + 1 < len(ts) else -1
+        latent2 = np.concatenate([latent, latent], axis=0)
+        eps2 = unet_call(latent2, t)
+        eps = guide(eps2[0:1], eps2[1:2], cfg.guidance_scale)
+        latent = ddim_step(latent, eps, t, t_prev, acp)
+    return latent

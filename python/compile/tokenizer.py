@@ -1,0 +1,52 @@
+"""Deterministic hash-vocabulary tokenizer (CLIP stand-in).
+
+The paper's pipeline feeds a CLIP text encoder.  We have no CLIP vocabulary,
+so both the Python build path and the Rust request path share this trivial,
+fully deterministic tokenizer: lowercase, split on non-alphanumerics, map
+each word to ``2 + FNV1a64(word) % (vocab - 2)``.  Token 0 is PAD, token 1
+is BOS.  The Rust implementation (rust/src/tokenizer/) must match exactly;
+``aot.py`` emits a golden file the Rust tests verify against.
+"""
+
+from typing import List
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+PAD_ID = 0
+BOS_ID = 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def words(text: str) -> List[str]:
+    out: List[str] = []
+    cur: List[str] = []
+    for ch in text.lower():
+        if ch.isalnum():
+            cur.append(ch)
+        elif cur:
+            out.append("".join(cur))
+            cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def encode(text: str, vocab_size: int, seq_len: int) -> List[int]:
+    """BOS + word ids, truncated / padded with PAD to ``seq_len``."""
+    ids = [BOS_ID]
+    for w in words(text):
+        if len(ids) >= seq_len:
+            break
+        ids.append(2 + fnv1a64(w.encode("utf-8")) % (vocab_size - 2))
+    while len(ids) < seq_len:
+        ids.append(PAD_ID)
+    return ids[:seq_len]

@@ -1,0 +1,100 @@
+"""MDWB — the Mobile-Diffusion Weights Binary format.
+
+A purpose-built container shared by the Python build path (writer) and
+the Rust coordinator (reader, rust/src/quant/weights.rs).  It exists so
+the Rust side can own weight *storage* the way the paper's app does:
+full-precision f32, or int8 W8A16 payloads (4x smaller) that are cast up
+at load, or int8+structured-pruning payloads where dropped output
+channels are not stored at all.
+
+Layout (little-endian):
+
+  magic   4 B  = b"MDWB"
+  version u32  = 1
+  count   u32  = number of tensors
+  per tensor:
+    path_len u16, path (utf-8)
+    dtype    u8   (0 = f32, 1 = int8-quantized)
+    ndim     u8
+    dims     u32 * ndim          (logical, unpruned shape)
+    if dtype == 1:
+      scale  f32 * dims[-1]      (per-output-channel)
+      mask   u8  * dims[-1]      (1 = kept channel; all-1 if unpruned)
+      payload int8 * (prod(dims[:-1]) * kept)
+    else:
+      payload f32 * prod(dims)
+"""
+
+import struct
+from typing import Dict, List, Optional
+
+import numpy as np
+
+MAGIC = b"MDWB"
+VERSION = 1
+DT_F32 = 0
+DT_I8 = 1
+
+
+def write(path: str, entries: List[dict]) -> int:
+    """entries: [{"path": str, "arr": f32 ndarray} |
+                 {"path": str, "q": int8 ndarray, "scale": f32 ndarray,
+                  "keep": Optional[bool ndarray]}].
+    Returns total bytes written."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(entries)))
+        for e in entries:
+            name = e["path"].encode("utf-8")
+            f.write(struct.pack("<H", len(name)))
+            f.write(name)
+            if "q" in e:
+                q: np.ndarray = e["q"]
+                scale: np.ndarray = np.asarray(e["scale"], dtype=np.float32)
+                keep = e.get("keep")
+                if keep is None:
+                    keep = np.ones(q.shape[-1], dtype=bool)
+                f.write(struct.pack("<BB", DT_I8, q.ndim))
+                f.write(struct.pack(f"<{q.ndim}I", *q.shape))
+                f.write(scale.tobytes())
+                f.write(keep.astype(np.uint8).tobytes())
+                kept = q.reshape(-1, q.shape[-1])[:, keep]
+                f.write(np.ascontiguousarray(kept, dtype=np.int8).tobytes())
+            else:
+                arr = np.asarray(e["arr"], dtype=np.float32)
+                f.write(struct.pack("<BB", DT_F32, arr.ndim))
+                f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+                f.write(np.ascontiguousarray(arr).tobytes())
+        return f.tell()
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    """Reference reader (used by Python tests to verify round-trip and by
+    the Rust implementation as the behavioural oracle).  Dequantizes and
+    re-inflates pruned channels to zeros, returning f32 arrays."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (plen,) = struct.unpack("<H", f.read(2))
+            name = f.read(plen).decode("utf-8")
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            if dtype == DT_I8:
+                cout = dims[-1]
+                scale = np.frombuffer(f.read(4 * cout), dtype=np.float32)
+                keep = np.frombuffer(f.read(cout), dtype=np.uint8).astype(bool)
+                rows = int(np.prod(dims[:-1]))
+                kept = int(keep.sum())
+                payload = np.frombuffer(f.read(rows * kept), dtype=np.int8)
+                full = np.zeros((rows, cout), dtype=np.float32)
+                full[:, keep] = payload.reshape(rows, kept).astype(np.float32)
+                full *= scale[None, :]
+                out[name] = full.reshape(dims)
+            else:
+                n = int(np.prod(dims))
+                out[name] = np.frombuffer(
+                    f.read(4 * n), dtype=np.float32).reshape(dims).copy()
+    return out

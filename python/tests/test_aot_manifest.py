@@ -1,0 +1,94 @@
+"""Artifact/manifest consistency (runs only after `make artifacts`)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_components_present(self, manifest):
+        expect = {"text_encoder", "unet_base", "unet_mobile", "decoder",
+                  "block_fp", "block_w8", "block_w8p"}
+        assert expect <= set(manifest["components"].keys())
+
+    def test_hlo_files_exist_and_hash(self, manifest):
+        import hashlib
+        for name, comp in manifest["components"].items():
+            path = os.path.join(ART, comp["hlo"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                text = f.read()
+            assert hashlib.sha256(text.encode()).hexdigest() == \
+                comp["hlo_sha256"], name
+            assert text.startswith("HloModule"), name
+
+    def test_weight_files_exist(self, manifest):
+        for name, comp in manifest["components"].items():
+            for tag, meta in comp.get("weights", {}).items():
+                path = os.path.join(ART, meta["file"])
+                assert os.path.exists(path), (name, tag)
+                assert os.path.getsize(path) == meta["bytes"]
+
+    def test_int8_compression_ratio(self, manifest):
+        w = manifest["components"]["unet_mobile"]["weights"]
+        ratio = w["fp32"]["bytes"] / w["int8"]["bytes"]
+        assert ratio > 3.0, f"int8 should be ~4x smaller, got {ratio:.2f}x"
+        assert w["int8_pruned"]["bytes"] < w["int8"]["bytes"]
+
+    def test_unet_params_match_weights(self, manifest):
+        from compile import weightsbin
+        comp = manifest["components"]["unet_mobile"]
+        loaded = weightsbin.read(
+            os.path.join(ART, comp["weights"]["fp32"]["file"]))
+        assert len(loaded) == len(comp["params"])
+        for p in comp["params"]:
+            assert p["path"] in loaded
+            assert list(loaded[p["path"]].shape) == p["shape"]
+
+    def test_int8_dequant_close_to_fp32(self, manifest):
+        from compile import weightsbin
+        comp = manifest["components"]["unet_mobile"]
+        fp = weightsbin.read(os.path.join(ART, comp["weights"]["fp32"]["file"]))
+        q = weightsbin.read(os.path.join(ART, comp["weights"]["int8"]["file"]))
+        # spot-check a conv weight: max error <= scale/2 ~ small
+        key = next(k for k in fp if k.endswith("conv_in/w"))
+        rel = np.abs(fp[key] - q[key]).max() / np.abs(fp[key]).max()
+        assert rel < 0.01, rel
+
+    def test_scheduler_section(self, manifest):
+        s = manifest["scheduler"]
+        acp = np.asarray(s["alphas_cumprod"])
+        assert len(acp) == s["num_train_timesteps"]
+        assert np.all(np.diff(acp) < 0)
+        assert len(s["timesteps"]) == s["num_inference_steps"]
+        assert len(s["golden"]["trace"]) == 5
+
+    def test_tokenizer_goldens(self, manifest):
+        from compile import tokenizer
+        t = manifest["tokenizer"]
+        for g in t["golden"]:
+            assert g["ids"] == tokenizer.encode(
+                g["text"], t["vocab_size"], t["seq_len"])
+
+    def test_graph_specs_exist(self):
+        for scale in ("small", "sd_v21"):
+            for comp in ("unet", "text_encoder", "decoder"):
+                path = os.path.join(ART, f"{scale}_{comp}.graph.json")
+                assert os.path.exists(path)
+                with open(path) as f:
+                    g = json.load(f)
+                assert g["ops"] and g["tensors"]

@@ -1,0 +1,108 @@
+"""GELU kernel correctness + the paper's Sec. 3.2 float16 instability."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gelu import gelu_stable_kernel, gelu_tanh_kernel
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def exact_gelu(x):
+    from math import erf
+    return np.array([0.5 * v * (1.0 + erf(v / math.sqrt(2.0))) for v in x])
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("shape", [(4,), (3, 5), (2, 7, 11), (1, 16, 16, 64)])
+    def test_tanh_matches_ref(self, shape):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        np.testing.assert_allclose(
+            gelu_tanh_kernel(x), ref.gelu_tanh(x), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("shape", [(4,), (3, 5), (2, 7, 11)])
+    def test_stable_matches_ref(self, shape):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray((5 * rng.normal(size=shape)).astype(np.float32))
+        np.testing.assert_allclose(
+            gelu_stable_kernel(x), ref.gelu_stable(x), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 2000),
+        scale=st.floats(0.1, 30.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray((scale * rng.normal(size=n)).astype(np.float32))
+        np.testing.assert_allclose(
+            gelu_tanh_kernel(x), ref.gelu_tanh(x), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            gelu_stable_kernel(x), ref.gelu_stable(x), rtol=1e-4, atol=1e-5)
+
+
+class TestApproximationQuality:
+    def test_tanh_approx_close_to_exact(self):
+        x = np.linspace(-6, 6, 201).astype(np.float64)
+        approx = np.asarray(ref.gelu_tanh(jnp.asarray(x)))
+        np.testing.assert_allclose(approx, exact_gelu(x), atol=2e-3)
+
+    def test_stable_equals_tanh_inside_clip(self):
+        """gamma_M is the identity for |x| <= M, so both approximations
+        agree exactly there (paper: 'maintains the image quality')."""
+        x = jnp.asarray(np.linspace(-10, 10, 401).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(ref.gelu_stable(x, clip=10.0)),
+            np.asarray(ref.gelu_tanh(x)))
+
+    def test_stable_correct_outside_clip(self):
+        """For |x| > M, tanh has already saturated: GELU(x) ~= x for
+        x >> 0 and ~= 0 for x << 0."""
+        x = jnp.asarray(np.array([15.0, 30.0, 100.0], dtype=np.float32))
+        np.testing.assert_allclose(ref.gelu_stable(x), x, rtol=1e-6)
+        xn = -x
+        np.testing.assert_allclose(ref.gelu_stable(xn), 0.0 * xn, atol=1e-6)
+
+
+class TestFloat16Instability:
+    """The paper's core observation: the cubic term overflows float16."""
+
+    def test_cubic_term_overflows_f16(self):
+        # x^3 > 65504 for x > ~40.3 -> inf in binary16
+        x = jnp.asarray([50.0], dtype=jnp.float16)
+        cubic = x * x * x
+        assert np.isinf(np.asarray(cubic)).all()
+
+    def test_baseline_gelu_f16_nonfinite_intermediates(self):
+        x = jnp.asarray([64.0, 128.0, 1000.0], dtype=jnp.float16)
+        inner = jnp.float16(SQRT_2_OVER_PI) * (
+            x + jnp.float16(ref.GELU_CUBIC) * x * x * x)
+        assert np.isinf(np.asarray(inner)).any()
+
+    def test_stable_gelu_f16_all_finite(self):
+        """With the gamma_10 clamp every intermediate is finite in f16:
+        max |inner| = sqrt(2/pi)*(10 + 0.044715*1000) ~= 43.7."""
+        x = jnp.asarray(
+            np.concatenate([np.linspace(-60000, 60000, 997),
+                            [-40.4, 40.4, 50.0, -50.0]]).astype(np.float16))
+        g = jnp.clip(x, -10.0, 10.0)
+        cubic = g * g * g
+        inner = jnp.float16(SQRT_2_OVER_PI) * (
+            g + jnp.float16(ref.GELU_CUBIC) * cubic)
+        out = jnp.float16(0.5) * x * (jnp.float16(1.0) + jnp.tanh(inner))
+        for t in (g, cubic, inner, out):
+            assert np.isfinite(np.asarray(t)).all()
+
+    def test_instability_threshold(self):
+        """Exact f16 overflow threshold of x**3: 65504**(1/3) ~= 40.31."""
+        below = jnp.asarray([40.28], dtype=jnp.float16)
+        above = jnp.asarray([40.34], dtype=jnp.float16)
+        assert np.isfinite(np.asarray(below * below * below)).all()
+        assert np.isinf(np.asarray(above * above * above)).all()

@@ -1,0 +1,117 @@
+"""TFLite-level graph spec well-formedness + the paper's critical shapes."""
+
+import numpy as np
+import pytest
+
+from compile import graphspec
+
+
+@pytest.fixture(scope="module")
+def small():
+    return graphspec.build_all("small")
+
+
+@pytest.fixture(scope="module")
+def sd():
+    return graphspec.build_all("sd_v21")
+
+
+def tensors_by_id(g):
+    return {t["id"]: t for t in g["tensors"]}
+
+
+class TestWellFormed:
+    @pytest.mark.parametrize("scale", ["small", "sd_v21"])
+    def test_ssa_and_references(self, scale):
+        for g in graphspec.build_all(scale).values():
+            ids = [t["id"] for t in g["tensors"]]
+            assert ids == list(range(len(ids)))
+            produced = set()
+            for op in g["ops"]:
+                for i in op["inputs"]:
+                    assert 0 <= i < len(ids)
+                for o in op["outputs"]:
+                    assert o not in produced, "tensor produced twice"
+                    produced.add(o)
+
+    def test_shapes_positive(self, sd):
+        for g in sd.values():
+            for t in g["tensors"]:
+                assert all(d > 0 for d in t["shape"]), t
+
+
+class TestPaperShapes:
+    def test_sd_unet_has_4096x320_fc(self, sd):
+        g = sd["unet"]
+        tens = tensors_by_id(g)
+        hits = [o for o in g["ops"] if o["type"] == "FULLY_CONNECTED"
+                and tens[o["inputs"][0]]["shape"] == [1, 4096, 320]]
+        assert len(hits) > 0
+
+    def test_sd_unet_has_1920_to_640_conv(self, sd):
+        g = sd["unet"]
+        tens = tensors_by_id(g)
+        hits = [o for o in g["ops"] if o["type"] == "CONV_2D"
+                and o["attrs"].get("kernel") == 3
+                and tens[o["inputs"][0]]["shape"] == [1, 32, 32, 1920]
+                and tens[o["outputs"][0]]["shape"] == [1, 32, 32, 640]]
+        assert len(hits) == 1, hits
+
+    def test_small_unet_has_bottleneck_analog(self, small):
+        g = small["unet"]
+        tens = tensors_by_id(g)
+        hits = [o for o in g["ops"] if o["type"] == "CONV_2D"
+                and o["attrs"].get("kernel") == 3
+                and tens[o["inputs"][0]]["shape"] == [1, 32, 32, 192]
+                and tens[o["outputs"][0]]["shape"] == [1, 32, 32, 64]]
+        assert len(hits) >= 1
+
+    def test_broadcast_and_rank5_in_export_graphs(self, sd):
+        """The stock export contains the delegation blockers."""
+        g = sd["unet"]
+        types = {o["type"] for o in g["ops"]}
+        assert "BROADCAST_TO" in types
+        tens = tensors_by_id(g)
+        rank5 = [t for t in g["tensors"] if len(t["shape"]) == 5]
+        assert rank5, "export group norm must contain rank-5 tensors"
+
+
+class TestBroadcastFreeEmitter:
+    def test_bcast_free_groupnorm_is_clean(self):
+        g = graphspec.GraphBuilder("t")
+        x = g.tensor("x", [1, 16, 16, 64])
+        g.group_norm("gn", x, 8, bcast_free=True)
+        types = [o["type"] for o in g.ops]
+        assert "BROADCAST_TO" not in types
+        for t in g.tensors:
+            assert len(t["shape"]) <= 4
+
+    def test_stable_gelu_has_clamp(self):
+        g = graphspec.GraphBuilder("t")
+        x = g.tensor("x", [1, 256, 512])
+        g.gelu("gelu", x, stable=True)
+        types = [o["type"] for o in g.ops]
+        assert "MINIMUM" in types and "MAXIMUM" in types
+
+    def test_baseline_gelu_no_clamp(self):
+        g = graphspec.GraphBuilder("t")
+        x = g.tensor("x", [1, 256, 512])
+        g.gelu("gelu", x, stable=False)
+        types = [o["type"] for o in g.ops]
+        assert "MINIMUM" not in types
+
+
+class TestParamAccounting:
+    def test_sd_unet_parameter_count_plausible(self, sd):
+        """SD v2.1 UNet has ~865M params; our shape-level spec should be
+        in that ballpark (weights only, fp16 ~1.7 GB)."""
+        g = sd["unet"]
+        n = sum(int(np.prod(t["shape"]))
+                for t in g["tensors"] if t["const"])
+        assert 6e8 < n < 1.2e9, n
+
+    def test_small_unet_parameter_count(self, small):
+        g = small["unet"]
+        n = sum(int(np.prod(t["shape"]))
+                for t in g["tensors"] if t["const"])
+        assert 2e6 < n < 2e7, n

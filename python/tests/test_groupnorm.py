@@ -1,0 +1,85 @@
+"""Broadcast-free group normalization (paper Sec. 3.1 / Fig. 7)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.groupnorm import group_norm_kernel
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (scale * np.random.default_rng(seed).normal(size=shape)).astype(np.float32))
+
+
+class TestEquivalence:
+    """The rewrite must be semantics-preserving: naive (rank-5 +
+    BroadcastTo) == broadcast-free (rank <= 4) == Pallas kernel."""
+
+    @pytest.mark.parametrize("h,w,c,g", [(8, 8, 32, 8), (16, 16, 64, 8),
+                                         (4, 4, 16, 4), (32, 32, 64, 8)])
+    def test_naive_vs_bcast_free(self, h, w, c, g):
+        x = rand((1, h, w, c), seed=h * w)
+        gamma, beta = rand((c,), 1), rand((c,), 2)
+        np.testing.assert_allclose(
+            ref.group_norm_naive(x, gamma, beta, g),
+            ref.group_norm_bcast_free(x, gamma, beta, g),
+            rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("h,w,c,g", [(8, 8, 32, 8), (16, 16, 64, 8)])
+    def test_kernel_vs_naive(self, h, w, c, g):
+        x = rand((1, h, w, c), seed=7)
+        gamma, beta = rand((c,), 8), rand((c,), 9)
+        np.testing.assert_allclose(
+            group_norm_kernel(x, gamma, beta, g),
+            ref.group_norm_naive(x, gamma, beta, g),
+            rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        hw=st.sampled_from([2, 4, 8, 16]),
+        cg=st.sampled_from([2, 4, 8, 16]),
+        g=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.floats(0.01, 100.0),
+    )
+    def test_hypothesis_sweep(self, hw, cg, g, seed, scale):
+        c = cg * g
+        x = rand((1, hw, hw, c), seed=seed, scale=scale)
+        gamma, beta = rand((c,), seed + 1), rand((c,), seed + 2)
+        np.testing.assert_allclose(
+            group_norm_kernel(x, gamma, beta, g),
+            ref.group_norm_bcast_free(x, gamma, beta, g),
+            rtol=2e-4, atol=2e-4)
+
+
+class TestNormalization:
+    def test_output_statistics(self):
+        """With identity affine, each group is ~N(0, 1) after the norm."""
+        x = rand((1, 16, 16, 32), seed=3, scale=5.0) + 2.0
+        out = np.asarray(group_norm_kernel(
+            x, jnp.ones(32), jnp.zeros(32), 8))
+        grouped = out.reshape(16 * 16, 8, 4)
+        means = grouped.mean(axis=(0, 2))
+        stds = grouped.std(axis=(0, 2))
+        np.testing.assert_allclose(means, 0.0, atol=1e-4)
+        np.testing.assert_allclose(stds, 1.0, atol=1e-3)
+
+    def test_affine_applied(self):
+        x = rand((1, 4, 4, 8), seed=4)
+        gamma = jnp.asarray(np.full(8, 3.0, np.float32))
+        beta = jnp.asarray(np.full(8, -1.0, np.float32))
+        base = np.asarray(group_norm_kernel(x, jnp.ones(8), jnp.zeros(8), 4))
+        out = np.asarray(group_norm_kernel(x, gamma, beta, 4))
+        np.testing.assert_allclose(out, 3.0 * base - 1.0, rtol=1e-4, atol=1e-5)
+
+    def test_scale_invariance(self):
+        """GN(a*x) == GN(x) for a > 0 (mean/var cancel the scale)."""
+        x = rand((1, 8, 8, 16), seed=5)
+        a = 37.5
+        np.testing.assert_allclose(
+            group_norm_kernel(a * x, jnp.ones(16), jnp.zeros(16), 4),
+            group_norm_kernel(x, jnp.ones(16), jnp.zeros(16), 4),
+            rtol=1e-3, atol=1e-4)

@@ -1,0 +1,175 @@
+"""Model-module contracts: shapes, variant equivalence, determinism."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import DEFAULT
+from compile.params import Init, flatten, unflatten
+from compile.modules import resnet, transformer2d, text_encoder, vae, layers
+
+import jax.numpy as jnp
+
+
+def rand(shape, seed=0, scale=1.0):
+    return (scale * np.random.default_rng(seed).normal(size=shape)).astype(
+        np.float32)
+
+
+class TestFlatten:
+    def test_round_trip(self):
+        p = {"b": {"x": np.ones(3), "a": np.zeros(2)}, "a": np.full(1, 5.0)}
+        flat = flatten(p)
+        assert [k for k, _ in flat] == ["a", "b/a", "b/x"]
+        p2 = unflatten([k for k, _ in flat], [v for _, v in flat])
+        np.testing.assert_array_equal(p2["b"]["x"], p["b"]["x"])
+
+    def test_sorted_deterministic(self):
+        p1 = {"z": np.ones(1), "a": np.ones(2), "m": {"q": np.ones(3)}}
+        assert [k for k, _ in flatten(p1)] == ["a", "m/q", "z"]
+
+
+class TestTextEncoder:
+    def test_output_shape(self):
+        out = model.run_component(
+            "text_encoder", [np.ones((1, 16), np.int32)])
+        assert out.shape == (1, 16, 128)
+
+    def test_deterministic(self):
+        toks = np.arange(16, dtype=np.int32).reshape(1, 16) % 100
+        a = model.run_component("text_encoder", [toks])
+        b = model.run_component("text_encoder", [toks])
+        np.testing.assert_array_equal(a, b)
+
+    def test_token_sensitivity(self):
+        a = model.run_component(
+            "text_encoder", [np.full((1, 16), 5, np.int32)])
+        b = model.run_component(
+            "text_encoder", [np.full((1, 16), 6, np.int32)])
+        assert np.abs(a - b).max() > 1e-3
+
+
+class TestResBlock:
+    def test_shape_and_skip(self):
+        rng = Init(0)
+        p = resnet.init(rng, 32, 64, 256)
+        x = jnp.asarray(rand((2, 8, 8, 32), 1))
+        t = jnp.asarray(rand((2, 256), 2))
+        out = resnet.apply(p, x, t, 8, "base")
+        assert out.shape == (2, 8, 8, 64)
+        assert "skip" in p  # channel change requires projection
+
+    def test_no_skip_when_channels_match(self):
+        p = resnet.init(Init(0), 64, 64, 256)
+        assert "skip" not in p
+
+    def test_bottleneck_variant_matches_base(self):
+        """Serialized conv1 (mobile) == plain conv1 (base) numerically."""
+        p = resnet.init(Init(3), 192, 64, 256)
+        x = jnp.asarray(rand((1, 32, 32, 192), 4))
+        t = jnp.asarray(rand((1, 256), 5))
+        a = resnet.apply(p, x, t, 8, "base", bottleneck=True)
+        b = resnet.apply(p, x, t, 8, "mobile", bottleneck=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+class TestTransformerBlock:
+    def test_shape_preserved(self):
+        c = 128
+        p = transformer2d.init(Init(1), c, 4, 128, 4)
+        x = jnp.asarray(rand((1, 16, 16, c), 6))
+        ctx = jnp.asarray(rand((1, 16, 128), 7))
+        out = transformer2d.apply(p, x, ctx, 8, 4, "base")
+        assert out.shape == (1, 16, 16, c)
+
+    def test_context_sensitivity(self):
+        """Cross-attention must read the context."""
+        c = 128
+        p = transformer2d.init(Init(1), c, 4, 128, 4)
+        x = jnp.asarray(rand((1, 16, 16, c), 6))
+        a = transformer2d.apply(p, x, jnp.asarray(rand((1, 16, 128), 7)),
+                                8, 4, "base")
+        b = transformer2d.apply(p, x, jnp.asarray(rand((1, 16, 128), 8)),
+                                8, 4, "base")
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-4
+
+
+class TestUNet:
+    def test_output_shape(self):
+        lat = rand((2, 32, 32, 4), 1)
+        ctx = rand((2, 16, 128), 2)
+        out = model.run_component(
+            "unet", [lat, np.array([500.0], np.float32), ctx],
+            variant="base")
+        assert out.shape == (2, 32, 32, 4)
+
+    def test_timestep_sensitivity(self):
+        lat = rand((2, 32, 32, 4), 1)
+        ctx = rand((2, 16, 128), 2)
+        a = model.run_component(
+            "unet", [lat, np.array([10.0], np.float32), ctx], variant="base")
+        b = model.run_component(
+            "unet", [lat, np.array([900.0], np.float32), ctx], variant="base")
+        assert np.abs(a - b).max() > 1e-3
+
+    def test_base_vs_mobile_subtle(self):
+        """Paper Fig. 2: the mobile rewrites change outputs only subtly.
+        We bound the relative deviation of the predicted noise."""
+        lat = rand((2, 32, 32, 4), 3)
+        ctx = rand((2, 16, 128), 4)
+        t = np.array([500.0], np.float32)
+        a = model.run_component("unet", [lat, t, ctx], variant="base")
+        b = model.run_component("unet", [lat, t, ctx], variant="mobile")
+        denom = np.abs(a).mean()
+        rel = np.abs(a - b).max() / denom
+        assert rel < 1e-3, f"variant deviation too large: {rel}"
+
+
+class TestDecoder:
+    def test_output_shape_and_range(self):
+        img = model.run_component("decoder", [rand((1, 32, 32, 4), 9)])
+        assert img.shape == (1, 256, 256, 3)
+        assert np.isfinite(img).all()
+
+
+class TestVaeInternals:
+    def test_res_apply_shape(self):
+        p = vae._res_init(Init(2), 16, 32)
+        x = jnp.asarray(rand((1, 8, 8, 16), 10))
+        out = vae._res_apply(p, x, 8, "base")
+        assert out.shape == (1, 8, 8, 32)
+
+    def test_upsample_nearest(self):
+        x = jnp.asarray(np.arange(4, dtype=np.float32).reshape(1, 2, 2, 1))
+        up = np.asarray(layers.upsample_nearest_2x(x))
+        assert up.shape == (1, 4, 4, 1)
+        np.testing.assert_array_equal(
+            up[0, :, :, 0],
+            [[0, 0, 1, 1], [0, 0, 1, 1], [2, 2, 3, 3], [2, 2, 3, 3]])
+
+
+class TestBlockW8:
+    def test_w8_block_close_to_fp(self):
+        """Quantizing the FFN weights perturbs the block output only
+        slightly (the paper's Fig. 5 'differences in details')."""
+        x = rand((1, 16, 16, 128), 11)
+        ctx = rand((1, 16, 128), 12)
+        fp = model.run_component("block", [x, ctx], variant="mobile")
+        w8 = model.run_component("block_w8", [x, ctx], variant="mobile")
+        rel = np.abs(fp - w8).mean() / (np.abs(fp).mean() + 1e-9)
+        assert rel < 0.05, rel
+
+    def test_pruned_block_differs_more(self):
+        from compile.quantize import reconstruction_error
+        x = rand((1, 16, 16, 128), 11)
+        ctx = rand((1, 16, 128), 12)
+        fp = model.run_component("block", [x, ctx], variant="mobile")
+        w8 = model.run_component("block_w8", [x, ctx], variant="mobile")
+        fn, paths, arrays, _ = model.build_block_w8(DEFAULT, "mobile", 0.125)
+        import jax.numpy as jnp
+        w8p = np.asarray(fn([jnp.asarray(a) for a in arrays],
+                            jnp.asarray(x), jnp.asarray(ctx)))
+        e_q = reconstruction_error(fp, w8)
+        e_qp = reconstruction_error(fp, w8p)
+        assert e_qp >= e_q    # pruning adds error on top of quantization

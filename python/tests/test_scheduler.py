@@ -1,0 +1,108 @@
+"""DDIM scheduler reference: math invariants + golden compatibility."""
+
+import numpy as np
+import pytest
+
+from compile import scheduler
+from compile.config import SchedulerConfig
+
+CFG = SchedulerConfig()
+
+
+class TestSchedule:
+    def test_betas_monotone_and_bounded(self):
+        b = scheduler.betas(CFG)
+        assert len(b) == 1000
+        assert np.all(np.diff(b) > 0)
+        assert b[0] == pytest.approx(CFG.beta_start)
+        assert b[-1] == pytest.approx(CFG.beta_end)
+
+    def test_alphas_cumprod_decreasing(self):
+        a = scheduler.alphas_cumprod(CFG)
+        assert np.all(np.diff(a) < 0)
+        assert 0 < a[-1] < a[0] < 1
+
+    def test_timesteps_descending_and_count(self):
+        ts = scheduler.timesteps(CFG)
+        assert len(ts) == 20
+        assert ts == sorted(ts, reverse=True)
+        assert ts[-1] == 0
+
+    def test_progressive_halving(self):
+        assert len(scheduler.progressive_timesteps(CFG, 0)) == 20
+        assert len(scheduler.progressive_timesteps(CFG, 1)) == 10
+        assert len(scheduler.progressive_timesteps(CFG, 2)) == 5
+        with pytest.raises(ValueError):
+            scheduler.progressive_timesteps(CFG, 12)
+
+
+class TestDdimStep:
+    def test_zero_eps_converges_to_x0(self):
+        """With eps == 0 the DDIM update is x0-preserving rescaling:
+        at the final step (t_prev = -1) latent == x0 exactly."""
+        acp = scheduler.alphas_cumprod(CFG)
+        latent = np.array([1.0, -2.0, 0.5])
+        t = 100
+        x0 = latent / np.sqrt(acp[t])
+        out = scheduler.ddim_step(latent, np.zeros(3), t, -1, acp)
+        np.testing.assert_allclose(out, x0, rtol=1e-12)
+
+    def test_pure_noise_invariant(self):
+        """If latent == sqrt(1-a_t) * eps (zero signal), the update maps
+        it to sqrt(1-a_prev) * eps."""
+        acp = scheduler.alphas_cumprod(CFG)
+        eps = np.array([0.3, -1.2, 2.0])
+        t, t_prev = 500, 450
+        latent = np.sqrt(1 - acp[t]) * eps
+        out = scheduler.ddim_step(latent, eps, t, t_prev, acp)
+        np.testing.assert_allclose(out, np.sqrt(1 - acp[t_prev]) * eps,
+                                   rtol=1e-10)
+
+    def test_identity_when_t_equals_prev(self):
+        acp = scheduler.alphas_cumprod(CFG)
+        latent = np.array([0.7, -0.1])
+        eps = np.array([0.2, 0.4])
+        out = scheduler.ddim_step(latent, eps, 300, 300, acp)
+        np.testing.assert_allclose(out, latent, rtol=1e-10)
+
+
+class TestGuidance:
+    def test_scale_one_returns_cond(self):
+        u, c = np.array([1.0, 2.0]), np.array([3.0, -1.0])
+        np.testing.assert_array_equal(scheduler.guide(u, c, 1.0), c)
+
+    def test_scale_zero_returns_uncond(self):
+        u, c = np.array([1.0, 2.0]), np.array([3.0, -1.0])
+        np.testing.assert_array_equal(scheduler.guide(u, c, 0.0), u)
+
+    def test_extrapolation(self):
+        u, c = np.zeros(2), np.ones(2)
+        np.testing.assert_array_equal(scheduler.guide(u, c, 7.5),
+                                      np.full(2, 7.5))
+
+
+class TestSampleLoop:
+    def test_sample_with_mock_unet(self):
+        """End-to-end loop with a deterministic mock: finite output,
+        correct shape, sensitive to guidance scale."""
+        rng = np.random.default_rng(0)
+        latent = rng.normal(size=(1, 4, 4, 2))
+        ctx = np.zeros((2, 3, 8))
+
+        def unet_call(lat2, t):
+            # pseudo-eps that differs between the CFG halves
+            return np.concatenate([0.1 * lat2[:1], 0.2 * lat2[1:]], axis=0)
+
+        out = scheduler.sample(unet_call, latent.copy(), ctx, CFG)
+        assert out.shape == latent.shape
+        assert np.isfinite(out).all()
+
+        cfg2 = SchedulerConfig(guidance_scale=1.0)
+        out2 = scheduler.sample(unet_call, latent.copy(), ctx, cfg2)
+        assert np.abs(out - out2).max() > 1e-6
+
+    def test_fewer_steps_still_finite(self):
+        latent = np.ones((1, 2, 2, 1))
+        out = scheduler.sample(lambda l, t: 0.05 * l, latent,
+                               np.zeros((2, 1, 1)), CFG, num_steps=5)
+        assert np.isfinite(out).all()

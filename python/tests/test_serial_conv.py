@@ -1,0 +1,82 @@
+"""Serialized Conv2D (paper Sec. 3.1 / Fig. 1b)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.serial_conv import conv3x3_input_serialized_kernel
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+class TestInputSerialization:
+    @pytest.mark.parametrize("factor", [1, 2, 3, 4, 6, 12])
+    def test_ref_serialized_matches_plain(self, factor):
+        """Input serialization is a pure reordering of the summation:
+        must match the unserialized conv for any factor."""
+        x, w, b = rand((1, 8, 8, 12), 1), rand((3, 3, 12, 8), 2), rand((8,), 3)
+        np.testing.assert_allclose(
+            ref.conv2d_3x3_input_serialized(x, w, b, factor=factor),
+            ref.conv2d_3x3(x, w, b), rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("factor", [1, 2, 4, 8])
+    def test_ref_output_serialized_matches_plain(self, factor):
+        x, w, b = rand((1, 8, 8, 12), 4), rand((3, 3, 12, 16), 5), rand((16,), 6)
+        np.testing.assert_allclose(
+            ref.conv2d_3x3_output_serialized(x, w, b, factor=factor),
+            ref.conv2d_3x3(x, w, b), rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("factor", [1, 2, 3])
+    def test_kernel_matches_ref(self, factor):
+        x, w, b = rand((1, 8, 8, 12), 7), rand((3, 3, 12, 8), 8), rand((8,), 9)
+        np.testing.assert_allclose(
+            conv3x3_input_serialized_kernel(x, w, b, factor=factor),
+            ref.conv2d_3x3(x, w, b), rtol=1e-4, atol=1e-4)
+
+    def test_kernel_paper_ratio_shape(self):
+        """Our bottleneck analog: 192 -> 64 at 32x32, factor 2 — the
+        shape the mobile UNet actually runs."""
+        x, w = rand((1, 32, 32, 192), 10), rand((3, 3, 192, 64), 11)
+        np.testing.assert_allclose(
+            conv3x3_input_serialized_kernel(x, w, factor=2),
+            ref.conv2d_3x3(x, w), rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        hw=st.sampled_from([4, 8, 16]),
+        cin_g=st.sampled_from([2, 4, 8]),
+        factor=st.sampled_from([1, 2, 4]),
+        cout=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, hw, cin_g, factor, cout, seed):
+        cin = cin_g * factor
+        x = rand((1, hw, hw, cin), seed)
+        w = rand((3, 3, cin, cout), seed + 1)
+        np.testing.assert_allclose(
+            conv3x3_input_serialized_kernel(x, w, factor=factor),
+            ref.conv2d_3x3(x, w), rtol=2e-4, atol=2e-4)
+
+
+class TestFcToConv:
+    """Paper Fig. 1a: FullyConnected == Reshape-Conv2D-Reshape."""
+
+    @pytest.mark.parametrize("s,k,n", [(16, 8, 4), (256, 128, 512),
+                                       (64, 320, 320)])
+    def test_fc_equals_conv(self, s, k, n):
+        x, w, b = rand((s, k), 1), rand((k, n), 2), rand((n,), 3)
+        np.testing.assert_allclose(
+            ref.fc_as_conv2d(x, w, b), x @ w + b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(s=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_fc_conv(self, s, k, n, seed):
+        x, w = rand((s, k), seed), rand((k, n), seed + 1)
+        np.testing.assert_allclose(
+            ref.fc_as_conv2d(x, w), x @ w, rtol=2e-4, atol=2e-4)

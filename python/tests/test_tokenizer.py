@@ -1,0 +1,48 @@
+"""Hash tokenizer: determinism and framing (shared contract with Rust)."""
+
+from compile import tokenizer
+
+
+class TestWords:
+    def test_splits_on_non_alnum(self):
+        assert tokenizer.words("Hello, world!") == ["hello", "world"]
+
+    def test_empty(self):
+        assert tokenizer.words("") == []
+        assert tokenizer.words("!!! ---") == []
+
+    def test_numbers_kept(self):
+        assert tokenizer.words("galaxy s23 ultra") == ["galaxy", "s23", "ultra"]
+
+
+class TestEncode:
+    def test_framing(self):
+        ids = tokenizer.encode("a b", 4096, 16)
+        assert len(ids) == 16
+        assert ids[0] == tokenizer.BOS_ID
+        assert ids[3:] == [tokenizer.PAD_ID] * 13
+
+    def test_truncation(self):
+        text = " ".join(f"w{i}" for i in range(100))
+        ids = tokenizer.encode(text, 4096, 16)
+        assert len(ids) == 16
+        assert tokenizer.PAD_ID not in ids[1:]
+
+    def test_ids_in_range(self):
+        ids = tokenizer.encode("the quick brown fox", 4096, 16)
+        for t in ids:
+            assert 0 <= t < 4096
+
+    def test_deterministic(self):
+        a = tokenizer.encode("stable diffusion", 4096, 16)
+        b = tokenizer.encode("stable diffusion", 4096, 16)
+        assert a == b
+
+    def test_case_insensitive(self):
+        assert tokenizer.encode("HELLO", 4096, 16) == \
+            tokenizer.encode("hello", 4096, 16)
+
+    def test_fnv_golden(self):
+        """FNV-1a 64 known-answer (cross-checked with the Rust impl)."""
+        assert tokenizer.fnv1a64(b"") == 0xCBF29CE484222325
+        assert tokenizer.fnv1a64(b"a") == 0xAF63DC4C8601EC8C

@@ -1,0 +1,126 @@
+"""W8A16 dequantize-matmul kernel + quantization error bounds."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+from compile.kernels import ref
+from compile.kernels.w8a16_matmul import w8a16_matmul_kernel
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (scale * np.random.default_rng(seed).normal(size=shape)).astype(np.float32))
+
+
+class TestKernel:
+    @pytest.mark.parametrize("m,k,n", [(4, 8, 16), (64, 128, 128),
+                                       (256, 128, 512), (7, 24, 16)])
+    def test_matches_ref(self, m, k, n):
+        x = rand((m, k), 1)
+        w_q = jnp.asarray(np.random.default_rng(2).integers(
+            -127, 128, size=(k, n)).astype(np.int8))
+        scale = jnp.asarray(np.random.default_rng(3).uniform(
+            0.001, 0.1, size=n).astype(np.float32))
+        np.testing.assert_allclose(
+            w8a16_matmul_kernel(x, w_q, scale),
+            ref.w8a16_matmul(x, w_q, scale), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 64), k=st.sampled_from([8, 16, 64]),
+           n=st.sampled_from([8, 16, 128, 256]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w_q = jnp.asarray(rng.integers(-127, 128, size=(k, n)).astype(np.int8))
+        scale = jnp.asarray(rng.uniform(0.001, 0.1, size=n).astype(np.float32))
+        np.testing.assert_allclose(
+            w8a16_matmul_kernel(x, w_q, scale),
+            ref.w8a16_matmul(x, w_q, scale), rtol=2e-4, atol=2e-4)
+
+
+class TestQuantization:
+    def test_round_trip_error_bound(self):
+        """Per-channel symmetric int8: |w - dq(q(w))| <= scale/2 per elem."""
+        w = np.asarray(rand((64, 32), 5, scale=0.2))
+        q, scale = quantize.quantize_per_channel(w)
+        dq = quantize.dequantize(q, scale)
+        assert np.all(np.abs(w - dq) <= scale[None, :] * 0.5 + 1e-8)
+
+    def test_quant_preserves_zero(self):
+        w = np.zeros((8, 8), np.float32)
+        q, scale = quantize.quantize_per_channel(w)
+        assert np.all(q == 0)
+        np.testing.assert_array_equal(quantize.dequantize(q, scale), w)
+
+    def test_quant_range_uses_127(self):
+        w = np.asarray(rand((128, 16), 6))
+        q, _ = quantize.quantize_per_channel(w)
+        assert q.max() == 127 or q.min() == -127
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(1, 100), cols=st.integers(1, 40),
+           seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+    def test_hypothesis_round_trip(self, rows, cols, seed, scale):
+        w = np.asarray(rand((rows, cols), seed, scale))
+        q, s = quantize.quantize_per_channel(w)
+        dq = quantize.dequantize(q, s)
+        assert np.all(np.abs(w - dq) <= s[None, :] * 0.5 + 1e-6 * scale)
+
+
+class TestPruning:
+    def test_prune_fraction(self):
+        w = np.asarray(rand((3, 3, 16, 32), 7))
+        pruned, keep = quantize.prune_structured(w, 0.25)
+        assert keep.sum() == 24
+        assert np.all(pruned[..., ~keep] == 0)
+        np.testing.assert_array_equal(pruned[..., keep], w[..., keep])
+
+    def test_prunes_lowest_norm_channels(self):
+        w = np.ones((4, 8), np.float32)
+        w[:, 3] = 0.001     # weakest channel
+        w[:, 6] = 0.01      # second weakest
+        _, keep = quantize.prune_structured(w, 0.25)
+        assert not keep[3] and not keep[6]
+
+    def test_prune_targets_only_huge_convs(self):
+        paths = ["a/conv/w", "b/conv/w", "c/norm/gamma", "d/lin/w"]
+        arrays = [np.zeros((3, 3, 192, 64), np.float32),     # 110k elems
+                  np.zeros((3, 3, 4, 8), np.float32),        # small
+                  np.zeros(64, np.float32),
+                  np.zeros((500, 500), np.float32)]          # not conv
+        assert quantize.prune_targets(paths, arrays) == ["a/conv/w"]
+
+
+class TestWeightsBin:
+    def test_round_trip_f32(self, tmp_path):
+        from compile import weightsbin
+        w = np.asarray(rand((5, 7), 8))
+        p = str(tmp_path / "w.bin")
+        weightsbin.write(p, [{"path": "x/w", "arr": w}])
+        out = weightsbin.read(p)
+        np.testing.assert_array_equal(out["x/w"], w)
+
+    def test_round_trip_int8_pruned(self, tmp_path):
+        from compile import weightsbin
+        w = np.asarray(rand((3, 3, 8, 16), 9))
+        pruned, keep = quantize.prune_structured(w, 0.25)
+        q, scale = quantize.quantize_per_channel(pruned)
+        p = str(tmp_path / "w.bin")
+        size = weightsbin.write(
+            p, [{"path": "c/w", "q": q, "scale": scale, "keep": keep}])
+        out = weightsbin.read(p)["c/w"]
+        assert out.shape == w.shape
+        assert np.all(out[..., ~keep] == 0)
+        np.testing.assert_allclose(out, quantize.dequantize(q, scale),
+                                   atol=1e-6)
+        # storage is ~1/4 of f32 (int8 payload + f32 scales, minus pruned)
+        assert size < w.size * 4 * 0.4
+
+    def test_reconstruction_error_metric(self):
+        a = np.zeros(10)
+        b = np.full(10, 2.0)
+        assert quantize.reconstruction_error(a, b) == pytest.approx(4.0)

@@ -1,0 +1,91 @@
+//! Fig. 1 — the two graph rewrites of paper Sec. 3.1:
+//!
+//!  (a) FullyConnected -> Reshape/1x1-Conv2D/Reshape: delegability flips
+//!      while the modeled latency stays ~equal ("almost the same latency
+//!      when benchmarked on the GPU");
+//!  (b) Conv2D serialization of the 1x32x32x1920 -> 1x32x32x640 layer:
+//!      minimal-factor search along each dimension + the latency sweep
+//!      that makes the paper pick input serialization (15.5 ms vs
+//!      40.9 ms).
+
+use mobile_diffusion::delegate::{
+    cost, op_latency, RuleSet, GPU_ADRENO740,
+};
+use mobile_diffusion::graph::builder::GraphBuilder;
+use mobile_diffusion::passes::serialize_conv::{minimal_factor, plan, Dim};
+
+fn main() {
+    let rules = RuleSet::default();
+    let dev = &GPU_ADRENO740;
+
+    // ---------------- Fig. 1a: FC -> Conv2D -----------------------------
+    println!("== Fig. 1a: FullyConnected -> 1x1 Conv2D (1x4096x320 -> 1280) ==\n");
+    let mut b = GraphBuilder::new("fc");
+    let x = b.input("x", &[1, 4096, 320]);
+    b.fully_connected("fc", x, 1280);
+    let g_fc = b.finish();
+
+    let mut b = GraphBuilder::new("conv");
+    let x = b.input("x", &[1, 1, 4096, 320]);
+    b.conv2d("conv1x1", x, 1280, 1, 1);
+    let g_conv = b.finish();
+
+    let fc_ok = rules.check(&g_fc, &g_fc.ops[0]).ok();
+    let conv_ok = rules.check(&g_conv, &g_conv.ops[0]).ok();
+    let t_fc = op_latency(&g_fc, &g_fc.ops[0], dev);
+    let t_conv = op_latency(&g_conv, &g_conv.ops[0], dev);
+    println!("{:<28} delegable={:<5}  modeled latency {:>7.2} ms",
+             "FULLY_CONNECTED", fc_ok, t_fc * 1e3);
+    println!("{:<28} delegable={:<5}  modeled latency {:>7.2} ms",
+             "RESHAPE/CONV_2D/RESHAPE", conv_ok, t_conv * 1e3);
+    assert!(!fc_ok && conv_ok, "conversion must flip delegability");
+    let rel = (t_fc - t_conv).abs() / t_fc;
+    println!("latency delta: {:.1}% (paper: 'almost the same latency')\n", rel * 100.0);
+    assert!(rel < 0.05);
+
+    // ---------------- Fig. 1b: serialization sweep ----------------------
+    println!("== Fig. 1b: serialization of conv 1x32x32x1920 -> 1x32x32x640 ==\n");
+    let (h, w, cin, cout, k) = (32, 32, 1920, 640, 3);
+
+    println!("{:<10} {:>8} {:>14} {:>12}", "dimension", "factor", "delegable", "latency");
+    for (dim, along_input) in [(Dim::Input, true), (Dim::Output, false)] {
+        let channels = if along_input { cin } else { cout };
+        for factor in [1usize, 2, 4, 5, 8, 16] {
+            if channels % factor != 0 {
+                continue;
+            }
+            let (ci, co) = if along_input { (cin / factor, cout) } else { (cin, cout / factor) };
+            let ok = {
+                let mut b = GraphBuilder::new("probe");
+                let x = b.input("x", &[1, h, w, ci]);
+                b.conv2d("c", x, co, k, 1);
+                let g = b.finish();
+                rules.check(&g, &g.ops[0]).ok()
+            };
+            let t = cost::serialized_conv_latency(h, w, cin, cout, k, factor, along_input, dev);
+            println!(
+                "{:<10} {:>8} {:>14} {:>9.1} ms",
+                format!("{dim:?}"),
+                factor,
+                ok,
+                t * 1e3
+            );
+        }
+    }
+
+    let f_in = minimal_factor(&rules, h, w, cin, cout, k, Dim::Input).unwrap();
+    let f_out = minimal_factor(&rules, h, w, cin, cout, k, Dim::Output).unwrap();
+    let t_in = cost::serialized_conv_latency(h, w, cin, cout, k, f_in, true, dev);
+    let t_out = cost::serialized_conv_latency(h, w, cin, cout, k, f_out, false, dev);
+    println!("\nminimal factors: input {f_in} (paper: 2), output {f_out} (paper: 8)");
+    println!(
+        "latency at minimal factor: input {:.1} ms (paper: 15.5), output {:.1} ms (paper: 40.9)",
+        t_in * 1e3,
+        t_out * 1e3
+    );
+    assert_eq!((f_in, f_out), (2, 8));
+
+    let p = plan(&rules, dev, h, w, cin, cout, k).unwrap();
+    println!("chosen plan: {:?} serialization, factor {} (paper chose input)", p.dim, p.factor);
+    assert_eq!(p.dim, Dim::Input);
+}

@@ -1,0 +1,178 @@
+//! Fig. 2 + Fig. 3 — numerical effect of the mobile rewrites.
+//!
+//! Fig. 2 (quantitative proxy): `unet_base` vs `unet_mobile` on identical
+//! latent/prompt — the serialized conv, broadcast-free group norm and
+//! clipped GELU must change the predicted noise only *subtly*; we report
+//! MSE / PSNR / max-abs over the real artifacts, plus the end-to-end
+//! final-latent deltas over full DDIM runs.
+//!
+//! Fig. 3 (binary16 emulation): the tanh-cubic GELU overflows float16 —
+//! we count non-finite intermediates over an activation sweep and show
+//! the clipped variant keeps every intermediate finite while matching
+//! the f32 reference.
+
+use std::path::Path;
+
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::runtime::{ActInput, Component, Engine, Manifest};
+use mobile_diffusion::util::f16::{self, F16};
+use mobile_diffusion::util::rng::Rng;
+use mobile_diffusion::util::stats;
+
+const SQRT_2_OVER_PI: f32 = 0.7978845608;
+const GELU_CUBIC: f32 = 0.044715;
+
+/// Emulated-f16 tanh GELU; returns (output, any_nonfinite_intermediate).
+fn gelu_f16(x: f32, clip: Option<f32>) -> (f32, bool) {
+    let xh = F16::from_f32(x);
+    let g = match clip {
+        Some(m) => f16::clamp(xh, -m, m),
+        None => xh,
+    };
+    let sq = f16::mul(g, g);
+    let cube = f16::mul(sq, g);
+    let scaled_cube = f16::mul(F16::from_f32(GELU_CUBIC), cube);
+    let sum = f16::add(g, scaled_cube);
+    let inner = f16::mul(F16::from_f32(SQRT_2_OVER_PI), sum);
+    let t = f16::tanh(inner);
+    let one_plus = f16::add(F16::from_f32(1.0), t);
+    let half_x = f16::mul(F16::from_f32(0.5), xh);
+    let out = f16::mul(half_x, one_plus);
+    let bad = !sq.is_finite()
+        || !cube.is_finite()
+        || !scaled_cube.is_finite()
+        || !sum.is_finite()
+        || !inner.is_finite()
+        || !out.is_finite();
+    (out.to_f32(), bad)
+}
+
+fn gelu_f32(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_CUBIC * x * x * x)).tanh())
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ not built; run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::new().unwrap();
+
+    // ---------------- Fig. 2: base vs mobile UNet -----------------------
+    println!("== Fig. 2: baseline vs mobile graph rewrites (single UNet eval) ==\n");
+    let base = Component::load(&engine, &m, m.component("unet_base").unwrap(), "fp32").unwrap();
+    let mobile =
+        Component::load(&engine, &m, m.component("unet_mobile").unwrap(), "fp32").unwrap();
+    let n = m.latent_size * m.latent_size * m.latent_channels;
+
+    println!("{:<8} {:>14} {:>10} {:>12}", "seed", "mse", "psnr dB", "max-abs");
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let latent2 = rng.normal_f32_vec(2 * n);
+        let ctx = rng.normal_f32_vec(2 * m.tokenizer.seq_len * 128);
+        let acts = vec![
+            ActInput::F32(latent2.clone()),
+            ActInput::F32(vec![500.0]),
+            ActInput::F32(ctx.clone()),
+        ];
+        let a = &base.run(&engine, &acts).unwrap()[0];
+        let acts = vec![
+            ActInput::F32(latent2),
+            ActInput::F32(vec![500.0]),
+            ActInput::F32(ctx),
+        ];
+        let b = &mobile.run(&engine, &acts).unwrap()[0];
+        let peak = a.iter().fold(0f32, |mx, v| mx.max(v.abs())) as f64;
+        let mse = stats::mse(a, b);
+        println!(
+            "{:<8} {:>14.3e} {:>10.1} {:>12.3e}",
+            seed,
+            mse,
+            stats::psnr(a, b, peak),
+            stats::max_abs_diff(a, b)
+        );
+        assert!(stats::max_abs_diff(a, b) / peak < 1e-3, "must stay subtle");
+    }
+    drop(base);
+    drop(mobile);
+
+    println!("\n-- end-to-end: final latent after a full DDIM run --");
+    let run_variant = |variant: &str| {
+        let mut ex = PipelinedExecutor::new(
+            m.clone(),
+            ExecOptions { num_steps: 10, ..Default::default() },
+        )
+        .unwrap();
+        ex.generate("fig2 prompt: a cat on a sofa", 77, variant).unwrap()
+    };
+    let r_base = run_variant("base");
+    let r_mobile = run_variant("mobile");
+    let peak = r_base.latent.iter().fold(0f32, |mx, v| mx.max(v.abs())) as f64;
+    println!(
+        "latent mse {:.3e}, psnr {:.1} dB, max-abs {:.3e} (paper: 'difference was subtle')",
+        stats::mse(&r_base.latent, &r_mobile.latent),
+        stats::psnr(&r_base.latent, &r_mobile.latent, peak),
+        stats::max_abs_diff(&r_base.latent, &r_mobile.latent)
+    );
+    let img_mse = stats::mse(&r_base.image, &r_mobile.image);
+    println!("image  mse {:.3e} (range ~[-1, 1])", img_mse);
+
+    // ---------------- Fig. 3: float16 GELU instability -------------------
+    println!("\n== Fig. 3 / Sec. 3.2: binary16 GELU emulation ==\n");
+    let sweep: Vec<f32> = (0..20000)
+        .map(|i| -200.0 + i as f32 * 0.02) // [-200, 200)
+        .collect();
+    for (name, clip) in [("tanh-cubic (baseline)", None), ("clipped, M=10 (ours)", Some(10.0))] {
+        let mut bad = 0usize;
+        let mut max_err = 0f64;
+        for &x in &sweep {
+            let (y, nonfinite) = gelu_f16(x, clip);
+            if nonfinite {
+                bad += 1;
+            } else {
+                max_err = max_err.max((y as f64 - gelu_f32(x) as f64).abs());
+            }
+        }
+        println!(
+            "{:<24} non-finite intermediates: {:>5} / {}   max |err| vs f32 (finite region): {:.3e}",
+            name,
+            bad,
+            sweep.len(),
+            max_err
+        );
+        if clip.is_none() {
+            assert!(bad > 0, "baseline must exhibit the instability");
+        } else {
+            assert_eq!(bad, 0, "clipped GELU must be finite everywhere");
+        }
+    }
+
+    // overflow threshold (paper: the cubic term; 65504^(1/3) ~= 40.3)
+    let mut threshold = None;
+    for i in 0..100000 {
+        let x = i as f32 * 0.01;
+        let (_, nonfinite) = gelu_f16(x, None);
+        if nonfinite {
+            threshold = Some(x);
+            break;
+        }
+    }
+    println!(
+        "\nbaseline first non-finite at |x| = {:.2} (expected ~40.3 = 65504^(1/3))",
+        threshold.unwrap()
+    );
+    assert!((threshold.unwrap() - 40.3).abs() < 0.2);
+
+    // equality inside the clip: gamma_10 is the identity for |x| <= 10
+    let mut max_delta = 0f32;
+    for i in 0..2000 {
+        let x = -10.0 + i as f32 * 0.01;
+        let (a, _) = gelu_f16(x, None);
+        let (b, _) = gelu_f16(x, Some(10.0));
+        max_delta = max_delta.max((a - b).abs());
+    }
+    println!("max |clipped - baseline| for |x| <= 10: {max_delta} (must be 0)");
+    assert_eq!(max_delta, 0.0);
+}

@@ -1,0 +1,58 @@
+//! Fig. 4 — memory occupancy of the three SD components during the
+//! pipelined execution (paper Sec. 3.3), regenerated from a real run of
+//! the executor with its memory ledger, against the load-everything
+//! baseline.
+
+use std::path::Path;
+
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::runtime::Manifest;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ not built; run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+
+    let unet = m.component("unet_mobile").unwrap().weights["fp32"].bytes;
+    let text = m.component("text_encoder").unwrap().weights["fp32"].bytes;
+    let dec = m.component("decoder").unwrap().weights["fp32"].bytes;
+    println!("component weights: unet {:.1} MB, text encoder {:.1} MB, decoder {:.1} MB\n",
+             unet as f64 / 1e6, text as f64 / 1e6, dec as f64 / 1e6);
+
+    let run = |pipelined: bool| {
+        let mut ex = PipelinedExecutor::new(
+            m.clone(),
+            ExecOptions { num_steps: 8, pipelined, ..Default::default() },
+        )
+        .unwrap();
+        let r = ex.generate("fig4: memory occupancy", 4, "mobile").unwrap();
+        (r.peak_memory, ex.ledger.trace.render_ascii(48), r.timings.total_s)
+    };
+
+    println!("== Fig. 4: pipelined execution (paper Sec. 3.3) ==");
+    let (peak_pipe, trace_pipe, t_pipe) = run(true);
+    println!("{trace_pipe}");
+    println!("peak {:.1} MB, wall {:.2} s\n", peak_pipe as f64 / 1e6, t_pipe);
+
+    println!("== baseline: all components resident ==");
+    let (peak_naive, trace_naive, t_naive) = run(false);
+    println!("{trace_naive}");
+    println!("peak {:.1} MB, wall {:.2} s\n", peak_naive as f64 / 1e6, t_naive);
+
+    let saved = peak_naive - peak_pipe;
+    println!(
+        "pipelining saves {:.1} MB of peak memory ({:.0}% of the naive peak); \
+         expected ~min(text, decoder) = {:.1} MB",
+        saved as f64 / 1e6,
+        saved as f64 / peak_naive as f64 * 100.0,
+        text.min(dec) as f64 / 1e6
+    );
+    assert!(peak_pipe < peak_naive);
+    // peak_pipe ~= unet + max(text, dec) (+ slack for the int8 scales etc)
+    let expect = (unet + text.max(dec)) as f64;
+    let rel = (peak_pipe as f64 - expect).abs() / expect;
+    assert!(rel < 0.05, "pipelined peak {peak_pipe} should be ~{expect}");
+}

@@ -1,0 +1,118 @@
+//! Fig. 5 / Sec. 3.4 — model compression quality, measured with the
+//! paper's own indirect metric: block-wise reconstruction error (Li et
+//! al. 2021) of a spatial-transformer block under W8A16 quantization and
+//! structured pruning, plus storage footprints and the end-to-end effect
+//! of int8 UNet weights on the final latent.
+
+use std::path::Path;
+
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::quant::WeightFile;
+use mobile_diffusion::runtime::{ActInput, Component, Engine, Manifest};
+use mobile_diffusion::util::rng::Rng;
+use mobile_diffusion::util::stats;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ not built; run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::new().unwrap();
+
+    // ---------------- storage footprints --------------------------------
+    println!("== Sec. 3.4: weight storage (UNet) ==\n");
+    let c = m.component("unet_mobile").unwrap();
+    let mut rows = Vec::new();
+    for tag in ["fp32", "int8", "int8_pruned"] {
+        let wf = WeightFile::load(&m.weight_path(c, tag).unwrap()).unwrap();
+        rows.push((tag, wf.stored_bytes()));
+    }
+    let fp32_bytes = rows[0].1 as f64;
+    for (tag, bytes) in &rows {
+        println!(
+            "{:<12} {:>8.2} MB   ({:.2}x smaller than fp32)",
+            tag,
+            *bytes as f64 / 1e6,
+            fp32_bytes / *bytes as f64
+        );
+    }
+
+    // ---------------- Fig. 5: block-wise reconstruction error ------------
+    println!("\n== Fig. 5: block-wise reconstruction error (spatial-transformer block) ==\n");
+    let fp = Component::load(&engine, &m, m.component("block_fp").unwrap(), "fp32").unwrap();
+    let w8 = Component::load(&engine, &m, m.component("block_w8").unwrap(), "fp32").unwrap();
+    let w8p = Component::load(&engine, &m, m.component("block_w8p").unwrap(), "fp32").unwrap();
+
+    let cdim = 128;
+    let size = m.latent_size / 2;
+    let mut sum_q = 0.0;
+    let mut sum_qp = 0.0;
+    let mut sum_sig = 0.0;
+    let trials = 5;
+    println!("{:<8} {:>14} {:>18}", "input", "err(W8)", "err(W8 + prune)");
+    for seed in 0..trials {
+        let mut rng = Rng::new(seed as u64 + 100);
+        let x = rng.normal_f32_vec(size * size * cdim);
+        let ctx = rng.normal_f32_vec(m.tokenizer.seq_len * 128);
+        let run = |comp: &Component| {
+            comp.run(&engine, &[ActInput::F32(x.clone()), ActInput::F32(ctx.clone())])
+                .unwrap()[0]
+                .clone()
+        };
+        let y_fp = run(&fp);
+        let e_q = stats::mse(&y_fp, &run(&w8));
+        let e_qp = stats::mse(&y_fp, &run(&w8p));
+        sum_q += e_q;
+        sum_qp += e_qp;
+        sum_sig += stats::mse(&y_fp, &vec![0.0; y_fp.len()]);
+        println!("{:<8} {:>14.4e} {:>18.4e}", seed, e_q, e_qp);
+    }
+    let (e_q, e_qp, sig) = (sum_q / trials as f64, sum_qp / trials as f64, sum_sig / trials as f64);
+    println!(
+        "\nmean:    err(W8) {:.4e}   err(W8+prune) {:.4e}   (signal power {:.3e})",
+        e_q, e_qp, sig
+    );
+    println!(
+        "relative: {:.3}% and {:.3}% of signal — paper: 'differences in details, \
+         less prominent than [the fp16 instability]'",
+        e_q / sig * 100.0,
+        e_qp / sig * 100.0
+    );
+    assert!(e_qp >= e_q, "pruning adds error on top of quantization");
+    assert!(e_q / sig < 0.05, "quantization error stays small");
+    drop(fp);
+    drop(w8);
+    drop(w8p);
+
+    // ---------------- end-to-end with int8 UNet weights ------------------
+    println!("\n== end-to-end: final latent vs weight precision (8 DDIM steps) ==\n");
+    let run_tag = |tag: &str| {
+        let mut ex = PipelinedExecutor::new(
+            m.clone(),
+            ExecOptions {
+                num_steps: 8,
+                unet_weights: tag.into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        ex.generate("fig5: a mountain at sunset", 5, "mobile").unwrap()
+    };
+    let r_fp = run_tag("fp32");
+    let peak = r_fp.latent.iter().fold(0f32, |mx, v| mx.max(v.abs())) as f64;
+    println!("{:<14} {:>14} {:>10} {:>12}", "weights", "latent mse", "psnr dB", "peak MB");
+    println!("{:<14} {:>14} {:>10} {:>12.1}", "fp32", "-", "-", r_fp.peak_memory as f64 / 1e6);
+    for tag in ["int8", "int8_pruned"] {
+        let r = run_tag(tag);
+        println!(
+            "{:<14} {:>14.4e} {:>10.1} {:>12.1}",
+            tag,
+            stats::mse(&r_fp.latent, &r.latent),
+            stats::psnr(&r_fp.latent, &r.latent, peak),
+            r.peak_memory as f64 / 1e6
+        );
+        assert!(r.peak_memory < r_fp.peak_memory, "int8 must reduce peak memory");
+    }
+}

@@ -1,0 +1,199 @@
+//! Layered configuration: defaults -> optional JSON config file -> CLI
+//! flags (hand-rolled parser; no clap offline).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::pipeline::ExecOptions;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub artifacts_dir: PathBuf,
+    /// "base" | "mobile"
+    pub variant: String,
+    /// "fp32" | "int8" | "int8_pruned"
+    pub unet_weights: String,
+    pub memory_budget_mb: f64,
+    pub pipelined: bool,
+    pub num_steps: usize,
+    pub guidance_scale: f64,
+    pub seed: u64,
+    pub prompt: String,
+    pub out: Option<PathBuf>,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: "mobile".into(),
+            unet_weights: "fp32".into(),
+            memory_budget_mb: f64::INFINITY,
+            pipelined: true,
+            num_steps: 20,
+            guidance_scale: 7.5,
+            seed: 0,
+            prompt: "a photograph of an astronaut riding a horse".into(),
+            out: None,
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn exec_options(&self) -> ExecOptions {
+        ExecOptions {
+            memory_budget: if self.memory_budget_mb.is_finite() {
+                (self.memory_budget_mb * 1e6) as usize
+            } else {
+                usize::MAX
+            },
+            pipelined: self.pipelined,
+            unet_weights: self.unet_weights.clone(),
+            num_steps: self.num_steps,
+            guidance_scale: self.guidance_scale,
+        }
+    }
+
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {}", path.display(), e)))?;
+        let j = Json::parse(&text).map_err(|e| Error::Config(e.to_string()))?;
+        self.apply_json(&j);
+        Ok(())
+    }
+
+    pub fn apply_json(&mut self, j: &Json) {
+        if let Some(v) = j.get("artifacts_dir").as_str() {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("variant").as_str() {
+            self.variant = v.to_string();
+        }
+        if let Some(v) = j.get("unet_weights").as_str() {
+            self.unet_weights = v.to_string();
+        }
+        if let Some(v) = j.get("memory_budget_mb").as_f64() {
+            self.memory_budget_mb = v;
+        }
+        if let Some(v) = j.get("pipelined").as_bool() {
+            self.pipelined = v;
+        }
+        if let Some(v) = j.get("num_steps").as_usize() {
+            self.num_steps = v;
+        }
+        if let Some(v) = j.get("guidance_scale").as_f64() {
+            self.guidance_scale = v;
+        }
+        if let Some(v) = j.get("seed").as_i64() {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("prompt").as_str() {
+            self.prompt = v.to_string();
+        }
+    }
+
+    /// Parse `--key value` / `--flag` CLI arguments (after the
+    /// subcommand).  Unknown keys are an error.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i].as_str();
+            let take = |i: &mut usize| -> Result<String> {
+                *i += 1;
+                args.get(*i)
+                    .cloned()
+                    .ok_or_else(|| Error::Config(format!("{key} needs a value")))
+            };
+            match key {
+                "--artifacts" => self.artifacts_dir = PathBuf::from(take(&mut i)?),
+                "--config" => {
+                    let p = PathBuf::from(take(&mut i)?);
+                    self.load_file(&p)?;
+                }
+                "--variant" => self.variant = take(&mut i)?,
+                "--weights" => self.unet_weights = take(&mut i)?,
+                "--budget-mb" => {
+                    self.memory_budget_mb = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--budget-mb: {e}")))?;
+                }
+                "--no-pipeline" => self.pipelined = false,
+                "--steps" => {
+                    self.num_steps = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--steps: {e}")))?;
+                }
+                "--guidance" => {
+                    self.guidance_scale = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--guidance: {e}")))?;
+                }
+                "--seed" => {
+                    self.seed = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--seed: {e}")))?;
+                }
+                "--prompt" => self.prompt = take(&mut i)?,
+                "--out" => self.out = Some(PathBuf::from(take(&mut i)?)),
+                other => {
+                    return Err(Error::Config(format!("unknown flag {other}")));
+                }
+            }
+            i += 1;
+        }
+        if !["base", "mobile"].contains(&self.variant.as_str()) {
+            return Err(Error::Config(format!("bad variant {}", self.variant)));
+        }
+        if !["fp32", "int8", "int8_pruned"].contains(&self.unet_weights.as_str()) {
+            return Err(Error::Config(format!("bad weights {}", self.unet_weights)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_flags() {
+        let mut c = AppConfig::default();
+        c.apply_args(&args(&[
+            "--steps", "5", "--weights", "int8", "--no-pipeline",
+            "--budget-mb", "64", "--seed", "7", "--prompt", "hello world",
+        ]))
+        .unwrap();
+        assert_eq!(c.num_steps, 5);
+        assert_eq!(c.unet_weights, "int8");
+        assert!(!c.pipelined);
+        assert_eq!(c.seed, 7);
+        let eo = c.exec_options();
+        assert_eq!(eo.memory_budget, 64_000_000);
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--nope"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--steps", "abc"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--variant", "huge"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--steps"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn json_layer() {
+        let mut c = AppConfig::default();
+        let j = Json::parse(r#"{"num_steps": 3, "variant": "base"}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.num_steps, 3);
+        assert_eq!(c.variant, "base");
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving metrics: request counters and latency summaries per stage.
+
+use std::collections::BTreeMap;
+
+use crate::pipeline::StageTimings;
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_ok: usize,
+    pub requests_failed: usize,
+    samples: BTreeMap<&'static str, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_success(&mut self, t: &StageTimings) {
+        self.requests_ok += 1;
+        for (k, v) in [
+            ("text_load", t.text_load_s),
+            ("text_encode", t.text_encode_s),
+            ("unet_load", t.unet_load_s),
+            ("denoise", t.denoise_s),
+            ("decoder_load", t.decoder_load_s),
+            ("decode", t.decode_s),
+            ("total", t.total_s),
+        ] {
+            self.samples.entry(k).or_default().push(v);
+        }
+        if t.denoise_steps > 0 {
+            self.samples
+                .entry("per_step")
+                .or_default()
+                .push(t.denoise_s / t.denoise_steps as f64);
+        }
+    }
+
+    pub fn record_failure(&mut self) {
+        self.requests_failed += 1;
+    }
+
+    pub fn summary(&self, key: &str) -> Option<Summary> {
+        self.samples.get(key).map(|s| summarize(s))
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "requests: {} ok, {} failed\n",
+            self.requests_ok, self.requests_failed
+        );
+        for (k, v) in &self.samples {
+            let s = summarize(v);
+            out.push_str(&format!(
+                "  {:<14} mean {:>8.1} ms   p50 {:>8.1} ms   p99 {:>8.1} ms\n",
+                k,
+                s.mean * 1e3,
+                s.p50 * 1e3,
+                s.p99 * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        let t = StageTimings {
+            text_load_s: 0.1,
+            text_encode_s: 0.05,
+            unet_load_s: 0.5,
+            denoise_s: 2.0,
+            denoise_steps: 20,
+            decoder_load_s: 0.2,
+            decode_s: 0.3,
+            total_s: 3.0,
+        };
+        m.record_success(&t);
+        m.record_success(&t);
+        m.record_failure();
+        assert_eq!(m.requests_ok, 2);
+        assert_eq!(m.requests_failed, 1);
+        let s = m.summary("total").unwrap();
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 3.0).abs() < 1e-9);
+        let per_step = m.summary("per_step").unwrap();
+        assert!((per_step.mean - 0.1).abs() < 1e-9);
+        assert!(m.report().contains("denoise"));
+    }
+}

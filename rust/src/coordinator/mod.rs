@@ -1,0 +1,10 @@
+//! L3 coordinator: the serving loop (FIFO queue, single-device worker,
+//! resident UNet) and per-request metrics.
+
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use request::{GenerateRequest, GenerateResponse};
+pub use server::Server;

@@ -1,0 +1,41 @@
+//! Request/response types for the serving loop.
+
+use crate::pipeline::StageTimings;
+
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub seed: u64,
+    /// override the configured step count (distilled schedules)
+    pub num_steps: Option<usize>,
+}
+
+impl GenerateRequest {
+    pub fn new(id: u64, prompt: &str, seed: u64) -> GenerateRequest {
+        GenerateRequest { id, prompt: prompt.to_string(), seed, num_steps: None }
+    }
+}
+
+pub struct GenerateResponse {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub image_size: usize,
+    pub latent: Vec<f32>,
+    pub timings: StageTimings,
+    pub peak_memory: usize,
+    /// wall-clock the request waited in the queue
+    pub queue_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = GenerateRequest::new(1, "hi", 42);
+        assert_eq!(r.id, 1);
+        assert!(r.num_steps.is_none());
+    }
+}

@@ -1,0 +1,424 @@
+//! Analytic latency cost model for the delegate simulator.
+//!
+//! Per-op roofline: `t = dispatch + max(flops / throughput, bytes / bw)`,
+//! with device profiles for the mobile GPU (Adreno-740-class), the CPU
+//! (XNNPACK on big cores), and a Hexagon-class NPU comparator.  GPU<->CPU
+//! boundaries pay a sync + copy cost.  Constants are calibrated (see
+//! DESIGN.md §4) so that the paper's measured numbers are reproduced:
+//! input-serialized conv ~15.5 ms, output-serialized ~40.9 ms, and the
+//! Table-1 end-to-end shape (~7 s ours vs ~12 s / ~15 s comparators).
+
+use crate::graph::{DType, Graph, Op, OpType};
+
+use super::partition::{Device, Partition};
+use super::rules::RuleSet;
+
+/// A compute-device profile.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// sustained f16 FLOP/s
+    pub flops: f64,
+    /// sustained memory bandwidth, bytes/s
+    pub bandwidth: f64,
+    /// per-op dispatch overhead, seconds
+    pub dispatch: f64,
+    /// output-channel tile the conv/matmul pipelines are efficient at;
+    /// thinner outputs waste lanes (the paper's 40.9 ms output
+    /// serialization)
+    pub cout_tile: usize,
+}
+
+/// Efficiency of the spatial (k>1) conv path relative to the matmul
+/// path: the im2col/winograd transform and halo reads cost ~20%.
+/// Calibrated jointly with `GPU_ADRENO740.flops` against the paper's
+/// 15.5 ms input-serialized conv measurement.
+pub const SPATIAL_CONV_EFF: f64 = 0.80;
+
+/// Adreno-740-class mobile GPU (OpenCL delegate).
+pub const GPU_ADRENO740: DeviceProfile = DeviceProfile {
+    name: "mobile-gpu",
+    flops: 1.9e12,
+    bandwidth: 50e9,
+    dispatch: 6e-6,
+    cout_tile: 224,
+};
+
+/// Snapdragon big-core CPU running XNNPACK fp16.
+pub const CPU_BIGCORE: DeviceProfile = DeviceProfile {
+    name: "cpu",
+    flops: 4.0e10,
+    bandwidth: 20e9,
+    dispatch: 1e-6,
+    cout_tile: 64,
+};
+
+/// Hexagon-class NPU (Hou & Asghar comparator): high peak, but the
+/// qualcomm AI-engine path the paper compares against ran SD v1.5 in
+/// ~15 s end to end — modeled as lower sustained efficiency.
+pub const NPU_HEXAGON: DeviceProfile = DeviceProfile {
+    name: "hexagon-npu",
+    flops: 0.70e12,
+    bandwidth: 50e9,
+    dispatch: 10e-6,
+    cout_tile: 256,
+};
+
+/// Custom OpenCL kernels (Chen et al. comparator): complete coverage by
+/// construction, slightly lower sustained throughput than the tuned
+/// TFLite delegate path on SD's shapes (they report ~12 s on S23 Ultra).
+pub const GPU_CUSTOM_KERNELS: DeviceProfile = DeviceProfile {
+    name: "custom-opencl",
+    flops: 0.875e12,
+    bandwidth: 50e9,
+    dispatch: 12e-6,
+    cout_tile: 224,
+};
+
+/// GPU<->CPU boundary: queue sync + activation copy both ways.
+pub const TRANSFER_SYNC: f64 = 120e-6;
+pub const TRANSFER_BW: f64 = 8e9;
+
+/// Winograd F(2x2, 3x3) arithmetic reduction for stride-1 3x3 convs.
+/// The delegate's standard conv path uses it; the serialized fallback
+/// path (attr "serialized") does not — its transform workspace is
+/// exactly the buffer that exceeded the arena limit in the first place,
+/// which keeps the Fig.-1 calibration (15.5 / 40.9 ms) intact.
+pub const WINOGRAD_REDUCTION: f64 = 2.25;
+
+/// FLOPs of one op (multiply-add = 2 FLOPs; Winograd-reduced where the
+/// delegate's conv path applies it).
+pub fn op_flops(g: &Graph, op: &Op) -> f64 {
+    let out = g.tensor(op.outputs[0]);
+    let out_elems = out.elems() as f64;
+    match op.ty {
+        OpType::Conv2d => {
+            let k = op.attr_i("kernel").unwrap_or(1) as f64;
+            let cin = g
+                .act_inputs(op)
+                .next()
+                .map(|t| *t.shape.last().unwrap_or(&1))
+                .unwrap_or(1) as f64;
+            let cout = *out.shape.last().unwrap_or(&1);
+            let mut flops = 2.0 * out_elems * cin * k * k;
+            let stride = op.attr_i("stride").unwrap_or(1);
+            if k == 3.0
+                && stride == 1
+                && cin >= 32.0
+                && cout >= 32
+                && op.attr_i("serialized").is_none()
+            {
+                flops /= WINOGRAD_REDUCTION;
+            }
+            flops
+        }
+        OpType::FullyConnected => {
+            let cin = g
+                .act_inputs(op)
+                .next()
+                .map(|t| *t.shape.last().unwrap_or(&1))
+                .unwrap_or(1) as f64;
+            2.0 * out_elems * cin
+        }
+        OpType::BatchMatmul => {
+            // (B, M, K) @ (B, K, N) -> (B, M, N)
+            let k = g
+                .act_inputs(op)
+                .next()
+                .map(|t| *t.shape.last().unwrap_or(&1))
+                .unwrap_or(1) as f64;
+            2.0 * out_elems * k
+        }
+        OpType::Softmax => 5.0 * out_elems,
+        OpType::Mean | OpType::SquaredDifference => {
+            let in_elems: f64 = g.act_inputs(op).map(|t| t.elems() as f64).sum();
+            in_elems.max(out_elems)
+        }
+        _ => out_elems, // elementwise / data movement
+    }
+}
+
+/// Bytes moved by one op (activations + weights read + outputs written).
+pub fn op_bytes(g: &Graph, op: &Op) -> f64 {
+    let acts: usize = g.act_inputs(op).map(|t| t.bytes()).sum();
+    // weights are streamed at their *stored* width (int8 payloads read
+    // 4x less than f32 — the W8A16 bandwidth win)
+    let weights: usize = g.const_inputs(op).map(|t| t.bytes()).sum();
+    let outs: usize = op.outputs.iter().map(|&t| g.tensor(t).bytes()).sum();
+    (acts + weights + outs) as f64
+}
+
+/// Latency of a single op on a device.
+pub fn op_latency(g: &Graph, op: &Op, dev: &DeviceProfile) -> f64 {
+    let flops = op_flops(g, op);
+    let bytes = op_bytes(g, op);
+    // thin-output utilization penalty for the matmul/conv pipelines
+    // (batched attention matmuls amortize across the batch and are
+    // exempt), plus the spatial-conv transform overhead for k>1 convs
+    let util = match op.ty {
+        OpType::Conv2d | OpType::FullyConnected => {
+            let cout = *g.tensor(op.outputs[0]).shape.last().unwrap_or(&1);
+            let thin = (cout as f64 / dev.cout_tile as f64).min(1.0);
+            let spatial = if op.ty == OpType::Conv2d
+                && op.attr_i("kernel").unwrap_or(1) > 1
+            {
+                SPATIAL_CONV_EFF
+            } else {
+                1.0
+            };
+            thin * spatial
+        }
+        _ => 1.0,
+    };
+    // reshapes are metadata-only views on the delegate
+    if op.ty == OpType::Reshape {
+        return dev.dispatch;
+    }
+    let compute = flops / (dev.flops * util.max(1e-3));
+    let memory = bytes / dev.bandwidth;
+    dev.dispatch + compute.max(memory)
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CostBreakdown {
+    pub gpu_time: f64,
+    pub cpu_time: f64,
+    pub transfer_time: f64,
+    pub transitions: usize,
+    pub cpu_ops: usize,
+    pub gpu_ops: usize,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.gpu_time + self.cpu_time + self.transfer_time
+    }
+}
+
+/// End-to-end latency of a partitioned graph on a (gpu, cpu) pair.
+pub fn partition_cost(
+    g: &Graph,
+    p: &Partition,
+    gpu: &DeviceProfile,
+    cpu: &DeviceProfile,
+) -> CostBreakdown {
+    let mut out = CostBreakdown {
+        transitions: p.num_transitions(),
+        cpu_ops: p.cpu_op_count(),
+        gpu_ops: p.gpu_op_count(),
+        ..Default::default()
+    };
+    for seg in &p.segments {
+        let dev = match seg.device {
+            Device::Gpu => gpu,
+            Device::Cpu => cpu,
+        };
+        // the GPU delegate fuses chains of elementwise ops into one
+        // kernel (no intermediate HBM round-trips, one dispatch)
+        let fuse = seg.device == Device::Gpu;
+        let t = segment_cost(g, &seg.ops, dev, fuse);
+        match seg.device {
+            Device::Gpu => out.gpu_time += t,
+            Device::Cpu => out.cpu_time += t,
+        }
+    }
+    for bytes in p.boundary_bytes(g) {
+        out.transfer_time += TRANSFER_SYNC + bytes as f64 / TRANSFER_BW;
+    }
+    out
+}
+
+/// Cost of a run of ops on one device, optionally fusing consecutive
+/// elementwise ops (one dispatch, intermediates stay in registers; only
+/// the chain's external inputs and final output touch memory).
+pub fn segment_cost(g: &Graph, ops: &[usize], dev: &DeviceProfile, fuse: bool) -> f64 {
+    if !fuse {
+        return ops.iter().map(|&i| op_latency(g, &g.ops[i], dev)).sum();
+    }
+    let mut total = 0.0;
+    let mut i = 0;
+    while i < ops.len() {
+        let op = &g.ops[ops[i]];
+        if !op.ty.is_elementwise() {
+            total += op_latency(g, op, dev);
+            i += 1;
+            continue;
+        }
+        // extend the elementwise run
+        let mut j = i;
+        let mut flops = 0.0;
+        let mut produced: std::collections::BTreeSet<usize> =
+            std::collections::BTreeSet::new();
+        let mut external_bytes = 0usize;
+        while j < ops.len() && g.ops[ops[j]].ty.is_elementwise() {
+            let o = &g.ops[ops[j]];
+            flops += op_flops(g, o);
+            for &inp in &o.inputs {
+                if !produced.contains(&inp) {
+                    external_bytes += g.tensor(inp).bytes();
+                }
+            }
+            for &out in &o.outputs {
+                produced.insert(out);
+            }
+            j += 1;
+        }
+        // final op's output leaves the fused kernel
+        external_bytes += g.ops[ops[j - 1]]
+            .outputs
+            .iter()
+            .map(|&t| g.tensor(t).bytes())
+            .sum::<usize>();
+        let compute = flops / dev.flops;
+        let memory = external_bytes as f64 / dev.bandwidth;
+        total += dev.dispatch + compute.max(memory);
+        i = j;
+    }
+    total
+}
+
+/// Convenience: partition with `rules`, then cost.
+pub fn graph_cost(
+    g: &Graph,
+    rules: &RuleSet,
+    gpu: &DeviceProfile,
+    cpu: &DeviceProfile,
+) -> CostBreakdown {
+    let p = Partition::new(g, rules);
+    partition_cost(g, &p, gpu, cpu)
+}
+
+/// Cost of running the whole graph on one device (custom kernels / NPU
+/// comparators: complete coverage by construction, elementwise fused).
+pub fn single_device_cost(g: &Graph, dev: &DeviceProfile) -> f64 {
+    let ops: Vec<usize> = (0..g.ops.len()).collect();
+    segment_cost(g, &ops, dev, true)
+}
+
+/// Latency of one serialized conv configuration (paper Fig. 1b study):
+/// `factor` sequential calls over input- or output-channel slices.
+pub fn serialized_conv_latency(
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    factor: usize,
+    along_input: bool,
+    dev: &DeviceProfile,
+) -> f64 {
+    let mut g = Graph::new("serial");
+    let mut total = 0.0;
+    let (cin_call, cout_call) = if along_input {
+        (cin / factor, cout)
+    } else {
+        (cin, cout / factor)
+    };
+    for i in 0..factor {
+        let x = g.add_tensor(&format!("x{i}"), &[1, h, w, cin_call], DType::F16, false);
+        let wt = g.add_tensor(
+            &format!("w{i}"),
+            &[k, k, cin_call, cout_call],
+            DType::F16,
+            true,
+        );
+        let y = g.add_tensor(&format!("y{i}"), &[1, h, w, cout_call], DType::F16, false);
+        let mut attrs = std::collections::BTreeMap::new();
+        attrs.insert("kernel".into(), k as f64);
+        // per-call slices run on the delegate's fallback (non-Winograd)
+        // conv path — see WINOGRAD_REDUCTION
+        attrs.insert("serialized".into(), factor as f64);
+        let id = g.add_op_with_attrs(
+            OpType::Conv2d,
+            &format!("c{i}"),
+            vec![x, wt],
+            vec![y],
+            attrs,
+        );
+        total += op_latency(&g, &g.ops[id], dev);
+    }
+    if along_input && factor > 1 {
+        // accumulate partial sums: factor-1 adds over the output
+        let x = g.add_tensor("acc_a", &[1, h, w, cout], DType::F16, false);
+        let yb = g.add_tensor("acc_b", &[1, h, w, cout], DType::F16, false);
+        let o = g.add_tensor("acc_o", &[1, h, w, cout], DType::F16, false);
+        let id = g.add_op(OpType::Add, "acc", vec![x, yb], vec![o]);
+        total += (factor - 1) as f64 * op_latency(&g, &g.ops[id], dev);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn paper_serialized_conv_latencies() {
+        // paper Sec 3.1: input factor 2 -> 15.5 ms, output factor 8 -> 40.9 ms
+        let t_in = serialized_conv_latency(32, 32, 1920, 640, 3, 2, true, &GPU_ADRENO740);
+        let t_out = serialized_conv_latency(32, 32, 1920, 640, 3, 8, false, &GPU_ADRENO740);
+        assert!(
+            (t_in * 1e3 - 15.5).abs() < 4.0,
+            "input-serialized latency {:.1} ms, paper 15.5 ms",
+            t_in * 1e3
+        );
+        assert!(
+            (t_out * 1e3 - 40.9).abs() < 10.0,
+            "output-serialized latency {:.1} ms, paper 40.9 ms",
+            t_out * 1e3
+        );
+        assert!(t_in < t_out, "paper chose input serialization for lower latency");
+    }
+
+    #[test]
+    fn transfers_dominate_when_islands_exist() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 320]);
+        let y = b.conv2d("pre", x, 320, 3, 1);
+        let z = b.group_norm_naive("gn", y, 32);
+        b.conv2d("post", z, 320, 3, 1);
+        let g = b.finish();
+        let rules = RuleSet::default();
+        let cost = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+        assert!(cost.cpu_time > 0.0);
+        assert!(cost.transfer_time > 0.0);
+        assert!(cost.transitions >= 2);
+        // the same graph with everything delegable is strictly faster
+        let clean = single_device_cost(&g, &GPU_ADRENO740);
+        assert!(clean < cost.total());
+    }
+
+    #[test]
+    fn flops_sanity() {
+        // raw: 2 * 32*32*640 * 1920 * 9 = 22.65 GFLOP; the standard
+        // delegate path Winograd-reduces it by 2.25x
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        b.conv2d("c", x, 640, 3, 1);
+        let g = b.finish();
+        let f = op_flops(&g, &g.ops[0]);
+        assert!((f / 1e9 - 22.65 / WINOGRAD_REDUCTION).abs() < 0.1, "{}", f / 1e9);
+
+        // the serialized fallback path keeps the raw count
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        let y = b.conv2d("c", x, 640, 3, 1);
+        let _ = y;
+        let mut g = b.finish();
+        g.ops[0].attrs.insert("serialized".into(), 2.0);
+        let f = op_flops(&g, &g.ops[0]);
+        assert!((f / 1e9 - 22.65).abs() < 0.1, "{}", f / 1e9);
+    }
+
+    #[test]
+    fn cpu_much_slower_than_gpu_on_conv() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 64, 64, 320]);
+        b.conv2d("c", x, 320, 3, 1);
+        let g = b.finish();
+        let tg = op_latency(&g, &g.ops[0], &GPU_ADRENO740);
+        let tc = op_latency(&g, &g.ops[0], &CPU_BIGCORE);
+        assert!(tc > 10.0 * tg);
+    }
+}

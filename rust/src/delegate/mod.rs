@@ -1,0 +1,17 @@
+//! TFLite GPU-delegate simulator (paper Sec. 3.1 substrate).
+//!
+//! Three pieces: [`rules`] decides per-op delegability, [`partition`]
+//! splits the graph into GPU segments and CPU fallback islands the way
+//! the real delegate does, and [`cost`] prices the result with an
+//! analytic roofline model of the Galaxy-S23-class hardware.
+
+pub mod cost;
+pub mod partition;
+pub mod rules;
+
+pub use cost::{
+    graph_cost, op_latency, partition_cost, single_device_cost, CostBreakdown,
+    DeviceProfile, CPU_BIGCORE, GPU_ADRENO740, GPU_CUSTOM_KERNELS, NPU_HEXAGON,
+};
+pub use partition::{Device, Partition, Segment};
+pub use rules::{RuleSet, Verdict};

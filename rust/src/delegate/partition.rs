@@ -1,0 +1,168 @@
+//! Graph partitioning into GPU segments and CPU fallback islands.
+//!
+//! Mirrors the TFLite delegate mechanism: maximal runs of consecutive
+//! delegable ops (in the graph's topological order) form GPU segments;
+//! each boundary between a GPU segment and a CPU island costs a
+//! synchronization + activation copy (the "expensive communication
+//! between CPU and GPU" of paper Sec. 3.1).
+
+use crate::graph::{Graph, OpId};
+
+use super::rules::RuleSet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Gpu,
+    Cpu,
+}
+
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub device: Device,
+    pub ops: Vec<OpId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub segments: Vec<Segment>,
+}
+
+impl Partition {
+    pub fn new(g: &Graph, rules: &RuleSet) -> Partition {
+        let mut segments: Vec<Segment> = Vec::new();
+        for op in &g.ops {
+            let device = if rules.check(g, op).ok() { Device::Gpu } else { Device::Cpu };
+            match segments.last_mut() {
+                Some(seg) if seg.device == device => seg.ops.push(op.id),
+                _ => segments.push(Segment { device, ops: vec![op.id] }),
+            }
+        }
+        Partition { segments }
+    }
+
+    pub fn num_transitions(&self) -> usize {
+        self.segments.len().saturating_sub(1)
+    }
+
+    pub fn cpu_op_count(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.device == Device::Cpu)
+            .map(|s| s.ops.len())
+            .sum()
+    }
+
+    pub fn gpu_op_count(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.device == Device::Gpu)
+            .map(|s| s.ops.len())
+            .sum()
+    }
+
+    pub fn fully_delegated(&self) -> bool {
+        self.cpu_op_count() == 0
+    }
+
+    /// Bytes crossing each GPU<->CPU boundary: activations produced by the
+    /// last op(s) of one segment and consumed by the next.  Conservative
+    /// estimate: output bytes of the boundary-producing op.
+    pub fn boundary_bytes(&self, g: &Graph) -> Vec<usize> {
+        let mut out = Vec::new();
+        for win in self.segments.windows(2) {
+            let last_op = *win[0].ops.last().unwrap();
+            let bytes: usize = g.ops[last_op]
+                .outputs
+                .iter()
+                .map(|&t| g.tensor(t).bytes())
+                .sum();
+            out.push(bytes);
+        }
+        out
+    }
+
+    /// Every op appears in exactly one segment, in order.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let mut seen = vec![false; g.ops.len()];
+        let mut last = None;
+        for seg in &self.segments {
+            if seg.ops.is_empty() {
+                return Err("empty segment".into());
+            }
+            for &op in &seg.ops {
+                if op >= g.ops.len() {
+                    return Err(format!("op {op} out of range"));
+                }
+                if seen[op] {
+                    return Err(format!("op {op} in two segments"));
+                }
+                if let Some(l) = last {
+                    if op != l + 1 {
+                        return Err(format!("ops out of order at {op}"));
+                    }
+                }
+                seen[op] = true;
+                last = Some(op);
+            }
+        }
+        if seen.iter().filter(|&&s| s).count() != g.ops.len() {
+            return Err("not all ops covered".into());
+        }
+        // adjacent segments must alternate devices
+        for win in self.segments.windows(2) {
+            if win[0].device == win[1].device {
+                return Err("adjacent segments on same device".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::OpType;
+
+    #[test]
+    fn all_gpu_when_clean() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 16]);
+        let y = b.conv2d("c", x, 16, 3, 1);
+        b.unary(OpType::Tanh, "t", y);
+        let g = b.finish();
+        let p = Partition::new(&g, &RuleSet::default());
+        p.validate(&g).unwrap();
+        assert!(p.fully_delegated());
+        assert_eq!(p.num_transitions(), 0);
+    }
+
+    #[test]
+    fn groupnorm_creates_cpu_island() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 16]);
+        let y = b.conv2d("pre", x, 16, 3, 1);
+        let z = b.group_norm_naive("gn", y, 4);
+        b.conv2d("post", z, 16, 3, 1);
+        let g = b.finish();
+        let p = Partition::new(&g, &RuleSet::default());
+        p.validate(&g).unwrap();
+        assert!(!p.fully_delegated());
+        assert!(p.num_transitions() >= 2, "island => at least 2 boundaries");
+        assert!(p.cpu_op_count() > 0);
+        assert!(!p.boundary_bytes(&g).is_empty());
+    }
+
+    #[test]
+    fn property_random_graphs() {
+        use crate::graph::builder::random_graph;
+        use crate::util::rng::Rng;
+        for seed in 0..40 {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng, 25);
+            let p = Partition::new(&g, &RuleSet::default());
+            p.validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(p.cpu_op_count() + p.gpu_op_count(), g.ops.len());
+        }
+    }
+}

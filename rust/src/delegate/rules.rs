@@ -1,0 +1,233 @@
+//! TFLite-GPU-delegate support rules (paper Sec. 3.1, calibrated in
+//! DESIGN.md §4).
+//!
+//! A rule set decides, per op, whether the GPU delegate accepts it.  The
+//! defaults reproduce every observation in the paper:
+//!
+//!  * `BROADCAST_TO` is never delegable (the group-norm blocker);
+//!  * ops touching rank-5 tensors are never delegable;
+//!  * `GATHER` is not delegable (real TFLite GPU behaviour);
+//!  * `FULLY_CONNECTED` fails when its flattened row count exceeds
+//!    `fc_max_rows` (the 1x4096x320 failure; the 1x1-conv equivalent
+//!    takes the matmul path and is exempt);
+//!  * a k>1 conv fails when BOTH `C_in >= conv_max_cin` AND
+//!    `in_elems + out_elems >= conv_max_elems` (the OpenCL spatial-conv
+//!    buffer-arena analog; at-capacity allocations fail).  Consequences,
+//!    verified against the full SD v2.1 UNet graph: **exactly one** conv
+//!    fails — the 1920 -> 640 3x3 at 32x32 the paper reports (the
+//!    1280 -> 1280 upsampler at the same resolution moves the same
+//!    elements but stays under the C_in limit, and the 2560-C_in convs
+//!    at 8x8/16x16 stay under the element limit); minimal input-
+//!    serialization factor is 2 (960 C_in per call); minimal output-
+//!    serialization factor is 8 (C_in stays 1920, so the element limit
+//!    governs: factor 4 -> 2.13 M >= 2^21 fails, factor 5 lands exactly
+//!    on 2^21 and still fails, factor 8 -> 2.05 M passes).
+
+use crate::graph::{Graph, Op, OpType};
+
+#[derive(Debug, Clone)]
+pub struct RuleSet {
+    /// FULLY_CONNECTED: max flattened rows the delegate accepts.
+    pub fc_max_rows: usize,
+    /// k>1 convs: input-channel threshold.
+    pub conv_max_cin: usize,
+    /// k>1 convs: element threshold (in_elems + out_elems).
+    pub conv_max_elems: usize,
+    /// max tensor rank the delegate supports.
+    pub max_rank: usize,
+}
+
+impl Default for RuleSet {
+    fn default() -> Self {
+        RuleSet {
+            fc_max_rows: 2048,
+            conv_max_cin: 1536,
+            conv_max_elems: 2 * 1024 * 1024,
+            max_rank: 4,
+        }
+    }
+}
+
+/// Why an op cannot be delegated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    Delegable,
+    UnsupportedOp(OpType),
+    RankTooHigh(usize),
+    FcTooManyRows(usize),
+    ConvTooLarge { cin: usize, elems: usize },
+}
+
+impl Verdict {
+    pub fn ok(&self) -> bool {
+        matches!(self, Verdict::Delegable)
+    }
+}
+
+impl RuleSet {
+    pub fn check(&self, g: &Graph, op: &Op) -> Verdict {
+        // hard unsupported ops
+        if matches!(op.ty, OpType::BroadcastTo | OpType::Gather) {
+            return Verdict::UnsupportedOp(op.ty);
+        }
+        // rank limit over all activation operands
+        let max_rank = op
+            .inputs
+            .iter()
+            .chain(op.outputs.iter())
+            .map(|&t| g.tensor(t).rank())
+            .max()
+            .unwrap_or(0);
+        if max_rank > self.max_rank {
+            return Verdict::RankTooHigh(max_rank);
+        }
+        match op.ty {
+            OpType::FullyConnected => {
+                let x = g.act_inputs(op).next();
+                if let Some(x) = x {
+                    let rows: usize =
+                        x.shape[..x.shape.len().saturating_sub(1)].iter().product();
+                    if rows > self.fc_max_rows {
+                        return Verdict::FcTooManyRows(rows);
+                    }
+                }
+                Verdict::Delegable
+            }
+            OpType::Conv2d => {
+                let k = op.attr_i("kernel").unwrap_or(1) as usize;
+                if k <= 1 {
+                    return Verdict::Delegable; // matmul path
+                }
+                let x = match g.act_inputs(op).next() {
+                    Some(t) => t,
+                    None => return Verdict::Delegable,
+                };
+                let y = g.tensor(op.outputs[0]);
+                let cin = *x.shape.last().unwrap_or(&0);
+                let _cout = *y.shape.last().unwrap_or(&0);
+                let elems = x.elems() + y.elems();
+                if cin >= self.conv_max_cin && elems >= self.conv_max_elems {
+                    return Verdict::ConvTooLarge { cin, elems };
+                }
+                Verdict::Delegable
+            }
+            _ => Verdict::Delegable,
+        }
+    }
+
+    /// All non-delegable ops with reasons.
+    pub fn failures<'a>(&self, g: &'a Graph) -> Vec<(&'a Op, Verdict)> {
+        g.ops
+            .iter()
+            .map(|op| (op, self.check(g, op)))
+            .filter(|(_, v)| !v.ok())
+            .collect()
+    }
+
+    /// Fraction of ops that delegate.
+    pub fn coverage(&self, g: &Graph) -> f64 {
+        if g.ops.is_empty() {
+            return 1.0;
+        }
+        let ok = g.ops.iter().filter(|op| self.check(g, op).ok()).count();
+        ok as f64 / g.ops.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn broadcast_and_rank5_blocked() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 16]);
+        b.group_norm_naive("gn", x, 4);
+        let g = b.finish();
+        let rules = RuleSet::default();
+        let fails = rules.failures(&g);
+        assert!(fails.iter().any(|(_, v)| matches!(v, Verdict::UnsupportedOp(OpType::BroadcastTo))));
+        assert!(fails.iter().any(|(_, v)| matches!(v, Verdict::RankTooHigh(5))));
+    }
+
+    #[test]
+    fn paper_fc_failure() {
+        let mut b = GraphBuilder::new("t");
+        // the paper's 1x4096x320 fully-connected
+        let x = b.input("x", &[1, 4096, 320]);
+        b.fully_connected("fc", x, 1280);
+        let g = b.finish();
+        let v = RuleSet::default().check(&g, &g.ops[0]);
+        assert_eq!(v, Verdict::FcTooManyRows(4096));
+    }
+
+    #[test]
+    fn small_fc_ok() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 77, 1024]);
+        b.fully_connected("fc", x, 4096);
+        let g = b.finish();
+        assert!(RuleSet::default().check(&g, &g.ops[0]).ok());
+    }
+
+    #[test]
+    fn paper_conv_failure_and_exemptions() {
+        let rules = RuleSet::default();
+        // the failing 1920 -> 640 3x3 at 32x32
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        b.conv2d("c", x, 640, 3, 1);
+        let g = b.finish();
+        assert!(!rules.check(&g, &g.ops[0]).ok());
+
+        // same shapes, 1x1 conv (matmul path): exempt
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        b.conv2d("c", x, 640, 1, 1);
+        let g = b.finish();
+        assert!(rules.check(&g, &g.ops[0]).ok());
+
+        // 320 -> 320 at 64x64: same elems (2.62M) but small C_in
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 64, 64, 320]);
+        b.conv2d("c", x, 320, 3, 1);
+        let g = b.finish();
+        assert!(rules.check(&g, &g.ops[0]).ok());
+
+        // 2560 -> 1280 at 8x8: huge C_in, few elems
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 2560]);
+        b.conv2d("c", x, 1280, 3, 1);
+        let g = b.finish();
+        assert!(rules.check(&g, &g.ops[0]).ok());
+    }
+
+    #[test]
+    fn serialization_minimal_factors_match_paper() {
+        let rules = RuleSet::default();
+        // input serialization: per-call conv is (1920/f) -> 640
+        let input_ok = |f: usize| {
+            let mut b = GraphBuilder::new("t");
+            let x = b.input("x", &[1, 32, 32, 1920 / f]);
+            b.conv2d("c", x, 640, 3, 1);
+            let g = b.finish();
+            rules.check(&g, &g.ops[0]).ok()
+        };
+        assert!(!input_ok(1));
+        assert!(input_ok(2)); // paper: minimal input factor 2
+
+        // output serialization: per-call conv is 1920 -> (640/f)
+        let output_ok = |f: usize| {
+            let mut b = GraphBuilder::new("t");
+            let x = b.input("x", &[1, 32, 32, 1920]);
+            b.conv2d("c", x, 640 / f, 3, 1);
+            let g = b.finish();
+            rules.check(&g, &g.ops[0]).ok()
+        };
+        assert!(!output_ok(1));
+        assert!(!output_ok(2));
+        assert!(!output_ok(4));
+        assert!(output_ok(8)); // paper: minimal output factor 8
+    }
+}

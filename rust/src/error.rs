@@ -1,0 +1,31 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(String),
+    #[error("graph error: {0}")]
+    Graph(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("weights error: {0}")]
+    Weights(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

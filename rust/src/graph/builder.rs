@@ -1,0 +1,247 @@
+//! Programmatic graph construction helpers (tests, benches, property
+//! generators).  Mirrors python/compile/graphspec.py's composite emitters
+//! at a smaller granularity.
+
+use std::collections::BTreeMap;
+
+use super::ir::{DType, Graph, OpType, TensorId};
+use crate::util::rng::Rng;
+
+pub struct GraphBuilder {
+    pub g: Graph,
+    act_dtype: DType,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder { g: Graph::new(name), act_dtype: DType::F16 }
+    }
+
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.g.add_tensor(name, shape, self.act_dtype, false)
+    }
+
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.g.add_tensor(name, shape, DType::F32, true)
+    }
+
+    pub fn unary(&mut self, ty: OpType, name: &str, x: TensorId) -> TensorId {
+        let shape = self.g.tensor(x).shape.clone();
+        let out = self.g.add_tensor(&format!("{name}:out"), &shape, self.act_dtype, false);
+        self.g.add_op(ty, name, vec![x], vec![out]);
+        out
+    }
+
+    pub fn binary(&mut self, ty: OpType, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let sa = self.g.tensor(a).shape.clone();
+        let sb = self.g.tensor(b).shape.clone();
+        let shape = if sa.len() >= sb.len() { sa } else { sb };
+        let out = self.g.add_tensor(&format!("{name}:out"), &shape, self.act_dtype, false);
+        self.g.add_op(ty, name, vec![a, b], vec![out]);
+        out
+    }
+
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        cout: usize,
+        k: usize,
+        stride: usize,
+    ) -> TensorId {
+        let s = self.g.tensor(x).shape.clone();
+        assert_eq!(s.len(), 4, "conv input must be NHWC");
+        let (n, h, w, cin) = (s[0], s[1], s[2], s[3]);
+        let wt = self.weight(&format!("{name}/w"), &[k, k, cin, cout]);
+        let bt = self.weight(&format!("{name}/b"), &[cout]);
+        let out = self.g.add_tensor(
+            &format!("{name}:out"),
+            &[n, h / stride, w / stride, cout],
+            self.act_dtype,
+            false,
+        );
+        let mut attrs = BTreeMap::new();
+        attrs.insert("kernel".to_string(), k as f64);
+        attrs.insert("stride".to_string(), stride as f64);
+        self.g.add_op_with_attrs(OpType::Conv2d, name, vec![x, wt, bt], vec![out], attrs);
+        out
+    }
+
+    pub fn fully_connected(&mut self, name: &str, x: TensorId, d_out: usize) -> TensorId {
+        let mut s = self.g.tensor(x).shape.clone();
+        let d_in = *s.last().unwrap();
+        *s.last_mut().unwrap() = d_out;
+        let wt = self.weight(&format!("{name}/w"), &[d_in, d_out]);
+        let bt = self.weight(&format!("{name}/b"), &[d_out]);
+        let out = self.g.add_tensor(&format!("{name}:out"), &s, self.act_dtype, false);
+        self.g.add_op(OpType::FullyConnected, name, vec![x, wt, bt], vec![out]);
+        out
+    }
+
+    pub fn reshape(&mut self, name: &str, x: TensorId, shape: &[usize]) -> TensorId {
+        let out = self.g.add_tensor(&format!("{name}:out"), shape, self.act_dtype, false);
+        self.g.add_op(OpType::Reshape, name, vec![x], vec![out]);
+        out
+    }
+
+    pub fn broadcast_to(&mut self, name: &str, x: TensorId, shape: &[usize]) -> TensorId {
+        let out = self.g.add_tensor(&format!("{name}:out"), shape, self.act_dtype, false);
+        self.g.add_op(OpType::BroadcastTo, name, vec![x], vec![out]);
+        out
+    }
+
+    /// The naive (export-form) group norm: rank-5 + BroadcastTo.
+    pub fn group_norm_naive(&mut self, name: &str, x: TensorId, groups: usize) -> TensorId {
+        let s = self.g.tensor(x).shape.clone();
+        let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+        let cg = c / groups;
+        let x5 = self.reshape(&format!("{name}/r5"), x, &[n, h, w, groups, cg]);
+        let mean = {
+            let out = self.g.add_tensor(
+                &format!("{name}/mean:out"),
+                &[n, 1, 1, groups, 1],
+                self.act_dtype,
+                false,
+            );
+            self.g.add_op(OpType::Mean, &format!("{name}/mean"), vec![x5], vec![out]);
+            out
+        };
+        let mean_b = self.broadcast_to(&format!("{name}/mean_b"), mean, &[n, h, w, groups, cg]);
+        let sq = self.binary(OpType::SquaredDifference, &format!("{name}/sq"), x5, mean_b);
+        let var = {
+            let out = self.g.add_tensor(
+                &format!("{name}/var:out"),
+                &[n, 1, 1, groups, 1],
+                self.act_dtype,
+                false,
+            );
+            self.g.add_op(OpType::Mean, &format!("{name}/var"), vec![sq], vec![out]);
+            out
+        };
+        let rstd = self.unary(OpType::Rsqrt, &format!("{name}/rsqrt"), var);
+        let rstd_b = self.broadcast_to(&format!("{name}/rstd_b"), rstd, &[n, h, w, groups, cg]);
+        let centered = self.binary(OpType::Sub, &format!("{name}/center"), x5, mean_b);
+        let normed = self.binary(OpType::Mul, &format!("{name}/norm"), centered, rstd_b);
+        let back = self.reshape(&format!("{name}/r4"), normed, &[n, h, w, c]);
+        let gamma = self.weight(&format!("{name}/gamma"), &[c]);
+        let beta = self.weight(&format!("{name}/beta"), &[c]);
+        let scaled = self.binary(OpType::Mul, &format!("{name}/gmul"), back, gamma);
+        self.binary(OpType::Add, &format!("{name}/badd"), scaled, beta)
+    }
+
+    /// Decomposed tanh GELU (optionally with the paper's clamp).
+    pub fn gelu(&mut self, name: &str, x: TensorId, stable: bool) -> TensorId {
+        let mut gx = x;
+        if stable {
+            gx = self.unary(OpType::Minimum, &format!("{name}/min"), gx);
+            gx = self.unary(OpType::Maximum, &format!("{name}/max"), gx);
+        }
+        let sq = self.binary(OpType::Mul, &format!("{name}/sq"), gx, gx);
+        let cube = self.binary(OpType::Mul, &format!("{name}/cube"), sq, gx);
+        let sc = self.unary(OpType::Mul, &format!("{name}/scale_cube"), cube);
+        let sum = self.binary(OpType::Add, &format!("{name}/add"), gx, sc);
+        let scaled = self.unary(OpType::Mul, &format!("{name}/scale"), sum);
+        let t = self.unary(OpType::Tanh, &format!("{name}/tanh"), scaled);
+        let one_plus = self.unary(OpType::Add, &format!("{name}/one_plus"), t);
+        let half_x = self.unary(OpType::Mul, &format!("{name}/half_x"), x);
+        self.binary(OpType::Mul, &format!("{name}/out"), half_x, one_plus)
+    }
+
+    pub fn finish(self) -> Graph {
+        self.g
+    }
+}
+
+/// Generate a random valid graph for property tests: a chain with
+/// occasional branches, convs, FCs, group norms and GELUs.
+pub fn random_graph(rng: &mut Rng, n_ops: usize) -> Graph {
+    let mut b = GraphBuilder::new("random");
+    let c0 = *rng.choose(&[8usize, 16, 32]);
+    let hw = *rng.choose(&[4usize, 8, 16]);
+    let mut cur = b.input("x", &[1, hw, hw, c0]);
+    let mut spatial: Vec<TensorId> = vec![cur];
+    for i in 0..n_ops {
+        match rng.below(8) {
+            0 => {
+                let cout = *rng.choose(&[8usize, 16, 32, 64]);
+                cur = b.conv2d(&format!("conv{i}"), cur, cout, 3, 1);
+            }
+            1 => {
+                let cout = *rng.choose(&[8usize, 16, 32]);
+                cur = b.conv2d(&format!("pconv{i}"), cur, cout, 1, 1);
+            }
+            2 => {
+                let groups = *rng.choose(&[2usize, 4]);
+                let c = *b.g.tensor(cur).shape.last().unwrap();
+                if c % groups == 0 {
+                    cur = b.group_norm_naive(&format!("gn{i}"), cur, groups);
+                }
+            }
+            3 => {
+                cur = b.gelu(&format!("gelu{i}"), cur, false);
+            }
+            4 => {
+                // flatten -> FC -> restore
+                let s = b.g.tensor(cur).shape.clone();
+                let rows: usize = s[..s.len() - 1].iter().product();
+                let d = *s.last().unwrap();
+                let flat = b.reshape(&format!("flat{i}"), cur, &[rows, d]);
+                let fc = b.fully_connected(&format!("fc{i}"), flat, d);
+                cur = b.reshape(&format!("unflat{i}"), fc, &s);
+            }
+            5 => {
+                cur = b.unary(OpType::Tanh, &format!("tanh{i}"), cur);
+            }
+            6 => {
+                cur = b.unary(OpType::Logistic, &format!("sig{i}"), cur);
+            }
+            _ => {
+                // residual add with an earlier same-shape tensor if any
+                let shape = b.g.tensor(cur).shape.clone();
+                let prev = spatial
+                    .iter()
+                    .rev()
+                    .find(|&&t| b.g.tensor(t).shape == shape)
+                    .copied();
+                if let Some(p) = prev {
+                    cur = b.binary(OpType::Add, &format!("res{i}"), cur, p);
+                }
+            }
+        }
+        spatial.push(cur);
+    }
+    let g = b.finish();
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_valid_graphs() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 16]);
+        let y = b.conv2d("c1", x, 32, 3, 1);
+        let z = b.group_norm_naive("gn", y, 4);
+        let w = b.gelu("g", z, true);
+        let _fc = {
+            let flat = b.reshape("f", w, &[64, 32]);
+            b.fully_connected("fc", flat, 8)
+        };
+        let g = b.finish();
+        g.validate().unwrap();
+        assert!(g.op_histogram()[&OpType::BroadcastTo] == 2);
+    }
+
+    #[test]
+    fn random_graphs_always_valid() {
+        for seed in 0..30 {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng, 20);
+            g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert!(!g.ops.is_empty());
+        }
+    }
+}

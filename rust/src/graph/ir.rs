@@ -1,0 +1,431 @@
+//! TFLite-level computation-graph IR.
+//!
+//! This is the representation the paper's Sec. 3.1 operates on: named
+//! operators (CONV_2D, FULLY_CONNECTED, BROADCAST_TO, ...) over shaped
+//! tensors.  Graphs are loaded from `artifacts/*.graph.json` (emitted by
+//! python/compile/graphspec.py) or built programmatically in tests; the
+//! pass pipeline (crate::passes) rewrites them and the delegate
+//! simulator (crate::delegate) partitions and costs them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F16,
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F16 => 2,
+            DType::F32 => 4,
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f16" => Some(DType::F16),
+            "f32" => Some(DType::F32),
+            "i8" => Some(DType::I8),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// TFLite operator kinds used by the Stable Diffusion graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpType {
+    Conv2d,
+    FullyConnected,
+    Add,
+    Sub,
+    Mul,
+    Mean,
+    SquaredDifference,
+    Rsqrt,
+    Reshape,
+    BroadcastTo,
+    Softmax,
+    BatchMatmul,
+    Tanh,
+    Minimum,
+    Maximum,
+    Logistic,
+    Concatenation,
+    ResizeNearestNeighbor,
+    Gather,
+    StridedSlice,
+    Split,
+}
+
+impl OpType {
+    pub fn parse(s: &str) -> Option<OpType> {
+        use OpType::*;
+        Some(match s {
+            "CONV_2D" => Conv2d,
+            "FULLY_CONNECTED" => FullyConnected,
+            "ADD" => Add,
+            "SUB" => Sub,
+            "MUL" => Mul,
+            "MEAN" => Mean,
+            "SQUARED_DIFFERENCE" => SquaredDifference,
+            "RSQRT" => Rsqrt,
+            "RESHAPE" => Reshape,
+            "BROADCAST_TO" => BroadcastTo,
+            "SOFTMAX" => Softmax,
+            "BATCH_MATMUL" => BatchMatmul,
+            "TANH" => Tanh,
+            "MINIMUM" => Minimum,
+            "MAXIMUM" => Maximum,
+            "LOGISTIC" => Logistic,
+            "CONCATENATION" => Concatenation,
+            "RESIZE_NEAREST_NEIGHBOR" => ResizeNearestNeighbor,
+            "GATHER" => Gather,
+            "STRIDED_SLICE" => StridedSlice,
+            "SPLIT" => Split,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        use OpType::*;
+        match self {
+            Conv2d => "CONV_2D",
+            FullyConnected => "FULLY_CONNECTED",
+            Add => "ADD",
+            Sub => "SUB",
+            Mul => "MUL",
+            Mean => "MEAN",
+            SquaredDifference => "SQUARED_DIFFERENCE",
+            Rsqrt => "RSQRT",
+            Reshape => "RESHAPE",
+            BroadcastTo => "BROADCAST_TO",
+            Softmax => "SOFTMAX",
+            BatchMatmul => "BATCH_MATMUL",
+            Tanh => "TANH",
+            Minimum => "MINIMUM",
+            Maximum => "MAXIMUM",
+            Logistic => "LOGISTIC",
+            Concatenation => "CONCATENATION",
+            ResizeNearestNeighbor => "RESIZE_NEAREST_NEIGHBOR",
+            Gather => "GATHER",
+            StridedSlice => "STRIDED_SLICE",
+            Split => "SPLIT",
+        }
+    }
+
+    /// Pure element-wise ops (fusable by the delegate's elementwise chain).
+    pub fn is_elementwise(self) -> bool {
+        use OpType::*;
+        matches!(
+            self,
+            Add | Sub | Mul | Rsqrt | Tanh | Minimum | Maximum | Logistic
+                | SquaredDifference
+        )
+    }
+}
+
+pub type TensorId = usize;
+pub type OpId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub is_const: bool,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub ty: OpType,
+    pub name: String,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    pub attrs: BTreeMap<String, f64>,
+}
+
+impl Op {
+    pub fn attr_i(&self, key: &str) -> Option<i64> {
+        self.attrs.get(key).map(|v| *v as i64)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), tensors: Vec::new(), ops: Vec::new() }
+    }
+
+    pub fn add_tensor(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        dtype: DType,
+        is_const: bool,
+    ) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(Tensor {
+            id,
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype,
+            is_const,
+        });
+        id
+    }
+
+    pub fn add_op(
+        &mut self,
+        ty: OpType,
+        name: &str,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> OpId {
+        self.add_op_with_attrs(ty, name, inputs, outputs, BTreeMap::new())
+    }
+
+    pub fn add_op_with_attrs(
+        &mut self,
+        ty: OpType,
+        name: &str,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+        attrs: BTreeMap<String, f64>,
+    ) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(Op { id, ty, name: name.to_string(), inputs, outputs, attrs });
+        id
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id]
+    }
+
+    /// Activation (non-const) inputs of an op.
+    pub fn act_inputs<'a>(&'a self, op: &'a Op) -> impl Iterator<Item = &'a Tensor> {
+        op.inputs.iter().map(|&t| self.tensor(t)).filter(|t| !t.is_const)
+    }
+
+    /// Const (weight) inputs of an op.
+    pub fn const_inputs<'a>(&'a self, op: &'a Op) -> impl Iterator<Item = &'a Tensor> {
+        op.inputs.iter().map(|&t| self.tensor(t)).filter(|t| t.is_const)
+    }
+
+    /// Total weight bytes (const tensors actually referenced by ops).
+    pub fn weight_bytes(&self) -> usize {
+        let mut used = vec![false; self.tensors.len()];
+        for op in &self.ops {
+            for &t in &op.inputs {
+                used[t] = true;
+            }
+        }
+        self.tensors
+            .iter()
+            .filter(|t| t.is_const && used[t.id])
+            .map(|t| t.bytes())
+            .sum()
+    }
+
+    /// Producer op of each tensor (None for graph inputs / consts).
+    pub fn producers(&self) -> Vec<Option<OpId>> {
+        let mut prod = vec![None; self.tensors.len()];
+        for op in &self.ops {
+            for &o in &op.outputs {
+                prod[o] = Some(op.id);
+            }
+        }
+        prod
+    }
+
+    /// Consumer ops of each tensor.
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut cons = vec![Vec::new(); self.tensors.len()];
+        for op in &self.ops {
+            for &i in &op.inputs {
+                cons[i].push(op.id);
+            }
+        }
+        cons
+    }
+
+    /// Structural validation: SSA (each tensor produced once), all ids in
+    /// range, ops topologically ordered (inputs produced before use or
+    /// graph inputs/consts).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut produced = vec![false; self.tensors.len()];
+        for (i, t) in self.tensors.iter().enumerate() {
+            if t.id != i {
+                return Err(format!("tensor id mismatch at {}", i));
+            }
+            if t.shape.iter().any(|&d| d == 0) {
+                return Err(format!("tensor {} has zero dim", t.name));
+            }
+        }
+        for op in &self.ops {
+            for &i in &op.inputs {
+                if i >= self.tensors.len() {
+                    return Err(format!("op {} input {} out of range", op.name, i));
+                }
+            }
+            for &o in &op.outputs {
+                if o >= self.tensors.len() {
+                    return Err(format!("op {} output {} out of range", op.name, o));
+                }
+                if produced[o] {
+                    return Err(format!("tensor {} produced twice", o));
+                }
+                if self.tensors[o].is_const {
+                    return Err(format!("op {} writes const tensor", op.name));
+                }
+                produced[o] = true;
+            }
+        }
+        // topological: every activation input must be produced by an
+        // earlier op or be a graph input (never produced at all)
+        let mut seen = vec![false; self.tensors.len()];
+        let producers = self.producers();
+        for op in &self.ops {
+            for &i in &op.inputs {
+                if !self.tensors[i].is_const
+                    && producers[i].is_some()
+                    && !seen[i]
+                {
+                    return Err(format!(
+                        "op {} uses tensor {} before production",
+                        op.name, i
+                    ));
+                }
+            }
+            for &o in &op.outputs {
+                seen[o] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Count ops by type.
+    pub fn op_histogram(&self) -> BTreeMap<OpType, usize> {
+        let mut h = BTreeMap::new();
+        for op in &self.ops {
+            *h.entry(op.ty).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Maximum rank among tensors actually referenced by ops (rewrite
+    /// passes orphan replaced tensors rather than renumbering the graph).
+    pub fn max_rank(&self) -> usize {
+        self.ops
+            .iter()
+            .flat_map(|op| op.inputs.iter().chain(op.outputs.iter()))
+            .map(|&t| self.tensor(t).rank())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "graph {} ({} ops, {} tensors, {:.1} MB weights)",
+            self.name,
+            self.ops.len(),
+            self.tensors.len(),
+            self.weight_bytes() as f64 / 1e6
+        )?;
+        for (ty, n) in self.op_histogram() {
+            writeln!(f, "  {:<24} {}", ty.name(), n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", &[1, 8, 8, 4], DType::F16, false);
+        let w = g.add_tensor("w", &[3, 3, 4, 8], DType::F32, true);
+        let y = g.add_tensor("y", &[1, 8, 8, 8], DType::F16, false);
+        g.add_op(OpType::Conv2d, "conv", vec![x, w], vec![y]);
+        g
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_double_produce() {
+        let mut g = tiny();
+        let x = 0;
+        let y = 2;
+        g.add_op(OpType::Tanh, "t", vec![x], vec![y]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_use_before_produce() {
+        let mut g = Graph::new("t");
+        let a = g.add_tensor("a", &[4], DType::F16, false);
+        let b = g.add_tensor("b", &[4], DType::F16, false);
+        g.add_op(OpType::Tanh, "t1", vec![b], vec![a]); // b produced later
+        g.add_op(OpType::Tanh, "t2", vec![a], vec![b]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let g = tiny();
+        assert_eq!(g.tensor(0).bytes(), 8 * 8 * 4 * 2);
+        assert_eq!(g.weight_bytes(), 3 * 3 * 4 * 8 * 4);
+    }
+
+    #[test]
+    fn histogram_and_display() {
+        let g = tiny();
+        assert_eq!(g.op_histogram()[&OpType::Conv2d], 1);
+        assert!(format!("{}", g).contains("CONV_2D"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Load `artifacts/*.graph.json` (python/compile/graphspec.py) into the IR.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::ir::{DType, Graph, OpType};
+
+pub fn from_json(json: &Json) -> Result<Graph> {
+    let name = json
+        .get("name")
+        .as_str()
+        .ok_or_else(|| Error::Graph("missing graph name".into()))?;
+    let mut g = Graph::new(name);
+
+    let tensors = json
+        .get("tensors")
+        .as_arr()
+        .ok_or_else(|| Error::Graph("missing tensors".into()))?;
+    for t in tensors {
+        let tname = t.get("name").as_str().unwrap_or("?");
+        let shape: Vec<usize> = t
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| Error::Graph(format!("tensor {} missing shape", tname)))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = DType::parse(t.get("dtype").as_str().unwrap_or("f16"))
+            .ok_or_else(|| Error::Graph(format!("bad dtype for {}", tname)))?;
+        let is_const = t.get("const").as_bool().unwrap_or(false);
+        let id = g.add_tensor(tname, &shape, dtype, is_const);
+        let want = t.get("id").as_usize().unwrap_or(id);
+        if want != id {
+            return Err(Error::Graph(format!(
+                "non-dense tensor ids: got {} want {}",
+                want, id
+            )));
+        }
+    }
+
+    let ops = json
+        .get("ops")
+        .as_arr()
+        .ok_or_else(|| Error::Graph("missing ops".into()))?;
+    for o in ops {
+        let oname = o.get("name").as_str().unwrap_or("?").to_string();
+        let ty_str = o.get("type").as_str().unwrap_or("?");
+        let ty = OpType::parse(ty_str)
+            .ok_or_else(|| Error::Graph(format!("unknown op type {}", ty_str)))?;
+        let inputs = o
+            .get("inputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let outputs = o
+            .get("outputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let mut attrs = std::collections::BTreeMap::new();
+        if let Some(a) = o.get("attrs").as_obj() {
+            for (k, v) in a {
+                if let Some(n) = v.as_f64() {
+                    attrs.insert(k.clone(), n);
+                }
+            }
+        }
+        g.add_op_with_attrs(ty, &oname, inputs, outputs, attrs);
+    }
+
+    g.validate().map_err(Error::Graph)?;
+    Ok(g)
+}
+
+pub fn load(path: &Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Io(format!("{}: {}", path.display(), e)))?;
+    let json = Json::parse(&text)
+        .map_err(|e| Error::Graph(format!("{}: {}", path.display(), e)))?;
+    from_json(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let src = r#"{
+          "name": "t", "activation_dtype": "f16",
+          "tensors": [
+            {"id":0,"name":"x","shape":[1,4,4,2],"dtype":"f16","const":false},
+            {"id":1,"name":"w","shape":[3,3,2,4],"dtype":"f32","const":true},
+            {"id":2,"name":"y","shape":[1,4,4,4],"dtype":"f16","const":false}
+          ],
+          "ops": [
+            {"id":0,"type":"CONV_2D","name":"c","inputs":[0,1],"outputs":[2],
+             "attrs":{"kernel":3,"stride":1}}
+          ]
+        }"#;
+        let g = from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(g.ops.len(), 1);
+        assert_eq!(g.ops[0].ty, OpType::Conv2d);
+        assert_eq!(g.ops[0].attr_i("kernel"), Some(3));
+        assert_eq!(g.tensor(1).dtype, DType::F32);
+        assert!(g.tensor(1).is_const);
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let src = r#"{"name":"t","tensors":[],"ops":[
+          {"id":0,"type":"NOPE","name":"n","inputs":[],"outputs":[]}]}"#;
+        assert!(from_json(&Json::parse(src).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! TFLite-level graph substrate: IR, JSON loader, and test builders.
+
+pub mod builder;
+pub mod ir;
+pub mod loader;
+
+pub use ir::{DType, Graph, Op, OpId, OpType, Tensor, TensorId};
+pub use loader::{from_json, load};

@@ -1,0 +1,35 @@
+//! # mobile-diffusion
+//!
+//! A reproduction of *Squeezing Large-Scale Diffusion Models for Mobile*
+//! (Choi et al., ICML 2023 Workshop on Challenges in Deployable
+//! Generative AI) as a three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the coordinator: request serving, the paper's
+//!   pipelined memory-constrained execution (Sec. 3.3), a TFLite
+//!   GPU-delegate simulator with the paper's Sec. 3.1 support rules and
+//!   an Adreno-740-class cost model, the graph rewrite passes (FC->Conv,
+//!   conv serialization, broadcast-free group norm, stable GELU), and
+//!   W8A16 weight storage (Sec. 3.4).
+//! * **L2 (python/compile, build-time only)** — a from-scratch latent
+//!   diffusion pipeline (CLIP-like text encoder, UNet, VAE decoder)
+//!   AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's
+//!   rewritten hot-spots, validated against pure-jnp oracles.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod delegate;
+pub mod error;
+pub mod graph;
+pub mod passes;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod scheduler;
+pub mod tokenizer;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,196 @@
+//! mobile-diffusion CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   generate   one text-to-image generation (writes a PNG)
+//!   serve      read prompts from stdin, one generation per line
+//!   analyze    delegate-simulator report over a .graph.json
+//!   passes     run the Sec. 3.1/3.2 pass pipeline on a graph and report
+//!   info       artifact manifest summary
+
+use std::io::BufRead;
+use std::path::Path;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::delegate::{
+    graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740,
+};
+use mobile_diffusion::passes;
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::util::image;
+
+const USAGE: &str = "\
+mobile-diffusion — Mobile Stable Diffusion reproduction (Choi et al. 2023)
+
+USAGE: mobile-diffusion <COMMAND> [FLAGS]
+
+COMMANDS:
+  generate   generate one image        [--prompt S] [--seed N] [--steps N]
+             [--variant base|mobile] [--weights fp32|int8|int8_pruned]
+             [--budget-mb X] [--no-pipeline] [--out FILE.png]
+             [--artifacts DIR] [--guidance X] [--config FILE.json]
+  serve      prompts from stdin, metrics on EOF (same flags)
+  analyze    delegate report           <graph.json>
+  passes     pass-pipeline report      <graph.json>
+  info       manifest summary          [--artifacts DIR]
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("generate") => cmd_generate(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
+        Some("passes") => cmd_passes(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+type R = mobile_diffusion::Result<()>;
+
+fn cmd_generate(args: &[String]) -> R {
+    let mut cfg = AppConfig::default();
+    cfg.apply_args(args)?;
+    let mut server = Server::start(&cfg)?;
+    println!("generating: \"{}\" (seed {}, {} steps, variant {}, weights {})",
+             cfg.prompt, cfg.seed, cfg.num_steps, cfg.variant, cfg.unet_weights);
+    let resp = server.generate(&cfg.prompt, cfg.seed)?;
+    let t = &resp.timings;
+    println!(
+        "done in {:.2}s  (text {:.2}s, denoise {:.2}s / {} steps, decode {:.2}s)",
+        t.total_s, t.text_load_s + t.text_encode_s, t.denoise_s,
+        t.denoise_steps, t.decoder_load_s + t.decode_s
+    );
+    println!("peak memory: {:.1} MB", resp.peak_memory as f64 / 1e6);
+    let out = cfg.out.clone().unwrap_or_else(|| "generated.png".into());
+    let px = image::float_to_rgb8(&resp.image);
+    image::write_png(&out, resp.image_size, resp.image_size, &px)?;
+    println!("image written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> R {
+    let mut cfg = AppConfig::default();
+    cfg.apply_args(args)?;
+    let mut server = Server::start(&cfg)?;
+    eprintln!("ready: one prompt per line on stdin");
+    let stdin = std::io::stdin();
+    let mut seed = cfg.seed;
+    for line in stdin.lock().lines() {
+        let prompt = line.map_err(mobile_diffusion::Error::from)?;
+        if prompt.trim().is_empty() {
+            continue;
+        }
+        seed += 1;
+        match server.generate(&prompt, seed) {
+            Ok(resp) => println!(
+                "#{} ok: {:.2}s total, {:.2}s queued, peak {:.1} MB",
+                resp.id, resp.timings.total_s, resp.queue_s,
+                resp.peak_memory as f64 / 1e6
+            ),
+            Err(e) => println!("error: {e}"),
+        }
+    }
+    println!("{}", server.metrics_report()?);
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> R {
+    let path = args
+        .first()
+        .ok_or_else(|| mobile_diffusion::Error::Config("analyze needs a graph.json".into()))?;
+    let g = mobile_diffusion::graph::load(Path::new(path))?;
+    let rules = RuleSet::default();
+    println!("{g}");
+    let failures = rules.failures(&g);
+    println!("delegation coverage: {:.2}%", rules.coverage(&g) * 100.0);
+    println!("failing ops: {}", failures.len());
+    for (op, v) in failures.iter().take(25) {
+        println!("  {:<40} {:?}", op.name, v);
+    }
+    if failures.len() > 25 {
+        println!("  ... and {} more", failures.len() - 25);
+    }
+    let cost = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+    println!(
+        "modeled latency: {:.1} ms (gpu {:.1}, cpu {:.1}, transfer {:.1}; {} transitions)",
+        cost.total() * 1e3,
+        cost.gpu_time * 1e3,
+        cost.cpu_time * 1e3,
+        cost.transfer_time * 1e3,
+        cost.transitions
+    );
+    Ok(())
+}
+
+fn cmd_passes(args: &[String]) -> R {
+    let path = args
+        .first()
+        .ok_or_else(|| mobile_diffusion::Error::Config("passes needs a graph.json".into()))?;
+    let mut g = mobile_diffusion::graph::load(Path::new(path))?;
+    let rules = RuleSet::default();
+    let before = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+    let report = passes::run_all(&mut g);
+    let after = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
+    println!("pass pipeline on {}:", g.name);
+    for (name, n) in &report.applied {
+        println!("  {:<28} {} site(s)", name, n);
+    }
+    println!(
+        "coverage: {:.2}% -> {:.2}%",
+        report.coverage_before * 100.0,
+        report.coverage_after * 100.0
+    );
+    println!(
+        "modeled latency: {:.1} ms -> {:.1} ms",
+        before.total() * 1e3,
+        after.total() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> R {
+    let mut cfg = AppConfig::default();
+    cfg.apply_args(args)?;
+    let m = Manifest::load(&cfg.artifacts_dir)?;
+    println!(
+        "model: latent {s}x{s}x{c} -> image {i}x{i}, CFG batch {b}",
+        s = m.latent_size,
+        c = m.latent_channels,
+        i = m.image_size,
+        b = m.cfg_batch
+    );
+    println!(
+        "scheduler: {} train steps, {} inference steps, guidance {}",
+        m.scheduler.params.num_train_timesteps,
+        m.scheduler.params.num_inference_steps,
+        m.scheduler.params.guidance_scale
+    );
+    for (name, comp) in &m.components {
+        let weights: Vec<String> = comp
+            .weights
+            .iter()
+            .map(|(tag, w)| format!("{tag} {:.1} MB", w.bytes as f64 / 1e6))
+            .collect();
+        println!(
+            "  {:<14} {:>3} params, {:>2} activations [{}]",
+            name,
+            comp.params.len(),
+            comp.activations.len(),
+            weights.join(", ")
+        );
+    }
+    Ok(())
+}

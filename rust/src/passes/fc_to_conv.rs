@@ -1,0 +1,200 @@
+//! FullyConnected -> Reshape / 1x1 Conv2D / Reshape (paper Fig. 1a).
+//!
+//! The TFLite GPU delegate rejects large FULLY_CONNECTED layers (our
+//! rule: > 2048 flattened rows) but accepts the numerically identical
+//! 1x1 convolution at any size, because the conv takes the tiled matmul
+//! path.  The paper converts *all* FC layers ("converting all
+//! FullyConnected operators into equivalent Conv2D operators is
+//! preferable"), noting equal latency — this pass does the same by
+//! default, with an optional `only_failing` mode used by the ablation
+//! bench.
+
+use std::collections::BTreeMap;
+
+use crate::delegate::RuleSet;
+use crate::graph::{Graph, OpType};
+
+use super::Pass;
+
+pub struct FcToConv {
+    /// rewrite only the FCs the delegate would reject (ablation mode)
+    pub only_failing: bool,
+    pub rules: RuleSet,
+}
+
+impl Default for FcToConv {
+    fn default() -> Self {
+        FcToConv { only_failing: false, rules: RuleSet::default() }
+    }
+}
+
+impl Pass for FcToConv {
+    fn name(&self) -> &'static str {
+        "fc-to-conv"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let targets: Vec<usize> = g
+            .ops
+            .iter()
+            .filter(|op| op.ty == OpType::FullyConnected)
+            .filter(|op| !self.only_failing || !self.rules.check(g, op).ok())
+            .map(|op| op.id)
+            .collect();
+
+        for &op_id in &targets {
+            let pos0 = g.ops.iter().position(|o| o.id == op_id).unwrap();
+            let (x_id, w_id, b_id, out_id, name) = {
+                let op = &g.ops[pos0];
+                let mut acts = op.inputs.iter().filter(|&&t| !g.tensor(t).is_const);
+                let x = *acts.next().expect("fc has input");
+                let mut consts = op.inputs.iter().filter(|&&t| g.tensor(t).is_const);
+                let w = consts.next().copied();
+                let b = consts.next().copied();
+                (x, w, b, op.outputs[0], op.name.clone())
+            };
+            let x_shape = g.tensor(x_id).shape.clone();
+            let out_shape = g.tensor(out_id).shape.clone();
+            let d_in = *x_shape.last().unwrap();
+            let d_out = *out_shape.last().unwrap();
+            let rows: usize = x_shape[..x_shape.len() - 1].iter().product();
+            let act_dtype = g.tensor(x_id).dtype;
+
+            // Reshape x -> (1, 1, rows, d_in)
+            let x4 = g.add_tensor(
+                &format!("{name}/as_nhwc"),
+                &[1, 1, rows, d_in],
+                act_dtype,
+                false,
+            );
+            // weight (d_in, d_out) viewed as 1x1 HWIO kernel
+            let w4 = match w_id {
+                Some(w) => {
+                    let dt = g.tensor(w).dtype;
+                    g.add_tensor(&format!("{name}/w_1x1"), &[1, 1, d_in, d_out], dt, true)
+                }
+                None => g.add_tensor(
+                    &format!("{name}/w_1x1"),
+                    &[1, 1, d_in, d_out],
+                    crate::graph::DType::F32,
+                    true,
+                ),
+            };
+            let y4 = g.add_tensor(
+                &format!("{name}/conv_out"),
+                &[1, 1, rows, d_out],
+                act_dtype,
+                false,
+            );
+
+            // rewrite in place: FC op becomes the Conv2d; add reshapes
+            // around it by splicing new ops into the op list.
+            let mut attrs = BTreeMap::new();
+            attrs.insert("kernel".to_string(), 1.0);
+            attrs.insert("stride".to_string(), 1.0);
+            attrs.insert("from_fc".to_string(), 1.0);
+
+            let reshape_in_name = format!("{name}/reshape_in");
+            let reshape_out_name = format!("{name}/reshape_out");
+            let conv_inputs = match b_id {
+                Some(b) => vec![x4, w4, b],
+                None => vec![x4, w4],
+            };
+
+            let op = &mut g.ops[pos0];
+            op.ty = OpType::Conv2d;
+            op.inputs = conv_inputs;
+            op.outputs = vec![y4];
+            op.attrs = attrs;
+
+            // splice Reshape ops before/after while keeping topo order:
+            // insert reshape_in right before op_id, reshape_out right after.
+            // inserted ops get a sentinel id; ids are renumbered once at
+            // the end so the captured `targets` ids stay valid throughout
+            let reshape_in = crate::graph::Op {
+                id: usize::MAX,
+                ty: OpType::Reshape,
+                name: reshape_in_name,
+                inputs: vec![x_id],
+                outputs: vec![x4],
+                attrs: BTreeMap::new(),
+            };
+            let reshape_out = crate::graph::Op {
+                id: usize::MAX,
+                ty: OpType::Reshape,
+                name: reshape_out_name,
+                inputs: vec![y4],
+                outputs: vec![out_id],
+                attrs: BTreeMap::new(),
+            };
+            let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
+            g.ops.insert(pos, reshape_in);
+            g.ops.insert(pos + 2, reshape_out);
+        }
+        for (i, op) in g.ops.iter_mut().enumerate() {
+            op.id = i;
+        }
+        targets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delegate::RuleSet;
+    use crate::graph::builder::GraphBuilder;
+
+    fn fc_graph(rows: usize, d_in: usize, d_out: usize) -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, rows, d_in]);
+        b.fully_connected("fc", x, d_out);
+        b.finish()
+    }
+
+    #[test]
+    fn rewrites_paper_shape() {
+        let mut g = fc_graph(4096, 320, 1280);
+        let rules = RuleSet::default();
+        assert!(!rules.check(&g, &g.ops[0]).ok(), "precondition: FC fails");
+
+        let n = FcToConv::default().run(&mut g);
+        assert_eq!(n, 1);
+        g.validate().unwrap();
+
+        let hist = g.op_histogram();
+        assert_eq!(hist.get(&OpType::FullyConnected), None);
+        assert_eq!(hist[&OpType::Conv2d], 1);
+        assert_eq!(hist[&OpType::Reshape], 2);
+        // everything now delegates (1x1 conv takes the matmul path)
+        assert!(rules.failures(&g).is_empty());
+    }
+
+    #[test]
+    fn preserves_output_tensor() {
+        let mut g = fc_graph(64, 16, 8);
+        let out_shape = g.tensor(g.ops[0].outputs[0]).shape.clone();
+        let out_id = g.ops[0].outputs[0];
+        FcToConv::default().run(&mut g);
+        g.validate().unwrap();
+        // the original output tensor is still produced, same shape
+        let produced: Vec<_> =
+            g.ops.iter().flat_map(|o| o.outputs.iter().copied()).collect();
+        assert!(produced.contains(&out_id));
+        assert_eq!(g.tensor(out_id).shape, out_shape);
+    }
+
+    #[test]
+    fn only_failing_mode_skips_small_fc() {
+        let mut g = fc_graph(77, 1024, 4096);
+        let n = FcToConv { only_failing: true, rules: RuleSet::default() }.run(&mut g);
+        assert_eq!(n, 0);
+        assert_eq!(g.op_histogram()[&OpType::FullyConnected], 1);
+    }
+
+    #[test]
+    fn default_mode_rewrites_all() {
+        let mut g = fc_graph(77, 1024, 4096);
+        let n = FcToConv::default().run(&mut g);
+        assert_eq!(n, 1);
+    }
+}

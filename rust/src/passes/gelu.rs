@@ -1,0 +1,234 @@
+//! Numerically stable GELU rewrite (paper Sec. 3.2 / Fig. 8).
+//!
+//! Detects the decomposed tanh-GELU idiom (sq -> cube -> scale -> add ->
+//! scale -> tanh -> 1+ -> 0.5x*) by its tanh anchor and inserts the
+//! gamma_M clamp — a Minimum followed by a Maximum — in front of the
+//! cubic chain, re-pointing the cube/add inputs at the clamped value.
+//! The final `0.5 * x` product keeps reading the *unclamped* x, exactly
+//! as in the paper's formula: GELU(x) ~= 0.5 x (1 + tanh(...gamma(x)...)).
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, OpType, TensorId};
+
+use super::Pass;
+
+pub struct StableGelu {
+    /// the clip constant M (paper: 10)
+    pub clip: f64,
+}
+
+impl Default for StableGelu {
+    fn default() -> Self {
+        StableGelu { clip: 10.0 }
+    }
+}
+
+/// One detected GELU site: the ops that read the raw x inside the cubic
+/// chain (sq, cube, add), which must be re-pointed at the clamp output.
+struct Site {
+    x: TensorId,
+    /// (op_id, input_slot) pairs currently reading `x` in the chain
+    reads: Vec<(usize, usize)>,
+    anchor_pos: usize, // position in op list of the first chain op
+    name: String,
+}
+
+fn find_sites(g: &Graph) -> Vec<Site> {
+    let mut sites = Vec::new();
+    let producers = g.producers();
+    for op in &g.ops {
+        if op.ty != OpType::Tanh {
+            continue;
+        }
+        // walk backwards: tanh <- scale(Mul) <- add(Add{x, scale_cube})
+        let scale = match producers[op.inputs[0]] {
+            Some(p) if g.ops[p].ty == OpType::Mul => p,
+            _ => continue,
+        };
+        let add = match producers[g.ops[scale].inputs[0]] {
+            Some(p) if g.ops[p].ty == OpType::Add => p,
+            _ => continue,
+        };
+        if g.ops[add].inputs.len() != 2 {
+            continue;
+        }
+        // add's inputs: x and scale_cube(Mul <- cube(Mul{sq, x}) <- sq(Mul{x,x}))
+        let (x, sc) = {
+            let a = g.ops[add].inputs[0];
+            let b = g.ops[add].inputs[1];
+            // scale_cube is produced by a Mul whose chain bottoms out at x
+            match (producers[a], producers[b]) {
+                (_, Some(p)) if g.ops[p].ty == OpType::Mul && is_cubic(g, p, a, &producers) => (a, p),
+                (Some(p), _) if g.ops[p].ty == OpType::Mul && is_cubic(g, p, b, &producers) => (b, p),
+                _ => continue,
+            }
+        };
+        // already stable? x produced by a Maximum (the clamp) -> skip
+        if let Some(p) = producers[x] {
+            if g.ops[p].ty == OpType::Maximum {
+                continue;
+            }
+        }
+        // gather the read sites of x in the chain: sq (both slots), cube,
+        // add
+        let cube = producers[g.ops[sc].inputs[0]].unwrap();
+        let sq = producers[g.ops[cube].inputs[0]].unwrap();
+        let mut reads = Vec::new();
+        for (oid, op2) in [(sq, &g.ops[sq]), (cube, &g.ops[cube]), (add, &g.ops[add])] {
+            for (slot, &inp) in op2.inputs.iter().enumerate() {
+                if inp == x {
+                    reads.push((oid, slot));
+                }
+            }
+        }
+        if reads.is_empty() {
+            continue;
+        }
+        let anchor_pos = g.ops.iter().position(|o| o.id == sq).unwrap();
+        let name = op.name.trim_end_matches("/tanh").to_string();
+        sites.push(Site { x, reads, anchor_pos, name });
+    }
+    sites
+}
+
+/// Is `mul_op` the scale-cube of a cubic chain rooted at `x`?
+/// pattern: sc = Mul(cube); cube = Mul(sq, x); sq = Mul(x, x)
+fn is_cubic(g: &Graph, sc: usize, x: TensorId, producers: &[Option<usize>]) -> bool {
+    let sc_op = &g.ops[sc];
+    if sc_op.inputs.len() != 1 {
+        return false;
+    }
+    let cube = match producers[sc_op.inputs[0]] {
+        Some(p) if g.ops[p].ty == OpType::Mul => p,
+        _ => return false,
+    };
+    let cube_op = &g.ops[cube];
+    if cube_op.inputs.len() != 2 || !cube_op.inputs.contains(&x) {
+        return false;
+    }
+    let sq_t = cube_op.inputs.iter().find(|&&t| t != x).copied();
+    let sq_t = match sq_t {
+        Some(t) => t,
+        None => cube_op.inputs[0], // x * x * x with shared ids
+    };
+    match producers[sq_t] {
+        Some(p) => {
+            let sq_op = &g.ops[p];
+            sq_op.ty == OpType::Mul && sq_op.inputs.iter().all(|&t| t == x)
+        }
+        None => false,
+    }
+}
+
+impl Pass for StableGelu {
+    fn name(&self) -> &'static str {
+        "stable-gelu"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        // collect first: sites reference op ids, and we renumber at the end
+        let sites = find_sites(g);
+        // process in reverse op order so positions stay valid while splicing
+        let mut ordered: Vec<&Site> = sites.iter().collect();
+        ordered.sort_by_key(|s| std::cmp::Reverse(s.anchor_pos));
+
+        for site in &ordered {
+            let dt = g.tensor(site.x).dtype;
+            let shape = g.tensor(site.x).shape.clone();
+            let min_t =
+                g.add_tensor(&format!("{}/clip_min", site.name), &shape, dt, false);
+            let max_t =
+                g.add_tensor(&format!("{}/clip_max", site.name), &shape, dt, false);
+            let mut min_attrs = BTreeMap::new();
+            min_attrs.insert("value".to_string(), self.clip);
+            let mut max_attrs = BTreeMap::new();
+            max_attrs.insert("value".to_string(), -self.clip);
+
+            let min_op = crate::graph::Op {
+                id: usize::MAX,
+                ty: OpType::Minimum,
+                name: format!("{}/gamma_min", site.name),
+                inputs: vec![site.x],
+                outputs: vec![min_t],
+                attrs: min_attrs,
+            };
+            let max_op = crate::graph::Op {
+                id: usize::MAX,
+                ty: OpType::Maximum,
+                name: format!("{}/gamma_max", site.name),
+                inputs: vec![min_t],
+                outputs: vec![max_t],
+                attrs: max_attrs,
+            };
+            // re-point the chain's x reads at the clamp output
+            for &(op_id, slot) in &site.reads {
+                let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
+                g.ops[pos].inputs[slot] = max_t;
+            }
+            g.ops.splice(site.anchor_pos..site.anchor_pos, [min_op, max_op]);
+        }
+        for (i, op) in g.ops.iter_mut().enumerate() {
+            op.id = i;
+        }
+        sites.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn gelu_graph(stable: bool) -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 256, 512]);
+        let h = b.fully_connected("ff1", x, 512);
+        let a = b.gelu("gelu", h, stable);
+        b.fully_connected("ff2", a, 128);
+        b.finish()
+    }
+
+    #[test]
+    fn inserts_clamp() {
+        let mut g = gelu_graph(false);
+        let n = StableGelu::default().run(&mut g);
+        assert_eq!(n, 1);
+        g.validate().unwrap();
+        let hist = g.op_histogram();
+        assert_eq!(hist[&OpType::Minimum], 1);
+        assert_eq!(hist[&OpType::Maximum], 1);
+    }
+
+    #[test]
+    fn final_product_reads_unclamped_x() {
+        // the 0.5*x multiplier outside tanh must keep reading raw x
+        let mut g = gelu_graph(false);
+        let half_x_op = g.ops.iter().find(|o| o.name.ends_with("/half_x")).unwrap();
+        let raw_in = half_x_op.inputs[0];
+        StableGelu::default().run(&mut g);
+        let half_x_op = g.ops.iter().find(|o| o.name.ends_with("/half_x")).unwrap();
+        assert_eq!(half_x_op.inputs[0], raw_in);
+    }
+
+    #[test]
+    fn idempotent_on_already_stable() {
+        let mut g = gelu_graph(true);
+        assert_eq!(StableGelu::default().run(&mut g), 0);
+    }
+
+    #[test]
+    fn rewrites_every_site() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 64, 128]);
+        let mut cur = x;
+        for i in 0..3 {
+            let h = b.fully_connected(&format!("ff{i}"), cur, 128);
+            cur = b.gelu(&format!("g{i}"), h, false);
+        }
+        let mut g = b.finish();
+        assert_eq!(StableGelu::default().run(&mut g), 3);
+        g.validate().unwrap();
+        assert_eq!(g.op_histogram()[&OpType::Minimum], 3);
+    }
+}

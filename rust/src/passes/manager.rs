@@ -1,0 +1,190 @@
+//! Pass manager: runs the paper's rewrites in order and verifies the
+//! delegation invariants afterwards.
+
+use crate::delegate::{DeviceProfile, RuleSet, GPU_ADRENO740};
+use crate::graph::Graph;
+
+use super::fc_to_conv::FcToConv;
+use super::gelu::StableGelu;
+use super::groupnorm::GroupNormRewrite;
+use super::serialize_conv::SerializeConv;
+use super::Pass;
+
+#[derive(Debug, Clone, Default)]
+pub struct PassReport {
+    /// (pass name, sites rewritten)
+    pub applied: Vec<(&'static str, usize)>,
+    pub coverage_before: f64,
+    pub coverage_after: f64,
+    pub ops_before: usize,
+    pub ops_after: usize,
+}
+
+impl PassReport {
+    pub fn total_rewrites(&self) -> usize {
+        self.applied.iter().map(|(_, n)| n).sum()
+    }
+}
+
+/// Which of the paper's techniques to apply (ablation switch).
+#[derive(Debug, Clone, Copy)]
+pub struct PassConfig {
+    pub fc_to_conv: bool,
+    pub groupnorm: bool,
+    pub serialize_conv: bool,
+    pub stable_gelu: bool,
+}
+
+impl Default for PassConfig {
+    fn default() -> Self {
+        PassConfig {
+            fc_to_conv: true,
+            groupnorm: true,
+            serialize_conv: true,
+            stable_gelu: true,
+        }
+    }
+}
+
+impl PassConfig {
+    pub const NONE: PassConfig = PassConfig {
+        fc_to_conv: false,
+        groupnorm: false,
+        serialize_conv: false,
+        stable_gelu: false,
+    };
+}
+
+/// Run the configured passes.  Order matters and mirrors the paper:
+/// group-norm rewrite first (removes the rank-5/BroadcastTo islands),
+/// then FC->Conv, then conv serialization (which must see the final conv
+/// set, including the ones FC conversion created), then the GELU clamp
+/// (pure numerics, no delegation effect).
+pub fn run_with_config(
+    g: &mut Graph,
+    rules: &RuleSet,
+    dev: &DeviceProfile,
+    cfg: PassConfig,
+) -> PassReport {
+    let mut report = PassReport {
+        coverage_before: rules.coverage(g),
+        ops_before: g.ops.len(),
+        ..Default::default()
+    };
+
+    if cfg.groupnorm {
+        let p = GroupNormRewrite;
+        let n = p.run(g);
+        report.applied.push((p.name(), n));
+    }
+    if cfg.fc_to_conv {
+        let p = FcToConv { only_failing: false, rules: rules.clone() };
+        let n = p.run(g);
+        report.applied.push((p.name(), n));
+    }
+    if cfg.serialize_conv {
+        let p = SerializeConv {
+            rules: rules.clone(),
+            dev: dev.clone(),
+            force_dim: None,
+        };
+        let n = p.run(g);
+        report.applied.push((p.name(), n));
+    }
+    if cfg.stable_gelu {
+        let p = StableGelu::default();
+        let n = p.run(g);
+        report.applied.push((p.name(), n));
+    }
+
+    debug_assert!(g.validate().is_ok());
+    report.coverage_after = rules.coverage(g);
+    report.ops_after = g.ops.len();
+    report
+}
+
+/// All passes with the default device/rules.
+pub fn run_all(g: &mut Graph) -> PassReport {
+    run_with_config(g, &RuleSet::default(), &GPU_ADRENO740, PassConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::OpType;
+
+    /// A miniature SD-flavored graph with every pathology at once.
+    fn pathological() -> Graph {
+        let mut b = GraphBuilder::new("patho");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        let y = b.group_norm_naive("gn", x, 32);
+        let y = b.conv2d("big", y, 640, 3, 1);
+        let flat = b.reshape("flatten", y, &[1, 4096 / 4, 640 * 4]);
+        let flat = b.reshape("flatten2", flat, &[1, 4096, 640]);
+        let h = b.fully_connected("ff1", flat, 2560);
+        let h = b.gelu("gelu", h, false);
+        b.fully_connected("ff2", h, 640);
+        b.finish()
+    }
+
+    #[test]
+    fn full_pipeline_reaches_complete_delegation() {
+        let mut g = pathological();
+        let rules = RuleSet::default();
+        assert!(rules.coverage(&g) < 1.0);
+
+        let report = run_all(&mut g);
+        g.validate().unwrap();
+        assert_eq!(report.coverage_after, 1.0, "complete delegation");
+        assert!(report.coverage_before < report.coverage_after);
+        assert!(report.total_rewrites() >= 4);
+        assert_eq!(g.op_histogram().get(&OpType::BroadcastTo), None);
+        assert!(g.max_rank() <= 4);
+    }
+
+    #[test]
+    fn ablation_without_serialization_leaves_conv_failing() {
+        let mut g = pathological();
+        let rules = RuleSet::default();
+        let cfg = PassConfig { serialize_conv: false, ..Default::default() };
+        run_with_config(&mut g, &rules, &GPU_ADRENO740, cfg);
+        let fails = rules.failures(&g);
+        assert!(fails.iter().any(|(op, _)| op.ty == OpType::Conv2d));
+    }
+
+    #[test]
+    fn ablation_none_is_identity_coverage() {
+        let mut g = pathological();
+        let rules = RuleSet::default();
+        let before = rules.coverage(&g);
+        let r = run_with_config(&mut g, &rules, &GPU_ADRENO740, PassConfig::NONE);
+        assert_eq!(r.coverage_before, before);
+        assert_eq!(r.coverage_after, before);
+        assert_eq!(r.total_rewrites(), 0);
+    }
+
+    #[test]
+    fn property_passes_preserve_validity_on_random_graphs() {
+        use crate::graph::builder::random_graph;
+        use crate::util::rng::Rng;
+        for seed in 0..30 {
+            let mut rng = Rng::new(seed + 1000);
+            let mut g = random_graph(&mut rng, 20);
+            let before_outputs: Vec<Vec<usize>> = g
+                .ops
+                .iter()
+                .map(|o| o.outputs.iter().map(|&t| g.tensor(t).elems()).collect())
+                .collect();
+            let _ = before_outputs;
+            run_all(&mut g);
+            g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(
+                g.op_histogram().get(&OpType::BroadcastTo),
+                None,
+                "seed {seed}"
+            );
+            assert!(g.max_rank() <= 4, "seed {seed}");
+        }
+    }
+}

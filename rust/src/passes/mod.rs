@@ -1,0 +1,34 @@
+//! Graph transformation passes — the paper's Sec. 3.1 rewrites.
+//!
+//! Each pass rewrites the TFLite-level graph to remove a class of
+//! delegation failures:
+//!
+//!  * [`fc_to_conv`]      — FullyConnected -> Reshape/1x1-Conv2D/Reshape
+//!                          (paper Fig. 1a);
+//!  * [`serialize_conv`]  — over-sized 3x3 convs split into the minimal
+//!                          number of input-channel slices (Fig. 1b);
+//!  * [`groupnorm`]       — broadcast-free group normalization, all
+//!                          tensors rank <= 4 (Fig. 7);
+//!  * [`gelu`]            — numerically stable GELU with the gamma_M
+//!                          clamp (Sec. 3.2, Fig. 8).
+//!
+//! [`manager`] runs them in order and verifies the invariants the paper
+//! relies on: shapes preserved at graph outputs, no BroadcastTo, no
+//! rank-5 tensors, and full delegate coverage afterwards.
+
+pub mod fc_to_conv;
+pub mod gelu;
+pub mod groupnorm;
+pub mod manager;
+pub mod serialize_conv;
+
+pub use manager::{run_all, PassReport};
+
+use crate::graph::Graph;
+
+/// A graph-to-graph rewrite.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Apply in place; returns the number of sites rewritten.
+    fn run(&self, g: &mut Graph) -> usize;
+}

@@ -1,0 +1,392 @@
+//! Conv2D serialization (paper Fig. 1b + the minimal-factor search).
+//!
+//! For every k>1 conv the delegate rejects, search the minimal
+//! serialization factor — trying factors in increasing order along the
+//! input-channel dimension and the output-channel dimension, exactly as
+//! the paper describes — then pick the dimension with the lower modeled
+//! latency (the paper measured 15.5 ms input vs 40.9 ms output and chose
+//! input).  The chosen conv is rewritten into `factor` StridedSlice +
+//! Conv2D calls combined with Adds (input) or a Concatenation (output).
+
+use std::collections::BTreeMap;
+
+use crate::delegate::{cost, DeviceProfile, RuleSet, GPU_ADRENO740};
+use crate::graph::{DType, Graph, Op, OpType, TensorId};
+
+use super::Pass;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dim {
+    Input,
+    Output,
+}
+
+#[derive(Debug, Clone)]
+pub struct SerializationPlan {
+    pub dim: Dim,
+    pub factor: usize,
+    pub latency: f64,
+}
+
+/// Find the minimal factor along `dim` for which every per-call slice of
+/// the conv is delegable; factors are divisors of the channel count
+/// tried in increasing order (paper: "trying possible serialization
+/// factors in increasing order along each dimension").
+pub fn minimal_factor(
+    rules: &RuleSet,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    dim: Dim,
+) -> Option<usize> {
+    let channels = match dim {
+        Dim::Input => cin,
+        Dim::Output => cout,
+    };
+    for factor in 2..=channels {
+        if channels % factor != 0 {
+            continue;
+        }
+        let (ci, co) = match dim {
+            Dim::Input => (cin / factor, cout),
+            Dim::Output => (cin, cout / factor),
+        };
+        if conv_slice_delegable(rules, h, w, ci, co, k) {
+            return Some(factor);
+        }
+    }
+    None
+}
+
+fn conv_slice_delegable(
+    rules: &RuleSet,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+) -> bool {
+    let mut g = Graph::new("probe");
+    let x = g.add_tensor("x", &[1, h, w, cin], DType::F16, false);
+    let wt = g.add_tensor("w", &[k, k, cin, cout], DType::F16, true);
+    let y = g.add_tensor("y", &[1, h, w, cout], DType::F16, false);
+    let mut attrs = BTreeMap::new();
+    attrs.insert("kernel".into(), k as f64);
+    let id = g.add_op_with_attrs(OpType::Conv2d, "c", vec![x, wt], vec![y], attrs);
+    rules.check(&g, &g.ops[id]).ok()
+}
+
+/// The paper's decision procedure: minimal factor along each dimension,
+/// modeled latency for each, pick the cheaper.
+pub fn plan(
+    rules: &RuleSet,
+    dev: &DeviceProfile,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+) -> Option<SerializationPlan> {
+    let mut best: Option<SerializationPlan> = None;
+    for dim in [Dim::Input, Dim::Output] {
+        if let Some(factor) = minimal_factor(rules, h, w, cin, cout, k, dim) {
+            let latency = cost::serialized_conv_latency(
+                h,
+                w,
+                cin,
+                cout,
+                k,
+                factor,
+                dim == Dim::Input,
+                dev,
+            );
+            if best.as_ref().map(|b| latency < b.latency).unwrap_or(true) {
+                best = Some(SerializationPlan { dim, factor, latency });
+            }
+        }
+    }
+    best
+}
+
+pub struct SerializeConv {
+    pub rules: RuleSet,
+    pub dev: DeviceProfile,
+    /// force a dimension instead of picking by latency (ablation)
+    pub force_dim: Option<Dim>,
+}
+
+impl Default for SerializeConv {
+    fn default() -> Self {
+        SerializeConv { rules: RuleSet::default(), dev: GPU_ADRENO740, force_dim: None }
+    }
+}
+
+impl Pass for SerializeConv {
+    fn name(&self) -> &'static str {
+        "serialize-conv"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let targets: Vec<usize> = g
+            .ops
+            .iter()
+            .filter(|op| {
+                op.ty == OpType::Conv2d
+                    && op.attr_i("kernel").unwrap_or(1) > 1
+                    && !self.rules.check(g, op).ok()
+            })
+            .map(|op| op.id)
+            .collect();
+
+        let mut rewritten = 0;
+        for &op_id in &targets {
+            let (x_id, out_id, name, k) = {
+                let op = g.ops.iter().find(|o| o.id == op_id).unwrap();
+                let x = *op
+                    .inputs
+                    .iter()
+                    .find(|&&t| !g.tensor(t).is_const)
+                    .expect("conv input");
+                (x, op.outputs[0], op.name.clone(), op.attr_i("kernel").unwrap() as usize)
+            };
+            let xs = g.tensor(x_id).shape.clone();
+            let os = g.tensor(out_id).shape.clone();
+            let (h, w, cin) = (xs[1], xs[2], xs[3]);
+            let cout = os[3];
+
+            let mut p = match plan(&self.rules, &self.dev, h, w, cin, cout, k) {
+                Some(p) => p,
+                None => continue,
+            };
+            if let Some(d) = self.force_dim {
+                if let Some(f) = minimal_factor(&self.rules, h, w, cin, cout, k, d) {
+                    p = SerializationPlan { dim: d, factor: f, latency: p.latency };
+                } else {
+                    continue;
+                }
+            }
+
+            match p.dim {
+                Dim::Input => rewrite_input(g, op_id, x_id, out_id, &name, k, p.factor),
+                Dim::Output => rewrite_output(g, op_id, x_id, out_id, &name, k, p.factor),
+            }
+            rewritten += 1;
+        }
+        if rewritten > 0 {
+            for (i, op) in g.ops.iter_mut().enumerate() {
+                op.id = i;
+            }
+        }
+        rewritten
+    }
+}
+
+fn conv_attrs(k: usize, factor: usize, dim: &str) -> BTreeMap<String, f64> {
+    let mut attrs = BTreeMap::new();
+    attrs.insert("kernel".into(), k as f64);
+    attrs.insert("stride".into(), 1.0);
+    attrs.insert("serialized".into(), factor as f64);
+    attrs.insert(format!("serial_{dim}"), 1.0);
+    attrs
+}
+
+/// Replace the op at `op_id` with: factor x (StridedSlice + Conv2D) and a
+/// tree of Adds producing `out_id` (input-channel serialization).
+fn rewrite_input(
+    g: &mut Graph,
+    op_id: usize,
+    x_id: TensorId,
+    out_id: TensorId,
+    name: &str,
+    k: usize,
+    factor: usize,
+) {
+    let xs = g.tensor(x_id).shape.clone();
+    let os = g.tensor(out_id).shape.clone();
+    let dt = g.tensor(x_id).dtype;
+    let (n, h, w, cin) = (xs[0], xs[1], xs[2], xs[3]);
+    let cg = cin / factor;
+
+    let mut new_ops: Vec<Op> = Vec::new();
+    let mut partials: Vec<TensorId> = Vec::new();
+    for i in 0..factor {
+        let slice = g.add_tensor(&format!("{name}/in_slice{i}"), &[n, h, w, cg], dt, false);
+        new_ops.push(Op {
+            id: usize::MAX,
+            ty: OpType::StridedSlice,
+            name: format!("{name}/slice{i}"),
+            inputs: vec![x_id],
+            outputs: vec![slice],
+            attrs: {
+                let mut a = BTreeMap::new();
+                a.insert("begin".into(), (i * cg) as f64);
+                a.insert("size".into(), cg as f64);
+                a.insert("axis".into(), 3.0);
+                a
+            },
+        });
+        let wt = g.add_tensor(
+            &format!("{name}/w_slice{i}"),
+            &[k, k, cg, os[3]],
+            DType::F32,
+            true,
+        );
+        let part = g.add_tensor(&format!("{name}/part{i}"), &os, dt, false);
+        new_ops.push(Op {
+            id: usize::MAX,
+            ty: OpType::Conv2d,
+            name: format!("{name}/conv{i}"),
+            inputs: vec![slice, wt],
+            outputs: vec![part],
+            attrs: conv_attrs(k, factor, "input"),
+        });
+        partials.push(part);
+    }
+    // accumulate partial sums; the last add writes the original output
+    let mut acc = partials[0];
+    for (i, &p) in partials.iter().enumerate().skip(1) {
+        let dst = if i == factor - 1 {
+            out_id
+        } else {
+            g.add_tensor(&format!("{name}/acc{i}"), &os, dt, false)
+        };
+        new_ops.push(Op {
+            id: usize::MAX,
+            ty: OpType::Add,
+            name: format!("{name}/acc_add{i}"),
+            inputs: vec![acc, p],
+            outputs: vec![dst],
+            attrs: BTreeMap::new(),
+        });
+        acc = dst;
+    }
+
+    let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
+    g.ops.splice(pos..pos + 1, new_ops);
+}
+
+/// Output-channel serialization: factor Conv2Ds each producing a channel
+/// slice, then one Concatenation into `out_id`.
+fn rewrite_output(
+    g: &mut Graph,
+    op_id: usize,
+    x_id: TensorId,
+    out_id: TensorId,
+    name: &str,
+    k: usize,
+    factor: usize,
+) {
+    let xs = g.tensor(x_id).shape.clone();
+    let os = g.tensor(out_id).shape.clone();
+    let dt = g.tensor(x_id).dtype;
+    let cg = os[3] / factor;
+
+    let mut new_ops: Vec<Op> = Vec::new();
+    let mut parts: Vec<TensorId> = Vec::new();
+    for i in 0..factor {
+        let wt = g.add_tensor(
+            &format!("{name}/w_oslice{i}"),
+            &[k, k, xs[3], cg],
+            DType::F32,
+            true,
+        );
+        let part =
+            g.add_tensor(&format!("{name}/opart{i}"), &[os[0], os[1], os[2], cg], dt, false);
+        new_ops.push(Op {
+            id: usize::MAX,
+            ty: OpType::Conv2d,
+            name: format!("{name}/oconv{i}"),
+            inputs: vec![x_id, wt],
+            outputs: vec![part],
+            attrs: conv_attrs(k, factor, "output"),
+        });
+        parts.push(part);
+    }
+    new_ops.push(Op {
+        id: usize::MAX,
+        ty: OpType::Concatenation,
+        name: format!("{name}/concat"),
+        inputs: parts,
+        outputs: vec![out_id],
+        attrs: BTreeMap::new(),
+    });
+
+    let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
+    g.ops.splice(pos..pos + 1, new_ops);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn minimal_factors_match_paper() {
+        let rules = RuleSet::default();
+        assert_eq!(
+            minimal_factor(&rules, 32, 32, 1920, 640, 3, Dim::Input),
+            Some(2)
+        );
+        assert_eq!(
+            minimal_factor(&rules, 32, 32, 1920, 640, 3, Dim::Output),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn plan_prefers_input_dimension() {
+        let p = plan(&RuleSet::default(), &GPU_ADRENO740, 32, 32, 1920, 640, 3).unwrap();
+        assert_eq!(p.dim, Dim::Input);
+        assert_eq!(p.factor, 2);
+    }
+
+    #[test]
+    fn pass_rewrites_failing_conv() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        b.conv2d("big", x, 640, 3, 1);
+        let mut g = b.finish();
+        let rules = RuleSet::default();
+        assert_eq!(rules.failures(&g).len(), 1);
+
+        let n = SerializeConv::default().run(&mut g);
+        assert_eq!(n, 1);
+        g.validate().unwrap();
+        assert!(rules.failures(&g).is_empty(), "{:?}", rules.failures(&g));
+
+        let hist = g.op_histogram();
+        assert_eq!(hist[&OpType::Conv2d], 2); // factor 2
+        assert_eq!(hist[&OpType::StridedSlice], 2);
+        assert_eq!(hist[&OpType::Add], 1);
+    }
+
+    #[test]
+    fn forced_output_dim() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 32, 32, 1920]);
+        b.conv2d("big", x, 640, 3, 1);
+        let mut g = b.finish();
+        let pass = SerializeConv {
+            force_dim: Some(Dim::Output),
+            ..Default::default()
+        };
+        assert_eq!(pass.run(&mut g), 1);
+        g.validate().unwrap();
+        let hist = g.op_histogram();
+        assert_eq!(hist[&OpType::Conv2d], 8); // factor 8
+        assert_eq!(hist[&OpType::Concatenation], 1);
+        assert!(RuleSet::default().failures(&g).is_empty());
+    }
+
+    #[test]
+    fn leaves_delegable_convs_alone() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 16, 16, 64]);
+        b.conv2d("ok", x, 64, 3, 1);
+        let mut g = b.finish();
+        assert_eq!(SerializeConv::default().run(&mut g), 0);
+        assert_eq!(g.op_histogram()[&OpType::Conv2d], 1);
+    }
+}

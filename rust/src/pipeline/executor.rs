@@ -1,0 +1,299 @@
+//! The pipelined executor — paper Sec. 3.3.
+//!
+//! Text-to-image under a device memory budget:
+//!
+//! 1. load the denoising UNet (resident for the whole request);
+//! 2. load the text encoder, encode cond + uncond prompts, **evict it**;
+//! 3. start the decoder prefetch on a child thread and run the DDIM
+//!    denoise loop, polling the prefetch between steps;
+//! 4. finalize the decoder (device compile + upload), decode, evict.
+//!
+//! Peak memory ~= unet + max(text_encoder, decoder) instead of the sum
+//! of all three (the non-pipelined baseline, also implemented here for
+//! the Fig. 4 / ablation comparison).
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::pipeline::loader::Prefetcher;
+use crate::pipeline::memory::MemoryLedger;
+use crate::runtime::{ActInput, Component, Engine, Manifest};
+use crate::scheduler::{guide, Ddim};
+use crate::tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// device memory budget in bytes (ledger-enforced)
+    pub memory_budget: usize,
+    /// pipelined (paper) vs load-everything-up-front baseline
+    pub pipelined: bool,
+    /// weight precision tag for the UNet ("fp32" | "int8" | "int8_pruned")
+    pub unet_weights: String,
+    pub num_steps: usize,
+    pub guidance_scale: f64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            memory_budget: usize::MAX,
+            pipelined: true,
+            unet_weights: "fp32".into(),
+            num_steps: 20,
+            guidance_scale: 7.5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub text_load_s: f64,
+    pub text_encode_s: f64,
+    pub unet_load_s: f64,
+    pub denoise_s: f64,
+    pub denoise_steps: usize,
+    pub decoder_load_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+}
+
+pub struct GenerateResult {
+    /// HWC RGB f32 image in roughly [-1, 1]
+    pub image: Vec<f32>,
+    pub image_size: usize,
+    /// final latent (for numeric comparisons across variants)
+    pub latent: Vec<f32>,
+    pub timings: StageTimings,
+    pub peak_memory: usize,
+}
+
+pub struct PipelinedExecutor {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub ledger: MemoryLedger,
+    pub options: ExecOptions,
+    /// resident UNet (kept across requests, like the paper's app)
+    unet: Option<Component>,
+    unet_key: String,
+}
+
+impl PipelinedExecutor {
+    pub fn new(manifest: Manifest, options: ExecOptions) -> Result<PipelinedExecutor> {
+        let engine = Engine::new()?;
+        let ledger = MemoryLedger::new(options.memory_budget);
+        Ok(PipelinedExecutor {
+            engine,
+            manifest,
+            ledger,
+            options,
+            unet: None,
+            unet_key: String::new(),
+        })
+    }
+
+    /// Resident-bytes of a component at a weights tag, from the manifest
+    /// (ledger numbers must be known *before* loading).
+    fn stored_bytes(&self, comp: &str, tag: &str) -> Result<usize> {
+        let c = self.manifest.component(comp)?;
+        c.weights
+            .get(tag)
+            .map(|w| w.bytes)
+            .ok_or_else(|| Error::Manifest(format!("{comp}: no weights {tag}")))
+    }
+
+    fn load_component(&self, name: &str, tag: &str) -> Result<Component> {
+        let comp = self.manifest.component(name)?;
+        Component::load(&self.engine, &self.manifest, comp, tag)
+    }
+
+    /// Ensure the UNet is loaded (variant per options), charging the ledger.
+    pub fn ensure_unet(&mut self, variant: &str) -> Result<()> {
+        let key = format!("unet_{variant}:{}", self.options.unet_weights);
+        if self.unet.is_some() && self.unet_key == key {
+            return Ok(());
+        }
+        if self.unet.take().is_some() {
+            self.ledger.free("unet")?;
+        }
+        let name = format!("unet_{variant}");
+        let bytes = self.stored_bytes(&name, &self.options.unet_weights)?;
+        self.ledger.alloc("unet", bytes)?;
+        match self.load_component(&name, &self.options.unet_weights) {
+            Ok(c) => {
+                self.unet = Some(c);
+                self.unet_key = key;
+                Ok(())
+            }
+            Err(e) => {
+                let _ = self.ledger.free("unet");
+                Err(e)
+            }
+        }
+    }
+
+    /// Full text-to-image generation.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        seed: u64,
+        variant: &str,
+    ) -> Result<GenerateResult> {
+        let t_start = Instant::now();
+        let mut tm = StageTimings::default();
+
+        // ---- UNet resident -------------------------------------------------
+        let t0 = Instant::now();
+        self.ensure_unet(variant)?;
+        tm.unet_load_s = t0.elapsed().as_secs_f64();
+
+        // ---- non-pipelined baseline: everything resident up front ----------
+        let decoder_bytes = self.stored_bytes("decoder", "fp32")?;
+        let decoder_manifest = self.manifest.component("decoder")?.clone();
+        let mut decoder: Option<Component> = None;
+        if !self.options.pipelined {
+            let t0 = Instant::now();
+            self.ledger.alloc("decoder", decoder_bytes)?;
+            decoder = Some(match self.load_component("decoder", "fp32") {
+                Ok(c) => c,
+                Err(e) => {
+                    let _ = self.ledger.free("decoder");
+                    return Err(e);
+                }
+            });
+            tm.decoder_load_s = t0.elapsed().as_secs_f64();
+        }
+
+        // ---- text encode (load -> encode -> evict) -------------------------
+        let t0 = Instant::now();
+        let te_bytes = self.stored_bytes("text_encoder", "fp32")?;
+        self.ledger.alloc("text_encoder", te_bytes)?;
+        let text = match self.load_component("text_encoder", "fp32") {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = self.ledger.free("text_encoder");
+                return Err(e);
+            }
+        };
+        tm.text_load_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let seq = self.manifest.tokenizer.seq_len;
+        let vocab = self.manifest.tokenizer.vocab_size;
+        let cond_ids = tokenizer::encode(prompt, vocab, seq);
+        let uncond_ids = tokenizer::encode("", vocab, seq);
+        let cond_ctx = text.run(&self.engine, &[ActInput::i32(cond_ids)])?;
+        let uncond_ctx = text.run(&self.engine, &[ActInput::i32(uncond_ids)])?;
+        tm.text_encode_s = t0.elapsed().as_secs_f64();
+
+        drop(text);
+        self.ledger.free("text_encoder")?;
+        self.ledger.mark("text-encoder-evicted");
+
+        // context2: uncond then cond halves, (2, S, D)
+        let mut context2 = uncond_ctx[0].clone();
+        context2.extend_from_slice(&cond_ctx[0]);
+
+        // ---- denoise loop with decoder prefetch overlap --------------------
+        let mut prefetch = if self.options.pipelined {
+            Some(Prefetcher::spawn(&self.manifest, &decoder_manifest, "fp32")?)
+        } else {
+            None // baseline: decoder already resident
+        };
+        let mut prefetch_charged = false;
+
+        let t0 = Instant::now();
+        let ddim = Ddim::from_alphas(
+            {
+                let mut p = self.manifest.scheduler.params.clone();
+                p.guidance_scale = self.options.guidance_scale;
+                p
+            },
+            self.manifest.scheduler.alphas_cumprod.clone(),
+        );
+        let ts = ddim.timesteps(self.options.num_steps);
+
+        let s = self.manifest.latent_size;
+        let c = self.manifest.latent_channels;
+        let n_latent = s * s * c;
+        let mut rng = Rng::new(seed);
+        let mut latent: Vec<f32> = rng.normal_f32_vec(n_latent);
+
+        let unet = self.unet.as_ref().expect("unet loaded");
+        let mut eps = vec![0f32; n_latent];
+        let mut latent2 = vec![0f32; 2 * n_latent];
+        // the context is constant across the whole denoise loop: upload
+        // it once and keep the device buffer resident (perf: saves one
+        // host->device copy per step; see EXPERIMENTS.md §Perf)
+        let ctx_buf = unet.upload(&self.engine, 2, &ActInput::F32(context2.clone()))?;
+        for (i, &t) in ts.iter().enumerate() {
+            latent2[..n_latent].copy_from_slice(&latent);
+            latent2[n_latent..].copy_from_slice(&latent);
+            let lat_buf = unet.upload(&self.engine, 0, &ActInput::F32(latent2.clone()))?;
+            let t_buf = unet.upload(&self.engine, 1, &ActInput::F32(vec![t as f32]))?;
+            let out = unet.run_buffers(&[&lat_buf, &t_buf, &ctx_buf])?;
+            let eps2 = &out[0];
+            guide(
+                &eps2[..n_latent],
+                &eps2[n_latent..],
+                self.options.guidance_scale,
+                &mut eps,
+            );
+            let t_prev = ts.get(i + 1).copied();
+            ddim.step(&mut latent, &eps, t, t_prev);
+
+            // consume the decoder prefetch as soon as it lands
+            if let Some(p) = prefetch.as_mut() {
+                if !prefetch_charged && p.poll() {
+                    self.ledger.alloc("decoder", decoder_bytes)?;
+                    self.ledger.mark(&format!("decoder-prefetched@step{i}"));
+                    prefetch_charged = true;
+                }
+            }
+        }
+        tm.denoise_s = t0.elapsed().as_secs_f64();
+        tm.denoise_steps = ts.len();
+        self.ledger.mark("denoise-done");
+
+        // ---- decode ---------------------------------------------------------
+        if let Some(p) = prefetch.take() {
+            let t0 = Instant::now();
+            let pf = p.join()?;
+            if !prefetch_charged {
+                self.ledger.alloc("decoder", decoder_bytes)?;
+            }
+            decoder = Some(Component::load_from_parts(
+                &self.engine,
+                &pf.hlo_text_path,
+                &decoder_manifest,
+                &pf.weights,
+            )?);
+            tm.decoder_load_s = t0.elapsed().as_secs_f64();
+        }
+        let dec = decoder.expect("decoder loaded");
+        let t0 = Instant::now();
+        let img = dec.run(&self.engine, &[ActInput::F32(latent.clone())])?;
+        tm.decode_s = t0.elapsed().as_secs_f64();
+        drop(dec);
+        self.ledger.free("decoder")?;
+        self.ledger.mark("decoder-evicted");
+
+        tm.total_s = t_start.elapsed().as_secs_f64();
+        Ok(GenerateResult {
+            image: img.into_iter().next().unwrap_or_default(),
+            image_size: self.manifest.image_size,
+            latent,
+            timings: tm,
+            peak_memory: self.ledger.peak(),
+        })
+    }
+
+    /// Drop the resident UNet (frees its ledger entry).
+    pub fn evict_unet(&mut self) -> Result<()> {
+        if self.unet.take().is_some() {
+            self.ledger.free("unet")?;
+        }
+        self.unet_key.clear();
+        Ok(())
+    }
+}

@@ -1,0 +1,147 @@
+//! Memory ledger — the accounting substrate for the paper's Sec. 3.3
+//! pipelined execution.
+//!
+//! A device memory budget (the phone's per-process limit) with named
+//! allocations per component.  Every alloc/free is appended to a trace
+//! (crate::pipeline::trace) so a run reproduces the paper's Fig. 4
+//! occupancy chart.  Exceeding the budget is an error — the condition
+//! pipelining exists to avoid.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+use super::trace::{MemoryTrace, TraceEvent};
+
+#[derive(Debug)]
+pub struct MemoryLedger {
+    pub budget: usize,
+    allocations: BTreeMap<String, usize>,
+    used: usize,
+    peak: usize,
+    pub trace: MemoryTrace,
+}
+
+impl MemoryLedger {
+    pub fn new(budget: usize) -> MemoryLedger {
+        MemoryLedger {
+            budget,
+            allocations: BTreeMap::new(),
+            used: 0,
+            peak: 0,
+            trace: MemoryTrace::new(),
+        }
+    }
+
+    /// Unlimited ledger (baseline, non-pipelined accounting).
+    pub fn unbounded() -> MemoryLedger {
+        Self::new(usize::MAX)
+    }
+
+    pub fn alloc(&mut self, name: &str, bytes: usize) -> Result<()> {
+        if self.allocations.contains_key(name) {
+            return Err(Error::Pipeline(format!("{name} already allocated")));
+        }
+        if self.used + bytes > self.budget {
+            return Err(Error::Pipeline(format!(
+                "memory budget exceeded: {} + {} > {} (components: {:?})",
+                self.used, bytes, self.budget, self.allocations
+            )));
+        }
+        self.allocations.insert(name.to_string(), bytes);
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.trace.push(TraceEvent::alloc(name, bytes, self.used));
+        Ok(())
+    }
+
+    pub fn free(&mut self, name: &str) -> Result<usize> {
+        let bytes = self
+            .allocations
+            .remove(name)
+            .ok_or_else(|| Error::Pipeline(format!("{name} not allocated")))?;
+        self.used -= bytes;
+        self.trace.push(TraceEvent::free(name, bytes, self.used));
+        Ok(bytes)
+    }
+
+    pub fn mark(&mut self, label: &str) {
+        self.trace.push(TraceEvent::mark(label, self.used));
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+    pub fn holds(&self, name: &str) -> bool {
+        self.allocations.contains_key(name)
+    }
+    pub fn components(&self) -> &BTreeMap<String, usize> {
+        &self.allocations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut m = MemoryLedger::new(1000);
+        m.alloc("unet", 600).unwrap();
+        m.alloc("text", 300).unwrap();
+        assert_eq!(m.used(), 900);
+        assert!(m.alloc("decoder", 200).is_err(), "budget exceeded");
+        m.free("text").unwrap();
+        m.alloc("decoder", 200).unwrap();
+        assert_eq!(m.used(), 800);
+        assert_eq!(m.peak(), 900);
+    }
+
+    #[test]
+    fn double_alloc_and_unknown_free_rejected() {
+        let mut m = MemoryLedger::new(1000);
+        m.alloc("a", 10).unwrap();
+        assert!(m.alloc("a", 10).is_err());
+        assert!(m.free("b").is_err());
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut m = MemoryLedger::new(1000);
+        m.alloc("unet", 500).unwrap();
+        m.mark("denoise-start");
+        m.free("unet").unwrap();
+        assert_eq!(m.trace.events.len(), 3);
+        assert_eq!(m.trace.events[1].total, 500);
+        assert_eq!(m.trace.events[2].total, 0);
+    }
+
+    #[test]
+    fn property_used_equals_sum_and_never_exceeds_budget() {
+        crate::util::miniprop::forall("ledger invariants", 100, |g| {
+            let budget = g.usize_in(100, 10_000);
+            let mut m = MemoryLedger::new(budget);
+            let mut live: Vec<(String, usize)> = Vec::new();
+            for i in 0..g.usize_in(1, 30) {
+                if g.bool() || live.is_empty() {
+                    let sz = g.usize_in(1, 2000);
+                    let name = format!("c{i}");
+                    if m.alloc(&name, sz).is_ok() {
+                        live.push((name, sz));
+                    }
+                } else {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let (name, _) = live.remove(idx);
+                    m.free(&name).unwrap();
+                }
+                let sum: usize = live.iter().map(|(_, s)| s).sum();
+                assert_eq!(m.used(), sum);
+                assert!(m.used() <= budget);
+                assert!(m.peak() >= m.used());
+            }
+        });
+    }
+}

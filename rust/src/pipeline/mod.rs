@@ -1,0 +1,13 @@
+//! Pipelined execution (paper Sec. 3.3): memory ledger + occupancy
+//! trace, child-thread component prefetch, and the stage-interleaved
+//! executor.
+
+pub mod executor;
+pub mod loader;
+pub mod memory;
+pub mod trace;
+
+pub use executor::{ExecOptions, GenerateResult, PipelinedExecutor, StageTimings};
+pub use loader::{PrefetchedComponent, Prefetcher};
+pub use memory::MemoryLedger;
+pub use trace::{EventKind, MemoryTrace, TraceEvent};

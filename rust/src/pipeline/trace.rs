@@ -1,0 +1,139 @@
+//! Memory-occupancy trace: the data behind the paper's Fig. 4.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Alloc,
+    Free,
+    Mark,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub t: f64, // seconds since trace start
+    pub kind: EventKind,
+    pub label: String,
+    pub bytes: usize,
+    pub total: usize,
+}
+
+impl TraceEvent {
+    pub fn alloc(label: &str, bytes: usize, total: usize) -> Self {
+        TraceEvent { t: 0.0, kind: EventKind::Alloc, label: label.into(), bytes, total }
+    }
+    pub fn free(label: &str, bytes: usize, total: usize) -> Self {
+        TraceEvent { t: 0.0, kind: EventKind::Free, label: label.into(), bytes, total }
+    }
+    pub fn mark(label: &str, total: usize) -> Self {
+        TraceEvent { t: 0.0, kind: EventKind::Mark, label: label.into(), bytes: 0, total }
+    }
+}
+
+#[derive(Debug)]
+pub struct MemoryTrace {
+    pub start: Instant,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Default for MemoryTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryTrace {
+    pub fn new() -> MemoryTrace {
+        MemoryTrace { start: Instant::now(), events: Vec::new() }
+    }
+
+    pub fn push(&mut self, mut ev: TraceEvent) {
+        ev.t = self.start.elapsed().as_secs_f64();
+        self.events.push(ev);
+    }
+
+    pub fn peak(&self) -> usize {
+        self.events.iter().map(|e| e.total).max().unwrap_or(0)
+    }
+
+    /// Fig.-4-style ASCII occupancy chart: one row per event, a bar of
+    /// total residency, annotated with the event.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let peak = self.peak().max(1);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>8}  {:<28} {:>10}  occupancy (peak {:.1} MB)\n",
+            "t (s)", "event", "total MB", peak as f64 / 1e6
+        ));
+        for e in &self.events {
+            let bar_len = (e.total as f64 / peak as f64 * width as f64).round() as usize;
+            let kind = match e.kind {
+                EventKind::Alloc => "+",
+                EventKind::Free => "-",
+                EventKind::Mark => "|",
+            };
+            out.push_str(&format!(
+                "{:>8.3}  {:<28} {:>10.1}  {}\n",
+                e.t,
+                format!("{}{}", kind, e.label),
+                e.total as f64 / 1e6,
+                "#".repeat(bar_len)
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.events.iter().map(|e| {
+            Json::obj(vec![
+                ("t", Json::num(e.t)),
+                (
+                    "kind",
+                    Json::str(match e.kind {
+                        EventKind::Alloc => "alloc",
+                        EventKind::Free => "free",
+                        EventKind::Mark => "mark",
+                    }),
+                ),
+                ("label", Json::str(&e.label)),
+                ("bytes", Json::num(e.bytes as f64)),
+                ("total", Json::num(e.total as f64)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_and_peak() {
+        let mut tr = MemoryTrace::new();
+        tr.push(TraceEvent::alloc("a", 100, 100));
+        tr.push(TraceEvent::alloc("b", 50, 150));
+        tr.push(TraceEvent::free("a", 100, 50));
+        assert_eq!(tr.peak(), 150);
+        assert!(tr.events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn ascii_contains_events() {
+        let mut tr = MemoryTrace::new();
+        tr.push(TraceEvent::alloc("unet", 100, 100));
+        tr.push(TraceEvent::mark("denoise", 100));
+        let s = tr.render_ascii(40);
+        assert!(s.contains("+unet"));
+        assert!(s.contains("|denoise"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut tr = MemoryTrace::new();
+        tr.push(TraceEvent::alloc("x", 1, 1));
+        let j = tr.to_json();
+        assert_eq!(j.at(0).get("label").as_str(), Some("x"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Model compression (paper Sec. 3.4): weight storage, quantization
+//! round-trips, structured pruning accounting, and the block-wise
+//! reconstruction-error metric.
+
+pub mod weights;
+
+pub use weights::{Payload, WeightFile, WeightTensor};
+
+/// Per-output-channel symmetric int8 quantization (the Rust mirror of
+/// python/compile/quantize.py; used by tests and the ablation benches to
+/// quantize on the fly).
+pub fn quantize_per_channel(w: &[f32], cout: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(cout > 0 && w.len() % cout == 0);
+    let rows = w.len() / cout;
+    let mut scale = vec![1.0f32; cout];
+    for c in 0..cout {
+        let mut amax = 0f32;
+        for r in 0..rows {
+            amax = amax.max(w[r * cout + c].abs());
+        }
+        scale[c] = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    }
+    let q = w
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let s = scale[i % cout];
+            (v / s).round().clamp(-127.0, 127.0) as i8
+        })
+        .collect();
+    (q, scale)
+}
+
+pub fn dequantize(q: &[i8], scale: &[f32]) -> Vec<f32> {
+    let cout = scale.len();
+    q.iter()
+        .enumerate()
+        .map(|(i, &v)| v as f32 * scale[i % cout])
+        .collect()
+}
+
+/// Block-wise reconstruction error (Li et al. 2021 / Wei et al. 2022):
+/// MSE of a compressed block's output against the full-precision block
+/// on the same input — the paper's indirect quality metric.
+pub fn reconstruction_error(y_ref: &[f32], y_cmp: &[f32]) -> f64 {
+    crate::util::stats::mse(y_ref, y_cmp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_round_trip_error_bound() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let cout = 16;
+        let w = rng.normal_f32_vec(64 * cout);
+        let (q, scale) = quantize_per_channel(&w, cout);
+        let dq = dequantize(&q, &scale);
+        for (i, (&a, &b)) in w.iter().zip(&dq).enumerate() {
+            let s = scale[i % cout];
+            assert!((a - b).abs() <= s * 0.5 + 1e-7, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn quant_matches_python_semantics() {
+        // identical algorithm to quantize.quantize_per_channel
+        let w = [1.0f32, -2.0, 0.5, 127.0, 0.0, -127.0];
+        let (q, scale) = quantize_per_channel(&w, 2);
+        assert!((scale[0] - 1.0 / 127.0 * 1.0).abs() < 1e-7 || scale[0] > 0.0);
+        let dq = dequantize(&q, &scale);
+        assert!((dq[3] - 127.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn property_quant_never_overflows() {
+        crate::util::miniprop::forall("quant bounds", 50, |g| {
+            let cout = g.usize_in(1, 8);
+            let rows = g.usize_in(1, 32);
+            let scale = g.f64_in(0.001, 100.0) as f32;
+            let w = g.f32_vec(rows * cout, scale);
+            let (q, scale) = quantize_per_channel(&w, cout);
+            assert!(q.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+            assert!(scale.iter().all(|&s| s > 0.0));
+        });
+    }
+
+    #[test]
+    fn reconstruction_error_zero_for_identical() {
+        let y = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(reconstruction_error(&y, &y), 0.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! MDWB weight-container reader — the Rust half of
+//! python/compile/weightsbin.py (see that file for the layout).
+//!
+//! The coordinator owns weight *storage* the way the paper's app does
+//! (Sec. 3.4): f32 payloads load as-is; int8 payloads are kept 8-bit in
+//! memory (the ledger charges 1 byte/elem + scales) and cast up to f32
+//! per tensor at executable-feed time — W8A16: 8-bit at rest, 16/32-bit
+//! in compute.  Structurally pruned output channels are not stored and
+//! re-inflate to zeros.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"MDWB";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    /// int8 payload with per-output-channel scale and keep-mask
+    I8 {
+        data: Vec<i8>,          // rows x kept
+        scale: Vec<f32>,        // cout
+        keep: Vec<bool>,        // cout
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub path: String,
+    /// logical (unpruned) shape
+    pub shape: Vec<usize>,
+    pub payload: Payload,
+}
+
+impl WeightTensor {
+    pub fn logical_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes this tensor occupies *at rest* (the memory-ledger number).
+    pub fn stored_bytes(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len() * 4,
+            Payload::I8 { data, scale, keep } => {
+                data.len() + scale.len() * 4 + keep.len()
+            }
+        }
+    }
+
+    /// Dequantize / inflate to a dense f32 buffer in logical shape
+    /// (the cast-up the paper performs before computation).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.payload {
+            Payload::F32(v) => v.clone(),
+            Payload::I8 { data, scale, keep } => {
+                let cout = keep.len();
+                let rows = self.logical_elems() / cout;
+                let kept: Vec<usize> = (0..cout).filter(|&c| keep[c]).collect();
+                let mut out = vec![0f32; rows * cout];
+                for r in 0..rows {
+                    for (j, &c) in kept.iter().enumerate() {
+                        out[r * cout + c] =
+                            data[r * kept.len() + j] as f32 * scale[c];
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct WeightFile {
+    pub tensors: BTreeMap<String, WeightTensor>,
+    pub file_bytes: usize,
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(Error::Weights(format!(
+                "truncated file at offset {}",
+                self.pos
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let data = std::fs::read(path)
+            .map_err(|e| Error::Weights(format!("{}: {}", path.display(), e)))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<WeightFile> {
+        let mut c = Cursor { data, pos: 0 };
+        if c.take(4)? != MAGIC {
+            return Err(Error::Weights("bad magic".into()));
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(Error::Weights(format!("unsupported version {version}")));
+        }
+        let count = c.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let plen = c.u16()? as usize;
+            let path = String::from_utf8(c.take(plen)?.to_vec())
+                .map_err(|_| Error::Weights("bad utf8 path".into()))?;
+            let dtype = c.u8()?;
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let elems: usize = shape.iter().product();
+            let payload = match dtype {
+                0 => {
+                    let raw = c.take(elems * 4)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    Payload::F32(v)
+                }
+                1 => {
+                    let cout = *shape.last().ok_or_else(|| {
+                        Error::Weights("int8 tensor needs rank >= 1".into())
+                    })?;
+                    let scale: Vec<f32> = c
+                        .take(cout * 4)?
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    let keep: Vec<bool> =
+                        c.take(cout)?.iter().map(|&b| b != 0).collect();
+                    let kept = keep.iter().filter(|&&k| k).count();
+                    let rows = elems / cout;
+                    let raw = c.take(rows * kept)?;
+                    let v = raw.iter().map(|&b| b as i8).collect();
+                    Payload::I8 { data: v, scale, keep }
+                }
+                d => return Err(Error::Weights(format!("bad dtype {d}"))),
+            };
+            tensors.insert(path.clone(), WeightTensor { path, shape, payload });
+        }
+        Ok(WeightFile { tensors, file_bytes: data.len() })
+    }
+
+    /// Sum of at-rest bytes over all tensors.
+    pub fn stored_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.stored_bytes()).sum()
+    }
+
+    /// Dense f32 buffers in the manifest's sorted-path order.
+    pub fn to_f32_ordered(&self, order: &[String]) -> Result<Vec<Vec<f32>>> {
+        order
+            .iter()
+            .map(|p| {
+                self.tensors
+                    .get(p)
+                    .map(|t| t.to_f32())
+                    .ok_or_else(|| Error::Weights(format!("missing tensor {p}")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny MDWB in memory matching the Python writer's layout.
+    fn sample_file() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+
+        // tensor 1: f32 "a/w" shape (2, 3)
+        out.extend_from_slice(&(3u16).to_le_bytes());
+        out.extend_from_slice(b"a/w");
+        out.push(0); // f32
+        out.push(2); // ndim
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&3u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+
+        // tensor 2: int8 "b/w" shape (2, 4), channel 2 pruned
+        out.extend_from_slice(&(3u16).to_le_bytes());
+        out.extend_from_slice(b"b/w");
+        out.push(1); // int8
+        out.push(2);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&4u32.to_le_bytes());
+        for s in [0.5f32, 1.0, 2.0, 0.25] {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&[1, 1, 0, 1]); // keep mask
+        // payload rows=2, kept=3: values
+        for v in [10i8, -20, 30, 40, 50, -60] {
+            out.push(v as u8);
+        }
+        out
+    }
+
+    #[test]
+    fn parses_f32() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        let t = &wf.tensors["a/w"];
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.to_f32(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.stored_bytes(), 24);
+    }
+
+    #[test]
+    fn parses_int8_with_pruning() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        let t = &wf.tensors["b/w"];
+        assert_eq!(t.shape, vec![2, 4]);
+        let dense = t.to_f32();
+        // row 0: [10*0.5, -20*1.0, 0 (pruned), 30*0.25]
+        assert_eq!(dense, vec![5.0, -20.0, 0.0, 7.5, 20.0, 50.0, 0.0, -15.0]);
+        // stored: 6 int8 + 4 scales*4 + 4 mask = 26 bytes << 32 f32 bytes
+        assert_eq!(t.stored_bytes(), 26);
+    }
+
+    #[test]
+    fn ordered_fetch_and_missing() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        let v = wf.to_f32_ordered(&["a/w".into(), "b/w".into()]).unwrap();
+        assert_eq!(v.len(), 2);
+        assert!(wf.to_f32_ordered(&["nope".into()]).is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut f = sample_file();
+        f[0] = b'X';
+        assert!(WeightFile::parse(&f).is_err());
+        let f = sample_file();
+        assert!(WeightFile::parse(&f[..f.len() - 3]).is_err());
+    }
+}

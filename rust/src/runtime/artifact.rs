@@ -1,0 +1,310 @@
+//! Artifact manifest (artifacts/manifest.json) — the contract between
+//! the Python build path and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::scheduler::SchedulerParams;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn from_json(j: &Json) -> TensorSpec {
+        TensorSpec {
+            shape: j
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            dtype: j.get("dtype").as_str().unwrap_or("float32").to_string(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub path: String,
+    pub spec: TensorSpec,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightSet {
+    pub file: String,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ComponentManifest {
+    pub name: String,
+    pub hlo_file: String,
+    pub variant: String,
+    pub params: Vec<ParamSpec>,
+    pub activations: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub param_bytes_f32: usize,
+    /// precision tag ("fp32" / "int8" / "int8_pruned") -> file
+    pub weights: BTreeMap<String, WeightSet>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenTrace {
+    pub latent0: Vec<f64>,
+    pub eps_scale: f64,
+    pub trace: Vec<Vec<f64>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerManifest {
+    pub params: SchedulerParams,
+    pub alphas_cumprod: Vec<f64>,
+    pub timesteps: Vec<usize>,
+    pub golden: GoldenTrace,
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerManifest {
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub golden: Vec<(String, Vec<i32>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub cfg_batch: usize,
+    pub latent_size: usize,
+    pub latent_channels: usize,
+    pub image_size: usize,
+    pub components: BTreeMap<String, ComponentManifest>,
+    pub scheduler: SchedulerManifest,
+    pub tokenizer: TokenizerManifest,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Manifest(format!("{}: {}", path.display(), e)))?;
+        let j = Json::parse(&text).map_err(|e| Error::Manifest(e.to_string()))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let mut components = BTreeMap::new();
+        let comps = j
+            .get("components")
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("missing components".into()))?;
+        for (name, c) in comps {
+            let params = c
+                .get("params")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| ParamSpec {
+                    path: p.get("path").as_str().unwrap_or("").to_string(),
+                    spec: TensorSpec::from_json(p),
+                })
+                .collect();
+            let mut weights = BTreeMap::new();
+            if let Some(w) = c.get("weights").as_obj() {
+                for (tag, meta) in w {
+                    weights.insert(
+                        tag.clone(),
+                        WeightSet {
+                            file: meta.get("file").as_str().unwrap_or("").to_string(),
+                            bytes: meta.get("bytes").as_usize().unwrap_or(0),
+                        },
+                    );
+                }
+            }
+            components.insert(
+                name.clone(),
+                ComponentManifest {
+                    name: name.clone(),
+                    hlo_file: c.get("hlo").as_str().unwrap_or("").to_string(),
+                    variant: c.get("variant").as_str().unwrap_or("").to_string(),
+                    params,
+                    activations: c
+                        .get("activations")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect(),
+                    outputs: c
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect(),
+                    param_bytes_f32: c.get("param_bytes_f32").as_usize().unwrap_or(0),
+                    weights,
+                },
+            );
+        }
+
+        let s = j.get("scheduler");
+        let scheduler = SchedulerManifest {
+            params: SchedulerParams {
+                num_train_timesteps: s.get("num_train_timesteps").as_usize().unwrap_or(1000),
+                beta_start: s.get("beta_start").as_f64().unwrap_or(0.00085),
+                beta_end: s.get("beta_end").as_f64().unwrap_or(0.012),
+                num_inference_steps: s.get("num_inference_steps").as_usize().unwrap_or(20),
+                guidance_scale: s.get("guidance_scale").as_f64().unwrap_or(7.5),
+            },
+            alphas_cumprod: s
+                .get("alphas_cumprod")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            timesteps: s
+                .get("timesteps")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            golden: GoldenTrace {
+                latent0: s
+                    .get("golden")
+                    .get("latent0")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .collect(),
+                eps_scale: s.get("golden").get("eps_scale").as_f64().unwrap_or(0.1),
+                trace: s
+                    .get("golden")
+                    .get("trace")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_f64())
+                            .collect()
+                    })
+                    .collect(),
+            },
+        };
+
+        let t = j.get("tokenizer");
+        let tokenizer = TokenizerManifest {
+            vocab_size: t.get("vocab_size").as_usize().unwrap_or(4096),
+            seq_len: t.get("seq_len").as_usize().unwrap_or(16),
+            golden: t
+                .get("golden")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|g| {
+                    (
+                        g.get("text").as_str().unwrap_or("").to_string(),
+                        g.get("ids")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_i64().map(|x| x as i32))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            cfg_batch: j.get("cfg_batch").as_usize().unwrap_or(2),
+            latent_size: j.get("latent").get("size").as_usize().unwrap_or(32),
+            latent_channels: j.get("latent").get("channels").as_usize().unwrap_or(4),
+            image_size: j.get("image").get("size").as_usize().unwrap_or(256),
+            components,
+            scheduler,
+            tokenizer,
+        })
+    }
+
+    pub fn component(&self, name: &str) -> Result<&ComponentManifest> {
+        self.components
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no component {name}")))
+    }
+
+    pub fn hlo_path(&self, comp: &ComponentManifest) -> PathBuf {
+        self.dir.join(&comp.hlo_file)
+    }
+
+    pub fn weight_path(&self, comp: &ComponentManifest, tag: &str) -> Result<PathBuf> {
+        comp.weights
+            .get(tag)
+            .map(|w| self.dir.join(&w.file))
+            .ok_or_else(|| {
+                Error::Manifest(format!("component {} has no weights '{tag}'", comp.name))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let src = r#"{
+          "cfg_batch": 2,
+          "latent": {"size": 32, "channels": 4},
+          "image": {"size": 256, "channels": 3},
+          "components": {
+            "unet_mobile": {
+              "hlo": "unet_mobile.hlo.txt", "variant": "mobile",
+              "params": [{"path": "conv_in/w", "shape": [3,3,4,64],
+                          "dtype": "float32"}],
+              "activations": [{"shape": [2,32,32,4], "dtype": "float32"}],
+              "outputs": [{"shape": [2,32,32,4], "dtype": "float32"}],
+              "param_bytes_f32": 9216,
+              "weights": {"fp32": {"file": "w.bin", "bytes": 9216}}
+            }
+          },
+          "scheduler": {
+            "num_train_timesteps": 1000, "beta_start": 0.00085,
+            "beta_end": 0.012, "num_inference_steps": 20,
+            "guidance_scale": 7.5,
+            "alphas_cumprod": [0.999, 0.998],
+            "timesteps": [950, 900],
+            "golden": {"latent0": [0.1], "eps_scale": 0.1,
+                       "trace": [[0.2]]}
+          },
+          "tokenizer": {"vocab_size": 4096, "seq_len": 16,
+                        "golden": [{"text": "hi", "ids": [1, 7, 0]}]}
+        }"#;
+        let j = Json::parse(src).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/art"), &j).unwrap();
+        assert_eq!(m.cfg_batch, 2);
+        let c = m.component("unet_mobile").unwrap();
+        assert_eq!(c.params.len(), 1);
+        assert_eq!(c.params[0].spec.elems(), 3 * 3 * 4 * 64);
+        assert_eq!(c.activations[0].shape, vec![2, 32, 32, 4]);
+        assert_eq!(m.scheduler.params.num_inference_steps, 20);
+        assert_eq!(m.tokenizer.golden[0].1, vec![1, 7, 0]);
+        assert!(m.component("nope").is_err());
+        assert!(m.weight_path(c, "int8").is_err());
+        assert!(m.weight_path(c, "fp32").unwrap().ends_with("w.bin"));
+    }
+}

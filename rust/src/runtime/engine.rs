@@ -1,0 +1,229 @@
+//! PJRT execution engine: load HLO text artifacts, keep weights resident
+//! as device buffers, execute with fresh activation inputs.
+//!
+//! Mirrors the deployment reality the paper describes: model *programs*
+//! are compiled once at load; weights are stored compressed (int8) and
+//! cast up once at load time (W8A16); per-request work is activation
+//! upload + execute only.  Python never appears here.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::quant::WeightFile;
+use crate::runtime::artifact::{ComponentManifest, Manifest};
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Shared PJRT client (CPU plugin).
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xerr)
+    }
+}
+
+/// Timing of a component load (feeds the Fig. 4 pipeline trace).
+#[derive(Debug, Clone, Default)]
+pub struct LoadStats {
+    pub compile_s: f64,
+    pub weights_s: f64,
+    pub weight_bytes_stored: usize,
+    pub weight_bytes_resident: usize,
+}
+
+/// A loaded, executable model component with resident weight buffers.
+pub struct Component {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub act_shapes: Vec<Vec<usize>>,
+    pub act_dtypes: Vec<String>,
+    pub stats: LoadStats,
+}
+
+impl Component {
+    /// Load a component: compile its HLO, read the weight container at
+    /// the requested precision tag, upload the (dequantized) parameters
+    /// as device buffers in manifest order.
+    pub fn load(
+        engine: &Engine,
+        manifest: &Manifest,
+        comp: &ComponentManifest,
+        weights_tag: &str,
+    ) -> Result<Component> {
+        let wf = WeightFile::load(&manifest.weight_path(comp, weights_tag)?)?;
+        Self::load_from_parts(engine, &manifest.hlo_path(comp), comp, &wf)
+    }
+
+    /// Device half of a load given an already-parsed weight container
+    /// (the child-thread prefetch path of paper Sec. 3.3).
+    pub fn load_from_parts(
+        engine: &Engine,
+        hlo_path: &Path,
+        comp: &ComponentManifest,
+        wf: &WeightFile,
+    ) -> Result<Component> {
+        let t0 = Instant::now();
+        let exe = engine.compile_hlo(hlo_path)?;
+        let compile_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let stored = wf.stored_bytes();
+        let mut weight_bufs = Vec::with_capacity(comp.params.len());
+        let mut resident = 0usize;
+        for p in &comp.params {
+            let t = wf.tensors.get(&p.path).ok_or_else(|| {
+                Error::Weights(format!("weight file missing {}", p.path))
+            })?;
+            if t.shape != p.spec.shape {
+                return Err(Error::Weights(format!(
+                    "{}: shape {:?} != manifest {:?}",
+                    p.path, t.shape, p.spec.shape
+                )));
+            }
+            let buf = match (&t.payload, p.spec.dtype.as_str()) {
+                // int8 params consumed natively (block_w8 artifacts)
+                (crate::quant::Payload::I8 { .. }, "int8") => {
+                    let dense = t.to_f32();
+                    let data: Vec<i8> = dense.iter().map(|&v| v as i8).collect();
+                    resident += data.len();
+                    engine
+                        .client
+                        .buffer_from_host_raw_bytes(
+                            xla::ElementType::S8,
+                            unsafe {
+                                std::slice::from_raw_parts(
+                                    data.as_ptr() as *const u8,
+                                    data.len(),
+                                )
+                            },
+                            &p.spec.shape,
+                            None,
+                        )
+                        .map_err(xerr)?
+                }
+                _ => {
+                    // W8A16 cast-up (or plain f32): dense f32 upload
+                    let dense = t.to_f32();
+                    resident += dense.len() * 4;
+                    engine
+                        .client
+                        .buffer_from_host_buffer::<f32>(&dense, &p.spec.shape, None)
+                        .map_err(xerr)?
+                }
+            };
+            weight_bufs.push(buf);
+        }
+        let weights_s = t1.elapsed().as_secs_f64();
+
+        Ok(Component {
+            name: comp.name.clone(),
+            exe,
+            weight_bufs,
+            act_shapes: comp.activations.iter().map(|a| a.shape.clone()).collect(),
+            act_dtypes: comp.activations.iter().map(|a| a.dtype.clone()).collect(),
+            stats: LoadStats {
+                compile_s,
+                weights_s,
+                weight_bytes_stored: stored,
+                weight_bytes_resident: resident,
+            },
+        })
+    }
+
+    /// Upload one activation (by manifest position) as a device buffer
+    /// the caller may keep resident across calls — the serving hot path
+    /// uses this for the text context, which is constant over all
+    /// denoise steps of a request.
+    pub fn upload(
+        &self,
+        engine: &Engine,
+        idx: usize,
+        act: &ActInput,
+    ) -> Result<xla::PjRtBuffer> {
+        let shape = &self.act_shapes[idx];
+        match act {
+            ActInput::F32(v) => engine
+                .client
+                .buffer_from_host_buffer::<f32>(v, shape, None)
+                .map_err(xerr),
+            ActInput::I32(v) => engine
+                .client
+                .buffer_from_host_buffer::<i32>(v, shape, None)
+                .map_err(xerr),
+        }
+    }
+
+    /// Execute with f32/i32 activation inputs (in manifest order).
+    /// Returns the flattened f32 outputs (one vec per output tensor).
+    pub fn run(&self, engine: &Engine, acts: &[ActInput]) -> Result<Vec<Vec<f32>>> {
+        if acts.len() != self.act_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{}: want {} activations, got {}",
+                self.name,
+                self.act_shapes.len(),
+                acts.len()
+            )));
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(acts.len());
+        for (i, act) in acts.iter().enumerate() {
+            bufs.push(self.upload(engine, i, act)?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(&refs)
+    }
+
+    /// Execute with pre-uploaded activation buffers (in manifest order).
+    pub fn run_buffers(&self, acts: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weight_bufs.len() + acts.len());
+        args.extend(self.weight_bufs.iter());
+        args.extend(acts.iter().copied());
+
+        let result = self.exe.execute_b(&args).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        // the AOT path lowers with return_tuple=True
+        let tuple = lit.to_tuple().map_err(xerr)?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(xerr))
+            .collect()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.stats.weight_bytes_resident
+    }
+}
+
+/// Activation input payload.
+pub enum ActInput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl ActInput {
+    pub fn f32(v: Vec<f32>) -> ActInput {
+        ActInput::F32(v)
+    }
+    pub fn i32(v: Vec<i32>) -> ActInput {
+        ActInput::I32(v)
+    }
+}

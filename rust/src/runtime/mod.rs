@@ -1,0 +1,9 @@
+//! Runtime layer: manifest parsing + PJRT execution of the AOT HLO
+//! artifacts (see /opt/xla-example/load_hlo for the interchange rules —
+//! HLO *text*, not serialized protos).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ComponentManifest, Manifest, ParamSpec, TensorSpec};
+pub use engine::{ActInput, Component, Engine, LoadStats};

@@ -1,0 +1,185 @@
+//! DDIM sampler + distilled step schedules (the Rust mirror of
+//! python/compile/scheduler.py; validated against the manifest's golden
+//! trace in rust/tests/).
+//!
+//! The denoise loop lives here: the coordinator calls
+//! [`Ddim::timesteps`], runs the CFG-batched UNet executable per step,
+//! applies [`guide`] + [`Ddim::step`].  The paper's "20 effective
+//! denoising steps" come from progressive distillation (Salimans & Ho
+//! 2022); the serving system consumes the halved schedules via
+//! [`Ddim::progressive_timesteps`].
+
+#[derive(Debug, Clone)]
+pub struct SchedulerParams {
+    pub num_train_timesteps: usize,
+    pub beta_start: f64,
+    pub beta_end: f64,
+    pub num_inference_steps: usize,
+    pub guidance_scale: f64,
+}
+
+impl Default for SchedulerParams {
+    fn default() -> Self {
+        SchedulerParams {
+            num_train_timesteps: 1000,
+            beta_start: 0.00085,
+            beta_end: 0.012,
+            num_inference_steps: 20,
+            guidance_scale: 7.5,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Ddim {
+    pub params: SchedulerParams,
+    pub alphas_cumprod: Vec<f64>,
+}
+
+impl Ddim {
+    /// Scaled-linear beta schedule (the SD default), cumulative alphas.
+    pub fn new(params: SchedulerParams) -> Ddim {
+        let n = params.num_train_timesteps;
+        let (s0, s1) = (params.beta_start.sqrt(), params.beta_end.sqrt());
+        let mut acp = Vec::with_capacity(n);
+        let mut prod = 1.0f64;
+        for i in 0..n {
+            let frac = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+            let beta = (s0 + (s1 - s0) * frac).powi(2);
+            prod *= 1.0 - beta;
+            acp.push(prod);
+        }
+        Ddim { params, alphas_cumprod: acp }
+    }
+
+    /// Load alphas directly (from the manifest) for bit-parity with the
+    /// Python build.
+    pub fn from_alphas(params: SchedulerParams, alphas_cumprod: Vec<f64>) -> Ddim {
+        Ddim { params, alphas_cumprod }
+    }
+
+    /// DDIM stride schedule: evenly spaced, descending.
+    pub fn timesteps(&self, num_steps: usize) -> Vec<usize> {
+        let stride = self.params.num_train_timesteps / num_steps;
+        (0..self.params.num_train_timesteps)
+            .step_by(stride.max(1))
+            .rev()
+            .collect()
+    }
+
+    /// Progressive-distillation schedule: `halvings` halves the count.
+    pub fn progressive_timesteps(&self, halvings: u32) -> Option<Vec<usize>> {
+        let n = self.params.num_inference_steps >> halvings;
+        if n == 0 {
+            return None;
+        }
+        Some(self.timesteps(n))
+    }
+
+    /// One deterministic (eta = 0) DDIM update, in place over the latent.
+    pub fn step(&self, latent: &mut [f32], eps: &[f32], t: usize, t_prev: Option<usize>) {
+        assert_eq!(latent.len(), eps.len());
+        let a_t = self.alphas_cumprod[t];
+        let a_prev = t_prev.map(|p| self.alphas_cumprod[p]).unwrap_or(1.0);
+        let sqrt_at = a_t.sqrt();
+        let sqrt_1mat = (1.0 - a_t).sqrt();
+        let sqrt_aprev = a_prev.sqrt();
+        let sqrt_1maprev = (1.0 - a_prev).sqrt();
+        for (l, &e) in latent.iter_mut().zip(eps) {
+            let x0 = (*l as f64 - sqrt_1mat * e as f64) / sqrt_at;
+            *l = (sqrt_aprev * x0 + sqrt_1maprev * e as f64) as f32;
+        }
+    }
+}
+
+/// Classifier-free guidance: uncond + s * (cond - uncond), elementwise.
+pub fn guide(eps_uncond: &[f32], eps_cond: &[f32], scale: f64, out: &mut [f32]) {
+    assert_eq!(eps_uncond.len(), eps_cond.len());
+    assert_eq!(out.len(), eps_cond.len());
+    for i in 0..out.len() {
+        let u = eps_uncond[i] as f64;
+        let c = eps_cond[i] as f64;
+        out[i] = (u + scale * (c - u)) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ddim() -> Ddim {
+        Ddim::new(SchedulerParams::default())
+    }
+
+    #[test]
+    fn alphas_monotone_decreasing() {
+        let d = ddim();
+        assert_eq!(d.alphas_cumprod.len(), 1000);
+        for w in d.alphas_cumprod.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(d.alphas_cumprod[0] < 1.0 && d.alphas_cumprod[999] > 0.0);
+    }
+
+    #[test]
+    fn timesteps_shape() {
+        let d = ddim();
+        let ts = d.timesteps(20);
+        assert_eq!(ts.len(), 20);
+        assert_eq!(*ts.last().unwrap(), 0);
+        assert!(ts.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn progressive_halving() {
+        let d = ddim();
+        assert_eq!(d.progressive_timesteps(0).unwrap().len(), 20);
+        assert_eq!(d.progressive_timesteps(1).unwrap().len(), 10);
+        assert_eq!(d.progressive_timesteps(2).unwrap().len(), 5);
+        assert!(d.progressive_timesteps(10).is_none());
+    }
+
+    #[test]
+    fn zero_eps_final_step_recovers_x0() {
+        let d = ddim();
+        let t = 100;
+        let mut latent = vec![1.0f32, -2.0, 0.5];
+        let expect: Vec<f32> = latent
+            .iter()
+            .map(|&v| (v as f64 / d.alphas_cumprod[t].sqrt()) as f32)
+            .collect();
+        d.step(&mut latent, &[0.0; 3], t, None);
+        for (a, b) in latent.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pure_noise_invariant() {
+        let d = ddim();
+        let (t, tp) = (500, 450);
+        let eps = [0.3f32, -1.2, 2.0];
+        let mut latent: Vec<f32> = eps
+            .iter()
+            .map(|&e| ((1.0 - d.alphas_cumprod[t]).sqrt() * e as f64) as f32)
+            .collect();
+        d.step(&mut latent, &eps, t, Some(tp));
+        for (l, &e) in latent.iter().zip(&eps) {
+            let want = ((1.0 - d.alphas_cumprod[tp]).sqrt() * e as f64) as f32;
+            assert!((l - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn guidance_endpoints() {
+        let u = [1.0f32, 2.0];
+        let c = [3.0f32, -1.0];
+        let mut out = [0.0f32; 2];
+        guide(&u, &c, 1.0, &mut out);
+        assert_eq!(out, c);
+        guide(&u, &c, 0.0, &mut out);
+        assert_eq!(out, u);
+        guide(&u, &c, 7.5, &mut out);
+        assert!((out[0] - (1.0 + 7.5 * 2.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,91 @@
+//! Hash-vocabulary tokenizer — the Rust mirror of
+//! python/compile/tokenizer.py (the build path emits golden cases into
+//! the manifest; integration tests verify byte-for-byte parity).
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.to_lowercase().chars() {
+        if ch.is_alphanumeric() {
+            cur.push(ch);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// BOS + hashed word ids, truncated / PAD-padded to `seq_len`.
+pub fn encode(text: &str, vocab_size: usize, seq_len: usize) -> Vec<i32> {
+    let mut ids = vec![BOS_ID];
+    for w in words(text) {
+        if ids.len() >= seq_len {
+            break;
+        }
+        let id = 2 + (fnv1a64(w.as_bytes()) % (vocab_size as u64 - 2)) as i32;
+        ids.push(id);
+    }
+    ids.resize(seq_len, PAD_ID);
+    ids.truncate(seq_len);
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_answers() {
+        // must match python/tests/test_tokenizer.py::test_fnv_golden
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    #[test]
+    fn framing() {
+        let ids = encode("a b", 4096, 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(ids[0], BOS_ID);
+        assert!(ids[3..].iter().all(|&t| t == PAD_ID));
+    }
+
+    #[test]
+    fn truncation_and_range() {
+        let text = (0..100).map(|i| format!("w{i}")).collect::<Vec<_>>().join(" ");
+        let ids = encode(&text, 4096, 16);
+        assert_eq!(ids.len(), 16);
+        assert!(ids.iter().all(|&t| (0..4096).contains(&t)));
+        assert!(!ids[1..].contains(&PAD_ID));
+    }
+
+    #[test]
+    fn case_and_punct_insensitive_split() {
+        assert_eq!(words("Hello, WORLD!"), vec!["hello", "world"]);
+        assert_eq!(encode("HELLO", 4096, 16), encode("hello", 4096, 16));
+    }
+
+    #[test]
+    fn empty_prompt_is_bos_plus_pads() {
+        let ids = encode("", 4096, 16);
+        assert_eq!(ids[0], BOS_ID);
+        assert!(ids[1..].iter().all(|&t| t == PAD_ID));
+    }
+}

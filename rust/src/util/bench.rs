@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion substitute for the offline build).
+//!
+//! Warmup + timed iterations with mean/p50/p99 reporting; used by every
+//! `cargo bench` target (`harness = false`) and by the perf pass.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// cap total measured time; stops early past this many seconds
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 30, max_seconds: 10.0 }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration wall-clock seconds.
+pub fn bench_with<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let start = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > cfg.max_seconds && samples.len() >= 5 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: summarize(&samples) }
+}
+
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with(name, &BenchConfig::default(), f)
+}
+
+/// Standard row printer shared by all bench targets.
+pub fn print_result(r: &BenchResult) {
+    let s = &r.summary;
+    println!(
+        "{:<44} mean {:>9.3} ms   p50 {:>9.3} ms   p99 {:>9.3} ms   (n={})",
+        r.name,
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        s.count
+    );
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {} ===", title);
+}
+
+/// A black-box to keep the optimizer from eliding benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench_with(
+            "t",
+            &BenchConfig { warmup_iters: 1, iters: 5, max_seconds: 5.0 },
+            || {
+                let mut s = 0u64;
+                for i in 0..10_000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            },
+        );
+        assert_eq!(r.summary.count, 5);
+        assert!(r.summary.mean > 0.0);
+    }
+
+    #[test]
+    fn early_stop_on_budget() {
+        let r = bench_with(
+            "slow",
+            &BenchConfig { warmup_iters: 0, iters: 1000, max_seconds: 0.05 },
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+        );
+        assert!(r.summary.count < 1000);
+        assert!(r.summary.count >= 5);
+    }
+}

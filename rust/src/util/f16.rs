@@ -1,0 +1,191 @@
+//! Software IEEE-754 binary16 — the substrate for reproducing the paper's
+//! Sec. 3.2 float16 instability without a mobile GPU.
+//!
+//! The coordinator uses it to (a) emulate the on-device GELU arithmetic
+//! bit-exactly (Fig. 3 divergence, Fig. 8 fix) and (b) account activation
+//! bytes in the delegate cost model the way the device stores them.
+
+/// An IEEE-754 half-precision value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+pub const F16_MAX: f32 = 65504.0;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+
+    /// Round-to-nearest-even conversion from f32.
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // inf / nan
+            let payload = if frac != 0 { 0x0200 } else { 0 };
+            return F16(sign | 0x7C00 | payload | ((frac >> 13) as u16 & 0x03FF));
+        }
+        // re-bias: f32 exp-127 -> f16 exp-15
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            return F16(sign | 0x7C00); // overflow -> inf
+        }
+        if unbiased >= -14 {
+            // normal f16
+            let exp16 = (unbiased + 15) as u32;
+            let mut mant = frac >> 13;
+            // round to nearest even on the 13 dropped bits
+            let rem = frac & 0x1FFF;
+            if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+                mant += 1;
+            }
+            let mut out = (exp16 << 10) + mant; // mantissa carry bumps exp
+            if out >= 0x7C00 {
+                out = 0x7C00; // rounded up to inf
+            }
+            return F16(sign | out as u16);
+        }
+        if unbiased >= -25 {
+            // subnormal f16
+            let shift = (-unbiased - 14 + 13) as u32; // 14..24
+            let full = frac | 0x80_0000; // implicit leading 1
+            let mut mant = full >> shift;
+            let rem = full & ((1 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            if rem > half || (rem == half && (mant & 1) == 1) {
+                mant += 1;
+            }
+            return F16(sign | mant as u16);
+        }
+        F16(sign) // underflow -> signed zero
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let mant = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0x1F {
+            sign | 0x7F80_0000 | (mant << 13)
+        } else if exp == 0 {
+            if mant == 0 {
+                sign
+            } else {
+                // subnormal: normalize
+                let mut e = 0i32;
+                let mut m = mant;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                m &= 0x3FF;
+                sign | (((112 + e + 1) as u32) << 23) | (m << 13)
+            }
+        } else {
+            sign | ((exp + 112) << 23) | (mant << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+}
+
+/// Emulated f16 arithmetic: compute in f32, round back after every op —
+/// the semantics of a mobile GPU's native half ALU.
+pub fn add(a: F16, b: F16) -> F16 {
+    F16::from_f32(a.to_f32() + b.to_f32())
+}
+pub fn mul(a: F16, b: F16) -> F16 {
+    F16::from_f32(a.to_f32() * b.to_f32())
+}
+pub fn tanh(a: F16) -> F16 {
+    F16::from_f32(a.to_f32().tanh())
+}
+pub fn clamp(a: F16, lo: f32, hi: f32) -> F16 {
+    F16::from_f32(a.to_f32().clamp(lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048..=2048 {
+            let h = F16::from_f32(i as f32);
+            assert_eq!(h.to_f32(), i as f32, "i={}", i);
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(6.1035156e-5).0, 0x0400); // min normal
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(F16::from_f32(65520.0).is_infinite());
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(!F16::from_f32(65504.0).is_infinite());
+        assert!(F16::from_f32(-70000.0) == F16::NEG_INFINITY);
+    }
+
+    #[test]
+    fn subnormals_round_trip() {
+        let tiny = 5.9604645e-8; // min subnormal
+        assert_eq!(F16::from_f32(tiny).0, 0x0001);
+        assert_eq!(F16(0x0001).to_f32(), tiny);
+        assert_eq!(F16::from_f32(tiny / 3.0).0, 0x0000); // underflow
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 2049 is exactly between 2048 and 2050 in f16 -> rounds to even 2048
+        assert_eq!(F16::from_f32(2049.0).to_f32(), 2048.0);
+        assert_eq!(F16::from_f32(2051.0).to_f32(), 2052.0);
+    }
+
+    #[test]
+    fn nan_propagation() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn round_trip_all_finite_f16() {
+        // every finite f16 bit pattern must survive f16 -> f32 -> f16
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, bits, "bits={:#06x}", bits);
+        }
+    }
+
+    #[test]
+    fn cube_overflow_threshold_matches_paper() {
+        // x^3 overflows f16 just above 40.3 (65504^(1/3))
+        let below = mul(mul(F16::from_f32(40.28), F16::from_f32(40.28)),
+                        F16::from_f32(40.28));
+        let above = mul(mul(F16::from_f32(40.4), F16::from_f32(40.4)),
+                        F16::from_f32(40.4));
+        assert!(below.is_finite());
+        assert!(above.is_infinite());
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal PNG writer (RGB8, no external deps) + PGM fallback.
+//!
+//! Used by the examples to materialize generated images (paper Fig. 6).
+//! PNG: one IDAT with zlib "stored" (uncompressed) deflate blocks —
+//! valid, portable, and dependency-free.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// CRC-32 (IEEE) — required by the PNG container.
+fn crc32(data: &[u8]) -> u32 {
+    const POLY: u32 = 0xEDB8_8320;
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (POLY & mask);
+        }
+    }
+    !crc
+}
+
+/// Adler-32 — required by the zlib wrapper.
+fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(5550) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(tag);
+    out.extend_from_slice(payload);
+    let mut crc_in = Vec::with_capacity(4 + payload.len());
+    crc_in.extend_from_slice(tag);
+    crc_in.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(&crc_in).to_be_bytes());
+}
+
+/// zlib stream with stored (type-0) deflate blocks.
+fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = vec![0x78, 0x01]; // CMF/FLG
+    let mut rest = raw;
+    loop {
+        let take = rest.len().min(65535);
+        let last = take == rest.len();
+        out.push(if last { 1 } else { 0 });
+        out.extend_from_slice(&(take as u16).to_le_bytes());
+        out.extend_from_slice(&(!(take as u16)).to_le_bytes());
+        out.extend_from_slice(&rest[..take]);
+        if last {
+            break;
+        }
+        rest = &rest[take..];
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
+/// Write an RGB8 PNG.  `pixels` is HWC row-major, len = w*h*3.
+pub fn write_png(path: &Path, w: usize, h: usize, pixels: &[u8]) -> Result<()> {
+    if pixels.len() != w * h * 3 {
+        return Err(Error::Io(format!(
+            "pixel buffer {} != {}x{}x3",
+            pixels.len(),
+            w,
+            h
+        )));
+    }
+    let mut raw = Vec::with_capacity(h * (1 + w * 3));
+    for row in 0..h {
+        raw.push(0); // filter: none
+        raw.extend_from_slice(&pixels[row * w * 3..(row + 1) * w * 3]);
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(&[0x89, b'P', b'N', b'G', 0x0D, 0x0A, 0x1A, 0x0A]);
+    let mut ihdr = Vec::new();
+    ihdr.extend_from_slice(&(w as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(h as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // 8-bit, RGB
+    chunk(&mut out, b"IHDR", &ihdr);
+    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
+    chunk(&mut out, b"IEND", &[]);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+/// Convert [-1, 1]-ish float RGB (HWC) to u8 with clamping.
+pub fn float_to_rgb8(data: &[f32]) -> Vec<u8> {
+    data.iter()
+        .map(|&v| {
+            let x = (v * 0.5 + 0.5).clamp(0.0, 1.0);
+            (x * 255.0).round() as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc_known_answer() {
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn adler_known_answer() {
+        assert_eq!(adler32(b"Wikipedia"), 0x11E60398);
+    }
+
+    #[test]
+    fn png_structure() {
+        let dir = std::env::temp_dir().join("md_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.png");
+        let px: Vec<u8> = (0..4 * 4 * 3).map(|i| (i * 7 % 256) as u8).collect();
+        write_png(&path, 4, 4, &px).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], &[0x89, b'P', b'N', b'G', 0x0D, 0x0A, 0x1A, 0x0A]);
+        assert_eq!(&bytes[12..16], b"IHDR");
+        assert!(bytes.windows(4).any(|w| w == b"IDAT"));
+        assert_eq!(&bytes[bytes.len() - 8..bytes.len() - 4], b"IEND");
+    }
+
+    #[test]
+    fn float_conversion_clamps() {
+        let px = float_to_rgb8(&[-2.0, -1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(px, vec![0, 0, 128, 255, 255]);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let dir = std::env::temp_dir();
+        assert!(write_png(&dir.join("bad.png"), 4, 4, &[0u8; 5]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Hand-rolled substrates (the offline build vendors no serde / rand /
+//! half / criterion / proptest — see DESIGN.md):
+//!
+//! * [`json`]     — JSON parser + writer (manifest, graph specs, reports)
+//! * [`rng`]      — SplitMix64/xoshiro256++ + normal sampler
+//! * [`f16`]      — software IEEE binary16 (the Sec. 3.2 experiments)
+//! * [`stats`]    — latency summaries, MSE / PSNR
+//! * [`image`]    — PNG (+ PGM) writer for generated images
+//! * [`bench`]    — micro-benchmark harness (criterion substitute)
+//! * [`miniprop`] — tiny property-testing engine (proptest substitute)
+
+pub mod bench;
+pub mod f16;
+pub mod image;
+pub mod json;
+pub mod miniprop;
+pub mod rng;
+pub mod stats;

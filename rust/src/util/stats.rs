@@ -1,0 +1,116 @@
+//! Latency/throughput statistics for metrics and the bench harness.
+
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Compute order statistics over a sample (nearest-rank percentiles).
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(1) as f64;
+    let pct = |p: f64| -> f64 {
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        sorted[rank.min(n) - 1]
+    };
+    Summary {
+        count: n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(50.0),
+        p90: pct(90.0),
+        p99: pct(99.0),
+    }
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Peak signal-to-noise ratio in dB over a given dynamic range.
+pub fn psnr(a: &[f32], b: &[f32], peak: f64) -> f64 {
+    let e = mse(a, b);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (peak * peak / e).log10()
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p99, 99.0);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = summarize(&[]);
+        assert_eq!(s.count, 0);
+    }
+
+    #[test]
+    fn mse_and_psnr() {
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, 1.0];
+        assert!((mse(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((psnr(&a, &b, 1.0) - 0.0).abs() < 1e-9);
+        assert_eq!(psnr(&a, &a, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn max_abs() {
+        assert_eq!(max_abs_diff(&[1.0, -3.0], &[1.5, 0.0]), 3.0);
+    }
+}
