@@ -60,7 +60,7 @@ fn main() -> mobile_diffusion::Result<()> {
         budget as f64 / 1e6
     );
     println!("memory occupancy trace (paper Fig. 4):\n");
-    println!("{}", pipe.ledger.trace.render_ascii(48));
+    println!("{}", pipe.memory_trace().render_ascii(48));
 
     // int8 weights shrink the whole footprint further (Sec. 3.4)
     let mut int8 = PipelinedExecutor::new(

@@ -1,39 +1,71 @@
-//! Serving demo: push a batch of prompts through the coordinator (FIFO
-//! queue in front of the single-device pipelined executor, UNet resident
-//! across requests — the paper's app behaviour) and report the metrics.
+//! Serving demo: push a burst of mixed-priority prompts through the
+//! worker pool (admission queue -> N device workers, each with its own
+//! engine and residency cache) and print the fleet metrics report.
 //!
 //!     cargo run --release --example serve
 
-use mobile_diffusion::config::AppConfig;
-use mobile_diffusion::coordinator::Server;
+use std::time::Duration;
 
-const PROMPTS: &[&str] = &[
-    "a photograph of an astronaut riding a horse",
-    "a cyberpunk city at night, neon lights",
-    "an oil painting of a lighthouse in a storm",
-    "a bowl of ramen, studio lighting",
-    "a golden retriever puppy in the snow",
-    "the skyline of Seoul at sunset",
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::{Priority, Server, SubmitOptions};
+
+/// (prompt, priority, per-request step override)
+const PROMPTS: &[(&str, Priority, Option<usize>)] = &[
+    ("a photograph of an astronaut riding a horse", Priority::Normal, None),
+    ("a cyberpunk city at night, neon lights", Priority::High, Some(2)),
+    ("an oil painting of a lighthouse in a storm", Priority::Low, None),
+    ("a bowl of ramen, studio lighting", Priority::Normal, Some(8)),
+    ("a golden retriever puppy in the snow", Priority::High, None),
+    ("the skyline of Seoul at sunset", Priority::Low, Some(2)),
 ];
 
 fn main() -> mobile_diffusion::Result<()> {
     let mut cfg = AppConfig::default();
     cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    cfg.num_steps = 4; // demo schedule; 20 for the paper's
+    cfg.num_steps = 4; // demo default schedule; 20 for the paper's
+    cfg.num_workers = 2; // a two-phone fleet
+    cfg.queue_depth = 16;
 
     let mut server = Server::start(&cfg)?;
-    println!("serving {} prompts, {} steps each...\n", PROMPTS.len(), cfg.num_steps);
+    println!(
+        "serving {} prompts on {} workers ({} default steps)...\n",
+        PROMPTS.len(),
+        server.num_workers(),
+        cfg.num_steps
+    );
 
+    // submit the whole burst up front: the queue drains high before
+    // normal before low, FIFO within each class
     let t0 = std::time::Instant::now();
-    for (i, prompt) in PROMPTS.iter().enumerate() {
-        let resp = server.generate(prompt, i as u64 + 1)?;
-        println!(
-            "#{:<2} {:>6.2} s (queue {:>5.3} s, peak {:>5.1} MB)  {prompt}",
-            resp.id,
-            resp.timings.total_s,
-            resp.queue_s,
-            resp.peak_memory as f64 / 1e6
-        );
+    let mut pending = Vec::new();
+    for (i, (prompt, priority, steps)) in PROMPTS.iter().enumerate() {
+        let opts = SubmitOptions {
+            priority: *priority,
+            num_steps: *steps,
+            deadline: Some(Duration::from_secs(600)),
+            ..Default::default()
+        };
+        match server.submit_with(prompt, i as u64 + 1, opts) {
+            Ok(rx) => pending.push((*prompt, *priority, rx)),
+            Err(e) => println!("rejected ({priority:?}): {e}  {prompt}"),
+        }
+    }
+
+    for (prompt, priority, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(resp)) => println!(
+                "#{:<2} [{:<6}] worker {}  {:>6.2} s ({} steps, queue {:>5.3} s, peak {:>5.1} MB)  {prompt}",
+                resp.id,
+                priority.as_str(),
+                resp.worker_id,
+                resp.timings.total_s,
+                resp.timings.denoise_steps,
+                resp.queue_s,
+                resp.peak_memory as f64 / 1e6
+            ),
+            Ok(Err(e)) => println!("failed  [{:<6}] {e}  {prompt}", priority.as_str()),
+            Err(_) => println!("dropped [{:<6}] {prompt}", priority.as_str()),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(

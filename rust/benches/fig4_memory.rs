@@ -29,7 +29,7 @@ fn main() {
         )
         .unwrap();
         let r = ex.generate("fig4: memory occupancy", 4, "mobile").unwrap();
-        (r.peak_memory, ex.ledger.trace.render_ascii(48), r.timings.total_s)
+        (r.peak_memory, ex.memory_trace().render_ascii(48), r.timings.total_s)
     };
 
     println!("== Fig. 4: pipelined execution (paper Sec. 3.3) ==");

@@ -21,6 +21,11 @@ pub struct AppConfig {
     pub seed: u64,
     pub prompt: String,
     pub out: Option<PathBuf>,
+    /// device workers in the serving pool (each owns its own engine
+    /// and memory budget)
+    pub num_workers: usize,
+    /// admission-queue capacity; submissions beyond it are rejected
+    pub queue_depth: usize,
 }
 
 impl Default for AppConfig {
@@ -36,6 +41,8 @@ impl Default for AppConfig {
             seed: 0,
             prompt: "a photograph of an astronaut riding a horse".into(),
             out: None,
+            num_workers: 1,
+            queue_depth: 32,
         }
     }
 }
@@ -91,6 +98,12 @@ impl AppConfig {
         if let Some(v) = j.get("prompt").as_str() {
             self.prompt = v.to_string();
         }
+        if let Some(v) = j.get("num_workers").as_usize() {
+            self.num_workers = v;
+        }
+        if let Some(v) = j.get("queue_depth").as_usize() {
+            self.queue_depth = v;
+        }
     }
 
     /// Parse `--key value` / `--flag` CLI arguments (after the
@@ -136,11 +149,27 @@ impl AppConfig {
                 }
                 "--prompt" => self.prompt = take(&mut i)?,
                 "--out" => self.out = Some(PathBuf::from(take(&mut i)?)),
+                "--workers" => {
+                    self.num_workers = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--workers: {e}")))?;
+                }
+                "--queue-depth" => {
+                    self.queue_depth = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--queue-depth: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
             }
             i += 1;
+        }
+        if self.num_workers == 0 {
+            return Err(Error::Config("--workers must be at least 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("--queue-depth must be at least 1".into()));
         }
         if !["base", "mobile"].contains(&self.variant.as_str()) {
             return Err(Error::Config(format!("bad variant {}", self.variant)));
@@ -195,5 +224,25 @@ mod tests {
         c.apply_json(&j);
         assert_eq!(c.num_steps, 3);
         assert_eq!(c.variant, "base");
+    }
+
+    #[test]
+    fn pool_flags_and_json() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.num_workers, 1, "single-phone default");
+        assert_eq!(c.queue_depth, 32);
+        c.apply_args(&args(&["--workers", "4", "--queue-depth", "8"])).unwrap();
+        assert_eq!(c.num_workers, 4);
+        assert_eq!(c.queue_depth, 8);
+
+        let j = Json::parse(r#"{"num_workers": 2, "queue_depth": 16}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.num_workers, 2);
+        assert_eq!(c.queue_depth, 16);
+
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--workers", "0"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--queue-depth", "0"])).is_err());
     }
 }

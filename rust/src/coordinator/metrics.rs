@@ -1,15 +1,57 @@
-//! Serving metrics: request counters and latency summaries per stage.
+//! Serving metrics: per-stage latency summaries plus pool-level
+//! counters — queue depth high-water, admission rejections, end-to-end
+//! latency percentiles, and per-worker utilization.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::pipeline::StageTimings;
 use crate::util::stats::{summarize, Summary};
 
+/// Cap on retained samples per series.  The serving loop is a daemon;
+/// unbounded per-request sample vectors would grow (and re-sort on
+/// every report) forever, so percentiles are computed over a sliding
+/// window of the most recent samples.
+const MAX_SAMPLES: usize = 4096;
+
+/// Fixed-capacity sliding window of latency samples.
+#[derive(Debug, Default)]
+pub struct SampleWindow {
+    samples: Vec<f64>,
+    /// overwrite cursor once the window is full
+    next: usize,
+}
+
+impl SampleWindow {
+    pub fn push(&mut self, x: f64) {
+        if self.samples.len() < MAX_SAMPLES {
+            self.samples.push(x);
+        } else {
+            self.samples[self.next] = x;
+        }
+        self.next = (self.next + 1) % MAX_SAMPLES;
+    }
+
+    /// Order statistics over the retained window.
+    pub fn summary(&self) -> Summary {
+        summarize(&self.samples)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Stage-level latency samples for successful requests.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_ok: usize,
     pub requests_failed: usize,
-    samples: BTreeMap<&'static str, Vec<f64>>,
+    samples: BTreeMap<&'static str, SampleWindow>,
 }
 
 impl Metrics {
@@ -43,7 +85,7 @@ impl Metrics {
     }
 
     pub fn summary(&self, key: &str) -> Option<Summary> {
-        self.samples.get(key).map(|s| summarize(s))
+        self.samples.get(key).map(|s| s.summary())
     }
 
     pub fn report(&self) -> String {
@@ -52,7 +94,7 @@ impl Metrics {
             self.requests_ok, self.requests_failed
         );
         for (k, v) in &self.samples {
-            let s = summarize(v);
+            let s = v.summary();
             out.push_str(&format!(
                 "  {:<14} mean {:>8.1} ms   p50 {:>8.1} ms   p99 {:>8.1} ms\n",
                 k,
@@ -65,14 +107,138 @@ impl Metrics {
     }
 }
 
+/// Per-worker accounting, updated by the worker thread after each job.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub requests_ok: usize,
+    pub requests_failed: usize,
+    /// wall-clock spent executing (utilization numerator)
+    pub busy_s: f64,
+}
+
+/// Fleet-level metrics shared by all workers of a pool.
+#[derive(Debug)]
+pub struct PoolMetrics {
+    pub stage: Metrics,
+    pub workers: Vec<WorkerStats>,
+    /// submissions rejected by admission control (queue full)
+    pub rejected_full: usize,
+    /// jobs dropped because their deadline passed before execution
+    pub rejected_deadline: usize,
+    /// seconds each executed request waited in the queue
+    queue_wait: SampleWindow,
+    /// queue wait + execution, per executed request
+    e2e_latency: SampleWindow,
+    started: Instant,
+}
+
+impl PoolMetrics {
+    pub fn new(num_workers: usize) -> PoolMetrics {
+        PoolMetrics {
+            stage: Metrics::new(),
+            workers: vec![WorkerStats::default(); num_workers],
+            rejected_full: 0,
+            rejected_deadline: 0,
+            queue_wait: SampleWindow::default(),
+            e2e_latency: SampleWindow::default(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one executed request (success or failure) on `worker`.
+    pub fn record_executed(
+        &mut self,
+        worker: usize,
+        queue_s: f64,
+        exec_s: f64,
+        timings: Option<&StageTimings>,
+    ) {
+        if let Some(w) = self.workers.get_mut(worker) {
+            w.busy_s += exec_s;
+            match timings {
+                Some(_) => w.requests_ok += 1,
+                None => w.requests_failed += 1,
+            }
+        }
+        match timings {
+            Some(t) => self.stage.record_success(t),
+            None => self.stage.record_failure(),
+        }
+        self.queue_wait.push(queue_s);
+        self.e2e_latency.push(queue_s + exec_s);
+    }
+
+    pub fn record_rejected_full(&mut self) {
+        self.rejected_full += 1;
+    }
+
+    /// An expired job dropped at pop time.  It never executed, so it
+    /// counts only toward the pool-level `expired` line — per-worker
+    /// counters track executed requests and must sum to the fleet
+    /// totals.
+    pub fn record_rejected_deadline(&mut self) {
+        self.rejected_deadline += 1;
+    }
+
+    pub fn queue_wait_summary(&self) -> Summary {
+        self.queue_wait.summary()
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        self.e2e_latency.summary()
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Human-readable fleet report.  `queue_depth` / `queue_max_depth`
+    /// are sampled from the live queue by the caller.
+    pub fn report(&self, queue_depth: usize, queue_max_depth: usize) -> String {
+        let up = self.uptime_s().max(1e-9);
+        let mut out = format!(
+            "pool: {} workers, {} ok, {} failed, {} rejected (queue full), {} expired\n",
+            self.workers.len(),
+            self.stage.requests_ok,
+            self.stage.requests_failed,
+            self.rejected_full,
+            self.rejected_deadline,
+        );
+        out.push_str(&format!(
+            "queue: depth {queue_depth}, high-water {queue_max_depth}\n"
+        ));
+        let lat = self.latency_summary();
+        let wait = self.queue_wait_summary();
+        if lat.count > 0 {
+            out.push_str(&format!(
+                "latency: p50 {:>7.1} ms   p95 {:>7.1} ms   p99 {:>7.1} ms   (queue wait p50 {:.1} ms, p95 {:.1} ms)\n",
+                lat.p50 * 1e3,
+                lat.p95 * 1e3,
+                lat.p99 * 1e3,
+                wait.p50 * 1e3,
+                wait.p95 * 1e3,
+            ));
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            out.push_str(&format!(
+                "worker {i}: {:>4} ok, {:>3} failed, busy {:>7.2} s, utilization {:>5.1}%\n",
+                w.requests_ok,
+                w.requests_failed,
+                w.busy_s,
+                w.busy_s / up * 100.0,
+            ));
+        }
+        out.push_str(&self.stage.report());
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn records_and_reports() {
-        let mut m = Metrics::new();
-        let t = StageTimings {
+    fn timings(total: f64) -> StageTimings {
+        StageTimings {
             text_load_s: 0.1,
             text_encode_s: 0.05,
             unet_load_s: 0.5,
@@ -80,8 +246,14 @@ mod tests {
             denoise_steps: 20,
             decoder_load_s: 0.2,
             decode_s: 0.3,
-            total_s: 3.0,
-        };
+            total_s: total,
+        }
+    }
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        let t = timings(3.0);
         m.record_success(&t);
         m.record_success(&t);
         m.record_failure();
@@ -93,5 +265,62 @@ mod tests {
         let per_step = m.summary("per_step").unwrap();
         assert!((per_step.mean - 0.1).abs() < 1e-9);
         assert!(m.report().contains("denoise"));
+    }
+
+    #[test]
+    fn pool_metrics_track_workers_and_rejections() {
+        let mut p = PoolMetrics::new(2);
+        let t = timings(1.0);
+        p.record_executed(0, 0.5, 1.0, Some(&t));
+        p.record_executed(1, 0.2, 2.0, Some(&t));
+        p.record_executed(1, 0.0, 0.5, None); // a failure
+        p.record_rejected_full();
+        p.record_rejected_deadline();
+
+        assert_eq!(p.stage.requests_ok, 2);
+        assert_eq!(p.stage.requests_failed, 1);
+        assert_eq!(p.rejected_full, 1);
+        assert_eq!(p.rejected_deadline, 1);
+        assert_eq!(p.workers[0].requests_ok, 1);
+        assert_eq!(
+            p.workers[0].requests_failed, 0,
+            "deadline drops never executed, so they don't count against a worker"
+        );
+        let executed_failed: usize = p.workers.iter().map(|w| w.requests_failed).sum();
+        assert_eq!(executed_failed, p.stage.requests_failed, "rows sum to the fleet line");
+        assert!((p.workers[1].busy_s - 2.5).abs() < 1e-9);
+        let lat = p.latency_summary();
+        assert_eq!(lat.count, 3);
+        assert!((lat.max - 2.2).abs() < 1e-9);
+
+        let report = p.report(3, 7);
+        assert!(report.contains("2 workers"), "{report}");
+        assert!(report.contains("depth 3, high-water 7"), "{report}");
+        assert!(report.contains("worker 0"), "{report}");
+        assert!(report.contains("utilization"), "{report}");
+        assert!(report.contains("p95"), "{report}");
+    }
+
+    #[test]
+    fn sample_window_is_bounded_and_slides() {
+        let mut w = SampleWindow::default();
+        assert!(w.is_empty());
+        for i in 0..(MAX_SAMPLES + 100) {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), MAX_SAMPLES, "daemon-lifetime memory stays bounded");
+        let s = w.summary();
+        assert_eq!(s.count, MAX_SAMPLES);
+        // the oldest 100 samples were overwritten by the newest 100
+        assert!(s.min >= 100.0, "window slides: min is {}", s.min);
+        assert_eq!(s.max, (MAX_SAMPLES + 99) as f64);
+    }
+
+    #[test]
+    fn out_of_range_worker_ids_are_ignored() {
+        let mut p = PoolMetrics::new(1);
+        p.record_executed(5, 0.0, 1.0, None);
+        assert_eq!(p.stage.requests_failed, 1);
+        assert_eq!(p.workers[0].requests_failed, 0);
     }
 }

@@ -1,10 +1,16 @@
-//! L3 coordinator: the serving loop (FIFO queue, single-device worker,
-//! resident UNet) and per-request metrics.
+//! L3 coordinator: the serving stack — an admission-controlled,
+//! priority/deadline-aware job queue ([`queue`]), a pool of device
+//! workers each owning a pipelined executor ([`pool`]), the fleet
+//! metrics ([`metrics`]), and the front-door [`Server`].
 
 pub mod metrics;
+pub mod pool;
+pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use metrics::Metrics;
-pub use request::{GenerateRequest, GenerateResponse};
+pub use metrics::{Metrics, PoolMetrics, SampleWindow, WorkerStats};
+pub use pool::{ResponseReceiver, WorkItem, WorkerExecutor, WorkerPool};
+pub use queue::{AdmissionError, Job, JobQueue, Priority};
+pub use request::{GenerateRequest, GenerateResponse, SubmitOptions};
 pub use server::Server;

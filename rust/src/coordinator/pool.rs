@@ -1,0 +1,350 @@
+//! The multi-worker scheduler: N device workers draining one
+//! admission-controlled job queue.
+//!
+//! PJRT handles are not `Send`, so each worker thread *constructs* its
+//! own executor via the factory it is handed (engine, residency cache
+//! and all) and owns it for the pool's lifetime — the fleet-of-phones
+//! model: one worker ~= one device, each with its own memory budget.
+//! Only the queue and the metrics are shared.
+//!
+//! The pool is generic over [`WorkerExecutor`] so scheduling behaviour
+//! (fairness, admission, deadline drops, per-request overrides) is
+//! testable with mock executors and no device at all.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::PoolMetrics;
+use crate::coordinator::queue::{AdmissionError, JobQueue, Priority};
+use crate::coordinator::request::{GenerateRequest, GenerateResponse};
+use crate::error::{Error, Result};
+use crate::pipeline::GenerateResult;
+
+/// What a pool worker runs for each job.  Implemented by the pipelined
+/// executor wrapper in the server, and by mocks in tests.
+pub trait WorkerExecutor {
+    fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult>;
+}
+
+/// Channel on which a submitted request's response arrives.
+pub type ResponseReceiver = mpsc::Receiver<Result<GenerateResponse>>;
+
+/// A queued request plus the channel its response goes to.
+pub struct WorkItem {
+    pub req: GenerateRequest,
+    pub reply: mpsc::Sender<Result<GenerateResponse>>,
+}
+
+/// Handle to a running worker pool.
+pub struct WorkerPool {
+    queue: Arc<JobQueue<WorkItem>>,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Start `num_workers` workers (min 1).  `factory(worker_id)` runs
+    /// *on the worker thread* to build its executor; any factory error
+    /// aborts startup.
+    pub fn start<E, F>(num_workers: usize, queue_capacity: usize, factory: F) -> Result<WorkerPool>
+    where
+        E: WorkerExecutor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        let n = num_workers.max(1);
+        let queue: Arc<JobQueue<WorkItem>> = Arc::new(JobQueue::new(queue_capacity));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::new(n)));
+        let factory = Arc::new(factory);
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(n);
+        for wid in 0..n {
+            let worker_queue = Arc::clone(&queue);
+            let worker_metrics = Arc::clone(&metrics);
+            let worker_factory = Arc::clone(&factory);
+            let worker_ready = ready_tx.clone();
+            let spawned = thread::Builder::new()
+                .name(format!("md-worker-{wid}"))
+                .spawn(move || {
+                    let executor = match worker_factory(wid) {
+                        Ok(e) => {
+                            let _ = worker_ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = worker_ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    drop(worker_ready);
+                    worker_loop(wid, executor, &worker_queue, &worker_metrics);
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // unblock and reap the workers already running
+                    queue.close();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Runtime(format!("spawn worker {wid}: {e}")));
+                }
+            }
+        }
+        drop(ready_tx);
+
+        let pool = WorkerPool { queue, metrics, handles };
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    // pool drop closes the queue and joins the healthy workers
+                    return Err(e);
+                }
+                Err(_) => {
+                    return Err(Error::Runtime("worker died during startup".into()));
+                }
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Admit a request; returns the receiver its response will arrive
+    /// on, or an admission error when the queue is full/closed.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseReceiver> {
+        let (tx, rx) = mpsc::channel();
+        let absolute = deadline.map(|d| Instant::now() + d);
+        match self.queue.push(WorkItem { req, reply: tx }, priority, absolute) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                if matches!(e, AdmissionError::Full { .. }) {
+                    self.metrics.lock().unwrap().record_rejected_full();
+                }
+                Err(Error::Queue(e.to_string()))
+            }
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Fleet report: counters, queue depth, latency percentiles,
+    /// per-worker utilization, stage breakdown.
+    pub fn metrics_report(&self) -> String {
+        self.metrics
+            .lock()
+            .unwrap()
+            .report(self.queue.depth(), self.queue.max_depth())
+    }
+
+    /// Read-only access to the shared metrics (tests, dashboards).
+    pub fn with_metrics<R>(&self, f: impl FnOnce(&PoolMetrics) -> R) -> R {
+        f(&self.metrics.lock().unwrap())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<E: WorkerExecutor>(
+    wid: usize,
+    mut executor: E,
+    queue: &JobQueue<WorkItem>,
+    metrics: &Mutex<PoolMetrics>,
+) {
+    while let Some(job) = queue.pop() {
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        let WorkItem { req, reply } = job.item;
+
+        // deadline-aware: don't burn a device slot on an expired request
+        if let Some(d) = job.deadline {
+            if Instant::now() > d {
+                metrics.lock().unwrap().record_rejected_deadline();
+                let _ = reply.send(Err(Error::Queue(format!(
+                    "request {} expired after {queue_s:.3}s in queue",
+                    req.id
+                ))));
+                continue;
+            }
+        }
+
+        let t0 = Instant::now();
+        let result = executor.execute(&req);
+        let exec_s = t0.elapsed().as_secs_f64();
+        let resp = match result {
+            Ok(r) => {
+                metrics
+                    .lock()
+                    .unwrap()
+                    .record_executed(wid, queue_s, exec_s, Some(&r.timings));
+                Ok(GenerateResponse {
+                    id: req.id,
+                    image: r.image,
+                    image_size: r.image_size,
+                    latent: r.latent,
+                    timings: r.timings,
+                    peak_memory: r.peak_memory,
+                    queue_s,
+                    worker_id: wid,
+                })
+            }
+            Err(e) => {
+                metrics.lock().unwrap().record_executed(wid, queue_s, exec_s, None);
+                Err(e)
+            }
+        };
+        let _ = reply.send(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::StageTimings;
+
+    /// Mock executor: sleeps, then succeeds with the request's step
+    /// count echoed into the timings.
+    struct SleepExec {
+        sleep: Duration,
+        default_steps: usize,
+    }
+
+    impl WorkerExecutor for SleepExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            thread::sleep(self.sleep);
+            let steps = req.num_steps.unwrap_or(self.default_steps);
+            Ok(GenerateResult {
+                image: vec![0.0; 4],
+                image_size: 2,
+                latent: vec![req.seed as f32],
+                timings: StageTimings {
+                    denoise_steps: steps,
+                    total_s: self.sleep.as_secs_f64(),
+                    ..Default::default()
+                },
+                peak_memory: 1,
+            })
+        }
+    }
+
+    fn sleep_factory(
+        ms: u64,
+        default_steps: usize,
+    ) -> impl Fn(usize) -> Result<SleepExec> + Send + Sync + 'static {
+        move |_| Ok(SleepExec { sleep: Duration::from_millis(ms), default_steps })
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let pool = WorkerPool::start(3, 32, sleep_factory(5, 20)).unwrap();
+        let receivers: Vec<_> = (0..9)
+            .map(|i| {
+                let req = GenerateRequest::new(i, "p", i);
+                pool.submit(req, Priority::Normal, None).unwrap()
+            })
+            .collect();
+        let mut workers_seen = std::collections::BTreeSet::new();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert!(resp.worker_id < 3);
+            workers_seen.insert(resp.worker_id);
+        }
+        assert!(!workers_seen.is_empty());
+        let report = pool.metrics_report();
+        assert!(report.contains("9 ok"), "{report}");
+    }
+
+    #[test]
+    fn num_steps_override_reaches_the_executor() {
+        let pool = WorkerPool::start(1, 8, sleep_factory(1, 20)).unwrap();
+        let mut req = GenerateRequest::new(1, "p", 1);
+        req.num_steps = Some(4);
+        let rx = pool.submit(req, Priority::Normal, None).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().timings.denoise_steps, 4);
+        let rx = pool
+            .submit(GenerateRequest::new(2, "p", 2), Priority::Normal, None)
+            .unwrap();
+        assert_eq!(
+            rx.recv().unwrap().unwrap().timings.denoise_steps,
+            20,
+            "no override -> configured default"
+        );
+    }
+
+    #[test]
+    fn admission_rejection_is_counted() {
+        // one slow worker; capacity-1 queue fills while it sleeps
+        let pool = WorkerPool::start(1, 1, sleep_factory(150, 20)).unwrap();
+        let rx0 = pool
+            .submit(GenerateRequest::new(0, "p", 0), Priority::Normal, None)
+            .unwrap();
+        // give the worker time to pop the first job and start sleeping
+        thread::sleep(Duration::from_millis(50));
+        let _rx1 = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let err = pool
+            .submit(GenerateRequest::new(2, "p", 2), Priority::Normal, None)
+            .expect_err("queue full");
+        assert!(err.to_string().contains("full"), "{err}");
+        pool.with_metrics(|m| assert_eq!(m.rejected_full, 1));
+        rx0.recv().unwrap().unwrap();
+    }
+
+    #[test]
+    fn expired_deadlines_are_dropped_not_executed() {
+        let pool = WorkerPool::start(1, 8, sleep_factory(100, 20)).unwrap();
+        // first job occupies the worker...
+        let rx0 = pool
+            .submit(GenerateRequest::new(0, "p", 0), Priority::Normal, None)
+            .unwrap();
+        // let the worker pop the first job before queuing the second,
+        // so the deadline is long past when the second is popped
+        thread::sleep(Duration::from_millis(30));
+        let rx1 = pool
+            .submit(
+                GenerateRequest::new(1, "p", 1),
+                Priority::Normal,
+                Some(Duration::from_millis(1)),
+            )
+            .unwrap();
+        rx0.recv().unwrap().unwrap();
+        let err = rx1.recv().unwrap().expect_err("expired");
+        assert!(err.to_string().contains("expired"), "{err}");
+        pool.with_metrics(|m| {
+            assert_eq!(m.rejected_deadline, 1);
+            assert_eq!(m.stage.requests_ok, 1);
+        });
+    }
+
+    #[test]
+    fn factory_failure_aborts_startup() {
+        let result = WorkerPool::start(2, 8, |wid| {
+            if wid == 1 {
+                Err(Error::Runtime("no device".into()))
+            } else {
+                Ok(SleepExec { sleep: Duration::from_millis(1), default_steps: 1 })
+            }
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! The admission queue in front of the worker pool: bounded depth,
+//! priority classes, deadline awareness.
+//!
+//! Policy:
+//!
+//! * **Admission control** — `push` never blocks; a full queue rejects
+//!   the request immediately ([`AdmissionError::Full`]) so callers can
+//!   shed load instead of building unbounded backlog.
+//! * **Priority classes** — [`Priority::High`] drains before
+//!   [`Priority::Normal`] before [`Priority::Low`].
+//! * **Within a class** — earliest *effective* deadline first.  A
+//!   request without a deadline is scheduled as if it were due
+//!   [`FALLBACK_DEADLINE`] after submission, so deadline-less
+//!   requests keep FIFO order among themselves, age ahead of
+//!   later-arriving lax-deadline traffic, and can never be starved by
+//!   a sustained stream of deadline-bearing submissions.
+//!
+//! The queue is generic over the job payload so scheduling policy is
+//! testable without a PJRT device or a real executor.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduling deadline assumed for requests submitted without one:
+/// within its priority class a deadline-less job competes as if due
+/// this long after submission (EDF with aging — prevents starvation
+/// by deadline-bearing traffic while preserving FIFO among
+/// deadline-less jobs).
+pub const FALLBACK_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Scheduling class, drained in declaration order.
+///
+/// NOTE: `Ord` follows *drain order*, not urgency magnitude:
+/// `High < Normal < Low`, so the queue's `min_by` pop picks `High`
+/// first.  Don't use `max()`/ascending sorts expecting "most urgent
+/// last" — compare against the variants explicitly instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse a CLI/JSON priority name.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// Queue at capacity; caller should shed or retry later.
+    Full { capacity: usize },
+    /// Queue shut down; no further work is accepted.
+    Closed,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Full { capacity } => {
+                write!(f, "queue full (capacity {capacity})")
+            }
+            AdmissionError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+/// A scheduled unit of work.
+#[derive(Debug)]
+pub struct Job<T> {
+    pub priority: Priority,
+    /// absolute wall-clock deadline; expired jobs are failed by the pool
+    pub deadline: Option<Instant>,
+    pub enqueued: Instant,
+    /// submission order within the queue (FIFO tiebreak)
+    seq: u64,
+    pub item: T,
+}
+
+impl<T> Job<T> {
+    /// The deadline this job competes with inside its priority class.
+    fn effective_deadline(&self) -> Instant {
+        self.deadline.unwrap_or(self.enqueued + FALLBACK_DEADLINE)
+    }
+}
+
+struct Inner<T> {
+    jobs: VecDeque<Job<T>>,
+    next_seq: u64,
+    closed: bool,
+    /// high-water mark of the queue depth (metrics)
+    max_depth: usize,
+}
+
+/// Bounded, priority/deadline-aware MPMC job queue.
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(capacity: usize) -> JobQueue<T> {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                jobs: VecDeque::new(),
+                next_seq: 0,
+                closed: false,
+                max_depth: 0,
+            }),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit a job or reject it without blocking.
+    pub fn push(
+        &self,
+        item: T,
+        priority: Priority,
+        deadline: Option<Instant>,
+    ) -> Result<(), AdmissionError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(AdmissionError::Closed);
+        }
+        if inner.jobs.len() >= self.capacity {
+            return Err(AdmissionError::Full { capacity: self.capacity });
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.jobs.push_back(Job {
+            priority,
+            deadline,
+            enqueued: Instant::now(),
+            seq,
+            item,
+        });
+        let depth = inner.jobs.len();
+        inner.max_depth = inner.max_depth.max(depth);
+        drop(inner);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Index of the job a worker should run next: highest priority
+    /// class, then earliest effective deadline, then FIFO.  `None`
+    /// when empty.
+    fn next_index(inner: &Inner<T>) -> Option<usize> {
+        inner
+            .jobs
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.priority
+                    .cmp(&b.priority)
+                    .then_with(|| a.effective_deadline().cmp(&b.effective_deadline()))
+                    .then_with(|| a.seq.cmp(&b.seq))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Block until a job is available; `None` once closed and drained.
+    pub fn pop(&self) -> Option<Job<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(i) = Self::next_index(&inner) {
+                return inner.jobs.remove(i);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.available.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (tests, drain-on-shutdown).
+    pub fn try_pop(&self) -> Option<Job<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::next_index(&inner).and_then(|i| inner.jobs.remove(i))
+    }
+
+    /// Current number of queued (not yet running) jobs.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    /// Highest queue depth observed since construction.
+    pub fn max_depth(&self) -> usize {
+        self.inner.lock().unwrap().max_depth
+    }
+
+    /// Stop admitting work and wake all waiting workers; queued jobs
+    /// still drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_a_priority_class() {
+        let q: JobQueue<u32> = JobQueue::new(8);
+        for i in 0..5 {
+            q.push(i, Priority::Normal, None).unwrap();
+        }
+        let order: Vec<u32> = (0..5).map(|_| q.try_pop().unwrap().item).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn priority_classes_drain_in_order() {
+        let q: JobQueue<&'static str> = JobQueue::new(8);
+        q.push("low", Priority::Low, None).unwrap();
+        q.push("normal-1", Priority::Normal, None).unwrap();
+        q.push("high", Priority::High, None).unwrap();
+        q.push("normal-2", Priority::Normal, None).unwrap();
+        let order: Vec<&str> = (0..4).map(|_| q.try_pop().unwrap().item).collect();
+        assert_eq!(order, vec!["high", "normal-1", "normal-2", "low"]);
+    }
+
+    #[test]
+    fn earlier_effective_deadline_wins_within_a_class() {
+        let q: JobQueue<&'static str> = JobQueue::new(8);
+        let now = Instant::now();
+        // effective deadlines: late = now+600s, no-deadline = enqueue
+        // time + FALLBACK_DEADLINE (60s), soon = now+1s
+        q.push("late", Priority::Normal, Some(now + Duration::from_secs(600)))
+            .unwrap();
+        q.push("no-deadline", Priority::Normal, None).unwrap();
+        q.push("soon", Priority::Normal, Some(now + Duration::from_secs(1)))
+            .unwrap();
+        assert_eq!(q.try_pop().unwrap().item, "soon");
+        assert_eq!(q.try_pop().unwrap().item, "no-deadline");
+        assert_eq!(q.try_pop().unwrap().item, "late");
+    }
+
+    #[test]
+    fn deadline_traffic_cannot_starve_deadline_less_jobs() {
+        let q: JobQueue<u32> = JobQueue::new(64);
+        let now = Instant::now();
+        q.push(0, Priority::Normal, None).unwrap();
+        // a sustained stream of lax-deadline submissions arriving later
+        for i in 1..=10 {
+            q.push(i, Priority::Normal, Some(now + Duration::from_secs(600)))
+                .unwrap();
+        }
+        // the deadline-less job ages ahead of all of them
+        assert_eq!(q.try_pop().unwrap().item, 0);
+    }
+
+    #[test]
+    fn admission_rejects_when_full() {
+        let q: JobQueue<u32> = JobQueue::new(2);
+        q.push(1, Priority::Normal, None).unwrap();
+        q.push(2, Priority::Normal, None).unwrap();
+        let e = q.push(3, Priority::High, None).unwrap_err();
+        assert_eq!(e, AdmissionError::Full { capacity: 2 });
+        // draining makes room again
+        q.try_pop().unwrap();
+        q.push(3, Priority::High, None).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.max_depth(), 2);
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains() {
+        let q: JobQueue<u32> = JobQueue::new(4);
+        q.push(1, Priority::Normal, None).unwrap();
+        q.close();
+        assert_eq!(q.push(2, Priority::Normal, None).unwrap_err(), AdmissionError::Closed);
+        assert_eq!(q.pop().unwrap().item, 1);
+        assert!(q.pop().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        use std::sync::Arc;
+        let q: Arc<JobQueue<u32>> = Arc::new(JobQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop().map(|j| j.item));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42, Priority::Normal, None).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn priority_names_round_trip() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        // Ord is drain order: High pops first via min_by
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+    }
+}

@@ -1,6 +1,9 @@
-//! Request/response types for the serving loop.
+//! Request/response types for the serving stack.
 
-use crate::pipeline::StageTimings;
+use std::time::Duration;
+
+use crate::coordinator::queue::Priority;
+use crate::pipeline::{ExecOverrides, StageTimings};
 
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
@@ -9,14 +12,54 @@ pub struct GenerateRequest {
     pub seed: u64,
     /// override the configured step count (distilled schedules)
     pub num_steps: Option<usize>,
+    /// override the configured UNet variant ("base" | "mobile")
+    pub variant: Option<String>,
+    /// override the configured guidance scale
+    pub guidance_scale: Option<f64>,
 }
 
 impl GenerateRequest {
     pub fn new(id: u64, prompt: &str, seed: u64) -> GenerateRequest {
-        GenerateRequest { id, prompt: prompt.to_string(), seed, num_steps: None }
+        GenerateRequest {
+            id,
+            prompt: prompt.to_string(),
+            seed,
+            num_steps: None,
+            variant: None,
+            guidance_scale: None,
+        }
+    }
+
+    /// The per-request executor overrides this request carries.
+    pub fn overrides(&self) -> ExecOverrides {
+        ExecOverrides {
+            num_steps: self.num_steps,
+            variant: self.variant.clone(),
+            guidance_scale: self.guidance_scale,
+        }
     }
 }
 
+/// Scheduling directives attached to a submission (not part of the
+/// model inputs): priority class, deadline, plus the per-request
+/// execution overrides.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// drop the request if it has not started within this budget
+    pub deadline: Option<Duration>,
+    pub num_steps: Option<usize>,
+    pub variant: Option<String>,
+    pub guidance_scale: Option<f64>,
+}
+
+impl SubmitOptions {
+    pub fn with_priority(priority: Priority) -> SubmitOptions {
+        SubmitOptions { priority, ..Default::default() }
+    }
+}
+
+#[derive(Debug)]
 pub struct GenerateResponse {
     pub id: u64,
     pub image: Vec<f32>,
@@ -26,6 +69,8 @@ pub struct GenerateResponse {
     pub peak_memory: usize,
     /// wall-clock the request waited in the queue
     pub queue_s: f64,
+    /// pool worker that executed the request
+    pub worker_id: usize,
 }
 
 #[cfg(test)]
@@ -37,5 +82,27 @@ mod tests {
         let r = GenerateRequest::new(1, "hi", 42);
         assert_eq!(r.id, 1);
         assert!(r.num_steps.is_none());
+        assert!(r.variant.is_none());
+        let ov = r.overrides();
+        assert!(ov.num_steps.is_none() && ov.guidance_scale.is_none());
+    }
+
+    #[test]
+    fn overrides_flow_through() {
+        let mut r = GenerateRequest::new(2, "hi", 1);
+        r.num_steps = Some(4);
+        r.variant = Some("base".into());
+        let ov = r.overrides();
+        assert_eq!(ov.num_steps, Some(4));
+        assert_eq!(ov.variant.as_deref(), Some("base"));
+    }
+
+    #[test]
+    fn submit_options_default_to_normal_priority() {
+        let o = SubmitOptions::default();
+        assert_eq!(o.priority, Priority::Normal);
+        assert!(o.deadline.is_none());
+        let h = SubmitOptions::with_priority(Priority::High);
+        assert_eq!(h.priority, Priority::High);
     }
 }

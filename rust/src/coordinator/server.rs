@@ -1,141 +1,109 @@
-//! The serving loop: a FIFO request queue in front of one pipelined
-//! executor.
+//! The serving front door: admission queue + worker pool + pipelined
+//! executors.
 //!
-//! A phone is a single-device server: concurrency 1, strict FIFO, with
-//! the UNet kept resident across requests (the paper's app behaviour).
-//! PJRT handles are not Send, so the executor lives on a dedicated
-//! worker thread that owns the engine; callers talk to it over
-//! channels.
-
-use std::sync::mpsc;
-use std::thread;
-use std::time::Instant;
+//! `Server::start` parses the artifact manifest once (fail-fast on the
+//! caller thread), then brings up a [`WorkerPool`] of
+//! `config.num_workers` workers.  Each worker thread constructs its own
+//! [`PipelinedExecutor`] — PJRT handles are not `Send`, so engine,
+//! residency cache and memory budget are per worker, modelling a fleet
+//! of single-device phones behind one queue.
+//!
+//! Requests carry per-submission scheduling directives (priority,
+//! deadline) and execution overrides (step count, variant, guidance)
+//! that are honored end-to-end: `SubmitOptions` -> `GenerateRequest` ->
+//! `ExecOverrides` -> the denoise loop.
 
 use crate::config::AppConfig;
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{GenerateRequest, GenerateResponse};
+use crate::coordinator::pool::{ResponseReceiver, WorkerExecutor, WorkerPool};
+use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
-use crate::pipeline::{ExecOptions, PipelinedExecutor};
+use crate::pipeline::{GenerateResult, PipelinedExecutor};
 use crate::runtime::Manifest;
 
-enum Msg {
-    Generate(GenerateRequest, Instant, mpsc::Sender<Result<GenerateResponse>>),
-    Report(mpsc::Sender<String>),
-    Shutdown,
+/// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
+/// applying per-request overrides against the configured defaults.
+struct PipelineWorker {
+    executor: PipelinedExecutor,
+    default_variant: String,
+}
+
+impl WorkerExecutor for PipelineWorker {
+    fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+        self.executor
+            .generate_with(&req.prompt, req.seed, &self.default_variant, &req.overrides())
+    }
 }
 
 pub struct Server {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<thread::JoinHandle<()>>,
+    pool: WorkerPool,
     next_id: u64,
 }
 
 impl Server {
-    /// Start the worker; fails fast if the artifacts are unreadable.
+    /// Start the worker pool; fails fast if the artifacts are
+    /// unreadable or any worker cannot construct its executor.
     pub fn start(config: &AppConfig) -> Result<Server> {
         // parse the manifest on the caller thread for early errors
         let manifest = Manifest::load(&config.artifacts_dir)?;
-        let options: ExecOptions = config.exec_options();
+        let options = config.exec_options();
         let variant = config.variant.clone();
 
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = thread::Builder::new()
-            .name("md-worker".into())
-            .spawn(move || worker(manifest, options, variant, rx, ready_tx))
-            .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Runtime("worker died during startup".into()))??;
-        Ok(Server { tx, handle: Some(handle), next_id: 0 })
+        let pool = WorkerPool::start(config.num_workers, config.queue_depth, move |_wid| {
+            let executor = PipelinedExecutor::new(manifest.clone(), options.clone())?;
+            Ok(PipelineWorker { executor, default_variant: variant.clone() })
+        })?;
+        Ok(Server { pool, next_id: 0 })
     }
 
-    /// Enqueue a generation; returns a receiver for the response.
-    pub fn submit(
+    /// Enqueue a generation with default scheduling (normal priority,
+    /// no deadline, configured step count).
+    pub fn submit(&mut self, prompt: &str, seed: u64) -> Result<ResponseReceiver> {
+        self.submit_with(prompt, seed, SubmitOptions::default())
+    }
+
+    /// Enqueue a generation with explicit scheduling directives and
+    /// per-request overrides.  Admission control may reject it
+    /// immediately (queue full).
+    pub fn submit_with(
         &mut self,
         prompt: &str,
         seed: u64,
-    ) -> mpsc::Receiver<Result<GenerateResponse>> {
+        opts: SubmitOptions,
+    ) -> Result<ResponseReceiver> {
         self.next_id += 1;
-        let req = GenerateRequest::new(self.next_id, prompt, seed);
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Generate(req, Instant::now(), tx));
-        rx
+        let mut req = GenerateRequest::new(self.next_id, prompt, seed);
+        req.num_steps = opts.num_steps;
+        req.variant = opts.variant.clone();
+        req.guidance_scale = opts.guidance_scale;
+        self.pool.submit(req, opts.priority, opts.deadline)
     }
 
     /// Blocking convenience wrapper.
     pub fn generate(&mut self, prompt: &str, seed: u64) -> Result<GenerateResponse> {
-        self.submit(prompt, seed)
+        self.generate_with(prompt, seed, SubmitOptions::default())
+    }
+
+    /// Blocking convenience wrapper with scheduling options.
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        seed: u64,
+        opts: SubmitOptions,
+    ) -> Result<GenerateResponse> {
+        self.submit_with(prompt, seed, opts)?
             .recv()
             .map_err(|_| Error::Runtime("worker dropped request".into()))?
     }
 
+    pub fn num_workers(&self) -> usize {
+        self.pool.num_workers()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pool.queue_depth()
+    }
+
     pub fn metrics_report(&self) -> Result<String> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Report(tx))
-            .map_err(|_| Error::Runtime("worker gone".into()))?;
-        rx.recv().map_err(|_| Error::Runtime("worker gone".into()))
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker(
-    manifest: Manifest,
-    options: ExecOptions,
-    variant: String,
-    rx: mpsc::Receiver<Msg>,
-    ready_tx: mpsc::Sender<Result<()>>,
-) {
-    let mut metrics = Metrics::new();
-    let mut executor = match PipelinedExecutor::new(manifest, options) {
-        Ok(e) => {
-            let _ = ready_tx.send(Ok(()));
-            e
-        }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-    };
-
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Generate(req, enqueued, reply) => {
-                let queue_s = enqueued.elapsed().as_secs_f64();
-                let result = executor.generate(&req.prompt, req.seed, &variant);
-                let resp = match result {
-                    Ok(r) => {
-                        metrics.record_success(&r.timings);
-                        Ok(GenerateResponse {
-                            id: req.id,
-                            image: r.image,
-                            image_size: r.image_size,
-                            latent: r.latent,
-                            timings: r.timings,
-                            peak_memory: r.peak_memory,
-                            queue_s,
-                        })
-                    }
-                    Err(e) => {
-                        metrics.record_failure();
-                        Err(e)
-                    }
-                };
-                let _ = reply.send(resp);
-            }
-            Msg::Report(reply) => {
-                let _ = reply.send(metrics.report());
-            }
-            Msg::Shutdown => break,
-        }
+        Ok(self.pool.metrics_report())
     }
 }

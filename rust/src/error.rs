@@ -1,26 +1,37 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: no proc-macro deps offline).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
     Io(String),
-    #[error("graph error: {0}")]
     Graph(String),
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("weights error: {0}")]
     Weights(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("pipeline error: {0}")]
     Pipeline(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("xla error: {0}")]
+    Queue(String),
     Xla(String),
 }
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Weights(m) => write!(f, "weights error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Queue(m) => write!(f, "queue error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {

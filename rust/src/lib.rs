@@ -4,10 +4,13 @@
 //! (Choi et al., ICML 2023 Workshop on Challenges in Deployable
 //! Generative AI) as a three-layer Rust + JAX + Pallas serving stack:
 //!
-//! * **L3 (this crate)** — the coordinator: request serving, the paper's
-//!   pipelined memory-constrained execution (Sec. 3.3), a TFLite
-//!   GPU-delegate simulator with the paper's Sec. 3.1 support rules and
-//!   an Adreno-740-class cost model, the graph rewrite passes (FC->Conv,
+//! * **L3 (this crate)** — the coordinator: a multi-worker serving
+//!   stack (admission-controlled priority/deadline queue in front of a
+//!   pool of device workers, each owning a pipelined executor and a
+//!   component-residency cache), the paper's pipelined
+//!   memory-constrained execution (Sec. 3.3), a TFLite GPU-delegate
+//!   simulator with the paper's Sec. 3.1 support rules and an
+//!   Adreno-740-class cost model, the graph rewrite passes (FC->Conv,
 //!   conv serialization, broadcast-free group norm, stable GELU), and
 //!   W8A16 weight storage (Sec. 3.4).
 //! * **L2 (python/compile, build-time only)** — a from-scratch latent
@@ -16,8 +19,8 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's
 //!   rewritten hot-spots, validated against pure-jnp oracles.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See DESIGN.md (repo root) for the serving architecture: request
+//! lifecycle, scheduling policy, and the residency subsystem.
 
 pub mod config;
 pub mod coordinator;

@@ -11,7 +11,7 @@ use std::io::BufRead;
 use std::path::Path;
 
 use mobile_diffusion::config::AppConfig;
-use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::coordinator::{GenerateResponse, ResponseReceiver, Server};
 use mobile_diffusion::delegate::{
     graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740,
 };
@@ -29,7 +29,8 @@ COMMANDS:
              [--variant base|mobile] [--weights fp32|int8|int8_pruned]
              [--budget-mb X] [--no-pipeline] [--out FILE.png]
              [--artifacts DIR] [--guidance X] [--config FILE.json]
-  serve      prompts from stdin, metrics on EOF (same flags)
+  serve      prompts from stdin, metrics on EOF (same flags, plus
+             [--workers N] [--queue-depth N] for the worker pool)
   analyze    delegate report           <graph.json>
   passes     pass-pipeline report      <graph.json>
   info       manifest summary          [--artifacts DIR]
@@ -85,22 +86,52 @@ fn cmd_serve(args: &[String]) -> R {
     let mut cfg = AppConfig::default();
     cfg.apply_args(args)?;
     let mut server = Server::start(&cfg)?;
-    eprintln!("ready: one prompt per line on stdin");
+    eprintln!(
+        "ready: one prompt per line on stdin ({} workers, queue depth {})",
+        server.num_workers(),
+        cfg.queue_depth
+    );
     let stdin = std::io::stdin();
     let mut seed = cfg.seed;
+    // submit without blocking so the pool runs prompts concurrently;
+    // admission control sheds load when the queue is full, and
+    // completed responses are printed (and dropped) as they land
+    let mut pending: Vec<ResponseReceiver> = Vec::new();
+    let print_response = |r: mobile_diffusion::Result<GenerateResponse>| match r {
+        Ok(resp) => println!(
+            "#{} ok: {:.2}s total, {:.2}s queued, worker {}, peak {:.1} MB",
+            resp.id, resp.timings.total_s, resp.queue_s, resp.worker_id,
+            resp.peak_memory as f64 / 1e6
+        ),
+        Err(e) => println!("error: {e}"),
+    };
     for line in stdin.lock().lines() {
         let prompt = line.map_err(mobile_diffusion::Error::from)?;
         if prompt.trim().is_empty() {
             continue;
         }
         seed += 1;
-        match server.generate(&prompt, seed) {
-            Ok(resp) => println!(
-                "#{} ok: {:.2}s total, {:.2}s queued, peak {:.1} MB",
-                resp.id, resp.timings.total_s, resp.queue_s,
-                resp.peak_memory as f64 / 1e6
-            ),
-            Err(e) => println!("error: {e}"),
+        match server.submit(&prompt, seed) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("rejected: {e}"),
+        }
+        // drain whatever has finished so far, keeping memory bounded
+        pending.retain(|rx| match rx.try_recv() {
+            Ok(r) => {
+                print_response(r);
+                false
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => true,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                println!("error: worker dropped request");
+                false
+            }
+        });
+    }
+    for rx in pending {
+        match rx.recv() {
+            Ok(r) => print_response(r),
+            Err(_) => println!("error: worker dropped request"),
         }
     }
     println!("{}", server.metrics_report()?);

@@ -2,8 +2,8 @@
 //!
 //! Text-to-image under a device memory budget:
 //!
-//! 1. load the denoising UNet (resident for the whole request);
-//! 2. load the text encoder, encode cond + uncond prompts, **evict it**;
+//! 1. acquire the denoising UNet (cached across requests);
+//! 2. acquire the text encoder, encode cond + uncond prompts, evict it;
 //! 3. start the decoder prefetch on a child thread and run the DDIM
 //!    denoise loop, polling the prefetch between steps;
 //! 4. finalize the decoder (device compile + upload), decode, evict.
@@ -11,16 +11,28 @@
 //! Peak memory ~= unet + max(text_encoder, decoder) instead of the sum
 //! of all three (the non-pipelined baseline, also implemented here for
 //! the Fig. 4 / ablation comparison).
+//!
+//! All load/evict/ledger policy lives in
+//! [`crate::pipeline::residency::ResidencyManager`]; this module is
+//! pure stage orchestration.  Per-request overrides (step count,
+//! variant, guidance) arrive via [`ExecOverrides`] so a serving layer
+//! can honor them end-to-end without rebuilding the executor.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::pipeline::loader::Prefetcher;
-use crate::pipeline::memory::MemoryLedger;
+use crate::pipeline::residency::{ResidencyManager, Retention};
+use crate::pipeline::trace::MemoryTrace;
 use crate::runtime::{ActInput, Component, Engine, Manifest};
 use crate::scheduler::{guide, Ddim};
 use crate::tokenizer;
 use crate::util::rng::Rng;
+
+/// A cached component handle (reference-counted: the residency cache
+/// and in-flight stages share ownership within a worker thread).
+pub type ResidentComponent = Rc<Component>;
 
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -44,6 +56,16 @@ impl Default for ExecOptions {
             guidance_scale: 7.5,
         }
     }
+}
+
+/// Per-request overrides of the configured [`ExecOptions`] defaults —
+/// a request on a distilled schedule can run 4 steps while the server
+/// default stays 20.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOverrides {
+    pub num_steps: Option<usize>,
+    pub variant: Option<String>,
+    pub guidance_scale: Option<f64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -71,25 +93,15 @@ pub struct GenerateResult {
 pub struct PipelinedExecutor {
     pub engine: Engine,
     pub manifest: Manifest,
-    pub ledger: MemoryLedger,
+    pub residency: ResidencyManager<ResidentComponent>,
     pub options: ExecOptions,
-    /// resident UNet (kept across requests, like the paper's app)
-    unet: Option<Component>,
-    unet_key: String,
 }
 
 impl PipelinedExecutor {
     pub fn new(manifest: Manifest, options: ExecOptions) -> Result<PipelinedExecutor> {
         let engine = Engine::new()?;
-        let ledger = MemoryLedger::new(options.memory_budget);
-        Ok(PipelinedExecutor {
-            engine,
-            manifest,
-            ledger,
-            options,
-            unet: None,
-            unet_key: String::new(),
-        })
+        let residency = ResidencyManager::new(options.memory_budget);
+        Ok(PipelinedExecutor { engine, manifest, residency, options })
     }
 
     /// Resident-bytes of a component at a weights tag, from the manifest
@@ -102,79 +114,110 @@ impl PipelinedExecutor {
             .ok_or_else(|| Error::Manifest(format!("{comp}: no weights {tag}")))
     }
 
-    fn load_component(&self, name: &str, tag: &str) -> Result<Component> {
-        let comp = self.manifest.component(name)?;
-        Component::load(&self.engine, &self.manifest, comp, tag)
+    /// Pin `(name, tag)` through the residency layer, loading on miss.
+    fn acquire_component(&mut self, name: &str, tag: &str) -> Result<ResidentComponent> {
+        let bytes = self.stored_bytes(name, tag)?;
+        let PipelinedExecutor { engine, manifest, residency, .. } = self;
+        residency.acquire(name, tag, bytes, || {
+            let comp = manifest.component(name)?;
+            Component::load(engine, manifest, comp, tag).map(Rc::new)
+        })
     }
 
-    /// Ensure the UNet is loaded (variant per options), charging the ledger.
+    /// Warm the UNet cache (variant per options) without holding a pin.
     pub fn ensure_unet(&mut self, variant: &str) -> Result<()> {
-        let key = format!("unet_{variant}:{}", self.options.unet_weights);
-        if self.unet.is_some() && self.unet_key == key {
-            return Ok(());
-        }
-        if self.unet.take().is_some() {
-            self.ledger.free("unet")?;
-        }
         let name = format!("unet_{variant}");
-        let bytes = self.stored_bytes(&name, &self.options.unet_weights)?;
-        self.ledger.alloc("unet", bytes)?;
-        match self.load_component(&name, &self.options.unet_weights) {
-            Ok(c) => {
-                self.unet = Some(c);
-                self.unet_key = key;
-                Ok(())
-            }
-            Err(e) => {
-                let _ = self.ledger.free("unet");
-                Err(e)
-            }
-        }
+        let tag = self.options.unet_weights.clone();
+        self.acquire_component(&name, &tag)?;
+        self.residency.release(&name, &tag, Retention::Cache)
     }
 
-    /// Full text-to-image generation.
+    /// Drop every component no request is using (e.g. between traffic
+    /// bursts); returns the bytes freed.
+    pub fn evict_idle(&mut self) -> usize {
+        self.residency.evict_idle()
+    }
+
+    /// The Fig. 4 occupancy trace.
+    pub fn memory_trace(&self) -> &MemoryTrace {
+        self.residency.trace()
+    }
+
+    /// Full text-to-image generation with the configured defaults.
     pub fn generate(
         &mut self,
         prompt: &str,
         seed: u64,
         variant: &str,
     ) -> Result<GenerateResult> {
+        self.generate_with(prompt, seed, variant, &ExecOverrides::default())
+    }
+
+    /// Full text-to-image generation with per-request overrides.
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        seed: u64,
+        variant: &str,
+        overrides: &ExecOverrides,
+    ) -> Result<GenerateResult> {
         let t_start = Instant::now();
         let mut tm = StageTimings::default();
+        let variant = overrides.variant.as_deref().unwrap_or(variant).to_string();
+        let num_steps = overrides.num_steps.unwrap_or(self.options.num_steps);
+        let guidance = overrides.guidance_scale.unwrap_or(self.options.guidance_scale);
 
-        // ---- UNet resident -------------------------------------------------
+        // ---- UNet resident (cached across requests) ------------------------
+        let unet_name = format!("unet_{variant}");
+        let unet_tag = self.options.unet_weights.clone();
         let t0 = Instant::now();
-        self.ensure_unet(variant)?;
+        let unet = self.acquire_component(&unet_name, &unet_tag)?;
         tm.unet_load_s = t0.elapsed().as_secs_f64();
 
+        let result = self.run_stages(prompt, seed, num_steps, guidance, unet, &mut tm);
+        if result.is_err() {
+            // a failed request must not leak pins into the next one
+            self.residency.purge("text_encoder", "fp32");
+            self.residency.purge("decoder", "fp32");
+        }
+        // unpin the UNet but keep it cached — the paper's app behaviour
+        let _ = self.residency.release(&unet_name, &unet_tag, Retention::Cache);
+
+        let stages = result?;
+        tm.total_s = t_start.elapsed().as_secs_f64();
+        Ok(GenerateResult {
+            image: stages.image,
+            image_size: self.manifest.image_size,
+            latent: stages.latent,
+            timings: tm,
+            peak_memory: self.residency.peak(),
+        })
+    }
+
+    /// Everything between UNet acquisition and the final image: text
+    /// encode, denoise with decoder prefetch overlap, decode.
+    fn run_stages(
+        &mut self,
+        prompt: &str,
+        seed: u64,
+        num_steps: usize,
+        guidance: f64,
+        unet: ResidentComponent,
+        tm: &mut StageTimings,
+    ) -> Result<StageOutput> {
         // ---- non-pipelined baseline: everything resident up front ----------
         let decoder_bytes = self.stored_bytes("decoder", "fp32")?;
         let decoder_manifest = self.manifest.component("decoder")?.clone();
-        let mut decoder: Option<Component> = None;
+        let mut decoder: Option<ResidentComponent> = None;
         if !self.options.pipelined {
             let t0 = Instant::now();
-            self.ledger.alloc("decoder", decoder_bytes)?;
-            decoder = Some(match self.load_component("decoder", "fp32") {
-                Ok(c) => c,
-                Err(e) => {
-                    let _ = self.ledger.free("decoder");
-                    return Err(e);
-                }
-            });
+            decoder = Some(self.acquire_component("decoder", "fp32")?);
             tm.decoder_load_s = t0.elapsed().as_secs_f64();
         }
 
-        // ---- text encode (load -> encode -> evict) -------------------------
+        // ---- text encode (acquire -> encode -> evict) ----------------------
         let t0 = Instant::now();
-        let te_bytes = self.stored_bytes("text_encoder", "fp32")?;
-        self.ledger.alloc("text_encoder", te_bytes)?;
-        let text = match self.load_component("text_encoder", "fp32") {
-            Ok(c) => c,
-            Err(e) => {
-                let _ = self.ledger.free("text_encoder");
-                return Err(e);
-            }
-        };
+        let text = self.acquire_component("text_encoder", "fp32")?;
         tm.text_load_s = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
@@ -187,8 +230,8 @@ impl PipelinedExecutor {
         tm.text_encode_s = t0.elapsed().as_secs_f64();
 
         drop(text);
-        self.ledger.free("text_encoder")?;
-        self.ledger.mark("text-encoder-evicted");
+        self.residency.release("text_encoder", "fp32", Retention::Evict)?;
+        self.residency.mark("text-encoder-evicted");
 
         // context2: uncond then cond halves, (2, S, D)
         let mut context2 = uncond_ctx[0].clone();
@@ -206,12 +249,12 @@ impl PipelinedExecutor {
         let ddim = Ddim::from_alphas(
             {
                 let mut p = self.manifest.scheduler.params.clone();
-                p.guidance_scale = self.options.guidance_scale;
+                p.guidance_scale = guidance;
                 p
             },
             self.manifest.scheduler.alphas_cumprod.clone(),
         );
-        let ts = ddim.timesteps(self.options.num_steps);
+        let ts = ddim.timesteps(num_steps);
 
         let s = self.manifest.latent_size;
         let c = self.manifest.latent_channels;
@@ -219,12 +262,11 @@ impl PipelinedExecutor {
         let mut rng = Rng::new(seed);
         let mut latent: Vec<f32> = rng.normal_f32_vec(n_latent);
 
-        let unet = self.unet.as_ref().expect("unet loaded");
         let mut eps = vec![0f32; n_latent];
         let mut latent2 = vec![0f32; 2 * n_latent];
         // the context is constant across the whole denoise loop: upload
-        // it once and keep the device buffer resident (perf: saves one
-        // host->device copy per step; see EXPERIMENTS.md §Perf)
+        // it once and keep the device buffer resident (saves one
+        // host->device copy per step)
         let ctx_buf = unet.upload(&self.engine, 2, &ActInput::F32(context2.clone()))?;
         for (i, &t) in ts.iter().enumerate() {
             latent2[..n_latent].copy_from_slice(&latent);
@@ -233,41 +275,45 @@ impl PipelinedExecutor {
             let t_buf = unet.upload(&self.engine, 1, &ActInput::F32(vec![t as f32]))?;
             let out = unet.run_buffers(&[&lat_buf, &t_buf, &ctx_buf])?;
             let eps2 = &out[0];
-            guide(
-                &eps2[..n_latent],
-                &eps2[n_latent..],
-                self.options.guidance_scale,
-                &mut eps,
-            );
+            guide(&eps2[..n_latent], &eps2[n_latent..], guidance, &mut eps);
             let t_prev = ts.get(i + 1).copied();
             ddim.step(&mut latent, &eps, t, t_prev);
 
-            // consume the decoder prefetch as soon as it lands
+            // charge the decoder prefetch as soon as its bytes land
             if let Some(p) = prefetch.as_mut() {
                 if !prefetch_charged && p.poll() {
-                    self.ledger.alloc("decoder", decoder_bytes)?;
-                    self.ledger.mark(&format!("decoder-prefetched@step{i}"));
+                    self.residency.reserve("decoder", "fp32", decoder_bytes)?;
+                    self.residency.mark(&format!("decoder-prefetched@step{i}"));
                     prefetch_charged = true;
                 }
             }
         }
         tm.denoise_s = t0.elapsed().as_secs_f64();
         tm.denoise_steps = ts.len();
-        self.ledger.mark("denoise-done");
+        self.residency.mark("denoise-done");
 
         // ---- decode ---------------------------------------------------------
         if let Some(p) = prefetch.take() {
             let t0 = Instant::now();
             let pf = p.join()?;
             if !prefetch_charged {
-                self.ledger.alloc("decoder", decoder_bytes)?;
+                self.residency.reserve("decoder", "fp32", decoder_bytes)?;
             }
-            decoder = Some(Component::load_from_parts(
+            let loaded = Component::load_from_parts(
                 &self.engine,
                 &pf.hlo_text_path,
                 &decoder_manifest,
                 &pf.weights,
-            )?);
+            );
+            match loaded {
+                Ok(c) => {
+                    decoder = Some(self.residency.fulfill("decoder", "fp32", Rc::new(c))?);
+                }
+                Err(e) => {
+                    let _ = self.residency.cancel("decoder", "fp32");
+                    return Err(e);
+                }
+            }
             tm.decoder_load_s = t0.elapsed().as_secs_f64();
         }
         let dec = decoder.expect("decoder loaded");
@@ -275,25 +321,14 @@ impl PipelinedExecutor {
         let img = dec.run(&self.engine, &[ActInput::F32(latent.clone())])?;
         tm.decode_s = t0.elapsed().as_secs_f64();
         drop(dec);
-        self.ledger.free("decoder")?;
-        self.ledger.mark("decoder-evicted");
+        self.residency.release("decoder", "fp32", Retention::Evict)?;
+        self.residency.mark("decoder-evicted");
 
-        tm.total_s = t_start.elapsed().as_secs_f64();
-        Ok(GenerateResult {
-            image: img.into_iter().next().unwrap_or_default(),
-            image_size: self.manifest.image_size,
-            latent,
-            timings: tm,
-            peak_memory: self.ledger.peak(),
-        })
+        Ok(StageOutput { image: img.into_iter().next().unwrap_or_default(), latent })
     }
+}
 
-    /// Drop the resident UNet (frees its ledger entry).
-    pub fn evict_unet(&mut self) -> Result<()> {
-        if self.unet.take().is_some() {
-            self.ledger.free("unet")?;
-        }
-        self.unet_key.clear();
-        Ok(())
-    }
+struct StageOutput {
+    image: Vec<f32>,
+    latent: Vec<f32>,
 }

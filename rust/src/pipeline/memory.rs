@@ -109,6 +109,28 @@ mod tests {
     }
 
     #[test]
+    fn budget_exact_alloc_is_allowed() {
+        let mut m = MemoryLedger::new(1000);
+        m.alloc("unet", 600).unwrap();
+        m.alloc("rest", 400).unwrap();
+        assert_eq!(m.used(), 1000, "allocations up to the exact budget fit");
+        assert!(m.alloc("straw", 1).is_err(), "one byte over is rejected");
+        m.free("rest").unwrap();
+        m.alloc("rest2", 400).unwrap();
+        assert_eq!(m.peak(), 1000);
+    }
+
+    #[test]
+    fn zero_byte_alloc_and_free_balance() {
+        let mut m = MemoryLedger::new(10);
+        m.alloc("marker", 0).unwrap();
+        assert_eq!(m.used(), 0);
+        assert!(m.holds("marker"));
+        assert_eq!(m.free("marker").unwrap(), 0);
+        assert!(!m.holds("marker"));
+    }
+
+    #[test]
     fn trace_records_events() {
         let mut m = MemoryLedger::new(1000);
         m.alloc("unet", 500).unwrap();

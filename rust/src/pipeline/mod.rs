@@ -1,13 +1,18 @@
 //! Pipelined execution (paper Sec. 3.3): memory ledger + occupancy
-//! trace, child-thread component prefetch, and the stage-interleaved
-//! executor.
+//! trace, child-thread component prefetch, the shared component
+//! residency layer, and the stage-interleaved executor.
 
 pub mod executor;
 pub mod loader;
 pub mod memory;
+pub mod residency;
 pub mod trace;
 
-pub use executor::{ExecOptions, GenerateResult, PipelinedExecutor, StageTimings};
+pub use executor::{
+    ExecOptions, ExecOverrides, GenerateResult, PipelinedExecutor, ResidentComponent,
+    StageTimings,
+};
 pub use loader::{PrefetchedComponent, Prefetcher};
 pub use memory::MemoryLedger;
+pub use residency::{ResidencyManager, Retention};
 pub use trace::{EventKind, MemoryTrace, TraceEvent};

@@ -1,0 +1,453 @@
+//! Component residency — the shared policy layer between the serving
+//! stack and the memory ledger.
+//!
+//! The paper's Sec. 3.3 pipelined executor used to inline its ledger
+//! bookkeeping (alloc before load, free after evict, charge prefetches
+//! when they land).  That logic now lives here as a reusable subsystem:
+//! a [`ResidencyManager`] owns the [`MemoryLedger`], caches loaded
+//! components keyed by `(name, weights_tag)`, and exposes
+//! `acquire` / `release` / `evict_lru` so executors are pure stage
+//! orchestration.
+//!
+//! Semantics:
+//!
+//! * **acquire** pins a component, loading it on a cache miss.  Before
+//!   a miss loads, least-recently-used *unpinned* entries are evicted
+//!   until the new component fits the budget (pinned entries are never
+//!   evicted — exceeding the budget with everything pinned is an
+//!   error, the condition pipelining exists to avoid).
+//! * **release** unpins.  [`Retention::Cache`] keeps the component
+//!   resident (still charged to the ledger) for reuse by later
+//!   requests — the generalization of the paper's resident UNet.
+//!   [`Retention::Evict`] drops it immediately once unpinned — the
+//!   paper's behaviour for the text encoder and decoder.
+//! * **reserve / fulfill** support the prefetch overlap: the ledger is
+//!   charged when the prefetched bytes land in host memory (reserve,
+//!   mid-denoise), the device half is attached later (fulfill).
+//!
+//! The manager is generic over the resident payload so the policy can
+//! be tested without a PJRT device; the executor instantiates it with
+//! `Rc<runtime::Component>`.
+
+use crate::error::{Error, Result};
+use crate::pipeline::memory::MemoryLedger;
+use crate::pipeline::trace::MemoryTrace;
+
+/// What to do with a component when its last pin is released.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retention {
+    /// Drop it immediately (paper behaviour for text encoder/decoder).
+    Evict,
+    /// Keep it resident for reuse; evictable under LRU pressure.
+    Cache,
+}
+
+#[derive(Debug)]
+struct Entry<C> {
+    name: String,
+    tag: String,
+    bytes: usize,
+    /// number of outstanding `acquire`s (reserve counts as one)
+    pins: usize,
+    /// logical clock of the last acquire (LRU ordering)
+    last_used: u64,
+    /// `None` while reserved (prefetch charged but not yet fulfilled)
+    payload: Option<C>,
+}
+
+impl<C> Entry<C> {
+    fn label(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+}
+
+/// Owns the memory ledger and the cache of loaded components.
+pub struct ResidencyManager<C> {
+    ledger: MemoryLedger,
+    entries: Vec<Entry<C>>,
+    clock: u64,
+}
+
+impl<C: Clone> ResidencyManager<C> {
+    pub fn new(budget: usize) -> ResidencyManager<C> {
+        ResidencyManager { ledger: MemoryLedger::new(budget), entries: Vec::new(), clock: 0 }
+    }
+
+    /// Unlimited budget (baseline accounting).
+    pub fn unbounded() -> ResidencyManager<C> {
+        Self::new(usize::MAX)
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn index_of(&self, name: &str, tag: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name && e.tag == tag)
+    }
+
+    /// Evict LRU unpinned entries until `bytes` more would fit the
+    /// budget.  Stops when nothing evictable remains; the subsequent
+    /// ledger alloc reports the budget violation with full context.
+    fn evict_to_fit(&mut self, bytes: usize) {
+        while self.ledger.used().saturating_add(bytes) > self.ledger.budget {
+            if self.evict_lru().is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Evict the least-recently-used unpinned entry, if any.
+    /// Returns `(name, tag, bytes)` of the evicted component.
+    pub fn evict_lru(&mut self) -> Option<(String, String, usize)> {
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.pins == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)?;
+        let e = self.entries.remove(idx);
+        // entry exists iff its ledger charge exists; free cannot fail
+        let _ = self.ledger.free(&e.label());
+        Some((e.name, e.tag, e.bytes))
+    }
+
+    /// Evict every unpinned cached entry; returns the bytes freed.
+    pub fn evict_idle(&mut self) -> usize {
+        let mut freed = 0;
+        while let Some((_, _, bytes)) = self.evict_lru() {
+            freed += bytes;
+        }
+        freed
+    }
+
+    /// Pin `(name, tag)`, loading it via `load` on a cache miss.
+    /// `bytes` is the component's resident size (known from the
+    /// manifest *before* loading, so the budget check precedes the
+    /// load).
+    pub fn acquire(
+        &mut self,
+        name: &str,
+        tag: &str,
+        bytes: usize,
+        load: impl FnOnce() -> Result<C>,
+    ) -> Result<C> {
+        let now = self.tick();
+        if let Some(i) = self.index_of(name, tag) {
+            let e = &mut self.entries[i];
+            if e.payload.is_none() {
+                return Err(Error::Pipeline(format!(
+                    "{}: reserved (prefetch in flight), cannot acquire",
+                    e.label()
+                )));
+            }
+            e.pins += 1;
+            e.last_used = now;
+            return Ok(e.payload.as_ref().expect("checked above").clone());
+        }
+        self.evict_to_fit(bytes);
+        let label = format!("{name}:{tag}");
+        self.ledger.alloc(&label, bytes)?;
+        match load() {
+            Ok(c) => {
+                self.entries.push(Entry {
+                    name: name.to_string(),
+                    tag: tag.to_string(),
+                    bytes,
+                    pins: 1,
+                    last_used: now,
+                    payload: Some(c.clone()),
+                });
+                Ok(c)
+            }
+            Err(e) => {
+                let _ = self.ledger.free(&label);
+                Err(e)
+            }
+        }
+    }
+
+    /// Unpin `(name, tag)`.  With [`Retention::Evict`] the component is
+    /// dropped (and the ledger credited) once no pins remain; with
+    /// [`Retention::Cache`] it stays resident for reuse.
+    pub fn release(&mut self, name: &str, tag: &str, retention: Retention) -> Result<()> {
+        let i = self.index_of(name, tag).ok_or_else(|| {
+            Error::Pipeline(format!("{name}:{tag}: release of non-resident component"))
+        })?;
+        let e = &mut self.entries[i];
+        if e.pins == 0 {
+            return Err(Error::Pipeline(format!("{}: release without pin", e.label())));
+        }
+        e.pins -= 1;
+        if retention == Retention::Evict && e.pins == 0 {
+            let e = self.entries.remove(i);
+            let _ = self.ledger.free(&e.label());
+        }
+        Ok(())
+    }
+
+    /// Charge the budget for a component whose host bytes just landed
+    /// (prefetch completion) without a device payload yet.  The entry
+    /// is pinned until `fulfill` or `cancel`.
+    pub fn reserve(&mut self, name: &str, tag: &str, bytes: usize) -> Result<()> {
+        if self.index_of(name, tag).is_some() {
+            return Err(Error::Pipeline(format!("{name}:{tag}: already resident")));
+        }
+        let now = self.tick();
+        self.evict_to_fit(bytes);
+        let label = format!("{name}:{tag}");
+        self.ledger.alloc(&label, bytes)?;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            tag: tag.to_string(),
+            bytes,
+            pins: 1,
+            last_used: now,
+            payload: None,
+        });
+        Ok(())
+    }
+
+    /// Attach the device payload to a reserved entry and return it
+    /// (pinned by the original reserve).
+    pub fn fulfill(&mut self, name: &str, tag: &str, payload: C) -> Result<C> {
+        let i = self.index_of(name, tag).ok_or_else(|| {
+            Error::Pipeline(format!("{name}:{tag}: fulfill without reserve"))
+        })?;
+        let e = &mut self.entries[i];
+        if e.payload.is_some() {
+            return Err(Error::Pipeline(format!("{}: already fulfilled", e.label())));
+        }
+        e.payload = Some(payload.clone());
+        Ok(payload)
+    }
+
+    /// Drop an entry regardless of pin count (error recovery after a
+    /// failed request); returns whether anything was dropped.
+    pub fn purge(&mut self, name: &str, tag: &str) -> bool {
+        match self.index_of(name, tag) {
+            Some(i) => {
+                let e = self.entries.remove(i);
+                let _ = self.ledger.free(&e.label());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a reserved entry (prefetch failed after the charge).
+    pub fn cancel(&mut self, name: &str, tag: &str) -> Result<()> {
+        let i = self.index_of(name, tag).ok_or_else(|| {
+            Error::Pipeline(format!("{name}:{tag}: cancel of non-resident component"))
+        })?;
+        let e = self.entries.remove(i);
+        let _ = self.ledger.free(&e.label());
+        Ok(())
+    }
+
+    pub fn contains(&self, name: &str, tag: &str) -> bool {
+        self.index_of(name, tag).is_some()
+    }
+
+    pub fn is_pinned(&self, name: &str, tag: &str) -> bool {
+        self.index_of(name, tag)
+            .map(|i| self.entries[i].pins > 0)
+            .unwrap_or(false)
+    }
+
+    /// Number of resident (cached or pinned) components.
+    pub fn resident_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn budget(&self) -> usize {
+        self.ledger.budget
+    }
+
+    pub fn used(&self) -> usize {
+        self.ledger.used()
+    }
+
+    pub fn peak(&self) -> usize {
+        self.ledger.peak()
+    }
+
+    /// Annotate the occupancy trace (Fig. 4).
+    pub fn mark(&mut self, label: &str) {
+        self.ledger.mark(label);
+    }
+
+    pub fn trace(&self) -> &MemoryTrace {
+        &self.ledger.trace
+    }
+
+    pub fn ledger(&self) -> &MemoryLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn ok(v: u32) -> impl FnOnce() -> Result<u32> {
+        move || Ok(v)
+    }
+
+    #[test]
+    fn acquire_release_evict_roundtrip() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let c = r.acquire("text_encoder", "fp32", 60, ok(7)).unwrap();
+        assert_eq!(c, 7);
+        assert_eq!(r.used(), 60);
+        assert!(r.is_pinned("text_encoder", "fp32"));
+        r.release("text_encoder", "fp32", Retention::Evict).unwrap();
+        assert!(!r.contains("text_encoder", "fp32"));
+        assert_eq!(r.used(), 0);
+        assert_eq!(r.peak(), 60);
+    }
+
+    #[test]
+    fn cache_retention_skips_reload() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let loads = Cell::new(0);
+        let load = || {
+            loads.set(loads.get() + 1);
+            Ok(1)
+        };
+        r.acquire("unet", "fp32", 50, load).unwrap();
+        r.release("unet", "fp32", Retention::Cache).unwrap();
+        assert!(r.contains("unet", "fp32"));
+        assert!(!r.is_pinned("unet", "fp32"));
+        assert_eq!(r.used(), 50, "cached component stays charged");
+        r.acquire("unet", "fp32", 50, || {
+            loads.set(loads.get() + 1);
+            Ok(1)
+        })
+        .unwrap();
+        assert_eq!(loads.get(), 1, "second acquire is a cache hit");
+    }
+
+    #[test]
+    fn lru_eviction_under_budget_pressure() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        r.acquire("a", "fp32", 40, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Cache).unwrap();
+        r.acquire("b", "fp32", 40, ok(2)).unwrap();
+        r.release("b", "fp32", Retention::Cache).unwrap();
+        // c does not fit beside a+b: the least recently used (a) goes
+        r.acquire("c", "fp32", 40, ok(3)).unwrap();
+        assert!(!r.contains("a", "fp32"), "LRU entry evicted");
+        assert!(r.contains("b", "fp32"));
+        assert!(r.contains("c", "fp32"));
+        assert_eq!(r.used(), 80);
+        // touching b makes it most-recent; d evicts nothing pinned
+        r.acquire("b", "fp32", 40, ok(2)).unwrap();
+        r.release("b", "fp32", Retention::Cache).unwrap();
+        r.release("c", "fp32", Retention::Cache).unwrap();
+        r.acquire("d", "fp32", 40, ok(4)).unwrap();
+        assert!(!r.contains("c", "fp32"), "c was LRU after b's touch");
+        assert!(r.contains("b", "fp32"));
+    }
+
+    #[test]
+    fn pinned_components_are_never_evicted() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        r.acquire("a", "fp32", 60, ok(1)).unwrap(); // stays pinned
+        let e = r.acquire("b", "fp32", 60, ok(2));
+        assert!(e.is_err(), "must not evict the pinned a: {e:?}");
+        assert!(r.contains("a", "fp32"));
+        assert_eq!(r.used(), 60);
+        assert!(r.evict_lru().is_none(), "nothing unpinned to evict");
+    }
+
+    #[test]
+    fn failed_load_credits_the_ledger() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let e = r.acquire("a", "fp32", 60, || {
+            Err(Error::Weights("corrupt".into()))
+        });
+        assert!(e.is_err());
+        assert_eq!(r.used(), 0);
+        assert!(!r.contains("a", "fp32"));
+    }
+
+    #[test]
+    fn reserve_fulfill_cancel_flow() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        r.reserve("decoder", "fp32", 70).unwrap();
+        assert_eq!(r.used(), 70);
+        // reserved entries cannot be acquired or double-reserved
+        assert!(r.acquire("decoder", "fp32", 70, ok(9)).is_err());
+        assert!(r.reserve("decoder", "fp32", 70).is_err());
+        let c = r.fulfill("decoder", "fp32", 9).unwrap();
+        assert_eq!(c, 9);
+        assert!(r.fulfill("decoder", "fp32", 9).is_err());
+        r.release("decoder", "fp32", Retention::Evict).unwrap();
+        assert_eq!(r.used(), 0);
+
+        r.reserve("decoder", "fp32", 70).unwrap();
+        r.cancel("decoder", "fp32").unwrap();
+        assert_eq!(r.used(), 0);
+        assert!(!r.contains("decoder", "fp32"));
+    }
+
+    #[test]
+    fn release_errors_are_reported() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        assert!(r.release("ghost", "fp32", Retention::Evict).is_err());
+        r.acquire("a", "fp32", 10, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Cache).unwrap();
+        assert!(
+            r.release("a", "fp32", Retention::Cache).is_err(),
+            "release without pin"
+        );
+    }
+
+    #[test]
+    fn purge_drops_even_pinned_entries() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        r.acquire("a", "fp32", 10, ok(1)).unwrap(); // pinned
+        assert!(r.purge("a", "fp32"));
+        assert!(!r.purge("a", "fp32"));
+        assert_eq!(r.used(), 0);
+    }
+
+    #[test]
+    fn evict_idle_frees_everything_unpinned() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(1000);
+        r.acquire("a", "fp32", 100, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Cache).unwrap();
+        r.acquire("b", "int8", 200, ok(2)).unwrap();
+        r.release("b", "int8", Retention::Cache).unwrap();
+        r.acquire("c", "fp32", 50, ok(3)).unwrap(); // pinned
+        assert_eq!(r.evict_idle(), 300);
+        assert_eq!(r.used(), 50);
+        assert_eq!(r.resident_count(), 1);
+    }
+
+    #[test]
+    fn trace_records_tagged_labels() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        r.acquire("text_encoder", "fp32", 10, ok(1)).unwrap();
+        r.release("text_encoder", "fp32", Retention::Evict).unwrap();
+        let s = r.trace().render_ascii(20);
+        assert!(s.contains("+text_encoder"), "{s}");
+        assert!(s.contains("-text_encoder"), "{s}");
+    }
+
+    #[test]
+    fn same_name_different_tags_coexist() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(1000);
+        r.acquire("unet", "fp32", 400, ok(1)).unwrap();
+        r.acquire("unet", "int8", 100, ok(2)).unwrap();
+        assert_eq!(r.used(), 500);
+        assert_eq!(r.resident_count(), 2);
+        r.release("unet", "fp32", Retention::Evict).unwrap();
+        assert_eq!(r.used(), 100);
+        assert!(r.contains("unet", "int8"));
+    }
+}

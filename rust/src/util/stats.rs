@@ -9,6 +9,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -35,6 +36,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         max: sorted[n - 1],
         p50: pct(50.0),
         p90: pct(90.0),
+        p95: pct(95.0),
         p99: pct(99.0),
     }
 }
@@ -91,6 +93,7 @@ mod tests {
         let s = summarize(&xs);
         assert_eq!(s.p50, 50.0);
         assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p95, 95.0);
         assert_eq!(s.p99, 99.0);
     }
 

@@ -7,7 +7,7 @@
 use std::path::{Path, PathBuf};
 
 use mobile_diffusion::config::AppConfig;
-use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::coordinator::{Server, SubmitOptions};
 use mobile_diffusion::delegate::{RuleSet, Verdict};
 use mobile_diffusion::graph;
 use mobile_diffusion::passes;
@@ -281,8 +281,7 @@ fn pipelined_generation_end_to_end() {
     assert_eq!(r.timings.denoise_steps, 2);
     assert!(r.peak_memory > 0);
     // trace must show the text encoder evicted before the decoder peak
-    let trace = &ex.ledger.trace;
-    let s = trace.render_ascii(30);
+    let s = ex.memory_trace().render_ascii(30);
     assert!(s.contains("+text_encoder"));
     assert!(s.contains("-text_encoder"));
     assert!(s.contains("+decoder"));
@@ -370,6 +369,48 @@ fn server_serves_fifo_requests() {
     assert!(r1.image.iter().all(|v| v.is_finite()));
     let report = server.metrics_report().unwrap();
     assert!(report.contains("2 ok"), "{report}");
+}
+
+#[test]
+fn pool_serves_concurrent_requests_with_overrides_within_budget() {
+    // acceptance: 4 concurrent requests on a 2-worker pool, per-request
+    // num_steps overrides respected, per-worker peak within budget
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let unet = m.component("unet_mobile").unwrap().weights["fp32"].bytes;
+    let text = m.component("text_encoder").unwrap().weights["fp32"].bytes;
+    let dec = m.component("decoder").unwrap().weights["fp32"].bytes;
+    let budget = unet + text.max(dec) + 1_000_000;
+
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 2;
+    cfg.num_workers = 2;
+    cfg.memory_budget_mb = budget as f64 / 1e6;
+    let mut server = Server::start(&cfg).unwrap();
+
+    let steps = [None, Some(3), None, Some(4)];
+    let receivers: Vec<_> = steps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let opts = SubmitOptions { num_steps: *s, ..Default::default() };
+            server.submit_with("pool overrides", i as u64, opts).unwrap()
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.timings.denoise_steps, steps[i].unwrap_or(2), "request {i}");
+        assert!(resp.worker_id < 2);
+        assert!(
+            resp.peak_memory <= budget,
+            "worker peak {} within budget {budget}",
+            resp.peak_memory
+        );
+    }
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("2 workers"), "{report}");
+    assert!(report.contains("4 ok"), "{report}");
 }
 
 #[test]

@@ -1,0 +1,225 @@
+//! Scheduler + residency tests that need no AOT artifacts and no PJRT
+//! device: the pool is exercised with mock executors, the acceptance
+//! flow (4 concurrent requests on a 2-worker pool, per-request step
+//! overrides, peak memory within budget) with a mock device that runs
+//! the real ResidencyManager.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use mobile_diffusion::coordinator::{
+    GenerateRequest, Priority, WorkerExecutor, WorkerPool,
+};
+use mobile_diffusion::pipeline::{
+    GenerateResult, ResidencyManager, Retention, StageTimings,
+};
+use mobile_diffusion::{Error, Result};
+
+fn result_with_steps(steps: usize, peak: usize) -> GenerateResult {
+    GenerateResult {
+        image: vec![0.0; 12],
+        image_size: 2,
+        latent: vec![0.0; 4],
+        timings: StageTimings { denoise_steps: steps, total_s: 0.01, ..Default::default() },
+        peak_memory: peak,
+    }
+}
+
+/// Mock device worker: drives the real residency subsystem through the
+/// paper's stage sequence (UNet cached, text encoder evicted after
+/// encode, decoder reserve->fulfill->evict) under a budget of 100.
+struct MockDevice {
+    residency: ResidencyManager<u32>,
+    default_steps: usize,
+}
+
+impl MockDevice {
+    fn new() -> MockDevice {
+        MockDevice { residency: ResidencyManager::new(100), default_steps: 20 }
+    }
+}
+
+impl WorkerExecutor for MockDevice {
+    fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+        let r = &mut self.residency;
+        r.acquire("unet_mobile", "fp32", 50, || Ok(1))?;
+        r.acquire("text_encoder", "fp32", 30, || Ok(2))?;
+        r.release("text_encoder", "fp32", Retention::Evict)?;
+        r.reserve("decoder", "fp32", 40)?;
+        r.fulfill("decoder", "fp32", 3)?;
+        std::thread::sleep(Duration::from_millis(10)); // decode
+        r.release("decoder", "fp32", Retention::Evict)?;
+        r.release("unet_mobile", "fp32", Retention::Cache)?;
+        let steps = req.num_steps.unwrap_or(self.default_steps);
+        Ok(result_with_steps(steps, self.residency.peak()))
+    }
+}
+
+#[test]
+fn two_worker_pool_serves_four_concurrent_requests_within_budget() {
+    let pool = WorkerPool::start(2, 16, |_| Ok(MockDevice::new())).unwrap();
+
+    let steps = [None, Some(3), None, Some(4)];
+    let receivers: Vec<_> = steps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut req = GenerateRequest::new(i as u64 + 1, "prompt", i as u64);
+            req.num_steps = *s;
+            pool.submit(req, Priority::Normal, None).unwrap()
+        })
+        .collect();
+
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, i as u64 + 1);
+        assert!(resp.worker_id < 2);
+        assert_eq!(
+            resp.timings.denoise_steps,
+            steps[i].unwrap_or(20),
+            "request {i}: per-request num_steps override must be honored"
+        );
+        assert!(
+            resp.peak_memory <= 100,
+            "request {i}: peak {} exceeds the 100-byte budget",
+            resp.peak_memory
+        );
+        // pipelining bound: unet + max(text, decoder) = 90, not 120
+        assert_eq!(resp.peak_memory, 90);
+    }
+    let report = pool.metrics_report();
+    assert!(report.contains("4 ok"), "{report}");
+    assert!(report.contains("worker 1"), "{report}");
+}
+
+/// Mock whose `execute` blocks until the test releases a gate token,
+/// recording completion order — makes scheduling order deterministic.
+struct GatedExec {
+    started: mpsc::Sender<u64>,
+    gate: Arc<Mutex<mpsc::Receiver<()>>>,
+    order: Arc<Mutex<Vec<u64>>>,
+}
+
+impl WorkerExecutor for GatedExec {
+    fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+        let _ = self.started.send(req.id);
+        self.gate
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| Error::Runtime("gate closed".into()))?;
+        self.order.lock().unwrap().push(req.id);
+        Ok(result_with_steps(1, 1))
+    }
+}
+
+struct Gate {
+    started_rx: mpsc::Receiver<u64>,
+    gate_tx: mpsc::Sender<()>,
+    order: Arc<Mutex<Vec<u64>>>,
+}
+
+/// One gated worker; returns the pool plus the test-side controls.
+fn gated_pool() -> (WorkerPool, Gate) {
+    let (started_tx, started_rx) = mpsc::channel();
+    let (gate_tx, gate_rx) = mpsc::channel();
+    // factories must be Sync; mpsc endpoints are not, so hand them to
+    // the worker through mutexes
+    let started_tx = Arc::new(Mutex::new(started_tx));
+    let gate_rx = Arc::new(Mutex::new(gate_rx));
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let order2 = Arc::clone(&order);
+    let pool = WorkerPool::start(1, 16, move |_| {
+        Ok(GatedExec {
+            started: started_tx.lock().unwrap().clone(),
+            gate: Arc::clone(&gate_rx),
+            order: Arc::clone(&order2),
+        })
+    })
+    .unwrap();
+    (pool, Gate { started_rx, gate_tx, order })
+}
+
+#[test]
+fn fifo_fairness_within_a_priority_class() {
+    let (pool, gate) = gated_pool();
+    // occupy the worker with request 1...
+    let rx1 = pool
+        .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+        .unwrap();
+    assert_eq!(gate.started_rx.recv().unwrap(), 1);
+    // ...then queue 2, 3, 4 in submission order, same class
+    let rest: Vec<_> = (2..=4)
+        .map(|i| {
+            pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                .unwrap()
+        })
+        .collect();
+    for _ in 0..4 {
+        gate.gate_tx.send(()).unwrap();
+    }
+    rx1.recv().unwrap().unwrap();
+    for rx in rest {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(*gate.order.lock().unwrap(), vec![1, 2, 3, 4], "strict FIFO");
+}
+
+#[test]
+fn priority_classes_preempt_queue_order() {
+    let (pool, gate) = gated_pool();
+    let rx1 = pool
+        .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+        .unwrap();
+    assert_eq!(gate.started_rx.recv().unwrap(), 1);
+    // queued while the worker is busy: low, high, normal
+    let r2 = pool.submit(GenerateRequest::new(2, "p", 2), Priority::Low, None).unwrap();
+    let r3 = pool.submit(GenerateRequest::new(3, "p", 3), Priority::High, None).unwrap();
+    let r4 = pool.submit(GenerateRequest::new(4, "p", 4), Priority::Normal, None).unwrap();
+    for _ in 0..4 {
+        gate.gate_tx.send(()).unwrap();
+    }
+    for rx in [rx1, r2, r3, r4] {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        *gate.order.lock().unwrap(),
+        vec![1, 3, 4, 2],
+        "high before normal before low"
+    );
+}
+
+#[test]
+fn admission_rejects_only_beyond_capacity() {
+    let (pool, gate) = gated_pool();
+    let rx1 = pool
+        .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+        .unwrap();
+    assert_eq!(gate.started_rx.recv().unwrap(), 1);
+    // capacity 16: fill the queue exactly while the worker is busy
+    let mut queued = Vec::new();
+    for i in 2..=17 {
+        queued.push(
+            pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                .unwrap(),
+        );
+    }
+    let err = pool
+        .submit(GenerateRequest::new(99, "p", 99), Priority::High, None)
+        .expect_err("18th submission must be rejected");
+    assert!(err.to_string().contains("full"), "{err}");
+
+    for _ in 0..17 {
+        gate.gate_tx.send(()).unwrap();
+    }
+    rx1.recv().unwrap().unwrap();
+    for rx in queued {
+        rx.recv().unwrap().unwrap();
+    }
+    pool.with_metrics(|m| {
+        assert_eq!(m.rejected_full, 1);
+        assert_eq!(m.stage.requests_ok, 17);
+    });
+    let report = pool.metrics_report();
+    assert!(report.contains("1 rejected"), "{report}");
+}
