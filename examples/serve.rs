@@ -25,13 +25,15 @@ fn main() -> mobile_diffusion::Result<()> {
     cfg.num_steps = 4; // demo default schedule; 20 for the paper's
     cfg.num_workers = 2; // a two-phone fleet
     cfg.queue_depth = 16;
+    cfg.max_batch = 2; // compatible requests share denoise dispatches
 
     let mut server = Server::start(&cfg)?;
     println!(
-        "serving {} prompts on {} workers ({} default steps)...\n",
+        "serving {} prompts on {} workers ({} default steps, micro-batch up to {})...\n",
         PROMPTS.len(),
         server.num_workers(),
-        cfg.num_steps
+        cfg.num_steps,
+        cfg.max_batch
     );
 
     // submit the whole burst up front: the queue drains high before

@@ -34,10 +34,13 @@ def alphas_cumprod(cfg: SchedulerConfig) -> np.ndarray:
 
 
 def timesteps(cfg: SchedulerConfig, num_steps: int = None) -> List[int]:
-    """DDIM stride schedule: evenly spaced, descending."""
+    """DDIM schedule: exactly ``num_steps`` evenly spaced timesteps,
+    descending, ending at 0 (linspace form; the stride form returned
+    more than ``num_steps`` entries for non-divisible counts).  Must
+    stay bit-identical to ``Ddim::timesteps`` on the Rust side."""
     n = num_steps or cfg.num_inference_steps
-    stride = cfg.num_train_timesteps // n
-    return list(range(0, cfg.num_train_timesteps, stride))[::-1]
+    n = max(1, min(n, cfg.num_train_timesteps))
+    return [i * cfg.num_train_timesteps // n for i in range(n)][::-1]
 
 
 def progressive_timesteps(cfg: SchedulerConfig, halvings: int) -> List[int]:

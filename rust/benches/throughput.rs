@@ -1,0 +1,68 @@
+//! Serving throughput vs micro-batch size on the stub backend.
+//!
+//! Drives a 1-worker pool over synthetic STUBHLO artifacts at batch
+//! sizes {1, 2, 4} and emits `BENCH_throughput.json` (repo root) with
+//! images/s, steps/s and p95 latency per operating point.  The stub's
+//! per-dispatch weight digest models the fixed dispatch cost a real
+//! device pays, so the *shape* of the curve (B=4 > B=1) is the claim —
+//! absolute numbers are synthetic.
+//!
+//!     cargo bench --bench throughput            # full workload
+//!     cargo bench --bench throughput -- --fast  # CI smoke mode
+//!
+//! The same harness runs in fast mode under `cargo test`
+//! (rust/tests/batching.rs), which also enforces B=4 > B=1.
+
+use std::path::Path;
+
+use mobile_diffusion::testkit::throughput::{run_profile, to_json, Workload};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("THROUGHPUT_FAST").is_ok();
+    let wl = Workload::new(fast);
+    println!(
+        "== throughput vs micro-batch size (stub backend{}) ==",
+        if fast { ", fast mode" } else { "" }
+    );
+    println!(
+        "   {} requests x {} steps, 1 worker\n",
+        wl.requests, wl.steps
+    );
+
+    let rows = match run_profile("bench_throughput", &wl, &[1, 2, 4]) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("throughput bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "{:>6} {:>12} {:>12} {:>14} {:>12}",
+        "batch", "images/s", "steps/s", "p95 latency", "occupancy"
+    );
+    for r in &rows {
+        println!(
+            "{:>6} {:>12.2} {:>12.2} {:>11.1} ms {:>12.2}",
+            r.batch,
+            r.images_per_s,
+            r.steps_per_s,
+            r.p95_latency_s * 1e3,
+            r.mean_occupancy
+        );
+    }
+    let speedup = rows[2].images_per_s / rows[0].images_per_s.max(1e-12);
+    println!("\nB=4 vs B=1 speedup: {speedup:.2}x");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_throughput.json");
+    let json = to_json(&rows, fast);
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("wrote {}", out.display());
+    if speedup <= 1.0 {
+        eprintln!("FAIL: batching did not improve throughput");
+        std::process::exit(1);
+    }
+}

@@ -26,6 +26,9 @@ pub struct AppConfig {
     pub num_workers: usize,
     /// admission-queue capacity; submissions beyond it are rejected
     pub queue_depth: usize,
+    /// max compatible requests a worker drains into one micro-batched
+    /// denoise dispatch (1 = no cross-request batching)
+    pub max_batch: usize,
 }
 
 impl Default for AppConfig {
@@ -43,6 +46,7 @@ impl Default for AppConfig {
             out: None,
             num_workers: 1,
             queue_depth: 32,
+            max_batch: 1,
         }
     }
 }
@@ -104,6 +108,9 @@ impl AppConfig {
         if let Some(v) = j.get("queue_depth").as_usize() {
             self.queue_depth = v;
         }
+        if let Some(v) = j.get("max_batch").as_usize() {
+            self.max_batch = v;
+        }
     }
 
     /// Parse `--key value` / `--flag` CLI arguments (after the
@@ -159,6 +166,11 @@ impl AppConfig {
                         .parse()
                         .map_err(|e| Error::Config(format!("--queue-depth: {e}")))?;
                 }
+                "--max-batch" => {
+                    self.max_batch = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--max-batch: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
@@ -170,6 +182,9 @@ impl AppConfig {
         }
         if self.queue_depth == 0 {
             return Err(Error::Config("--queue-depth must be at least 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::Config("--max-batch must be at least 1".into()));
         }
         if !["base", "mobile"].contains(&self.variant.as_str()) {
             return Err(Error::Config(format!("bad variant {}", self.variant)));
@@ -231,18 +246,25 @@ mod tests {
         let mut c = AppConfig::default();
         assert_eq!(c.num_workers, 1, "single-phone default");
         assert_eq!(c.queue_depth, 32);
-        c.apply_args(&args(&["--workers", "4", "--queue-depth", "8"])).unwrap();
+        assert_eq!(c.max_batch, 1, "no cross-request batching by default");
+        c.apply_args(&args(&["--workers", "4", "--queue-depth", "8", "--max-batch", "4"]))
+            .unwrap();
         assert_eq!(c.num_workers, 4);
         assert_eq!(c.queue_depth, 8);
+        assert_eq!(c.max_batch, 4);
 
-        let j = Json::parse(r#"{"num_workers": 2, "queue_depth": 16}"#).unwrap();
+        let j = Json::parse(r#"{"num_workers": 2, "queue_depth": 16, "max_batch": 2}"#)
+            .unwrap();
         c.apply_json(&j);
         assert_eq!(c.num_workers, 2);
         assert_eq!(c.queue_depth, 16);
+        assert_eq!(c.max_batch, 2);
 
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--workers", "0"])).is_err());
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--queue-depth", "0"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--max-batch", "0"])).is_err());
     }
 }

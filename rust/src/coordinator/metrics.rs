@@ -125,6 +125,15 @@ pub struct PoolMetrics {
     pub rejected_full: usize,
     /// jobs dropped because their deadline passed before execution
     pub rejected_deadline: usize,
+    /// micro-batches dispatched by workers (a solo request counts as a
+    /// batch of one).  Occupancy is the queue-level co-scheduling
+    /// size; the executor may still split a group it cannot batch
+    /// (legacy scalar-timestep artifacts) into solo dispatches.
+    pub batches: usize,
+    /// largest batch occupancy observed
+    pub max_batch_occupancy: usize,
+    /// requests per dispatched batch
+    batch_occupancy: SampleWindow,
     /// seconds each executed request waited in the queue
     queue_wait: SampleWindow,
     /// queue wait + execution, per executed request
@@ -139,6 +148,9 @@ impl PoolMetrics {
             workers: vec![WorkerStats::default(); num_workers],
             rejected_full: 0,
             rejected_deadline: 0,
+            batches: 0,
+            max_batch_occupancy: 0,
+            batch_occupancy: SampleWindow::default(),
             queue_wait: SampleWindow::default(),
             e2e_latency: SampleWindow::default(),
             started: Instant::now(),
@@ -153,8 +165,24 @@ impl PoolMetrics {
         exec_s: f64,
         timings: Option<&StageTimings>,
     ) {
+        self.record_batch_member(worker, queue_s, exec_s, exec_s, timings);
+    }
+
+    /// Record one member of a dispatched batch.  `wall_s` is the batch
+    /// wall-clock (every member's end-to-end latency includes all of
+    /// it); `busy_share_s` is this member's share of worker busy time
+    /// (`wall / occupancy`), so utilization never exceeds 100% just
+    /// because requests shared a dispatch.
+    pub fn record_batch_member(
+        &mut self,
+        worker: usize,
+        queue_s: f64,
+        wall_s: f64,
+        busy_share_s: f64,
+        timings: Option<&StageTimings>,
+    ) {
         if let Some(w) = self.workers.get_mut(worker) {
-            w.busy_s += exec_s;
+            w.busy_s += busy_share_s;
             match timings {
                 Some(_) => w.requests_ok += 1,
                 None => w.requests_failed += 1,
@@ -165,7 +193,19 @@ impl PoolMetrics {
             None => self.stage.record_failure(),
         }
         self.queue_wait.push(queue_s);
-        self.e2e_latency.push(queue_s + exec_s);
+        self.e2e_latency.push(queue_s + wall_s);
+    }
+
+    /// Record one dispatched micro-batch of `occupancy` requests.
+    pub fn record_batch(&mut self, occupancy: usize) {
+        self.batches += 1;
+        self.max_batch_occupancy = self.max_batch_occupancy.max(occupancy);
+        self.batch_occupancy.push(occupancy as f64);
+    }
+
+    /// Mean requests per dispatched batch (0 before the first batch).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.batch_occupancy.summary().mean
     }
 
     pub fn record_rejected_full(&mut self) {
@@ -207,6 +247,14 @@ impl PoolMetrics {
         out.push_str(&format!(
             "queue: depth {queue_depth}, high-water {queue_max_depth}\n"
         ));
+        if self.batches > 0 {
+            out.push_str(&format!(
+                "batches: {} dispatched, occupancy mean {:.2}, max {}\n",
+                self.batches,
+                self.mean_batch_occupancy(),
+                self.max_batch_occupancy,
+            ));
+        }
         let lat = self.latency_summary();
         let wait = self.queue_wait_summary();
         if lat.count > 0 {
@@ -299,6 +347,29 @@ mod tests {
         assert!(report.contains("worker 0"), "{report}");
         assert!(report.contains("utilization"), "{report}");
         assert!(report.contains("p95"), "{report}");
+    }
+
+    #[test]
+    fn batch_occupancy_is_tracked_and_reported() {
+        let mut p = PoolMetrics::new(1);
+        let t = timings(1.0);
+        p.record_batch(4);
+        for _ in 0..4 {
+            p.record_batch_member(0, 0.1, 2.0, 0.5, Some(&t));
+        }
+        p.record_batch(2);
+        for _ in 0..2 {
+            p.record_batch_member(0, 0.1, 1.0, 0.5, Some(&t));
+        }
+        assert_eq!(p.batches, 2);
+        assert_eq!(p.max_batch_occupancy, 4);
+        assert!((p.mean_batch_occupancy() - 3.0).abs() < 1e-9);
+        // busy time is the per-member share, not the batch wall x members
+        assert!((p.workers[0].busy_s - 3.0).abs() < 1e-9);
+        // e2e latency includes the full batch wall
+        assert!((p.latency_summary().max - 2.1).abs() < 1e-9);
+        let report = p.report(0, 0);
+        assert!(report.contains("occupancy mean 3.00, max 4"), "{report}");
     }
 
     #[test]

@@ -26,6 +26,14 @@ use crate::pipeline::GenerateResult;
 /// executor wrapper in the server, and by mocks in tests.
 pub trait WorkerExecutor {
     fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult>;
+
+    /// Run a compatible micro-batch in one go, returning one result
+    /// per request in order.  The default runs them sequentially;
+    /// batching executors (the pipelined executor) override this to
+    /// share one CFG-batched UNet dispatch per denoise step.
+    fn execute_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Result<GenerateResult>> {
+        reqs.iter().map(|r| self.execute(r)).collect()
+    }
 }
 
 /// Channel on which a submitted request's response arrives.
@@ -45,15 +53,34 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Start `num_workers` workers (min 1).  `factory(worker_id)` runs
-    /// *on the worker thread* to build its executor; any factory error
-    /// aborts startup.
+    /// Start `num_workers` workers (min 1) that run one request at a
+    /// time.  `factory(worker_id)` runs *on the worker thread* to build
+    /// its executor; any factory error aborts startup.
     pub fn start<E, F>(num_workers: usize, queue_capacity: usize, factory: F) -> Result<WorkerPool>
     where
         E: WorkerExecutor + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
+        Self::start_batched(num_workers, queue_capacity, 1, factory)
+    }
+
+    /// Start a pool whose workers drain micro-batches: each dequeue
+    /// takes up to `max_batch` *compatible* queued requests (same
+    /// variant) and hands them to the executor as one batch.  Workers
+    /// never wait for a batch to fill — whatever is compatible at pop
+    /// time rides along.
+    pub fn start_batched<E, F>(
+        num_workers: usize,
+        queue_capacity: usize,
+        max_batch: usize,
+        factory: F,
+    ) -> Result<WorkerPool>
+    where
+        E: WorkerExecutor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
         let n = num_workers.max(1);
+        let max_batch = max_batch.max(1);
         let queue: Arc<JobQueue<WorkItem>> = Arc::new(JobQueue::new(queue_capacity));
         let metrics = Arc::new(Mutex::new(PoolMetrics::new(n)));
         let factory = Arc::new(factory);
@@ -79,7 +106,7 @@ impl WorkerPool {
                         }
                     };
                     drop(worker_ready);
-                    worker_loop(wid, executor, &worker_queue, &worker_metrics);
+                    worker_loop(wid, executor, &worker_queue, &worker_metrics, max_batch);
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -169,49 +196,94 @@ fn worker_loop<E: WorkerExecutor>(
     mut executor: E,
     queue: &JobQueue<WorkItem>,
     metrics: &Mutex<PoolMetrics>,
+    max_batch: usize,
 ) {
-    while let Some(job) = queue.pop() {
-        let queue_s = job.enqueued.elapsed().as_secs_f64();
-        let WorkItem { req, reply } = job.item;
+    // batch compatibility at the queue level: same requested variant
+    // (the executor re-checks and re-groups defensively)
+    while let Some(jobs) = queue.pop_batch(max_batch, |it: &WorkItem| it.req.variant.clone()) {
+        let mut reqs: Vec<GenerateRequest> = Vec::with_capacity(jobs.len());
+        let mut meta: Vec<(mpsc::Sender<Result<GenerateResponse>>, f64)> =
+            Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let queue_s = job.enqueued.elapsed().as_secs_f64();
+            let WorkItem { req, reply } = job.item;
 
-        // deadline-aware: don't burn a device slot on an expired request
-        if let Some(d) = job.deadline {
-            if Instant::now() > d {
-                metrics.lock().unwrap().record_rejected_deadline();
-                let _ = reply.send(Err(Error::Queue(format!(
-                    "request {} expired after {queue_s:.3}s in queue",
-                    req.id
-                ))));
-                continue;
+            // deadline-aware: don't burn a device slot on an expired
+            // request (its batchmates still run)
+            if let Some(d) = job.deadline {
+                if Instant::now() > d {
+                    metrics.lock().unwrap().record_rejected_deadline();
+                    let _ = reply.send(Err(Error::Queue(format!(
+                        "request {} expired after {queue_s:.3}s in queue",
+                        req.id
+                    ))));
+                    continue;
+                }
             }
+            reqs.push(req);
+            meta.push((reply, queue_s));
         }
+        if reqs.is_empty() {
+            continue;
+        }
+        let occupancy = reqs.len();
+        metrics.lock().unwrap().record_batch(occupancy);
 
         let t0 = Instant::now();
-        let result = executor.execute(&req);
-        let exec_s = t0.elapsed().as_secs_f64();
-        let resp = match result {
-            Ok(r) => {
-                metrics
-                    .lock()
-                    .unwrap()
-                    .record_executed(wid, queue_s, exec_s, Some(&r.timings));
-                Ok(GenerateResponse {
-                    id: req.id,
-                    image: r.image,
-                    image_size: r.image_size,
-                    latent: r.latent,
-                    timings: r.timings,
-                    peak_memory: r.peak_memory,
-                    queue_s,
-                    worker_id: wid,
+        let mut results = executor.execute_batch(&reqs);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let busy_share_s = wall_s / occupancy as f64;
+        let got = results.len();
+        if got != reqs.len() {
+            // defensive: a misbehaving executor must not strand callers
+            results = reqs
+                .iter()
+                .map(|r| {
+                    Err(Error::Runtime(format!(
+                        "executor returned {got} results for a batch of {} (request {})",
+                        reqs.len(),
+                        r.id
+                    )))
                 })
-            }
-            Err(e) => {
-                metrics.lock().unwrap().record_executed(wid, queue_s, exec_s, None);
-                Err(e)
-            }
-        };
-        let _ = reply.send(resp);
+                .collect();
+        }
+
+        for ((req, (reply, queue_s)), result) in
+            reqs.into_iter().zip(meta).zip(results)
+        {
+            let resp = match result {
+                Ok(r) => {
+                    metrics.lock().unwrap().record_batch_member(
+                        wid,
+                        queue_s,
+                        wall_s,
+                        busy_share_s,
+                        Some(&r.timings),
+                    );
+                    Ok(GenerateResponse {
+                        id: req.id,
+                        image: r.image,
+                        image_size: r.image_size,
+                        latent: r.latent,
+                        timings: r.timings,
+                        peak_memory: r.peak_memory,
+                        queue_s,
+                        worker_id: wid,
+                    })
+                }
+                Err(e) => {
+                    metrics.lock().unwrap().record_batch_member(
+                        wid,
+                        queue_s,
+                        wall_s,
+                        busy_share_s,
+                        None,
+                    );
+                    Err(e)
+                }
+            };
+            let _ = reply.send(resp);
+        }
     }
 }
 
@@ -334,6 +406,143 @@ mod tests {
             assert_eq!(m.rejected_deadline, 1);
             assert_eq!(m.stage.requests_ok, 1);
         });
+    }
+
+    /// Mock batching executor: records each batch's request ids, gated
+    /// so the test controls when each batch runs.
+    struct BatchRecordExec {
+        started: mpsc::Sender<()>,
+        gate: Arc<Mutex<mpsc::Receiver<()>>>,
+        batches: Arc<Mutex<Vec<Vec<u64>>>>,
+    }
+
+    impl WorkerExecutor for BatchRecordExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            Ok(GenerateResult {
+                image: vec![0.0; 4],
+                image_size: 2,
+                latent: vec![req.seed as f32],
+                timings: StageTimings { denoise_steps: 1, ..Default::default() },
+                peak_memory: 1,
+            })
+        }
+
+        fn execute_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Result<GenerateResult>> {
+            let _ = self.started.send(());
+            let _ = self.gate.lock().unwrap().recv();
+            self.batches
+                .lock()
+                .unwrap()
+                .push(reqs.iter().map(|r| r.id).collect());
+            reqs.iter().map(|r| self.execute(r)).collect()
+        }
+    }
+
+    #[test]
+    fn workers_drain_compatible_batches() {
+        let (started_tx, started_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let started_tx = Arc::new(Mutex::new(started_tx));
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let batches2 = Arc::clone(&batches);
+        let pool = WorkerPool::start_batched(1, 16, 3, move |_| {
+            Ok(BatchRecordExec {
+                started: started_tx.lock().unwrap().clone(),
+                gate: Arc::clone(&gate_rx),
+                batches: Arc::clone(&batches2),
+            })
+        })
+        .unwrap();
+
+        // job 1 occupies the worker (a batch of one)...
+        let rx1 = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        started_rx.recv().unwrap();
+        // ...meanwhile 4 compatible + 1 incompatible requests queue up
+        let mut rest = Vec::new();
+        for i in 2..=5 {
+            rest.push(
+                pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                    .unwrap(),
+            );
+        }
+        let mut base = GenerateRequest::new(6, "p", 6);
+        base.variant = Some("base".into());
+        rest.push(pool.submit(base, Priority::Normal, None).unwrap());
+
+        // four batches will run: [1], [2,3,4], [5], [6]
+        for _ in 0..4 {
+            gate_tx.send(()).unwrap();
+        }
+        rx1.recv().unwrap().unwrap();
+        for rx in rest {
+            rx.recv().unwrap().unwrap();
+        }
+        // batch 1: the solo head; batch 2: three compatibles (cap 3);
+        // then the leftover compatible rides with nothing — the "base"
+        // request is incompatible and runs alone
+        let seen = batches.lock().unwrap().clone();
+        assert_eq!(seen.len(), 4, "{seen:?}");
+        assert_eq!(seen[0], vec![1]);
+        assert_eq!(seen[1], vec![2, 3, 4]);
+        assert_eq!(seen[2], vec![5]);
+        assert_eq!(seen[3], vec![6]);
+
+        pool.with_metrics(|m| {
+            assert_eq!(m.batches, 4);
+            assert_eq!(m.max_batch_occupancy, 3);
+            assert_eq!(m.stage.requests_ok, 6);
+        });
+        let report = pool.metrics_report();
+        assert!(report.contains("occupancy"), "{report}");
+    }
+
+    #[test]
+    fn expired_member_is_dropped_but_batchmates_run() {
+        let (started_tx, started_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let started_tx = Arc::new(Mutex::new(started_tx));
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let batches2 = Arc::clone(&batches);
+        let pool = WorkerPool::start_batched(1, 16, 4, move |_| {
+            Ok(BatchRecordExec {
+                started: started_tx.lock().unwrap().clone(),
+                gate: Arc::clone(&gate_rx),
+                batches: Arc::clone(&batches2),
+            })
+        })
+        .unwrap();
+
+        let rx1 = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        started_rx.recv().unwrap();
+        // queued while the worker is busy: one with an immediate
+        // deadline, one without
+        let rx2 = pool
+            .submit(
+                GenerateRequest::new(2, "p", 2),
+                Priority::Normal,
+                Some(Duration::from_millis(1)),
+            )
+            .unwrap();
+        let rx3 = pool
+            .submit(GenerateRequest::new(3, "p", 3), Priority::Normal, None)
+            .unwrap();
+        thread::sleep(Duration::from_millis(30)); // let the deadline pass
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+
+        rx1.recv().unwrap().unwrap();
+        let err = rx2.recv().unwrap().expect_err("expired");
+        assert!(err.to_string().contains("expired"), "{err}");
+        rx3.recv().unwrap().unwrap();
+        let seen = batches.lock().unwrap().clone();
+        assert_eq!(seen, vec![vec![1], vec![3]], "request 2 never executed");
+        pool.with_metrics(|m| assert_eq!(m.rejected_deadline, 1));
     }
 
     #[test]

@@ -165,20 +165,22 @@ impl<T> JobQueue<T> {
         Ok(())
     }
 
-    /// Index of the job a worker should run next: highest priority
-    /// class, then earliest effective deadline, then FIFO.  `None`
-    /// when empty.
+    /// Scheduling order between two jobs: highest priority class, then
+    /// earliest effective deadline, then FIFO.
+    fn policy_cmp(a: &Job<T>, b: &Job<T>) -> std::cmp::Ordering {
+        a.priority
+            .cmp(&b.priority)
+            .then_with(|| a.effective_deadline().cmp(&b.effective_deadline()))
+            .then_with(|| a.seq.cmp(&b.seq))
+    }
+
+    /// Index of the job a worker should run next.  `None` when empty.
     fn next_index(inner: &Inner<T>) -> Option<usize> {
         inner
             .jobs
             .iter()
             .enumerate()
-            .min_by(|(_, a), (_, b)| {
-                a.priority
-                    .cmp(&b.priority)
-                    .then_with(|| a.effective_deadline().cmp(&b.effective_deadline()))
-                    .then_with(|| a.seq.cmp(&b.seq))
-            })
+            .min_by(|(_, a), (_, b)| Self::policy_cmp(a, b))
             .map(|(i, _)| i)
     }
 
@@ -188,6 +190,60 @@ impl<T> JobQueue<T> {
         loop {
             if let Some(i) = Self::next_index(&inner) {
                 return inner.jobs.remove(i);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.available.wait(inner).unwrap();
+        }
+    }
+
+    /// Batch-aware blocking pop: take the job the policy would run
+    /// next, then up to `max_batch - 1` further queued jobs whose
+    /// `key` matches it, in policy order — the worker dispatches them
+    /// as one micro-batch.  Never waits for a batch to fill: whatever
+    /// is compatible *now* rides along, a lone job runs solo.  The
+    /// returned jobs are in submission (FIFO) order.  `None` once
+    /// closed and drained.
+    pub fn pop_batch<K: PartialEq>(
+        &self,
+        max_batch: usize,
+        key: impl Fn(&T) -> K,
+    ) -> Option<Vec<Job<T>>> {
+        let cap = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // cap 1 (the default config) keeps the allocation-free
+            // single-pop scan; only real batching pays for the sort
+            if cap == 1 {
+                if let Some(i) = Self::next_index(&inner) {
+                    return inner.jobs.remove(i).map(|j| vec![j]);
+                }
+            } else if !inner.jobs.is_empty() {
+                let mut order: Vec<usize> = (0..inner.jobs.len()).collect();
+                order.sort_by(|&a, &b| {
+                    Self::policy_cmp(&inner.jobs[a], &inner.jobs[b])
+                });
+                let head_key = key(&inner.jobs[order[0]].item);
+                let mut picked: Vec<usize> = Vec::with_capacity(cap);
+                for &i in &order {
+                    if picked.len() >= cap {
+                        break;
+                    }
+                    if key(&inner.jobs[i].item) == head_key {
+                        picked.push(i);
+                    }
+                }
+                // remove back-to-front so indices stay valid
+                picked.sort_unstable();
+                let mut batch = Vec::with_capacity(picked.len());
+                for i in picked.into_iter().rev() {
+                    if let Some(j) = inner.jobs.remove(i) {
+                        batch.push(j);
+                    }
+                }
+                batch.reverse();
+                return Some(batch);
             }
             if inner.closed {
                 return None;
@@ -313,6 +369,53 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.push(42, Priority::Normal, None).unwrap();
         assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn pop_batch_takes_only_compatible_jobs_in_policy_order() {
+        // key = the job's parity; head decides the batch key
+        let q: JobQueue<u32> = JobQueue::new(16);
+        for v in [2u32, 3, 4, 5, 6] {
+            q.push(v, Priority::Normal, None).unwrap();
+        }
+        let batch = q.pop_batch(3, |v| v % 2);
+        let items: Vec<u32> = batch.unwrap().into_iter().map(|j| j.item).collect();
+        // head is 2 (FIFO); evens ride along up to the cap of 3
+        assert_eq!(items, vec![2, 4, 6]);
+        // odds remain, FIFO
+        let batch = q.pop_batch(3, |v| v % 2).unwrap();
+        let items: Vec<u32> = batch.into_iter().map(|j| j.item).collect();
+        assert_eq!(items, vec![3, 5]);
+    }
+
+    #[test]
+    fn pop_batch_respects_priority_for_the_head() {
+        let q: JobQueue<(u32, &'static str)> = JobQueue::new(16);
+        q.push((1, "a"), Priority::Normal, None).unwrap();
+        q.push((2, "b"), Priority::High, None).unwrap();
+        q.push((3, "b"), Priority::Normal, None).unwrap();
+        // head = the High job; key "b" pulls in job 3 but not job 1
+        let items: Vec<u32> = q
+            .pop_batch(4, |v| v.1)
+            .unwrap()
+            .into_iter()
+            .map(|j| j.item.0)
+            .collect();
+        assert_eq!(items, vec![2, 3]);
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn pop_batch_of_one_behaves_like_pop() {
+        let q: JobQueue<u32> = JobQueue::new(4);
+        q.push(7, Priority::Normal, None).unwrap();
+        q.push(8, Priority::Normal, None).unwrap();
+        let b = q.pop_batch(1, |_| ()).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].item, 7);
+        q.close();
+        assert_eq!(q.pop_batch(1, |_| ()).unwrap()[0].item, 8);
+        assert!(q.pop_batch(4, |_| ()).is_none(), "closed and drained");
     }
 
     #[test]

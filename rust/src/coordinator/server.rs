@@ -17,7 +17,7 @@ use crate::config::AppConfig;
 use crate::coordinator::pool::{ResponseReceiver, WorkerExecutor, WorkerPool};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
-use crate::pipeline::{GenerateResult, PipelinedExecutor};
+use crate::pipeline::{BatchRequest, GenerateResult, PipelinedExecutor};
 use crate::runtime::Manifest;
 
 /// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
@@ -32,11 +32,26 @@ impl WorkerExecutor for PipelineWorker {
         self.executor
             .generate_with(&req.prompt, req.seed, &self.default_variant, &req.overrides())
     }
+
+    /// A compatible batch shares one CFG-batched UNet dispatch per
+    /// denoise step (see `pipeline::batch`).
+    fn execute_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Result<GenerateResult>> {
+        let batch: Vec<BatchRequest> = reqs
+            .iter()
+            .map(|r| BatchRequest {
+                prompt: r.prompt.clone(),
+                seed: r.seed,
+                overrides: r.overrides(),
+            })
+            .collect();
+        self.executor.generate_batch(&batch, &self.default_variant)
+    }
 }
 
 pub struct Server {
     pool: WorkerPool,
     next_id: u64,
+    default_variant: String,
 }
 
 impl Server {
@@ -48,11 +63,16 @@ impl Server {
         let options = config.exec_options();
         let variant = config.variant.clone();
 
-        let pool = WorkerPool::start(config.num_workers, config.queue_depth, move |_wid| {
-            let executor = PipelinedExecutor::new(manifest.clone(), options.clone())?;
-            Ok(PipelineWorker { executor, default_variant: variant.clone() })
-        })?;
-        Ok(Server { pool, next_id: 0 })
+        let pool = WorkerPool::start_batched(
+            config.num_workers,
+            config.queue_depth,
+            config.max_batch,
+            move |_wid| {
+                let executor = PipelinedExecutor::new(manifest.clone(), options.clone())?;
+                Ok(PipelineWorker { executor, default_variant: variant.clone() })
+            },
+        )?;
+        Ok(Server { pool, next_id: 0, default_variant: config.variant.clone() })
     }
 
     /// Enqueue a generation with default scheduling (normal priority,
@@ -73,7 +93,12 @@ impl Server {
         self.next_id += 1;
         let mut req = GenerateRequest::new(self.next_id, prompt, seed);
         req.num_steps = opts.num_steps;
-        req.variant = opts.variant.clone();
+        // resolve the variant at admission so the queue's batch key
+        // groups "explicit default" with "no override" requests
+        req.variant = opts
+            .variant
+            .clone()
+            .or_else(|| Some(self.default_variant.clone()));
         req.guidance_scale = opts.guidance_scale;
         self.pool.submit(req, opts.priority, opts.deadline)
     }
@@ -105,5 +130,13 @@ impl Server {
 
     pub fn metrics_report(&self) -> Result<String> {
         Ok(self.pool.metrics_report())
+    }
+
+    /// Read-only access to the pool metrics (dashboards, benches).
+    pub fn with_metrics<R>(
+        &self,
+        f: impl FnOnce(&crate::coordinator::metrics::PoolMetrics) -> R,
+    ) -> R {
+        self.pool.with_metrics(f)
     }
 }

@@ -32,6 +32,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod scheduler;
+pub mod testkit;
 pub mod tokenizer;
 pub mod util;
 

@@ -30,7 +30,9 @@ COMMANDS:
              [--budget-mb X] [--no-pipeline] [--out FILE.png]
              [--artifacts DIR] [--guidance X] [--config FILE.json]
   serve      prompts from stdin, metrics on EOF (same flags, plus
-             [--workers N] [--queue-depth N] for the worker pool)
+             [--workers N] [--queue-depth N] [--max-batch N] for the
+             worker pool; compatible concurrent requests share one
+             CFG-batched UNet dispatch per denoise step)
   analyze    delegate report           <graph.json>
   passes     pass-pipeline report      <graph.json>
   info       manifest summary          [--artifacts DIR]

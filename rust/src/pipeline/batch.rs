@@ -1,0 +1,304 @@
+//! Cross-request micro-batching for the denoise loop.
+//!
+//! Two pieces live here:
+//!
+//! * **Batch formation** ([`form_batches`]): concurrent requests are
+//!   compatible when they run the same UNet executable — same
+//!   `(variant, weights_tag)` [`BatchKey`].  Step counts and guidance
+//!   scales do *not* split batches: guidance is applied on the host per
+//!   request, and the stepwise loop passes a per-CFG-row timestep, so
+//!   requests on different schedules share dispatches until their
+//!   schedules run out, at which point they leave the batch and the
+//!   remaining stragglers continue (eventually solo) — no request ever
+//!   waits for a longer-scheduled peer.
+//! * **The zero-realloc step plan** ([`StepBuffers`]): host staging
+//!   vectors and device buffers for the latent, timestep and context
+//!   activations are allocated once per batch composition.  Each step
+//!   rewrites the latent/timestep device buffers *in place*
+//!   (`write_buffer_f32`) and reads the dispatch output into reused
+//!   vectors — after the first step of a composition the loop performs
+//!   no host allocations and creates no device buffers.  This replaces
+//!   the seed loop's per-step `latent2.clone()` / `vec![t]` uploads.
+//!
+//! Batching changes activation shapes: a batch of `B` requests packs
+//! `B * cfg_rows` CFG rows into one dispatch (`cfg_rows` = 2: uncond
+//! then cond per request, matching the solo layout).  Real AOT
+//! executables are compiled per batch size; the vendored stub accepts
+//! any leading dimension and stands in for that executable set.  A
+//! model whose timestep input is a per-dispatch scalar (leading dim 1,
+//! the legacy artifact layout) cannot carry per-request timesteps, so
+//! [`supports_microbatch`] gates batches of more than one request on
+//! every activation being batch-major.
+
+use crate::error::{Error, Result};
+use crate::pipeline::executor::ExecOverrides;
+use crate::runtime::{write_buffer_f32, Component, Engine, Manifest};
+
+/// One generation request inside a micro-batch.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub prompt: String,
+    pub seed: u64,
+    pub overrides: ExecOverrides,
+}
+
+impl BatchRequest {
+    pub fn new(prompt: &str, seed: u64) -> BatchRequest {
+        BatchRequest {
+            prompt: prompt.to_string(),
+            seed,
+            overrides: ExecOverrides::default(),
+        }
+    }
+}
+
+/// Requests sharing a key run the same UNet executable and may share
+/// denoise dispatches.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub variant: String,
+    pub weights_tag: String,
+}
+
+/// A formed batch: positions into the submitted request slice, all
+/// carrying the same [`BatchKey`], in submission order.
+#[derive(Debug, Clone)]
+pub struct BatchGroup {
+    pub key: BatchKey,
+    pub indices: Vec<usize>,
+}
+
+/// Partition `reqs` into compatible groups of at most `max_batch`,
+/// first-fit in submission order (a request joins the earliest open
+/// compatible group, so co-batched requests preserve FIFO order).
+pub fn form_batches(
+    reqs: &[BatchRequest],
+    default_variant: &str,
+    weights_tag: &str,
+    max_batch: usize,
+) -> Vec<BatchGroup> {
+    let cap = max_batch.max(1);
+    let mut groups: Vec<BatchGroup> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let key = BatchKey {
+            variant: r
+                .overrides
+                .variant
+                .clone()
+                .unwrap_or_else(|| default_variant.to_string()),
+            weights_tag: weights_tag.to_string(),
+        };
+        match groups
+            .iter_mut()
+            .find(|g| g.key == key && g.indices.len() < cap)
+        {
+            Some(g) => g.indices.push(i),
+            None => groups.push(BatchGroup { key, indices: vec![i] }),
+        }
+    }
+    groups
+}
+
+/// Whether a variant's UNet can take micro-batches of more than one
+/// request: every declared activation must be batch-major (leading
+/// dimension == the manifest's CFG rows) so all inputs scale together,
+/// including a per-CFG-row timestep.  Legacy artifacts with a
+/// per-dispatch scalar timestep (leading dim 1) fail this and fall
+/// back to solo execution.  Checked against the manifest (not a loaded
+/// component) so batch formation never forces a load.
+pub fn supports_microbatch(manifest: &Manifest, variant: &str) -> bool {
+    let name = format!("unet_{variant}");
+    match manifest.component(&name) {
+        Ok(c) => {
+            let rows = manifest.cfg_batch;
+            !c.activations.is_empty()
+                && c.activations.iter().all(|a| a.shape.first() == Some(&rows))
+        }
+        Err(_) => false,
+    }
+}
+
+/// Reusable device-buffer plan for one batch composition of the
+/// denoise loop.  Activation argument order is the UNet's manifest
+/// order: 0 = latent, 1 = timestep, 2 = context.
+pub struct StepBuffers {
+    /// requests currently packed
+    batch: usize,
+    /// CFG rows per request in the latent/context inputs (2)
+    lat_rows: usize,
+    /// timestep rows per request (1 legacy scalar, or == lat_rows)
+    t_rows: usize,
+    /// latent elements per CFG row
+    row_elems: usize,
+    lat_host: Vec<f32>,
+    t_host: Vec<f32>,
+    lat_buf: Option<xla::PjRtBuffer>,
+    t_buf: Option<xla::PjRtBuffer>,
+    ctx_buf: Option<xla::PjRtBuffer>,
+    /// dispatch outputs, capacity reused across steps
+    pub out: Vec<Vec<f32>>,
+}
+
+impl StepBuffers {
+    /// Size the plan from the UNet's declared activation shapes; host
+    /// staging is reserved for `max_batch` requests up front so later
+    /// repacks never grow it.
+    pub fn for_unet(unet: &Component, max_batch: usize) -> Result<StepBuffers> {
+        if unet.act_shapes.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "{}: denoise expects 3 activations (latent, t, context), got {}",
+                unet.name,
+                unet.act_shapes.len()
+            )));
+        }
+        let lat = &unet.act_shapes[0];
+        let lat_rows = *lat.first().ok_or_else(|| {
+            Error::Runtime(format!("{}: rank-0 latent activation", unet.name))
+        })?;
+        if lat_rows != 2 {
+            return Err(Error::Runtime(format!(
+                "{}: unsupported CFG layout (want 2 rows/request, got {lat_rows})",
+                unet.name
+            )));
+        }
+        let row_elems: usize = lat[1..].iter().product();
+        let t_rows: usize = unet.act_shapes[1].iter().product::<usize>().max(1);
+        let cap = max_batch.max(1);
+        Ok(StepBuffers {
+            batch: 0,
+            lat_rows,
+            t_rows,
+            row_elems,
+            lat_host: Vec::with_capacity(cap * lat_rows * row_elems),
+            t_host: Vec::with_capacity(cap * t_rows),
+            lat_buf: None,
+            t_buf: None,
+            ctx_buf: None,
+            out: Vec::new(),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    /// Rebuild for a new batch composition: upload the packed context
+    /// rows (constant for the composition's lifetime) and drop the
+    /// stale latent/timestep buffers so the next dispatch recreates
+    /// them at the new size.  Called once per composition, not per
+    /// step.
+    pub fn repack(
+        &mut self,
+        engine: &Engine,
+        unet: &Component,
+        ctx: &[f32],
+        batch: usize,
+    ) -> Result<()> {
+        self.batch = batch;
+        self.lat_host.clear();
+        self.lat_host.resize(batch * self.lat_rows * self.row_elems, 0.0);
+        self.t_host.clear();
+        self.t_host.resize(batch * self.t_rows, 0.0);
+        self.ctx_buf = Some(unet.upload_f32_rows(engine, 2, ctx, batch)?);
+        self.lat_buf = None;
+        self.t_buf = None;
+        Ok(())
+    }
+
+    /// Stage one request's step inputs: its latent replicated into both
+    /// CFG rows of batch position `member`, and its current timestep.
+    pub fn pack(&mut self, member: usize, latent: &[f32], t: f32) {
+        debug_assert_eq!(latent.len(), self.row_elems);
+        for r in 0..self.lat_rows {
+            let at = (member * self.lat_rows + r) * self.row_elems;
+            self.lat_host[at..at + self.row_elems].copy_from_slice(latent);
+        }
+        for r in 0..self.t_rows {
+            self.t_host[member * self.t_rows + r] = t;
+        }
+    }
+
+    /// One denoise dispatch over the staged batch.  The first dispatch
+    /// of a composition creates the latent/timestep buffers; every
+    /// later one rewrites them in place — zero allocations, zero new
+    /// device buffers.  Results land in `self.out`.
+    pub fn dispatch(&mut self, engine: &Engine, unet: &Component) -> Result<()> {
+        match (self.lat_buf.as_mut(), self.t_buf.as_mut()) {
+            (Some(lb), Some(tb)) => {
+                write_buffer_f32(lb, &self.lat_host)?;
+                write_buffer_f32(tb, &self.t_host)?;
+            }
+            _ => {
+                self.lat_buf =
+                    Some(unet.upload_f32_rows(engine, 0, &self.lat_host, self.batch)?);
+                self.t_buf =
+                    Some(unet.upload_f32_rows(engine, 1, &self.t_host, self.batch)?);
+            }
+        }
+        let acts = [
+            self.lat_buf.as_ref().expect("latent buffer present"),
+            self.t_buf.as_ref().expect("timestep buffer present"),
+            self.ctx_buf.as_ref().ok_or_else(|| {
+                Error::Runtime("StepBuffers::dispatch before repack".into())
+            })?,
+        ];
+        unet.run_buffers_into(&acts, &mut self.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(variant: Option<&str>) -> BatchRequest {
+        let mut r = BatchRequest::new("p", 1);
+        r.overrides.variant = variant.map(|v| v.to_string());
+        r
+    }
+
+    #[test]
+    fn compatible_requests_group_up_to_max_batch() {
+        let reqs: Vec<BatchRequest> = (0..5).map(|_| req(None)).collect();
+        let groups = form_batches(&reqs, "mobile", "fp32", 4);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].indices, vec![0, 1, 2, 3]);
+        assert_eq!(groups[1].indices, vec![4]);
+        assert_eq!(groups[0].key.variant, "mobile");
+        assert_eq!(groups[0].key.weights_tag, "fp32");
+    }
+
+    #[test]
+    fn incompatible_variants_split_groups() {
+        let reqs = vec![req(None), req(Some("base")), req(Some("mobile")), req(Some("base"))];
+        let groups = form_batches(&reqs, "mobile", "fp32", 8);
+        // default variant "mobile" groups with the explicit "mobile"
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].key.variant, "mobile");
+        assert_eq!(groups[0].indices, vec![0, 2]);
+        assert_eq!(groups[1].key.variant, "base");
+        assert_eq!(groups[1].indices, vec![1, 3]);
+    }
+
+    #[test]
+    fn mismatched_num_steps_stay_in_one_group() {
+        // schedules diverge inside the denoise loop, not at formation
+        let mut a = req(None);
+        a.overrides.num_steps = Some(4);
+        let mut b = req(None);
+        b.overrides.num_steps = Some(20);
+        let groups = form_batches(&[a, b], "mobile", "fp32", 4);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].indices, vec![0, 1]);
+    }
+
+    #[test]
+    fn max_batch_zero_is_treated_as_one() {
+        let reqs = vec![req(None), req(None)];
+        let groups = form_batches(&reqs, "mobile", "fp32", 0);
+        assert_eq!(groups.len(), 2);
+    }
+}

@@ -1,12 +1,30 @@
-//! The pipelined executor — paper Sec. 3.3.
+//! The pipelined executor — paper Sec. 3.3, generalized to
+//! cross-request micro-batches.
 //!
 //! Text-to-image under a device memory budget:
 //!
 //! 1. acquire the denoising UNet (cached across requests);
-//! 2. acquire the text encoder, encode cond + uncond prompts, evict it;
+//! 2. acquire the text encoder, encode each request's cond prompt (the
+//!    uncond `""` context is computed once and cached across requests
+//!    per weights tag), evict it;
 //! 3. start the decoder prefetch on a child thread and run the DDIM
 //!    denoise loop, polling the prefetch between steps;
-//! 4. finalize the decoder (device compile + upload), decode, evict.
+//! 4. finalize the decoder (device compile + upload), decode each
+//!    request, evict.
+//!
+//! The denoise loop is **batched**: all requests of a compatible group
+//! (same UNet executable, see [`crate::pipeline::batch`]) share one
+//! CFG-batched dispatch per step, with per-request timesteps and
+//! host-side per-request guidance.  Requests on shorter schedules
+//! leave the batch when their schedule ends; the stragglers continue
+//! (eventually solo).  A solo `generate` is simply a batch of one, so
+//! batched and solo runs share every line of arithmetic — which is
+//! what makes them bit-identical.
+//!
+//! The step loop runs on a reusable device-buffer plan
+//! ([`crate::pipeline::batch::StepBuffers`]): buffers are created once
+//! per batch composition and rewritten in place each step — no per-step
+//! `clone()`s, `vec![t]`s, or fresh device buffers.
 //!
 //! Peak memory ~= unet + max(text_encoder, decoder) instead of the sum
 //! of all three (the non-pipelined baseline, also implemented here for
@@ -22,6 +40,7 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::pipeline::batch::{form_batches, BatchKey, BatchRequest, StepBuffers};
 use crate::pipeline::loader::Prefetcher;
 use crate::pipeline::residency::{ResidencyManager, Retention};
 use crate::pipeline::trace::MemoryTrace;
@@ -33,6 +52,10 @@ use crate::util::rng::Rng;
 /// A cached component handle (reference-counted: the residency cache
 /// and in-flight stages share ownership within a worker thread).
 pub type ResidentComponent = Rc<Component>;
+
+/// Weights tag of the text encoder and decoder (only the UNet ships
+/// multiple precisions).
+const AUX_TAG: &str = "fp32";
 
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -95,13 +118,49 @@ pub struct PipelinedExecutor {
     pub manifest: Manifest,
     pub residency: ResidencyManager<ResidentComponent>,
     pub options: ExecOptions,
+    /// DDIM built once from the manifest and reused by every request
+    /// (guidance is applied host-side per request, not by the sampler).
+    ddim: Ddim,
+    /// uncond ("") text context, reused across requests; invalidated
+    /// when the encoder is evicted from the cache (`evict_idle`,
+    /// failure purge).  The text encoder ships a single weights tag
+    /// ([`AUX_TAG`]), so one slot covers the (component, tag) key; a
+    /// multi-precision encoder would widen this to a keyed map.
+    uncond_ctx: Option<Rc<Vec<f32>>>,
+}
+
+/// One request's denoise-loop state inside a batch.
+struct Member {
+    /// per-request step schedule (descending timesteps)
+    ts: Vec<usize>,
+    guidance: f64,
+    latent: Vec<f32>,
+    eps: Vec<f32>,
+    cond: Vec<f32>,
+}
+
+struct StageOutput {
+    image: Vec<f32>,
+    latent: Vec<f32>,
+    steps: usize,
 }
 
 impl PipelinedExecutor {
     pub fn new(manifest: Manifest, options: ExecOptions) -> Result<PipelinedExecutor> {
         let engine = Engine::new()?;
         let residency = ResidencyManager::new(options.memory_budget);
-        Ok(PipelinedExecutor { engine, manifest, residency, options })
+        let ddim = Ddim::from_alphas(
+            manifest.scheduler.params.clone(),
+            manifest.scheduler.alphas_cumprod.clone(),
+        );
+        Ok(PipelinedExecutor {
+            engine,
+            manifest,
+            residency,
+            options,
+            ddim,
+            uncond_ctx: None,
+        })
     }
 
     /// Resident-bytes of a component at a weights tag, from the manifest
@@ -133,8 +192,10 @@ impl PipelinedExecutor {
     }
 
     /// Drop every component no request is using (e.g. between traffic
-    /// bursts); returns the bytes freed.
+    /// bursts); returns the bytes freed.  Evicting the text encoder
+    /// invalidates the derived uncond-context cache with it.
     pub fn evict_idle(&mut self) -> usize {
+        self.uncond_ctx = None;
         self.residency.evict_idle()
     }
 
@@ -153,7 +214,9 @@ impl PipelinedExecutor {
         self.generate_with(prompt, seed, variant, &ExecOverrides::default())
     }
 
-    /// Full text-to-image generation with per-request overrides.
+    /// Full text-to-image generation with per-request overrides — a
+    /// micro-batch of one, so solo runs share the batched code path
+    /// (and its numerics) exactly.
     pub fn generate_with(
         &mut self,
         prompt: &str,
@@ -161,156 +224,288 @@ impl PipelinedExecutor {
         variant: &str,
         overrides: &ExecOverrides,
     ) -> Result<GenerateResult> {
-        let t_start = Instant::now();
-        let mut tm = StageTimings::default();
-        let variant = overrides.variant.as_deref().unwrap_or(variant).to_string();
-        let num_steps = overrides.num_steps.unwrap_or(self.options.num_steps);
-        let guidance = overrides.guidance_scale.unwrap_or(self.options.guidance_scale);
-
-        // ---- UNet resident (cached across requests) ------------------------
-        let unet_name = format!("unet_{variant}");
-        let unet_tag = self.options.unet_weights.clone();
-        let t0 = Instant::now();
-        let unet = self.acquire_component(&unet_name, &unet_tag)?;
-        tm.unet_load_s = t0.elapsed().as_secs_f64();
-
-        let result = self.run_stages(prompt, seed, num_steps, guidance, unet, &mut tm);
-        if result.is_err() {
-            // a failed request must not leak pins into the next one
-            self.residency.purge("text_encoder", "fp32");
-            self.residency.purge("decoder", "fp32");
-        }
-        // unpin the UNet but keep it cached — the paper's app behaviour
-        let _ = self.residency.release(&unet_name, &unet_tag, Retention::Cache);
-
-        let stages = result?;
-        tm.total_s = t_start.elapsed().as_secs_f64();
-        Ok(GenerateResult {
-            image: stages.image,
-            image_size: self.manifest.image_size,
-            latent: stages.latent,
-            timings: tm,
-            peak_memory: self.residency.peak(),
-        })
+        let req = BatchRequest {
+            prompt: prompt.to_string(),
+            seed,
+            overrides: overrides.clone(),
+        };
+        self.generate_batch(std::slice::from_ref(&req), variant)
+            .pop()
+            .unwrap_or_else(|| Err(Error::Runtime("empty generation batch".into())))
     }
 
-    /// Everything between UNet acquisition and the final image: text
-    /// encode, denoise with decoder prefetch overlap, decode.
-    fn run_stages(
+    /// Generate a micro-batch of requests.  Requests are grouped by
+    /// compatibility (same UNet executable); each group shares one
+    /// CFG-batched UNet dispatch per denoise step.  Results come back
+    /// in submission order, one per request — a failed decode fails
+    /// only its own request, a failed shared stage fails its group.
+    pub fn generate_batch(
         &mut self,
-        prompt: &str,
-        seed: u64,
-        num_steps: usize,
-        guidance: f64,
+        reqs: &[BatchRequest],
+        default_variant: &str,
+    ) -> Vec<Result<GenerateResult>> {
+        let mut slots: Vec<Option<Result<GenerateResult>>> =
+            reqs.iter().map(|_| None).collect();
+        let groups = form_batches(
+            reqs,
+            default_variant,
+            &self.options.unet_weights,
+            reqs.len().max(1),
+        );
+        for g in &groups {
+            // Legacy artifacts with a per-dispatch scalar timestep
+            // cannot carry per-request schedules: fall back to solo.
+            let batchable = crate::pipeline::batch::supports_microbatch(
+                &self.manifest,
+                &g.key.variant,
+            );
+            let runs: Vec<Vec<usize>> = if g.indices.len() > 1 && !batchable {
+                g.indices.iter().map(|&i| vec![i]).collect()
+            } else {
+                vec![g.indices.clone()]
+            };
+            for idx_set in runs {
+                match self.run_group(&g.key, reqs, &idx_set) {
+                    Ok(results) => {
+                        for (&slot, r) in idx_set.iter().zip(results) {
+                            slots[slot] = Some(r);
+                        }
+                    }
+                    Err(e) => {
+                        for &slot in &idx_set {
+                            slots[slot] = Some(Err(e.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| Err(Error::Runtime("request not scheduled".into())))
+            })
+            .collect()
+    }
+
+    /// Run one compatible group end-to-end.  Outer `Err` = a shared
+    /// stage failed (whole group); inner per-member results cover the
+    /// decode stage.
+    fn run_group(
+        &mut self,
+        key: &BatchKey,
+        reqs: &[BatchRequest],
+        indices: &[usize],
+    ) -> Result<Vec<Result<GenerateResult>>> {
+        let t_start = Instant::now();
+        let mut tm = StageTimings::default();
+
+        // ---- UNet resident (cached across requests) --------------------
+        let unet_name = format!("unet_{}", key.variant);
+        let t0 = Instant::now();
+        let unet = self.acquire_component(&unet_name, &key.weights_tag)?;
+        tm.unet_load_s = t0.elapsed().as_secs_f64();
+
+        let result = self.run_group_stages(reqs, indices, unet, &mut tm);
+        if result.is_err() {
+            // a failed group must not leak pins into the next one; the
+            // purged encoder takes its cached uncond context with it
+            self.residency.purge("text_encoder", AUX_TAG);
+            self.residency.purge("decoder", AUX_TAG);
+            self.uncond_ctx = None;
+        }
+        // unpin the UNet but keep it cached — the paper's app behaviour
+        let _ = self.residency.release(&unet_name, &key.weights_tag, Retention::Cache);
+
+        // max_steps comes from the member schedules (not the surviving
+        // outputs): the denoise wall covers max_steps dispatches, and a
+        // member that participated in only `steps` of them is charged
+        // its share so the per-step stage metric stays truthful for
+        // stragglers even when another member's decode failed
+        let (stages, max_steps) = result?;
+        tm.total_s = t_start.elapsed().as_secs_f64();
+        let image_size = self.manifest.image_size;
+        let peak = self.residency.peak();
+        Ok(stages
+            .into_iter()
+            .map(|s| {
+                s.map(|so| {
+                    let mut t = tm.clone();
+                    t.denoise_steps = so.steps;
+                    if max_steps > 0 {
+                        t.denoise_s = tm.denoise_s * so.steps as f64 / max_steps as f64;
+                    }
+                    GenerateResult {
+                        image: so.image,
+                        image_size,
+                        latent: so.latent,
+                        timings: t,
+                        peak_memory: peak,
+                    }
+                })
+            })
+            .collect())
+    }
+
+    /// Everything between UNet acquisition and the final images: text
+    /// encode, batched denoise with decoder prefetch overlap, decode.
+    /// Returns the per-member stage outputs plus the number of denoise
+    /// dispatches the batch ran (`max_steps` over member schedules).
+    fn run_group_stages(
+        &mut self,
+        reqs: &[BatchRequest],
+        indices: &[usize],
         unet: ResidentComponent,
         tm: &mut StageTimings,
-    ) -> Result<StageOutput> {
-        // ---- non-pipelined baseline: everything resident up front ----------
-        let decoder_bytes = self.stored_bytes("decoder", "fp32")?;
+    ) -> Result<(Vec<Result<StageOutput>>, usize)> {
+        // ---- non-pipelined baseline: everything resident up front ------
+        let decoder_bytes = self.stored_bytes("decoder", AUX_TAG)?;
         let decoder_manifest = self.manifest.component("decoder")?.clone();
         let mut decoder: Option<ResidentComponent> = None;
         if !self.options.pipelined {
             let t0 = Instant::now();
-            decoder = Some(self.acquire_component("decoder", "fp32")?);
+            decoder = Some(self.acquire_component("decoder", AUX_TAG)?);
             tm.decoder_load_s = t0.elapsed().as_secs_f64();
         }
 
-        // ---- text encode (acquire -> encode -> evict) ----------------------
+        // ---- text encode (acquire -> encode -> evict) ------------------
         let t0 = Instant::now();
-        let text = self.acquire_component("text_encoder", "fp32")?;
+        let text = self.acquire_component("text_encoder", AUX_TAG)?;
         tm.text_load_s = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
         let seq = self.manifest.tokenizer.seq_len;
         let vocab = self.manifest.tokenizer.vocab_size;
-        let cond_ids = tokenizer::encode(prompt, vocab, seq);
-        let uncond_ids = tokenizer::encode("", vocab, seq);
-        let cond_ctx = text.run(&self.engine, &[ActInput::i32(cond_ids)])?;
-        let uncond_ctx = text.run(&self.engine, &[ActInput::i32(uncond_ids)])?;
+        // the uncond ("") context depends only on the encoder weights:
+        // one dispatch the first time, a cache hit for every request
+        // after — each generation costs one encoder dispatch, not two
+        let uncond = match self.uncond_ctx.clone() {
+            Some(c) => c,
+            None => {
+                let ids = tokenizer::encode("", vocab, seq);
+                let out = text.run(&self.engine, &[ActInput::i32(ids)])?;
+                let rc = Rc::new(out.into_iter().next().unwrap_or_default());
+                self.uncond_ctx = Some(Rc::clone(&rc));
+                rc
+            }
+        };
+
+        let s = self.manifest.latent_size;
+        let c = self.manifest.latent_channels;
+        let n_latent = s * s * c;
+        let mut members: Vec<Member> = Vec::with_capacity(indices.len());
+        for &slot in indices {
+            let r = &reqs[slot];
+            let num_steps = r.overrides.num_steps.unwrap_or(self.options.num_steps);
+            let guidance = r
+                .overrides
+                .guidance_scale
+                .unwrap_or(self.options.guidance_scale);
+            let ids = tokenizer::encode(&r.prompt, vocab, seq);
+            let cond = text
+                .run(&self.engine, &[ActInput::i32(ids)])?
+                .into_iter()
+                .next()
+                .unwrap_or_default();
+            let mut rng = Rng::new(r.seed);
+            members.push(Member {
+                ts: self.ddim.timesteps(num_steps),
+                guidance,
+                latent: rng.normal_f32_vec(n_latent),
+                eps: vec![0f32; n_latent],
+                cond,
+            });
+        }
         tm.text_encode_s = t0.elapsed().as_secs_f64();
 
         drop(text);
-        self.residency.release("text_encoder", "fp32", Retention::Evict)?;
+        self.residency.release("text_encoder", AUX_TAG, Retention::Evict)?;
         self.residency.mark("text-encoder-evicted");
 
-        // context2: uncond then cond halves, (2, S, D)
-        let mut context2 = uncond_ctx[0].clone();
-        context2.extend_from_slice(&cond_ctx[0]);
-
-        // ---- denoise loop with decoder prefetch overlap --------------------
+        // ---- batched denoise loop with decoder prefetch overlap --------
         let mut prefetch = if self.options.pipelined {
-            Some(Prefetcher::spawn(&self.manifest, &decoder_manifest, "fp32")?)
+            Some(Prefetcher::spawn(&self.manifest, &decoder_manifest, AUX_TAG)?)
         } else {
             None // baseline: decoder already resident
         };
         let mut prefetch_charged = false;
 
         let t0 = Instant::now();
-        let ddim = Ddim::from_alphas(
+        let PipelinedExecutor { engine, residency, ddim, .. } = self;
+
+        let mut sb = StepBuffers::for_unet(&unet, members.len())?;
+        let max_steps = members.iter().map(|m| m.ts.len()).max().unwrap_or(0);
+        let mut ctx_host: Vec<f32> = Vec::with_capacity(members.len() * 2 * uncond.len());
+        // force a repack (context upload + fresh step buffers) on entry
+        // and whenever a member's schedule ends and the batch shrinks
+        let mut live_count = usize::MAX;
+        for step in 0..max_steps {
+            let n_live = members.iter().filter(|m| m.ts.len() > step).count();
+            if n_live != live_count {
+                live_count = n_live;
+                ctx_host.clear();
+                for m in members.iter().filter(|m| m.ts.len() > step) {
+                    // context rows per request: uncond then cond,
+                    // matching the solo CFG layout
+                    ctx_host.extend_from_slice(&uncond);
+                    ctx_host.extend_from_slice(&m.cond);
+                }
+                sb.repack(engine, &unet, &ctx_host, n_live)?;
+            }
+            for (k, m) in members.iter().filter(|m| m.ts.len() > step).enumerate() {
+                sb.pack(k, &m.latent, m.ts[step] as f32);
+            }
+            // one CFG-batched UNet dispatch for the whole live batch
+            sb.dispatch(engine, &unet)?;
+
+            let n = sb.row_elems();
+            let eps2 = &sb.out[0];
+            for (k, m) in members
+                .iter_mut()
+                .filter(|m| m.ts.len() > step)
+                .enumerate()
             {
-                let mut p = self.manifest.scheduler.params.clone();
-                p.guidance_scale = guidance;
-                p
-            },
-            self.manifest.scheduler.alphas_cumprod.clone(),
-        );
-        let ts = ddim.timesteps(num_steps);
-
-        let s = self.manifest.latent_size;
-        let c = self.manifest.latent_channels;
-        let n_latent = s * s * c;
-        let mut rng = Rng::new(seed);
-        let mut latent: Vec<f32> = rng.normal_f32_vec(n_latent);
-
-        let mut eps = vec![0f32; n_latent];
-        let mut latent2 = vec![0f32; 2 * n_latent];
-        // the context is constant across the whole denoise loop: upload
-        // it once and keep the device buffer resident (saves one
-        // host->device copy per step)
-        let ctx_buf = unet.upload(&self.engine, 2, &ActInput::F32(context2.clone()))?;
-        for (i, &t) in ts.iter().enumerate() {
-            latent2[..n_latent].copy_from_slice(&latent);
-            latent2[n_latent..].copy_from_slice(&latent);
-            let lat_buf = unet.upload(&self.engine, 0, &ActInput::F32(latent2.clone()))?;
-            let t_buf = unet.upload(&self.engine, 1, &ActInput::F32(vec![t as f32]))?;
-            let out = unet.run_buffers(&[&lat_buf, &t_buf, &ctx_buf])?;
-            let eps2 = &out[0];
-            guide(&eps2[..n_latent], &eps2[n_latent..], guidance, &mut eps);
-            let t_prev = ts.get(i + 1).copied();
-            ddim.step(&mut latent, &eps, t, t_prev);
+                let base = 2 * k * n;
+                guide(
+                    &eps2[base..base + n],
+                    &eps2[base + n..base + 2 * n],
+                    m.guidance,
+                    &mut m.eps,
+                );
+                let t_prev = m.ts.get(step + 1).copied();
+                ddim.step(&mut m.latent, &m.eps, m.ts[step], t_prev);
+            }
 
             // charge the decoder prefetch as soon as its bytes land
             if let Some(p) = prefetch.as_mut() {
                 if !prefetch_charged && p.poll() {
-                    self.residency.reserve("decoder", "fp32", decoder_bytes)?;
-                    self.residency.mark(&format!("decoder-prefetched@step{i}"));
+                    residency.reserve("decoder", AUX_TAG, decoder_bytes)?;
+                    residency.mark(&format!("decoder-prefetched@step{step}"));
                     prefetch_charged = true;
                 }
             }
         }
         tm.denoise_s = t0.elapsed().as_secs_f64();
-        tm.denoise_steps = ts.len();
-        self.residency.mark("denoise-done");
+        residency.mark("denoise-done");
 
-        // ---- decode ---------------------------------------------------------
+        // ---- decode -----------------------------------------------------
         if let Some(p) = prefetch.take() {
             let t0 = Instant::now();
             let pf = p.join()?;
             if !prefetch_charged {
-                self.residency.reserve("decoder", "fp32", decoder_bytes)?;
+                residency.reserve("decoder", AUX_TAG, decoder_bytes)?;
             }
             let loaded = Component::load_from_parts(
-                &self.engine,
+                engine,
                 &pf.hlo_text_path,
                 &decoder_manifest,
                 &pf.weights,
             );
             match loaded {
                 Ok(c) => {
-                    decoder = Some(self.residency.fulfill("decoder", "fp32", Rc::new(c))?);
+                    decoder = Some(residency.fulfill("decoder", AUX_TAG, Rc::new(c))?);
                 }
                 Err(e) => {
-                    let _ = self.residency.cancel("decoder", "fp32");
+                    let _ = residency.cancel("decoder", AUX_TAG);
                     return Err(e);
                 }
             }
@@ -318,17 +513,23 @@ impl PipelinedExecutor {
         }
         let dec = decoder.expect("decoder loaded");
         let t0 = Instant::now();
-        let img = dec.run(&self.engine, &[ActInput::F32(latent.clone())])?;
+        let mut outputs: Vec<Result<StageOutput>> = Vec::with_capacity(members.len());
+        for m in members {
+            let img = dec.run(engine, &[ActInput::F32(m.latent.clone())]);
+            match img {
+                Ok(out) => outputs.push(Ok(StageOutput {
+                    image: out.into_iter().next().unwrap_or_default(),
+                    latent: m.latent,
+                    steps: m.ts.len(),
+                })),
+                Err(e) => outputs.push(Err(e)),
+            }
+        }
         tm.decode_s = t0.elapsed().as_secs_f64();
         drop(dec);
-        self.residency.release("decoder", "fp32", Retention::Evict)?;
-        self.residency.mark("decoder-evicted");
+        residency.release("decoder", AUX_TAG, Retention::Evict)?;
+        residency.mark("decoder-evicted");
 
-        Ok(StageOutput { image: img.into_iter().next().unwrap_or_default(), latent })
+        Ok((outputs, max_steps))
     }
-}
-
-struct StageOutput {
-    image: Vec<f32>,
-    latent: Vec<f32>,
 }

@@ -1,13 +1,16 @@
 //! Pipelined execution (paper Sec. 3.3): memory ledger + occupancy
 //! trace, child-thread component prefetch, the shared component
-//! residency layer, and the stage-interleaved executor.
+//! residency layer, the cross-request micro-batcher, and the
+//! stage-interleaved executor.
 
+pub mod batch;
 pub mod executor;
 pub mod loader;
 pub mod memory;
 pub mod residency;
 pub mod trace;
 
+pub use batch::{form_batches, BatchGroup, BatchKey, BatchRequest, StepBuffers};
 pub use executor::{
     ExecOptions, ExecOverrides, GenerateResult, PipelinedExecutor, ResidentComponent,
     StageTimings,

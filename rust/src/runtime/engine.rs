@@ -32,6 +32,13 @@ impl Engine {
         self.client.platform_name()
     }
 
+    /// This engine's device counters (transfers, in-place writes,
+    /// per-program dispatches) — used by tests and benchmarks to pin
+    /// down hot-loop behaviour without instrumenting the loop itself.
+    pub fn device_stats(&self) -> std::sync::Arc<xla::DeviceStats> {
+        self.client.stats()
+    }
+
     /// Compile an HLO-text artifact.
     pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
@@ -172,6 +179,40 @@ impl Component {
         }
     }
 
+    /// Upload an f32 activation whose leading (batch) dimension is the
+    /// manifest's, scaled by `batch` — the micro-batched denoise path
+    /// packs `batch` requests' CFG rows into one dispatch.  `batch == 1`
+    /// reproduces the manifest shape exactly.
+    ///
+    /// Note: a real AOT executable is compiled at a fixed batch size;
+    /// serving at several sizes means one executable per size.  The
+    /// vendored stub accepts any leading dimension, standing in for
+    /// that per-batch-size executable set.
+    pub fn upload_f32_rows(
+        &self,
+        engine: &Engine,
+        idx: usize,
+        data: &[f32],
+        batch: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        let mut shape = self.act_shapes[idx].clone();
+        if let Some(d0) = shape.first_mut() {
+            *d0 *= batch.max(1);
+        }
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(Error::Runtime(format!(
+                "{}: activation {idx} at batch {batch} wants {want} elements, got {}",
+                self.name,
+                data.len()
+            )));
+        }
+        engine
+            .client
+            .buffer_from_host_buffer::<f32>(data, &shape, None)
+            .map_err(xerr)
+    }
+
     /// Execute with f32/i32 activation inputs (in manifest order).
     /// Returns the flattened f32 outputs (one vec per output tensor).
     pub fn run(&self, engine: &Engine, acts: &[ActInput]) -> Result<Vec<Vec<f32>>> {
@@ -193,6 +234,20 @@ impl Component {
 
     /// Execute with pre-uploaded activation buffers (in manifest order).
     pub fn run_buffers(&self, acts: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        self.run_buffers_into(acts, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute with pre-uploaded activation buffers, writing the
+    /// flattened f32 outputs into caller-owned vectors whose capacity
+    /// is reused across calls — the zero-realloc read-back of the
+    /// serving hot loop.
+    pub fn run_buffers_into(
+        &self,
+        acts: &[&xla::PjRtBuffer],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         let mut args: Vec<&xla::PjRtBuffer> =
             Vec::with_capacity(self.weight_bufs.len() + acts.len());
         args.extend(self.weight_bufs.iter());
@@ -202,15 +257,25 @@ impl Component {
         let lit = result[0][0].to_literal_sync().map_err(xerr)?;
         // the AOT path lowers with return_tuple=True
         let tuple = lit.to_tuple().map_err(xerr)?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(xerr))
-            .collect()
+        if out.len() != tuple.len() {
+            out.resize_with(tuple.len(), Vec::new);
+        }
+        for (slot, l) in out.iter_mut().zip(&tuple) {
+            l.copy_into_f32(slot).map_err(xerr)?;
+        }
+        Ok(())
     }
 
     pub fn resident_bytes(&self) -> usize {
         self.stats.weight_bytes_resident
     }
+}
+
+/// Rewrite an existing device buffer in place from host f32 data (the
+/// donated-buffer fast path: no allocation, no new buffer).  The dtype
+/// and element count must match the buffer exactly.
+pub fn write_buffer_f32(buf: &mut xla::PjRtBuffer, data: &[f32]) -> Result<()> {
+    buf.write_from_host::<f32>(data).map_err(xerr)
 }
 
 /// Activation input payload.

@@ -6,4 +6,4 @@ pub mod artifact;
 pub mod engine;
 
 pub use artifact::{ComponentManifest, Manifest, ParamSpec, TensorSpec};
-pub use engine::{ActInput, Component, Engine, LoadStats};
+pub use engine::{write_buffer_f32, ActInput, Component, Engine, LoadStats};

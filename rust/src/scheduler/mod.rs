@@ -58,13 +58,14 @@ impl Ddim {
         Ddim { params, alphas_cumprod }
     }
 
-    /// DDIM stride schedule: evenly spaced, descending.
+    /// DDIM schedule: exactly `num_steps` evenly spaced timesteps,
+    /// descending, ending at 0.  (`t_i = i * T / num_steps` — the
+    /// linspace form; the old stride form returned *more* than
+    /// `num_steps` entries whenever `T % num_steps != 0`.)
     pub fn timesteps(&self, num_steps: usize) -> Vec<usize> {
-        let stride = self.params.num_train_timesteps / num_steps;
-        (0..self.params.num_train_timesteps)
-            .step_by(stride.max(1))
-            .rev()
-            .collect()
+        let t = self.params.num_train_timesteps;
+        let n = num_steps.clamp(1, t.max(1));
+        (0..n).map(|i| i * t / n).rev().collect()
     }
 
     /// Progressive-distillation schedule: `halvings` halves the count.
@@ -96,10 +97,9 @@ impl Ddim {
 pub fn guide(eps_uncond: &[f32], eps_cond: &[f32], scale: f64, out: &mut [f32]) {
     assert_eq!(eps_uncond.len(), eps_cond.len());
     assert_eq!(out.len(), eps_cond.len());
-    for i in 0..out.len() {
-        let u = eps_uncond[i] as f64;
-        let c = eps_cond[i] as f64;
-        out[i] = (u + scale * (c - u)) as f32;
+    for ((o, &u), &c) in out.iter_mut().zip(eps_uncond).zip(eps_cond) {
+        let (u, c) = (u as f64, c as f64);
+        *o = (u + scale * (c - u)) as f32;
     }
 }
 
@@ -126,8 +126,42 @@ mod tests {
         let d = ddim();
         let ts = d.timesteps(20);
         assert_eq!(ts.len(), 20);
+        assert_eq!(ts[0], 950, "n | T keeps the classic stride schedule");
         assert_eq!(*ts.last().unwrap(), 0);
         assert!(ts.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn timesteps_exact_count_for_non_divisible_n() {
+        // the old stride schedule yielded 14 steps for n = 13
+        let d = ddim();
+        assert_eq!(d.timesteps(13).len(), 13);
+        assert_eq!(d.timesteps(7).len(), 7);
+    }
+
+    #[test]
+    fn timesteps_property_over_1_to_50() {
+        let d = ddim();
+        let t = d.params.num_train_timesteps;
+        for n in 1..=50 {
+            let ts = d.timesteps(n);
+            assert_eq!(ts.len(), n, "exactly n steps for n = {n}");
+            assert_eq!(*ts.last().unwrap(), 0, "ends at 0 for n = {n}");
+            assert!(ts.iter().all(|&x| x < t), "in range for n = {n}");
+            assert!(
+                ts.windows(2).all(|w| w[0] > w[1]),
+                "strictly descending for n = {n}: {ts:?}"
+            );
+            // evenly spaced: gaps differ by at most 1 (integer division)
+            if n > 1 {
+                let gaps: Vec<usize> = ts.windows(2).map(|w| w[0] - w[1]).collect();
+                let (lo, hi) = (
+                    *gaps.iter().min().unwrap(),
+                    *gaps.iter().max().unwrap(),
+                );
+                assert!(hi - lo <= 1, "even spacing for n = {n}: {gaps:?}");
+            }
+        }
     }
 
     #[test]

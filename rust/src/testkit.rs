@@ -1,0 +1,418 @@
+//! Deterministic fake-artifact generation for the vendored xla stub —
+//! test and benchmark support, not a production path.
+//!
+//! The integration surface of the runtime is an artifact directory:
+//! `manifest.json`, HLO text per component, MDWB weight containers.
+//! Real artifacts come from `python/compile` (`make artifacts`) and
+//! need JAX; this module writes a *small, fully synthetic* artifact set
+//! whose HLO files are `STUBHLO` programs the vendored stub interprets
+//! (see `rust/vendor/xla`).  That lets `cargo test` and `cargo bench`
+//! drive the entire serving stack — text encode, batched denoise,
+//! decoder prefetch, decode — with real buffers and real dispatch
+//! counts, no Python and no PJRT.
+//!
+//! The UNet declares batch-major activations (leading dim ==
+//! `cfg_batch` on latent, timestep *and* context), the shape contract
+//! cross-request micro-batching needs; the stub accepts any scaled
+//! leading dimension, standing in for a per-batch-size executable set.
+//!
+//! Also here: [`throughput`], the pool-driving harness shared by
+//! `benches/throughput.rs` and the tier-1 smoke test, so the benchmark
+//! numbers and the tested invariant (B=4 beats B=1) come from the same
+//! code.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::scheduler::{Ddim, SchedulerParams};
+use crate::util::rng::Rng;
+
+/// Sizing knobs for a synthetic artifact set.  The UNet weight count is
+/// the per-dispatch fixed cost in the stub interpreter (it digests all
+/// weights once per dispatch), i.e. the cost micro-batching amortizes.
+#[derive(Debug, Clone)]
+pub struct FakeArtifactSpec {
+    pub latent_size: usize,
+    pub latent_channels: usize,
+    pub image_size: usize,
+    pub seq_len: usize,
+    pub context_dim: usize,
+    pub vocab_size: usize,
+    pub unet_weight_elems: usize,
+    pub encoder_weight_elems: usize,
+    pub decoder_weight_elems: usize,
+    pub num_train_timesteps: usize,
+}
+
+impl Default for FakeArtifactSpec {
+    fn default() -> Self {
+        FakeArtifactSpec {
+            latent_size: 8,
+            latent_channels: 4,
+            image_size: 16,
+            seq_len: 8,
+            context_dim: 16,
+            vocab_size: 128,
+            unet_weight_elems: 65_536,
+            encoder_weight_elems: 2_048,
+            decoder_weight_elems: 2_048,
+            num_train_timesteps: 1000,
+        }
+    }
+}
+
+/// One component's synthetic description.
+struct FakeComponent {
+    name: &'static str,
+    variant: &'static str,
+    weight_elems: usize,
+    /// STUBHLO body after the header
+    program: String,
+    activations: Vec<(Vec<usize>, &'static str)>,
+    outputs: Vec<Vec<usize>>,
+}
+
+/// Write a complete synthetic artifact directory.  Overwrites freely —
+/// callers own the directory (use a per-test label).
+pub fn write_fake_artifacts(dir: &Path, spec: &FakeArtifactSpec) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| Error::Io(format!("{}: {e}", dir.display())))?;
+
+    let s = spec.latent_size;
+    let c = spec.latent_channels;
+    let seq = spec.seq_len;
+    let d = spec.context_dim;
+    let img = spec.image_size;
+
+    let unet_acts = vec![
+        (vec![2, s, s, c], "float32"),
+        (vec![2], "float32"),
+        (vec![2, seq, d], "float32"),
+    ];
+    let comps = [
+        FakeComponent {
+            name: "text_encoder",
+            variant: "mobile",
+            weight_elems: spec.encoder_weight_elems,
+            program: format!(
+                "name text_encoder\nmode whole\nnweights 1\nseed 11\nout elems {}\n",
+                seq * d
+            ),
+            activations: vec![(vec![1, seq], "int32")],
+            outputs: vec![vec![1, seq, d]],
+        },
+        FakeComponent {
+            name: "unet_base",
+            variant: "base",
+            weight_elems: spec.unet_weight_elems,
+            program: "name unet_base\nmode rowwise\nnweights 1\nseed 21\nout like 0\n"
+                .to_string(),
+            activations: unet_acts.clone(),
+            outputs: vec![vec![2, s, s, c]],
+        },
+        FakeComponent {
+            name: "unet_mobile",
+            variant: "mobile",
+            weight_elems: spec.unet_weight_elems,
+            program: "name unet_mobile\nmode rowwise\nnweights 1\nseed 22\nout like 0\n"
+                .to_string(),
+            activations: unet_acts,
+            outputs: vec![vec![2, s, s, c]],
+        },
+        FakeComponent {
+            name: "decoder",
+            variant: "mobile",
+            weight_elems: spec.decoder_weight_elems,
+            program: format!(
+                "name decoder\nmode whole\nnweights 1\nseed 31\nout elems {}\n",
+                img * img * 3
+            ),
+            activations: vec![(vec![1, s, s, c], "float32")],
+            outputs: vec![vec![1, img, img, 3]],
+        },
+    ];
+
+    let mut comp_json = Vec::new();
+    for comp in &comps {
+        let hlo_file = format!("{}.hlo.txt", comp.name);
+        std::fs::write(
+            dir.join(&hlo_file),
+            format!("STUBHLO v1\n{}", comp.program),
+        )
+        .map_err(|e| Error::Io(format!("{hlo_file}: {e}")))?;
+
+        // one f32 weight tensor, values deterministic per component
+        let mut rng = Rng::new(comp.name.len() as u64 * 7919 + comp.weight_elems as u64);
+        let values: Vec<f32> = (0..comp.weight_elems)
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let weight_file = format!("weights_{}_fp32.bin", comp.name);
+        let path = "blocks/w";
+        let bytes = write_mdwb_f32(
+            &dir.join(&weight_file),
+            path,
+            &[comp.weight_elems],
+            &values,
+        )?;
+
+        let acts: Vec<String> = comp
+            .activations
+            .iter()
+            .map(|(shape, dtype)| {
+                format!(
+                    "{{\"shape\": {}, \"dtype\": \"{dtype}\"}}",
+                    fmt_usize_arr(shape)
+                )
+            })
+            .collect();
+        let outs: Vec<String> = comp
+            .outputs
+            .iter()
+            .map(|shape| {
+                format!(
+                    "{{\"shape\": {}, \"dtype\": \"float32\"}}",
+                    fmt_usize_arr(shape)
+                )
+            })
+            .collect();
+        comp_json.push(format!(
+            concat!(
+                "\"{name}\": {{\n",
+                "  \"hlo\": \"{hlo}\", \"variant\": \"{variant}\",\n",
+                "  \"params\": [{{\"path\": \"{path}\", \"shape\": {shape}, ",
+                "\"dtype\": \"float32\"}}],\n",
+                "  \"activations\": [{acts}],\n",
+                "  \"outputs\": [{outs}],\n",
+                "  \"param_bytes_f32\": {pb},\n",
+                "  \"weights\": {{\"fp32\": {{\"file\": \"{wf}\", \"bytes\": {bytes}}}}}\n",
+                "}}"
+            ),
+            name = comp.name,
+            hlo = hlo_file,
+            variant = comp.variant,
+            path = path,
+            shape = fmt_usize_arr(&[comp.weight_elems]),
+            acts = acts.join(", "),
+            outs = outs.join(", "),
+            pb = comp.weight_elems * 4,
+            wf = weight_file,
+            bytes = bytes,
+        ));
+    }
+
+    let params = SchedulerParams {
+        num_train_timesteps: spec.num_train_timesteps,
+        ..Default::default()
+    };
+    let ddim = Ddim::new(params.clone());
+    let alphas: Vec<String> = ddim
+        .alphas_cumprod
+        .iter()
+        .map(|a| format!("{a:.15}"))
+        .collect();
+    let timesteps: Vec<String> = ddim
+        .timesteps(params.num_inference_steps)
+        .iter()
+        .map(|t| t.to_string())
+        .collect();
+
+    let manifest = format!(
+        concat!(
+            "{{\n",
+            "\"cfg_batch\": 2,\n",
+            "\"latent\": {{\"size\": {s}, \"channels\": {c}}},\n",
+            "\"image\": {{\"size\": {img}, \"channels\": 3}},\n",
+            "\"components\": {{\n{comps}\n}},\n",
+            "\"scheduler\": {{\n",
+            "  \"num_train_timesteps\": {ntt}, \"beta_start\": {bs:.5},\n",
+            "  \"beta_end\": {be:.5}, \"num_inference_steps\": {nis},\n",
+            "  \"guidance_scale\": {gs:.1},\n",
+            "  \"alphas_cumprod\": [{alphas}],\n",
+            "  \"timesteps\": [{timesteps}],\n",
+            "  \"golden\": {{\"latent0\": [], \"eps_scale\": 0.1, \"trace\": []}}\n",
+            "}},\n",
+            "\"tokenizer\": {{\"vocab_size\": {vocab}, \"seq_len\": {seq}, ",
+            "\"golden\": []}}\n",
+            "}}\n"
+        ),
+        s = s,
+        c = c,
+        img = img,
+        comps = comp_json.join(",\n"),
+        ntt = params.num_train_timesteps,
+        bs = params.beta_start,
+        be = params.beta_end,
+        nis = params.num_inference_steps,
+        gs = params.guidance_scale,
+        alphas = alphas.join(", "),
+        timesteps = timesteps.join(", "),
+        vocab = spec.vocab_size,
+        seq = seq,
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)
+        .map_err(|e| Error::Io(format!("manifest.json: {e}")))?;
+    Ok(())
+}
+
+/// Write the artifacts under the system temp dir, keyed by `label`
+/// (tests use distinct labels so parallel tests never share a dir).
+pub fn fake_artifacts_dir(label: &str, spec: &FakeArtifactSpec) -> Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("md_testart_{label}"));
+    write_fake_artifacts(&dir, spec)?;
+    Ok(dir)
+}
+
+/// Minimal MDWB writer (one f32 tensor) mirroring the layout of
+/// python/compile/weightsbin.py; returns the at-rest byte count the
+/// manifest's `bytes` field must carry.
+fn write_mdwb_f32(
+    file: &Path,
+    tensor_path: &str,
+    shape: &[usize],
+    values: &[f32],
+) -> Result<usize> {
+    let mut out: Vec<u8> = Vec::with_capacity(32 + values.len() * 4);
+    out.extend_from_slice(b"MDWB");
+    out.extend_from_slice(&1u32.to_le_bytes()); // version
+    out.extend_from_slice(&1u32.to_le_bytes()); // tensor count
+    out.extend_from_slice(&(tensor_path.len() as u16).to_le_bytes());
+    out.extend_from_slice(tensor_path.as_bytes());
+    out.push(0); // dtype f32
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(file, &out).map_err(|e| Error::Io(format!("{}: {e}", file.display())))?;
+    Ok(values.len() * 4)
+}
+
+fn fmt_usize_arr(v: &[usize]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Pool-driving throughput harness shared by `benches/throughput.rs`
+/// and the tier-1 smoke test.
+pub mod throughput {
+    use std::path::Path;
+    use std::time::Instant;
+
+    use super::{fake_artifacts_dir, FakeArtifactSpec};
+    use crate::config::AppConfig;
+    use crate::coordinator::Server;
+    use crate::error::{Error, Result};
+    use crate::util::stats::summarize;
+
+    /// One measured operating point.
+    #[derive(Debug, Clone)]
+    pub struct Row {
+        pub batch: usize,
+        pub requests: usize,
+        pub steps: usize,
+        pub wall_s: f64,
+        pub images_per_s: f64,
+        pub steps_per_s: f64,
+        pub p95_latency_s: f64,
+        pub mean_occupancy: f64,
+    }
+
+    /// Workload sizing.  `fast` is the CI smoke mode.
+    #[derive(Debug, Clone)]
+    pub struct Workload {
+        pub requests: usize,
+        pub steps: usize,
+        pub spec: FakeArtifactSpec,
+    }
+
+    impl Workload {
+        pub fn new(fast: bool) -> Workload {
+            Workload {
+                requests: if fast { 8 } else { 24 },
+                steps: if fast { 6 } else { 8 },
+                // the UNet weight digest is the per-dispatch fixed cost
+                // batching amortizes; keep it dominant over per-row work
+                // so the B=4-vs-B=1 gap dwarfs timer noise
+                spec: FakeArtifactSpec {
+                    unet_weight_elems: if fast { 131_072 } else { 262_144 },
+                    ..Default::default()
+                },
+            }
+        }
+    }
+
+    /// Drive a 1-worker pool at `max_batch` over `artifacts`, all
+    /// requests submitted up front (the heavy-traffic shape).
+    pub fn run_at(artifacts: &Path, wl: &Workload, max_batch: usize) -> Result<Row> {
+        let mut cfg = AppConfig::default();
+        cfg.artifacts_dir = artifacts.to_path_buf();
+        cfg.num_workers = 1;
+        cfg.queue_depth = wl.requests.max(1) * 2;
+        cfg.max_batch = max_batch;
+        cfg.num_steps = wl.steps;
+        let mut server = Server::start(&cfg)?;
+
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(wl.requests);
+        for i in 0..wl.requests {
+            pending.push(server.submit(&format!("prompt {i}"), i as u64)?);
+        }
+        let mut latencies = Vec::with_capacity(wl.requests);
+        for rx in pending {
+            let resp = rx
+                .recv()
+                .map_err(|_| Error::Runtime("worker dropped request".into()))??;
+            debug_assert_eq!(resp.timings.denoise_steps, wl.steps);
+            latencies.push(t0.elapsed().as_secs_f64());
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let occupancy = server.with_metrics(|m| m.mean_batch_occupancy());
+        Ok(Row {
+            batch: max_batch,
+            requests: wl.requests,
+            steps: wl.steps,
+            wall_s,
+            images_per_s: wl.requests as f64 / wall_s,
+            steps_per_s: (wl.requests * wl.steps) as f64 / wall_s,
+            p95_latency_s: summarize(&latencies).p95,
+            mean_occupancy: occupancy,
+        })
+    }
+
+    /// Run the batch-size sweep on fresh fake artifacts.
+    pub fn run_profile(label: &str, wl: &Workload, batches: &[usize]) -> Result<Vec<Row>> {
+        let dir = fake_artifacts_dir(label, &wl.spec)?;
+        batches.iter().map(|&b| run_at(&dir, wl, b)).collect()
+    }
+
+    /// Serialize rows as the BENCH_throughput.json payload.
+    pub fn to_json(rows: &[Row], fast: bool) -> String {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    concat!(
+                        "  {{\"batch\": {}, \"requests\": {}, \"steps\": {}, ",
+                        "\"wall_s\": {:.6}, \"images_per_s\": {:.3}, ",
+                        "\"steps_per_s\": {:.3}, \"p95_latency_s\": {:.6}, ",
+                        "\"mean_occupancy\": {:.3}}}"
+                    ),
+                    r.batch,
+                    r.requests,
+                    r.steps,
+                    r.wall_s,
+                    r.images_per_s,
+                    r.steps_per_s,
+                    r.p95_latency_s,
+                    r.mean_occupancy,
+                )
+            })
+            .collect();
+        format!(
+            "{{\n\"backend\": \"xla-stub\",\n\"fast\": {fast},\n\"rows\": [\n{}\n]\n}}\n",
+            body.join(",\n")
+        )
+    }
+}

@@ -1,20 +1,48 @@
-//! Offline stub of the `xla-rs` PJRT binding surface used by
+//! Offline stand-in for the `xla-rs` PJRT binding surface used by
 //! `mobile-diffusion`.
 //!
 //! The real crate links against the XLA/PJRT shared library, which is
-//! not available in this build environment.  This stub mirrors the
-//! exact API the runtime layer calls so the workspace type-checks and
-//! every non-device test runs; any call that would need a real device
-//! (compile, buffer upload, execute) returns [`Error`] with a clear
-//! message.  The integration tests gate themselves on the presence of
-//! built artifacts, so they skip cleanly under the stub.
+//! not available in this build environment.  This stub mirrors the API
+//! the runtime layer calls, and — new with the micro-batching work —
+//! implements a small **deterministic interpreter** so the serving
+//! stack can be exercised end-to-end without a device:
+//!
+//! * Buffers really hold host data (`buffer_from_host_buffer` copies,
+//!   `write_from_host` rewrites an existing buffer in place with no
+//!   reallocation — the stand-in for PJRT buffer donation).
+//! * `compile` accepts artifacts in the tiny `STUBHLO` text format
+//!   (produced by `mobile_diffusion::testkit`); executing one computes
+//!   a deterministic pseudo-random function of the weights and
+//!   activations.  In `rowwise` mode each output row depends only on
+//!   the *content* of the corresponding input rows — never on the row
+//!   index or the batch size — so a request batched with others
+//!   produces bit-identical results to the same request run solo,
+//!   which is exactly the property the micro-batcher's tests pin down.
+//!   Real (opaque) HLO text still fails to compile with a clear
+//!   message, as before.
+//! * Every client carries a [`DeviceStats`] counter block (transfers,
+//!   in-place writes, per-program dispatches and rows) so tests can
+//!   assert "one UNet dispatch per step" and "no new device buffers
+//!   after warmup" without instrumenting the hot loop itself.
+//!
+//! The per-dispatch cost of the interpreter is dominated by a digest
+//! over the weight buffers — a deliberate model of the fixed
+//! per-dispatch cost (weight reads, kernel launch) that micro-batching
+//! amortizes, so throughput comparisons on the stub have the right
+//! shape.
 //!
 //! To run against real hardware, replace the `xla = { path = ... }`
-//! dependency in `rust/Cargo.toml` with the actual bindings; no source
-//! change in `mobile-diffusion` is required.
+//! dependency in `rust/Cargo.toml` with the actual bindings.  The
+//! extensions beyond the classic surface (`write_from_host`,
+//! `Literal::copy_into_f32`, `DeviceStats`) are small shims over
+//! standard PJRT facilities (donated buffers, literal reads, client
+//! metrics).
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 const STUB_MSG: &str =
     "PJRT unavailable: built against the vendored xla stub (see rust/vendor/xla)";
@@ -39,8 +67,8 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
-fn stub_err<T>() -> Result<T, Error> {
-    Err(Error::new(STUB_MSG))
+fn stub_err<T>(detail: &str) -> Result<T, Error> {
+    Err(Error::new(format!("{STUB_MSG}: {detail}")))
 }
 
 /// Element types accepted by raw-byte buffer uploads.
@@ -51,12 +79,191 @@ pub enum ElementType {
     F32,
 }
 
+// --------------------------------------------------------------- stats
+
+/// Per-client device counters, exposed so tests can verify transfer
+/// and dispatch behaviour of the serving hot loop.  Scoped to the
+/// client (not global) so parallel tests do not observe each other.
+#[derive(Debug, Default)]
+pub struct DeviceStats {
+    transfers: AtomicU64,
+    transfer_bytes: AtomicU64,
+    writes: AtomicU64,
+    executions: Mutex<BTreeMap<String, u64>>,
+    rows: Mutex<BTreeMap<String, u64>>,
+}
+
+impl DeviceStats {
+    /// Host->device buffer *creations* (uploads allocating a new buffer).
+    pub fn transfers(&self) -> u64 {
+        self.transfers.load(Ordering::Relaxed)
+    }
+
+    pub fn transfer_bytes(&self) -> u64 {
+        self.transfer_bytes.load(Ordering::Relaxed)
+    }
+
+    /// In-place rewrites of existing buffers (`write_from_host`).
+    pub fn writes(&self) -> u64 {
+        self.writes.load(Ordering::Relaxed)
+    }
+
+    /// Dispatches of the named STUBHLO program.
+    pub fn executions_of(&self, name: &str) -> u64 {
+        *self.executions.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    pub fn total_executions(&self) -> u64 {
+        self.executions.lock().unwrap().values().sum()
+    }
+
+    /// Total batch rows processed by the named program across all of
+    /// its dispatches (a B-row dispatch counts B).
+    pub fn rows_of(&self, name: &str) -> u64 {
+        *self.rows.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    fn record_transfer(&self, bytes: u64) {
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        self.transfer_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn record_write(&self) {
+        self.writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_execution(&self, name: &str, rows: u64) {
+        *self.executions.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        *self.rows.lock().unwrap().entry(name.to_string()).or_insert(0) += rows;
+    }
+}
+
+// -------------------------------------------------------------- buffers
+
+/// Typed device-side payload of a stub buffer.
+#[derive(Debug, Clone)]
+pub enum BufData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    /// Execution result: the output tuple of a dispatch.
+    Tuple(Vec<Vec<f32>>),
+}
+
+impl BufData {
+    fn len(&self) -> usize {
+        match self {
+            BufData::F32(v) => v.len(),
+            BufData::I32(v) => v.len(),
+            BufData::I8(v) => v.len(),
+            BufData::U8(v) => v.len(),
+            BufData::Tuple(outs) => outs.iter().map(|o| o.len()).sum(),
+        }
+    }
+
+    /// Fold elements `[start, end)` into a running digest.  The digest
+    /// depends only on element *values and order*, never on absolute
+    /// positions — the property batch-vs-solo bit-parity rests on.
+    fn fold(&self, h: u64, start: usize, end: usize) -> u64 {
+        match self {
+            BufData::F32(v) => v[start..end]
+                .iter()
+                .fold(h, |h, x| mix(h, x.to_bits() as u64)),
+            BufData::I32(v) => v[start..end]
+                .iter()
+                .fold(h, |h, x| mix(h, *x as u32 as u64)),
+            BufData::I8(v) => v[start..end]
+                .iter()
+                .fold(h, |h, x| mix(h, *x as u8 as u64)),
+            BufData::U8(v) => v[start..end].iter().fold(h, |h, x| mix(h, *x as u64)),
+            BufData::Tuple(_) => h,
+        }
+    }
+}
+
 /// Host-native types accepted by typed buffer uploads / downloads.
-pub trait NativeType: Copy {}
-impl NativeType for f32 {}
-impl NativeType for i32 {}
-impl NativeType for i8 {}
-impl NativeType for u8 {}
+pub trait NativeType: Copy {
+    fn to_data(v: &[Self]) -> BufData;
+    /// Rewrite `data` in place from `v`; false on dtype/length mismatch.
+    fn write_into(data: &mut BufData, v: &[Self]) -> bool;
+    fn read_literal(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_data(v: &[Self]) -> BufData {
+        BufData::F32(v.to_vec())
+    }
+    fn write_into(data: &mut BufData, v: &[Self]) -> bool {
+        match data {
+            BufData::F32(d) if d.len() == v.len() => {
+                d.copy_from_slice(v);
+                true
+            }
+            _ => false,
+        }
+    }
+    fn read_literal(lit: &Literal) -> Option<Vec<Self>> {
+        match lit {
+            Literal::F32(v) => Some(v.clone()),
+            Literal::Tuple(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_data(v: &[Self]) -> BufData {
+        BufData::I32(v.to_vec())
+    }
+    fn write_into(data: &mut BufData, v: &[Self]) -> bool {
+        match data {
+            BufData::I32(d) if d.len() == v.len() => {
+                d.copy_from_slice(v);
+                true
+            }
+            _ => false,
+        }
+    }
+    fn read_literal(_lit: &Literal) -> Option<Vec<Self>> {
+        None
+    }
+}
+
+impl NativeType for i8 {
+    fn to_data(v: &[Self]) -> BufData {
+        BufData::I8(v.to_vec())
+    }
+    fn write_into(data: &mut BufData, v: &[Self]) -> bool {
+        match data {
+            BufData::I8(d) if d.len() == v.len() => {
+                d.copy_from_slice(v);
+                true
+            }
+            _ => false,
+        }
+    }
+    fn read_literal(_lit: &Literal) -> Option<Vec<Self>> {
+        None
+    }
+}
+
+impl NativeType for u8 {
+    fn to_data(v: &[Self]) -> BufData {
+        BufData::U8(v.to_vec())
+    }
+    fn write_into(data: &mut BufData, v: &[Self]) -> bool {
+        match data {
+            BufData::U8(d) if d.len() == v.len() => {
+                d.copy_from_slice(v);
+                true
+            }
+            _ => false,
+        }
+    }
+    fn read_literal(_lit: &Literal) -> Option<Vec<Self>> {
+        None
+    }
+}
 
 /// A PJRT device handle (opaque; never instantiated by the stub).
 #[derive(Debug)]
@@ -64,111 +271,434 @@ pub struct PjRtDevice {
     _private: (),
 }
 
-/// A PJRT client.  `cpu()` succeeds so hosts can construct engines and
-/// report a platform name; all device work fails with a stub error.
+/// A device buffer holding real host-side data in the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    data: BufData,
+    dims: Vec<usize>,
+    stats: Arc<DeviceStats>,
+}
+
+impl PjRtBuffer {
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rewrite the buffer contents in place (the stand-in for a donated
+    /// PJRT buffer).  The dtype and element count must match exactly;
+    /// no reallocation happens on success.
+    pub fn write_from_host<T: NativeType>(&mut self, v: &[T]) -> Result<(), Error> {
+        if !T::write_into(&mut self.data, v) {
+            return Err(Error::new(format!(
+                "write_from_host: dtype/length mismatch (buffer holds {} elements)",
+                self.data.len()
+            )));
+        }
+        self.stats.record_write();
+        Ok(())
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match &self.data {
+            BufData::Tuple(outs) => Ok(Literal::Tuple(
+                outs.iter().map(|o| Literal::F32(o.clone())).collect(),
+            )),
+            BufData::F32(v) => Ok(Literal::F32(v.clone())),
+            _ => stub_err("only f32/tuple buffers can be read back"),
+        }
+    }
+}
+
+/// A host literal.
+#[derive(Debug)]
+pub enum Literal {
+    Tuple(Vec<Literal>),
+    F32(Vec<f32>),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(v) => Ok(v),
+            lit @ Literal::F32(_) => Ok(vec![lit]),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::read_literal(self)
+            .ok_or_else(|| Error::new("to_vec: literal is not of the requested dtype"))
+    }
+
+    /// Copy into a caller-owned vector, reusing its capacity (the
+    /// zero-realloc read-back used by the serving hot loop).
+    pub fn copy_into_f32(&self, out: &mut Vec<f32>) -> Result<(), Error> {
+        match self {
+            Literal::F32(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+                Ok(())
+            }
+            Literal::Tuple(_) => Err(Error::new("copy_into_f32: literal is a tuple")),
+        }
+    }
+}
+
+// -------------------------------------------------------------- client
+
+/// A PJRT client.  `cpu()` succeeds; device work runs on the stub
+/// interpreter for STUBHLO programs and fails for opaque HLO.
 #[derive(Debug)]
 pub struct PjRtClient {
     platform: String,
+    stats: Arc<DeviceStats>,
 }
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient, Error> {
-        Ok(PjRtClient { platform: "cpu (xla stub)".to_string() })
+        Ok(PjRtClient {
+            platform: "cpu (xla stub)".to_string(),
+            stats: Arc::new(DeviceStats::default()),
+        })
     }
 
     pub fn platform_name(&self) -> String {
         self.platform.clone()
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
-        stub_err()
+    /// This client's transfer/dispatch counters.
+    pub fn stats(&self) -> Arc<DeviceStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match &comp.program {
+            Some(p) => Ok(PjRtLoadedExecutable {
+                program: p.clone(),
+                stats: Arc::clone(&self.stats),
+            }),
+            None => stub_err("opaque HLO cannot compile offline (STUBHLO programs can)"),
+        }
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
-        _data: &[T],
-        _dims: &[usize],
+        data: &[T],
+        dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer, Error> {
-        stub_err()
+        let want: usize = dims.iter().product();
+        if want != data.len() {
+            return Err(Error::new(format!(
+                "buffer_from_host_buffer: shape {dims:?} wants {want} elements, got {}",
+                data.len()
+            )));
+        }
+        self.stats
+            .record_transfer((std::mem::size_of_val(data)) as u64);
+        Ok(PjRtBuffer {
+            data: T::to_data(data),
+            dims: dims.to_vec(),
+            stats: Arc::clone(&self.stats),
+        })
     }
 
     pub fn buffer_from_host_raw_bytes(
         &self,
-        _ty: ElementType,
-        _data: &[u8],
-        _dims: &[usize],
+        ty: ElementType,
+        data: &[u8],
+        dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer, Error> {
-        stub_err()
+        let want: usize = dims.iter().product();
+        let payload = match ty {
+            ElementType::S8 => {
+                if data.len() != want {
+                    return Err(Error::new("raw S8 upload: shape/length mismatch"));
+                }
+                BufData::I8(data.iter().map(|&b| b as i8).collect())
+            }
+            ElementType::S32 => {
+                if data.len() != want * 4 {
+                    return Err(Error::new("raw S32 upload: shape/length mismatch"));
+                }
+                BufData::I32(
+                    data.chunks_exact(4)
+                        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            ElementType::F32 => {
+                if data.len() != want * 4 {
+                    return Err(Error::new("raw F32 upload: shape/length mismatch"));
+                }
+                BufData::F32(
+                    data.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+        };
+        self.stats.record_transfer(data.len() as u64);
+        Ok(PjRtBuffer {
+            data: payload,
+            dims: dims.to_vec(),
+            stats: Arc::clone(&self.stats),
+        })
     }
 }
 
-/// Parsed HLO module (the stub only checks the file is readable).
+// ------------------------------------------------------------- programs
+
+/// Output shape rule of a STUBHLO program.
+#[derive(Debug, Clone)]
+enum OutSpec {
+    /// Output has the same element count (and row structure) as the
+    /// given activation argument — the UNet's eps-matches-latent case.
+    LikeAct(usize),
+    /// Fixed element count, batch-independent.
+    Elems(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// One output row per batch row of the first activation; each row
+    /// depends only on that row's slice of the batch-major inputs.
+    Rowwise,
+    /// One output computed from all activations as a whole.
+    Whole,
+}
+
+/// A parsed STUBHLO program.  Example artifact:
+///
+/// ```text
+/// STUBHLO v1
+/// name unet_mobile
+/// mode rowwise
+/// nweights 1
+/// seed 22
+/// out like 0
+/// ```
+#[derive(Debug, Clone)]
+struct Program {
+    name: String,
+    mode: Mode,
+    /// leading executable arguments that are weights (rest: activations)
+    nweights: usize,
+    seed: u64,
+    out: OutSpec,
+}
+
+impl Program {
+    fn parse(text: &str) -> Result<Program, Error> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        if header.trim() != "STUBHLO v1" {
+            return Err(Error::new(format!("bad STUBHLO header: {header:?}")));
+        }
+        let mut name = None;
+        let mut mode = None;
+        let mut nweights = None;
+        let mut seed = 0u64;
+        let mut out = None;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tok = line.split_whitespace();
+            let key = tok.next().unwrap_or("");
+            let bad = || Error::new(format!("bad STUBHLO line: {line:?}"));
+            match key {
+                "name" => name = Some(tok.next().ok_or_else(bad)?.to_string()),
+                "mode" => {
+                    mode = Some(match tok.next().ok_or_else(bad)? {
+                        "rowwise" => Mode::Rowwise,
+                        "whole" => Mode::Whole,
+                        _ => return Err(bad()),
+                    })
+                }
+                "nweights" => {
+                    nweights =
+                        Some(tok.next().ok_or_else(bad)?.parse::<usize>().map_err(|_| bad())?)
+                }
+                "seed" => seed = tok.next().ok_or_else(bad)?.parse::<u64>().map_err(|_| bad())?,
+                "out" => {
+                    out = Some(match tok.next().ok_or_else(bad)? {
+                        "like" => OutSpec::LikeAct(
+                            tok.next().ok_or_else(bad)?.parse().map_err(|_| bad())?,
+                        ),
+                        "elems" => OutSpec::Elems(
+                            tok.next().ok_or_else(bad)?.parse().map_err(|_| bad())?,
+                        ),
+                        _ => return Err(bad()),
+                    })
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(Program {
+            name: name.ok_or_else(|| Error::new("STUBHLO: missing name"))?,
+            mode: mode.ok_or_else(|| Error::new("STUBHLO: missing mode"))?,
+            nweights: nweights.ok_or_else(|| Error::new("STUBHLO: missing nweights"))?,
+            seed,
+            out: out.ok_or_else(|| Error::new("STUBHLO: missing out"))?,
+        })
+    }
+}
+
+// FNV-1a style fold + splitmix finalizer: cheap, deterministic, and
+// platform-independent (pure integer ops; floats enter via to_bits).
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x100000001b3)
+}
+
+fn fin(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Map a digest to an exactly-representable f32 in [-0.5, 0.5).
+fn unit(h: u64) -> f32 {
+    ((h >> 40) as f32) / ((1u64 << 24) as f32) - 0.5
+}
+
+/// Parsed HLO module: either a STUBHLO program or opaque real HLO.
 #[derive(Debug)]
 pub struct HloModuleProto {
-    _private: (),
+    program: Option<Program>,
 }
 
 impl HloModuleProto {
     pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
         let p = path.as_ref();
-        if !p.exists() {
-            return Err(Error::new(format!("hlo text not found: {}", p.display())));
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::new(format!("hlo text not found: {}: {e}", p.display())))?;
+        if text.starts_with("STUBHLO") {
+            Ok(HloModuleProto { program: Some(Program::parse(&text)?) })
+        } else {
+            Ok(HloModuleProto { program: None })
         }
-        Ok(HloModuleProto { _private: () })
     }
 }
 
 /// An XLA computation wrapper.
 #[derive(Debug)]
 pub struct XlaComputation {
-    _private: (),
+    program: Option<Program>,
 }
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _private: () }
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { program: proto.program.clone() }
     }
 }
 
-/// A compiled executable (never constructed by the stub).
+/// A compiled executable: in the stub, an interpretable program.
 #[derive(Debug)]
 pub struct PjRtLoadedExecutable {
-    _private: (),
+    program: Program,
+    stats: Arc<DeviceStats>,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
-        stub_err()
-    }
-}
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        let p = &self.program;
+        if args.len() <= p.nweights {
+            return Err(Error::new(format!(
+                "{}: {} args but program declares {} weights",
+                p.name,
+                args.len(),
+                p.nweights
+            )));
+        }
+        let (weights, acts) = args.split_at(p.nweights);
 
-/// A device buffer (never constructed by the stub).
-#[derive(Debug)]
-pub struct PjRtBuffer {
-    _private: (),
-}
+        // Per-dispatch fixed cost: digest every weight buffer.  This is
+        // what micro-batching amortizes across the batch.
+        let mut wdig = mix(FNV_OFFSET, p.seed);
+        for w in weights {
+            wdig = w.data.fold(wdig, 0, w.data.len());
+        }
 
-impl PjRtBuffer {
-    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
-        stub_err()
-    }
-}
+        let (rows, rowlen) = match p.mode {
+            Mode::Rowwise => {
+                let a0 = acts
+                    .first()
+                    .ok_or_else(|| Error::new(format!("{}: no activations", p.name)))?;
+                let b = *a0
+                    .dims
+                    .first()
+                    .ok_or_else(|| Error::new(format!("{}: rank-0 activation", p.name)))?;
+                if b == 0 || a0.data.len() % b != 0 {
+                    return Err(Error::new(format!(
+                        "{}: bad batch dim {b} for {} elements",
+                        p.name,
+                        a0.data.len()
+                    )));
+                }
+                let rowlen = match p.out {
+                    OutSpec::LikeAct(i) => {
+                        let a = acts.get(i).ok_or_else(|| {
+                            Error::new(format!("{}: out like {i} out of range", p.name))
+                        })?;
+                        a.data.len() / b
+                    }
+                    OutSpec::Elems(e) => e,
+                };
+                (b, rowlen)
+            }
+            Mode::Whole => {
+                let rowlen = match p.out {
+                    OutSpec::LikeAct(i) => {
+                        acts.get(i)
+                            .ok_or_else(|| {
+                                Error::new(format!("{}: out like {i} out of range", p.name))
+                            })?
+                            .data
+                            .len()
+                    }
+                    OutSpec::Elems(e) => e,
+                };
+                (1usize, rowlen)
+            }
+        };
 
-/// A host literal (never constructed by the stub).
-#[derive(Debug)]
-pub struct Literal {
-    _private: (),
-}
+        let mut out = vec![0f32; rows * rowlen];
+        for r in 0..rows {
+            let mut rd = FNV_OFFSET;
+            for a in acts {
+                let al = a.data.len();
+                let batched = p.mode == Mode::Rowwise
+                    && a.dims.first() == Some(&rows)
+                    && al % rows == 0;
+                if batched {
+                    let rl = al / rows;
+                    rd = a.data.fold(rd, r * rl, (r + 1) * rl);
+                } else {
+                    rd = a.data.fold(rd, 0, al);
+                }
+            }
+            let base = fin(mix(wdig, rd));
+            let row = &mut out[r * rowlen..(r + 1) * rowlen];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = unit(fin(base ^ (j as u64).wrapping_mul(GOLDEN)));
+            }
+        }
 
-impl Literal {
-    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
-        stub_err()
-    }
-
-    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
-        stub_err()
+        self.stats.record_execution(&p.name, rows as u64);
+        Ok(vec![vec![PjRtBuffer {
+            data: BufData::Tuple(vec![out]),
+            dims: vec![rows, rowlen],
+            stats: Arc::clone(&self.stats),
+        }]])
     }
 }
 
@@ -176,18 +706,139 @@ impl Literal {
 mod tests {
     use super::*;
 
+    fn unet_program() -> Program {
+        Program::parse(
+            "STUBHLO v1\nname unet\nmode rowwise\nnweights 1\nseed 7\nout like 0\n",
+        )
+        .unwrap()
+    }
+
+    fn client() -> PjRtClient {
+        PjRtClient::cpu().unwrap()
+    }
+
+    fn exe(c: &PjRtClient, p: Program) -> PjRtLoadedExecutable {
+        PjRtLoadedExecutable { program: p, stats: c.stats() }
+    }
+
     #[test]
-    fn client_constructs_but_device_calls_fail() {
-        let c = PjRtClient::cpu().unwrap();
+    fn buffers_hold_data_and_count_transfers() {
+        let c = client();
         assert!(c.platform_name().contains("stub"));
-        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).is_err());
-        assert!(c
-            .buffer_from_host_raw_bytes(ElementType::S8, &[1u8], &[1], None)
-            .is_err());
+        let b = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2], None)
+            .unwrap();
+        assert_eq!(b.dims(), &[2]);
+        assert_eq!(c.stats().transfers(), 1);
+        assert_eq!(c.stats().transfer_bytes(), 8);
+        // shape mismatch is rejected
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[2], None).is_err());
+    }
+
+    #[test]
+    fn write_from_host_rewrites_in_place() {
+        let c = client();
+        let mut b = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2], None)
+            .unwrap();
+        b.write_from_host::<f32>(&[3.0, 4.0]).unwrap();
+        assert_eq!(c.stats().writes(), 1);
+        assert_eq!(c.stats().transfers(), 1, "no new buffer was created");
+        // length and dtype mismatches are rejected
+        assert!(b.write_from_host::<f32>(&[1.0]).is_err());
+        assert!(b.write_from_host::<i32>(&[1, 2]).is_err());
     }
 
     #[test]
     fn missing_hlo_file_is_an_error() {
         assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn stubhlo_parses_and_opaque_hlo_does_not_compile() {
+        let p = unet_program();
+        assert_eq!(p.name, "unet");
+        assert_eq!(p.nweights, 1);
+        let c = client();
+        let opaque = XlaComputation { program: None };
+        assert!(c.compile(&opaque).is_err());
+        let ok = XlaComputation { program: Some(p) };
+        assert!(c.compile(&ok).is_ok());
+        assert!(Program::parse("HloModule m\n").is_err());
+        assert!(Program::parse("STUBHLO v1\nname x\n").is_err(), "missing fields");
+    }
+
+    #[test]
+    fn rowwise_rows_depend_only_on_row_content() {
+        let c = client();
+        let e = exe(&c, unet_program());
+        let w = c.buffer_from_host_buffer::<f32>(&[0.5; 8], &[8], None).unwrap();
+
+        // batch of 2 rows
+        let lat2 = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0, 4.0], &[2, 2], None)
+            .unwrap();
+        let t2 = c
+            .buffer_from_host_buffer::<f32>(&[9.0, 9.0], &[2], None)
+            .unwrap();
+        let out2 = e.execute_b(&[&w, &lat2, &t2]).unwrap();
+        let lit = out2[0][0].to_literal_sync().unwrap();
+        let tup = lit.to_tuple().unwrap();
+        let y2 = tup[0].to_vec::<f32>().unwrap();
+        assert_eq!(y2.len(), 4);
+
+        // the same rows run solo reproduce the batched rows bit-for-bit
+        for r in 0..2 {
+            let lat1 = c
+                .buffer_from_host_buffer::<f32>(&[1.0 + 2.0 * r as f32, 2.0 + 2.0 * r as f32], &[1, 2], None)
+                .unwrap();
+            let t1 = c.buffer_from_host_buffer::<f32>(&[9.0], &[1], None).unwrap();
+            let out1 = e.execute_b(&[&w, &lat1, &t1]).unwrap();
+            let y1 = out1[0][0]
+                .to_literal_sync()
+                .unwrap()
+                .to_tuple()
+                .unwrap()[0]
+                .to_vec::<f32>()
+                .unwrap();
+            assert_eq!(y1, y2[r * 2..(r + 1) * 2].to_vec(), "row {r}");
+        }
+        assert_eq!(c.stats().executions_of("unet"), 3);
+        assert_eq!(c.stats().rows_of("unet"), 4);
+    }
+
+    #[test]
+    fn outputs_vary_with_weights_inputs_and_seed() {
+        let c = client();
+        let e = exe(&c, unet_program());
+        let run = |wv: f32, lv: f32| {
+            let w = c.buffer_from_host_buffer::<f32>(&[wv; 4], &[4], None).unwrap();
+            let l = c
+                .buffer_from_host_buffer::<f32>(&[lv, lv], &[1, 2], None)
+                .unwrap();
+            let t = c.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).unwrap();
+            e.execute_b(&[&w, &l, &t]).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap()
+                .to_tuple()
+                .unwrap()[0]
+                .to_vec::<f32>()
+                .unwrap()
+        };
+        let a = run(0.1, 1.0);
+        assert_eq!(a, run(0.1, 1.0), "deterministic");
+        assert_ne!(a, run(0.2, 1.0), "weights matter");
+        assert_ne!(a, run(0.1, 2.0), "inputs matter");
+        assert!(a.iter().all(|v| (-0.5..=0.5).contains(v)));
+    }
+
+    #[test]
+    fn copy_into_reuses_capacity() {
+        let lit = Literal::F32(vec![1.0, 2.0, 3.0]);
+        let mut out = Vec::with_capacity(8);
+        lit.copy_into_f32(&mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert!(out.capacity() >= 8, "capacity retained");
+        assert!(Literal::Tuple(vec![]).copy_into_f32(&mut out).is_err());
     }
 }
