@@ -1,6 +1,9 @@
-//! Serving demo: push a burst of mixed-priority prompts through the
-//! worker pool (admission queue -> N device workers, each with its own
-//! engine and residency cache) and print the fleet metrics report.
+//! Serving demo on a heterogeneous fleet: a GPU-delegate phone and a
+//! CPU-only phone behind one queue.  The planner prices every
+//! `(device class, variant)` combination and admission routes each
+//! request to the cheapest class that can meet its deadline — tight
+//! deadlines land on the Adreno, lax ones on the CPU, impossible ones
+//! are rejected before they ever queue.
 //!
 //!     cargo run --release --example serve
 
@@ -9,61 +12,70 @@ use std::time::Duration;
 use mobile_diffusion::config::AppConfig;
 use mobile_diffusion::coordinator::{Priority, Server, SubmitOptions};
 
-/// (prompt, priority, per-request step override)
-const PROMPTS: &[(&str, Priority, Option<usize>)] = &[
-    ("a photograph of an astronaut riding a horse", Priority::Normal, None),
-    ("a cyberpunk city at night, neon lights", Priority::High, Some(2)),
-    ("an oil painting of a lighthouse in a storm", Priority::Low, None),
-    ("a bowl of ramen, studio lighting", Priority::Normal, Some(8)),
-    ("a golden retriever puppy in the snow", Priority::High, None),
-    ("the skyline of Seoul at sunset", Priority::Low, Some(2)),
+/// (prompt, priority, step override, deadline)
+const PROMPTS: &[(&str, Priority, Option<usize>, Option<Duration>)] = &[
+    // no deadline: the planner parks these on the cheap CPU class
+    ("a photograph of an astronaut riding a horse", Priority::Normal, None, None),
+    ("an oil painting of a lighthouse in a storm", Priority::Low, None, None),
+    // tight deadlines: only the GPU class's plan fits
+    ("a cyberpunk city at night, neon lights", Priority::High, Some(2),
+     Some(Duration::from_millis(400))),
+    ("a golden retriever puppy in the snow", Priority::High, None,
+     Some(Duration::from_millis(400))),
+    // lax deadline: the CPU class is feasible and therefore cheapest
+    ("a bowl of ramen, studio lighting", Priority::Normal, Some(8),
+     Some(Duration::from_secs(600))),
+    // impossible deadline: rejected at admission by the planner
+    ("the skyline of Seoul at sunset", Priority::Low, Some(2),
+     Some(Duration::from_micros(5))),
 ];
 
 fn main() -> mobile_diffusion::Result<()> {
     let mut cfg = AppConfig::default();
     cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     cfg.num_steps = 4; // demo default schedule; 20 for the paper's
-    cfg.num_workers = 2; // a two-phone fleet
+    cfg.fleet = Some("adreno740:1,bigcore:1".into()); // two-class fleet
     cfg.queue_depth = 16;
     cfg.max_batch = 2; // compatible requests share denoise dispatches
 
     let mut server = Server::start(&cfg)?;
     println!(
-        "serving {} prompts on {} workers ({} default steps, micro-batch up to {})...\n",
+        "serving {} prompts on a planned fleet ({} workers: {}; {} default steps)\n",
         PROMPTS.len(),
         server.num_workers(),
+        cfg.fleet.as_deref().unwrap_or("-"),
         cfg.num_steps,
-        cfg.max_batch
     );
 
-    // submit the whole burst up front: the queue drains high before
-    // normal before low, FIFO within each class
+    // submit the whole burst up front: the planner routes per deadline,
+    // the queue drains high before normal before low within each class
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    for (i, (prompt, priority, steps)) in PROMPTS.iter().enumerate() {
+    for (i, (prompt, priority, steps, deadline)) in PROMPTS.iter().enumerate() {
         let opts = SubmitOptions {
             priority: *priority,
             num_steps: *steps,
-            deadline: Some(Duration::from_secs(600)),
+            deadline: *deadline,
             ..Default::default()
         };
         match server.submit_with(prompt, i as u64 + 1, opts) {
             Ok(rx) => pending.push((*prompt, *priority, rx)),
-            Err(e) => println!("rejected ({priority:?}): {e}  {prompt}"),
+            Err(e) => println!("rejected [{:<6}] {e}\n         {prompt}", priority.as_str()),
         }
     }
 
     for (prompt, priority, rx) in pending {
         match rx.recv() {
             Ok(Ok(resp)) => println!(
-                "#{:<2} [{:<6}] worker {}  {:>6.2} s ({} steps, queue {:>5.3} s, peak {:>5.1} MB)  {prompt}",
+                "#{:<2} [{:<6}] {:<9} worker {}  {:>6.2} s (plan {:>6.2} s, {} steps, queue {:>5.3} s)  {prompt}",
                 resp.id,
                 priority.as_str(),
+                resp.device_class,
                 resp.worker_id,
                 resp.timings.total_s,
+                resp.predicted_s.unwrap_or(0.0),
                 resp.timings.denoise_steps,
                 resp.queue_s,
-                resp.peak_memory as f64 / 1e6
             ),
             Ok(Err(e)) => println!("failed  [{:<6}] {e}  {prompt}", priority.as_str()),
             Err(_) => println!("dropped [{:<6}] {prompt}", priority.as_str()),

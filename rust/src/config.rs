@@ -29,6 +29,11 @@ pub struct AppConfig {
     /// max compatible requests a worker drains into one micro-batched
     /// denoise dispatch (1 = no cross-request batching)
     pub max_batch: usize,
+    /// heterogeneous fleet spec, e.g. "adreno740:2,bigcore:1" — class
+    /// names resolve against the planner's device registry.  When set,
+    /// worker counts come from the spec (overriding `num_workers`) and
+    /// admission routes by plan-predicted service time.
+    pub fleet: Option<String>,
 }
 
 impl Default for AppConfig {
@@ -47,6 +52,7 @@ impl Default for AppConfig {
             num_workers: 1,
             queue_depth: 32,
             max_batch: 1,
+            fleet: None,
         }
     }
 }
@@ -111,6 +117,9 @@ impl AppConfig {
         if let Some(v) = j.get("max_batch").as_usize() {
             self.max_batch = v;
         }
+        if let Some(v) = j.get("fleet").as_str() {
+            self.fleet = Some(v.to_string());
+        }
     }
 
     /// Parse `--key value` / `--flag` CLI arguments (after the
@@ -171,6 +180,7 @@ impl AppConfig {
                         .parse()
                         .map_err(|e| Error::Config(format!("--max-batch: {e}")))?;
                 }
+                "--fleet" => self.fleet = Some(take(&mut i)?),
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
@@ -186,11 +196,20 @@ impl AppConfig {
         if self.max_batch == 0 {
             return Err(Error::Config("--max-batch must be at least 1".into()));
         }
-        if !["base", "mobile"].contains(&self.variant.as_str()) {
-            return Err(Error::Config(format!("bad variant {}", self.variant)));
+        if !crate::planner::model::VARIANTS.contains(&self.variant.as_str()) {
+            return Err(Error::Config(format!(
+                "bad variant {} (known: {})",
+                self.variant,
+                crate::planner::model::VARIANTS.join(", ")
+            )));
         }
         if !["fp32", "int8", "int8_pruned"].contains(&self.unet_weights.as_str()) {
             return Err(Error::Config(format!("bad weights {}", self.unet_weights)));
+        }
+        if let Some(spec) = &self.fleet {
+            // fail fast on typos: resolve the spec against the planner
+            // registry now rather than at server startup
+            crate::planner::FleetSpec::parse(spec)?;
         }
         Ok(())
     }
@@ -266,5 +285,24 @@ mod tests {
         assert!(c.apply_args(&args(&["--queue-depth", "0"])).is_err());
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--max-batch", "0"])).is_err());
+    }
+
+    #[test]
+    fn fleet_flag_and_json() {
+        let mut c = AppConfig::default();
+        assert!(c.fleet.is_none(), "homogeneous by default");
+        c.apply_args(&args(&["--fleet", "adreno740:2,bigcore:1"])).unwrap();
+        assert_eq!(c.fleet.as_deref(), Some("adreno740:2,bigcore:1"));
+
+        let mut c = AppConfig::default();
+        let j = Json::parse(r#"{"fleet": "adreno740:1,hexagon:1"}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.fleet.as_deref(), Some("adreno740:1,hexagon:1"));
+
+        // typos fail at flag parse, not at server startup
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--fleet", "warpdrive:2"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--fleet", "adreno740:0"])).is_err());
     }
 }

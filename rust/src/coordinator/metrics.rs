@@ -116,13 +116,62 @@ pub struct WorkerStats {
     pub busy_s: f64,
 }
 
+/// Per-device-class accounting for a heterogeneous fleet: how many
+/// requests the planner routed here and how its plan-predicted service
+/// times compare with what the workers actually measured.
+#[derive(Debug)]
+pub struct ClassMetrics {
+    /// planner-registry name of the device class
+    pub name: String,
+    predicted_s: SampleWindow,
+    actual_s: SampleWindow,
+    /// |actual - predicted| / predicted, per served request
+    abs_rel_err: SampleWindow,
+}
+
+impl ClassMetrics {
+    fn new(name: &str) -> ClassMetrics {
+        ClassMetrics {
+            name: name.to_string(),
+            predicted_s: SampleWindow::default(),
+            actual_s: SampleWindow::default(),
+            abs_rel_err: SampleWindow::default(),
+        }
+    }
+
+    /// Successfully served requests that carried a plan prediction.
+    pub fn prediction_count(&self) -> usize {
+        self.abs_rel_err.len()
+    }
+
+    pub fn predicted_summary(&self) -> Summary {
+        self.predicted_s.summary()
+    }
+
+    pub fn actual_summary(&self) -> Summary {
+        self.actual_s.summary()
+    }
+
+    /// Relative prediction-error statistics (`|actual-predicted| /
+    /// predicted`): how honest the cost model is on this class.
+    pub fn error_summary(&self) -> Summary {
+        self.abs_rel_err.summary()
+    }
+}
+
 /// Fleet-level metrics shared by all workers of a pool.
 #[derive(Debug)]
 pub struct PoolMetrics {
     pub stage: Metrics,
     pub workers: Vec<WorkerStats>,
+    /// per-device-class predicted-vs-actual accounting; a homogeneous
+    /// pool has one "default" class that never records predictions
+    pub classes: Vec<ClassMetrics>,
     /// submissions rejected by admission control (queue full)
     pub rejected_full: usize,
+    /// submissions rejected at admission because no device class could
+    /// meet their deadline (plan-predicted service time too long)
+    pub rejected_infeasible: usize,
     /// jobs dropped because their deadline passed before execution
     pub rejected_deadline: usize,
     /// micro-batches dispatched by workers (a solo request counts as a
@@ -143,10 +192,18 @@ pub struct PoolMetrics {
 
 impl PoolMetrics {
     pub fn new(num_workers: usize) -> PoolMetrics {
+        Self::with_classes(num_workers, &["default".to_string()])
+    }
+
+    /// Metrics for a heterogeneous pool: one [`ClassMetrics`] row per
+    /// device class, in pool class-index order.
+    pub fn with_classes(num_workers: usize, class_names: &[String]) -> PoolMetrics {
         PoolMetrics {
             stage: Metrics::new(),
             workers: vec![WorkerStats::default(); num_workers],
+            classes: class_names.iter().map(|n| ClassMetrics::new(n)).collect(),
             rejected_full: 0,
+            rejected_infeasible: 0,
             rejected_deadline: 0,
             batches: 0,
             max_batch_occupancy: 0,
@@ -212,6 +269,27 @@ impl PoolMetrics {
         self.rejected_full += 1;
     }
 
+    /// A submission rejected at admission because the planner found no
+    /// device class able to meet its deadline.
+    pub fn record_rejected_infeasible(&mut self) {
+        self.rejected_infeasible += 1;
+    }
+
+    /// One successfully served request's plan-predicted vs measured
+    /// service time on device class `class` (heterogeneous pools
+    /// only).  `actual_s` is the request's share of its batch's wall
+    /// clock — the plan predicts one request's service, so a shared
+    /// dispatch is not charged `B` times.  Failed requests are not
+    /// recorded: they never exercised the cost model.
+    pub fn record_prediction(&mut self, class: usize, predicted_s: f64, actual_s: f64) {
+        if let Some(c) = self.classes.get_mut(class) {
+            c.predicted_s.push(predicted_s);
+            c.actual_s.push(actual_s);
+            let denom = predicted_s.abs().max(1e-12);
+            c.abs_rel_err.push((actual_s - predicted_s).abs() / denom);
+        }
+    }
+
     /// An expired job dropped at pop time.  It never executed, so it
     /// counts only toward the pool-level `expired` line — per-worker
     /// counters track executed requests and must sum to the fleet
@@ -237,11 +315,13 @@ impl PoolMetrics {
     pub fn report(&self, queue_depth: usize, queue_max_depth: usize) -> String {
         let up = self.uptime_s().max(1e-9);
         let mut out = format!(
-            "pool: {} workers, {} ok, {} failed, {} rejected (queue full), {} expired\n",
+            "pool: {} workers, {} ok, {} failed, {} rejected (queue full), \
+             {} rejected (deadline infeasible), {} expired\n",
             self.workers.len(),
             self.stage.requests_ok,
             self.stage.requests_failed,
             self.rejected_full,
+            self.rejected_infeasible,
             self.rejected_deadline,
         );
         out.push_str(&format!(
@@ -265,6 +345,23 @@ impl PoolMetrics {
                 lat.p99 * 1e3,
                 wait.p50 * 1e3,
                 wait.p95 * 1e3,
+            ));
+        }
+        for c in &self.classes {
+            if c.prediction_count() == 0 {
+                continue;
+            }
+            let p = c.predicted_summary();
+            let a = c.actual_summary();
+            let e = c.error_summary();
+            out.push_str(&format!(
+                "class {:<10} {:>4} served, predicted mean {:>8.1} ms, \
+                 actual mean {:>8.1} ms, |rel err| mean {:>6.1}%\n",
+                c.name,
+                c.prediction_count(),
+                p.mean * 1e3,
+                a.mean * 1e3,
+                e.mean * 100.0,
             ));
         }
         for (i, w) in self.workers.iter().enumerate() {
@@ -370,6 +467,44 @@ mod tests {
         assert!((p.latency_summary().max - 2.1).abs() < 1e-9);
         let report = p.report(0, 0);
         assert!(report.contains("occupancy mean 3.00, max 4"), "{report}");
+    }
+
+    #[test]
+    fn class_predictions_are_tracked_and_reported() {
+        let mut p = PoolMetrics::with_classes(
+            2,
+            &["adreno740".to_string(), "bigcore".to_string()],
+        );
+        // class 0: model says 2.0s, device measured 1.0s -> 50% error
+        p.record_prediction(0, 2.0, 1.0);
+        // class 1: spot-on
+        p.record_prediction(1, 4.0, 4.0);
+        p.record_prediction(1, 2.0, 2.0);
+        p.record_rejected_infeasible();
+
+        assert_eq!(p.classes[0].prediction_count(), 1);
+        assert!((p.classes[0].error_summary().mean - 0.5).abs() < 1e-9);
+        assert_eq!(p.classes[1].prediction_count(), 2);
+        assert!(p.classes[1].error_summary().mean < 1e-9);
+        assert!((p.classes[1].predicted_summary().mean - 3.0).abs() < 1e-9);
+        assert_eq!(p.rejected_infeasible, 1);
+        // out-of-range class ids are ignored, matching worker stats
+        p.record_prediction(9, 1.0, 1.0);
+
+        let report = p.report(0, 0);
+        assert!(report.contains("class adreno740"), "{report}");
+        assert!(report.contains("class bigcore"), "{report}");
+        assert!(report.contains("rejected (deadline infeasible)"), "{report}");
+    }
+
+    #[test]
+    fn homogeneous_pools_skip_the_class_lines() {
+        let mut p = PoolMetrics::new(1);
+        assert_eq!(p.classes.len(), 1);
+        let t = timings(1.0);
+        p.record_executed(0, 0.1, 1.0, Some(&t));
+        let report = p.report(0, 0);
+        assert!(!report.contains("class default"), "{report}");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! L3 coordinator: the serving stack — an admission-controlled,
 //! priority/deadline-aware job queue ([`queue`]), a pool of device
-//! workers each owning a pipelined executor ([`pool`]), the fleet
-//! metrics ([`metrics`]), and the front-door [`Server`].
+//! workers each owning a pipelined executor ([`pool`], heterogeneous
+//! via [`crate::planner::FleetSpec`]), the fleet metrics ([`metrics`],
+//! including per-device-class predicted-vs-actual latency), and the
+//! front-door [`Server`] whose admission consults the planner.
 
 pub mod metrics;
 pub mod pool;
@@ -9,7 +11,7 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use metrics::{Metrics, PoolMetrics, SampleWindow, WorkerStats};
+pub use metrics::{ClassMetrics, Metrics, PoolMetrics, SampleWindow, WorkerStats};
 pub use pool::{ResponseReceiver, WorkItem, WorkerExecutor, WorkerPool};
 pub use queue::{AdmissionError, Job, JobQueue, Priority};
 pub use request::{GenerateRequest, GenerateResponse, SubmitOptions};

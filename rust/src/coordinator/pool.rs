@@ -43,12 +43,19 @@ pub type ResponseReceiver = mpsc::Receiver<Result<GenerateResponse>>;
 pub struct WorkItem {
     pub req: GenerateRequest,
     pub reply: mpsc::Sender<Result<GenerateResponse>>,
+    /// worker class this job was routed to (0 in homogeneous pools);
+    /// only workers of that class will drain it
+    pub class: usize,
+    /// plan-predicted service time from admission routing, if any
+    pub predicted_s: Option<f64>,
 }
 
 /// Handle to a running worker pool.
 pub struct WorkerPool {
     queue: Arc<JobQueue<WorkItem>>,
     metrics: Arc<Mutex<PoolMetrics>>,
+    /// device-class name per class index ("default" when homogeneous)
+    class_names: Vec<String>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
@@ -79,23 +86,56 @@ impl WorkerPool {
         E: WorkerExecutor + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let n = num_workers.max(1);
+        let classes = [("default".to_string(), num_workers.max(1))];
+        Self::start_fleet(
+            &classes,
+            queue_capacity,
+            max_batch,
+            move |wid, _class: usize, _name: &str| factory(wid),
+        )
+    }
+
+    /// Start a heterogeneous pool: one worker class per `(name, count)`
+    /// entry, in order (the class index the router targets is the
+    /// position in this slice).  Workers drain only jobs routed to
+    /// their own class.  `factory(worker_id, class_index, class_name)`
+    /// runs on the worker thread.
+    pub fn start_fleet<E, F>(
+        classes: &[(String, usize)],
+        queue_capacity: usize,
+        max_batch: usize,
+        factory: F,
+    ) -> Result<WorkerPool>
+    where
+        E: WorkerExecutor + 'static,
+        F: Fn(usize, usize, &str) -> Result<E> + Send + Sync + 'static,
+    {
         let max_batch = max_batch.max(1);
+        let class_names: Vec<String> = classes.iter().map(|(n, _)| n.clone()).collect();
+        // (worker id, class index) assignments, classes in spec order
+        let mut assignments: Vec<usize> = Vec::new();
+        for (class_idx, (_, count)) in classes.iter().enumerate() {
+            for _ in 0..(*count).max(1) {
+                assignments.push(class_idx);
+            }
+        }
+        let n = assignments.len();
         let queue: Arc<JobQueue<WorkItem>> = Arc::new(JobQueue::new(queue_capacity));
-        let metrics = Arc::new(Mutex::new(PoolMetrics::new(n)));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::with_classes(n, &class_names)));
         let factory = Arc::new(factory);
 
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::with_capacity(n);
-        for wid in 0..n {
+        for (wid, &class_idx) in assignments.iter().enumerate() {
             let worker_queue = Arc::clone(&queue);
             let worker_metrics = Arc::clone(&metrics);
             let worker_factory = Arc::clone(&factory);
             let worker_ready = ready_tx.clone();
+            let class_name = class_names[class_idx].clone();
             let spawned = thread::Builder::new()
                 .name(format!("md-worker-{wid}"))
                 .spawn(move || {
-                    let executor = match worker_factory(wid) {
+                    let executor = match worker_factory(wid, class_idx, &class_name) {
                         Ok(e) => {
                             let _ = worker_ready.send(Ok(()));
                             e
@@ -106,7 +146,15 @@ impl WorkerPool {
                         }
                     };
                     drop(worker_ready);
-                    worker_loop(wid, executor, &worker_queue, &worker_metrics, max_batch);
+                    worker_loop(
+                        wid,
+                        class_idx,
+                        &class_name,
+                        executor,
+                        &worker_queue,
+                        &worker_metrics,
+                        max_batch,
+                    );
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -122,7 +170,7 @@ impl WorkerPool {
         }
         drop(ready_tx);
 
-        let pool = WorkerPool { queue, metrics, handles };
+        let pool = WorkerPool { queue, metrics, class_names, handles };
         for _ in 0..n {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
@@ -146,9 +194,30 @@ impl WorkerPool {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<ResponseReceiver> {
+        self.submit_routed(req, priority, deadline, 0, None)
+    }
+
+    /// Admit a request onto a specific worker class (planner routing),
+    /// carrying the plan-predicted service time the admission decision
+    /// was based on.
+    pub fn submit_routed(
+        &self,
+        req: GenerateRequest,
+        priority: Priority,
+        deadline: Option<Duration>,
+        class: usize,
+        predicted_s: Option<f64>,
+    ) -> Result<ResponseReceiver> {
+        if class >= self.class_names.len() {
+            return Err(Error::Queue(format!(
+                "no worker class {class} (pool has {})",
+                self.class_names.len()
+            )));
+        }
         let (tx, rx) = mpsc::channel();
         let absolute = deadline.map(|d| Instant::now() + d);
-        match self.queue.push(WorkItem { req, reply: tx }, priority, absolute) {
+        let item = WorkItem { req, reply: tx, class, predicted_s };
+        match self.queue.push(item, priority, absolute) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 if matches!(e, AdmissionError::Full { .. }) {
@@ -159,8 +228,19 @@ impl WorkerPool {
         }
     }
 
+    /// Count one admission-time infeasible-deadline rejection (the
+    /// router decided before anything was queued).
+    pub fn record_rejected_infeasible(&self) {
+        self.metrics.lock().unwrap().record_rejected_infeasible();
+    }
+
     pub fn num_workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Device-class names, pool class-index order.
+    pub fn class_names(&self) -> &[String] {
+        &self.class_names
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -193,20 +273,27 @@ impl Drop for WorkerPool {
 
 fn worker_loop<E: WorkerExecutor>(
     wid: usize,
+    class_idx: usize,
+    class_name: &str,
     mut executor: E,
     queue: &JobQueue<WorkItem>,
     metrics: &Mutex<PoolMetrics>,
     max_batch: usize,
 ) {
-    // batch compatibility at the queue level: same requested variant
-    // (the executor re-checks and re-groups defensively)
-    while let Some(jobs) = queue.pop_batch(max_batch, |it: &WorkItem| it.req.variant.clone()) {
+    // a worker drains only jobs routed to its own device class; batch
+    // compatibility within the class: same requested variant (the
+    // executor re-checks and re-groups defensively)
+    while let Some(jobs) = queue.pop_batch_where(
+        max_batch,
+        |it: &WorkItem| it.class == class_idx,
+        |it: &WorkItem| it.req.variant.clone(),
+    ) {
         let mut reqs: Vec<GenerateRequest> = Vec::with_capacity(jobs.len());
-        let mut meta: Vec<(mpsc::Sender<Result<GenerateResponse>>, f64)> =
+        let mut meta: Vec<(mpsc::Sender<Result<GenerateResponse>>, f64, Option<f64>)> =
             Vec::with_capacity(jobs.len());
         for job in jobs {
             let queue_s = job.enqueued.elapsed().as_secs_f64();
-            let WorkItem { req, reply } = job.item;
+            let WorkItem { req, reply, predicted_s, .. } = job.item;
 
             // deadline-aware: don't burn a device slot on an expired
             // request (its batchmates still run)
@@ -221,7 +308,7 @@ fn worker_loop<E: WorkerExecutor>(
                 }
             }
             reqs.push(req);
-            meta.push((reply, queue_s));
+            meta.push((reply, queue_s, predicted_s));
         }
         if reqs.is_empty() {
             continue;
@@ -248,18 +335,31 @@ fn worker_loop<E: WorkerExecutor>(
                 .collect();
         }
 
-        for ((req, (reply, queue_s)), result) in
+        for ((req, (reply, queue_s, predicted_s)), result) in
             reqs.into_iter().zip(meta).zip(results)
         {
             let resp = match result {
                 Ok(r) => {
-                    metrics.lock().unwrap().record_batch_member(
+                    let mut m = metrics.lock().unwrap();
+                    m.record_batch_member(
                         wid,
                         queue_s,
                         wall_s,
                         busy_share_s,
                         Some(&r.timings),
                     );
+                    // plan accountability: predicted vs measured
+                    // service time, per device class.  The measured
+                    // side is the member's share of the batch wall —
+                    // the plan predicts one request's service, so a
+                    // shared dispatch must not be charged B times.
+                    // Failures are excluded: an early error's
+                    // microsecond wall would read as huge model
+                    // drift when the model was never exercised.
+                    if let Some(p) = predicted_s {
+                        m.record_prediction(class_idx, p, busy_share_s);
+                    }
+                    drop(m);
                     Ok(GenerateResponse {
                         id: req.id,
                         image: r.image,
@@ -269,6 +369,8 @@ fn worker_loop<E: WorkerExecutor>(
                         peak_memory: r.peak_memory,
                         queue_s,
                         worker_id: wid,
+                        device_class: class_name.to_string(),
+                        predicted_s,
                     })
                 }
                 Err(e) => {
@@ -543,6 +645,66 @@ mod tests {
         let seen = batches.lock().unwrap().clone();
         assert_eq!(seen, vec![vec![1], vec![3]], "request 2 never executed");
         pool.with_metrics(|m| assert_eq!(m.rejected_deadline, 1));
+    }
+
+    #[test]
+    fn fleet_pool_routes_jobs_to_their_class_and_tracks_predictions() {
+        // two classes, one worker each: worker 0 = "fast", worker 1 = "slow"
+        let classes = [("fast".to_string(), 1usize), ("slow".to_string(), 1usize)];
+        let pool = WorkerPool::start_fleet(&classes, 16, 1, |_wid, class: usize, _name: &str| {
+            let ms = if class == 0 { 1 } else { 5 };
+            Ok(SleepExec { sleep: Duration::from_millis(ms), default_steps: 2 })
+        })
+        .unwrap();
+        assert_eq!(pool.num_workers(), 2);
+        assert_eq!(pool.class_names().to_vec(), vec!["fast".to_string(), "slow".to_string()]);
+
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            let class = (i % 2) as usize;
+            let rx = pool
+                .submit_routed(
+                    GenerateRequest::new(i, "p", i),
+                    Priority::Normal,
+                    None,
+                    class,
+                    Some(0.01),
+                )
+                .unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.device_class, pool.class_names()[class]);
+            assert_eq!(resp.predicted_s, Some(0.01));
+            assert_eq!(resp.worker_id, class, "jobs never cross classes");
+        }
+        pool.with_metrics(|m| {
+            assert_eq!(m.classes[0].prediction_count(), 2);
+            assert_eq!(m.classes[1].prediction_count(), 2);
+            assert!(m.classes[0].error_summary().count > 0);
+        });
+        let report = pool.metrics_report();
+        assert!(report.contains("class fast"), "{report}");
+        assert!(report.contains("class slow"), "{report}");
+
+        // a class index the pool doesn't have is rejected outright
+        let err = pool
+            .submit_routed(GenerateRequest::new(9, "p", 9), Priority::Normal, None, 7, None)
+            .expect_err("bad class");
+        assert!(err.to_string().contains("class"), "{err}");
+    }
+
+    #[test]
+    fn homogeneous_pools_never_record_predictions() {
+        let pool = WorkerPool::start(1, 4, sleep_factory(1, 2)).unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.device_class, "default");
+        assert!(resp.predicted_s.is_none());
+        pool.with_metrics(|m| assert_eq!(m.classes[0].prediction_count(), 0));
     }
 
     #[test]

@@ -161,7 +161,10 @@ impl<T> JobQueue<T> {
         let depth = inner.jobs.len();
         inner.max_depth = inner.max_depth.max(depth);
         drop(inner);
-        self.available.notify_one();
+        // heterogeneous pools pop with per-class filters: wake every
+        // waiter so the job's own class cannot miss it behind a
+        // notify_one that landed on the wrong class
+        self.available.notify_all();
         Ok(())
     }
 
@@ -174,12 +177,14 @@ impl<T> JobQueue<T> {
             .then_with(|| a.seq.cmp(&b.seq))
     }
 
-    /// Index of the job a worker should run next.  `None` when empty.
-    fn next_index(inner: &Inner<T>) -> Option<usize> {
+    /// Index of the job the policy would run next among those passing
+    /// `eligible`.  `None` when no eligible job is queued.
+    fn next_index(inner: &Inner<T>, eligible: impl Fn(&T) -> bool) -> Option<usize> {
         inner
             .jobs
             .iter()
             .enumerate()
+            .filter(|(_, j)| eligible(&j.item))
             .min_by(|(_, a), (_, b)| Self::policy_cmp(a, b))
             .map(|(i, _)| i)
     }
@@ -188,7 +193,7 @@ impl<T> JobQueue<T> {
     pub fn pop(&self) -> Option<Job<T>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if let Some(i) = Self::next_index(&inner) {
+            if let Some(i) = Self::next_index(&inner, |_| true) {
                 return inner.jobs.remove(i);
             }
             if inner.closed {
@@ -210,40 +215,59 @@ impl<T> JobQueue<T> {
         max_batch: usize,
         key: impl Fn(&T) -> K,
     ) -> Option<Vec<Job<T>>> {
+        self.pop_batch_where(max_batch, |_| true, key)
+    }
+
+    /// [`Self::pop_batch`] restricted to jobs passing `eligible` — a
+    /// heterogeneous pool's workers only drain jobs routed to their own
+    /// device class.  Jobs the filter rejects are invisible to this
+    /// caller: they neither head a batch nor block one.  `None` once
+    /// the queue is closed and drained *of eligible jobs* (leftovers
+    /// belong to other classes' workers).
+    pub fn pop_batch_where<K: PartialEq>(
+        &self,
+        max_batch: usize,
+        eligible: impl Fn(&T) -> bool,
+        key: impl Fn(&T) -> K,
+    ) -> Option<Vec<Job<T>>> {
         let cap = max_batch.max(1);
         let mut inner = self.inner.lock().unwrap();
         loop {
             // cap 1 (the default config) keeps the allocation-free
             // single-pop scan; only real batching pays for the sort
             if cap == 1 {
-                if let Some(i) = Self::next_index(&inner) {
+                if let Some(i) = Self::next_index(&inner, &eligible) {
                     return inner.jobs.remove(i).map(|j| vec![j]);
                 }
-            } else if !inner.jobs.is_empty() {
-                let mut order: Vec<usize> = (0..inner.jobs.len()).collect();
-                order.sort_by(|&a, &b| {
-                    Self::policy_cmp(&inner.jobs[a], &inner.jobs[b])
-                });
-                let head_key = key(&inner.jobs[order[0]].item);
-                let mut picked: Vec<usize> = Vec::with_capacity(cap);
-                for &i in &order {
-                    if picked.len() >= cap {
-                        break;
+            } else {
+                let mut order: Vec<usize> = (0..inner.jobs.len())
+                    .filter(|&i| eligible(&inner.jobs[i].item))
+                    .collect();
+                if !order.is_empty() {
+                    order.sort_by(|&a, &b| {
+                        Self::policy_cmp(&inner.jobs[a], &inner.jobs[b])
+                    });
+                    let head_key = key(&inner.jobs[order[0]].item);
+                    let mut picked: Vec<usize> = Vec::with_capacity(cap);
+                    for &i in &order {
+                        if picked.len() >= cap {
+                            break;
+                        }
+                        if key(&inner.jobs[i].item) == head_key {
+                            picked.push(i);
+                        }
                     }
-                    if key(&inner.jobs[i].item) == head_key {
-                        picked.push(i);
+                    // remove back-to-front so indices stay valid
+                    picked.sort_unstable();
+                    let mut batch = Vec::with_capacity(picked.len());
+                    for i in picked.into_iter().rev() {
+                        if let Some(j) = inner.jobs.remove(i) {
+                            batch.push(j);
+                        }
                     }
+                    batch.reverse();
+                    return Some(batch);
                 }
-                // remove back-to-front so indices stay valid
-                picked.sort_unstable();
-                let mut batch = Vec::with_capacity(picked.len());
-                for i in picked.into_iter().rev() {
-                    if let Some(j) = inner.jobs.remove(i) {
-                        batch.push(j);
-                    }
-                }
-                batch.reverse();
-                return Some(batch);
             }
             if inner.closed {
                 return None;
@@ -255,7 +279,7 @@ impl<T> JobQueue<T> {
     /// Non-blocking pop (tests, drain-on-shutdown).
     pub fn try_pop(&self) -> Option<Job<T>> {
         let mut inner = self.inner.lock().unwrap();
-        Self::next_index(&inner).and_then(|i| inner.jobs.remove(i))
+        Self::next_index(&inner, |_| true).and_then(|i| inner.jobs.remove(i))
     }
 
     /// Current number of queued (not yet running) jobs.
@@ -416,6 +440,34 @@ mod tests {
         q.close();
         assert_eq!(q.pop_batch(1, |_| ()).unwrap()[0].item, 8);
         assert!(q.pop_batch(4, |_| ()).is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn pop_batch_where_sees_only_eligible_jobs() {
+        // item = (class, variant); a class-1 worker must not steal or
+        // be blocked by class-0 jobs, even higher-priority ones
+        let q: JobQueue<(usize, u8)> = JobQueue::new(16);
+        q.push((0, 7), Priority::High, None).unwrap();
+        q.push((1, 7), Priority::Normal, None).unwrap();
+        q.push((0, 7), Priority::Normal, None).unwrap();
+        q.push((1, 7), Priority::Low, None).unwrap();
+
+        let batch = q.pop_batch_where(4, |it| it.0 == 1, |it| it.1).unwrap();
+        let classes: Vec<usize> = batch.iter().map(|j| j.item.0).collect();
+        assert_eq!(classes, vec![1, 1], "only class-1 jobs drained");
+        assert_eq!(q.depth(), 2, "class-0 jobs untouched");
+
+        // cap-1 filtered pop takes the High class-0 job first
+        let solo = q.pop_batch_where(1, |it| it.0 == 0, |it| it.1).unwrap();
+        assert_eq!(solo.len(), 1);
+        assert_eq!(solo[0].priority, Priority::High);
+
+        // closed + drained-of-eligible returns None while other
+        // classes' jobs remain
+        q.close();
+        assert!(q.pop_batch_where(4, |it| it.0 == 1, |it| it.1).is_none());
+        assert_eq!(q.depth(), 1, "the class-0 job is still there");
+        assert!(q.pop_batch_where(4, |it| it.0 == 0, |it| it.1).is_some());
     }
 
     #[test]

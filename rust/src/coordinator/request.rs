@@ -71,6 +71,12 @@ pub struct GenerateResponse {
     pub queue_s: f64,
     /// pool worker that executed the request
     pub worker_id: usize,
+    /// device class of that worker ("default" in homogeneous pools,
+    /// the planner-registry name in `--fleet` pools)
+    pub device_class: String,
+    /// plan-predicted service time the router admitted this request
+    /// under; `None` when no planner routed it
+    pub predicted_s: Option<f64>,
 }
 
 #[cfg(test)]

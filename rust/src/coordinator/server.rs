@@ -1,9 +1,16 @@
 //! The serving front door: admission queue + worker pool + pipelined
-//! executors.
+//! executors, with the planner as the scheduling brain.
 //!
 //! `Server::start` parses the artifact manifest once (fail-fast on the
-//! caller thread), then brings up a [`WorkerPool`] of
-//! `config.num_workers` workers.  Each worker thread constructs its own
+//! caller thread), then brings up a [`WorkerPool`].  Without a fleet
+//! spec the pool is `config.num_workers` identical workers; with
+//! `config.fleet` (e.g. `adreno740:2,bigcore:1`) each class resolves
+//! against the planner's device registry, a shared
+//! [`crate::planner::PlanRegistry`] prices every `(class, variant)`
+//! combination up front, and a [`FleetRouter`] decides admission:
+//! deadlines no class can meet are rejected immediately, everything
+//! else is routed to the cheapest class whose plan-predicted service
+//! time fits.  Each worker thread constructs its own
 //! [`PipelinedExecutor`] — PJRT handles are not `Send`, so engine,
 //! residency cache and memory budget are per worker, modelling a fleet
 //! of single-device phones behind one queue.
@@ -13,11 +20,14 @@
 //! that are honored end-to-end: `SubmitOptions` -> `GenerateRequest` ->
 //! `ExecOverrides` -> the denoise loop.
 
+use std::sync::Arc;
+
 use crate::config::AppConfig;
 use crate::coordinator::pool::{ResponseReceiver, WorkerExecutor, WorkerPool};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
 use crate::pipeline::{BatchRequest, GenerateResult, PipelinedExecutor};
+use crate::planner::{FleetRouter, FleetSpec, PlanRegistry};
 use crate::runtime::Manifest;
 
 /// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
@@ -52,27 +62,70 @@ pub struct Server {
     pool: WorkerPool,
     next_id: u64,
     default_variant: String,
+    default_steps: usize,
+    /// plan-driven admission routing; `None` for homogeneous pools
+    router: Option<FleetRouter>,
 }
 
 impl Server {
     /// Start the worker pool; fails fast if the artifacts are
-    /// unreadable or any worker cannot construct its executor.
+    /// unreadable, the fleet spec doesn't resolve, or any worker
+    /// cannot construct its executor.
     pub fn start(config: &AppConfig) -> Result<Server> {
         // parse the manifest on the caller thread for early errors
         let manifest = Manifest::load(&config.artifacts_dir)?;
         let options = config.exec_options();
         let variant = config.variant.clone();
 
-        let pool = WorkerPool::start_batched(
-            config.num_workers,
+        let router = match &config.fleet {
+            Some(spec) => {
+                let fleet = FleetSpec::parse(spec)?;
+                let plans = Arc::new(PlanRegistry::new());
+                // price every (class, variant) combination up front so
+                // admission never pays the pass pipeline
+                for class in &fleet.classes {
+                    for v in crate::planner::model::VARIANTS {
+                        plans.plan(&class.device, v)?;
+                    }
+                }
+                Some(FleetRouter::new(fleet, plans))
+            }
+            None => None,
+        };
+        let classes: Vec<(String, usize)> = match &router {
+            Some(r) => r
+                .fleet()
+                .classes
+                .iter()
+                .map(|c| (c.device.name.to_string(), c.count))
+                .collect(),
+            None => vec![("default".to_string(), config.num_workers)],
+        };
+
+        // NOTE: every class's workers construct the same executor —
+        // on real hardware a worker *is* its device, so the class
+        // difference is physical; on the stub/PJRT backend there is
+        // one substrate and the class only drives routing, admission
+        // and the predicted-vs-actual accounting.  Per-class |rel err|
+        // therefore measures the cost model against the *deployed*
+        // substrate, which on the stub is expected to be large for
+        // the slow classes.
+        let pool = WorkerPool::start_fleet(
+            &classes,
             config.queue_depth,
             config.max_batch,
-            move |_wid| {
+            move |_wid, _class: usize, _name: &str| {
                 let executor = PipelinedExecutor::new(manifest.clone(), options.clone())?;
                 Ok(PipelineWorker { executor, default_variant: variant.clone() })
             },
         )?;
-        Ok(Server { pool, next_id: 0, default_variant: config.variant.clone() })
+        Ok(Server {
+            pool,
+            next_id: 0,
+            default_variant: config.variant.clone(),
+            default_steps: config.num_steps,
+            router,
+        })
     }
 
     /// Enqueue a generation with default scheduling (normal priority,
@@ -83,7 +136,8 @@ impl Server {
 
     /// Enqueue a generation with explicit scheduling directives and
     /// per-request overrides.  Admission control may reject it
-    /// immediately (queue full).
+    /// immediately: queue full, or (in a planned fleet) a deadline no
+    /// device class can meet.
     pub fn submit_with(
         &mut self,
         prompt: &str,
@@ -100,7 +154,33 @@ impl Server {
             .clone()
             .or_else(|| Some(self.default_variant.clone()));
         req.guidance_scale = opts.guidance_scale;
-        self.pool.submit(req, opts.priority, opts.deadline)
+        match &self.router {
+            Some(router) => {
+                let variant = req
+                    .variant
+                    .clone()
+                    .unwrap_or_else(|| self.default_variant.clone());
+                let steps = req.num_steps.unwrap_or(self.default_steps);
+                match router.route(&variant, steps, opts.deadline) {
+                    Ok(route) => self.pool.submit_routed(
+                        req,
+                        opts.priority,
+                        opts.deadline,
+                        route.class,
+                        Some(route.predicted_s),
+                    ),
+                    Err(e) => {
+                        // only genuine infeasibility counts toward the
+                        // metric; config errors (unknown variant) don't
+                        if matches!(e, Error::Queue(_)) {
+                            self.pool.record_rejected_infeasible();
+                        }
+                        Err(e)
+                    }
+                }
+            }
+            None => self.pool.submit(req, opts.priority, opts.deadline),
+        }
     }
 
     /// Blocking convenience wrapper.
@@ -126,6 +206,11 @@ impl Server {
 
     pub fn queue_depth(&self) -> usize {
         self.pool.queue_depth()
+    }
+
+    /// The admission router, when this server fronts a planned fleet.
+    pub fn router(&self) -> Option<&FleetRouter> {
+        self.router.as_ref()
     }
 
     pub fn metrics_report(&self) -> Result<String> {

@@ -7,12 +7,15 @@
 //! * **L3 (this crate)** — the coordinator: a multi-worker serving
 //!   stack (admission-controlled priority/deadline queue in front of a
 //!   pool of device workers, each owning a pipelined executor and a
-//!   component-residency cache), the paper's pipelined
-//!   memory-constrained execution (Sec. 3.3), a TFLite GPU-delegate
-//!   simulator with the paper's Sec. 3.1 support rules and an
-//!   Adreno-740-class cost model, the graph rewrite passes (FC->Conv,
-//!   conv serialization, broadcast-free group norm, stable GELU), and
-//!   W8A16 weight storage (Sec. 3.4).
+//!   component-residency cache), the `planner` that fuses the analysis
+//!   stack into scheduling (named device-class registry, cost-gated
+//!   pass planning, per-`(device, variant)` execution plans, and
+//!   plan-driven admission routing for heterogeneous `--fleet` pools),
+//!   the paper's pipelined memory-constrained execution (Sec. 3.3), a
+//!   TFLite GPU-delegate simulator with the paper's Sec. 3.1 support
+//!   rules and an Adreno-740-class cost model, the graph rewrite
+//!   passes (FC->Conv, conv serialization, broadcast-free group norm,
+//!   stable GELU), and W8A16 weight storage (Sec. 3.4).
 //! * **L2 (python/compile, build-time only)** — a from-scratch latent
 //!   diffusion pipeline (CLIP-like text encoder, UNet, VAE decoder)
 //!   AOT-lowered to HLO text.
@@ -29,6 +32,7 @@ pub mod error;
 pub mod graph;
 pub mod passes;
 pub mod pipeline;
+pub mod planner;
 pub mod quant;
 pub mod runtime;
 pub mod scheduler;

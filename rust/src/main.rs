@@ -12,10 +12,10 @@ use std::path::Path;
 
 use mobile_diffusion::config::AppConfig;
 use mobile_diffusion::coordinator::{GenerateResponse, ResponseReceiver, Server};
-use mobile_diffusion::delegate::{
-    graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740,
-};
+use mobile_diffusion::delegate::{graph_cost, single_device_cost, RuleSet};
+use mobile_diffusion::graph::Graph;
 use mobile_diffusion::passes;
+use mobile_diffusion::planner::{self, DeviceSpec};
 use mobile_diffusion::runtime::Manifest;
 use mobile_diffusion::util::image;
 
@@ -31,10 +31,15 @@ COMMANDS:
              [--artifacts DIR] [--guidance X] [--config FILE.json]
   serve      prompts from stdin, metrics on EOF (same flags, plus
              [--workers N] [--queue-depth N] [--max-batch N] for the
-             worker pool; compatible concurrent requests share one
-             CFG-batched UNet dispatch per denoise step)
-  analyze    delegate report           <graph.json>
-  passes     pass-pipeline report      <graph.json>
+             worker pool and [--fleet SPEC] for a heterogeneous fleet,
+             e.g. adreno740:2,bigcore:1 — plan-predicted service times
+             drive admission and per-class routing; compatible
+             concurrent requests share one CFG-batched UNet dispatch
+             per denoise step)
+  analyze    delegate report           <graph.json> [--device NAME]
+  passes     pass-pipeline report      <graph.json> [--device NAME]
+             (NAME from the planner registry: adreno740, bigcore,
+              hexagon, custom; default adreno740)
   info       manifest summary          [--artifacts DIR]
 ";
 
@@ -140,11 +145,71 @@ fn cmd_serve(args: &[String]) -> R {
     Ok(())
 }
 
+/// Shared front half of `analyze`/`passes`: parse `<graph.json>
+/// [--device NAME]`, load the graph, resolve the device class against
+/// the planner registry (default adreno740).
+fn load_graph_cmd(cmd: &str, args: &[String]) -> mobile_diffusion::Result<(Graph, DeviceSpec)> {
+    let mut path: Option<String> = None;
+    let mut device = "adreno740".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--device" => {
+                i += 1;
+                device = args.get(i).cloned().ok_or_else(|| {
+                    mobile_diffusion::Error::Config("--device needs a value".into())
+                })?;
+            }
+            other if path.is_none() && !other.starts_with("--") => {
+                path = Some(other.to_string());
+            }
+            other => {
+                return Err(mobile_diffusion::Error::Config(format!(
+                    "{cmd}: unexpected argument {other}"
+                )));
+            }
+        }
+        i += 1;
+    }
+    let path = path.ok_or_else(|| {
+        mobile_diffusion::Error::Config(format!("{cmd} needs a graph.json"))
+    })?;
+    let spec = planner::device_spec(&device).ok_or_else(|| {
+        mobile_diffusion::Error::Config(format!(
+            "unknown device '{device}' (known: {})",
+            planner::device_names().join(", ")
+        ))
+    })?;
+    let g = mobile_diffusion::graph::load(Path::new(&path))?;
+    Ok((g, spec))
+}
+
+/// Shared cost line: delegate-partitioned for paired device classes,
+/// single-device for complete-coverage classes.
+fn modeled_cost_line(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> String {
+    match &spec.fallback {
+        Some(cpu) => {
+            let cost = graph_cost(g, rules, &spec.delegate, cpu);
+            format!(
+                "modeled latency on {}: {:.1} ms (gpu {:.1}, cpu {:.1}, transfer {:.1}; {} transitions)",
+                spec.name,
+                cost.total() * 1e3,
+                cost.gpu_time * 1e3,
+                cost.cpu_time * 1e3,
+                cost.transfer_time * 1e3,
+                cost.transitions
+            )
+        }
+        None => format!(
+            "modeled latency on {}: {:.1} ms (single device, complete coverage)",
+            spec.name,
+            single_device_cost(g, &spec.delegate) * 1e3
+        ),
+    }
+}
+
 fn cmd_analyze(args: &[String]) -> R {
-    let path = args
-        .first()
-        .ok_or_else(|| mobile_diffusion::Error::Config("analyze needs a graph.json".into()))?;
-    let g = mobile_diffusion::graph::load(Path::new(path))?;
+    let (g, spec) = load_graph_cmd("analyze", args)?;
     let rules = RuleSet::default();
     println!("{g}");
     let failures = rules.failures(&g);
@@ -156,28 +221,16 @@ fn cmd_analyze(args: &[String]) -> R {
     if failures.len() > 25 {
         println!("  ... and {} more", failures.len() - 25);
     }
-    let cost = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
-    println!(
-        "modeled latency: {:.1} ms (gpu {:.1}, cpu {:.1}, transfer {:.1}; {} transitions)",
-        cost.total() * 1e3,
-        cost.gpu_time * 1e3,
-        cost.cpu_time * 1e3,
-        cost.transfer_time * 1e3,
-        cost.transitions
-    );
+    println!("{}", modeled_cost_line(&g, &rules, &spec));
     Ok(())
 }
 
 fn cmd_passes(args: &[String]) -> R {
-    let path = args
-        .first()
-        .ok_or_else(|| mobile_diffusion::Error::Config("passes needs a graph.json".into()))?;
-    let mut g = mobile_diffusion::graph::load(Path::new(path))?;
+    let (mut g, spec) = load_graph_cmd("passes", args)?;
     let rules = RuleSet::default();
-    let before = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
-    let report = passes::run_all(&mut g);
-    let after = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
-    println!("pass pipeline on {}:", g.name);
+    let before = modeled_cost_line(&g, &rules, &spec);
+    let report = passes::run_all_for(&mut g, &spec.delegate);
+    println!("pass pipeline on {} (device {}):", g.name, spec.name);
     for (name, n) in &report.applied {
         println!("  {:<28} {} site(s)", name, n);
     }
@@ -186,11 +239,8 @@ fn cmd_passes(args: &[String]) -> R {
         report.coverage_before * 100.0,
         report.coverage_after * 100.0
     );
-    println!(
-        "modeled latency: {:.1} ms -> {:.1} ms",
-        before.total() * 1e3,
-        after.total() * 1e3
-    );
+    println!("before: {before}");
+    println!("after:  {}", modeled_cost_line(&g, &rules, &spec));
     Ok(())
 }
 

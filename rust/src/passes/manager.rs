@@ -105,7 +105,13 @@ pub fn run_with_config(
 
 /// All passes with the default device/rules.
 pub fn run_all(g: &mut Graph) -> PassReport {
-    run_with_config(g, &RuleSet::default(), &GPU_ADRENO740, PassConfig::default())
+    run_all_for(g, &GPU_ADRENO740)
+}
+
+/// All passes with the default rules on an explicit delegate profile —
+/// the `--device` CLI path and the planner's per-class trials.
+pub fn run_all_for(g: &mut Graph, dev: &DeviceProfile) -> PassReport {
+    run_with_config(g, &RuleSet::default(), dev, PassConfig::default())
 }
 
 #[cfg(test)]

@@ -22,7 +22,7 @@ pub mod groupnorm;
 pub mod manager;
 pub mod serialize_conv;
 
-pub use manager::{run_all, PassReport};
+pub use manager::{run_all, run_all_for, run_with_config, PassConfig, PassReport};
 
 use crate::graph::Graph;
 

@@ -287,6 +287,22 @@ impl PipelinedExecutor {
             .collect()
     }
 
+    /// Planner-style feasibility: resident peak the stage sequence
+    /// needs under `variant`/`tag` — UNet + max(text encoder, decoder)
+    /// pipelined (paper Sec. 3.3), the sum of all three otherwise.
+    /// Ledger numbers come from the manifest, so this is exactly the
+    /// peak the residency layer would hit mid-generation.
+    pub fn predicted_peak(&self, variant: &str, tag: &str) -> Result<usize> {
+        let unet = self.stored_bytes(&format!("unet_{variant}"), tag)?;
+        let text = self.stored_bytes("text_encoder", AUX_TAG)?;
+        let dec = self.stored_bytes("decoder", AUX_TAG)?;
+        Ok(if self.options.pipelined {
+            unet.saturating_add(text.max(dec))
+        } else {
+            unet.saturating_add(text).saturating_add(dec)
+        })
+    }
+
     /// Run one compatible group end-to-end.  Outer `Err` = a shared
     /// stage failed (whole group); inner per-member results cover the
     /// decode stage.
@@ -298,6 +314,24 @@ impl PipelinedExecutor {
     ) -> Result<Vec<Result<GenerateResult>>> {
         let t_start = Instant::now();
         let mut tm = StageTimings::default();
+
+        // fail fast with the plan-predicted peak instead of burning
+        // encode + denoise work only to hit the ledger at the decoder
+        // reserve (the budget cannot be met by any eviction order)
+        if self.options.memory_budget != usize::MAX {
+            let needed = self.predicted_peak(&key.variant, &key.weights_tag)?;
+            if needed > self.options.memory_budget {
+                return Err(Error::Pipeline(format!(
+                    "infeasible under memory budget: stage sequence needs {:.1} MB \
+                     resident ({} variant, {} weights, pipelined={}), budget is {:.1} MB",
+                    needed as f64 / 1e6,
+                    key.variant,
+                    key.weights_tag,
+                    self.options.pipelined,
+                    self.options.memory_budget as f64 / 1e6,
+                )));
+            }
+        }
 
         // ---- UNet resident (cached across requests) --------------------
         let unet_name = format!("unet_{}", key.variant);

@@ -1,0 +1,242 @@
+//! Heterogeneous fleet description and plan-driven admission routing.
+//!
+//! A fleet spec names the device classes behind one queue —
+//! `adreno740:2,bigcore:1` is two GPU-delegate phones plus one
+//! CPU-only phone — resolved against the planner's profile registry.
+//! The router turns a submission's `(variant, steps, deadline)` into a
+//! worker-class assignment using plan-predicted service times:
+//!
+//! * a class is **feasible** when its predicted service time fits the
+//!   deadline (deadline-less requests are routed against the queue's
+//!   aging horizon, [`FALLBACK_DEADLINE`]);
+//! * among feasible classes the **cheapest** wins — the *slowest*
+//!   device that still meets the deadline, keeping fast silicon free
+//!   for the requests that actually need it;
+//! * a deadline no class can meet is rejected **at admission** instead
+//!   of expiring in the queue; deadline-less requests are never
+//!   rejected (the fastest class takes them as a last resort).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::queue::FALLBACK_DEADLINE;
+use crate::error::{Error, Result};
+
+use super::plan::PlanRegistry;
+use super::registry::{device_names, device_spec, DeviceSpec};
+
+/// One class of identical workers in the fleet.
+#[derive(Debug, Clone)]
+pub struct WorkerClassSpec {
+    pub device: DeviceSpec,
+    pub count: usize,
+}
+
+/// The whole fleet, class order = spec order (= pool class indices).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub classes: Vec<WorkerClassSpec>,
+}
+
+impl FleetSpec {
+    /// Parse `name:count,name:count,...` (a bare `name` means one
+    /// worker).  Names resolve against the profile registry; unknown
+    /// names, zero counts, and duplicate classes are errors.
+    pub fn parse(s: &str) -> Result<FleetSpec> {
+        let mut classes: Vec<WorkerClassSpec> = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = match part.split_once(':') {
+                Some((n, c)) => {
+                    let count: usize = c.trim().parse().map_err(|e| {
+                        Error::Config(format!("fleet spec '{part}': bad count: {e}"))
+                    })?;
+                    (n.trim(), count)
+                }
+                None => (part, 1),
+            };
+            if count == 0 {
+                return Err(Error::Config(format!(
+                    "fleet spec '{part}': count must be at least 1"
+                )));
+            }
+            let device = device_spec(name).ok_or_else(|| {
+                Error::Config(format!(
+                    "fleet spec: unknown device '{name}' (known: {})",
+                    device_names().join(", ")
+                ))
+            })?;
+            if classes.iter().any(|c| c.device.name == device.name) {
+                return Err(Error::Config(format!(
+                    "fleet spec: device class '{name}' listed twice"
+                )));
+            }
+            classes.push(WorkerClassSpec { device, count });
+        }
+        if classes.is_empty() {
+            return Err(Error::Config(
+                "fleet spec names no device classes (e.g. adreno740:2,bigcore:1)".into(),
+            ));
+        }
+        Ok(FleetSpec { classes })
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.classes.iter().map(|c| c.count).sum()
+    }
+
+    /// Registry names in class order (pool class index order).
+    pub fn class_names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.device.name.to_string()).collect()
+    }
+}
+
+/// A routing decision for one admitted request.
+#[derive(Debug, Clone, Copy)]
+pub struct Route {
+    /// index into the fleet's class list (= pool class index)
+    pub class: usize,
+    /// plan-predicted service time on that class, seconds
+    pub predicted_s: f64,
+}
+
+/// Plan-driven admission router over one fleet.
+#[derive(Debug)]
+pub struct FleetRouter {
+    fleet: FleetSpec,
+    plans: Arc<PlanRegistry>,
+}
+
+impl FleetRouter {
+    pub fn new(fleet: FleetSpec, plans: Arc<PlanRegistry>) -> FleetRouter {
+        FleetRouter { fleet, plans }
+    }
+
+    pub fn fleet(&self) -> &FleetSpec {
+        &self.fleet
+    }
+
+    pub fn plans(&self) -> &Arc<PlanRegistry> {
+        &self.plans
+    }
+
+    /// Plan-predicted service time of `(variant, num_steps)` on a class.
+    pub fn predicted_s(&self, class: usize, variant: &str, num_steps: usize) -> Result<f64> {
+        let c = self.fleet.classes.get(class).ok_or_else(|| {
+            Error::Config(format!("no fleet class {class}"))
+        })?;
+        Ok(self.plans.plan(&c.device, variant)?.predict_service_s(num_steps))
+    }
+
+    /// Pick the cheapest feasible class (see module docs).  Returns
+    /// [`Error::Queue`] when a deadline is infeasible on every class.
+    pub fn route(
+        &self,
+        variant: &str,
+        num_steps: usize,
+        deadline: Option<Duration>,
+    ) -> Result<Route> {
+        let horizon = deadline.unwrap_or(FALLBACK_DEADLINE).as_secs_f64();
+        let mut cheapest: Option<Route> = None;
+        let mut fastest = Route { class: 0, predicted_s: f64::INFINITY };
+        for (i, class) in self.fleet.classes.iter().enumerate() {
+            let plan = self.plans.plan(&class.device, variant)?;
+            let predicted_s = plan.predict_service_s(num_steps);
+            if predicted_s < fastest.predicted_s {
+                fastest = Route { class: i, predicted_s };
+            }
+            let is_cheaper = match cheapest {
+                Some(c) => predicted_s > c.predicted_s,
+                None => true,
+            };
+            if predicted_s <= horizon && is_cheaper {
+                cheapest = Some(Route { class: i, predicted_s });
+            }
+        }
+        match cheapest {
+            Some(route) => Ok(route),
+            // deadline-less work is never rejected: fall back to the
+            // fastest class even past the aging horizon
+            None if deadline.is_none() => Ok(fastest),
+            None => Err(Error::Queue(format!(
+                "deadline {:.3}s infeasible: fastest class '{}' predicts {:.3}s \
+                 for {num_steps} steps of '{variant}'",
+                horizon,
+                self.fleet.classes[fastest.class].device.name,
+                fastest.predicted_s,
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_counts_and_bare_names() {
+        let f = FleetSpec::parse("adreno740:2,bigcore:1").unwrap();
+        assert_eq!(f.total_workers(), 3);
+        assert_eq!(f.class_names(), vec!["adreno740", "bigcore"]);
+
+        let f = FleetSpec::parse("hexagon").unwrap();
+        assert_eq!(f.total_workers(), 1);
+        assert_eq!(f.classes[0].device.name, "hexagon");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FleetSpec::parse("").is_err(), "empty");
+        assert!(FleetSpec::parse("warpdrive:1").is_err(), "unknown device");
+        assert!(FleetSpec::parse("adreno740:0").is_err(), "zero count");
+        assert!(FleetSpec::parse("adreno740:x").is_err(), "bad count");
+        assert!(FleetSpec::parse("adreno740:1,adreno740:2").is_err(), "duplicate");
+    }
+
+    fn two_class_router() -> FleetRouter {
+        let fleet = FleetSpec::parse("adreno740:1,bigcore:1").unwrap();
+        FleetRouter::new(fleet, Arc::new(PlanRegistry::new()))
+    }
+
+    #[test]
+    fn tight_deadlines_route_to_the_fast_class_lax_to_the_cheap_one() {
+        let r = two_class_router();
+        let fast = r.predicted_s(0, "mobile", 20).unwrap();
+        let slow = r.predicted_s(1, "mobile", 20).unwrap();
+        assert!(fast < slow, "adreno {fast} vs bigcore {slow}");
+
+        // between the two predictions: only the GPU class is feasible
+        let tight = Duration::from_secs_f64((fast + slow) / 2.0);
+        let route = r.route("mobile", 20, Some(tight)).unwrap();
+        assert_eq!(route.class, 0);
+        assert!((route.predicted_s - fast).abs() < 1e-12);
+
+        // past both predictions: the slower class is the cheaper pick
+        let lax = Duration::from_secs_f64(slow * 2.0);
+        assert_eq!(r.route("mobile", 20, Some(lax)).unwrap().class, 1);
+
+        // no deadline: routed against the aging horizon, cheapest wins
+        assert_eq!(r.route("mobile", 20, None).unwrap().class, 1);
+    }
+
+    #[test]
+    fn infeasible_deadlines_are_rejected_with_the_fastest_prediction() {
+        let r = two_class_router();
+        let fast = r.predicted_s(0, "mobile", 20).unwrap();
+        let err = r
+            .route("mobile", 20, Some(Duration::from_secs_f64(fast / 2.0)))
+            .unwrap_err();
+        assert!(err.to_string().contains("infeasible"), "{err}");
+        assert!(err.to_string().contains("adreno740"), "{err}");
+    }
+
+    #[test]
+    fn unknown_variant_is_a_config_error_not_infeasibility() {
+        let r = two_class_router();
+        let err = r.route("huge", 20, None).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+}

@@ -1,0 +1,26 @@
+//! The planner: the serving stack's brain.
+//!
+//! Turns the offline analysis stack (graph IR -> passes -> delegate
+//! partition -> roofline cost) into scheduling decisions:
+//!
+//! * [`registry`] — named device classes covering every shipped
+//!   [`crate::delegate::DeviceProfile`] (CLI `--device`, fleet spec
+//!   `--fleet`);
+//! * [`model`] — representative per-variant component graphs carrying
+//!   the paper's delegation pathologies;
+//! * [`plan`] — cost-gated pass planning ([`plan_graph`]) and the
+//!   per-`(device, variant)` [`ExecutionPlan`] cache ([`PlanRegistry`]):
+//!   predicted per-step latency, delegated coverage, peak memory;
+//! * [`fleet`] — heterogeneous fleet description ([`FleetSpec`]) and
+//!   plan-driven admission routing ([`FleetRouter`]): infeasible
+//!   deadlines are rejected at admission, every other request goes to
+//!   the cheapest worker class that meets its deadline.
+
+pub mod fleet;
+pub mod model;
+pub mod plan;
+pub mod registry;
+
+pub use fleet::{FleetRouter, FleetSpec, Route, WorkerClassSpec};
+pub use plan::{modeled_cost_s, plan_graph, ExecutionPlan, PlanRegistry, PlannedGraph};
+pub use registry::{device_names, device_spec, registered_devices, DeviceSpec};

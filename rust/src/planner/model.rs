@@ -1,0 +1,137 @@
+//! Representative component graphs the planner prices.
+//!
+//! The runtime ships components as opaque AOT-lowered HLO, which the
+//! delegate simulator cannot partition; what it *can* partition is a
+//! TFLite-level graph.  This module builds small, SD-flavored stand-in
+//! graphs per variant carrying exactly the pathologies the paper
+//! analyzes — the naive group-norm island (rank-5 + BroadcastTo), the
+//! over-capacity 1920->640 3x3 conv at 32x32, and the 4096-row
+//! fully-connected — so `plan_graph` reproduces the paper's coverage
+//! and latency structure per device class.  The graphs are costing
+//! models, not executables: absolute sizes are scaled down, relative
+//! shapes (and therefore which delegate rules fire) are faithful.
+
+use crate::error::{Error, Result};
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+
+/// Every variant the planner can price — the single source of truth
+/// for "which variants exist" (startup pre-pricing iterates this).
+pub const VARIANTS: &[&str] = &["base", "mobile"];
+
+/// UNet stand-in for a variant: `base` keeps the paper's failure
+/// shapes (delegate-breaking conv + FC), `mobile` is the squeezed
+/// variant whose shapes pass the rules outright.
+pub fn unet_graph(variant: &str) -> Result<Graph> {
+    match variant {
+        "base" => Ok(unet_base()),
+        "mobile" => Ok(unet_mobile()),
+        other => Err(Error::Config(format!(
+            "planner has no model graph for variant '{other}' (known: {})",
+            VARIANTS.join(", ")
+        ))),
+    }
+}
+
+fn unet_base() -> Graph {
+    let mut b = GraphBuilder::new("unet_base");
+    let x = b.input("latent", &[1, 32, 32, 1920]);
+    let h = b.group_norm_naive("gn_in", x, 32);
+    // the paper's exactly-one failing conv: C_in 1920 and 2.62M elems
+    let h = b.conv2d("bottleneck", h, 640, 3, 1);
+    let h = b.conv2d("proj_in", h, 320, 1, 1);
+    // attention/FF block on 4096 tokens: rows > fc_max_rows fails
+    let t = b.reshape("tokens", h, &[1, 4096, 80]);
+    let t = b.fully_connected("ff1", t, 320);
+    let t = b.gelu("gelu", t, false);
+    let t = b.fully_connected("ff2", t, 80);
+    let h = b.reshape("untokens", t, &[1, 32, 32, 320]);
+    let h = b.group_norm_naive("gn_out", h, 32);
+    b.conv2d("proj_out", h, 4, 3, 1);
+    b.finish()
+}
+
+fn unet_mobile() -> Graph {
+    let mut b = GraphBuilder::new("unet_mobile");
+    let x = b.input("latent", &[1, 32, 32, 960]);
+    let h = b.group_norm_naive("gn_in", x, 32);
+    // squeezed: C_in under the arena limit, conv delegates outright
+    let h = b.conv2d("bottleneck", h, 320, 3, 1);
+    let h = b.conv2d("proj_in", h, 320, 1, 1);
+    // 1024 tokens: under fc_max_rows, FC delegates outright
+    let t = b.reshape("tokens", h, &[1, 1024, 320]);
+    let t = b.fully_connected("ff1", t, 1280);
+    let t = b.gelu("gelu", t, false);
+    let t = b.fully_connected("ff2", t, 320);
+    let h = b.reshape("untokens", t, &[1, 32, 32, 320]);
+    let h = b.group_norm_naive("gn_out", h, 32);
+    b.conv2d("proj_out", h, 4, 3, 1);
+    b.finish()
+}
+
+/// Text-encoder stand-in (77-token context, FF-dominated).
+pub fn text_encoder_graph() -> Graph {
+    let mut b = GraphBuilder::new("text_encoder");
+    let x = b.input("tokens", &[1, 77, 512]);
+    let h = b.fully_connected("ff1", x, 2048);
+    let h = b.gelu("gelu", h, false);
+    b.fully_connected("ff2", h, 512);
+    b.finish()
+}
+
+/// VAE-decoder stand-in (conv-dominated, one group-norm island).
+pub fn decoder_graph() -> Graph {
+    let mut b = GraphBuilder::new("decoder");
+    let x = b.input("latent", &[1, 32, 32, 4]);
+    let h = b.conv2d("conv_in", x, 128, 3, 1);
+    let h = b.group_norm_naive("gn", h, 32);
+    let h = b.conv2d("conv_mid", h, 128, 3, 1);
+    b.conv2d("conv_out", h, 3, 1, 1);
+    b.finish()
+}
+
+/// The full component set the serving stack runs per request:
+/// `(unet, text_encoder, decoder)`.
+pub fn component_graphs(variant: &str) -> Result<(Graph, Graph, Graph)> {
+    Ok((unet_graph(variant)?, text_encoder_graph(), decoder_graph()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delegate::RuleSet;
+
+    #[test]
+    fn model_graphs_are_valid_and_carry_the_paper_pathologies() {
+        let rules = RuleSet::default();
+        let (base, text, dec) = component_graphs("base").unwrap();
+        base.validate().unwrap();
+        text.validate().unwrap();
+        dec.validate().unwrap();
+        // base keeps the paper's failures: coverage well below 1
+        assert!(rules.coverage(&base) < 1.0);
+        let fails = rules.failures(&base);
+        assert!(
+            fails.iter().any(|(op, _)| op.name == "bottleneck"),
+            "the 1920->640 conv must fail the delegate rules"
+        );
+        assert!(
+            fails.iter().any(|(op, _)| op.name == "ff1"),
+            "the 4096-row FC must fail the delegate rules"
+        );
+
+        let (mobile, _, _) = component_graphs("mobile").unwrap();
+        mobile.validate().unwrap();
+        // mobile's conv/FC shapes pass outright; only the group-norm
+        // islands remain for the pass pipeline
+        assert!(!rules
+            .failures(&mobile)
+            .iter()
+            .any(|(op, _)| op.name == "bottleneck" || op.name == "ff1"));
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error() {
+        assert!(unet_graph("huge").is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Cost-gated execution planning: run the Sec. 3.1/3.2 pass pipeline
+//! under the roofline cost model and keep only what the model says
+//! pays off on *this* device class.
+//!
+//! The offline CLI applies every pass unconditionally; the planner is
+//! stricter because its output drives admission control.  Each pass is
+//! trialled in pipeline order on a scratch copy and accepted only if
+//! it neither decreases delegation coverage nor increases modeled
+//! latency for the device class being planned — on the GPU-delegate
+//! class the whole pipeline typically lands (islands removed, the
+//! failing conv serialized), while a complete-coverage comparator
+//! class rejects a serialization that would only lose the Winograd
+//! reduction.  By construction a plan is never worse than the
+//! unplanned graph, which is the invariant the property tests pin.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::delegate::{graph_cost, single_device_cost, RuleSet};
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::passes::{run_with_config, PassConfig};
+
+use super::model;
+use super::registry::DeviceSpec;
+
+/// Denoise dispatches run the CFG pair (uncond + cond) per step.
+const CFG_ROWS: f64 = 2.0;
+
+/// Modeled end-to-end latency of one forward pass of `g` on a device
+/// class: delegate-partitioned for paired classes, single-device for
+/// complete-coverage classes.
+pub fn modeled_cost_s(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> f64 {
+    match &spec.fallback {
+        Some(cpu) => graph_cost(g, rules, &spec.delegate, cpu).total(),
+        None => single_device_cost(g, &spec.delegate),
+    }
+}
+
+/// The planner's verdict on one graph for one device class.
+#[derive(Debug, Clone)]
+pub struct PlannedGraph {
+    pub graph: Graph,
+    /// modeled latency of one forward pass, seconds
+    pub cost_s: f64,
+    /// delegate-rule coverage of the planned graph
+    pub coverage: f64,
+    /// rewrite sites applied across the accepted passes
+    pub rewrites: usize,
+    /// names of the passes the cost model accepted, pipeline order
+    pub passes_used: Vec<&'static str>,
+}
+
+/// The pipeline in the order `passes::manager` mandates, one pass per
+/// stage so each is cost-gated independently.
+fn pass_stages() -> [(&'static str, PassConfig); 4] {
+    [
+        ("groupnorm", PassConfig { groupnorm: true, ..PassConfig::NONE }),
+        ("fc_to_conv", PassConfig { fc_to_conv: true, ..PassConfig::NONE }),
+        ("serialize_conv", PassConfig { serialize_conv: true, ..PassConfig::NONE }),
+        ("stable_gelu", PassConfig { stable_gelu: true, ..PassConfig::NONE }),
+    ]
+}
+
+/// Plan one graph for one device class: trial each pass in pipeline
+/// order, accept it only if coverage does not decrease and modeled
+/// latency does not increase.  Never returns a graph worse than the
+/// input under either metric.
+pub fn plan_graph(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> PlannedGraph {
+    let mut current = g.clone();
+    let mut cost_s = modeled_cost_s(&current, rules, spec);
+    let mut coverage = rules.coverage(&current);
+    let mut rewrites = 0usize;
+    let mut passes_used = Vec::new();
+
+    for (name, cfg) in pass_stages() {
+        let mut candidate = current.clone();
+        let report = run_with_config(&mut candidate, rules, &spec.delegate, cfg);
+        if report.total_rewrites() == 0 {
+            continue;
+        }
+        let cand_cost = modeled_cost_s(&candidate, rules, spec);
+        let cand_cov = rules.coverage(&candidate);
+        if cand_cov >= coverage && cand_cost <= cost_s {
+            current = candidate;
+            cost_s = cand_cost;
+            coverage = cand_cov;
+            rewrites += report.total_rewrites();
+            passes_used.push(name);
+        }
+    }
+
+    PlannedGraph { graph: current, cost_s, coverage, rewrites, passes_used }
+}
+
+/// What the scheduler needs to know about running one `(device class,
+/// variant)` combination: predicted per-step latency, fixed per-request
+/// overhead, delegated coverage, and modeled peak memory.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// registry name of the device class
+    pub device: String,
+    pub variant: String,
+    /// delegated coverage of the planned UNet (1.0 for single-device
+    /// classes — complete coverage by construction)
+    pub coverage: f64,
+    /// one CFG-batched denoise dispatch (uncond + cond UNet rows)
+    pub step_latency_s: f64,
+    /// per-request fixed cost: text encode + decode forward passes
+    pub overhead_s: f64,
+    /// modeled resident peak: UNet weights + max(encoder, decoder)
+    /// weights + the largest live activation (the paper's pipelined
+    /// shape, Sec. 3.3)
+    pub peak_memory: usize,
+    /// rewrite sites the cost model accepted across all components
+    pub rewrites: usize,
+    /// accepted passes on the UNet, pipeline order
+    pub unet_passes: Vec<&'static str>,
+}
+
+fn weight_bytes(g: &Graph) -> usize {
+    g.tensors.iter().filter(|t| t.is_const).map(|t| t.bytes()).sum()
+}
+
+fn peak_activation_bytes(g: &Graph) -> usize {
+    g.tensors
+        .iter()
+        .filter(|t| !t.is_const)
+        .map(|t| t.bytes())
+        .max()
+        .unwrap_or(0)
+}
+
+impl ExecutionPlan {
+    /// Plan every component of `variant` for `spec`.
+    pub fn build(spec: &DeviceSpec, variant: &str, rules: &RuleSet) -> Result<ExecutionPlan> {
+        let (unet, text, dec) = model::component_graphs(variant)?;
+        let unet_p = plan_graph(&unet, rules, spec);
+        let text_p = plan_graph(&text, rules, spec);
+        let dec_p = plan_graph(&dec, rules, spec);
+        let coverage = if spec.is_single_device() { 1.0 } else { unet_p.coverage };
+        let peak_memory = weight_bytes(&unet_p.graph)
+            + weight_bytes(&text_p.graph).max(weight_bytes(&dec_p.graph))
+            + peak_activation_bytes(&unet_p.graph);
+        Ok(ExecutionPlan {
+            device: spec.name.to_string(),
+            variant: variant.to_string(),
+            coverage,
+            step_latency_s: CFG_ROWS * unet_p.cost_s,
+            overhead_s: text_p.cost_s + dec_p.cost_s,
+            peak_memory,
+            rewrites: unet_p.rewrites + text_p.rewrites + dec_p.rewrites,
+            unet_passes: unet_p.passes_used,
+        })
+    }
+
+    /// Plan-predicted service time of one request at `num_steps`.
+    pub fn predict_service_s(&self, num_steps: usize) -> f64 {
+        self.overhead_s + num_steps as f64 * self.step_latency_s
+    }
+}
+
+/// Shared, lazily-built cache of execution plans, keyed by
+/// `(device class, variant)`.  One registry serves the whole pool:
+/// admission routing, worker startup, and the CLI all read the same
+/// plans, and each combination pays the pass pipeline exactly once.
+#[derive(Debug)]
+pub struct PlanRegistry {
+    rules: RuleSet,
+    plans: Mutex<BTreeMap<(String, String), Arc<ExecutionPlan>>>,
+}
+
+impl PlanRegistry {
+    pub fn new() -> PlanRegistry {
+        PlanRegistry::with_rules(RuleSet::default())
+    }
+
+    pub fn with_rules(rules: RuleSet) -> PlanRegistry {
+        PlanRegistry { rules, plans: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The cached plan for `(spec, variant)`, building it on first use.
+    pub fn plan(&self, spec: &DeviceSpec, variant: &str) -> Result<Arc<ExecutionPlan>> {
+        let key = (spec.name.to_string(), variant.to_string());
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        // build outside the lock: the pass pipeline is the slow part
+        let built = Arc::new(ExecutionPlan::build(spec, variant, &self.rules)?);
+        let mut plans = self.plans.lock().unwrap();
+        Ok(Arc::clone(plans.entry(key).or_insert(built)))
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PlanRegistry {
+    fn default() -> Self {
+        PlanRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::registry::device_spec;
+
+    #[test]
+    fn gpu_class_plan_reaches_full_coverage_and_beats_unplanned() {
+        let rules = RuleSet::default();
+        let spec = device_spec("adreno740").unwrap();
+        let g = model::unet_graph("base").unwrap();
+        let before = modeled_cost_s(&g, &rules, &spec);
+        let planned = plan_graph(&g, &rules, &spec);
+        assert_eq!(planned.coverage, 1.0, "passes fix every island: {:?}", planned.passes_used);
+        assert!(
+            planned.cost_s < before,
+            "islands cost transfers: {} !< {}",
+            planned.cost_s,
+            before
+        );
+        assert!(planned.passes_used.contains(&"groupnorm"));
+        assert!(planned.passes_used.contains(&"serialize_conv"));
+        planned.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn single_device_class_rejects_pointless_serialization() {
+        let rules = RuleSet::default();
+        let spec = device_spec("custom").unwrap();
+        let g = model::unet_graph("base").unwrap();
+        let before = modeled_cost_s(&g, &rules, &spec);
+        let planned = plan_graph(&g, &rules, &spec);
+        // complete-coverage kernels never pay to serialize (the split
+        // only loses the Winograd reduction and adds partial sums)
+        assert!(!planned.passes_used.contains(&"serialize_conv"), "{:?}", planned.passes_used);
+        assert!(planned.cost_s <= before);
+    }
+
+    #[test]
+    fn plans_predict_faster_service_on_the_faster_class() {
+        let reg = PlanRegistry::new();
+        let fast = reg.plan(&device_spec("adreno740").unwrap(), "mobile").unwrap();
+        let slow = reg.plan(&device_spec("bigcore").unwrap(), "mobile").unwrap();
+        assert!(fast.step_latency_s < slow.step_latency_s);
+        assert!(fast.predict_service_s(20) < slow.predict_service_s(20));
+        // more steps cost more
+        assert!(fast.predict_service_s(20) > fast.predict_service_s(4));
+        assert!(fast.peak_memory > 0 && slow.peak_memory > 0);
+    }
+
+    #[test]
+    fn registry_caches_per_device_and_variant() {
+        let reg = PlanRegistry::new();
+        assert!(reg.is_empty());
+        let spec = device_spec("adreno740").unwrap();
+        let a = reg.plan(&spec, "mobile").unwrap();
+        let b = reg.plan(&spec, "mobile").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup is a cache hit");
+        assert_eq!(reg.len(), 1);
+        reg.plan(&spec, "base").unwrap();
+        reg.plan(&device_spec("bigcore").unwrap(), "mobile").unwrap();
+        assert_eq!(reg.len(), 3);
+        assert!(reg.plan(&spec, "huge").is_err(), "unknown variant");
+    }
+
+    #[test]
+    fn base_variant_costs_more_than_mobile_on_the_gpu_class() {
+        let reg = PlanRegistry::new();
+        let spec = device_spec("adreno740").unwrap();
+        let base = reg.plan(&spec, "base").unwrap();
+        let mobile = reg.plan(&spec, "mobile").unwrap();
+        assert!(base.step_latency_s > mobile.step_latency_s, "squeezing pays");
+    }
+}

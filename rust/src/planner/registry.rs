@@ -1,0 +1,114 @@
+//! Named device-class registry: every device profile the cost model
+//! ships is reachable by name from the CLI (`--device`) and the serving
+//! fleet spec (`--fleet`).
+//!
+//! A *device class* is a phone SoC seen from the delegate's point of
+//! view: the accelerator the delegate targets plus (for the TFLite
+//! GPU-delegate path) the CPU that absorbs non-delegable islands.  The
+//! comparator classes (Hexagon NPU, custom OpenCL kernels) execute the
+//! whole graph on one device — complete coverage by construction, no
+//! fallback — matching how the paper's Table 1 baselines ran.
+
+use crate::delegate::{
+    DeviceProfile, CPU_BIGCORE, GPU_ADRENO740, GPU_CUSTOM_KERNELS, NPU_HEXAGON,
+};
+
+/// A schedulable device class: the delegate target plus its CPU
+/// fallback (None = single-device execution, complete coverage).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// registry name (CLI `--device`, fleet spec `--fleet name:count`)
+    pub name: &'static str,
+    /// the accelerator the delegate dispatches to
+    pub delegate: DeviceProfile,
+    /// CPU absorbing non-delegable islands; `None` runs everything on
+    /// `delegate` (comparator classes with full coverage by construction)
+    pub fallback: Option<DeviceProfile>,
+    pub description: &'static str,
+}
+
+impl DeviceSpec {
+    pub fn is_single_device(&self) -> bool {
+        self.fallback.is_none()
+    }
+}
+
+/// Every shipped device class, in fleet-spec order of "capability":
+/// the paper's primary target first, comparators after.
+pub fn registered_devices() -> Vec<DeviceSpec> {
+    vec![
+        DeviceSpec {
+            name: "adreno740",
+            delegate: GPU_ADRENO740,
+            fallback: Some(CPU_BIGCORE),
+            description: "Galaxy-S23-class phone: TFLite GPU delegate on an \
+                          Adreno-740, XNNPACK big-core CPU fallback",
+        },
+        DeviceSpec {
+            name: "bigcore",
+            delegate: CPU_BIGCORE,
+            fallback: None,
+            description: "CPU-only phone: XNNPACK fp16 on Snapdragon big \
+                          cores, every op supported",
+        },
+        DeviceSpec {
+            name: "hexagon",
+            delegate: NPU_HEXAGON,
+            fallback: None,
+            description: "Hexagon-class NPU comparator (Hou & Asghar): \
+                          complete coverage, lower sustained efficiency",
+        },
+        DeviceSpec {
+            name: "custom",
+            delegate: GPU_CUSTOM_KERNELS,
+            fallback: None,
+            description: "custom OpenCL kernels comparator (Chen et al.): \
+                          complete coverage by construction",
+        },
+    ]
+}
+
+/// Look a device class up by registry name.
+pub fn device_spec(name: &str) -> Option<DeviceSpec> {
+    registered_devices().into_iter().find(|d| d.name == name)
+}
+
+/// All registry names, in `registered_devices` order.
+pub fn device_names() -> Vec<&'static str> {
+    registered_devices().iter().map(|d| d.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_shipped_profile_is_reachable_by_name() {
+        // the four delegate constants each back exactly one named class
+        let adreno = device_spec("adreno740").unwrap();
+        assert_eq!(adreno.delegate.name, GPU_ADRENO740.name);
+        assert_eq!(adreno.fallback.as_ref().unwrap().name, CPU_BIGCORE.name);
+
+        let cpu = device_spec("bigcore").unwrap();
+        assert_eq!(cpu.delegate.name, CPU_BIGCORE.name);
+        assert!(cpu.is_single_device());
+
+        let npu = device_spec("hexagon").unwrap();
+        assert_eq!(npu.delegate.name, NPU_HEXAGON.name);
+        assert!(npu.is_single_device());
+
+        let custom = device_spec("custom").unwrap();
+        assert_eq!(custom.delegate.name, GPU_CUSTOM_KERNELS.name);
+        assert!(custom.is_single_device());
+    }
+
+    #[test]
+    fn names_round_trip_and_unknown_is_none() {
+        for name in device_names() {
+            let spec = device_spec(name).unwrap();
+            assert_eq!(spec.name, name);
+        }
+        assert!(device_spec("adreno999").is_none());
+        assert_eq!(device_names().len(), registered_devices().len());
+    }
+}

@@ -1,0 +1,142 @@
+//! End-to-end heterogeneous-fleet serving on the stub backend: a
+//! 2-class fleet (`adreno740:1,bigcore:1`) behind one queue, with
+//! plan-driven admission.  Covers the acceptance flow: a
+//! tight-deadline request routes to the faster device class, an
+//! infeasible deadline is rejected at admission (never queued), and
+//! `PoolMetrics` reports per-class predicted-vs-actual latency.
+
+use std::time::Duration;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::{Server, SubmitOptions};
+use mobile_diffusion::planner::{device_spec, PlanRegistry};
+use mobile_diffusion::testkit::{self, FakeArtifactSpec};
+
+fn small_spec() -> FakeArtifactSpec {
+    FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    }
+}
+
+/// Plan-predicted service times for the test's (variant, steps), so
+/// the deadlines below straddle the two classes whatever the exact
+/// model-graph calibration.
+fn predictions(steps: usize) -> (f64, f64) {
+    let plans = PlanRegistry::new();
+    let fast = plans
+        .plan(&device_spec("adreno740").unwrap(), "mobile")
+        .unwrap()
+        .predict_service_s(steps);
+    let slow = plans
+        .plan(&device_spec("bigcore").unwrap(), "mobile")
+        .unwrap()
+        .predict_service_s(steps);
+    (fast, slow)
+}
+
+#[test]
+fn two_class_fleet_routes_rejects_and_reports() {
+    let steps = 3usize;
+    let (fast, slow) = predictions(steps);
+    assert!(
+        fast < slow,
+        "the GPU-delegate class must out-predict the CPU class ({fast} vs {slow})"
+    );
+
+    let dir = testkit::fake_artifacts_dir("fleet_e2e", &small_spec()).unwrap();
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = steps;
+    cfg.queue_depth = 16;
+    cfg.fleet = Some("adreno740:1,bigcore:1".into());
+    let mut server = Server::start(&cfg).unwrap();
+    assert_eq!(server.num_workers(), 2, "one worker per fleet class");
+
+    // 1. a deadline between the two predictions: only the faster
+    //    class is feasible, so the planner routes there
+    let tight = Duration::from_secs_f64((fast + slow) / 2.0);
+    let opts = SubmitOptions { deadline: Some(tight), ..Default::default() };
+    let resp = server.generate_with("tight deadline", 1, opts).unwrap();
+    assert_eq!(resp.device_class, "adreno740");
+    let predicted = resp.predicted_s.expect("planned fleets carry predictions");
+    assert!((predicted - fast).abs() < 1e-9);
+    assert!(resp.image.iter().all(|v| v.is_finite()));
+
+    // 2. no deadline: the cheapest (slowest feasible) class takes it
+    let resp = server.generate("no deadline", 2).unwrap();
+    assert_eq!(resp.device_class, "bigcore");
+
+    // 3. a deadline below even the fast class's prediction is
+    //    rejected at admission — it never reaches the queue
+    let impossible = Duration::from_secs_f64(fast / 2.0);
+    let opts = SubmitOptions { deadline: Some(impossible), ..Default::default() };
+    let err = server
+        .generate_with("impossible deadline", 3, opts)
+        .expect_err("infeasible deadline must be rejected");
+    assert!(err.to_string().contains("infeasible"), "{err}");
+    server.with_metrics(|m| {
+        assert_eq!(m.rejected_infeasible, 1);
+        assert_eq!(
+            m.rejected_deadline, 0,
+            "rejected at admission, not expired in queue"
+        );
+        assert_eq!(m.stage.requests_ok, 2);
+    });
+
+    // 4. per-class predicted-vs-actual latency lands in the metrics
+    server.with_metrics(|m| {
+        let adreno = m.classes.iter().find(|c| c.name == "adreno740").unwrap();
+        assert_eq!(adreno.prediction_count(), 1);
+        assert!(adreno.predicted_summary().mean > 0.0);
+        assert!(adreno.actual_summary().mean > 0.0);
+        let cpu = m.classes.iter().find(|c| c.name == "bigcore").unwrap();
+        assert_eq!(cpu.prediction_count(), 1);
+    });
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("class adreno740"), "{report}");
+    assert!(report.contains("class bigcore"), "{report}");
+    assert!(report.contains("|rel err|"), "{report}");
+}
+
+#[test]
+fn fleet_respects_variant_overrides_in_routing() {
+    let dir = testkit::fake_artifacts_dir("fleet_variant", &small_spec()).unwrap();
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 2;
+    cfg.fleet = Some("adreno740:1,bigcore:1".into());
+    let mut server = Server::start(&cfg).unwrap();
+
+    // the base variant predicts slower everywhere; a deadline feasible
+    // for mobile-on-cpu can be infeasible for base-on-cpu, pushing the
+    // base request onto the GPU class
+    let plans = PlanRegistry::new();
+    let base_cpu = plans
+        .plan(&device_spec("bigcore").unwrap(), "base")
+        .unwrap()
+        .predict_service_s(2);
+    let base_gpu = plans
+        .plan(&device_spec("adreno740").unwrap(), "base")
+        .unwrap()
+        .predict_service_s(2);
+    assert!(base_gpu < base_cpu);
+    let deadline = Duration::from_secs_f64((base_gpu + base_cpu) / 2.0);
+
+    let opts = SubmitOptions {
+        variant: Some("base".into()),
+        deadline: Some(deadline),
+        ..Default::default()
+    };
+    let resp = server.generate_with("base variant", 1, opts).unwrap();
+    assert_eq!(resp.device_class, "adreno740");
+
+    // an unknown variant is rejected as a config error, not counted
+    // as deadline infeasibility
+    let opts = SubmitOptions { variant: Some("huge".into()), ..Default::default() };
+    let err = server.generate_with("unknown variant", 2, opts).unwrap_err();
+    assert!(err.to_string().contains("variant"), "{err}");
+    server.with_metrics(|m| assert_eq!(m.rejected_infeasible, 0));
+}

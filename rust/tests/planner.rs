@@ -1,0 +1,86 @@
+//! Property tests for the planner's core contract, over generated
+//! graphs and every registered device class:
+//!
+//! * the raw pass pipeline never *decreases* delegation coverage;
+//! * the planner's cost-gated plan never decreases coverage **and**
+//!   never increases modeled latency (the gate enforces it per pass,
+//!   whatever the pipeline does on a given device class).
+
+use mobile_diffusion::delegate::RuleSet;
+use mobile_diffusion::graph::builder::random_graph;
+use mobile_diffusion::passes;
+use mobile_diffusion::planner::{modeled_cost_s, plan_graph, registered_devices};
+use mobile_diffusion::util::miniprop::forall;
+use mobile_diffusion::util::rng::Rng;
+
+#[test]
+fn pass_pipeline_never_decreases_coverage_on_any_device() {
+    let rules = RuleSet::default();
+    forall("pipeline coverage monotone", 30, |prop| {
+        let seed = prop.seed();
+        let n_ops = prop.usize_in(5, 22);
+        for spec in registered_devices() {
+            let mut g = random_graph(&mut Rng::new(seed), n_ops);
+            let before = rules.coverage(&g);
+            let report = passes::run_all_for(&mut g, &spec.delegate);
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(
+                report.coverage_after >= before - 1e-12,
+                "device {}: coverage {} -> {} (seed {seed:#x}, {n_ops} ops)",
+                spec.name,
+                before,
+                report.coverage_after
+            );
+        }
+    });
+}
+
+#[test]
+fn planner_never_increases_modeled_latency_on_any_device() {
+    let rules = RuleSet::default();
+    forall("plan never worse", 30, |prop| {
+        let seed = prop.seed();
+        let n_ops = prop.usize_in(5, 22);
+        let g = random_graph(&mut Rng::new(seed), n_ops);
+        for spec in registered_devices() {
+            let cost_before = modeled_cost_s(&g, &rules, &spec);
+            let cov_before = rules.coverage(&g);
+            let planned = plan_graph(&g, &rules, &spec);
+            planned
+                .graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(
+                planned.coverage >= cov_before - 1e-12,
+                "device {}: planned coverage {} < {} (seed {seed:#x}, {n_ops} ops)",
+                spec.name,
+                planned.coverage,
+                cov_before
+            );
+            assert!(
+                planned.cost_s <= cost_before + 1e-12,
+                "device {}: planned cost {} > {} (seed {seed:#x}, {n_ops} ops, passes {:?})",
+                spec.name,
+                planned.cost_s,
+                cost_before,
+                planned.passes_used
+            );
+        }
+    });
+}
+
+#[test]
+fn planner_beats_the_unplanned_graph_where_it_matters() {
+    // not just "never worse": on the GPU-delegate class the planner
+    // must actually claw back the paper's islands
+    let rules = RuleSet::default();
+    let spec = registered_devices()
+        .into_iter()
+        .find(|d| d.name == "adreno740")
+        .unwrap();
+    let g = mobile_diffusion::planner::model::unet_graph("base").unwrap();
+    let planned = plan_graph(&g, &rules, &spec);
+    assert!(planned.cost_s < modeled_cost_s(&g, &rules, &spec));
+    assert_eq!(planned.coverage, 1.0);
+    assert!(planned.rewrites > 0);
+}
