@@ -1,0 +1,190 @@
+//! Cold vs warm component acquisition and fleet startup on the stub
+//! backend.  Emits `BENCH_load.json` (repo root).
+//!
+//! Three measurements over synthetic int8 STUBHLO artifacts (int8 so
+//! the cold path pays a real dequant stage):
+//!
+//! * **cold acquire** — fresh store + fresh executor: disk read, MDWB
+//!   parse, dequant, HLO compile, device upload;
+//! * **warm acquire** — same executor after an eviction: the host half
+//!   comes from the artifact store, the executable from the residency
+//!   warm tier, so only the device upload is paid;
+//! * **fleet startup** — 4 workers acquiring every component through
+//!   one shared store vs 4 private stores (the pre-store world).
+//!
+//! The claim is the *shape*: warm reload >= 5x faster than cold, and a
+//! shared-store fleet does 1 disk load per component instead of 1 per
+//! worker.  Absolute numbers are synthetic (stub backend).
+//!
+//!     cargo bench --bench load            # full workload
+//!     cargo bench --bench load -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::runtime::{ArtifactStore, Manifest};
+use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+fn opts() -> ExecOptions {
+    ExecOptions { unet_weights: "int8".into(), ..Default::default() }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast") || std::env::var("LOAD_FAST").is_ok();
+    let spec = FakeArtifactSpec {
+        int8_unet: true,
+        unet_weight_elems: if fast { 262_144 } else { 1_048_576 },
+        ..Default::default()
+    };
+    let iters = if fast { 7 } else { 15 };
+    let dir = fake_artifacts_dir("bench_load", &spec).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    println!(
+        "== cold vs warm component acquisition (stub backend{}) ==",
+        if fast { ", fast mode" } else { "" }
+    );
+    println!("   int8 UNet, {} weight elements, {iters} iterations\n", spec.unet_weight_elems);
+
+    // ---- cold: fresh store + executor every time ----------------------
+    let mut cold_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut ex = PipelinedExecutor::new(m.clone(), opts()).unwrap();
+        let t0 = Instant::now();
+        ex.ensure_unet("mobile").unwrap();
+        cold_samples.push(t0.elapsed().as_secs_f64());
+    }
+    let cold_s = median(&mut cold_samples);
+
+    // ---- warm: evict between acquires, same store + warm tier ---------
+    let mut ex = PipelinedExecutor::new(m.clone(), opts()).unwrap();
+    ex.ensure_unet("mobile").unwrap(); // prime store + warm tier
+    let primed = ex.load_profile().clone();
+    let mut warm_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        ex.evict_idle(); // budget-eviction stand-in: demotes to warm
+        let t0 = Instant::now();
+        ex.ensure_unet("mobile").unwrap();
+        warm_samples.push(t0.elapsed().as_secs_f64());
+    }
+    let warm_s = median(&mut warm_samples);
+    // stage accounting over the warm reloads alone (prime excluded)
+    let profile = ex.load_profile().since(&primed);
+    assert_eq!(profile.warm_reloads as usize, iters, "every re-acquire was warm");
+
+    let speedup = cold_s / warm_s.max(1e-12);
+    println!("{:>18} {:>12}", "path", "median");
+    println!("{:>18} {:>9.3} ms", "cold acquire", cold_s * 1e3);
+    println!("{:>18} {:>9.3} ms", "warm acquire", warm_s * 1e3);
+    println!("\nwarm reload speedup: {speedup:.1}x (upload-only vs read+parse+dequant+compile+upload)");
+
+    // ---- fleet-of-4 startup: shared store vs private stores -----------
+    let fleet_workers = 4usize;
+    let acquire_all = |store: Arc<ArtifactStore>| {
+        let handles: Vec<_> = (0..fleet_workers)
+            .map(|_| {
+                let m = m.clone();
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    let mut ex =
+                        PipelinedExecutor::with_store(m, opts(), store).unwrap();
+                    ex.ensure_unet("mobile").unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    };
+    let shared = Arc::new(ArtifactStore::new());
+    let t0 = Instant::now();
+    acquire_all(Arc::clone(&shared));
+    let fleet_shared_s = t0.elapsed().as_secs_f64();
+    let shared_loads = shared.disk_loads();
+    let shared_hits = shared.hits();
+
+    // private store per worker (the pre-store world): same 4 threads,
+    // but every worker pays its own disk read + parse + dequant
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..fleet_workers)
+        .map(|_| {
+            let m = m.clone();
+            std::thread::spawn(move || acquire_all_private(&m))
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let fleet_private_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\nfleet-of-{fleet_workers} startup: shared store {:.1} ms ({shared_loads} disk loads, \
+         {shared_hits} hits) vs private stores {:.1} ms ({fleet_workers} disk loads)",
+        fleet_shared_s * 1e3,
+        fleet_private_s * 1e3,
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "\"backend\": \"xla-stub\",\n",
+            "\"fast\": {fast},\n",
+            "\"unet_weight_elems\": {elems},\n",
+            "\"iterations\": {iters},\n",
+            "\"cold_acquire_s\": {cold:.6},\n",
+            "\"warm_acquire_s\": {warm:.6},\n",
+            "\"warm_speedup\": {speedup:.2},\n",
+            "\"warm_stage_s\": {{\"read\": {read:.6}, \"parse\": {parse:.6}, ",
+            "\"dequant\": {dequant:.6}, \"compile\": {compile:.6}, ",
+            "\"upload\": {upload:.6}}},\n",
+            "\"fleet\": {{\"workers\": {workers}, ",
+            "\"shared_store_startup_s\": {fss:.6}, ",
+            "\"private_store_startup_s\": {fps:.6}, ",
+            "\"shared_disk_loads\": {sdl}, \"shared_store_hits\": {ssh}}}\n",
+            "}}\n"
+        ),
+        fast = fast,
+        elems = spec.unet_weight_elems,
+        iters = iters,
+        cold = cold_s,
+        warm = warm_s,
+        speedup = speedup,
+        read = profile.read_s,
+        parse = profile.parse_s,
+        dequant = profile.dequant_s,
+        compile = profile.compile_s,
+        upload = profile.upload_s,
+        workers = fleet_workers,
+        fss = fleet_shared_s,
+        fps = fleet_private_s,
+        sdl = shared_loads,
+        ssh = shared_hits,
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_load.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("wrote {}", out.display());
+
+    if shared_loads != 1 {
+        eprintln!("FAIL: shared store did {shared_loads} disk loads for one component");
+        std::process::exit(1);
+    }
+    if speedup < 5.0 {
+        eprintln!("FAIL: warm reload only {speedup:.1}x faster than cold (want >= 5x)");
+        std::process::exit(1);
+    }
+}
+
+/// One worker with a private store — the pre-store cold world.
+fn acquire_all_private(m: &Manifest) {
+    let mut ex = PipelinedExecutor::new(m.clone(), opts()).unwrap();
+    ex.ensure_unet("mobile").unwrap();
+}

@@ -34,6 +34,9 @@ pub struct AppConfig {
     /// worker counts come from the spec (overriding `num_workers`) and
     /// admission routes by plan-predicted service time.
     pub fleet: Option<String>,
+    /// compiled executables each worker keeps across evictions (the
+    /// warm-reload tier); 0 disables warm reuse
+    pub warm_slots: usize,
 }
 
 impl Default for AppConfig {
@@ -53,6 +56,7 @@ impl Default for AppConfig {
             queue_depth: 32,
             max_batch: 1,
             fleet: None,
+            warm_slots: 8,
         }
     }
 }
@@ -69,6 +73,7 @@ impl AppConfig {
             unet_weights: self.unet_weights.clone(),
             num_steps: self.num_steps,
             guidance_scale: self.guidance_scale,
+            warm_slots: self.warm_slots,
         }
     }
 
@@ -119,6 +124,9 @@ impl AppConfig {
         }
         if let Some(v) = j.get("fleet").as_str() {
             self.fleet = Some(v.to_string());
+        }
+        if let Some(v) = j.get("warm_slots").as_usize() {
+            self.warm_slots = v;
         }
     }
 
@@ -181,6 +189,11 @@ impl AppConfig {
                         .map_err(|e| Error::Config(format!("--max-batch: {e}")))?;
                 }
                 "--fleet" => self.fleet = Some(take(&mut i)?),
+                "--warm-slots" => {
+                    self.warm_slots = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--warm-slots: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
@@ -285,6 +298,20 @@ mod tests {
         assert!(c.apply_args(&args(&["--queue-depth", "0"])).is_err());
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--max-batch", "0"])).is_err());
+    }
+
+    #[test]
+    fn warm_slots_flag_and_json() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.warm_slots, 8, "warm reloads on by default");
+        assert_eq!(c.exec_options().warm_slots, 8);
+        c.apply_args(&args(&["--warm-slots", "0"])).unwrap();
+        assert_eq!(c.warm_slots, 0, "0 disables the warm tier");
+        let j = Json::parse(r#"{"warm_slots": 16}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.warm_slots, 16);
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--warm-slots", "x"])).is_err());
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Serving metrics: per-stage latency summaries plus pool-level
 //! counters — queue depth high-water, admission rejections, end-to-end
-//! latency percentiles, and per-worker utilization.
+//! latency percentiles, per-worker utilization, fleet-wide load
+//! accounting (cold vs warm reloads, store hits vs misses), and the
+//! per-class *observed* request overhead that feeds back into the
+//! planner's admission predictions.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::pipeline::StageTimings;
+use crate::pipeline::{LoadProfile, StageTimings};
 use crate::util::stats::{summarize, Summary};
 
 /// Cap on retained samples per series.  The serving loop is a daemon;
@@ -127,7 +130,16 @@ pub struct ClassMetrics {
     actual_s: SampleWindow,
     /// |actual - predicted| / predicted, per served request
     abs_rel_err: SampleWindow,
+    /// measured non-denoise time per served request (loads + encode +
+    /// decode), keyed by variant — the observed analog of the plan's
+    /// per-`(device, variant)` `overhead_s`, so one variant's cheap
+    /// overhead never vouches for another's
+    overhead_s: BTreeMap<String, SampleWindow>,
 }
+
+/// Served requests a class must accumulate before its measured
+/// overhead replaces the planner's modeled constant.
+const MIN_OVERHEAD_SAMPLES: usize = 4;
 
 impl ClassMetrics {
     fn new(name: &str) -> ClassMetrics {
@@ -136,7 +148,32 @@ impl ClassMetrics {
             predicted_s: SampleWindow::default(),
             actual_s: SampleWindow::default(),
             abs_rel_err: SampleWindow::default(),
+            overhead_s: BTreeMap::new(),
         }
+    }
+
+    /// Mean measured per-request overhead of `variant` on this class,
+    /// once enough requests have been served to trust it (`None` until
+    /// then — the planner keeps its modeled constant).
+    pub fn observed_overhead_s(&self, variant: &str) -> Option<f64> {
+        let w = self.overhead_s.get(variant)?;
+        if w.len() < MIN_OVERHEAD_SAMPLES {
+            return None;
+        }
+        Some(w.summary().mean)
+    }
+
+    /// Served requests of `variant` contributing overhead measurements.
+    pub fn overhead_count(&self, variant: &str) -> usize {
+        self.overhead_s.get(variant).map_or(0, |w| w.len())
+    }
+
+    /// Every variant whose measured overhead is trusted, with its mean.
+    pub fn observed_overheads(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
+        self.overhead_s
+            .iter()
+            .filter(|(_, w)| w.len() >= MIN_OVERHEAD_SAMPLES)
+            .map(|(v, w)| (v.as_str(), w.summary().mean))
     }
 
     /// Successfully served requests that carried a plan prediction.
@@ -181,6 +218,10 @@ pub struct PoolMetrics {
     pub batches: usize,
     /// largest batch occupancy observed
     pub max_batch_occupancy: usize,
+    /// fleet-wide load accounting summed over every served request:
+    /// cold vs warm reload counts, store hit/miss counts, and the
+    /// wall seconds each load stage consumed
+    pub loads: LoadProfile,
     /// requests per dispatched batch
     batch_occupancy: SampleWindow,
     /// seconds each executed request waited in the queue
@@ -207,6 +248,7 @@ impl PoolMetrics {
             rejected_deadline: 0,
             batches: 0,
             max_batch_occupancy: 0,
+            loads: LoadProfile::default(),
             batch_occupancy: SampleWindow::default(),
             queue_wait: SampleWindow::default(),
             e2e_latency: SampleWindow::default(),
@@ -246,11 +288,27 @@ impl PoolMetrics {
             }
         }
         match timings {
-            Some(t) => self.stage.record_success(t),
+            Some(t) => {
+                self.stage.record_success(t);
+                self.absorb_loads(&t.loads);
+            }
             None => self.stage.record_failure(),
         }
         self.queue_wait.push(queue_s);
         self.e2e_latency.push(queue_s + wall_s);
+    }
+
+    /// Fold one request's load accounting into the fleet totals.
+    fn absorb_loads(&mut self, l: &LoadProfile) {
+        self.loads.cold_loads += l.cold_loads;
+        self.loads.warm_reloads += l.warm_reloads;
+        self.loads.store_hits += l.store_hits;
+        self.loads.store_misses += l.store_misses;
+        self.loads.read_s += l.read_s;
+        self.loads.parse_s += l.parse_s;
+        self.loads.dequant_s += l.dequant_s;
+        self.loads.compile_s += l.compile_s;
+        self.loads.upload_s += l.upload_s;
     }
 
     /// Record one dispatched micro-batch of `occupancy` requests.
@@ -287,6 +345,20 @@ impl PoolMetrics {
             c.actual_s.push(actual_s);
             let denom = predicted_s.abs().max(1e-12);
             c.abs_rel_err.push((actual_s - predicted_s).abs() / denom);
+        }
+    }
+
+    /// One served request's measured non-denoise overhead (its *share*
+    /// of a batch, not the batch wall) on `class` for `variant`.  Once
+    /// a `(class, variant)` has [`MIN_OVERHEAD_SAMPLES`] of these, the
+    /// router swaps the plan's modeled overhead constant for the
+    /// observed mean — the measured-load feedback loop.
+    pub fn record_class_overhead(&mut self, class: usize, variant: &str, overhead_s: f64) {
+        if let Some(c) = self.classes.get_mut(class) {
+            c.overhead_s
+                .entry(variant.to_string())
+                .or_default()
+                .push(overhead_s.max(0.0));
         }
     }
 
@@ -335,6 +407,23 @@ impl PoolMetrics {
                 self.max_batch_occupancy,
             ));
         }
+        if self.loads.loads() > 0 {
+            out.push_str(&format!(
+                "loads: {} cold, {} warm reloads; store {} hits / {} misses; \
+                 stage wall {:.1} ms (read {:.1}, parse {:.1}, dequant {:.1}, \
+                 compile {:.1}, upload {:.1})\n",
+                self.loads.cold_loads,
+                self.loads.warm_reloads,
+                self.loads.store_hits,
+                self.loads.store_misses,
+                self.loads.total_s() * 1e3,
+                self.loads.read_s * 1e3,
+                self.loads.parse_s * 1e3,
+                self.loads.dequant_s * 1e3,
+                self.loads.compile_s * 1e3,
+                self.loads.upload_s * 1e3,
+            ));
+        }
         let lat = self.latency_summary();
         let wait = self.queue_wait_summary();
         if lat.count > 0 {
@@ -354,9 +443,13 @@ impl PoolMetrics {
             let p = c.predicted_summary();
             let a = c.actual_summary();
             let e = c.error_summary();
+            let observed: String = c
+                .observed_overheads()
+                .map(|(v, o)| format!(", observed overhead[{v}] {:.1} ms", o * 1e3))
+                .collect();
             out.push_str(&format!(
                 "class {:<10} {:>4} served, predicted mean {:>8.1} ms, \
-                 actual mean {:>8.1} ms, |rel err| mean {:>6.1}%\n",
+                 actual mean {:>8.1} ms, |rel err| mean {:>6.1}%{observed}\n",
                 c.name,
                 c.prediction_count(),
                 p.mean * 1e3,
@@ -392,6 +485,7 @@ mod tests {
             decoder_load_s: 0.2,
             decode_s: 0.3,
             total_s: total,
+            ..Default::default()
         }
     }
 
@@ -495,6 +589,68 @@ mod tests {
         assert!(report.contains("class adreno740"), "{report}");
         assert!(report.contains("class bigcore"), "{report}");
         assert!(report.contains("rejected (deadline infeasible)"), "{report}");
+    }
+
+    #[test]
+    fn load_accounting_is_totalled_and_reported() {
+        let mut p = PoolMetrics::new(1);
+        let mut t = timings(1.0);
+        t.loads = LoadProfile {
+            cold_loads: 3,
+            warm_reloads: 0,
+            store_hits: 0,
+            store_misses: 3,
+            read_s: 0.01,
+            parse_s: 0.02,
+            dequant_s: 0.0,
+            compile_s: 0.03,
+            upload_s: 0.04,
+        };
+        p.record_executed(0, 0.0, 1.0, Some(&t));
+        let mut t2 = timings(1.0);
+        t2.loads = LoadProfile {
+            cold_loads: 0,
+            warm_reloads: 2,
+            store_hits: 2,
+            store_misses: 0,
+            upload_s: 0.01,
+            ..Default::default()
+        };
+        p.record_executed(0, 0.0, 1.0, Some(&t2));
+        assert_eq!(p.loads.cold_loads, 3);
+        assert_eq!(p.loads.warm_reloads, 2);
+        assert_eq!(p.loads.store_hits, 2);
+        assert_eq!(p.loads.store_misses, 3);
+        assert!((p.loads.upload_s - 0.05).abs() < 1e-12);
+        let report = p.report(0, 0);
+        assert!(report.contains("3 cold, 2 warm reloads"), "{report}");
+        assert!(report.contains("store 2 hits / 3 misses"), "{report}");
+    }
+
+    #[test]
+    fn observed_overhead_needs_enough_samples_and_is_per_variant() {
+        let mut p = PoolMetrics::with_classes(1, &["adreno740".to_string()]);
+        for _ in 0..(MIN_OVERHEAD_SAMPLES - 1) {
+            p.record_class_overhead(0, "mobile", 0.5);
+        }
+        assert!(
+            p.classes[0].observed_overhead_s("mobile").is_none(),
+            "not yet trusted"
+        );
+        p.record_class_overhead(0, "mobile", 0.5);
+        assert!((p.classes[0].observed_overhead_s("mobile").unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(p.classes[0].overhead_count("mobile"), MIN_OVERHEAD_SAMPLES);
+        // one variant's samples never vouch for another variant
+        assert!(p.classes[0].observed_overhead_s("base").is_none());
+        assert_eq!(p.classes[0].overhead_count("base"), 0);
+        // negative measurements are clamped, out-of-range classes ignored
+        p.record_class_overhead(0, "mobile", -1.0);
+        assert!(p.classes[0].observed_overhead_s("mobile").unwrap() >= 0.0);
+        p.record_class_overhead(9, "mobile", 1.0);
+
+        p.record_prediction(0, 1.0, 1.0);
+        let report = p.report(0, 0);
+        assert!(report.contains("observed overhead[mobile]"), "{report}");
     }
 
     #[test]

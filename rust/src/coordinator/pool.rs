@@ -359,6 +359,19 @@ fn worker_loop<E: WorkerExecutor>(
                     if let Some(p) = predicted_s {
                         m.record_prediction(class_idx, p, busy_share_s);
                     }
+                    // measured-load feedback: the member's share of the
+                    // batch's non-denoise time (its busy share minus
+                    // its own denoise share — `total_s` is the whole
+                    // batch wall and would overcharge B-fold, the same
+                    // trap record_prediction avoids) is the observed
+                    // analog of the plan's overhead term; the router
+                    // swaps the modeled constant for this mean once
+                    // the (class, variant) has served enough requests
+                    m.record_class_overhead(
+                        class_idx,
+                        req.variant.as_deref().unwrap_or("default"),
+                        busy_share_s - r.timings.denoise_s,
+                    );
                     drop(m);
                     Ok(GenerateResponse {
                         id: req.id,

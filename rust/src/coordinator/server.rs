@@ -19,6 +19,13 @@
 //! deadline) and execution overrides (step count, variant, guidance)
 //! that are honored end-to-end: `SubmitOptions` -> `GenerateRequest` ->
 //! `ExecOverrides` -> the denoise loop.
+//!
+//! All workers load through one shared [`ArtifactStore`]: each
+//! `(component, tag)` is read, parsed and dequantized from disk exactly
+//! once per process no matter how many workers the fleet runs.  Once a
+//! class has served enough requests, admission swaps the plan's modeled
+//! overhead constant for the class's *measured* per-request overhead
+//! ([`crate::coordinator::metrics::ClassMetrics::observed_overhead_s`]).
 
 use std::sync::Arc;
 
@@ -28,7 +35,7 @@ use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptio
 use crate::error::{Error, Result};
 use crate::pipeline::{BatchRequest, GenerateResult, PipelinedExecutor};
 use crate::planner::{FleetRouter, FleetSpec, PlanRegistry};
-use crate::runtime::Manifest;
+use crate::runtime::{ArtifactStore, Manifest};
 
 /// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
 /// applying per-request overrides against the configured defaults.
@@ -65,6 +72,8 @@ pub struct Server {
     default_steps: usize,
     /// plan-driven admission routing; `None` for homogeneous pools
     router: Option<FleetRouter>,
+    /// process-wide host-artifact cache shared by every worker
+    store: Arc<ArtifactStore>,
 }
 
 impl Server {
@@ -110,12 +119,21 @@ impl Server {
         // therefore measures the cost model against the *deployed*
         // substrate, which on the stub is expected to be large for
         // the slow classes.
+        // one host-artifact store for the whole fleet: no matter how
+        // many workers spin up (or how often they evict and reload),
+        // each (component, tag) is read from disk once per process
+        let store = Arc::new(ArtifactStore::new());
+        let worker_store = Arc::clone(&store);
         let pool = WorkerPool::start_fleet(
             &classes,
             config.queue_depth,
             config.max_batch,
             move |_wid, _class: usize, _name: &str| {
-                let executor = PipelinedExecutor::new(manifest.clone(), options.clone())?;
+                let executor = PipelinedExecutor::with_store(
+                    manifest.clone(),
+                    options.clone(),
+                    Arc::clone(&worker_store),
+                )?;
                 Ok(PipelineWorker { executor, default_variant: variant.clone() })
             },
         )?;
@@ -125,6 +143,7 @@ impl Server {
             default_variant: config.variant.clone(),
             default_steps: config.num_steps,
             router,
+            store,
         })
     }
 
@@ -161,7 +180,18 @@ impl Server {
                     .clone()
                     .unwrap_or_else(|| self.default_variant.clone());
                 let steps = req.num_steps.unwrap_or(self.default_steps);
-                match router.route(&variant, steps, opts.deadline) {
+                // measured-load feedback: once a (class, variant) has
+                // served enough requests, its observed per-request
+                // overhead replaces the plan's modeled constant here
+                let pool = &self.pool;
+                let observed = |class: usize| {
+                    pool.with_metrics(|m| {
+                        m.classes
+                            .get(class)
+                            .and_then(|c| c.observed_overhead_s(&variant))
+                    })
+                };
+                match router.route_observed(&variant, steps, opts.deadline, &observed) {
                     Ok(route) => self.pool.submit_routed(
                         req,
                         opts.priority,
@@ -213,8 +243,20 @@ impl Server {
         self.router.as_ref()
     }
 
+    /// The fleet-shared host-artifact store (tests, dashboards).
+    pub fn artifact_store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
     pub fn metrics_report(&self) -> Result<String> {
-        Ok(self.pool.metrics_report())
+        let mut out = self.pool.metrics_report();
+        out.push_str(&format!(
+            "artifact store: {} cached, {} disk loads, {} hits\n",
+            self.store.cached(),
+            self.store.disk_loads(),
+            self.store.hits(),
+        ));
+        Ok(out)
     }
 
     /// Read-only access to the pool metrics (dashboards, benches).

@@ -7,11 +7,15 @@
 //! * **L3 (this crate)** — the coordinator: a multi-worker serving
 //!   stack (admission-controlled priority/deadline queue in front of a
 //!   pool of device workers, each owning a pipelined executor and a
-//!   component-residency cache), the `planner` that fuses the analysis
+//!   component-residency cache with a warm executable tier), the
+//!   process-wide `runtime::store` host-artifact cache (each component
+//!   read/parsed/dequantized from disk once per process, shared by
+//!   every fleet worker), the `planner` that fuses the analysis
 //!   stack into scheduling (named device-class registry, cost-gated
 //!   pass planning, per-`(device, variant)` execution plans, and
-//!   plan-driven admission routing for heterogeneous `--fleet` pools),
-//!   the paper's pipelined memory-constrained execution (Sec. 3.3), a
+//!   plan-driven admission routing for heterogeneous `--fleet` pools,
+//!   with measured load overheads fed back into admission), the
+//!   paper's pipelined memory-constrained execution (Sec. 3.3), a
 //!   TFLite GPU-delegate simulator with the paper's Sec. 3.1 support
 //!   rules and an Adreno-740-class cost model, the graph rewrite
 //!   passes (FC->Conv, conv serialization, broadcast-free group norm,

@@ -35,8 +35,18 @@
 //! pure stage orchestration.  Per-request overrides (step count,
 //! variant, guidance) arrive via [`ExecOverrides`] so a serving layer
 //! can honor them end-to-end without rebuilding the executor.
+//!
+//! Component loads are two-tier: the host half (read/parse/dequant)
+//! comes from a process-wide [`ArtifactStore`] shared by every fleet
+//! worker, and eviction keeps the compiled executable in the residency
+//! warm tier — so a post-eviction re-acquire pays only the device
+//! upload.  Every load is accounted per stage in the executor's
+//! [`LoadProfile`], whose per-request deltas ride on
+//! [`StageTimings::loads`] up into the pool metrics and back into the
+//! planner's overhead term.
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
@@ -44,7 +54,9 @@ use crate::pipeline::batch::{form_batches, BatchKey, BatchRequest, StepBuffers};
 use crate::pipeline::loader::Prefetcher;
 use crate::pipeline::residency::{ResidencyManager, Retention};
 use crate::pipeline::trace::MemoryTrace;
-use crate::runtime::{ActInput, Component, Engine, Manifest};
+use crate::runtime::{
+    ActInput, ArtifactStore, Component, Engine, LoadStats, Manifest, WarmExecutable,
+};
 use crate::scheduler::{guide, Ddim};
 use crate::tokenizer;
 use crate::util::rng::Rng;
@@ -67,6 +79,9 @@ pub struct ExecOptions {
     pub unet_weights: String,
     pub num_steps: usize,
     pub guidance_scale: f64,
+    /// compiled executables kept per worker across evictions (the warm
+    /// reload tier); 0 disables warm reuse entirely
+    pub warm_slots: usize,
 }
 
 impl Default for ExecOptions {
@@ -77,6 +92,79 @@ impl Default for ExecOptions {
             unet_weights: "fp32".into(),
             num_steps: 20,
             guidance_scale: 7.5,
+            warm_slots: 8,
+        }
+    }
+}
+
+/// Cumulative per-executor load accounting across every component
+/// (re)load, split by stage — the *observed* counterpart of the
+/// planner's modeled per-request overhead term.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadProfile {
+    /// loads that compiled from scratch
+    pub cold_loads: u64,
+    /// loads that reused a warm-tier executable (upload only)
+    pub warm_reloads: u64,
+    /// host halves served from the artifact store cache
+    pub store_hits: u64,
+    /// host halves this executor paid disk read/parse/dequant for
+    pub store_misses: u64,
+    pub read_s: f64,
+    pub parse_s: f64,
+    pub dequant_s: f64,
+    pub compile_s: f64,
+    pub upload_s: f64,
+}
+
+impl LoadProfile {
+    pub fn record(&mut self, s: &LoadStats) {
+        if s.warm {
+            self.warm_reloads += 1;
+        } else {
+            self.cold_loads += 1;
+        }
+        if s.store_hit {
+            self.store_hits += 1;
+        } else {
+            self.store_misses += 1;
+        }
+        self.read_s += s.read_s;
+        self.parse_s += s.parse_s;
+        self.dequant_s += s.dequant_s;
+        self.compile_s += s.compile_s;
+        self.upload_s += s.upload_s;
+    }
+
+    /// Total component (re)loads.
+    pub fn loads(&self) -> u64 {
+        self.cold_loads + self.warm_reloads
+    }
+
+    /// Wall seconds spent across every load stage.
+    pub fn total_s(&self) -> f64 {
+        self.read_s + self.parse_s + self.dequant_s + self.compile_s + self.upload_s
+    }
+
+    /// Host-stage seconds (read + parse + dequant) — zero on a pure
+    /// store-hit / warm-reload path.
+    pub fn host_s(&self) -> f64 {
+        self.read_s + self.parse_s + self.dequant_s
+    }
+
+    /// What accumulated since an `earlier` snapshot of the same
+    /// profile (per-request deltas for the stage timings).
+    pub fn since(&self, earlier: &LoadProfile) -> LoadProfile {
+        LoadProfile {
+            cold_loads: self.cold_loads - earlier.cold_loads,
+            warm_reloads: self.warm_reloads - earlier.warm_reloads,
+            store_hits: self.store_hits - earlier.store_hits,
+            store_misses: self.store_misses - earlier.store_misses,
+            read_s: self.read_s - earlier.read_s,
+            parse_s: self.parse_s - earlier.parse_s,
+            dequant_s: self.dequant_s - earlier.dequant_s,
+            compile_s: self.compile_s - earlier.compile_s,
+            upload_s: self.upload_s - earlier.upload_s,
         }
     }
 }
@@ -101,6 +189,10 @@ pub struct StageTimings {
     pub decoder_load_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
+    /// stage-level load accounting for this request.  Loads shared by
+    /// a micro-batch are charged to its *first* member so fleet-level
+    /// totals match what actually happened, not occupancy-multiplied.
+    pub loads: LoadProfile,
 }
 
 pub struct GenerateResult {
@@ -116,8 +208,12 @@ pub struct GenerateResult {
 pub struct PipelinedExecutor {
     pub engine: Engine,
     pub manifest: Manifest,
-    pub residency: ResidencyManager<ResidentComponent>,
+    pub residency: ResidencyManager<ResidentComponent, WarmExecutable>,
     pub options: ExecOptions,
+    /// process-wide host-artifact cache, shared across fleet workers
+    store: Arc<ArtifactStore>,
+    /// cumulative stage-level load accounting for this executor
+    profile: LoadProfile,
     /// DDIM built once from the manifest and reused by every request
     /// (guidance is applied host-side per request, not by the sampler).
     ddim: Ddim,
@@ -146,9 +242,30 @@ struct StageOutput {
 }
 
 impl PipelinedExecutor {
+    /// Executor with a private artifact store (single-worker runs,
+    /// offline tools).  Fleet workers share one store instead — see
+    /// [`Self::with_store`].
     pub fn new(manifest: Manifest, options: ExecOptions) -> Result<PipelinedExecutor> {
+        let store = Arc::new(ArtifactStore::new());
+        Self::with_store(manifest, options, store)
+    }
+
+    /// Executor over a shared host-artifact store: N workers built on
+    /// the same store read and parse each `(component, tag)` from disk
+    /// exactly once between them.
+    pub fn with_store(
+        manifest: Manifest,
+        options: ExecOptions,
+        store: Arc<ArtifactStore>,
+    ) -> Result<PipelinedExecutor> {
         let engine = Engine::new()?;
-        let residency = ResidencyManager::new(options.memory_budget);
+        // eviction demotes the compiled executable into the warm tier;
+        // a later re-acquire pays only the device upload
+        let residency = ResidencyManager::with_warm_tier(
+            options.memory_budget,
+            options.warm_slots,
+            |c: &ResidentComponent| c.executable(),
+        );
         let ddim = Ddim::from_alphas(
             manifest.scheduler.params.clone(),
             manifest.scheduler.alphas_cumprod.clone(),
@@ -158,9 +275,21 @@ impl PipelinedExecutor {
             manifest,
             residency,
             options,
+            store,
+            profile: LoadProfile::default(),
             ddim,
             uncond_ctx: None,
         })
+    }
+
+    /// The shared host-artifact store this executor loads through.
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// Cumulative stage-level load accounting since construction.
+    pub fn load_profile(&self) -> &LoadProfile {
+        &self.profile
     }
 
     /// Resident-bytes of a component at a weights tag, from the manifest
@@ -173,13 +302,27 @@ impl PipelinedExecutor {
             .ok_or_else(|| Error::Manifest(format!("{comp}: no weights {tag}")))
     }
 
-    /// Pin `(name, tag)` through the residency layer, loading on miss.
+    /// Pin `(name, tag)` through the residency layer.  A miss loads
+    /// via the shared artifact store (host half cached process-wide)
+    /// and, when the warm tier holds this component's executable from
+    /// a previous eviction, skips the compile — the warm reload path
+    /// pays only the device upload.
     fn acquire_component(&mut self, name: &str, tag: &str) -> Result<ResidentComponent> {
         let bytes = self.stored_bytes(name, tag)?;
-        let PipelinedExecutor { engine, manifest, residency, .. } = self;
+        let PipelinedExecutor { engine, manifest, residency, store, profile, .. } = self;
+        // only a miss consumes the warm remnant; a resident hit must
+        // not silently drop it
+        let warm_exe = if residency.contains(name, tag) {
+            None
+        } else {
+            residency.take_warm(name, tag)
+        };
         residency.acquire(name, tag, bytes, || {
             let comp = manifest.component(name)?;
-            Component::load(engine, manifest, comp, tag).map(Rc::new)
+            let (host, hit) = store.get_or_load(manifest, comp, tag)?;
+            let c = Component::load_from_host(engine, comp, &host, warm_exe, hit)?;
+            profile.record(&c.stats);
+            Ok(Rc::new(c))
         })
     }
 
@@ -314,6 +457,7 @@ impl PipelinedExecutor {
     ) -> Result<Vec<Result<GenerateResult>>> {
         let t_start = Instant::now();
         let mut tm = StageTimings::default();
+        let profile_before = self.profile.clone();
 
         // fail fast with the plan-predicted peak instead of burning
         // encode + denoise work only to hit the ledger at the decoder
@@ -359,11 +503,15 @@ impl PipelinedExecutor {
         tm.total_s = t_start.elapsed().as_secs_f64();
         let image_size = self.manifest.image_size;
         let peak = self.residency.peak();
+        // the group's load work (shared across the batch) is charged to
+        // the first surviving member so fleet totals stay truthful
+        let mut load_delta = Some(self.profile.since(&profile_before));
         Ok(stages
             .into_iter()
             .map(|s| {
                 s.map(|so| {
                     let mut t = tm.clone();
+                    t.loads = load_delta.take().unwrap_or_default();
                     t.denoise_steps = so.steps;
                     if max_steps > 0 {
                         t.denoise_s = tm.denoise_s * so.steps as f64 / max_steps as f64;
@@ -457,14 +605,19 @@ impl PipelinedExecutor {
 
         // ---- batched denoise loop with decoder prefetch overlap --------
         let mut prefetch = if self.options.pipelined {
-            Some(Prefetcher::spawn(&self.manifest, &decoder_manifest, AUX_TAG)?)
+            Some(Prefetcher::spawn(
+                &self.store,
+                &self.manifest,
+                &decoder_manifest,
+                AUX_TAG,
+            )?)
         } else {
             None // baseline: decoder already resident
         };
         let mut prefetch_charged = false;
 
         let t0 = Instant::now();
-        let PipelinedExecutor { engine, residency, ddim, .. } = self;
+        let PipelinedExecutor { engine, residency, ddim, profile, .. } = self;
 
         let mut sb = StepBuffers::for_unet(&unet, members.len())?;
         let max_steps = members.iter().map(|m| m.ts.len()).max().unwrap_or(0);
@@ -528,14 +681,19 @@ impl PipelinedExecutor {
             if !prefetch_charged {
                 residency.reserve("decoder", AUX_TAG, decoder_bytes)?;
             }
-            let loaded = Component::load_from_parts(
+            // warm reload: reuse the decoder executable kept across the
+            // previous eviction, paying only the device upload
+            let warm_exe = residency.take_warm("decoder", AUX_TAG);
+            let loaded = Component::load_from_host(
                 engine,
-                &pf.hlo_text_path,
                 &decoder_manifest,
-                &pf.weights,
+                &pf.host,
+                warm_exe,
+                pf.store_hit,
             );
             match loaded {
                 Ok(c) => {
+                    profile.record(&c.stats);
                     decoder = Some(residency.fulfill("decoder", AUX_TAG, Rc::new(c))?);
                 }
                 Err(e) => {

@@ -1,7 +1,7 @@
 //! Pipelined execution (paper Sec. 3.3): memory ledger + occupancy
-//! trace, child-thread component prefetch, the shared component
-//! residency layer, the cross-request micro-batcher, and the
-//! stage-interleaved executor.
+//! trace, store-backed child-thread component prefetch, the shared
+//! component residency layer (with its warm executable tier), the
+//! cross-request micro-batcher, and the stage-interleaved executor.
 
 pub mod batch;
 pub mod executor;
@@ -12,8 +12,8 @@ pub mod trace;
 
 pub use batch::{form_batches, BatchGroup, BatchKey, BatchRequest, StepBuffers};
 pub use executor::{
-    ExecOptions, ExecOverrides, GenerateResult, PipelinedExecutor, ResidentComponent,
-    StageTimings,
+    ExecOptions, ExecOverrides, GenerateResult, LoadProfile, PipelinedExecutor,
+    ResidentComponent, StageTimings,
 };
 pub use loader::{PrefetchedComponent, Prefetcher};
 pub use memory::MemoryLedger;

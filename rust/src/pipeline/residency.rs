@@ -24,10 +24,16 @@
 //! * **reserve / fulfill** support the prefetch overlap: the ledger is
 //!   charged when the prefetched bytes land in host memory (reserve,
 //!   mid-denoise), the device half is attached later (fulfill).
+//! * a **warm tier** keeps a small host-side remnant of each evicted
+//!   component — for the executor, the compiled executable — so a
+//!   post-eviction re-acquire pays only the device upload, never the
+//!   read/parse/dequant/compile cold path.  Warm entries live outside
+//!   the ledger: it keeps charging only resident device bytes.
 //!
-//! The manager is generic over the resident payload so the policy can
-//! be tested without a PJRT device; the executor instantiates it with
-//! `Rc<runtime::Component>`.
+//! The manager is generic over the resident payload `C` (and the warm
+//! remnant `W`) so the policy can be tested without a PJRT device; the
+//! executor instantiates it with `C = Rc<runtime::Component>`,
+//! `W = runtime::WarmExecutable`.
 
 use crate::error::{Error, Result};
 use crate::pipeline::memory::MemoryLedger;
@@ -61,21 +67,65 @@ impl<C> Entry<C> {
     }
 }
 
-/// Owns the memory ledger and the cache of loaded components.
-pub struct ResidencyManager<C> {
+/// A demoted (evicted) component's host-side remnant.
+struct WarmEntry<W> {
+    name: String,
+    tag: String,
+    /// demotion time (oldest is dropped when the tier is full)
+    stamp: u64,
+    payload: W,
+}
+
+/// Owns the memory ledger, the cache of loaded components, and the
+/// warm tier of evicted components' host-side remnants.
+pub struct ResidencyManager<C, W = ()> {
     ledger: MemoryLedger,
     entries: Vec<Entry<C>>,
     clock: u64,
+    warm: Vec<WarmEntry<W>>,
+    warm_capacity: usize,
+    /// extracts the warm remnant at eviction; `None` disables the tier
+    demote: Option<Box<dyn Fn(&C) -> W>>,
+    /// warm remnants handed back to loaders (warm reloads)
+    warm_takes: u64,
+    /// evictions that stashed a warm remnant
+    warm_demotions: u64,
 }
 
-impl<C: Clone> ResidencyManager<C> {
-    pub fn new(budget: usize) -> ResidencyManager<C> {
-        ResidencyManager { ledger: MemoryLedger::new(budget), entries: Vec::new(), clock: 0 }
+impl<C: Clone, W> ResidencyManager<C, W> {
+    pub fn new(budget: usize) -> ResidencyManager<C, W> {
+        ResidencyManager {
+            ledger: MemoryLedger::new(budget),
+            entries: Vec::new(),
+            clock: 0,
+            warm: Vec::new(),
+            warm_capacity: 0,
+            demote: None,
+            warm_takes: 0,
+            warm_demotions: 0,
+        }
     }
 
     /// Unlimited budget (baseline accounting).
-    pub fn unbounded() -> ResidencyManager<C> {
+    pub fn unbounded() -> ResidencyManager<C, W> {
         Self::new(usize::MAX)
+    }
+
+    /// A manager whose evictions keep up to `warm_capacity` host-side
+    /// remnants (extracted by `demote`) for cheap warm reloads.
+    pub fn with_warm_tier(
+        budget: usize,
+        warm_capacity: usize,
+        demote: impl Fn(&C) -> W + 'static,
+    ) -> ResidencyManager<C, W> {
+        let mut m = Self::new(budget);
+        m.warm_capacity = warm_capacity;
+        m.demote = if warm_capacity > 0 {
+            Some(Box::new(demote))
+        } else {
+            None
+        };
+        m
     }
 
     fn tick(&mut self) -> u64 {
@@ -85,6 +135,67 @@ impl<C: Clone> ResidencyManager<C> {
 
     fn index_of(&self, name: &str, tag: &str) -> Option<usize> {
         self.entries.iter().position(|e| e.name == name && e.tag == tag)
+    }
+
+    /// Stash an evicted entry's warm remnant (replacing any older one
+    /// under the same key; dropping the oldest entry when full).
+    fn stash_warm(&mut self, name: &str, tag: &str, payload: &C) {
+        let warm = match self.demote.as_ref() {
+            Some(d) => d(payload),
+            None => return,
+        };
+        self.warm.retain(|e| !(e.name == name && e.tag == tag));
+        if self.warm.len() >= self.warm_capacity {
+            if let Some(oldest) = self
+                .warm
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+            {
+                self.warm.remove(oldest);
+            }
+        }
+        let stamp = self.tick();
+        self.warm.push(WarmEntry {
+            name: name.to_string(),
+            tag: tag.to_string(),
+            stamp,
+            payload: warm,
+        });
+        self.warm_demotions += 1;
+    }
+
+    /// Take the warm remnant of a previously evicted `(name, tag)`, if
+    /// any — the loader passes it back in so the reload skips the cold
+    /// stages.  The remnant leaves the tier (the re-loaded component
+    /// will be demoted again on its next eviction).
+    pub fn take_warm(&mut self, name: &str, tag: &str) -> Option<W> {
+        let i = self
+            .warm
+            .iter()
+            .position(|e| e.name == name && e.tag == tag)?;
+        self.warm_takes += 1;
+        Some(self.warm.remove(i).payload)
+    }
+
+    pub fn warm_contains(&self, name: &str, tag: &str) -> bool {
+        self.warm.iter().any(|e| e.name == name && e.tag == tag)
+    }
+
+    /// Number of warm (evicted, host-side) remnants currently kept.
+    pub fn warm_len(&self) -> usize {
+        self.warm.len()
+    }
+
+    /// Warm remnants handed to loaders so far (warm reloads).
+    pub fn warm_takes(&self) -> u64 {
+        self.warm_takes
+    }
+
+    /// Evictions that kept a warm remnant.
+    pub fn warm_demotions(&self) -> u64 {
+        self.warm_demotions
     }
 
     /// Evict LRU unpinned entries until `bytes` more would fit the
@@ -98,7 +209,8 @@ impl<C: Clone> ResidencyManager<C> {
         }
     }
 
-    /// Evict the least-recently-used unpinned entry, if any.
+    /// Evict the least-recently-used unpinned entry, if any, demoting
+    /// its payload into the warm tier.
     /// Returns `(name, tag, bytes)` of the evicted component.
     pub fn evict_lru(&mut self) -> Option<(String, String, usize)> {
         let idx = self
@@ -111,6 +223,9 @@ impl<C: Clone> ResidencyManager<C> {
         let e = self.entries.remove(idx);
         // entry exists iff its ledger charge exists; free cannot fail
         let _ = self.ledger.free(&e.label());
+        if let Some(p) = e.payload.as_ref() {
+            self.stash_warm(&e.name, &e.tag, p);
+        }
         Some((e.name, e.tag, e.bytes))
     }
 
@@ -184,6 +299,9 @@ impl<C: Clone> ResidencyManager<C> {
         if retention == Retention::Evict && e.pins == 0 {
             let e = self.entries.remove(i);
             let _ = self.ledger.free(&e.label());
+            if let Some(p) = e.payload.as_ref() {
+                self.stash_warm(&e.name, &e.tag, p);
+            }
         }
         Ok(())
     }
@@ -225,8 +343,11 @@ impl<C: Clone> ResidencyManager<C> {
     }
 
     /// Drop an entry regardless of pin count (error recovery after a
-    /// failed request); returns whether anything was dropped.
+    /// failed request); returns whether anything was dropped.  The
+    /// warm remnant goes with it — after a failure nothing of the
+    /// component is trusted for reuse.
     pub fn purge(&mut self, name: &str, tag: &str) -> bool {
+        self.warm.retain(|e| !(e.name == name && e.tag == tag));
         match self.index_of(name, tag) {
             Some(i) => {
                 let e = self.entries.remove(i);
@@ -437,6 +558,70 @@ mod tests {
         let s = r.trace().render_ascii(20);
         assert!(s.contains("+text_encoder"), "{s}");
         assert!(s.contains("-text_encoder"), "{s}");
+    }
+
+    /// Warm-tier manager over u32 payloads whose warm remnant is the
+    /// payload itself.
+    fn warm_mgr(budget: usize, cap: usize) -> ResidencyManager<u32, u32> {
+        ResidencyManager::with_warm_tier(budget, cap, |c: &u32| *c)
+    }
+
+    #[test]
+    fn eviction_demotes_into_the_warm_tier_outside_the_ledger() {
+        let mut r = warm_mgr(100, 4);
+        r.acquire("text_encoder", "fp32", 60, ok(7)).unwrap();
+        r.release("text_encoder", "fp32", Retention::Evict).unwrap();
+        assert!(!r.contains("text_encoder", "fp32"));
+        assert!(r.warm_contains("text_encoder", "fp32"));
+        assert_eq!(r.used(), 0, "warm remnants are never ledger-charged");
+        assert_eq!(r.warm_demotions(), 1);
+        // a warm reload takes the remnant back out
+        assert_eq!(r.take_warm("text_encoder", "fp32"), Some(7));
+        assert_eq!(r.warm_takes(), 1);
+        assert!(!r.warm_contains("text_encoder", "fp32"));
+        assert_eq!(r.take_warm("text_encoder", "fp32"), None);
+    }
+
+    #[test]
+    fn lru_pressure_eviction_also_demotes() {
+        let mut r = warm_mgr(100, 4);
+        r.acquire("a", "fp32", 60, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Cache).unwrap();
+        r.acquire("b", "fp32", 60, ok(2)).unwrap();
+        assert!(!r.contains("a", "fp32"), "a evicted for b");
+        assert_eq!(r.take_warm("a", "fp32"), Some(1));
+    }
+
+    #[test]
+    fn warm_tier_capacity_drops_the_oldest_remnant() {
+        let mut r = warm_mgr(1000, 2);
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            r.acquire(name, "fp32", 10, ok(i as u32)).unwrap();
+            r.release(name, "fp32", Retention::Evict).unwrap();
+        }
+        assert_eq!(r.warm_len(), 2);
+        assert!(!r.warm_contains("a", "fp32"), "oldest remnant dropped");
+        assert!(r.warm_contains("b", "fp32"));
+        assert!(r.warm_contains("c", "fp32"));
+    }
+
+    #[test]
+    fn purge_invalidates_the_warm_remnant_too() {
+        let mut r = warm_mgr(100, 4);
+        r.acquire("a", "fp32", 10, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Evict).unwrap();
+        assert!(r.warm_contains("a", "fp32"));
+        r.purge("a", "fp32");
+        assert!(!r.warm_contains("a", "fp32"));
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_tier() {
+        let mut r = warm_mgr(100, 0);
+        r.acquire("a", "fp32", 10, ok(1)).unwrap();
+        r.release("a", "fp32", Retention::Evict).unwrap();
+        assert_eq!(r.warm_len(), 0);
+        assert_eq!(r.take_warm("a", "fp32"), None);
     }
 
     #[test]

@@ -139,12 +139,29 @@ impl FleetRouter {
         num_steps: usize,
         deadline: Option<Duration>,
     ) -> Result<Route> {
+        self.route_observed(variant, num_steps, deadline, &|_| None)
+    }
+
+    /// Routing with measured-overhead feedback: `observed_overhead(i)`
+    /// supplies device class `i`'s mean measured per-request overhead
+    /// (loads + encode + decode), which replaces the plan's modeled
+    /// constant in the service-time prediction once available — so
+    /// admission decisions track what the fleet actually pays on its
+    /// load path (e.g. cheap warm reloads after the first requests)
+    /// rather than the cost model's bootstrap estimate.
+    pub fn route_observed(
+        &self,
+        variant: &str,
+        num_steps: usize,
+        deadline: Option<Duration>,
+        observed_overhead: &dyn Fn(usize) -> Option<f64>,
+    ) -> Result<Route> {
         let horizon = deadline.unwrap_or(FALLBACK_DEADLINE).as_secs_f64();
         let mut cheapest: Option<Route> = None;
         let mut fastest = Route { class: 0, predicted_s: f64::INFINITY };
         for (i, class) in self.fleet.classes.iter().enumerate() {
             let plan = self.plans.plan(&class.device, variant)?;
-            let predicted_s = plan.predict_service_s(num_steps);
+            let predicted_s = plan.predict_service_with(num_steps, observed_overhead(i));
             if predicted_s < fastest.predicted_s {
                 fastest = Route { class: i, predicted_s };
             }
@@ -231,6 +248,40 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("infeasible"), "{err}");
         assert!(err.to_string().contains("adreno740"), "{err}");
+    }
+
+    #[test]
+    fn observed_overhead_feedback_changes_the_routing_decision() {
+        let r = two_class_router();
+        let fast = r.predicted_s(0, "mobile", 20).unwrap();
+        let slow = r.predicted_s(1, "mobile", 20).unwrap();
+        let slow_plan = r
+            .plans()
+            .plan(&r.fleet().classes[1].device, "mobile")
+            .unwrap();
+        // deadline strictly between the slow class's step-only time
+        // and its full modeled prediction
+        let d = (slow - slow_plan.overhead_s) + slow_plan.overhead_s / 2.0;
+        assert!(fast < d, "precondition: the fast class always fits ({fast} vs {d})");
+        assert!(
+            slow - slow_plan.overhead_s > fast,
+            "precondition: even overhead-free, the slow class stays the cheaper pick"
+        );
+        let deadline = Duration::from_secs_f64(d);
+
+        // bootstrap model: the slow class misses the deadline by half
+        // its modeled overhead, so the fast class takes the request
+        assert_eq!(r.route("mobile", 20, Some(deadline)).unwrap().class, 0);
+
+        // measured feedback: the slow class's observed overhead is ~0
+        // (store hits + warm reloads), making it feasible — and being
+        // the cheaper class, it now wins the same request
+        let observed = |class: usize| if class == 1 { Some(0.0) } else { None };
+        let route = r
+            .route_observed("mobile", 20, Some(deadline), &observed)
+            .unwrap();
+        assert_eq!(route.class, 1, "measured overhead re-routed the request");
+        assert!(route.predicted_s <= d);
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! * [`fleet`] — heterogeneous fleet description ([`FleetSpec`]) and
 //!   plan-driven admission routing ([`FleetRouter`]): infeasible
 //!   deadlines are rejected at admission, every other request goes to
-//!   the cheapest worker class that meets its deadline.
+//!   the cheapest worker class that meets its deadline.  Routing takes
+//!   measured per-class request overheads (loads + encode + decode)
+//!   over the modeled constant once the fleet has served enough
+//!   requests ([`FleetRouter::route_observed`]).
 
 pub mod fleet;
 pub mod model;

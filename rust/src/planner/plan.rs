@@ -156,7 +156,17 @@ impl ExecutionPlan {
 
     /// Plan-predicted service time of one request at `num_steps`.
     pub fn predict_service_s(&self, num_steps: usize) -> f64 {
-        self.overhead_s + num_steps as f64 * self.step_latency_s
+        self.predict_service_with(num_steps, None)
+    }
+
+    /// Service-time prediction with the fixed overhead term optionally
+    /// replaced by a *measured* per-request overhead (the fleet's
+    /// observed load + encode + decode time on this device class).
+    /// The modeled constant is only the bootstrap; once workers have
+    /// served enough requests the router feeds their numbers back in.
+    pub fn predict_service_with(&self, num_steps: usize, observed_overhead_s: Option<f64>) -> f64 {
+        observed_overhead_s.unwrap_or(self.overhead_s)
+            + num_steps as f64 * self.step_latency_s
     }
 }
 

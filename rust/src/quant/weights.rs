@@ -8,6 +8,7 @@
 //! in compute.  Structurally pruned output channels are not stored and
 //! re-inflate to zeros.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -52,9 +53,14 @@ impl WeightTensor {
 
     /// Dequantize / inflate to a dense f32 buffer in logical shape
     /// (the cast-up the paper performs before computation).
-    pub fn to_f32(&self) -> Vec<f32> {
+    ///
+    /// fp32 payloads are returned as a *borrowed* view — the serving
+    /// hot path uploads straight from the parsed container without
+    /// doubling peak host memory.  Only int8 payloads allocate (the
+    /// dequantized copy the caller cannot alias).
+    pub fn to_f32(&self) -> Cow<'_, [f32]> {
         match &self.payload {
-            Payload::F32(v) => v.clone(),
+            Payload::F32(v) => Cow::Borrowed(v.as_slice()),
             Payload::I8 { data, scale, keep } => {
                 let cout = keep.len();
                 let rows = self.logical_elems() / cout;
@@ -66,7 +72,7 @@ impl WeightTensor {
                             data[r * kept.len() + j] as f32 * scale[c];
                     }
                 }
-                out
+                Cow::Owned(out)
             }
         }
     }
@@ -180,7 +186,7 @@ impl WeightFile {
             .map(|p| {
                 self.tensors
                     .get(p)
-                    .map(|t| t.to_f32())
+                    .map(|t| t.to_f32().into_owned())
                     .ok_or_else(|| Error::Weights(format!("missing tensor {p}")))
             })
             .collect()
@@ -246,6 +252,16 @@ mod tests {
         assert_eq!(dense, vec![5.0, -20.0, 0.0, 7.5, 20.0, 50.0, 0.0, -15.0]);
         // stored: 6 int8 + 4 scales*4 + 4 mask = 26 bytes << 32 f32 bytes
         assert_eq!(t.stored_bytes(), 26);
+    }
+
+    #[test]
+    fn fp32_view_borrows_int8_view_allocates() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        assert!(
+            matches!(wf.tensors["a/w"].to_f32(), Cow::Borrowed(_)),
+            "fp32 uploads must not copy the payload"
+        );
+        assert!(matches!(wf.tensors["b/w"].to_f32(), Cow::Owned(_)));
     }
 
     #[test]

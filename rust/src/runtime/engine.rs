@@ -5,13 +5,20 @@
 //! are compiled once at load; weights are stored compressed (int8) and
 //! cast up once at load time (W8A16); per-request work is activation
 //! upload + execute only.  Python never appears here.
+//!
+//! The load path is two-tier (see [`crate::runtime::store`]): the host
+//! half (read/parse/dequant) comes from the shared [`HostArtifact`]
+//! store, the device half (compile + upload) happens here.  A **warm**
+//! load additionally reuses a previously compiled executable (kept by
+//! the residency layer across evictions), paying only the upload.
 
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::quant::WeightFile;
 use crate::runtime::artifact::{ComponentManifest, Manifest};
+use crate::runtime::store::{HostArtifact, HostLoadStats};
 
 fn xerr(e: xla::Error) -> Error {
     Error::Xla(e.to_string())
@@ -47,19 +54,46 @@ impl Engine {
     }
 }
 
-/// Timing of a component load (feeds the Fig. 4 pipeline trace).
+/// Stage-level cost of one component load.  The host stages are zero
+/// when the artifact store already held the component (a store hit);
+/// `compile_s` is zero on a warm reload (executable reused).
 #[derive(Debug, Clone, Default)]
 pub struct LoadStats {
+    /// disk read of the weight container (host half)
+    pub read_s: f64,
+    /// MDWB parse (host half)
+    pub parse_s: f64,
+    /// int8 -> f32 dequantization (host half)
+    pub dequant_s: f64,
+    /// HLO compile (device half; zero when `warm`)
     pub compile_s: f64,
-    pub weights_s: f64,
+    /// weight-buffer upload to the device (device half; always paid)
+    pub upload_s: f64,
     pub weight_bytes_stored: usize,
     pub weight_bytes_resident: usize,
+    /// the host half came from the process-wide artifact store cache
+    pub store_hit: bool,
+    /// the executable came from the warm tier (no compile this load)
+    pub warm: bool,
 }
+
+impl LoadStats {
+    /// Wall seconds this load spent across every stage.
+    pub fn total_s(&self) -> f64 {
+        self.read_s + self.parse_s + self.dequant_s + self.compile_s + self.upload_s
+    }
+}
+
+/// A compiled executable handle shareable across reloads *within one
+/// worker thread* (PJRT executables are not `Send`).  The residency
+/// layer keeps these in its warm tier after eviction so a re-acquire
+/// skips the compile.
+pub type WarmExecutable = Rc<xla::PjRtLoadedExecutable>;
 
 /// A loaded, executable model component with resident weight buffers.
 pub struct Component {
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    exe: WarmExecutable,
     weight_bufs: Vec<xla::PjRtBuffer>,
     pub act_shapes: Vec<Vec<usize>>,
     pub act_dtypes: Vec<String>,
@@ -67,37 +101,49 @@ pub struct Component {
 }
 
 impl Component {
-    /// Load a component: compile its HLO, read the weight container at
-    /// the requested precision tag, upload the (dequantized) parameters
-    /// as device buffers in manifest order.
+    /// One-shot cold load without a shared store (offline tools, tests
+    /// over real artifacts): read + parse + compile + upload.
     pub fn load(
         engine: &Engine,
         manifest: &Manifest,
         comp: &ComponentManifest,
         weights_tag: &str,
     ) -> Result<Component> {
-        let wf = WeightFile::load(&manifest.weight_path(comp, weights_tag)?)?;
-        Self::load_from_parts(engine, &manifest.hlo_path(comp), comp, &wf)
+        let host = HostArtifact::load(
+            &comp.name,
+            weights_tag,
+            manifest.hlo_path(comp),
+            &manifest.weight_path(comp, weights_tag)?,
+        )?;
+        Self::load_from_host(engine, comp, &host, None, false)
     }
 
-    /// Device half of a load given an already-parsed weight container
-    /// (the child-thread prefetch path of paper Sec. 3.3).
-    pub fn load_from_parts(
+    /// Device half of a load over a (possibly store-cached) host
+    /// artifact: compile the HLO — or reuse `warm_exe` from the
+    /// residency warm tier — and upload the dense weights in manifest
+    /// order.  `store_hit` says whether *this* load paid the host
+    /// stages; it only affects the reported [`LoadStats`].
+    pub fn load_from_host(
         engine: &Engine,
-        hlo_path: &Path,
         comp: &ComponentManifest,
-        wf: &WeightFile,
+        host: &HostArtifact,
+        warm_exe: Option<WarmExecutable>,
+        store_hit: bool,
     ) -> Result<Component> {
+        let warm = warm_exe.is_some();
         let t0 = Instant::now();
-        let exe = engine.compile_hlo(hlo_path)?;
-        let compile_s = t0.elapsed().as_secs_f64();
+        let exe = match warm_exe {
+            Some(e) => e,
+            None => Rc::new(engine.compile_hlo(&host.hlo_path)?),
+        };
+        let compile_s = if warm { 0.0 } else { t0.elapsed().as_secs_f64() };
 
         let t1 = Instant::now();
-        let stored = wf.stored_bytes();
+        let stored = host.stored_bytes();
         let mut weight_bufs = Vec::with_capacity(comp.params.len());
         let mut resident = 0usize;
         for p in &comp.params {
-            let t = wf.tensors.get(&p.path).ok_or_else(|| {
+            let t = host.tensor(&p.path).ok_or_else(|| {
                 Error::Weights(format!("weight file missing {}", p.path))
             })?;
             if t.shape != p.spec.shape {
@@ -106,10 +152,12 @@ impl Component {
                     p.path, t.shape, p.spec.shape
                 )));
             }
+            let dense = host.dense_f32(&p.path).ok_or_else(|| {
+                Error::Weights(format!("no dense view for {}", p.path))
+            })?;
             let buf = match (&t.payload, p.spec.dtype.as_str()) {
                 // int8 params consumed natively (block_w8 artifacts)
                 (crate::quant::Payload::I8 { .. }, "int8") => {
-                    let dense = t.to_f32();
                     let data: Vec<i8> = dense.iter().map(|&v| v as i8).collect();
                     resident += data.len();
                     engine
@@ -129,18 +177,24 @@ impl Component {
                 }
                 _ => {
                     // W8A16 cast-up (or plain f32): dense f32 upload
-                    let dense = t.to_f32();
+                    // straight from the borrowed store view — no copy
                     resident += dense.len() * 4;
                     engine
                         .client
-                        .buffer_from_host_buffer::<f32>(&dense, &p.spec.shape, None)
+                        .buffer_from_host_buffer::<f32>(dense, &p.spec.shape, None)
                         .map_err(xerr)?
                 }
             };
             weight_bufs.push(buf);
         }
-        let weights_s = t1.elapsed().as_secs_f64();
+        let upload_s = t1.elapsed().as_secs_f64();
 
+        // host stages are charged to the load that actually ran them
+        let host_stats = if store_hit {
+            HostLoadStats::default()
+        } else {
+            host.stats.clone()
+        };
         Ok(Component {
             name: comp.name.clone(),
             exe,
@@ -148,12 +202,23 @@ impl Component {
             act_shapes: comp.activations.iter().map(|a| a.shape.clone()).collect(),
             act_dtypes: comp.activations.iter().map(|a| a.dtype.clone()).collect(),
             stats: LoadStats {
+                read_s: host_stats.read_s,
+                parse_s: host_stats.parse_s,
+                dequant_s: host_stats.dequant_s,
                 compile_s,
-                weights_s,
+                upload_s,
                 weight_bytes_stored: stored,
                 weight_bytes_resident: resident,
+                store_hit,
+                warm,
             },
         })
+    }
+
+    /// This component's compiled executable — the warm-tier payload the
+    /// residency layer keeps across evictions.
+    pub fn executable(&self) -> WarmExecutable {
+        Rc::clone(&self.exe)
     }
 
     /// Upload one activation (by manifest position) as a device buffer

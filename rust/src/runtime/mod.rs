@@ -1,9 +1,15 @@
-//! Runtime layer: manifest parsing + PJRT execution of the AOT HLO
-//! artifacts (see /opt/xla-example/load_hlo for the interchange rules —
-//! HLO *text*, not serialized protos).
+//! Runtime layer: manifest parsing, the process-wide host-artifact
+//! store ([`store`]: parsed weight containers + dequantized rows,
+//! loaded from disk once per process), and PJRT execution of the AOT
+//! HLO artifacts (see /opt/xla-example/load_hlo for the interchange
+//! rules — HLO *text*, not serialized protos).
 
 pub mod artifact;
 pub mod engine;
+pub mod store;
 
 pub use artifact::{ComponentManifest, Manifest, ParamSpec, TensorSpec};
-pub use engine::{write_buffer_f32, ActInput, Component, Engine, LoadStats};
+pub use engine::{
+    write_buffer_f32, ActInput, Component, Engine, LoadStats, WarmExecutable,
+};
+pub use store::{ArtifactStore, HostArtifact, HostLoadStats};

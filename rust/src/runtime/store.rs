@@ -1,0 +1,358 @@
+//! Process-wide host-artifact store: the cacheable half of a component
+//! load, shared by every fleet worker and every reload cycle.
+//!
+//! A component load splits into two halves with very different costs
+//! and lifetimes:
+//!
+//! * the **host half** — disk read of the MDWB weight container, parse,
+//!   int8 dequantization — is immutable, `Send + Sync`, and identical
+//!   for every worker.  It lives here as an [`Arc<HostArtifact>`],
+//!   loaded from disk **exactly once per process** no matter how many
+//!   workers race for it or how many eviction/reload cycles a worker
+//!   goes through;
+//! * the **device half** — HLO compile + weight-buffer upload — is
+//!   per-worker (PJRT handles are not `Send`) and stays in
+//!   [`crate::runtime::engine::Component`].
+//!
+//! Concurrency: a per-key slot mutex serializes loaders of the *same*
+//! `(component, tag)` — the second worker blocks until the first
+//! finishes and then takes the cached artifact (a hit, no disk) —
+//! while loads of different keys proceed in parallel.  The outer map
+//! lock is held only long enough to find or create a slot.
+//!
+//! One store serves one artifact directory (keys are `(component,
+//! tag)`); the server creates a single store and threads it into every
+//! pool worker's executor factory.
+//!
+//! Host memory: cached artifacts live **outside** the device memory
+//! ledger by design — the ledger keeps bounding resident device bytes
+//! while the store trades host RAM for never paying a cold load twice
+//! (int8 entries additionally pin their one-time dequantized f32 rows,
+//! ~4 bytes/elem beyond the at-rest size).  The cache is unbounded and
+//! process-lifetime; [`ArtifactStore::invalidate`] is the pressure
+//! valve for hosts that must shed a tag (e.g. after an on-disk
+//! artifact refresh or to drop a precision no longer served).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::quant::{Payload, WeightFile, WeightTensor};
+use crate::runtime::artifact::{ComponentManifest, Manifest};
+
+/// Wall-clock cost of the host half of one cold load, per stage.
+#[derive(Debug, Clone, Default)]
+pub struct HostLoadStats {
+    /// disk read of the weight container
+    pub read_s: f64,
+    /// MDWB parse
+    pub parse_s: f64,
+    /// int8 -> dense f32 dequantization (zero for pure-fp32 containers)
+    pub dequant_s: f64,
+    /// container bytes read from disk
+    pub bytes_read: usize,
+}
+
+impl HostLoadStats {
+    pub fn total_s(&self) -> f64 {
+        self.read_s + self.parse_s + self.dequant_s
+    }
+}
+
+/// The immutable host half of a loaded component: parsed weight
+/// container, pre-dequantized f32 rows for int8 tensors, and the HLO
+/// text path the device half compiles from.
+#[derive(Debug)]
+pub struct HostArtifact {
+    pub component: String,
+    pub tag: String,
+    pub hlo_path: PathBuf,
+    pub weights: WeightFile,
+    /// dense f32 rows for int8 tensors, dequantized exactly once per
+    /// process (fp32 tensors are served as borrowed views instead)
+    dequant: BTreeMap<String, Vec<f32>>,
+    pub stats: HostLoadStats,
+}
+
+impl HostArtifact {
+    /// Cold-load the host half: read, parse, dequantize — each stage
+    /// timed separately so the observed overhead can feed the planner.
+    pub fn load(
+        component: &str,
+        tag: &str,
+        hlo_path: PathBuf,
+        weight_path: &Path,
+    ) -> Result<HostArtifact> {
+        let t0 = Instant::now();
+        let raw = std::fs::read(weight_path)
+            .map_err(|e| Error::Weights(format!("{}: {}", weight_path.display(), e)))?;
+        let read_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let weights = WeightFile::parse(&raw)?;
+        let parse_s = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let mut dequant = BTreeMap::new();
+        for (path, t) in &weights.tensors {
+            if matches!(t.payload, Payload::I8 { .. }) {
+                dequant.insert(path.clone(), t.to_f32().into_owned());
+            }
+        }
+        let dequant_s = t2.elapsed().as_secs_f64();
+
+        Ok(HostArtifact {
+            component: component.to_string(),
+            tag: tag.to_string(),
+            hlo_path,
+            weights,
+            dequant,
+            stats: HostLoadStats { read_s, parse_s, dequant_s, bytes_read: raw.len() },
+        })
+    }
+
+    pub fn tensor(&self, path: &str) -> Option<&WeightTensor> {
+        self.weights.tensors.get(path)
+    }
+
+    /// Borrowed dense f32 view of a tensor: fp32 payloads alias the
+    /// parsed container, int8 payloads alias the store's one-time
+    /// dequant cache.  Neither allocates.
+    pub fn dense_f32(&self, path: &str) -> Option<&[f32]> {
+        let t = self.weights.tensors.get(path)?;
+        match &t.payload {
+            Payload::F32(v) => Some(v.as_slice()),
+            Payload::I8 { .. } => self.dequant.get(path).map(|v| v.as_slice()),
+        }
+    }
+
+    /// At-rest byte count (the memory-ledger number).
+    pub fn stored_bytes(&self) -> usize {
+        self.weights.stored_bytes()
+    }
+}
+
+type Slot = Arc<Mutex<Option<Arc<HostArtifact>>>>;
+
+/// Thread-safe cache of [`HostArtifact`]s keyed by `(component, tag)`.
+#[derive(Debug, Default)]
+pub struct ArtifactStore {
+    slots: Mutex<BTreeMap<(String, String), Slot>>,
+    disk_loads: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl ArtifactStore {
+    pub fn new() -> ArtifactStore {
+        ArtifactStore::default()
+    }
+
+    /// The cached artifact for `(comp, tag)`, loading it from disk on
+    /// first use.  Returns `(artifact, hit)` — `hit` is false exactly
+    /// when *this* call paid the disk read/parse/dequant.
+    pub fn get_or_load(
+        &self,
+        manifest: &Manifest,
+        comp: &ComponentManifest,
+        tag: &str,
+    ) -> Result<(Arc<HostArtifact>, bool)> {
+        self.get_or_load_paths(
+            &comp.name,
+            tag,
+            manifest.hlo_path(comp),
+            manifest.weight_path(comp, tag)?,
+        )
+    }
+
+    /// Path-level entry point for callers that cannot hold a manifest
+    /// reference (the prefetch child thread ships owned paths instead).
+    pub fn get_or_load_paths(
+        &self,
+        component: &str,
+        tag: &str,
+        hlo_path: PathBuf,
+        weight_path: PathBuf,
+    ) -> Result<(Arc<HostArtifact>, bool)> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            Arc::clone(
+                slots
+                    .entry((component.to_string(), tag.to_string()))
+                    .or_default(),
+            )
+        };
+        // per-key lock: racing loaders of the same key serialize here
+        // and all but the first observe a hit
+        let mut guard = slot.lock().unwrap();
+        if let Some(a) = guard.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(a), true));
+        }
+        let loaded = Arc::new(HostArtifact::load(component, tag, hlo_path, &weight_path)?);
+        self.disk_loads.fetch_add(1, Ordering::Relaxed);
+        *guard = Some(Arc::clone(&loaded));
+        Ok((loaded, false))
+    }
+
+    /// Cache lookups served without touching disk.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cold loads that read and parsed the container from disk.
+    pub fn disk_loads(&self) -> u64 {
+        self.disk_loads.load(Ordering::Relaxed)
+    }
+
+    /// Number of artifacts currently cached.  Non-blocking: a key
+    /// whose cold load is still in flight (slot locked) counts as not
+    /// cached, and the map lock is released before any slot is probed
+    /// so a metrics poll never stalls other keys' loads.
+    pub fn cached(&self) -> usize {
+        let slots: Vec<Slot> = self.slots.lock().unwrap().values().cloned().collect();
+        slots
+            .iter()
+            .filter(|s| s.try_lock().map(|g| g.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    /// Drop a cached artifact (e.g. after an on-disk artifact refresh);
+    /// returns whether anything was cached under the key.
+    pub fn invalidate(&self, component: &str, tag: &str) -> bool {
+        let slot = self
+            .slots
+            .lock()
+            .unwrap()
+            .get(&(component.to_string(), tag.to_string()))
+            .cloned();
+        match slot {
+            Some(s) => s.lock().unwrap().take().is_some(),
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Minimal MDWB bytes: one fp32 tensor "w" of `n` elements.
+    fn mdwb_f32(n: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"MDWB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(1u16).to_le_bytes());
+        out.extend_from_slice(b"w");
+        out.push(0);
+        out.push(1);
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for i in 0..n {
+            out.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        out
+    }
+
+    fn write_container(label: &str, n: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("md_store_test_{label}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        std::fs::write(&p, mdwb_f32(n)).unwrap();
+        p
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_not_a_disk_load() {
+        let wp = write_container("hit", 8);
+        let store = ArtifactStore::new();
+        let (a, hit) = store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp.clone())
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(a.dense_f32("w").unwrap().len(), 8);
+        let (b, hit) = store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp)
+            .unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b), "same parsed container");
+        assert_eq!(store.disk_loads(), 1);
+        assert_eq!(store.hits(), 1);
+        assert_eq!(store.cached(), 1);
+    }
+
+    #[test]
+    fn different_tags_cache_separately() {
+        let wp = write_container("tags", 4);
+        let store = ArtifactStore::new();
+        store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp.clone())
+            .unwrap();
+        store
+            .get_or_load_paths("c", "int8", PathBuf::from("c.hlo"), wp)
+            .unwrap();
+        assert_eq!(store.disk_loads(), 2);
+        assert_eq!(store.cached(), 2);
+    }
+
+    #[test]
+    fn failed_loads_are_not_cached() {
+        let store = ArtifactStore::new();
+        let missing = PathBuf::from("/nonexistent/md_store/w.bin");
+        assert!(store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), missing)
+            .is_err());
+        assert_eq!(store.disk_loads(), 0);
+        assert_eq!(store.cached(), 0);
+        // a later load of the (now present) file succeeds fresh
+        let wp = write_container("retry", 2);
+        assert!(store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp)
+            .is_ok());
+        assert_eq!(store.disk_loads(), 1);
+    }
+
+    #[test]
+    fn racing_threads_trigger_exactly_one_disk_load() {
+        let wp = write_container("race", 64);
+        let store = Arc::new(ArtifactStore::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let store = Arc::clone(&store);
+                let wp = wp.clone();
+                thread::spawn(move || {
+                    store
+                        .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp)
+                        .unwrap()
+                        .0
+                        .stored_bytes()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 64 * 4);
+        }
+        assert_eq!(store.disk_loads(), 1, "one cold load for the whole race");
+        assert_eq!(store.hits(), 7);
+    }
+
+    #[test]
+    fn invalidate_forces_a_reload() {
+        let wp = write_container("inval", 4);
+        let store = ArtifactStore::new();
+        store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp.clone())
+            .unwrap();
+        assert!(store.invalidate("c", "fp32"));
+        assert!(!store.invalidate("c", "fp32"), "already empty");
+        assert!(!store.invalidate("ghost", "fp32"));
+        let (_, hit) = store
+            .get_or_load_paths("c", "fp32", PathBuf::from("c.hlo"), wp)
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(store.disk_loads(), 2);
+    }
+}

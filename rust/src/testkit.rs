@@ -42,6 +42,10 @@ pub struct FakeArtifactSpec {
     pub encoder_weight_elems: usize,
     pub decoder_weight_elems: usize,
     pub num_train_timesteps: usize,
+    /// also write an "int8" weight set for the UNets (per-channel
+    /// quantized MDWB), giving the load path a real dequant stage —
+    /// the cold-vs-warm benchmark runs on these
+    pub int8_unet: bool,
 }
 
 impl Default for FakeArtifactSpec {
@@ -57,6 +61,7 @@ impl Default for FakeArtifactSpec {
             encoder_weight_elems: 2_048,
             decoder_weight_elems: 2_048,
             num_train_timesteps: 1000,
+            int8_unet: false,
         }
     }
 }
@@ -146,14 +151,32 @@ pub fn write_fake_artifacts(dir: &Path, spec: &FakeArtifactSpec) -> Result<()> {
         let values: Vec<f32> = (0..comp.weight_elems)
             .map(|_| rng.next_f32() - 0.5)
             .collect();
+        // the int8 variant quantizes per output channel, so its UNet
+        // tensors carry a 2-D (rows, cout) shape — both weight sets
+        // must declare it, the manifest param shape being shared
+        let int8_here =
+            spec.int8_unet && comp.name.starts_with("unet") && comp.weight_elems % 256 == 0;
+        let shape: Vec<usize> = if int8_here {
+            vec![comp.weight_elems / 256, 256]
+        } else {
+            vec![comp.weight_elems]
+        };
         let weight_file = format!("weights_{}_fp32.bin", comp.name);
         let path = "blocks/w";
-        let bytes = write_mdwb_f32(
-            &dir.join(&weight_file),
-            path,
-            &[comp.weight_elems],
-            &values,
-        )?;
+        let bytes = write_mdwb_f32(&dir.join(&weight_file), path, &shape, &values)?;
+        let mut weights_json = format!(
+            "{{\"fp32\": {{\"file\": \"{weight_file}\", \"bytes\": {bytes}}}"
+        );
+        if int8_here {
+            let (q, scale) = crate::quant::quantize_per_channel(&values, 256);
+            let int8_file = format!("weights_{}_int8.bin", comp.name);
+            let int8_bytes =
+                write_mdwb_i8(&dir.join(&int8_file), path, &shape, &q, &scale)?;
+            weights_json.push_str(&format!(
+                ", \"int8\": {{\"file\": \"{int8_file}\", \"bytes\": {int8_bytes}}}"
+            ));
+        }
+        weights_json.push('}');
 
         let acts: Vec<String> = comp
             .activations
@@ -184,19 +207,18 @@ pub fn write_fake_artifacts(dir: &Path, spec: &FakeArtifactSpec) -> Result<()> {
                 "  \"activations\": [{acts}],\n",
                 "  \"outputs\": [{outs}],\n",
                 "  \"param_bytes_f32\": {pb},\n",
-                "  \"weights\": {{\"fp32\": {{\"file\": \"{wf}\", \"bytes\": {bytes}}}}}\n",
+                "  \"weights\": {weights}\n",
                 "}}"
             ),
             name = comp.name,
             hlo = hlo_file,
             variant = comp.variant,
             path = path,
-            shape = fmt_usize_arr(&[comp.weight_elems]),
+            shape = fmt_usize_arr(&shape),
             acts = acts.join(", "),
             outs = outs.join(", "),
             pb = comp.weight_elems * 4,
-            wf = weight_file,
-            bytes = bytes,
+            weights = weights_json,
         ));
     }
 
@@ -287,6 +309,37 @@ fn write_mdwb_f32(
     }
     std::fs::write(file, &out).map_err(|e| Error::Io(format!("{}: {e}", file.display())))?;
     Ok(values.len() * 4)
+}
+
+/// Minimal MDWB writer for one per-channel int8 tensor (keep mask all
+/// ones — quantized but unpruned), mirroring weightsbin.py's layout;
+/// returns the at-rest byte count for the manifest's `bytes` field.
+fn write_mdwb_i8(
+    file: &Path,
+    tensor_path: &str,
+    shape: &[usize],
+    q: &[i8],
+    scale: &[f32],
+) -> Result<usize> {
+    let cout = scale.len();
+    let mut out: Vec<u8> = Vec::with_capacity(32 + q.len() + cout * 5);
+    out.extend_from_slice(b"MDWB");
+    out.extend_from_slice(&1u32.to_le_bytes()); // version
+    out.extend_from_slice(&1u32.to_le_bytes()); // tensor count
+    out.extend_from_slice(&(tensor_path.len() as u16).to_le_bytes());
+    out.extend_from_slice(tensor_path.as_bytes());
+    out.push(1); // dtype int8
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for s in scale {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend(std::iter::repeat(1u8).take(cout)); // keep mask: no pruning
+    out.extend(q.iter().map(|&v| v as u8));
+    std::fs::write(file, &out).map_err(|e| Error::Io(format!("{}: {e}", file.display())))?;
+    Ok(q.len() + cout * 4 + cout)
 }
 
 fn fmt_usize_arr(v: &[usize]) -> String {

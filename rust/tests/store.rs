@@ -1,0 +1,200 @@
+//! Host-artifact store + warm reload acceptance tests on the stub
+//! backend (synthetic STUBHLO artifacts, real buffers, real compile
+//! and dispatch counters — see `mobile_diffusion::testkit`).
+//!
+//! Pinned invariants (the ISSUE 4 acceptance criteria):
+//! * with a fleet of workers sharing one store, each `(component,
+//!   tag)` is read and parsed from disk exactly once per process;
+//! * a post-eviction re-acquire is a *warm* reload: zero disk reads,
+//!   zero parses, zero dequants, zero compiles — only the device
+//!   upload — asserted via stage-level `LoadStats`/`LoadProfile` and
+//!   the stub's compile counter;
+//! * warm-path outputs are bit-identical to cold-path outputs.
+
+use std::sync::Arc;
+use std::thread;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::runtime::{ArtifactStore, Manifest};
+use mobile_diffusion::testkit::{self, FakeArtifactSpec};
+
+fn small_spec() -> FakeArtifactSpec {
+    FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    }
+}
+
+/// Budget that fits the UNet plus the larger of encoder/decoder — the
+/// paper's pipelined shape — but *not* all three, so every request
+/// evicts the encoder and decoder.
+fn tight_budget(m: &Manifest) -> usize {
+    let bytes = |name: &str| m.components[name].weights["fp32"].bytes;
+    bytes("unet_mobile") + bytes("text_encoder").max(bytes("decoder"))
+}
+
+#[test]
+fn four_workers_trigger_exactly_one_disk_load_per_component() {
+    let dir = testkit::fake_artifacts_dir("store_threads", &small_spec()).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let store = Arc::new(ArtifactStore::new());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let store = Arc::clone(&store);
+            let m = m.clone();
+            thread::spawn(move || {
+                for name in ["unet_mobile", "text_encoder", "decoder"] {
+                    let comp = m.component(name).unwrap();
+                    let (host, _) = store.get_or_load(&m, comp, "fp32").unwrap();
+                    assert!(host.stored_bytes() > 0);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        store.disk_loads(),
+        3,
+        "4 workers x 3 components -> 3 disk loads, not 12"
+    );
+    assert_eq!(store.hits(), 9);
+}
+
+#[test]
+fn fleet_pool_shares_the_store_across_workers() {
+    let dir = testkit::fake_artifacts_dir("store_fleet", &small_spec()).unwrap();
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_workers = 4;
+    cfg.num_steps = 2;
+    cfg.queue_depth = 32;
+    let mut server = Server::start(&cfg).unwrap();
+
+    let receivers: Vec<_> = (0..8)
+        .map(|i| server.submit(&format!("prompt {i}"), i as u64).unwrap())
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let store = server.artifact_store();
+    assert_eq!(
+        store.disk_loads(),
+        3,
+        "unet_mobile + text_encoder + decoder each read from disk once, \
+         regardless of worker count or reload cycles"
+    );
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("artifact store: 3 cached"), "{report}");
+}
+
+#[test]
+fn thrash_under_budget_reloads_warm_with_no_parse_or_compile() {
+    let dir = testkit::fake_artifacts_dir("store_thrash", &small_spec()).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let budget = tight_budget(&m);
+    let mut ex = PipelinedExecutor::new(
+        m,
+        ExecOptions { num_steps: 3, memory_budget: budget, ..Default::default() },
+    )
+    .unwrap();
+    let stats = ex.engine.device_stats();
+
+    // request 1: everything is cold
+    let r1 = ex.generate("thrash", 7, "mobile").unwrap();
+    assert!(r1.peak_memory <= budget);
+    let cold = ex.load_profile().clone();
+    assert_eq!(cold.cold_loads, 3);
+    assert_eq!(cold.warm_reloads, 0);
+    assert_eq!(cold.store_misses, 3);
+    assert_eq!(stats.compiles(), 3, "one compile per component");
+    assert_eq!(ex.store().disk_loads(), 3);
+    assert_eq!(r1.timings.loads.cold_loads, 3, "per-request accounting rides the timings");
+
+    // the evicted encoder/decoder left warm remnants behind
+    assert!(ex.residency.warm_contains("text_encoder", "fp32"));
+    assert!(ex.residency.warm_contains("decoder", "fp32"));
+
+    // request 2: the UNet is still resident; encoder and decoder were
+    // evicted under the budget and must come back warm
+    let r2 = ex.generate("thrash", 7, "mobile").unwrap();
+    let after = ex.load_profile().clone();
+    let delta = after.since(&cold);
+    assert_eq!(delta.cold_loads, 0, "no cold loads on the warm path");
+    assert_eq!(delta.warm_reloads, 2, "text encoder + decoder");
+    assert_eq!(delta.store_hits, 2, "host halves came from the store");
+    assert_eq!(stats.compiles(), 3, "zero extra compiles");
+    assert_eq!(ex.store().disk_loads(), 3, "zero extra disk reads/parses");
+    assert_eq!(
+        delta.read_s + delta.parse_s + delta.dequant_s + delta.compile_s,
+        0.0,
+        "warm reloads pay only the upload stage"
+    );
+    assert!(delta.upload_s > 0.0, "the device upload is still paid");
+
+    // warm-path outputs are bit-identical to the cold-path run
+    assert_eq!(r1.latent, r2.latent);
+    assert_eq!(r1.image, r2.image);
+}
+
+#[test]
+fn disabling_warm_slots_goes_back_to_cold_reloads_with_store_hits() {
+    let dir = testkit::fake_artifacts_dir("store_no_warm", &small_spec()).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let budget = tight_budget(&m);
+    let mut ex = PipelinedExecutor::new(
+        m,
+        ExecOptions {
+            num_steps: 2,
+            memory_budget: budget,
+            warm_slots: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let stats = ex.engine.device_stats();
+    ex.generate("no warm", 1, "mobile").unwrap();
+    ex.generate("no warm", 2, "mobile").unwrap();
+    let p = ex.load_profile().clone();
+    assert_eq!(p.warm_reloads, 0, "tier disabled");
+    assert_eq!(p.cold_loads, 5, "3 cold + 2 recompiled reloads");
+    assert_eq!(stats.compiles(), 5, "evictions recompile without the tier");
+    assert_eq!(
+        ex.store().disk_loads(),
+        3,
+        "the store still absorbs the host half even without warm slots"
+    );
+    assert_eq!(p.store_hits, 2);
+}
+
+#[test]
+fn int8_artifacts_dequantize_once_per_process() {
+    // default sizing: a 65k-element int8 UNet keeps the dequant stage
+    // comfortably above timer resolution
+    let spec = FakeArtifactSpec { int8_unet: true, ..Default::default() };
+    let dir = testkit::fake_artifacts_dir("store_int8", &spec).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let budget = tight_budget(&m); // int8 unet is smaller than fp32
+    let opts = ExecOptions {
+        num_steps: 2,
+        memory_budget: budget,
+        unet_weights: "int8".into(),
+        ..Default::default()
+    };
+    let mut ex = PipelinedExecutor::new(m, opts).unwrap();
+    ex.generate("int8", 3, "mobile").unwrap();
+    let p1 = ex.load_profile().clone();
+    assert!(p1.dequant_s > 0.0, "the int8 UNet paid a dequant stage");
+    // drop everything resident, then regenerate: the dequantized rows
+    // come back from the store — no second dequant anywhere
+    ex.evict_idle();
+    ex.generate("int8", 3, "mobile").unwrap();
+    let delta = ex.load_profile().since(&p1);
+    assert_eq!(delta.dequant_s, 0.0, "dequantization ran once per process");
+    assert_eq!(ex.store().disk_loads(), 3);
+}

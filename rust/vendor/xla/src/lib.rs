@@ -89,6 +89,7 @@ pub struct DeviceStats {
     transfers: AtomicU64,
     transfer_bytes: AtomicU64,
     writes: AtomicU64,
+    compiles: AtomicU64,
     executions: Mutex<BTreeMap<String, u64>>,
     rows: Mutex<BTreeMap<String, u64>>,
 }
@@ -106,6 +107,12 @@ impl DeviceStats {
     /// In-place rewrites of existing buffers (`write_from_host`).
     pub fn writes(&self) -> u64 {
         self.writes.load(Ordering::Relaxed)
+    }
+
+    /// Successful program compilations on this client — the counter the
+    /// warm-reload tests use to prove a re-acquire skipped the compile.
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
     }
 
     /// Dispatches of the named STUBHLO program.
@@ -376,10 +383,13 @@ impl PjRtClient {
 
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         match &comp.program {
-            Some(p) => Ok(PjRtLoadedExecutable {
-                program: p.clone(),
-                stats: Arc::clone(&self.stats),
-            }),
+            Some(p) => {
+                self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                Ok(PjRtLoadedExecutable {
+                    program: p.clone(),
+                    stats: Arc::clone(&self.stats),
+                })
+            }
             None => stub_err("opaque HLO cannot compile offline (STUBHLO programs can)"),
         }
     }
