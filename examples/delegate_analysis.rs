@@ -10,6 +10,7 @@ use std::path::Path;
 use mobile_diffusion::delegate::{graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740};
 use mobile_diffusion::graph::{self, OpType};
 use mobile_diffusion::passes;
+use mobile_diffusion::planner::{model, plan_graph, registered_devices, schedule_display};
 
 fn main() -> mobile_diffusion::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -69,6 +70,26 @@ fn main() -> mobile_diffusion::Result<()> {
             before.total() / after.total()
         );
         println!();
+    }
+
+    // Which passes the cost-gated planner actually schedules, per
+    // device class and variant: the GPU-delegate class takes the whole
+    // pipeline (fusions included), comparator classes keep only what
+    // pays on their cost model.
+    println!("=== planner pass schedules (cost-gated, per device class) ===");
+    for spec in registered_devices() {
+        for variant in model::VARIANTS {
+            let g = model::unet_graph(variant)?;
+            let planned = plan_graph(&g, &rules, &spec);
+            println!(
+                "  {:<10} {:<7} {:>3} rewrites, {:>6.1} ms modeled   [{}]",
+                spec.name,
+                variant,
+                planned.rewrites,
+                planned.cost_s * 1e3,
+                schedule_display(&planned.passes_used)
+            );
+        }
     }
     Ok(())
 }

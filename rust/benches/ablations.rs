@@ -7,10 +7,10 @@ use std::path::Path;
 
 use mobile_diffusion::delegate::{graph_cost, RuleSet, CPU_BIGCORE, GPU_ADRENO740};
 use mobile_diffusion::graph;
-use mobile_diffusion::passes::manager::{run_with_config, PassConfig};
+use mobile_diffusion::passes::manager::run_registry;
 use mobile_diffusion::passes::serialize_conv::Dim;
 use mobile_diffusion::passes::serialize_conv::SerializeConv;
-use mobile_diffusion::passes::Pass;
+use mobile_diffusion::passes::{Pass, PassRegistry};
 
 const STEPS: usize = 20;
 
@@ -23,24 +23,22 @@ fn main() {
     let base = graph::load(&dir.join("sd_v21_unet.graph.json")).unwrap();
     let rules = RuleSet::default();
 
-    let configs: &[(&str, PassConfig)] = &[
-        ("none (stock export)", PassConfig::NONE),
-        ("groupnorm only", PassConfig { groupnorm: true, ..PassConfig::NONE }),
-        ("fc-to-conv only", PassConfig { fc_to_conv: true, ..PassConfig::NONE }),
+    let std_reg = PassRegistry::standard();
+    let configs: &[(&str, PassRegistry)] = &[
+        ("none (stock export)", PassRegistry::empty()),
+        ("groupnorm only", std_reg.subset(&["groupnorm"]).unwrap()),
+        ("fc-to-conv only", std_reg.subset(&["fc_to_conv"]).unwrap()),
         (
             "gn + fc-to-conv",
-            PassConfig { groupnorm: true, fc_to_conv: true, ..PassConfig::NONE },
+            std_reg.subset(&["groupnorm", "fc_to_conv"]).unwrap(),
         ),
         (
             "gn + fc + serialize",
-            PassConfig {
-                groupnorm: true,
-                fc_to_conv: true,
-                serialize_conv: true,
-                ..PassConfig::NONE
-            },
+            std_reg
+                .subset(&["groupnorm", "fc_to_conv", "serialize_conv"])
+                .unwrap(),
         ),
-        ("all (paper)", PassConfig::default()),
+        ("all (paper + fusions)", std_reg.clone()),
     ];
 
     println!("== ablation: Sec. 3.1/3.2 passes on the SD v2.1 UNet ==\n");
@@ -50,9 +48,9 @@ fn main() {
     );
 
     let mut prev_total = f64::NAN;
-    for (name, cfg) in configs {
+    for (name, reg) in configs {
         let mut g = base.clone();
-        let _report = run_with_config(&mut g, &rules, &GPU_ADRENO740, *cfg);
+        let _report = run_registry(&mut g, &rules, &GPU_ADRENO740, reg);
         let cost = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE);
         let e2e = STEPS as f64 * cost.total();
         println!(
@@ -73,11 +71,11 @@ fn main() {
     for (name, dim) in [("input (paper's choice)", Dim::Input), ("output", Dim::Output)] {
         let mut g = base.clone();
         // prerequisite passes so only the conv remains
-        run_with_config(
+        run_registry(
             &mut g,
             &rules,
             &GPU_ADRENO740,
-            PassConfig { serialize_conv: false, ..Default::default() },
+            &std_reg.without(&["serialize_conv"]),
         );
         let pass = SerializeConv {
             rules: rules.clone(),
@@ -98,7 +96,7 @@ fn main() {
     // ---- distilled step-count ablation ----------------------------------
     println!("\n== ablation: progressive-distillation step schedules ==\n");
     let mut g = base.clone();
-    run_with_config(&mut g, &rules, &GPU_ADRENO740, PassConfig::default());
+    run_registry(&mut g, &rules, &GPU_ADRENO740, &std_reg);
     let per_eval = graph_cost(&g, &rules, &GPU_ADRENO740, &CPU_BIGCORE).total();
     for steps in [50, 20, 10, 5] {
         println!(

@@ -1,0 +1,146 @@
+//! Pass-pipeline benchmark: full-pipeline rewrite time and the
+//! cost-gated modeled-latency delta, on both SD variants and every
+//! registered device class.  Emits `BENCH_passes.json` (repo root).
+//!
+//! Two claims are enforced (exit 1 on violation):
+//!
+//! * the cost-gated plan is never worse than the unplanned graph on
+//!   any device class (the planner's core invariant);
+//! * on the GPU-delegate class the pipeline strictly pays on both
+//!   variants (islands removed, softmax fused, layout debris gone).
+//!
+//!     cargo bench --bench passes            # full workload
+//!     cargo bench --bench passes -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::time::Instant;
+
+use mobile_diffusion::delegate::RuleSet;
+use mobile_diffusion::passes;
+use mobile_diffusion::planner::{model, modeled_cost_s, plan_graph, registered_devices};
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+struct DeviceRow {
+    device: &'static str,
+    before_ms: f64,
+    after_ms: f64,
+    schedule: Vec<&'static str>,
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("PASSES_FAST").is_ok();
+    let iters = if fast { 7 } else { 31 };
+    let rules = RuleSet::default();
+
+    println!(
+        "== pass pipeline: rewrite time + modeled-latency delta{} ==\n",
+        if fast { " (fast mode)" } else { "" }
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"fast\": {fast},\n"));
+    json.push_str("  \"variants\": [\n");
+
+    let mut ok = true;
+    for (vi, variant) in model::VARIANTS.iter().enumerate() {
+        let g0 = model::unet_graph(variant).unwrap();
+
+        // full-pipeline rewrite wall time (fresh graph per iteration)
+        let mut samples = Vec::with_capacity(iters);
+        let mut last_rewrites = 0usize;
+        for _ in 0..iters {
+            let mut g = g0.clone();
+            let t0 = Instant::now();
+            let report = passes::run_all(&mut g);
+            samples.push(t0.elapsed().as_secs_f64());
+            last_rewrites = report.total_rewrites();
+        }
+        let rewrite_ms = median(&mut samples) * 1e3;
+        println!(
+            "{variant}: {} ops, {} rewrite sites, pipeline rewrite {:.3} ms",
+            g0.ops.len(),
+            last_rewrites,
+            rewrite_ms
+        );
+
+        // cost-gated modeled-latency delta per device class
+        let mut rows: Vec<DeviceRow> = Vec::new();
+        for spec in registered_devices() {
+            let before = modeled_cost_s(&g0, &rules, &spec);
+            let planned = plan_graph(&g0, &rules, &spec);
+            println!(
+                "  {:<10} {:>8.2} ms -> {:>8.2} ms ({:.2}x)   [{}]",
+                spec.name,
+                before * 1e3,
+                planned.cost_s * 1e3,
+                before / planned.cost_s.max(1e-12),
+                planned.passes_used.join(", ")
+            );
+            if planned.cost_s > before {
+                eprintln!(
+                    "FAIL: plan worse than unplanned on {} ({variant})",
+                    spec.name
+                );
+                ok = false;
+            }
+            if spec.name == "adreno740" && planned.cost_s >= before {
+                eprintln!("FAIL: pipeline does not strictly pay on the GPU class ({variant})");
+                ok = false;
+            }
+            rows.push(DeviceRow {
+                device: spec.name,
+                before_ms: before * 1e3,
+                after_ms: planned.cost_s * 1e3,
+                schedule: planned.passes_used.clone(),
+            });
+        }
+        println!();
+
+        json.push_str("    {\n");
+        json.push_str(&format!("      \"variant\": \"{}\",\n", json_escape(variant)));
+        json.push_str(&format!("      \"ops\": {},\n", g0.ops.len()));
+        json.push_str(&format!("      \"rewrite_sites\": {last_rewrites},\n"));
+        json.push_str(&format!("      \"pipeline_rewrite_ms\": {rewrite_ms:.6},\n"));
+        json.push_str("      \"devices\": [\n");
+        for (di, r) in rows.iter().enumerate() {
+            let sched: Vec<String> =
+                r.schedule.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
+            json.push_str(&format!(
+                "        {{\"device\": \"{}\", \"modeled_before_ms\": {:.6}, \
+                 \"modeled_after_ms\": {:.6}, \"speedup\": {:.4}, \"schedule\": [{}]}}{}\n",
+                json_escape(r.device),
+                r.before_ms,
+                r.after_ms,
+                r.before_ms / r.after_ms.max(1e-12),
+                sched.join(", "),
+                if di + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("      ]\n");
+        json.push_str(&format!(
+            "    }}{}\n",
+            if vi + 1 < model::VARIANTS.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_passes.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("wrote {}", out.display());
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

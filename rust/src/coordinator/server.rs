@@ -256,6 +256,18 @@ impl Server {
             self.store.disk_loads(),
             self.store.hits(),
         ));
+        // the cost-gated pass schedule each (device class, variant)
+        // plan settled on — what the fleet actually runs per class
+        if let Some(router) = &self.router {
+            for plan in router.plans().cached() {
+                out.push_str(&format!(
+                    "pass schedule {}/{}: {}\n",
+                    plan.device,
+                    plan.variant,
+                    crate::planner::schedule_display(&plan.unet_passes),
+                ));
+            }
+        }
         Ok(out)
     }
 

@@ -130,7 +130,15 @@ pub fn op_flops(g: &Graph, op: &Op) -> f64 {
             2.0 * out_elems * k
         }
         OpType::Softmax => 5.0 * out_elems,
-        OpType::Mean | OpType::SquaredDifference => {
+        // the fused-softmax kernel does the same math as the exp/sum/div
+        // island it replaces, but in one dispatch with the logits
+        // streamed through registers: its roofline is memory-bound (the
+        // 5-flops-per-element numerator never beats bytes/bandwidth on
+        // any shipped profile), so the win over the island is the two
+        // saved dispatches and the intermediate tensors that no longer
+        // round-trip through memory
+        OpType::FusedSoftmax => 5.0 * out_elems,
+        OpType::Mean | OpType::SquaredDifference | OpType::Sum => {
             let in_elems: f64 = g.act_inputs(op).map(|t| t.elems() as f64).sum();
             in_elems.max(out_elems)
         }

@@ -10,8 +10,9 @@ pub mod partition;
 pub mod rules;
 
 pub use cost::{
-    graph_cost, op_latency, partition_cost, single_device_cost, CostBreakdown,
-    DeviceProfile, CPU_BIGCORE, GPU_ADRENO740, GPU_CUSTOM_KERNELS, NPU_HEXAGON,
+    graph_cost, op_latency, partition_cost, segment_cost, single_device_cost,
+    CostBreakdown, DeviceProfile, CPU_BIGCORE, GPU_ADRENO740,
+    GPU_CUSTOM_KERNELS, NPU_HEXAGON,
 };
 pub use partition::{Device, Partition, Segment};
 pub use rules::{RuleSet, Verdict};

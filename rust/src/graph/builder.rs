@@ -84,6 +84,63 @@ impl GraphBuilder {
         out
     }
 
+    /// Dimension permutation: `out.shape[i] = in.shape[perm[i]]`.  The
+    /// permutation is stored as `perm0..permN` op attrs, the form the
+    /// `attention_reshape_elim` pass reads back.
+    pub fn transpose(&mut self, name: &str, x: TensorId, perm: &[usize]) -> TensorId {
+        let s = self.g.tensor(x).shape.clone();
+        assert_eq!(s.len(), perm.len(), "perm rank mismatch");
+        let shape: Vec<usize> = perm.iter().map(|&i| s[i]).collect();
+        let out = self.g.add_tensor(&format!("{name}:out"), &shape, self.act_dtype, false);
+        let mut attrs = BTreeMap::new();
+        for (i, &p) in perm.iter().enumerate() {
+            attrs.insert(format!("perm{i}"), p as f64);
+        }
+        self.g.add_op_with_attrs(OpType::Transpose, name, vec![x], vec![out], attrs);
+        out
+    }
+
+    /// `(B, M, K) @ (B, K, N) -> (B, M, N)` batched matmul.
+    pub fn batch_matmul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let sa = self.g.tensor(a).shape.clone();
+        let sb = self.g.tensor(b).shape.clone();
+        assert_eq!(sa.len(), sb.len(), "batch_matmul rank mismatch");
+        assert!(sa.len() >= 2, "batch_matmul needs matrix operands");
+        assert_eq!(
+            sa.last(),
+            sb.get(sb.len() - 2),
+            "batch_matmul contraction dim mismatch"
+        );
+        assert_eq!(
+            sa[..sa.len() - 2],
+            sb[..sb.len() - 2],
+            "batch_matmul batch dims mismatch"
+        );
+        let mut shape = sa.clone();
+        *shape.last_mut().unwrap() = *sb.last().unwrap();
+        let out = self.g.add_tensor(&format!("{name}:out"), &shape, self.act_dtype, false);
+        self.g.add_op(OpType::BatchMatmul, name, vec![a, b], vec![out]);
+        out
+    }
+
+    /// The export-form softmax island over the last axis: Exp ->
+    /// Sum(keepdims) -> Div.  Three dispatches and one full-size
+    /// intermediate — exactly what the `fused_softmax` pass collapses.
+    pub fn softmax_decomposed(&mut self, name: &str, x: TensorId) -> TensorId {
+        let s = self.g.tensor(x).shape.clone();
+        let e = self.unary(OpType::Exp, &format!("{name}/exp"), x);
+        let mut sum_shape = s.clone();
+        *sum_shape.last_mut().unwrap() = 1;
+        let sum = self.g.add_tensor(
+            &format!("{name}/sum:out"),
+            &sum_shape,
+            self.act_dtype,
+            false,
+        );
+        self.g.add_op(OpType::Sum, &format!("{name}/sum"), vec![e], vec![sum]);
+        self.binary(OpType::Div, &format!("{name}/div"), e, sum)
+    }
+
     pub fn broadcast_to(&mut self, name: &str, x: TensorId, shape: &[usize]) -> TensorId {
         let out = self.g.add_tensor(&format!("{name}:out"), shape, self.act_dtype, false);
         self.g.add_op(OpType::BroadcastTo, name, vec![x], vec![out]);
@@ -129,6 +186,53 @@ impl GraphBuilder {
         self.binary(OpType::Add, &format!("{name}/badd"), scaled, beta)
     }
 
+    /// A multi-head self-attention block as the TFLite export emits it
+    /// (`x` is `[1, N, C]` tokens): Q/K/V projections, head split via
+    /// Reshape/Transpose, scaled QK^T BatchMatmul, the decomposed
+    /// softmax island, the attention-weighted V BatchMatmul, and the
+    /// output projection.  Two layout redundancies the exporter leaves
+    /// behind ride along on purpose — a cancelling Transpose pair on
+    /// the K path (adj_y folded, then unfolded) and a cancelling
+    /// Reshape pair on the V path (flatten/unflatten) — the sites
+    /// `attention_reshape_elim` exists to remove.
+    pub fn attention(&mut self, name: &str, x: TensorId, heads: usize) -> TensorId {
+        let s = self.g.tensor(x).shape.clone();
+        assert_eq!(s.len(), 3, "attention input must be [1, N, C]");
+        let (n_tok, c) = (s[1], s[2]);
+        assert_eq!(c % heads, 0, "heads must divide channels");
+        let d = c / heads;
+
+        let q = self.fully_connected(&format!("{name}/q"), x, c);
+        let k = self.fully_connected(&format!("{name}/k"), x, c);
+        let v = self.fully_connected(&format!("{name}/v"), x, c);
+
+        // [1, N, C] -> [N, H, D] -> [H, N, D]
+        let q3 = self.reshape(&format!("{name}/q_split"), q, &[n_tok, heads, d]);
+        let qh = self.transpose(&format!("{name}/q_heads"), q3, &[1, 0, 2]);
+        let k3 = self.reshape(&format!("{name}/k_split"), k, &[n_tok, heads, d]);
+        let kh = self.transpose(&format!("{name}/k_heads"), k3, &[1, 0, 2]);
+        // [H, N, D] -> [H, D, N] for QK^T
+        let kt = self.transpose(&format!("{name}/k_swap"), kh, &[0, 2, 1]);
+        // export artifact: adj_y folded into a transpose, then unfolded
+        let k_adj = self.transpose(&format!("{name}/k_adj"), kt, &[0, 2, 1]);
+        let k_unadj = self.transpose(&format!("{name}/k_unadj"), k_adj, &[0, 2, 1]);
+
+        let logits = self.batch_matmul(&format!("{name}/qk"), qh, k_unadj);
+        let scaled = self.unary(OpType::Mul, &format!("{name}/scale"), logits);
+        let attn = self.softmax_decomposed(&format!("{name}/softmax"), scaled);
+
+        let v3 = self.reshape(&format!("{name}/v_split"), v, &[n_tok, heads, d]);
+        let vh = self.transpose(&format!("{name}/v_heads"), v3, &[1, 0, 2]);
+        // export artifact: flatten/unflatten round trip
+        let v_flat = self.reshape(&format!("{name}/v_flat"), vh, &[heads * n_tok, d]);
+        let v_unflat = self.reshape(&format!("{name}/v_unflat"), v_flat, &[heads, n_tok, d]);
+
+        let ctx = self.batch_matmul(&format!("{name}/av"), attn, v_unflat);
+        let ctx_t = self.transpose(&format!("{name}/merge_heads"), ctx, &[1, 0, 2]);
+        let merged = self.reshape(&format!("{name}/merge"), ctx_t, &[1, n_tok, c]);
+        self.fully_connected(&format!("{name}/proj"), merged, c)
+    }
+
     /// Decomposed tanh GELU (optionally with the paper's clamp).
     pub fn gelu(&mut self, name: &str, x: TensorId, stable: bool) -> TensorId {
         let mut gx = x;
@@ -161,7 +265,7 @@ pub fn random_graph(rng: &mut Rng, n_ops: usize) -> Graph {
     let mut cur = b.input("x", &[1, hw, hw, c0]);
     let mut spatial: Vec<TensorId> = vec![cur];
     for i in 0..n_ops {
-        match rng.below(8) {
+        match rng.below(11) {
             0 => {
                 let cout = *rng.choose(&[8usize, 16, 32, 64]);
                 cur = b.conv2d(&format!("conv{i}"), cur, cout, 3, 1);
@@ -194,6 +298,25 @@ pub fn random_graph(rng: &mut Rng, n_ops: usize) -> Graph {
             }
             6 => {
                 cur = b.unary(OpType::Logistic, &format!("sig{i}"), cur);
+            }
+            8 => {
+                // export-form softmax island over the channel axis
+                cur = b.softmax_decomposed(&format!("sm{i}"), cur);
+            }
+            9 => {
+                // a cancelling transpose pair (exporter layout debris)
+                let t = b.transpose(&format!("lay{i}"), cur, &[0, 3, 1, 2]);
+                cur = b.transpose(&format!("unlay{i}"), t, &[0, 2, 3, 1]);
+            }
+            10 => {
+                // tokenized attention block: NHWC -> [1, HW, C] -> back
+                let s = b.g.tensor(cur).shape.clone();
+                let (h, w, c) = (s[1], s[2], s[3]);
+                if c % 2 == 0 {
+                    let tok = b.reshape(&format!("tok{i}"), cur, &[1, h * w, c]);
+                    let a = b.attention(&format!("attn{i}"), tok, 2);
+                    cur = b.reshape(&format!("untok{i}"), a, &[1, h, w, c]);
+                }
             }
             _ => {
                 // residual add with an earlier same-shape tensor if any

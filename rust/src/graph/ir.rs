@@ -46,6 +46,10 @@ impl DType {
             DType::I32 => "i32",
         }
     }
+
+    /// Every dtype, for exhaustive round-trip tests and enumeration.
+    pub const ALL: &'static [DType] =
+        &[DType::F16, DType::F32, DType::I8, DType::I32];
 }
 
 /// TFLite operator kinds used by the Stable Diffusion graphs.
@@ -72,6 +76,15 @@ pub enum OpType {
     Gather,
     StridedSlice,
     Split,
+    Transpose,
+    Exp,
+    Sum,
+    Div,
+    /// One-dispatch softmax produced by the `fused_softmax` rewrite
+    /// (paper-adjacent: "Speed Is All You Need" fuses the softmax
+    /// memory round-trips away).  Costed memory-bound in
+    /// `delegate::cost` — one streaming pass over the logits.
+    FusedSoftmax,
 }
 
 impl OpType {
@@ -99,6 +112,11 @@ impl OpType {
             "GATHER" => Gather,
             "STRIDED_SLICE" => StridedSlice,
             "SPLIT" => Split,
+            "TRANSPOSE" => Transpose,
+            "EXP" => Exp,
+            "SUM" => Sum,
+            "DIV" => Div,
+            "FUSED_SOFTMAX" => FusedSoftmax,
             _ => return None,
         })
     }
@@ -127,8 +145,44 @@ impl OpType {
             Gather => "GATHER",
             StridedSlice => "STRIDED_SLICE",
             Split => "SPLIT",
+            Transpose => "TRANSPOSE",
+            Exp => "EXP",
+            Sum => "SUM",
+            Div => "DIV",
+            FusedSoftmax => "FUSED_SOFTMAX",
         }
     }
+
+    /// Every operator kind, for exhaustive round-trip tests and
+    /// enumeration (kept in declaration order).
+    pub const ALL: &'static [OpType] = &[
+        OpType::Conv2d,
+        OpType::FullyConnected,
+        OpType::Add,
+        OpType::Sub,
+        OpType::Mul,
+        OpType::Mean,
+        OpType::SquaredDifference,
+        OpType::Rsqrt,
+        OpType::Reshape,
+        OpType::BroadcastTo,
+        OpType::Softmax,
+        OpType::BatchMatmul,
+        OpType::Tanh,
+        OpType::Minimum,
+        OpType::Maximum,
+        OpType::Logistic,
+        OpType::Concatenation,
+        OpType::ResizeNearestNeighbor,
+        OpType::Gather,
+        OpType::StridedSlice,
+        OpType::Split,
+        OpType::Transpose,
+        OpType::Exp,
+        OpType::Sum,
+        OpType::Div,
+        OpType::FusedSoftmax,
+    ];
 
     /// Pure element-wise ops (fusable by the delegate's elementwise chain).
     pub fn is_elementwise(self) -> bool {
@@ -136,7 +190,7 @@ impl OpType {
         matches!(
             self,
             Add | Sub | Mul | Rsqrt | Tanh | Minimum | Maximum | Logistic
-                | SquaredDifference
+                | SquaredDifference | Exp | Div
         )
     }
 }
@@ -427,5 +481,32 @@ mod tests {
         let g = tiny();
         assert_eq!(g.op_histogram()[&OpType::Conv2d], 1);
         assert!(format!("{}", g).contains("CONV_2D"));
+    }
+
+    #[test]
+    fn op_type_names_round_trip() {
+        // every kind — including the fused kinds the pattern engine
+        // introduces — survives name() -> parse()
+        for &ty in OpType::ALL {
+            assert_eq!(OpType::parse(ty.name()), Some(ty), "{}", ty.name());
+        }
+        assert_eq!(OpType::ALL.len(), 26, "ALL must list every variant");
+        assert_eq!(OpType::parse("FUSED_SOFTMAX"), Some(OpType::FusedSoftmax));
+        assert_eq!(OpType::parse("TRANSPOSE"), Some(OpType::Transpose));
+        assert_eq!(OpType::parse("EXP"), Some(OpType::Exp));
+        assert_eq!(OpType::parse("SUM"), Some(OpType::Sum));
+        assert_eq!(OpType::parse("DIV"), Some(OpType::Div));
+        assert_eq!(OpType::parse("CONVOLUTION_9D"), None);
+        assert_eq!(OpType::parse("conv_2d"), None, "names are case-sensitive");
+    }
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for &dt in DType::ALL {
+            assert_eq!(DType::parse(dt.name()), Some(dt), "{}", dt.name());
+        }
+        assert_eq!(DType::ALL.len(), 4);
+        assert_eq!(DType::parse("f64"), None);
+        assert_eq!(DType::parse("F16"), None, "names are case-sensitive");
     }
 }

@@ -1,8 +1,11 @@
-//! TFLite-level graph substrate: IR, JSON loader, and test builders.
+//! TFLite-level graph substrate: IR, JSON loader, test builders, and
+//! the declarative pattern-match/rewrite engine the pass layer runs on.
 
 pub mod builder;
 pub mod ir;
 pub mod loader;
+pub mod pattern;
 
 pub use ir::{DType, Graph, Op, OpId, OpType, Tensor, TensorId};
 pub use loader::{from_json, load};
+pub use pattern::{Match, MatchCtx, OperandPattern, Pattern, PatternNode};

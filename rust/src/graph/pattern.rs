@@ -1,0 +1,568 @@
+//! Declarative subgraph pattern matching and rewriting — the compiler
+//! core the pass layer is founded on.
+//!
+//! A [`Pattern`] is a tree of [`PatternNode`]s describing an op
+//! island: each node constrains the op kind ([`PatternNode::op`] /
+//! [`PatternNode::one_of`]), adds arbitrary predicates over the op and
+//! its tensors, and walks backwards through producers via
+//! [`OperandPattern`]s.  Tensor bindings unify — `Tensor("x")`
+//! appearing twice must resolve to the same tensor id, which is how
+//! the GELU cubic chain (`x*x*x`) is expressed.  Anchors can require
+//! their outputs to be single-consumer ([`PatternNode::single_use`]),
+//! or inspect the full consumer sets through the [`MatchCtx`] for
+//! multi-consumer islands like the decomposed softmax (`Exp` feeding
+//! both `Sum` and `Div`).
+//!
+//! [`apply`] is the rewrite driver: it scans for matches, hands each
+//! to an imperative rewrite callback, and iterates to a fixed point.
+//! After every accepted rewrite the driver renumbers op ids, re-runs
+//! [`Graph::validate`], and checks the structural contract every pass
+//! must keep: graph outputs keep their shape and dtype, and no
+//! consumed activation tensor loses its producer.  A rewrite callback
+//! may reject a site (return `false`) — e.g. when a cost model finds
+//! no profitable serialization — but must then leave the graph
+//! untouched.
+
+use std::collections::BTreeMap;
+
+use super::ir::{DType, Graph, Op, OpId, OpType, TensorId};
+
+/// Adjacency snapshot of the graph being matched, handed to
+/// predicates and guards.  Valid for one scan: op ids equal op
+/// positions (the driver renumbers after every rewrite).
+pub struct MatchCtx<'g> {
+    pub graph: &'g Graph,
+    /// producer op of each tensor (`None` for inputs/consts)
+    pub producers: Vec<Option<OpId>>,
+    /// consumer ops of each tensor
+    pub consumers: Vec<Vec<OpId>>,
+}
+
+impl<'g> MatchCtx<'g> {
+    pub fn new(graph: &'g Graph) -> MatchCtx<'g> {
+        MatchCtx {
+            graph,
+            producers: graph.producers(),
+            consumers: graph.consumers(),
+        }
+    }
+
+    /// Number of ops reading `t`.
+    pub fn consumer_count(&self, t: TensorId) -> usize {
+        self.consumers[t].len()
+    }
+
+    /// The op producing `t`, if any.
+    pub fn producer_op(&self, t: TensorId) -> Option<&'g Op> {
+        self.producers[t].map(|i| &self.graph.ops[i])
+    }
+}
+
+/// Named bindings captured by a successful match.
+#[derive(Debug, Clone, Default)]
+pub struct Match {
+    /// the op the pattern root matched
+    pub anchor: OpId,
+    ops: BTreeMap<&'static str, OpId>,
+    tensors: BTreeMap<&'static str, TensorId>,
+}
+
+impl Match {
+    /// The op bound under `name`; panics when absent (a pattern bug,
+    /// not a graph condition).
+    pub fn op(&self, name: &str) -> OpId {
+        match self.ops.get(name) {
+            Some(&id) => id,
+            None => panic!("pattern bound no op named '{name}'"),
+        }
+    }
+
+    /// The tensor bound under `name`; panics when absent.
+    pub fn tensor(&self, name: &str) -> TensorId {
+        match self.tensors.get(name) {
+            Some(&id) => id,
+            None => panic!("pattern bound no tensor named '{name}'"),
+        }
+    }
+
+    pub fn try_op(&self, name: &str) -> Option<OpId> {
+        self.ops.get(name).copied()
+    }
+
+    pub fn try_tensor(&self, name: &str) -> Option<TensorId> {
+        self.tensors.get(name).copied()
+    }
+
+    /// Bind `name` to `t`, or check consistency if already bound.
+    fn unify_tensor(&mut self, name: &'static str, t: TensorId) -> bool {
+        match self.tensors.get(name) {
+            Some(&prev) => prev == t,
+            None => {
+                self.tensors.insert(name, t);
+                true
+            }
+        }
+    }
+}
+
+type Pred = Box<dyn Fn(&MatchCtx, &Op) -> bool>;
+type Guard = Box<dyn Fn(&MatchCtx, &Match) -> bool>;
+
+/// Constraint on one input slot of a matched op.
+pub enum OperandPattern {
+    /// Bind (or unify) the input tensor itself under a name.
+    Tensor(&'static str),
+    /// The input must be produced by an op matching the sub-pattern.
+    Produced(PatternNode),
+}
+
+/// One node of a pattern tree: op-kind alternatives, predicates,
+/// operand constraints, and capture bindings.
+pub struct PatternNode {
+    kinds: Vec<OpType>,
+    preds: Vec<Pred>,
+    capture: Option<&'static str>,
+    operands: Vec<(usize, OperandPattern)>,
+    commutative: bool,
+    single_use: bool,
+}
+
+impl PatternNode {
+    /// Match exactly this op kind.
+    pub fn op(ty: OpType) -> PatternNode {
+        PatternNode {
+            kinds: vec![ty],
+            preds: Vec::new(),
+            capture: None,
+            operands: Vec::new(),
+            commutative: false,
+            single_use: false,
+        }
+    }
+
+    /// Match any of the given kinds.
+    pub fn one_of(tys: &[OpType]) -> PatternNode {
+        let mut n = PatternNode::op(tys.first().copied().expect("non-empty kinds"));
+        n.kinds = tys.to_vec();
+        n
+    }
+
+    /// Capture the matched op id under `name`.
+    pub fn named(mut self, name: &'static str) -> PatternNode {
+        self.capture = Some(name);
+        self
+    }
+
+    /// Extra predicate over the candidate op (evaluated before
+    /// operands are walked).
+    pub fn pred(
+        mut self,
+        f: impl Fn(&MatchCtx, &Op) -> bool + 'static,
+    ) -> PatternNode {
+        self.preds.push(Box::new(f));
+        self
+    }
+
+    /// Constrain input slot `slot`.
+    pub fn operand(mut self, slot: usize, p: OperandPattern) -> PatternNode {
+        self.operands.push((slot, p));
+        self
+    }
+
+    /// With exactly two operand constraints: try them against input
+    /// slots (0, 1) and, on failure, (1, 0).  Declared slots are
+    /// ignored in this mode.
+    ///
+    /// Backtracking is local to this node's subtree: the swapped order
+    /// is retried only when the forward order fails *structurally*
+    /// (including unification failures inside the subtree).  A failure
+    /// in a later sibling subtree or in a whole-match guard does not
+    /// revisit the choice — write order-disambiguating constraints
+    /// into the operand patterns themselves, not into guards.
+    pub fn commutative(mut self) -> PatternNode {
+        self.commutative = true;
+        self
+    }
+
+    /// Every output of the matched op must have exactly one consumer.
+    pub fn single_use(mut self) -> PatternNode {
+        self.single_use = true;
+        self
+    }
+}
+
+/// A rooted pattern plus whole-match guards evaluated after the
+/// structural walk succeeds.
+pub struct Pattern {
+    root: PatternNode,
+    guards: Vec<Guard>,
+}
+
+impl Pattern {
+    pub fn new(root: PatternNode) -> Pattern {
+        Pattern { root, guards: Vec::new() }
+    }
+
+    /// Add a guard over the completed bindings (cross-binding checks
+    /// the per-node predicates cannot express).
+    pub fn guard(
+        mut self,
+        f: impl Fn(&MatchCtx, &Match) -> bool + 'static,
+    ) -> Pattern {
+        self.guards.push(Box::new(f));
+        self
+    }
+}
+
+fn match_operand(
+    ctx: &MatchCtx,
+    p: &OperandPattern,
+    op: &Op,
+    slot: usize,
+    m: &mut Match,
+) -> bool {
+    let t = op.inputs[slot];
+    match p {
+        OperandPattern::Tensor(name) => m.unify_tensor(name, t),
+        OperandPattern::Produced(sub) => match ctx.producers[t] {
+            Some(pid) => match_node(ctx, sub, pid, m),
+            None => false,
+        },
+    }
+}
+
+fn match_node(ctx: &MatchCtx, node: &PatternNode, op_id: OpId, m: &mut Match) -> bool {
+    let op = &ctx.graph.ops[op_id];
+    if !node.kinds.is_empty() && !node.kinds.contains(&op.ty) {
+        return false;
+    }
+    for p in &node.preds {
+        if !p(ctx, op) {
+            return false;
+        }
+    }
+    if node.single_use && !op.outputs.iter().all(|&t| ctx.consumers[t].len() == 1) {
+        return false;
+    }
+
+    if node.commutative {
+        assert_eq!(
+            node.operands.len(),
+            2,
+            "commutative() requires exactly two operand constraints"
+        );
+        if op.inputs.len() < 2 {
+            return false;
+        }
+        let save = m.clone();
+        let forward = match_operand(ctx, &node.operands[0].1, op, 0, m)
+            && match_operand(ctx, &node.operands[1].1, op, 1, m);
+        if !forward {
+            *m = save.clone();
+            let swapped = match_operand(ctx, &node.operands[0].1, op, 1, m)
+                && match_operand(ctx, &node.operands[1].1, op, 0, m);
+            if !swapped {
+                *m = save;
+                return false;
+            }
+        }
+    } else {
+        for (slot, p) in &node.operands {
+            if *slot >= op.inputs.len() {
+                return false;
+            }
+            if !match_operand(ctx, p, op, *slot, m) {
+                return false;
+            }
+        }
+    }
+
+    if let Some(name) = node.capture {
+        m.ops.insert(name, op_id);
+    }
+    true
+}
+
+/// All matches of `pattern` against the current graph, in op order.
+/// Op ids must equal op positions (use from inside [`apply`], or
+/// renumber first).
+pub fn find_matches(g: &Graph, pattern: &Pattern) -> Vec<Match> {
+    let ctx = MatchCtx::new(g);
+    let mut out = Vec::new();
+    for op in &g.ops {
+        let mut m = Match { anchor: op.id, ..Match::default() };
+        if match_node(&ctx, &pattern.root, op.id, &mut m)
+            && pattern.guards.iter().all(|gd| gd(&ctx, &m))
+        {
+            out.push(m);
+        }
+    }
+    out
+}
+
+/// The first match whose anchor position is `>= start`, or `None`.
+fn next_match(g: &Graph, pattern: &Pattern, start: usize) -> Option<Match> {
+    let ctx = MatchCtx::new(g);
+    for op in &g.ops[start.min(g.ops.len())..] {
+        let mut m = Match { anchor: op.id, ..Match::default() };
+        if match_node(&ctx, &pattern.root, op.id, &mut m)
+            && pattern.guards.iter().all(|gd| gd(&ctx, &m))
+        {
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Safety cap on fixed-point iteration: a rule applying more rewrites
+/// than this is assumed non-terminating (every shipped pass consumes
+/// its anchor, so applications are bounded by the op count).
+pub const MAX_APPLICATIONS: usize = 100_000;
+
+/// Shape/dtype contract snapshot taken before each rewrite.
+struct OutputSnapshot {
+    /// (tensor, shape, dtype) of every graph output — produced,
+    /// unconsumed, non-const — before the rewrite
+    outputs: Vec<(TensorId, Vec<usize>, DType)>,
+    /// tensors with no producer before the rewrite (graph inputs)
+    was_input: Vec<bool>,
+}
+
+impl OutputSnapshot {
+    fn take(g: &Graph) -> OutputSnapshot {
+        let producers = g.producers();
+        let consumers = g.consumers();
+        let mut outputs = Vec::new();
+        for t in &g.tensors {
+            if !t.is_const && producers[t.id].is_some() && consumers[t.id].is_empty() {
+                outputs.push((t.id, t.shape.clone(), t.dtype));
+            }
+        }
+        let was_input = producers.iter().map(|p| p.is_none()).collect();
+        OutputSnapshot { outputs, was_input }
+    }
+
+    fn check(&self, g: &Graph, pass: &str) {
+        if let Err(e) = g.validate() {
+            panic!("pass '{pass}' broke graph validity: {e}");
+        }
+        let producers = g.producers();
+        for (t, shape, dtype) in &self.outputs {
+            assert!(
+                producers[*t].is_some(),
+                "pass '{pass}' stopped producing graph output tensor {t}"
+            );
+            let now = g.tensor(*t);
+            assert_eq!(
+                &now.shape, shape,
+                "pass '{pass}' changed the shape of graph output {t}"
+            );
+            assert_eq!(
+                now.dtype, *dtype,
+                "pass '{pass}' changed the dtype of graph output {t}"
+            );
+        }
+        // no consumed activation tensor may lose its producer (validate
+        // alone would silently reclassify it as a graph input)
+        for op in &g.ops {
+            for &i in &op.inputs {
+                if !g.tensor(i).is_const
+                    && producers[i].is_none()
+                    && !self.was_input.get(i).copied().unwrap_or(false)
+                {
+                    panic!(
+                        "pass '{pass}' orphaned consumed tensor {i} ({})",
+                        g.tensor(i).name
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn renumber(g: &mut Graph) {
+    for (i, op) in g.ops.iter_mut().enumerate() {
+        op.id = i;
+    }
+}
+
+/// The rewrite driver: match `pattern`, hand each match to `rewrite`,
+/// and iterate to a fixed point.  Returns the number of accepted
+/// rewrites.
+///
+/// Per accepted rewrite the driver renumbers op ids, re-validates the
+/// graph, and enforces the output shape/dtype contract (panicking on
+/// violation — a pass bug, never a graph condition).  `rewrite` may
+/// reject a site by returning `false`, in which case it must leave
+/// the graph untouched; rejected sites are re-offered on the next
+/// scan only if the graph changed since.
+pub fn apply<F>(g: &mut Graph, name: &str, pattern: &Pattern, mut rewrite: F) -> usize
+where
+    F: FnMut(&mut Graph, &Match) -> bool,
+{
+    renumber(g);
+    let mut applied = 0usize;
+    // scan resume point: rejecting callbacks leave the graph untouched,
+    // so after a rejection the scan continues past that anchor instead
+    // of replaying the whole match list
+    let mut start = 0usize;
+    // contract snapshot, refreshed only when the graph actually changes
+    let mut before = OutputSnapshot::take(g);
+    loop {
+        let m = match next_match(g, pattern, start) {
+            Some(m) => m,
+            // no match at or after `start`, and every earlier anchor was
+            // rejected against this exact graph: fixed point reached
+            None => return applied,
+        };
+        let anchor = m.anchor;
+        if rewrite(g, &m) {
+            renumber(g);
+            before.check(g, name);
+            applied += 1;
+            assert!(
+                applied <= MAX_APPLICATIONS,
+                "pass '{name}' did not reach a fixed point"
+            );
+            start = 0; // op ids are stale; restart the scan
+            before = OutputSnapshot::take(g);
+        } else {
+            start = anchor + 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn chain() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8]);
+        let t = b.unary(OpType::Tanh, "t1", x);
+        let s = b.unary(OpType::Logistic, "s1", t);
+        b.unary(OpType::Tanh, "t2", s);
+        b.finish()
+    }
+
+    #[test]
+    fn matches_by_kind_and_walks_producers() {
+        let g = chain();
+        // Tanh fed by a Logistic: only t2 qualifies
+        let p = Pattern::new(
+            PatternNode::op(OpType::Tanh)
+                .operand(0, OperandPattern::Produced(PatternNode::op(OpType::Logistic).named("sig"))),
+        );
+        let ms = find_matches(&g, &p);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(g.ops[ms[0].anchor].name, "t2");
+        assert_eq!(g.ops[ms[0].ops["sig"]].name, "s1");
+    }
+
+    #[test]
+    fn tensor_bindings_unify() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4]);
+        let y = b.input("y", &[4]);
+        let sq = b.binary(OpType::Mul, "sq", x, x);
+        b.binary(OpType::Mul, "xy", x, y);
+        let _ = sq;
+        let g = b.finish();
+        // Mul(x, x): only the square matches
+        let p = Pattern::new(
+            PatternNode::op(OpType::Mul)
+                .operand(0, OperandPattern::Tensor("x"))
+                .operand(1, OperandPattern::Tensor("x")),
+        );
+        let ms = find_matches(&g, &p);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(g.ops[ms[0].anchor].name, "sq");
+        assert_eq!(ms[0].tensor("x"), 0);
+    }
+
+    #[test]
+    fn commutative_tries_both_orders() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4]);
+        let t = b.unary(OpType::Tanh, "t", x);
+        b.binary(OpType::Add, "a", t, x); // tanh in slot 0
+        b.binary(OpType::Add, "b", x, t); // tanh in slot 1
+        let g = b.finish();
+        let mk = || {
+            Pattern::new(
+                PatternNode::op(OpType::Add)
+                    .operand(0, OperandPattern::Tensor("raw"))
+                    .operand(1, OperandPattern::Produced(PatternNode::op(OpType::Tanh)))
+                    .commutative(),
+            )
+        };
+        let ms = find_matches(&g, &mk());
+        assert_eq!(ms.len(), 2, "both operand orders match");
+        for m in &ms {
+            assert_eq!(m.tensor("raw"), 0, "raw always binds the non-tanh input");
+        }
+    }
+
+    #[test]
+    fn single_use_rejects_shared_tensors() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4]);
+        let t = b.unary(OpType::Tanh, "t", x);
+        b.unary(OpType::Logistic, "s1", t);
+        b.unary(OpType::Logistic, "s2", t);
+        let g = b.finish();
+        let p = Pattern::new(
+            PatternNode::op(OpType::Logistic).operand(
+                0,
+                OperandPattern::Produced(PatternNode::op(OpType::Tanh).single_use()),
+            ),
+        );
+        assert!(find_matches(&g, &p).is_empty(), "tanh output has two readers");
+    }
+
+    #[test]
+    fn guards_see_the_full_binding_set() {
+        let g = chain();
+        let p = Pattern::new(PatternNode::op(OpType::Tanh).named("t"))
+            .guard(|ctx, m| ctx.graph.ops[m.op("t")].name == "t1");
+        let ms = find_matches(&g, &p);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(g.ops[ms[0].anchor].name, "t1");
+    }
+
+    #[test]
+    fn apply_reaches_fixed_point_and_validates() {
+        // rewrite Tanh -> Logistic until none remain
+        let mut g = chain();
+        let p = Pattern::new(PatternNode::op(OpType::Tanh));
+        let n = apply(&mut g, "tanh-to-logistic", &p, |g, m| {
+            g.ops[m.anchor].ty = OpType::Logistic;
+            true
+        });
+        assert_eq!(n, 2);
+        assert_eq!(g.op_histogram().get(&OpType::Tanh), None);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rejected_sites_do_not_loop_forever() {
+        let mut g = chain();
+        let p = Pattern::new(PatternNode::op(OpType::Tanh));
+        let n = apply(&mut g, "reject-all", &p, |_, _| false);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "changed the shape")]
+    fn output_shape_contract_is_enforced() {
+        let mut g = chain();
+        let p = Pattern::new(PatternNode::op(OpType::Logistic));
+        apply(&mut g, "bad-pass", &p, |g, _| {
+            // mutate the graph output's shape — the driver must catch it
+            let out = g.ops.last().unwrap().outputs[0];
+            g.tensors[out].shape = vec![2, 2, 2];
+            true
+        });
+    }
+}

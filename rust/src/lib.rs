@@ -17,9 +17,12 @@
 //!   with measured load overheads fed back into admission), the
 //!   paper's pipelined memory-constrained execution (Sec. 3.3), a
 //!   TFLite GPU-delegate simulator with the paper's Sec. 3.1 support
-//!   rules and an Adreno-740-class cost model, the graph rewrite
-//!   passes (FC->Conv, conv serialization, broadcast-free group norm,
-//!   stable GELU), and W8A16 weight storage (Sec. 3.4).
+//!   rules and an Adreno-740-class cost model, the declarative
+//!   pattern-rewrite compiler core (`graph::pattern`) with its
+//!   registry of graph passes (FC->Conv, conv serialization,
+//!   broadcast-free group norm, stable GELU, fused softmax,
+//!   attention reshape elimination), and W8A16 weight storage
+//!   (Sec. 3.4).
 //! * **L2 (python/compile, build-time only)** — a from-scratch latent
 //!   diffusion pipeline (CLIP-like text encoder, UNet, VAE decoder)
 //!   AOT-lowered to HLO text.

@@ -40,7 +40,11 @@ COMMANDS:
              compiled executables each worker keeps across evictions
              for upload-only warm reloads; 0 disables)
   analyze    delegate report           <graph.json> [--device NAME]
+             (also prints the planner's cost-gated pass schedule for
+              the device class)
   passes     pass-pipeline report      <graph.json> [--device NAME]
+             [--only name,name,...] runs a registry subset;
+             [--list] prints the registered passes and exits
              (NAME from the planner registry: adreno740, bigcore,
               hexagon, custom; default adreno740)
   info       manifest summary          [--artifacts DIR]
@@ -225,15 +229,71 @@ fn cmd_analyze(args: &[String]) -> R {
         println!("  ... and {} more", failures.len() - 25);
     }
     println!("{}", modeled_cost_line(&g, &rules, &spec));
+    // what the cost-gated planner would actually run on this class
+    let planned = planner::plan_graph(&g, &rules, &spec);
+    println!(
+        "planner schedule on {}: {} ({} rewrites, modeled {:.1} ms)",
+        spec.name,
+        planner::schedule_display(&planned.passes_used),
+        planned.rewrites,
+        planned.cost_s * 1e3
+    );
     Ok(())
 }
 
 fn cmd_passes(args: &[String]) -> R {
-    let (mut g, spec) = load_graph_cmd("passes", args)?;
+    // peel the registry-driven flags off before the shared graph loader
+    let registry = passes::PassRegistry::standard();
+    let mut rest: Vec<String> = Vec::new();
+    let mut only: Option<Vec<String>> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--list" => {
+                println!("registered passes (pipeline order):");
+                for spec in registry.specs() {
+                    println!("  {:<24} {}", spec.name, spec.summary);
+                }
+                return Ok(());
+            }
+            "--only" => {
+                i += 1;
+                let v = args.get(i).cloned().ok_or_else(|| {
+                    mobile_diffusion::Error::Config("--only needs a value".into())
+                })?;
+                let names: Vec<String> = v
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if names.is_empty() {
+                    return Err(mobile_diffusion::Error::Config(
+                        "--only needs at least one pass name (see --list)".into(),
+                    ));
+                }
+                only = Some(names);
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    let reg = match &only {
+        Some(names) => {
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            registry.subset(&refs)?
+        }
+        None => registry,
+    };
+    let (mut g, spec) = load_graph_cmd("passes", &rest)?;
     let rules = RuleSet::default();
     let before = modeled_cost_line(&g, &rules, &spec);
-    let report = passes::run_all_for(&mut g, &spec.delegate);
-    println!("pass pipeline on {} (device {}):", g.name, spec.name);
+    let report = passes::run_registry(&mut g, &rules, &spec.delegate, &reg);
+    println!(
+        "pass pipeline on {} (device {}, {} pass(es)):",
+        g.name,
+        spec.name,
+        reg.len()
+    );
     for (name, n) in &report.applied {
         println!("  {:<28} {} site(s)", name, n);
     }

@@ -1,0 +1,231 @@
+//! Cancelling Reshape/Transpose pair elimination around the attention
+//! BatchMatmuls (paper-adjacent: MobileDiffusion, arXiv 2311.16567,
+//! restructures attention layout for mobile).
+//!
+//! The exporter's layout legalization leaves identity round trips
+//! behind — a Transpose immediately undone by its inverse (adj_y
+//! folded into the K path, then unfolded), or a Reshape flattening a
+//! head tensor that the very next Reshape restores.  Each pair costs
+//! two dispatches and, for transposes, two full data-movement passes
+//! over an attention-sized tensor, for a provable no-op.
+//!
+//! Pattern: two adjacent ops of the *same* kind (`RESHAPE`/`RESHAPE`
+//! or `TRANSPOSE`/`TRANSPOSE`) where the inner result is single-use
+//! and the pair provably composes to the identity:
+//!
+//! * Reshape pair — the outer output's shape equals the inner input's
+//!   shape (row-major views compose to the identity by construction);
+//! * Transpose pair — the recorded permutations compose to the
+//!   identity (`p_inner[p_outer[i]] == i`); a transpose with no
+//!   recorded permutation is never touched.
+//!
+//! A mixed Reshape-then-Transpose pair with coincidentally matching
+//! shapes is NOT an identity and is deliberately rejected by the
+//! same-kind guard.  The rewrite re-points every consumer of the pair
+//! output at the pair input and deletes both ops; a pair whose output
+//! nothing consumes (a graph output) is left alone.
+
+use crate::graph::pattern::{self, Match, OperandPattern, Pattern, PatternNode};
+use crate::graph::{Graph, Op, OpType};
+
+use super::Pass;
+
+#[derive(Default)]
+pub struct AttentionReshapeElim;
+
+/// The permutation recorded on a Transpose (`perm0..permN` attrs),
+/// `None` when absent or malformed.
+fn perm_of(op: &Op, rank: usize) -> Option<Vec<usize>> {
+    let mut perm = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let v = op.attr_i(&format!("perm{i}"))?;
+        if v < 0 || v as usize >= rank {
+            return None;
+        }
+        perm.push(v as usize);
+    }
+    Some(perm)
+}
+
+fn elim_pattern() -> Pattern {
+    let inner = PatternNode::one_of(&[OpType::Reshape, OpType::Transpose])
+        .named("inner")
+        .single_use();
+    let root = PatternNode::one_of(&[OpType::Reshape, OpType::Transpose])
+        .named("outer")
+        .operand(0, OperandPattern::Produced(inner));
+    Pattern::new(root).guard(|ctx, m| {
+        let g = ctx.graph;
+        let outer = &g.ops[m.op("outer")];
+        let inner = &g.ops[m.op("inner")];
+        if outer.ty != inner.ty {
+            return false;
+        }
+        let out_t = outer.outputs[0];
+        // a pair nothing reads is a graph output; leave it in place
+        if ctx.consumer_count(out_t) == 0 {
+            return false;
+        }
+        let src = inner.inputs[0];
+        if g.tensor(out_t).shape != g.tensor(src).shape
+            || g.tensor(out_t).dtype != g.tensor(src).dtype
+        {
+            return false;
+        }
+        match outer.ty {
+            OpType::Transpose => {
+                let rank = g.tensor(src).rank();
+                match (perm_of(inner, rank), perm_of(outer, rank)) {
+                    (Some(pi), Some(po)) => {
+                        (0..rank).all(|i| pi[po[i]] == i)
+                    }
+                    _ => false,
+                }
+            }
+            // Reshape round trip: same shape in row-major order is the
+            // identity by construction
+            _ => true,
+        }
+    })
+}
+
+impl Pass for AttentionReshapeElim {
+    fn name(&self) -> &'static str {
+        "attention-reshape-elim"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let pat = elim_pattern();
+        pattern::apply(g, self.name(), &pat, |g, m| {
+            rewrite_site(g, m);
+            true
+        })
+    }
+}
+
+/// Re-point every reader of the pair output at the pair input and
+/// delete both ops.
+fn rewrite_site(g: &mut Graph, m: &Match) {
+    let outer_id = m.op("outer");
+    let inner_id = m.op("inner");
+    let (src, out_t) = {
+        let outer = g.ops.iter().find(|o| o.id == outer_id).unwrap();
+        let inner = g.ops.iter().find(|o| o.id == inner_id).unwrap();
+        (inner.inputs[0], outer.outputs[0])
+    };
+    for op in g.ops.iter_mut() {
+        for inp in op.inputs.iter_mut() {
+            if *inp == out_t {
+                *inp = src;
+            }
+        }
+    }
+    g.ops.retain(|o| o.id != outer_id && o.id != inner_id);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn cancels_transpose_and_reshape_pairs_in_attention() {
+        use crate::graph::OpType;
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 64, 32]);
+        b.attention("attn", x, 4);
+        let mut g = b.finish();
+        let before = g.ops.len();
+        let hist_before = g.op_histogram();
+        let n = AttentionReshapeElim.run(&mut g);
+        assert_eq!(n, 2, "one transpose pair (K path) + one reshape pair (V path)");
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), before - 4);
+        let hist = g.op_histogram();
+        assert_eq!(hist[&OpType::Transpose], hist_before[&OpType::Transpose] - 2);
+        assert_eq!(hist[&OpType::Reshape], hist_before[&OpType::Reshape] - 2);
+        // the V-path flatten/unflatten round trip is gone entirely; on
+        // the K path's triple of identical [0,2,1] transposes the scan
+        // cancels the *first* adjacent pair (k_swap, k_adj), leaving
+        // k_unadj as the one real [H,N,D] -> [H,D,N] transpose QK^T
+        // needs
+        assert!(!g.ops.iter().any(|o| o.name.ends_with("/v_flat")
+            || o.name.ends_with("/v_unflat")));
+        assert!(!g.ops.iter().any(|o| o.name.ends_with("/k_swap")
+            || o.name.ends_with("/k_adj")));
+        assert!(g.ops.iter().any(|o| o.name.ends_with("/k_unadj")));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 64, 32]);
+        b.attention("attn", x, 4);
+        let mut g = b.finish();
+        AttentionReshapeElim.run(&mut g);
+        assert_eq!(AttentionReshapeElim.run(&mut g), 0);
+    }
+
+    #[test]
+    fn non_inverse_transposes_survive() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 4]);
+        let t1 = b.transpose("t1", x, &[1, 0, 2]);
+        let t2 = b.transpose("t2", t1, &[0, 2, 1]); // [3,2,4] -> [3,4,2]
+        b.unary(OpType::Tanh, "post", t2);
+        let mut g = b.finish();
+        assert_eq!(AttentionReshapeElim.run(&mut g), 0);
+        assert_eq!(g.op_histogram()[&OpType::Transpose], 2);
+    }
+
+    #[test]
+    fn mixed_kind_pairs_survive_even_with_matching_shapes() {
+        // Transpose then Reshape back to the original shape is NOT an
+        // identity (element order differs) — must not be cancelled
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 4]);
+        let t = b.transpose("t", x, &[1, 0, 2]); // [3,2,4]
+        let r = b.reshape("r", t, &[2, 3, 4]); // same shape as x again
+        b.unary(OpType::Tanh, "post", r);
+        let mut g = b.finish();
+        assert_eq!(AttentionReshapeElim.run(&mut g), 0);
+    }
+
+    #[test]
+    fn shared_inner_tensor_blocks_elimination() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 4]);
+        let t1 = b.transpose("t1", x, &[1, 0, 2]);
+        let t2 = b.transpose("t2", t1, &[1, 0, 2]); // inverse pair
+        b.unary(OpType::Tanh, "post", t2);
+        b.unary(OpType::Logistic, "spy", t1); // second reader of t1
+        let mut g = b.finish();
+        assert_eq!(AttentionReshapeElim.run(&mut g), 0);
+    }
+
+    #[test]
+    fn reshape_round_trip_is_cancelled_and_repointed() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 4]);
+        let flat = b.reshape("flat", x, &[6, 4]);
+        let back = b.reshape("back", flat, &[2, 3, 4]);
+        let out = b.unary(OpType::Tanh, "post", back);
+        let _ = out;
+        let mut g = b.finish();
+        assert_eq!(AttentionReshapeElim.run(&mut g), 1);
+        g.validate().unwrap();
+        let post = g.ops.iter().find(|o| o.name == "post").unwrap();
+        assert_eq!(post.inputs[0], 0, "tanh reads the original x");
+        assert_eq!(g.op_histogram().get(&OpType::Reshape), None);
+    }
+
+    #[test]
+    fn graph_output_pairs_are_left_alone() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 4]);
+        let t1 = b.transpose("t1", x, &[1, 0, 2]);
+        b.transpose("t2", t1, &[1, 0, 2]); // pair output IS the graph output
+        let mut g = b.finish();
+        assert_eq!(AttentionReshapeElim.run(&mut g), 0);
+    }
+}

@@ -8,10 +8,15 @@
 //! preferable"), noting equal latency — this pass does the same by
 //! default, with an optional `only_failing` mode used by the ablation
 //! bench.
+//!
+//! Pattern: a bare `FULLY_CONNECTED` anchor (plus the delegate-verdict
+//! predicate in `only_failing` mode); the rewrite re-types the op in
+//! place and splices the surrounding reshapes.
 
 use std::collections::BTreeMap;
 
 use crate::delegate::RuleSet;
+use crate::graph::pattern::{self, Pattern, PatternNode};
 use crate::graph::{Graph, OpType};
 
 use super::Pass;
@@ -34,108 +39,105 @@ impl Pass for FcToConv {
     }
 
     fn run(&self, g: &mut Graph) -> usize {
-        let targets: Vec<usize> = g
-            .ops
-            .iter()
-            .filter(|op| op.ty == OpType::FullyConnected)
-            .filter(|op| !self.only_failing || !self.rules.check(g, op).ok())
-            .map(|op| op.id)
-            .collect();
-
-        for &op_id in &targets {
-            let pos0 = g.ops.iter().position(|o| o.id == op_id).unwrap();
-            let (x_id, w_id, b_id, out_id, name) = {
-                let op = &g.ops[pos0];
-                let mut acts = op.inputs.iter().filter(|&&t| !g.tensor(t).is_const);
-                let x = *acts.next().expect("fc has input");
-                let mut consts = op.inputs.iter().filter(|&&t| g.tensor(t).is_const);
-                let w = consts.next().copied();
-                let b = consts.next().copied();
-                (x, w, b, op.outputs[0], op.name.clone())
-            };
-            let x_shape = g.tensor(x_id).shape.clone();
-            let out_shape = g.tensor(out_id).shape.clone();
-            let d_in = *x_shape.last().unwrap();
-            let d_out = *out_shape.last().unwrap();
-            let rows: usize = x_shape[..x_shape.len() - 1].iter().product();
-            let act_dtype = g.tensor(x_id).dtype;
-
-            // Reshape x -> (1, 1, rows, d_in)
-            let x4 = g.add_tensor(
-                &format!("{name}/as_nhwc"),
-                &[1, 1, rows, d_in],
-                act_dtype,
-                false,
-            );
-            // weight (d_in, d_out) viewed as 1x1 HWIO kernel
-            let w4 = match w_id {
-                Some(w) => {
-                    let dt = g.tensor(w).dtype;
-                    g.add_tensor(&format!("{name}/w_1x1"), &[1, 1, d_in, d_out], dt, true)
-                }
-                None => g.add_tensor(
-                    &format!("{name}/w_1x1"),
-                    &[1, 1, d_in, d_out],
-                    crate::graph::DType::F32,
-                    true,
-                ),
-            };
-            let y4 = g.add_tensor(
-                &format!("{name}/conv_out"),
-                &[1, 1, rows, d_out],
-                act_dtype,
-                false,
-            );
-
-            // rewrite in place: FC op becomes the Conv2d; add reshapes
-            // around it by splicing new ops into the op list.
-            let mut attrs = BTreeMap::new();
-            attrs.insert("kernel".to_string(), 1.0);
-            attrs.insert("stride".to_string(), 1.0);
-            attrs.insert("from_fc".to_string(), 1.0);
-
-            let reshape_in_name = format!("{name}/reshape_in");
-            let reshape_out_name = format!("{name}/reshape_out");
-            let conv_inputs = match b_id {
-                Some(b) => vec![x4, w4, b],
-                None => vec![x4, w4],
-            };
-
-            let op = &mut g.ops[pos0];
-            op.ty = OpType::Conv2d;
-            op.inputs = conv_inputs;
-            op.outputs = vec![y4];
-            op.attrs = attrs;
-
-            // splice Reshape ops before/after while keeping topo order:
-            // insert reshape_in right before op_id, reshape_out right after.
-            // inserted ops get a sentinel id; ids are renumbered once at
-            // the end so the captured `targets` ids stay valid throughout
-            let reshape_in = crate::graph::Op {
-                id: usize::MAX,
-                ty: OpType::Reshape,
-                name: reshape_in_name,
-                inputs: vec![x_id],
-                outputs: vec![x4],
-                attrs: BTreeMap::new(),
-            };
-            let reshape_out = crate::graph::Op {
-                id: usize::MAX,
-                ty: OpType::Reshape,
-                name: reshape_out_name,
-                inputs: vec![y4],
-                outputs: vec![out_id],
-                attrs: BTreeMap::new(),
-            };
-            let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
-            g.ops.insert(pos, reshape_in);
-            g.ops.insert(pos + 2, reshape_out);
-        }
-        for (i, op) in g.ops.iter_mut().enumerate() {
-            op.id = i;
-        }
-        targets.len()
+        let only_failing = self.only_failing;
+        let rules = self.rules.clone();
+        let pat = Pattern::new(PatternNode::op(OpType::FullyConnected).pred(
+            move |ctx, op| !only_failing || !rules.check(ctx.graph, op).ok(),
+        ));
+        pattern::apply(g, self.name(), &pat, |g, m| {
+            rewrite_site(g, m.anchor);
+            true
+        })
     }
+}
+
+/// Convert the FC at `op_id` into Reshape / 1x1 Conv2D / Reshape.
+fn rewrite_site(g: &mut Graph, op_id: usize) {
+    // driver invariant: op ids equal positions until we splice below
+    let pos0 = op_id;
+    let (x_id, w_id, b_id, out_id, name) = {
+        let op = &g.ops[pos0];
+        let mut acts = op.inputs.iter().filter(|&&t| !g.tensor(t).is_const);
+        let x = *acts.next().expect("fc has input");
+        let mut consts = op.inputs.iter().filter(|&&t| g.tensor(t).is_const);
+        let w = consts.next().copied();
+        let b = consts.next().copied();
+        (x, w, b, op.outputs[0], op.name.clone())
+    };
+    let x_shape = g.tensor(x_id).shape.clone();
+    let out_shape = g.tensor(out_id).shape.clone();
+    let d_in = *x_shape.last().unwrap();
+    let d_out = *out_shape.last().unwrap();
+    let rows: usize = x_shape[..x_shape.len() - 1].iter().product();
+    let act_dtype = g.tensor(x_id).dtype;
+
+    // Reshape x -> (1, 1, rows, d_in)
+    let x4 = g.add_tensor(
+        &format!("{name}/as_nhwc"),
+        &[1, 1, rows, d_in],
+        act_dtype,
+        false,
+    );
+    // weight (d_in, d_out) viewed as 1x1 HWIO kernel
+    let w4 = match w_id {
+        Some(w) => {
+            let dt = g.tensor(w).dtype;
+            g.add_tensor(&format!("{name}/w_1x1"), &[1, 1, d_in, d_out], dt, true)
+        }
+        None => g.add_tensor(
+            &format!("{name}/w_1x1"),
+            &[1, 1, d_in, d_out],
+            crate::graph::DType::F32,
+            true,
+        ),
+    };
+    let y4 = g.add_tensor(
+        &format!("{name}/conv_out"),
+        &[1, 1, rows, d_out],
+        act_dtype,
+        false,
+    );
+
+    // rewrite in place: FC op becomes the Conv2d; add reshapes
+    // around it by splicing new ops into the op list.
+    let mut attrs = BTreeMap::new();
+    attrs.insert("kernel".to_string(), 1.0);
+    attrs.insert("stride".to_string(), 1.0);
+    attrs.insert("from_fc".to_string(), 1.0);
+
+    let reshape_in_name = format!("{name}/reshape_in");
+    let reshape_out_name = format!("{name}/reshape_out");
+    let conv_inputs = match b_id {
+        Some(b) => vec![x4, w4, b],
+        None => vec![x4, w4],
+    };
+
+    let op = &mut g.ops[pos0];
+    op.ty = OpType::Conv2d;
+    op.inputs = conv_inputs;
+    op.outputs = vec![y4];
+    op.attrs = attrs;
+
+    // splice Reshape ops before/after while keeping topo order; the
+    // driver renumbers op ids after the rewrite
+    let reshape_in = crate::graph::Op {
+        id: usize::MAX,
+        ty: OpType::Reshape,
+        name: reshape_in_name,
+        inputs: vec![x_id],
+        outputs: vec![x4],
+        attrs: BTreeMap::new(),
+    };
+    let reshape_out = crate::graph::Op {
+        id: usize::MAX,
+        ty: OpType::Reshape,
+        name: reshape_out_name,
+        inputs: vec![y4],
+        outputs: vec![out_id],
+        attrs: BTreeMap::new(),
+    };
+    g.ops.insert(pos0, reshape_in);
+    g.ops.insert(pos0 + 2, reshape_out);
 }
 
 #[cfg(test)]

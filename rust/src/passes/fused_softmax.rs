@@ -1,0 +1,217 @@
+//! Softmax-island fusion (paper-adjacent: "Speed Is All You Need",
+//! arXiv 2304.11267, Sec. 3 — fused softmax kernels).
+//!
+//! The TFLite export of attention softmax is a three-op island over
+//! the logits: `Exp -> Sum(keepdims) -> Div`, with the full-size
+//! exponentials tensor written to memory twice (once by Exp, read
+//! again by both Sum and Div).  On memory-bound mobile hardware the
+//! island pays three dispatches and ~5 logits-sized memory round
+//! trips.  This pass collapses it into a single [`OpType::FusedSoftmax`]
+//! op — one dispatch, one streaming pass — whose memory-bound cost
+//! entry lives in `delegate::cost`.
+//!
+//! Pattern (a multi-consumer island — `Exp`'s output feeds both the
+//! reduction and the division):
+//!
+//! ```text
+//! Div( Exp(x), Sum(Exp(x)) )     consumers(exp) == {Sum, Div} exactly
+//! ```
+//!
+//! The plain single-op `SOFTMAX` is deliberately left alone: it is
+//! already one dispatch, and re-typing it would change nothing the
+//! cost model can see.
+
+use std::collections::BTreeMap;
+
+use crate::graph::pattern::{self, Match, Pattern, PatternNode};
+use crate::graph::{Graph, OpType};
+
+use super::Pass;
+
+#[derive(Default)]
+pub struct FusedSoftmaxPass;
+
+fn softmax_pattern() -> Pattern {
+    let exp = PatternNode::op(OpType::Exp).named("exp");
+    let sum = PatternNode::op(OpType::Sum).named("sum").single_use();
+    let root = PatternNode::op(OpType::Div)
+        .named("div")
+        .operand(0, pattern::OperandPattern::Produced(exp))
+        .operand(1, pattern::OperandPattern::Produced(sum));
+    Pattern::new(root).guard(|ctx, m| {
+        let g = ctx.graph;
+        let exp = &g.ops[m.op("exp")];
+        let sum = &g.ops[m.op("sum")];
+        let div = &g.ops[m.op("div")];
+        let exp_out = exp.outputs[0];
+        // the reduction must consume the same exponentials the division
+        // normalizes
+        if sum.inputs.first().copied() != Some(exp_out) {
+            return false;
+        }
+        // the exponentials must feed exactly the island (Sum + Div):
+        // with any other reader, Exp has to survive and fusing buys
+        // nothing
+        let mut readers: Vec<usize> = ctx.consumers[exp_out].clone();
+        readers.sort_unstable();
+        let mut island = [sum.id, div.id];
+        island.sort_unstable();
+        if readers != island {
+            return false;
+        }
+        // keepdims last-axis reduction shape: exp shape with last dim 1
+        let es = &g.tensor(exp_out).shape;
+        let ss = &g.tensor(sum.outputs[0]).shape;
+        if es.is_empty()
+            || ss.len() != es.len()
+            || *ss.last().unwrap() != 1
+            || ss[..ss.len() - 1] != es[..es.len() - 1]
+        {
+            return false;
+        }
+        // softmax preserves the logits' shape and dtype end to end
+        let x = exp.inputs[0];
+        g.tensor(div.outputs[0]).shape == g.tensor(x).shape
+            && g.tensor(div.outputs[0]).dtype == g.tensor(x).dtype
+    })
+}
+
+impl Pass for FusedSoftmaxPass {
+    fn name(&self) -> &'static str {
+        "fused-softmax"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let pat = softmax_pattern();
+        pattern::apply(g, self.name(), &pat, |g, m| {
+            rewrite_site(g, m);
+            true
+        })
+    }
+}
+
+/// Replace the exp/sum/div island with one FusedSoftmax op producing
+/// the island's output tensor from the island's input.
+fn rewrite_site(g: &mut Graph, m: &Match) {
+    let exp_id = m.op("exp");
+    let sum_id = m.op("sum");
+    let div_id = m.op("div");
+    // driver invariant: op ids equal positions until we retain below
+    let exp_pos = exp_id;
+    let (x, out, stem) = {
+        let exp = &g.ops[exp_pos];
+        let div = &g.ops[div_id];
+        let stem = div.name.trim_end_matches("/div").to_string();
+        (exp.inputs[0], div.outputs[0], stem)
+    };
+    let mut attrs = BTreeMap::new();
+    // last-axis softmax, the only form the pattern admits
+    attrs.insert("axis".to_string(), (g.tensor(x).rank() as f64) - 1.0);
+    let fused = crate::graph::Op {
+        id: usize::MAX,
+        ty: OpType::FusedSoftmax,
+        name: format!("{stem}/fused"),
+        inputs: vec![x],
+        outputs: vec![out],
+        attrs,
+    };
+    g.ops.retain(|o| o.id != exp_id && o.id != sum_id && o.id != div_id);
+    let at = exp_pos.min(g.ops.len());
+    g.ops.insert(at, fused);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delegate::{op_latency, segment_cost, RuleSet, GPU_ADRENO740};
+    use crate::graph::builder::GraphBuilder;
+
+    fn island_graph() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("logits", &[4, 64, 64]);
+        let a = b.softmax_decomposed("sm", x);
+        b.unary(OpType::Tanh, "post", a);
+        b.finish()
+    }
+
+    #[test]
+    fn fuses_the_island() {
+        let mut g = island_graph();
+        let n = FusedSoftmaxPass.run(&mut g);
+        assert_eq!(n, 1);
+        g.validate().unwrap();
+        let hist = g.op_histogram();
+        assert_eq!(hist.get(&OpType::Exp), None);
+        assert_eq!(hist.get(&OpType::Sum), None);
+        assert_eq!(hist.get(&OpType::Div), None);
+        assert_eq!(hist[&OpType::FusedSoftmax], 1);
+        // the fused op reads the logits and produces the island output
+        let f = g.ops.iter().find(|o| o.ty == OpType::FusedSoftmax).unwrap();
+        assert_eq!(g.tensor(f.inputs[0]).name, "logits");
+        assert_eq!(f.attrs["axis"], 2.0);
+    }
+
+    #[test]
+    fn idempotent_and_consumer_preserving() {
+        let mut g = island_graph();
+        FusedSoftmaxPass.run(&mut g);
+        let ops_after = g.ops.len();
+        assert_eq!(FusedSoftmaxPass.run(&mut g), 0);
+        assert_eq!(g.ops.len(), ops_after);
+        // downstream tanh still reads the softmax output
+        let f = g.ops.iter().find(|o| o.ty == OpType::FusedSoftmax).unwrap();
+        let post = g.ops.iter().find(|o| o.name == "post").unwrap();
+        assert_eq!(post.inputs[0], f.outputs[0]);
+    }
+
+    #[test]
+    fn extra_exp_reader_blocks_fusion() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("logits", &[4, 16, 16]);
+        let a = b.softmax_decomposed("sm", x);
+        let _ = a;
+        // a second reader of the exponentials outside the island
+        let exp_out = b.g.ops.iter().find(|o| o.ty == OpType::Exp).unwrap().outputs[0];
+        b.unary(OpType::Tanh, "spy", exp_out);
+        let mut g = b.finish();
+        assert_eq!(FusedSoftmaxPass.run(&mut g), 0, "exp must survive");
+    }
+
+    #[test]
+    fn plain_softmax_op_is_left_alone() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 16, 16]);
+        b.unary(OpType::Softmax, "sm", x);
+        let mut g = b.finish();
+        assert_eq!(FusedSoftmaxPass.run(&mut g), 0);
+        assert_eq!(g.op_histogram()[&OpType::Softmax], 1);
+    }
+
+    #[test]
+    fn fused_op_is_memory_bound_and_cheaper_than_the_island() {
+        let rules = RuleSet::default();
+        let g_island = island_graph();
+        let mut g_fused = island_graph();
+        FusedSoftmaxPass.run(&mut g_fused);
+        // full-graph GPU cost with elementwise fusion, like the
+        // delegate would run it
+        let all_island: Vec<usize> = (0..g_island.ops.len()).collect();
+        let all_fused: Vec<usize> = (0..g_fused.ops.len()).collect();
+        let t_island = segment_cost(&g_island, &all_island, &GPU_ADRENO740, true);
+        let t_fused = segment_cost(&g_fused, &all_fused, &GPU_ADRENO740, true);
+        assert!(
+            t_fused < t_island,
+            "fused {t_fused} !< island {t_island}"
+        );
+        // and the fused op's roofline is the memory side: latency tracks
+        // bytes/bandwidth, not the 5-flops-per-element numerator
+        let f = g_fused.ops.iter().find(|o| o.ty == OpType::FusedSoftmax).unwrap();
+        let bytes = (g_fused.tensor(f.inputs[0]).bytes()
+            + g_fused.tensor(f.outputs[0]).bytes()) as f64;
+        let t = op_latency(&g_fused, f, &GPU_ADRENO740);
+        let mem = GPU_ADRENO740.dispatch + bytes / GPU_ADRENO740.bandwidth;
+        assert!((t - mem).abs() < 1e-9, "memory-bound: {t} vs {mem}");
+        // coverage is untouched: every op involved delegates
+        assert!(rules.failures(&g_fused).is_empty());
+    }
+}

@@ -1,15 +1,28 @@
 //! Numerically stable GELU rewrite (paper Sec. 3.2 / Fig. 8).
 //!
 //! Detects the decomposed tanh-GELU idiom (sq -> cube -> scale -> add ->
-//! scale -> tanh -> 1+ -> 0.5x*) by its tanh anchor and inserts the
-//! gamma_M clamp — a Minimum followed by a Maximum — in front of the
-//! cubic chain, re-pointing the cube/add inputs at the clamped value.
-//! The final `0.5 * x` product keeps reading the *unclamped* x, exactly
-//! as in the paper's formula: GELU(x) ~= 0.5 x (1 + tanh(...gamma(x)...)).
+//! scale -> tanh -> 1+ -> 0.5x*) and inserts the gamma_M clamp — a
+//! Minimum followed by a Maximum — in front of the cubic chain,
+//! re-pointing the cube/add inputs at the clamped value.  The final
+//! `0.5 * x` product keeps reading the *unclamped* x, exactly as in the
+//! paper's formula: GELU(x) ~= 0.5 x (1 + tanh(...gamma(x)...)).
+//!
+//! Pattern (anchored at the tanh, walking producers backwards, with
+//! `x` unified across the whole cubic chain):
+//!
+//! ```text
+//! Tanh( Mul( Add( x, Mul( Mul( Mul(x, x), x ) ) ) ) )
+//!                 ^commutative  ^commutative ^sq: both slots unify x
+//! ```
+//!
+//! A guard skips sites whose `x` is already produced by a `Maximum`
+//! (the clamp), making the pass idempotent under the driver's
+//! fixed-point iteration.
 
 use std::collections::BTreeMap;
 
-use crate::graph::{Graph, OpType, TensorId};
+use crate::graph::pattern::{self, Match, OperandPattern, Pattern, PatternNode};
+use crate::graph::{Graph, OpType};
 
 use super::Pass;
 
@@ -24,101 +37,41 @@ impl Default for StableGelu {
     }
 }
 
-/// One detected GELU site: the ops that read the raw x inside the cubic
-/// chain (sq, cube, add), which must be re-pointed at the clamp output.
-struct Site {
-    x: TensorId,
-    /// (op_id, input_slot) pairs currently reading `x` in the chain
-    reads: Vec<(usize, usize)>,
-    anchor_pos: usize, // position in op list of the first chain op
-    name: String,
-}
-
-fn find_sites(g: &Graph) -> Vec<Site> {
-    let mut sites = Vec::new();
-    let producers = g.producers();
-    for op in &g.ops {
-        if op.ty != OpType::Tanh {
-            continue;
-        }
-        // walk backwards: tanh <- scale(Mul) <- add(Add{x, scale_cube})
-        let scale = match producers[op.inputs[0]] {
-            Some(p) if g.ops[p].ty == OpType::Mul => p,
-            _ => continue,
-        };
-        let add = match producers[g.ops[scale].inputs[0]] {
-            Some(p) if g.ops[p].ty == OpType::Add => p,
-            _ => continue,
-        };
-        if g.ops[add].inputs.len() != 2 {
-            continue;
-        }
-        // add's inputs: x and scale_cube(Mul <- cube(Mul{sq, x}) <- sq(Mul{x,x}))
-        let (x, sc) = {
-            let a = g.ops[add].inputs[0];
-            let b = g.ops[add].inputs[1];
-            // scale_cube is produced by a Mul whose chain bottoms out at x
-            match (producers[a], producers[b]) {
-                (_, Some(p)) if g.ops[p].ty == OpType::Mul && is_cubic(g, p, a, &producers) => (a, p),
-                (Some(p), _) if g.ops[p].ty == OpType::Mul && is_cubic(g, p, b, &producers) => (b, p),
-                _ => continue,
-            }
-        };
-        // already stable? x produced by a Maximum (the clamp) -> skip
-        if let Some(p) = producers[x] {
-            if g.ops[p].ty == OpType::Maximum {
-                continue;
-            }
-        }
-        // gather the read sites of x in the chain: sq (both slots), cube,
-        // add
-        let cube = producers[g.ops[sc].inputs[0]].unwrap();
-        let sq = producers[g.ops[cube].inputs[0]].unwrap();
-        let mut reads = Vec::new();
-        for (oid, op2) in [(sq, &g.ops[sq]), (cube, &g.ops[cube]), (add, &g.ops[add])] {
-            for (slot, &inp) in op2.inputs.iter().enumerate() {
-                if inp == x {
-                    reads.push((oid, slot));
-                }
-            }
-        }
-        if reads.is_empty() {
-            continue;
-        }
-        let anchor_pos = g.ops.iter().position(|o| o.id == sq).unwrap();
-        let name = op.name.trim_end_matches("/tanh").to_string();
-        sites.push(Site { x, reads, anchor_pos, name });
-    }
-    sites
-}
-
-/// Is `mul_op` the scale-cube of a cubic chain rooted at `x`?
-/// pattern: sc = Mul(cube); cube = Mul(sq, x); sq = Mul(x, x)
-fn is_cubic(g: &Graph, sc: usize, x: TensorId, producers: &[Option<usize>]) -> bool {
-    let sc_op = &g.ops[sc];
-    if sc_op.inputs.len() != 1 {
-        return false;
-    }
-    let cube = match producers[sc_op.inputs[0]] {
-        Some(p) if g.ops[p].ty == OpType::Mul => p,
-        _ => return false,
-    };
-    let cube_op = &g.ops[cube];
-    if cube_op.inputs.len() != 2 || !cube_op.inputs.contains(&x) {
-        return false;
-    }
-    let sq_t = cube_op.inputs.iter().find(|&&t| t != x).copied();
-    let sq_t = match sq_t {
-        Some(t) => t,
-        None => cube_op.inputs[0], // x * x * x with shared ids
-    };
-    match producers[sq_t] {
-        Some(p) => {
-            let sq_op = &g.ops[p];
-            sq_op.ty == OpType::Mul && sq_op.inputs.iter().all(|&t| t == x)
-        }
-        None => false,
-    }
+fn gelu_pattern() -> Pattern {
+    // sq = Mul(x, x): both operand slots unify against the same tensor
+    let sq = PatternNode::op(OpType::Mul)
+        .named("sq")
+        .operand(0, OperandPattern::Tensor("x"))
+        .operand(1, OperandPattern::Tensor("x"));
+    // cube = Mul(sq, x), either operand order
+    let cube = PatternNode::op(OpType::Mul)
+        .named("cube")
+        .operand(0, OperandPattern::Produced(sq))
+        .operand(1, OperandPattern::Tensor("x"))
+        .commutative();
+    // sc = scale_cube: unary Mul of the cube
+    let sc = PatternNode::op(OpType::Mul)
+        .named("sc")
+        .pred(|_, op| op.inputs.len() == 1)
+        .operand(0, OperandPattern::Produced(cube));
+    // add = Add(x, sc), either operand order
+    let add = PatternNode::op(OpType::Add)
+        .named("add")
+        .pred(|_, op| op.inputs.len() == 2)
+        .operand(0, OperandPattern::Tensor("x"))
+        .operand(1, OperandPattern::Produced(sc))
+        .commutative();
+    let scale = PatternNode::op(OpType::Mul)
+        .named("scale")
+        .operand(0, OperandPattern::Produced(add));
+    let root = PatternNode::op(OpType::Tanh)
+        .named("tanh")
+        .operand(0, OperandPattern::Produced(scale));
+    // already stable? x produced by a Maximum (the clamp) -> skip
+    Pattern::new(root).guard(|ctx, m| match ctx.producer_op(m.tensor("x")) {
+        Some(op) => op.ty != OpType::Maximum,
+        None => true,
+    })
 }
 
 impl Pass for StableGelu {
@@ -127,52 +80,63 @@ impl Pass for StableGelu {
     }
 
     fn run(&self, g: &mut Graph) -> usize {
-        // collect first: sites reference op ids, and we renumber at the end
-        let sites = find_sites(g);
-        // process in reverse op order so positions stay valid while splicing
-        let mut ordered: Vec<&Site> = sites.iter().collect();
-        ordered.sort_by_key(|s| std::cmp::Reverse(s.anchor_pos));
-
-        for site in &ordered {
-            let dt = g.tensor(site.x).dtype;
-            let shape = g.tensor(site.x).shape.clone();
-            let min_t =
-                g.add_tensor(&format!("{}/clip_min", site.name), &shape, dt, false);
-            let max_t =
-                g.add_tensor(&format!("{}/clip_max", site.name), &shape, dt, false);
-            let mut min_attrs = BTreeMap::new();
-            min_attrs.insert("value".to_string(), self.clip);
-            let mut max_attrs = BTreeMap::new();
-            max_attrs.insert("value".to_string(), -self.clip);
-
-            let min_op = crate::graph::Op {
-                id: usize::MAX,
-                ty: OpType::Minimum,
-                name: format!("{}/gamma_min", site.name),
-                inputs: vec![site.x],
-                outputs: vec![min_t],
-                attrs: min_attrs,
-            };
-            let max_op = crate::graph::Op {
-                id: usize::MAX,
-                ty: OpType::Maximum,
-                name: format!("{}/gamma_max", site.name),
-                inputs: vec![min_t],
-                outputs: vec![max_t],
-                attrs: max_attrs,
-            };
-            // re-point the chain's x reads at the clamp output
-            for &(op_id, slot) in &site.reads {
-                let pos = g.ops.iter().position(|o| o.id == op_id).unwrap();
-                g.ops[pos].inputs[slot] = max_t;
-            }
-            g.ops.splice(site.anchor_pos..site.anchor_pos, [min_op, max_op]);
-        }
-        for (i, op) in g.ops.iter_mut().enumerate() {
-            op.id = i;
-        }
-        sites.len()
+        let pat = gelu_pattern();
+        let clip = self.clip;
+        pattern::apply(g, self.name(), &pat, |g, m| {
+            rewrite_site(g, m, clip);
+            true
+        })
     }
+}
+
+/// Insert the gamma_M clamp in front of the cubic chain of one site
+/// and re-point the chain's x reads at the clamped value.
+fn rewrite_site(g: &mut Graph, m: &Match, clip: f64) {
+    let x = m.tensor("x");
+    let chain = [m.op("sq"), m.op("cube"), m.op("add")];
+    // driver invariant: op ids equal positions until we splice below
+    let mut reads = Vec::new();
+    for &oid in &chain {
+        for (slot, &inp) in g.ops[oid].inputs.iter().enumerate() {
+            if inp == x {
+                reads.push((oid, slot));
+            }
+        }
+    }
+    let anchor_pos = m.op("sq");
+    let tanh_name = g.ops[m.op("tanh")].name.clone();
+    let name = tanh_name.trim_end_matches("/tanh").to_string();
+
+    let dt = g.tensor(x).dtype;
+    let shape = g.tensor(x).shape.clone();
+    let min_t = g.add_tensor(&format!("{name}/clip_min"), &shape, dt, false);
+    let max_t = g.add_tensor(&format!("{name}/clip_max"), &shape, dt, false);
+    let mut min_attrs = BTreeMap::new();
+    min_attrs.insert("value".to_string(), clip);
+    let mut max_attrs = BTreeMap::new();
+    max_attrs.insert("value".to_string(), -clip);
+
+    let min_op = crate::graph::Op {
+        id: usize::MAX,
+        ty: OpType::Minimum,
+        name: format!("{name}/gamma_min"),
+        inputs: vec![x],
+        outputs: vec![min_t],
+        attrs: min_attrs,
+    };
+    let max_op = crate::graph::Op {
+        id: usize::MAX,
+        ty: OpType::Maximum,
+        name: format!("{name}/gamma_max"),
+        inputs: vec![min_t],
+        outputs: vec![max_t],
+        attrs: max_attrs,
+    };
+    // re-point the chain's x reads at the clamp output
+    for &(op_id, slot) in &reads {
+        g.ops[op_id].inputs[slot] = max_t;
+    }
+    g.ops.splice(anchor_pos..anchor_pos, [min_op, max_op]);
 }
 
 #[cfg(test)]
@@ -230,5 +194,15 @@ mod tests {
         assert_eq!(StableGelu::default().run(&mut g), 3);
         g.validate().unwrap();
         assert_eq!(g.op_histogram()[&OpType::Minimum], 3);
+    }
+
+    #[test]
+    fn clamp_value_attr_is_recorded() {
+        let mut g = gelu_graph(false);
+        StableGelu { clip: 6.0 }.run(&mut g);
+        let min_op = g.ops.iter().find(|o| o.ty == OpType::Minimum).unwrap();
+        assert_eq!(min_op.attrs["value"], 6.0);
+        let max_op = g.ops.iter().find(|o| o.ty == OpType::Maximum).unwrap();
+        assert_eq!(max_op.attrs["value"], -6.0);
     }
 }

@@ -4,14 +4,22 @@
 //! BroadcastTo, SquaredDifference, Mean, Add(eps), Rsqrt, BroadcastTo,
 //! Sub, Mul, Reshape.  BroadcastTo is not delegable and the rank-5
 //! tensors violate the delegate's rank limit, so the whole island falls
-//! back to the CPU.  This pass detects the idiom structurally (anchored
-//! at the BroadcastTo ops) and re-emits the Fig.-7-right form: a rank-4
+//! back to the CPU.  This pass re-emits the Fig.-7-right form: a rank-4
 //! `(N, H*W, G, C/G)` layout where Mean keeps its dims and the
 //! normalization proceeds with implicit (delegable) broadcasting —
 //! no BroadcastTo, nothing above rank 4.
+//!
+//! Pattern: the anchor is the Reshape lifting `(N,H,W,C)` to the
+//! rank-5 `(N,H,W,G,C/G)` view.  The island itself is irregular (the
+//! exporter emits it with shared subexpressions), so the rewrite
+//! callback floods the rank-5 region from the anchor and rejects the
+//! site unless it is exactly the naive group-norm form: only
+//! mean/broadcast/normalize ops inside, at least one BroadcastTo, one
+//! closing rank-4 Reshape, and no rank-5 tensor leaking out.
 
 use std::collections::BTreeMap;
 
+use crate::graph::pattern::{self, Pattern, PatternNode};
 use crate::graph::{Graph, Op, OpType, TensorId};
 
 use super::Pass;
@@ -19,7 +27,7 @@ use super::Pass;
 #[derive(Default)]
 pub struct GroupNormRewrite;
 
-/// A detected naive group-norm island.
+/// A validated naive group-norm island.
 struct Site {
     /// op ids, in graph order, of the whole island (reshape5 .. reshape4)
     ops: Vec<usize>,
@@ -33,119 +41,147 @@ struct Site {
     name: String,
 }
 
-fn find_sites(g: &Graph) -> Vec<Site> {
-    let producers = g.producers();
+/// Flood the island from the anchoring rank-5 Reshape; `None` when the
+/// region is not the naive group-norm form.
+fn island_at(g: &Graph, anchor: usize) -> Option<Site> {
     let consumers = g.consumers();
-    let mut sites = Vec::new();
+    let op = &g.ops[anchor];
+    let out = g.tensor(op.outputs[0]);
+    let x_in = op.inputs[0];
+    let xs = &g.tensor(x_in).shape;
+    let (n, h, w) = (xs[0], xs[1], xs[2]);
+    let (groups, cg) = (out.shape[3], out.shape[4]);
 
-    for op in &g.ops {
-        // anchor: Reshape producing a rank-5 tensor
-        if op.ty != OpType::Reshape {
-            continue;
-        }
-        let out = g.tensor(op.outputs[0]);
-        if out.rank() != 5 {
-            continue;
-        }
-        let x_in = op.inputs[0];
-        let xs = &g.tensor(x_in).shape;
-        if xs.len() != 4 {
-            continue;
-        }
-        let (n, h, w) = (xs[0], xs[1], xs[2]);
-        let (groups, cg) = (out.shape[3], out.shape[4]);
-        if out.shape[..3] != [n, h, w] || groups * cg != xs[3] {
-            continue;
-        }
-
-        // walk the island: all downstream ops whose tensors stay rank-5,
-        // ending at the Reshape back to rank 4.
-        let mut island = vec![op.id];
-        let mut frontier = vec![op.outputs[0]];
-        let mut out4 = None;
-        let mut visited_ops = std::collections::BTreeSet::new();
-        visited_ops.insert(op.id);
-        let mut ok = true;
-        while let Some(t) = frontier.pop() {
-            for &c in &consumers[t] {
-                if visited_ops.contains(&c) {
-                    continue;
-                }
-                let cop = &g.ops[c];
-                match cop.ty {
-                    OpType::Reshape
-                        if g.tensor(cop.outputs[0]).rank() == 4
-                            && g.tensor(cop.outputs[0]).shape
-                                == vec![n, h, w, groups * cg] =>
-                    {
-                        visited_ops.insert(c);
-                        island.push(c);
-                        if out4.replace(cop.outputs[0]).is_some() {
-                            ok = false;
-                        }
-                    }
-                    OpType::Mean
-                    | OpType::BroadcastTo
-                    | OpType::SquaredDifference
-                    | OpType::Sub
-                    | OpType::Mul
-                    | OpType::Add
-                    | OpType::Rsqrt => {
-                        visited_ops.insert(c);
-                        island.push(c);
-                        for &o in &cop.outputs {
-                            if g.tensor(o).rank() == 5 {
-                                frontier.push(o);
-                            }
-                        }
-                    }
-                    _ => {
+    // walk the island: all downstream ops whose tensors stay rank-5,
+    // ending at the Reshape back to rank 4.
+    let mut island = vec![op.id];
+    let mut frontier = vec![op.outputs[0]];
+    let mut out4 = None;
+    let mut visited_ops = std::collections::BTreeSet::new();
+    visited_ops.insert(op.id);
+    let mut ok = true;
+    while let Some(t) = frontier.pop() {
+        for &c in &consumers[t] {
+            if visited_ops.contains(&c) {
+                continue;
+            }
+            let cop = &g.ops[c];
+            match cop.ty {
+                OpType::Reshape
+                    if g.tensor(cop.outputs[0]).rank() == 4
+                        && g.tensor(cop.outputs[0]).shape
+                            == vec![n, h, w, groups * cg] =>
+                {
+                    visited_ops.insert(c);
+                    island.push(c);
+                    if out4.replace(cop.outputs[0]).is_some() {
                         ok = false;
                     }
                 }
+                OpType::Mean
+                | OpType::BroadcastTo
+                | OpType::SquaredDifference
+                | OpType::Sub
+                | OpType::Mul
+                | OpType::Add
+                | OpType::Rsqrt => {
+                    visited_ops.insert(c);
+                    island.push(c);
+                    for &o in &cop.outputs {
+                        if g.tensor(o).rank() == 5 {
+                            frontier.push(o);
+                        }
+                    }
+                }
+                _ => {
+                    ok = false;
+                }
             }
         }
-        // the island must contain at least one BroadcastTo (else it is
-        // not the naive form) and must have found the closing reshape
-        let has_bcast = island.iter().any(|&i| g.ops[i].ty == OpType::BroadcastTo);
-        if !ok || !has_bcast || out4.is_none() {
-            continue;
-        }
-        // no op outside the island may read a rank-5 intermediate
-        let island_set: std::collections::BTreeSet<usize> =
-            island.iter().copied().collect();
-        let mut leaks = false;
-        for &i in &island {
-            for &o in &g.ops[i].outputs {
-                if g.tensor(o).rank() == 5 {
-                    for &c in &consumers[o] {
-                        if !island_set.contains(&c) {
-                            leaks = true;
-                        }
+    }
+    // the island must contain at least one BroadcastTo (else it is
+    // not the naive form) and must have found the closing reshape
+    let has_bcast = island.iter().any(|&i| g.ops[i].ty == OpType::BroadcastTo);
+    if !ok || !has_bcast || out4.is_none() {
+        return None;
+    }
+    // no op outside the island may read a rank-5 intermediate
+    let island_set: std::collections::BTreeSet<usize> =
+        island.iter().copied().collect();
+    for &i in &island {
+        for &o in &g.ops[i].outputs {
+            if g.tensor(o).rank() == 5 {
+                for &c in &consumers[o] {
+                    if !island_set.contains(&c) {
+                        return None;
                     }
                 }
             }
         }
-        if leaks {
-            continue;
-        }
-        let _ = &producers; // producers kept for symmetry/debugging
-        let mut ops: Vec<usize> = island_set.into_iter().collect();
-        ops.sort();
-        let name = op.name.trim_end_matches("/reshape5").trim_end_matches("/r5");
-        sites.push(Site {
-            ops,
-            x_in,
-            out4: out4.unwrap(),
-            n,
-            h,
-            w,
-            groups,
-            cg,
-            name: name.to_string(),
-        });
     }
-    sites
+    let mut ops: Vec<usize> = island_set.into_iter().collect();
+    ops.sort();
+    let name = op.name.trim_end_matches("/reshape5").trim_end_matches("/r5");
+    Some(Site {
+        ops,
+        x_in,
+        out4: out4.unwrap(),
+        n,
+        h,
+        w,
+        groups,
+        cg,
+        name: name.to_string(),
+    })
+}
+
+/// Replace one island with the broadcast-free rank-4 form.
+fn rewrite_site(g: &mut Graph, site: &Site) {
+    let dt = g.tensor(site.x_in).dtype;
+    let (n, hw, gr, cg) = (site.n, site.h * site.w, site.groups, site.cg);
+    let nm = &site.name;
+
+    // new rank-4 tensors
+    let x4 = g.add_tensor(&format!("{nm}/bf_r4g"), &[n, hw, gr, cg], dt, false);
+    let mean = g.add_tensor(&format!("{nm}/bf_mean"), &[n, 1, gr, 1], dt, false);
+    let sq = g.add_tensor(&format!("{nm}/bf_sq"), &[n, hw, gr, cg], dt, false);
+    let var = g.add_tensor(&format!("{nm}/bf_var"), &[n, 1, gr, 1], dt, false);
+    let veps = g.add_tensor(&format!("{nm}/bf_veps"), &[n, 1, gr, 1], dt, false);
+    let rstd = g.add_tensor(&format!("{nm}/bf_rstd"), &[n, 1, gr, 1], dt, false);
+    let cent = g.add_tensor(&format!("{nm}/bf_center"), &[n, hw, gr, cg], dt, false);
+    let norm = g.add_tensor(&format!("{nm}/bf_norm"), &[n, hw, gr, cg], dt, false);
+
+    let mk = |ty, name: String, inputs: Vec<TensorId>, outputs: Vec<TensorId>| Op {
+        id: usize::MAX,
+        ty,
+        name,
+        inputs,
+        outputs,
+        attrs: BTreeMap::new(),
+    };
+    let new_ops = vec![
+        mk(OpType::Reshape, format!("{nm}/bf_reshape_in"), vec![site.x_in], vec![x4]),
+        mk(OpType::Mean, format!("{nm}/bf_mean_op"), vec![x4], vec![mean]),
+        mk(OpType::SquaredDifference, format!("{nm}/bf_sqdiff"), vec![x4, mean], vec![sq]),
+        mk(OpType::Mean, format!("{nm}/bf_var_op"), vec![sq], vec![var]),
+        mk(OpType::Add, format!("{nm}/bf_eps"), vec![var], vec![veps]),
+        mk(OpType::Rsqrt, format!("{nm}/bf_rsqrt"), vec![veps], vec![rstd]),
+        mk(OpType::Sub, format!("{nm}/bf_center_op"), vec![x4, mean], vec![cent]),
+        mk(OpType::Mul, format!("{nm}/bf_norm_op"), vec![cent, rstd], vec![norm]),
+        mk(OpType::Reshape, format!("{nm}/bf_reshape_out"), vec![norm], vec![site.out4]),
+    ];
+
+    // splice: replace the island's op range.  Ops of the island are
+    // contiguous in practice (emitted together), but be safe: remove
+    // them all, insert the new ops at the first position.
+    let first_pos = g
+        .ops
+        .iter()
+        .position(|o| site.ops.contains(&o.id))
+        .expect("island present");
+    g.ops.retain(|o| !site.ops.contains(&o.id));
+    let at = first_pos.min(g.ops.len());
+    g.ops.splice(at..at, new_ops);
 }
 
 impl Pass for GroupNormRewrite {
@@ -154,61 +190,25 @@ impl Pass for GroupNormRewrite {
     }
 
     fn run(&self, g: &mut Graph) -> usize {
-        let sites = find_sites(g);
-        for site in &sites {
-            let dt = g.tensor(site.x_in).dtype;
-            let (n, hw, gr, cg) = (site.n, site.h * site.w, site.groups, site.cg);
-            let nm = &site.name;
-
-            // new rank-4 tensors
-            let x4 = g.add_tensor(&format!("{nm}/bf_r4g"), &[n, hw, gr, cg], dt, false);
-            let mean = g.add_tensor(&format!("{nm}/bf_mean"), &[n, 1, gr, 1], dt, false);
-            let sq = g.add_tensor(&format!("{nm}/bf_sq"), &[n, hw, gr, cg], dt, false);
-            let var = g.add_tensor(&format!("{nm}/bf_var"), &[n, 1, gr, 1], dt, false);
-            let veps = g.add_tensor(&format!("{nm}/bf_veps"), &[n, 1, gr, 1], dt, false);
-            let rstd = g.add_tensor(&format!("{nm}/bf_rstd"), &[n, 1, gr, 1], dt, false);
-            let cent = g.add_tensor(&format!("{nm}/bf_center"), &[n, hw, gr, cg], dt, false);
-            let norm = g.add_tensor(&format!("{nm}/bf_norm"), &[n, hw, gr, cg], dt, false);
-
-            let mk = |ty, name: String, inputs: Vec<TensorId>, outputs: Vec<TensorId>| Op {
-                id: usize::MAX,
-                ty,
-                name,
-                inputs,
-                outputs,
-                attrs: BTreeMap::new(),
-            };
-            let new_ops = vec![
-                mk(OpType::Reshape, format!("{nm}/bf_reshape_in"), vec![site.x_in], vec![x4]),
-                mk(OpType::Mean, format!("{nm}/bf_mean_op"), vec![x4], vec![mean]),
-                mk(OpType::SquaredDifference, format!("{nm}/bf_sqdiff"), vec![x4, mean], vec![sq]),
-                mk(OpType::Mean, format!("{nm}/bf_var_op"), vec![sq], vec![var]),
-                mk(OpType::Add, format!("{nm}/bf_eps"), vec![var], vec![veps]),
-                mk(OpType::Rsqrt, format!("{nm}/bf_rsqrt"), vec![veps], vec![rstd]),
-                mk(OpType::Sub, format!("{nm}/bf_center_op"), vec![x4, mean], vec![cent]),
-                mk(OpType::Mul, format!("{nm}/bf_norm_op"), vec![cent, rstd], vec![norm]),
-                mk(OpType::Reshape, format!("{nm}/bf_reshape_out"), vec![norm], vec![site.out4]),
-            ];
-
-            // splice: replace the island's op range.  Ops of the island
-            // are contiguous in practice (emitted together), but be safe:
-            // remove them all, insert the new ops at the first position.
-            let first_pos = g
-                .ops
-                .iter()
-                .position(|o| site.ops.contains(&o.id))
-                .expect("island present");
-            g.ops.retain(|o| !site.ops.contains(&o.id));
-            let at = first_pos.min(g.ops.len());
-            g.ops.splice(at..at, new_ops);
-            // NOTE: ids are renumbered once after all sites — site.ops of
-            // later islands reference the original ids, which must stay
-            // valid throughout the loop.
-        }
-        for (i, op) in g.ops.iter_mut().enumerate() {
-            op.id = i;
-        }
-        sites.len()
+        // anchor: a Reshape lifting rank-4 (N,H,W,C) to rank-5
+        // (N,H,W,G,C/G)
+        let pat = Pattern::new(PatternNode::op(OpType::Reshape).pred(|ctx, op| {
+            let out = ctx.graph.tensor(op.outputs[0]);
+            if out.rank() != 5 {
+                return false;
+            }
+            let xs = &ctx.graph.tensor(op.inputs[0]).shape;
+            xs.len() == 4
+                && out.shape[..3] == xs[..3]
+                && out.shape[3] * out.shape[4] == xs[3]
+        }));
+        pattern::apply(g, self.name(), &pat, |g, m| match island_at(g, m.anchor) {
+            Some(site) => {
+                rewrite_site(g, &site);
+                true
+            }
+            None => false,
+        })
     }
 }
 
@@ -257,7 +257,7 @@ mod tests {
     }
 
     #[test]
-    fn idempotent(){
+    fn idempotent() {
         let mut g = naive_gn_graph();
         GroupNormRewrite.run(&mut g);
         let ops_after_first = g.ops.len();

@@ -1,18 +1,21 @@
-//! Pass manager: runs the paper's rewrites in order and verifies the
-//! delegation invariants afterwards.
+//! Pass manager: runs a [`PassRegistry`]'s rewrites in order and
+//! verifies the delegation invariants afterwards.
+//!
+//! The registry is the single pipeline definition — the planner's
+//! cost-gated trials (`planner::plan::plan_graph`) iterate the same
+//! [`PassRegistry::standard`] list, so offline CLI runs and online
+//! planning can never disagree about pass order.  Ablations run a
+//! [`PassRegistry::subset`]/[`PassRegistry::without`] of the standard
+//! registry instead of toggling config bools.
 
 use crate::delegate::{DeviceProfile, RuleSet, GPU_ADRENO740};
 use crate::graph::Graph;
 
-use super::fc_to_conv::FcToConv;
-use super::gelu::StableGelu;
-use super::groupnorm::GroupNormRewrite;
-use super::serialize_conv::SerializeConv;
-use super::Pass;
+use super::registry::PassRegistry;
 
 #[derive(Debug, Clone, Default)]
 pub struct PassReport {
-    /// (pass name, sites rewritten)
+    /// (pass report label, sites rewritten), in run order
     pub applied: Vec<(&'static str, usize)>,
     pub coverage_before: f64,
     pub coverage_after: f64,
@@ -26,45 +29,13 @@ impl PassReport {
     }
 }
 
-/// Which of the paper's techniques to apply (ablation switch).
-#[derive(Debug, Clone, Copy)]
-pub struct PassConfig {
-    pub fc_to_conv: bool,
-    pub groupnorm: bool,
-    pub serialize_conv: bool,
-    pub stable_gelu: bool,
-}
-
-impl Default for PassConfig {
-    fn default() -> Self {
-        PassConfig {
-            fc_to_conv: true,
-            groupnorm: true,
-            serialize_conv: true,
-            stable_gelu: true,
-        }
-    }
-}
-
-impl PassConfig {
-    pub const NONE: PassConfig = PassConfig {
-        fc_to_conv: false,
-        groupnorm: false,
-        serialize_conv: false,
-        stable_gelu: false,
-    };
-}
-
-/// Run the configured passes.  Order matters and mirrors the paper:
-/// group-norm rewrite first (removes the rank-5/BroadcastTo islands),
-/// then FC->Conv, then conv serialization (which must see the final conv
-/// set, including the ones FC conversion created), then the GELU clamp
-/// (pure numerics, no delegation effect).
-pub fn run_with_config(
+/// Run every pass in `registry`, in registry order, against the
+/// delegate `rules` and device profile `dev`.
+pub fn run_registry(
     g: &mut Graph,
     rules: &RuleSet,
     dev: &DeviceProfile,
-    cfg: PassConfig,
+    registry: &PassRegistry,
 ) -> PassReport {
     let mut report = PassReport {
         coverage_before: rules.coverage(g),
@@ -72,29 +43,10 @@ pub fn run_with_config(
         ..Default::default()
     };
 
-    if cfg.groupnorm {
-        let p = GroupNormRewrite;
-        let n = p.run(g);
-        report.applied.push((p.name(), n));
-    }
-    if cfg.fc_to_conv {
-        let p = FcToConv { only_failing: false, rules: rules.clone() };
-        let n = p.run(g);
-        report.applied.push((p.name(), n));
-    }
-    if cfg.serialize_conv {
-        let p = SerializeConv {
-            rules: rules.clone(),
-            dev: dev.clone(),
-            force_dim: None,
-        };
-        let n = p.run(g);
-        report.applied.push((p.name(), n));
-    }
-    if cfg.stable_gelu {
-        let p = StableGelu::default();
-        let n = p.run(g);
-        report.applied.push((p.name(), n));
+    for spec in registry.specs() {
+        let pass = spec.build(rules, dev);
+        let n = pass.run(g);
+        report.applied.push((pass.name(), n));
     }
 
     debug_assert!(g.validate().is_ok());
@@ -103,15 +55,15 @@ pub fn run_with_config(
     report
 }
 
-/// All passes with the default device/rules.
+/// The standard registry with the default device/rules.
 pub fn run_all(g: &mut Graph) -> PassReport {
     run_all_for(g, &GPU_ADRENO740)
 }
 
-/// All passes with the default rules on an explicit delegate profile —
-/// the `--device` CLI path and the planner's per-class trials.
+/// The standard registry with the default rules on an explicit delegate
+/// profile — the `--device` CLI path and the planner's per-class trials.
 pub fn run_all_for(g: &mut Graph, dev: &DeviceProfile) -> PassReport {
-    run_with_config(g, &RuleSet::default(), dev, PassConfig::default())
+    run_registry(g, &RuleSet::default(), dev, &PassRegistry::standard())
 }
 
 #[cfg(test)]
@@ -147,27 +99,30 @@ mod tests {
         assert!(report.total_rewrites() >= 4);
         assert_eq!(g.op_histogram().get(&OpType::BroadcastTo), None);
         assert!(g.max_rank() <= 4);
+        // the report lists every registered pass, in registry order
+        assert_eq!(report.applied.len(), PassRegistry::standard().len());
     }
 
     #[test]
     fn ablation_without_serialization_leaves_conv_failing() {
         let mut g = pathological();
         let rules = RuleSet::default();
-        let cfg = PassConfig { serialize_conv: false, ..Default::default() };
-        run_with_config(&mut g, &rules, &GPU_ADRENO740, cfg);
+        let reg = PassRegistry::standard().without(&["serialize_conv"]);
+        run_registry(&mut g, &rules, &GPU_ADRENO740, &reg);
         let fails = rules.failures(&g);
         assert!(fails.iter().any(|(op, _)| op.ty == OpType::Conv2d));
     }
 
     #[test]
-    fn ablation_none_is_identity_coverage() {
+    fn ablation_empty_registry_is_identity_coverage() {
         let mut g = pathological();
         let rules = RuleSet::default();
         let before = rules.coverage(&g);
-        let r = run_with_config(&mut g, &rules, &GPU_ADRENO740, PassConfig::NONE);
+        let r = run_registry(&mut g, &rules, &GPU_ADRENO740, &PassRegistry::empty());
         assert_eq!(r.coverage_before, before);
         assert_eq!(r.coverage_after, before);
         assert_eq!(r.total_rewrites(), 0);
+        assert!(r.applied.is_empty());
     }
 
     #[test]
@@ -177,12 +132,6 @@ mod tests {
         for seed in 0..30 {
             let mut rng = Rng::new(seed + 1000);
             let mut g = random_graph(&mut rng, 20);
-            let before_outputs: Vec<Vec<usize>> = g
-                .ops
-                .iter()
-                .map(|o| o.outputs.iter().map(|&t| g.tensor(t).elems()).collect())
-                .collect();
-            let _ = before_outputs;
             run_all(&mut g);
             g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
             assert_eq!(

@@ -1,28 +1,51 @@
-//! Graph transformation passes — the paper's Sec. 3.1 rewrites.
+//! Graph transformation passes — the paper's Sec. 3.1/3.2 rewrites
+//! plus the attention fusions the pattern engine unlocked, all built
+//! on [`crate::graph::pattern`]'s declarative match/rewrite core.
 //!
-//! Each pass rewrites the TFLite-level graph to remove a class of
-//! delegation failures:
+//! Each pass removes a class of delegation failures or fuses away
+//! dispatch/memory overhead:
 //!
-//!  * [`fc_to_conv`]      — FullyConnected -> Reshape/1x1-Conv2D/Reshape
-//!                          (paper Fig. 1a);
-//!  * [`serialize_conv`]  — over-sized 3x3 convs split into the minimal
-//!                          number of input-channel slices (Fig. 1b);
-//!  * [`groupnorm`]       — broadcast-free group normalization, all
-//!                          tensors rank <= 4 (Fig. 7);
-//!  * [`gelu`]            — numerically stable GELU with the gamma_M
-//!                          clamp (Sec. 3.2, Fig. 8).
+//!  * [`fc_to_conv`]         — FullyConnected -> Reshape/1x1-Conv2D/
+//!                             Reshape (paper Fig. 1a);
+//!  * [`serialize_conv`]     — over-sized 3x3 convs split into the
+//!                             minimal number of channel slices
+//!                             (Fig. 1b);
+//!  * [`groupnorm`]          — broadcast-free group normalization, all
+//!                             tensors rank <= 4 (Fig. 7);
+//!  * [`gelu`]               — numerically stable GELU with the
+//!                             gamma_M clamp (Sec. 3.2, Fig. 8);
+//!  * [`fused_softmax`]      — the export-form `Exp -> Sum -> Div`
+//!                             softmax island collapsed into one
+//!                             memory-bound `FUSED_SOFTMAX` dispatch
+//!                             ("Speed Is All You Need", arXiv
+//!                             2304.11267): saves two dispatches and
+//!                             the full-size exponentials round trip
+//!                             per attention block;
+//!  * [`attention_reshape`]  — cancelling Reshape/Transpose pairs the
+//!                             exporter leaves around the attention
+//!                             BatchMatmuls provably composed to the
+//!                             identity and deleted (MobileDiffusion,
+//!                             arXiv 2311.16567).
 //!
-//! [`manager`] runs them in order and verifies the invariants the paper
-//! relies on: shapes preserved at graph outputs, no BroadcastTo, no
-//! rank-5 tensors, and full delegate coverage afterwards.
+//! [`registry`] is the single pipeline definition ([`PassRegistry`]):
+//! run order, CLI names, and the planner's cost-gated trials all
+//! derive from it.  [`manager`] runs a registry and verifies the
+//! invariants the paper relies on: shapes preserved at graph outputs,
+//! no BroadcastTo, no rank-5 tensors, and full delegate coverage
+//! afterwards — the per-rewrite shape/dtype contract itself is
+//! enforced by the pattern engine's driver.
 
+pub mod attention_reshape;
 pub mod fc_to_conv;
+pub mod fused_softmax;
 pub mod gelu;
 pub mod groupnorm;
 pub mod manager;
+pub mod registry;
 pub mod serialize_conv;
 
-pub use manager::{run_all, run_all_for, run_with_config, PassConfig, PassReport};
+pub use manager::{run_all, run_all_for, run_registry, PassReport};
+pub use registry::{PassRegistry, PassSpec};
 
 use crate::graph::Graph;
 

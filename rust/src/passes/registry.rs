@@ -1,0 +1,231 @@
+//! The pass registry: the single source of truth for which rewrites
+//! exist and the order they run in.
+//!
+//! Everything that used to hard-code the pipeline — the ablation
+//! `PassConfig` bools, the planner's duplicated `pass_stages()` list,
+//! the CLI's pass command — now derives from [`PassRegistry::standard`],
+//! so the order can never drift between the offline pipeline and the
+//! planner's cost-gated trials again.
+//!
+//! Order matters and mirrors the paper: group-norm rewrite first
+//! (removes the rank-5/BroadcastTo islands), then FC->Conv, then conv
+//! serialization (which must see the final conv set, including the
+//! ones FC conversion created), then the GELU clamp (pure numerics).
+//! The attention fusions run last: they only ever *remove* work, and
+//! running them after the coverage passes means the cost gate judges
+//! them on an already-delegable graph.
+//!
+//! Each [`PassSpec`] carries a registry name (stable, CLI- and
+//! planner-facing: `fc_to_conv`) and a factory building the pass for a
+//! `(RuleSet, DeviceProfile)` context.  The constructed pass's own
+//! [`Pass::name`] is its report label (`fc-to-conv`), kept distinct so
+//! `PassReport` output stays bit-identical with the seed pipeline.
+
+use crate::delegate::{DeviceProfile, RuleSet};
+use crate::error::{Error, Result};
+
+use super::attention_reshape::AttentionReshapeElim;
+use super::fc_to_conv::FcToConv;
+use super::fused_softmax::FusedSoftmaxPass;
+use super::gelu::StableGelu;
+use super::groupnorm::GroupNormRewrite;
+use super::serialize_conv::SerializeConv;
+use super::Pass;
+
+/// One registered rewrite: name, one-line summary, and the factory
+/// closing over nothing (context arrives at build time).
+#[derive(Clone, Copy)]
+pub struct PassSpec {
+    /// stable registry name (planner schedules, `--only`, docs)
+    pub name: &'static str,
+    /// one-line summary for `passes --list`
+    pub summary: &'static str,
+    factory: fn(&RuleSet, &DeviceProfile) -> Box<dyn Pass>,
+}
+
+impl PassSpec {
+    /// Build the pass for a delegate-rules + device context.
+    pub fn build(&self, rules: &RuleSet, dev: &DeviceProfile) -> Box<dyn Pass> {
+        (self.factory)(rules, dev)
+    }
+}
+
+impl std::fmt::Debug for PassSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PassSpec").field("name", &self.name).finish()
+    }
+}
+
+/// An ordered list of passes; run order == list order.
+#[derive(Debug, Clone)]
+pub struct PassRegistry {
+    specs: Vec<PassSpec>,
+}
+
+impl PassRegistry {
+    /// The full shipped pipeline, in mandated order.
+    pub fn standard() -> PassRegistry {
+        PassRegistry {
+            specs: vec![
+                PassSpec {
+                    name: "groupnorm",
+                    summary: "broadcast-free group norm (Fig. 7): removes the \
+                              rank-5/BroadcastTo CPU islands",
+                    factory: |_, _| Box::new(GroupNormRewrite),
+                },
+                PassSpec {
+                    name: "fc_to_conv",
+                    summary: "FullyConnected -> 1x1 Conv2D (Fig. 1a): large FCs \
+                              take the delegate's tiled matmul path",
+                    factory: |rules, _| {
+                        Box::new(FcToConv { only_failing: false, rules: rules.clone() })
+                    },
+                },
+                PassSpec {
+                    name: "serialize_conv",
+                    summary: "over-capacity k>1 convs split into minimal-factor \
+                              channel slices (Fig. 1b)",
+                    factory: |rules, dev| {
+                        Box::new(SerializeConv {
+                            rules: rules.clone(),
+                            dev: dev.clone(),
+                            force_dim: None,
+                        })
+                    },
+                },
+                PassSpec {
+                    name: "stable_gelu",
+                    summary: "gamma_M clamp in front of the tanh-GELU cubic \
+                              chain (Sec. 3.2, fp16 overflow)",
+                    factory: |_, _| Box::new(StableGelu::default()),
+                },
+                PassSpec {
+                    name: "fused_softmax",
+                    summary: "exp/sum/div softmax island -> one memory-bound \
+                              FUSED_SOFTMAX dispatch (arXiv 2304.11267)",
+                    factory: |_, _| Box::new(FusedSoftmaxPass),
+                },
+                PassSpec {
+                    name: "attention_reshape_elim",
+                    summary: "cancelling Reshape/Transpose pairs around the \
+                              attention matmuls removed (arXiv 2311.16567)",
+                    factory: |_, _| Box::new(AttentionReshapeElim),
+                },
+            ],
+        }
+    }
+
+    /// A registry with no passes (ablation baseline).
+    pub fn empty() -> PassRegistry {
+        PassRegistry { specs: Vec::new() }
+    }
+
+    pub fn specs(&self) -> &[PassSpec] {
+        &self.specs
+    }
+
+    /// Registry names in run order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.specs.iter().map(|s| s.name).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PassSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Keep only the named passes.  Run order stays pipeline order
+    /// regardless of the order names are given in; unknown names are a
+    /// config error (the CLI `--only` path).
+    pub fn subset(&self, names: &[&str]) -> Result<PassRegistry> {
+        for n in names {
+            if self.get(n).is_none() {
+                return Err(Error::Config(format!(
+                    "unknown pass '{n}' (known: {})",
+                    self.names().join(", ")
+                )));
+            }
+        }
+        Ok(PassRegistry {
+            specs: self
+                .specs
+                .iter()
+                .filter(|s| names.contains(&s.name))
+                .copied()
+                .collect(),
+        })
+    }
+
+    /// Drop the named passes (ablation convenience; unknown names are
+    /// ignored).
+    pub fn without(&self, names: &[&str]) -> PassRegistry {
+        PassRegistry {
+            specs: self
+                .specs
+                .iter()
+                .filter(|s| !names.contains(&s.name))
+                .copied()
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delegate::GPU_ADRENO740;
+
+    #[test]
+    fn standard_order_is_the_mandated_pipeline() {
+        let reg = PassRegistry::standard();
+        assert_eq!(
+            reg.names(),
+            vec![
+                "groupnorm",
+                "fc_to_conv",
+                "serialize_conv",
+                "stable_gelu",
+                "fused_softmax",
+                "attention_reshape_elim",
+            ]
+        );
+        assert_eq!(reg.len(), 6);
+        assert!(!reg.is_empty());
+    }
+
+    #[test]
+    fn specs_build_against_a_context() {
+        let rules = RuleSet::default();
+        for spec in PassRegistry::standard().specs() {
+            let pass = spec.build(&rules, &GPU_ADRENO740);
+            // report labels are distinct from registry names but stable
+            assert!(!pass.name().is_empty());
+            assert!(!spec.summary.is_empty());
+        }
+    }
+
+    #[test]
+    fn subset_preserves_pipeline_order_and_rejects_unknowns() {
+        let reg = PassRegistry::standard();
+        // names given out of order still run in pipeline order
+        let sub = reg.subset(&["stable_gelu", "groupnorm"]).unwrap();
+        assert_eq!(sub.names(), vec!["groupnorm", "stable_gelu"]);
+        assert!(reg.subset(&["warp_speed"]).is_err());
+        assert!(reg.subset(&[]).unwrap().is_empty(), "empty subset = baseline");
+    }
+
+    #[test]
+    fn without_drops_passes() {
+        let reg = PassRegistry::standard().without(&["serialize_conv"]);
+        assert_eq!(reg.len(), 5);
+        assert!(reg.get("serialize_conv").is_none());
+        assert!(reg.get("groupnorm").is_some());
+    }
+}

@@ -7,10 +7,16 @@
 //! latency (the paper measured 15.5 ms input vs 40.9 ms output and chose
 //! input).  The chosen conv is rewritten into `factor` StridedSlice +
 //! Conv2D calls combined with Adds (input) or a Concatenation (output).
+//!
+//! Pattern: a `CONV_2D` anchor with a k>1 kernel the delegate rejects.
+//! The factor search is the rewrite callback's job — a site with no
+//! workable factor is *rejected* (the callback returns `false`), which
+//! the old hand-rolled traversal expressed as a `continue`.
 
 use std::collections::BTreeMap;
 
 use crate::delegate::{cost, DeviceProfile, RuleSet, GPU_ADRENO740};
+use crate::graph::pattern::{self, Pattern, PatternNode};
 use crate::graph::{DType, Graph, Op, OpType, TensorId};
 
 use super::Pass;
@@ -129,57 +135,49 @@ impl Pass for SerializeConv {
     }
 
     fn run(&self, g: &mut Graph) -> usize {
-        let targets: Vec<usize> = g
-            .ops
-            .iter()
-            .filter(|op| {
-                op.ty == OpType::Conv2d
-                    && op.attr_i("kernel").unwrap_or(1) > 1
-                    && !self.rules.check(g, op).ok()
-            })
-            .map(|op| op.id)
-            .collect();
+        let rules = self.rules.clone();
+        let pat = Pattern::new(PatternNode::op(OpType::Conv2d).pred(move |ctx, op| {
+            op.attr_i("kernel").unwrap_or(1) > 1 && !rules.check(ctx.graph, op).ok()
+        }));
+        pattern::apply(g, self.name(), &pat, |g, m| self.rewrite_site(g, m.anchor))
+    }
+}
 
-        let mut rewritten = 0;
-        for &op_id in &targets {
-            let (x_id, out_id, name, k) = {
-                let op = g.ops.iter().find(|o| o.id == op_id).unwrap();
-                let x = *op
-                    .inputs
-                    .iter()
-                    .find(|&&t| !g.tensor(t).is_const)
-                    .expect("conv input");
-                (x, op.outputs[0], op.name.clone(), op.attr_i("kernel").unwrap() as usize)
-            };
-            let xs = g.tensor(x_id).shape.clone();
-            let os = g.tensor(out_id).shape.clone();
-            let (h, w, cin) = (xs[1], xs[2], xs[3]);
-            let cout = os[3];
+impl SerializeConv {
+    /// Search the minimal factor for the conv at `op_id` and rewrite it;
+    /// `false` (site rejected) when no workable factor exists.
+    fn rewrite_site(&self, g: &mut Graph, op_id: usize) -> bool {
+        let (x_id, out_id, name, k) = {
+            let op = g.ops.iter().find(|o| o.id == op_id).unwrap();
+            let x = *op
+                .inputs
+                .iter()
+                .find(|&&t| !g.tensor(t).is_const)
+                .expect("conv input");
+            (x, op.outputs[0], op.name.clone(), op.attr_i("kernel").unwrap() as usize)
+        };
+        let xs = g.tensor(x_id).shape.clone();
+        let os = g.tensor(out_id).shape.clone();
+        let (h, w, cin) = (xs[1], xs[2], xs[3]);
+        let cout = os[3];
 
-            let mut p = match plan(&self.rules, &self.dev, h, w, cin, cout, k) {
-                Some(p) => p,
-                None => continue,
-            };
-            if let Some(d) = self.force_dim {
-                if let Some(f) = minimal_factor(&self.rules, h, w, cin, cout, k, d) {
-                    p = SerializationPlan { dim: d, factor: f, latency: p.latency };
-                } else {
-                    continue;
-                }
-            }
-
-            match p.dim {
-                Dim::Input => rewrite_input(g, op_id, x_id, out_id, &name, k, p.factor),
-                Dim::Output => rewrite_output(g, op_id, x_id, out_id, &name, k, p.factor),
-            }
-            rewritten += 1;
-        }
-        if rewritten > 0 {
-            for (i, op) in g.ops.iter_mut().enumerate() {
-                op.id = i;
+        let mut p = match plan(&self.rules, &self.dev, h, w, cin, cout, k) {
+            Some(p) => p,
+            None => return false,
+        };
+        if let Some(d) = self.force_dim {
+            if let Some(f) = minimal_factor(&self.rules, h, w, cin, cout, k, d) {
+                p = SerializationPlan { dim: d, factor: f, latency: p.latency };
+            } else {
+                return false;
             }
         }
-        rewritten
+
+        match p.dim {
+            Dim::Input => rewrite_input(g, op_id, x_id, out_id, &name, k, p.factor),
+            Dim::Output => rewrite_output(g, op_id, x_id, out_id, &name, k, p.factor),
+        }
+        true
     }
 }
 

@@ -25,5 +25,8 @@ pub mod plan;
 pub mod registry;
 
 pub use fleet::{FleetRouter, FleetSpec, Route, WorkerClassSpec};
-pub use plan::{modeled_cost_s, plan_graph, ExecutionPlan, PlanRegistry, PlannedGraph};
+pub use plan::{
+    modeled_cost_s, plan_graph, plan_graph_with, schedule_display, ExecutionPlan,
+    PlanRegistry, PlannedGraph,
+};
 pub use registry::{device_names, device_spec, registered_devices, DeviceSpec};

@@ -6,7 +6,10 @@
 //! graphs per variant carrying exactly the pathologies the paper
 //! analyzes — the naive group-norm island (rank-5 + BroadcastTo), the
 //! over-capacity 1920->640 3x3 conv at 32x32, and the 4096-row
-//! fully-connected — so `plan_graph` reproduces the paper's coverage
+//! fully-connected — plus the attention-export debris the follow-up
+//! mobile-diffusion work targets (a decomposed exp/sum/div softmax
+//! island and cancelling Reshape/Transpose pairs around the
+//! BatchMatmuls), so `plan_graph` reproduces the paper's coverage
 //! and latency structure per device class.  The graphs are costing
 //! models, not executables: absolute sizes are scaled down, relative
 //! shapes (and therefore which delegate rules fire) are faithful.
@@ -40,7 +43,14 @@ fn unet_base() -> Graph {
     // the paper's exactly-one failing conv: C_in 1920 and 2.62M elems
     let h = b.conv2d("bottleneck", h, 640, 3, 1);
     let h = b.conv2d("proj_in", h, 320, 1, 1);
-    // attention/FF block on 4096 tokens: rows > fc_max_rows fails
+    // export-form self-attention at 1024 tokens, carrying the
+    // decomposed softmax island and the exporter's cancelling
+    // Reshape/Transpose layout debris (the fused_softmax /
+    // attention_reshape_elim targets)
+    let t = b.reshape("attn_tokens", h, &[1, 1024, 320]);
+    let t = b.attention("attn", t, 4);
+    let h = b.reshape("attn_untokens", t, &[1, 32, 32, 320]);
+    // FF block on 4096 tokens: rows > fc_max_rows fails
     let t = b.reshape("tokens", h, &[1, 4096, 80]);
     let t = b.fully_connected("ff1", t, 320);
     let t = b.gelu("gelu", t, false);
@@ -58,8 +68,10 @@ fn unet_mobile() -> Graph {
     // squeezed: C_in under the arena limit, conv delegates outright
     let h = b.conv2d("bottleneck", h, 320, 3, 1);
     let h = b.conv2d("proj_in", h, 320, 1, 1);
-    // 1024 tokens: under fc_max_rows, FC delegates outright
+    // 1024 tokens: under fc_max_rows, FC delegates outright; the
+    // squeezed variant keeps the same export-form attention debris
     let t = b.reshape("tokens", h, &[1, 1024, 320]);
+    let t = b.attention("attn", t, 4);
     let t = b.fully_connected("ff1", t, 1280);
     let t = b.gelu("gelu", t, false);
     let t = b.fully_connected("ff2", t, 320);
@@ -128,6 +140,24 @@ mod tests {
             .failures(&mobile)
             .iter()
             .any(|(op, _)| op.name == "bottleneck" || op.name == "ff1"));
+    }
+
+    #[test]
+    fn unets_carry_the_attention_export_debris() {
+        use crate::graph::OpType;
+        for variant in VARIANTS {
+            let g = unet_graph(variant).unwrap();
+            let hist = g.op_histogram();
+            // the decomposed softmax island...
+            assert_eq!(hist[&OpType::Exp], 1, "{variant}");
+            assert_eq!(hist[&OpType::Sum], 1, "{variant}");
+            assert_eq!(hist[&OpType::Div], 1, "{variant}");
+            // ...and the cancelling layout pairs around the matmuls
+            assert_eq!(hist[&OpType::BatchMatmul], 2, "{variant}");
+            assert!(hist[&OpType::Transpose] >= 2, "{variant}");
+            // nothing pre-fused in the export form
+            assert_eq!(hist.get(&OpType::FusedSoftmax), None, "{variant}");
+        }
     }
 
     #[test]

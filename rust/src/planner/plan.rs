@@ -19,7 +19,7 @@ use std::sync::{Arc, Mutex};
 use crate::delegate::{graph_cost, single_device_cost, RuleSet};
 use crate::error::Result;
 use crate::graph::Graph;
-use crate::passes::{run_with_config, PassConfig};
+use crate::passes::PassRegistry;
 
 use super::model;
 use super::registry::DeviceSpec;
@@ -37,6 +37,17 @@ pub fn modeled_cost_s(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> f64 {
     }
 }
 
+/// Human form of a pass schedule: `"(none)"` or the comma-joined pass
+/// names.  One definition for the metrics report, the CLI, and the
+/// examples.
+pub fn schedule_display(passes_used: &[&str]) -> String {
+    if passes_used.is_empty() {
+        "(none)".to_string()
+    } else {
+        passes_used.join(", ")
+    }
+}
+
 /// The planner's verdict on one graph for one device class.
 #[derive(Debug, Clone)]
 pub struct PlannedGraph {
@@ -51,32 +62,33 @@ pub struct PlannedGraph {
     pub passes_used: Vec<&'static str>,
 }
 
-/// The pipeline in the order `passes::manager` mandates, one pass per
-/// stage so each is cost-gated independently.
-fn pass_stages() -> [(&'static str, PassConfig); 4] {
-    [
-        ("groupnorm", PassConfig { groupnorm: true, ..PassConfig::NONE }),
-        ("fc_to_conv", PassConfig { fc_to_conv: true, ..PassConfig::NONE }),
-        ("serialize_conv", PassConfig { serialize_conv: true, ..PassConfig::NONE }),
-        ("stable_gelu", PassConfig { stable_gelu: true, ..PassConfig::NONE }),
-    ]
+/// Plan one graph for one device class: trial each registered pass in
+/// pipeline order — the order and the pass set both come from the one
+/// [`PassRegistry::standard`] definition, so the planner can never
+/// drift from `passes::run_all` — and accept a pass only if coverage
+/// does not decrease and modeled latency does not increase.  Never
+/// returns a graph worse than the input under either metric.
+pub fn plan_graph(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> PlannedGraph {
+    plan_graph_with(g, rules, spec, &PassRegistry::standard())
 }
 
-/// Plan one graph for one device class: trial each pass in pipeline
-/// order, accept it only if coverage does not decrease and modeled
-/// latency does not increase.  Never returns a graph worse than the
-/// input under either metric.
-pub fn plan_graph(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> PlannedGraph {
+/// [`plan_graph`] over an explicit registry (ablations, benches).
+pub fn plan_graph_with(
+    g: &Graph,
+    rules: &RuleSet,
+    spec: &DeviceSpec,
+    registry: &PassRegistry,
+) -> PlannedGraph {
     let mut current = g.clone();
     let mut cost_s = modeled_cost_s(&current, rules, spec);
     let mut coverage = rules.coverage(&current);
     let mut rewrites = 0usize;
     let mut passes_used = Vec::new();
 
-    for (name, cfg) in pass_stages() {
+    for pass_spec in registry.specs() {
         let mut candidate = current.clone();
-        let report = run_with_config(&mut candidate, rules, &spec.delegate, cfg);
-        if report.total_rewrites() == 0 {
+        let n = pass_spec.build(rules, &spec.delegate).run(&mut candidate);
+        if n == 0 {
             continue;
         }
         let cand_cost = modeled_cost_s(&candidate, rules, spec);
@@ -85,8 +97,8 @@ pub fn plan_graph(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> PlannedGraph
             current = candidate;
             cost_s = cand_cost;
             coverage = cand_cov;
-            rewrites += report.total_rewrites();
-            passes_used.push(name);
+            rewrites += n;
+            passes_used.push(pass_spec.name);
         }
     }
 
@@ -206,6 +218,13 @@ impl PlanRegistry {
         self.plans.lock().unwrap().len()
     }
 
+    /// Every cached plan, in `(device, variant)` key order — the
+    /// metrics report reads this to surface the chosen per-device pass
+    /// schedules.
+    pub fn cached(&self) -> Vec<Arc<ExecutionPlan>> {
+        self.plans.lock().unwrap().values().cloned().collect()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -264,6 +283,31 @@ mod tests {
         // more steps cost more
         assert!(fast.predict_service_s(20) > fast.predict_service_s(4));
         assert!(fast.peak_memory > 0 && slow.peak_memory > 0);
+    }
+
+    #[test]
+    fn schedules_record_the_fusions_where_the_gate_accepts_them() {
+        let rules = RuleSet::default();
+        // on the GPU-delegate class the full base pipeline lands,
+        // fusions included: the coverage passes reach 1.0 first, and
+        // the fusions then strictly cut dispatches/traffic
+        let spec = device_spec("adreno740").unwrap();
+        let g = model::unet_graph("base").unwrap();
+        let planned = plan_graph(&g, &rules, &spec);
+        assert!(planned.passes_used.contains(&"fused_softmax"), "{:?}", planned.passes_used);
+        assert!(
+            planned.passes_used.contains(&"attention_reshape_elim"),
+            "{:?}",
+            planned.passes_used
+        );
+        // the schedule preserves registry order
+        let order = crate::passes::PassRegistry::standard().names();
+        let mut last = 0usize;
+        for name in &planned.passes_used {
+            let idx = order.iter().position(|n| n == name).unwrap();
+            assert!(idx >= last, "schedule out of registry order: {:?}", planned.passes_used);
+            last = idx;
+        }
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Contract tests for the pattern-rewrite engine and the registered
+//! pass set:
+//!
+//! * miniprop properties: every registered pass — alone, built for
+//!   every registered device class — preserves `Graph::validate`,
+//!   preserves graph-output shapes/dtypes, and never increases the
+//!   delegate-rule failure count (absolute coverage; the fraction is
+//!   denominator-sensitive when a fusion deletes delegable ops, which
+//!   is exactly why the planner's cost gate judges the fraction and
+//!   these tests judge the failure count);
+//! * the cost-gated plan never decreases coverage on any registered
+//!   device, fusions included;
+//! * the migrated passes report bit-identical rewrite counts vs. the
+//!   seed pipeline on the SD variant graphs;
+//! * the new fusions strictly reduce modeled latency on the
+//!   GPU-delegate class without reducing coverage anywhere.
+
+use mobile_diffusion::delegate::RuleSet;
+use mobile_diffusion::graph::builder::random_graph;
+use mobile_diffusion::graph::{DType, Graph, TensorId};
+use mobile_diffusion::passes::{self, PassRegistry};
+use mobile_diffusion::planner::{
+    model, modeled_cost_s, plan_graph, plan_graph_with, registered_devices,
+};
+use mobile_diffusion::util::miniprop::forall;
+use mobile_diffusion::util::rng::Rng;
+
+/// Graph outputs: produced, unconsumed, non-const tensors.
+fn graph_outputs(g: &Graph) -> Vec<(TensorId, Vec<usize>, DType)> {
+    let producers = g.producers();
+    let consumers = g.consumers();
+    g.tensors
+        .iter()
+        .filter(|t| {
+            !t.is_const && producers[t.id].is_some() && consumers[t.id].is_empty()
+        })
+        .map(|t| (t.id, t.shape.clone(), t.dtype))
+        .collect()
+}
+
+#[test]
+fn every_pass_preserves_validity_outputs_and_failure_count() {
+    let rules = RuleSet::default();
+    forall("pass contract", 24, |prop| {
+        let seed = prop.seed();
+        let n_ops = prop.usize_in(5, 22);
+        for spec in registered_devices() {
+            for pass_spec in PassRegistry::standard().specs() {
+                let mut g = random_graph(&mut Rng::new(seed), n_ops);
+                let outputs_before = graph_outputs(&g);
+                let failures_before = rules.failures(&g).len();
+
+                let pass = pass_spec.build(&rules, &spec.delegate);
+                pass.run(&mut g);
+
+                g.validate().unwrap_or_else(|e| {
+                    panic!("{} on {}: {e} (seed {seed:#x})", pass_spec.name, spec.name)
+                });
+                // graph outputs keep identity, shape, and dtype
+                let producers = g.producers();
+                for (t, shape, dtype) in &outputs_before {
+                    assert!(
+                        producers[*t].is_some(),
+                        "{} on {}: output {t} unproduced (seed {seed:#x})",
+                        pass_spec.name,
+                        spec.name
+                    );
+                    assert_eq!(
+                        &g.tensor(*t).shape, shape,
+                        "{} on {}: output {t} shape (seed {seed:#x})",
+                        pass_spec.name, spec.name
+                    );
+                    assert_eq!(
+                        g.tensor(*t).dtype, *dtype,
+                        "{} on {}: output {t} dtype (seed {seed:#x})",
+                        pass_spec.name, spec.name
+                    );
+                }
+                // delegate coverage in absolute terms never regresses
+                assert!(
+                    rules.failures(&g).len() <= failures_before,
+                    "{} on {}: failures {} -> {} (seed {seed:#x}, {n_ops} ops)",
+                    pass_spec.name,
+                    spec.name,
+                    failures_before,
+                    rules.failures(&g).len()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cost_gated_plans_never_decrease_coverage_on_any_device() {
+    let rules = RuleSet::default();
+    forall("plan coverage monotone with fusions", 20, |prop| {
+        let seed = prop.seed();
+        let n_ops = prop.usize_in(5, 20);
+        let g = random_graph(&mut Rng::new(seed), n_ops);
+        for spec in registered_devices() {
+            let cov_before = rules.coverage(&g);
+            let cost_before = modeled_cost_s(&g, &rules, &spec);
+            let planned = plan_graph(&g, &rules, &spec);
+            assert!(
+                planned.coverage >= cov_before - 1e-12,
+                "{}: coverage {} -> {} (seed {seed:#x})",
+                spec.name,
+                cov_before,
+                planned.coverage
+            );
+            assert!(
+                planned.cost_s <= cost_before + 1e-12,
+                "{}: cost {} -> {} (seed {seed:#x}, passes {:?})",
+                spec.name,
+                cost_before,
+                planned.cost_s,
+                planned.passes_used
+            );
+        }
+    });
+}
+
+/// The seed pipeline's per-pass rewrite counts on the SD variant
+/// component graphs, pinned: the migrated engine must reproduce them
+/// bit-identically.  Counts are definitionally what the hand-rolled
+/// traversals rewrote — one per FC, one per naive group-norm island,
+/// one per unstable GELU, one per delegate-rejected k>1 conv — plus
+/// the two new fusions' sites on the attention export debris.
+fn expected_counts(graph_name: &str) -> Vec<(&'static str, usize)> {
+    match graph_name {
+        "unet_base" => vec![
+            ("groupnorm-broadcast-free", 2),
+            ("fc-to-conv", 6),
+            ("serialize-conv", 1),
+            ("stable-gelu", 1),
+            ("fused-softmax", 1),
+            ("attention-reshape-elim", 2),
+        ],
+        "unet_mobile" => vec![
+            ("groupnorm-broadcast-free", 2),
+            ("fc-to-conv", 6),
+            ("serialize-conv", 0),
+            ("stable-gelu", 1),
+            ("fused-softmax", 1),
+            // K-path transpose pair, V-path reshape pair, and the
+            // proj/ff1 round trip fc_to_conv leaves behind
+            ("attention-reshape-elim", 3),
+        ],
+        "text_encoder" => vec![
+            ("groupnorm-broadcast-free", 0),
+            ("fc-to-conv", 2),
+            ("serialize-conv", 0),
+            ("stable-gelu", 1),
+            ("fused-softmax", 0),
+            ("attention-reshape-elim", 0),
+        ],
+        "decoder" => vec![
+            ("groupnorm-broadcast-free", 1),
+            ("fc-to-conv", 0),
+            ("serialize-conv", 0),
+            ("stable-gelu", 0),
+            ("fused-softmax", 0),
+            ("attention-reshape-elim", 0),
+        ],
+        other => panic!("no expected counts for {other}"),
+    }
+}
+
+#[test]
+fn migrated_passes_report_bit_identical_counts_on_the_variant_graphs() {
+    for variant in model::VARIANTS {
+        let (unet, text, dec) = model::component_graphs(variant).unwrap();
+        for mut g in [unet, text, dec] {
+            let expected = expected_counts(&g.name.clone());
+            let report = passes::run_all(&mut g);
+            assert_eq!(
+                report.applied, expected,
+                "rewrite counts changed on {}",
+                g.name
+            );
+            g.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn op_histograms_are_stable_on_the_variant_graphs() {
+    // the full pipeline's output shape, pinned coarsely: no BroadcastTo,
+    // no FullyConnected, no rank-5, exactly one fused softmax on the
+    // unets, and no leftover exp/sum/div island
+    use mobile_diffusion::graph::OpType;
+    for variant in model::VARIANTS {
+        let mut g = model::unet_graph(variant).unwrap();
+        passes::run_all(&mut g);
+        let hist = g.op_histogram();
+        assert_eq!(hist.get(&OpType::BroadcastTo), None, "{variant}");
+        assert_eq!(hist.get(&OpType::FullyConnected), None, "{variant}");
+        assert_eq!(hist[&OpType::FusedSoftmax], 1, "{variant}");
+        assert_eq!(hist.get(&OpType::Exp), None, "{variant}");
+        assert_eq!(hist.get(&OpType::Sum), None, "{variant}");
+        assert_eq!(hist.get(&OpType::Div), None, "{variant}");
+        assert!(g.max_rank() <= 4, "{variant}");
+    }
+}
+
+#[test]
+fn fusions_strictly_reduce_modeled_latency_without_coverage_loss() {
+    let rules = RuleSet::default();
+    let fusions = ["fused_softmax", "attention_reshape_elim"];
+    let gpu = registered_devices()
+        .into_iter()
+        .find(|d| d.name == "adreno740")
+        .unwrap();
+    for variant in model::VARIANTS {
+        let g = model::unet_graph(variant).unwrap();
+        let without = plan_graph_with(
+            &g,
+            &rules,
+            &gpu,
+            &PassRegistry::standard().without(&fusions),
+        );
+        let with = plan_graph(&g, &rules, &gpu);
+        // strictly faster on the GPU-delegate class...
+        assert!(
+            with.cost_s < without.cost_s,
+            "{variant}: fused {} !< unfused {}",
+            with.cost_s,
+            without.cost_s
+        );
+        assert!(with.passes_used.contains(&"fused_softmax"), "{variant}");
+        assert!(
+            with.passes_used.contains(&"attention_reshape_elim"),
+            "{variant}"
+        );
+        // ...without losing coverage there or anywhere else (the cost
+        // gate rejects a fusion wherever it would)
+        assert!(with.coverage >= without.coverage - 1e-12, "{variant}");
+        for spec in registered_devices() {
+            let planned = plan_graph(&g, &rules, &spec);
+            assert!(
+                planned.coverage >= rules.coverage(&g) - 1e-12,
+                "{variant} on {}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn unplanned_pipeline_still_reaches_complete_delegation_on_base() {
+    // the unconditional CLI pipeline (fusions included) keeps the
+    // paper's headline: complete delegation on the base UNet
+    let rules = RuleSet::default();
+    let mut g = model::unet_graph("base").unwrap();
+    assert!(rules.coverage(&g) < 1.0);
+    let report = passes::run_all(&mut g);
+    assert_eq!(report.coverage_after, 1.0, "{:?}", report.applied);
+}
