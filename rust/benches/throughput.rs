@@ -1,11 +1,19 @@
-//! Serving throughput vs micro-batch size on the stub backend.
+//! Serving throughput vs micro-batch size on the stub backend, plus an
+//! open-loop arrival sweep comparing step-level continuous batching
+//! against run-to-completion scheduling.
 //!
-//! Drives a 1-worker pool over synthetic STUBHLO artifacts at batch
-//! sizes {1, 2, 4} and emits `BENCH_throughput.json` (repo root) with
-//! images/s, steps/s and p95 latency per operating point.  The stub's
-//! per-dispatch weight digest models the fixed dispatch cost a real
-//! device pays, so the *shape* of the curve (B=4 > B=1) is the claim —
-//! absolute numbers are synthetic.
+//! Part 1 drives a 1-worker pool over synthetic STUBHLO artifacts at
+//! batch sizes {1, 2, 4} (closed loop, all requests submitted up
+//! front).  Part 2 replays deterministic Poisson arrivals at increasing
+//! offered load against the *same* worker in both scheduling modes and
+//! reports p50/p95/p99 latency: continuous batching must strictly beat
+//! run-to-completion on p95 at the highest load, where a
+//! run-to-completion worker strands arrivals behind in-flight batch
+//! tails that continuous scheduling lets them join.  Both sweeps land
+//! in `BENCH_throughput.json` (repo root).  The stub's per-dispatch
+//! weight digest models the fixed dispatch cost a real device pays, so
+//! the *shape* of the curves is the claim — absolute numbers are
+//! synthetic.
 //!
 //!     cargo bench --bench throughput            # full workload
 //!     cargo bench --bench throughput -- --fast  # CI smoke mode
@@ -15,7 +23,9 @@
 
 use std::path::Path;
 
-use mobile_diffusion::testkit::throughput::{run_profile, to_json, Workload};
+use mobile_diffusion::testkit::throughput::{
+    run_open_loop_profile, run_profile, to_json_with_open_loop, Workload,
+};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast")
@@ -54,8 +64,34 @@ fn main() {
     let speedup = rows[2].images_per_s / rows[0].images_per_s.max(1e-12);
     println!("\nB=4 vs B=1 speedup: {speedup:.2}x");
 
+    println!("\n== open-loop Poisson arrivals: continuous vs run-to-completion ==");
+    let load_factors: &[f64] = if fast { &[0.8, 1.6] } else { &[0.5, 1.0, 2.0] };
+    let open = match run_open_loop_profile("bench_open_loop", &wl, 4, load_factors) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("open-loop bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "{:>6} {:>12} {:>11} {:>11} {:>11} {:>10} {:>6}",
+        "load", "mode", "p50", "p95", "p99", "occupancy", "joins"
+    );
+    for r in &open {
+        println!(
+            "{:>6.2} {:>12} {:>8.1} ms {:>8.1} ms {:>8.1} ms {:>10.2} {:>6}",
+            r.load_factor,
+            if r.continuous { "continuous" } else { "rtc" },
+            r.p50_latency_s * 1e3,
+            r.p95_latency_s * 1e3,
+            r.p99_latency_s * 1e3,
+            r.mean_occupancy,
+            r.joins,
+        );
+    }
+
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_throughput.json");
-    let json = to_json(&rows, fast);
+    let json = to_json_with_open_loop(&rows, &open, fast);
     if let Err(e) = std::fs::write(&out, &json) {
         eprintln!("could not write {}: {e}", out.display());
         std::process::exit(1);
@@ -64,5 +100,31 @@ fn main() {
     if speedup <= 1.0 {
         eprintln!("FAIL: batching did not improve throughput");
         std::process::exit(1);
+    }
+    // the tentpole claim: at the highest offered load, joining the
+    // in-flight batch at step boundaries must beat waiting out its tail
+    let top = load_factors.last().copied().unwrap_or(0.0);
+    let at = |cont: bool| {
+        open.iter()
+            .find(|r| r.continuous == cont && (r.load_factor - top).abs() < 1e-9)
+            .map(|r| r.p95_latency_s)
+    };
+    match (at(false), at(true)) {
+        (Some(rtc), Some(cont)) => {
+            println!(
+                "high-load p95: rtc {:.1} ms, continuous {:.1} ms ({:.2}x)",
+                rtc * 1e3,
+                cont * 1e3,
+                rtc / cont.max(1e-12)
+            );
+            if cont >= rtc {
+                eprintln!("FAIL: continuous batching did not improve high-load p95");
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            eprintln!("FAIL: open-loop sweep missing the high-load operating points");
+            std::process::exit(1);
+        }
     }
 }

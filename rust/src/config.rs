@@ -37,6 +37,10 @@ pub struct AppConfig {
     /// compiled executables each worker keeps across evictions (the
     /// warm-reload tier); 0 disables warm reuse
     pub warm_slots: usize,
+    /// step-level continuous batching: workers re-poll the queue at
+    /// denoise-step boundaries (joins, slot reclamation, deadline
+    /// preemption) instead of running each batch to completion
+    pub continuous: bool,
 }
 
 impl Default for AppConfig {
@@ -57,6 +61,7 @@ impl Default for AppConfig {
             max_batch: 1,
             fleet: None,
             warm_slots: 8,
+            continuous: true,
         }
     }
 }
@@ -128,6 +133,9 @@ impl AppConfig {
         if let Some(v) = j.get("warm_slots").as_usize() {
             self.warm_slots = v;
         }
+        if let Some(v) = j.get("continuous").as_bool() {
+            self.continuous = v;
+        }
     }
 
     /// Parse `--key value` / `--flag` CLI arguments (after the
@@ -189,6 +197,7 @@ impl AppConfig {
                         .map_err(|e| Error::Config(format!("--max-batch: {e}")))?;
                 }
                 "--fleet" => self.fleet = Some(take(&mut i)?),
+                "--no-continuous" => self.continuous = false,
                 "--warm-slots" => {
                     self.warm_slots = take(&mut i)?
                         .parse()
@@ -312,6 +321,17 @@ mod tests {
         assert_eq!(c.warm_slots, 16);
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--warm-slots", "x"])).is_err());
+    }
+
+    #[test]
+    fn continuous_flag_and_json() {
+        let mut c = AppConfig::default();
+        assert!(c.continuous, "continuous batching on by default");
+        c.apply_args(&args(&["--no-continuous"])).unwrap();
+        assert!(!c.continuous);
+        let j = Json::parse(r#"{"continuous": true}"#).unwrap();
+        c.apply_json(&j);
+        assert!(c.continuous);
     }
 
     #[test]

@@ -218,6 +218,23 @@ pub struct PoolMetrics {
     pub batches: usize,
     /// largest batch occupancy observed
     pub max_batch_occupancy: usize,
+    /// continuous-batching sessions started (one worker occupancy
+    /// period each; a session's initial pop also counts as a batch)
+    pub sessions: usize,
+    /// rows spliced into an in-flight session at a step boundary
+    pub joins: usize,
+    /// rows retired (decoded) while their batchmates kept running
+    pub leaves: usize,
+    /// rows checkpointed and requeued to free a slot
+    pub preemptions: usize,
+    /// rows readmitted from a preemption checkpoint
+    pub resumes: usize,
+    /// UNet dispatches recorded by continuous sessions
+    pub steps: usize,
+    /// Σ step wall seconds (time-weighted occupancy denominator)
+    step_time_s: f64,
+    /// Σ step wall × rows live in that step (numerator)
+    step_row_time_s: f64,
     /// fleet-wide load accounting summed over every served request:
     /// cold vs warm reload counts, store hit/miss counts, and the
     /// wall seconds each load stage consumed
@@ -248,6 +265,14 @@ impl PoolMetrics {
             rejected_deadline: 0,
             batches: 0,
             max_batch_occupancy: 0,
+            sessions: 0,
+            joins: 0,
+            leaves: 0,
+            preemptions: 0,
+            resumes: 0,
+            steps: 0,
+            step_time_s: 0.0,
+            step_row_time_s: 0.0,
             loads: LoadProfile::default(),
             batch_occupancy: SampleWindow::default(),
             queue_wait: SampleWindow::default(),
@@ -319,8 +344,52 @@ impl PoolMetrics {
     }
 
     /// Mean requests per dispatched batch (0 before the first batch).
+    /// This is *formation-time* occupancy — what the queue co-scheduled
+    /// at pop.  Under continuous batching membership changes mid-flight;
+    /// use [`Self::time_weighted_occupancy`] for utilization math.
     pub fn mean_batch_occupancy(&self) -> f64 {
         self.batch_occupancy.summary().mean
+    }
+
+    /// One continuous session started with `occupancy` initial rows.
+    pub fn record_session(&mut self, occupancy: usize) {
+        self.sessions += 1;
+        self.record_batch(occupancy);
+    }
+
+    /// One denoise dispatch of a continuous session: `live` rows over
+    /// `wall_s` seconds.  Feeds the time-weighted occupancy.
+    pub fn record_step(&mut self, live: usize, wall_s: f64) {
+        self.steps += 1;
+        self.step_time_s += wall_s;
+        self.step_row_time_s += wall_s * live as f64;
+        self.max_batch_occupancy = self.max_batch_occupancy.max(live);
+    }
+
+    pub fn record_join(&mut self) {
+        self.joins += 1;
+    }
+
+    pub fn record_leave(&mut self) {
+        self.leaves += 1;
+    }
+
+    pub fn record_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    pub fn record_resume(&mut self) {
+        self.resumes += 1;
+    }
+
+    /// Rows live per denoise-second, averaged over every recorded step
+    /// — the occupancy that is actually correct for utilization when
+    /// rows join and leave mid-flight (0 before the first step).
+    pub fn time_weighted_occupancy(&self) -> f64 {
+        if self.step_time_s <= 0.0 {
+            return 0.0;
+        }
+        self.step_row_time_s / self.step_time_s
     }
 
     pub fn record_rejected_full(&mut self) {
@@ -405,6 +474,19 @@ impl PoolMetrics {
                 self.batches,
                 self.mean_batch_occupancy(),
                 self.max_batch_occupancy,
+            ));
+        }
+        if self.sessions > 0 {
+            out.push_str(&format!(
+                "continuous: {} sessions, {} steps, {} joins, {} leaves, \
+                 {} preemptions, {} resumes, time-weighted occupancy {:.2}\n",
+                self.sessions,
+                self.steps,
+                self.joins,
+                self.leaves,
+                self.preemptions,
+                self.resumes,
+                self.time_weighted_occupancy(),
             ));
         }
         if self.loads.loads() > 0 {
@@ -561,6 +643,41 @@ mod tests {
         assert!((p.latency_summary().max - 2.1).abs() < 1e-9);
         let report = p.report(0, 0);
         assert!(report.contains("occupancy mean 3.00, max 4"), "{report}");
+    }
+
+    #[test]
+    fn continuous_counters_and_time_weighted_occupancy() {
+        let mut p = PoolMetrics::new(1);
+        assert_eq!(p.time_weighted_occupancy(), 0.0, "no steps yet");
+        let report = p.report(0, 0);
+        assert!(!report.contains("continuous:"), "{report}");
+
+        p.record_session(2);
+        // 1s at 2 rows, 1s at 4 rows (two joins), 2s at 1 row
+        p.record_step(2, 1.0);
+        p.record_join();
+        p.record_join();
+        p.record_step(4, 1.0);
+        p.record_leave();
+        p.record_preemption();
+        p.record_step(1, 2.0);
+        p.record_resume();
+
+        assert_eq!(p.sessions, 1);
+        assert_eq!(p.batches, 1, "a session's pop is also a batch");
+        assert_eq!(p.steps, 3);
+        assert_eq!(p.joins, 2);
+        assert_eq!(p.leaves, 1);
+        assert_eq!(p.preemptions, 1);
+        assert_eq!(p.resumes, 1);
+        // (2*1 + 4*1 + 1*2) / (1 + 1 + 2) = 8/4 = 2.0
+        assert!((p.time_weighted_occupancy() - 2.0).abs() < 1e-9);
+        // mid-flight joins can push occupancy past the formation size
+        assert_eq!(p.max_batch_occupancy, 4);
+
+        let report = p.report(0, 0);
+        assert!(report.contains("continuous: 1 sessions"), "{report}");
+        assert!(report.contains("time-weighted occupancy 2.00"), "{report}");
     }
 
     #[test]

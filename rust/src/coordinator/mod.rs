@@ -13,6 +13,6 @@ pub mod server;
 
 pub use metrics::{ClassMetrics, Metrics, PoolMetrics, SampleWindow, WorkerStats};
 pub use pool::{ResponseReceiver, WorkItem, WorkerExecutor, WorkerPool};
-pub use queue::{AdmissionError, Job, JobQueue, Priority};
+pub use queue::{AdmissionError, Job, JobQueue, PeekInfo, Priority};
 pub use request::{GenerateRequest, GenerateResponse, SubmitOptions};
 pub use server::Server;

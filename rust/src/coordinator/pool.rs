@@ -7,20 +7,40 @@
 //! model: one worker ~= one device, each with its own memory budget.
 //! Only the queue and the metrics are shared.
 //!
+//! Workers run in one of two modes:
+//!
+//! * **Run-to-completion** — each blocking dequeue takes up to
+//!   `max_batch` compatible jobs and executes them as one batch; the
+//!   queue is not consulted again until the batch finishes.
+//! * **Continuous** ([`WorkerPool::start_fleet_mode`] with
+//!   `continuous = true`) — the dequeue *starts a session* and the
+//!   worker's control ([`ContinuousControl`] over the shared queue)
+//!   keeps scheduling at every denoise-step boundary: compatible
+//!   queued jobs join the in-flight batch, finished rows free their
+//!   slots for the next joiner, and when the queue head holds a
+//!   deadline that cannot wait for a natural leave, a lower-priority
+//!   row is checkpointed and requeued (at a bumped priority, so the
+//!   preemption is paid back).  Expired jobs are dropped at admission
+//!   in both modes.
+//!
 //! The pool is generic over [`WorkerExecutor`] so scheduling behaviour
 //! (fairness, admission, deadline drops, per-request overrides) is
 //! testable with mock executors and no device at all.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::PoolMetrics;
-use crate::coordinator::queue::{AdmissionError, JobQueue, Priority};
+use crate::coordinator::queue::{AdmissionError, Job, JobQueue, Priority};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
 use crate::error::{Error, Result};
-use crate::pipeline::GenerateResult;
+use crate::pipeline::{
+    BatchKey, BatchRequest, Checkpoint, ContinuousControl, ContinuousJob, GenerateResult,
+    LiveRow,
+};
 
 /// What a pool worker runs for each job.  Implemented by the pipelined
 /// executor wrapper in the server, and by mocks in tests.
@@ -33,6 +53,35 @@ pub trait WorkerExecutor {
     /// share one CFG-batched UNet dispatch per denoise step.
     fn execute_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Result<GenerateResult>> {
         reqs.iter().map(|r| self.execute(r)).collect()
+    }
+
+    /// Run one continuous session seeded with `jobs`, reporting every
+    /// row outcome through `control` (which also feeds joins and
+    /// preemption decisions at step boundaries).  The default ignores
+    /// the step-boundary machinery and runs the seed jobs as one
+    /// run-to-completion batch — mock executors keep their semantics
+    /// under a continuous pool; the pipelined executor overrides this
+    /// with the real step-level loop.
+    fn execute_continuous(
+        &mut self,
+        jobs: Vec<ContinuousJob>,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<()> {
+        let reqs: Vec<GenerateRequest> = jobs
+            .iter()
+            .map(|j| {
+                let mut r = GenerateRequest::new(j.token, &j.req.prompt, j.req.seed);
+                r.num_steps = j.req.overrides.num_steps;
+                r.variant = j.req.overrides.variant.clone();
+                r.guidance_scale = j.req.overrides.guidance_scale;
+                r
+            })
+            .collect();
+        let results = self.execute_batch(&reqs);
+        for (job, result) in jobs.into_iter().zip(results) {
+            control.complete(job.token, result);
+        }
+        Ok(())
     }
 }
 
@@ -48,6 +97,11 @@ pub struct WorkItem {
     pub class: usize,
     /// plan-predicted service time from admission routing, if any
     pub predicted_s: Option<f64>,
+    /// preemption checkpoint: `Some` when this job was checkpointed
+    /// out of a continuous session and requeued; the next session that
+    /// admits it resumes the denoise loop from here instead of
+    /// re-encoding and re-seeding
+    pub resume: Option<Checkpoint>,
 }
 
 /// Handle to a running worker pool.
@@ -110,6 +164,25 @@ impl WorkerPool {
         E: WorkerExecutor + 'static,
         F: Fn(usize, usize, &str) -> Result<E> + Send + Sync + 'static,
     {
+        Self::start_fleet_mode(classes, queue_capacity, max_batch, false, factory)
+    }
+
+    /// [`start_fleet`](Self::start_fleet) with an explicit scheduling
+    /// mode: `continuous = false` is run-to-completion batching,
+    /// `continuous = true` makes every worker reschedule at denoise-
+    /// step boundaries (joins, slot reclamation, deadline-driven
+    /// preemption) via [`WorkerExecutor::execute_continuous`].
+    pub fn start_fleet_mode<E, F>(
+        classes: &[(String, usize)],
+        queue_capacity: usize,
+        max_batch: usize,
+        continuous: bool,
+        factory: F,
+    ) -> Result<WorkerPool>
+    where
+        E: WorkerExecutor + 'static,
+        F: Fn(usize, usize, &str) -> Result<E> + Send + Sync + 'static,
+    {
         let max_batch = max_batch.max(1);
         let class_names: Vec<String> = classes.iter().map(|(n, _)| n.clone()).collect();
         // (worker id, class index) assignments, classes in spec order
@@ -146,15 +219,27 @@ impl WorkerPool {
                         }
                     };
                     drop(worker_ready);
-                    worker_loop(
-                        wid,
-                        class_idx,
-                        &class_name,
-                        executor,
-                        &worker_queue,
-                        &worker_metrics,
-                        max_batch,
-                    );
+                    if continuous {
+                        continuous_worker_loop(
+                            wid,
+                            class_idx,
+                            &class_name,
+                            executor,
+                            &worker_queue,
+                            &worker_metrics,
+                            max_batch,
+                        );
+                    } else {
+                        worker_loop(
+                            wid,
+                            class_idx,
+                            &class_name,
+                            executor,
+                            &worker_queue,
+                            &worker_metrics,
+                            max_batch,
+                        );
+                    }
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -216,7 +301,7 @@ impl WorkerPool {
         }
         let (tx, rx) = mpsc::channel();
         let absolute = deadline.map(|d| Instant::now() + d);
-        let item = WorkItem { req, reply: tx, class, predicted_s };
+        let item = WorkItem { req, reply: tx, class, predicted_s, resume: None };
         match self.queue.push(item, priority, absolute) {
             Ok(()) => Ok(rx),
             Err(e) => {
@@ -319,7 +404,11 @@ fn worker_loop<E: WorkerExecutor>(
         let t0 = Instant::now();
         let mut results = executor.execute_batch(&reqs);
         let wall_s = t0.elapsed().as_secs_f64();
-        let busy_share_s = wall_s / occupancy as f64;
+        // fallback split when the executor reports no per-member busy
+        // share (mocks): even division, which misattributes mixed-
+        // schedule batches — a 3-step member that shared dispatches
+        // with 8-step peers did not occupy the device for wall/B
+        let even_share_s = wall_s / occupancy as f64;
         let got = results.len();
         if got != reqs.len() {
             // defensive: a misbehaving executor must not strand callers
@@ -340,6 +429,15 @@ fn worker_loop<E: WorkerExecutor>(
         {
             let resp = match result {
                 Ok(r) => {
+                    // the member's device occupancy: the executor's
+                    // time-weighted measurement when it provides one
+                    // (stepwise wall / rows live that step), else the
+                    // even split
+                    let busy_share_s = if r.timings.busy_share_s > 0.0 {
+                        r.timings.busy_share_s
+                    } else {
+                        even_share_s
+                    };
                     let mut m = metrics.lock().unwrap();
                     m.record_batch_member(
                         wid,
@@ -391,13 +489,323 @@ fn worker_loop<E: WorkerExecutor>(
                         wid,
                         queue_s,
                         wall_s,
-                        busy_share_s,
+                        even_share_s,
                         None,
                     );
                     Err(e)
                 }
             };
             let _ = reply.send(resp);
+        }
+    }
+}
+
+/// Per-row bookkeeping the continuous control keeps from admission to
+/// terminal outcome (or requeue).
+struct JobMeta {
+    req: GenerateRequest,
+    reply: mpsc::Sender<Result<GenerateResponse>>,
+    /// wait before this admission (a resumed row's earlier waits were
+    /// spent; each admission accounts its own)
+    queue_s: f64,
+    admitted: Instant,
+    predicted_s: Option<f64>,
+    priority: Priority,
+    deadline: Option<Instant>,
+    /// admitted from a checkpoint — never a preemption victim again,
+    /// so two deadline bursts cannot ping-pong one row forever
+    preempted: bool,
+}
+
+/// The pool's [`ContinuousControl`]: joins come from the shared queue
+/// pinned to the session's compatibility key, preemption is judged
+/// against the queue head's deadline, and every terminal outcome is
+/// folded into the shared metrics and sent on the caller's reply
+/// channel.  One instance per session; row tokens are session-scoped.
+struct PoolControl<'a> {
+    wid: usize,
+    class_idx: usize,
+    class_name: &'a str,
+    /// the raw requested variant of the session head — the same
+    /// compatibility key run-to-completion batching groups by
+    session_variant: Option<String>,
+    queue: &'a JobQueue<WorkItem>,
+    metrics: &'a Mutex<PoolMetrics>,
+    meta: HashMap<u64, JobMeta>,
+    next_token: u64,
+    /// rolling denoise-step wall total, for deadline-feasibility ETAs
+    step_s_sum: f64,
+    steps_seen: u64,
+}
+
+impl PoolControl<'_> {
+    /// Turn a dequeued job into a session row: expired jobs are failed
+    /// here (never burning a batch slot), live ones get a token and
+    /// their scheduling state is kept for the terminal callbacks.
+    fn admit(&mut self, job: Job<WorkItem>) -> Option<ContinuousJob> {
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        let WorkItem { req, reply, predicted_s, resume, .. } = job.item;
+        if let Some(d) = job.deadline {
+            if Instant::now() > d {
+                self.metrics.lock().unwrap().record_rejected_deadline();
+                let _ = reply.send(Err(Error::Queue(format!(
+                    "request {} expired after {queue_s:.3}s in queue",
+                    req.id
+                ))));
+                return None;
+            }
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        let preempted = resume.is_some();
+        if preempted {
+            self.metrics.lock().unwrap().record_resume();
+        }
+        let mut breq = BatchRequest::new(&req.prompt, req.seed);
+        breq.overrides = req.overrides();
+        self.meta.insert(
+            token,
+            JobMeta {
+                req,
+                reply,
+                queue_s,
+                admitted: Instant::now(),
+                predicted_s,
+                priority: job.priority,
+                deadline: job.deadline,
+                preempted,
+            },
+        );
+        Some(ContinuousJob { req: breq, token, resume })
+    }
+
+    /// A session-level executor failure (budget refusal, component
+    /// load, decode) fails every row still tracked; the queue and the
+    /// worker's next session are unaffected.
+    fn fail_remaining(&mut self, e: &Error) {
+        let mut m = self.metrics.lock().unwrap();
+        for (_, meta) in self.meta.drain() {
+            let wall_s = meta.admitted.elapsed().as_secs_f64();
+            m.record_batch_member(self.wid, meta.queue_s, wall_s, 0.0, None);
+            let _ = meta.reply.send(Err(e.clone()));
+        }
+    }
+}
+
+impl ContinuousControl for PoolControl<'_> {
+    fn poll_joins(&mut self, _key: &BatchKey, slots: usize) -> Vec<ContinuousJob> {
+        if slots == 0 {
+            return Vec::new();
+        }
+        let class = self.class_idx;
+        let variant = self.session_variant.clone();
+        let jobs = self.queue.try_pop_batch_where(
+            slots,
+            |it: &WorkItem| it.class == class,
+            |it: &WorkItem| it.req.variant.clone(),
+            Some(&variant),
+        );
+        let joined: Vec<ContinuousJob> =
+            jobs.into_iter().filter_map(|j| self.admit(j)).collect();
+        if !joined.is_empty() {
+            let mut m = self.metrics.lock().unwrap();
+            for _ in &joined {
+                m.record_join();
+            }
+        }
+        joined
+    }
+
+    fn preempt_victims(&mut self, live: &[LiveRow], free_slots: usize) -> Vec<u64> {
+        // last resort only: the batch must be full, a step-time
+        // estimate must exist, and the queue head's deadline must be
+        // infeasible waiting for the next natural leave
+        if free_slots > 0 || live.is_empty() || self.steps_seen == 0 {
+            return Vec::new();
+        }
+        let class = self.class_idx;
+        let variant = self.session_variant.clone();
+        let head = match self
+            .queue
+            .peek_where(|it: &WorkItem| it.class == class && it.req.variant == variant)
+        {
+            Some(h) => h,
+            None => return Vec::new(),
+        };
+        let deadline = match head.deadline {
+            Some(d) => d,
+            None => return Vec::new(),
+        };
+        let step_s = self.step_s_sum / self.steps_seen as f64;
+        let wait_steps = live.iter().map(|r| r.steps_remaining).min().unwrap_or(0);
+        let eta = Instant::now() + Duration::from_secs_f64(wait_steps as f64 * step_s);
+        if eta <= deadline {
+            return Vec::new(); // a natural leave frees a slot in time
+        }
+        // victim: strictly lower priority class than the head (Ord is
+        // drain order — greater means less urgent), never a resumed
+        // row, most work remaining (displacing it buys the most)
+        live.iter()
+            .filter(|r| {
+                self.meta
+                    .get(&r.token)
+                    .is_some_and(|m| m.priority > head.priority && !m.preempted)
+            })
+            .max_by_key(|r| r.steps_remaining)
+            .map(|r| vec![r.token])
+            .unwrap_or_default()
+    }
+
+    fn requeue(&mut self, job: ContinuousJob) {
+        let Some(meta) = self.meta.remove(&job.token) else {
+            return;
+        };
+        let preempting = job.resume.is_some();
+        let priority = if preempting {
+            // pay the displacement back: the row re-enters a class
+            // ahead of its old one, so the traffic that displaced it
+            // cannot also starve it
+            self.metrics.lock().unwrap().record_preemption();
+            match meta.priority {
+                Priority::Low => Priority::Normal,
+                _ => Priority::High,
+            }
+        } else {
+            // an incompatible joiner bounced by the executor goes back
+            // exactly as it arrived
+            meta.priority
+        };
+        let item = WorkItem {
+            req: meta.req,
+            reply: meta.reply,
+            class: self.class_idx,
+            predicted_s: meta.predicted_s,
+            resume: job.resume,
+        };
+        if let Err((item, e)) = self.queue.try_push(item, priority, meta.deadline) {
+            let _ = item.reply.send(Err(Error::Queue(format!(
+                "request {} displaced and could not requeue: {e}",
+                item.req.id
+            ))));
+        }
+    }
+
+    fn complete(&mut self, token: u64, result: Result<GenerateResult>) {
+        let Some(meta) = self.meta.remove(&token) else {
+            return;
+        };
+        let wall_s = meta.admitted.elapsed().as_secs_f64();
+        // a row finishing while batchmates stay live is a leave — its
+        // slot goes back to the joiners
+        let left_peers_behind = !self.meta.is_empty();
+        let resp = match result {
+            Ok(r) => {
+                // the executor's time-weighted busy share (stepwise
+                // wall / rows live that step, plus its own decode and
+                // encode shares); a row is never charged wall it
+                // shared with peers
+                let busy_share_s = if r.timings.busy_share_s > 0.0 {
+                    r.timings.busy_share_s
+                } else {
+                    wall_s
+                };
+                let mut m = self.metrics.lock().unwrap();
+                if left_peers_behind {
+                    m.record_leave();
+                }
+                m.record_batch_member(
+                    self.wid,
+                    meta.queue_s,
+                    wall_s,
+                    busy_share_s,
+                    Some(&r.timings),
+                );
+                if let Some(p) = meta.predicted_s {
+                    m.record_prediction(self.class_idx, p, busy_share_s);
+                }
+                m.record_class_overhead(
+                    self.class_idx,
+                    meta.req.variant.as_deref().unwrap_or("default"),
+                    busy_share_s - r.timings.denoise_s,
+                );
+                drop(m);
+                Ok(GenerateResponse {
+                    id: meta.req.id,
+                    image: r.image,
+                    image_size: r.image_size,
+                    latent: r.latent,
+                    timings: r.timings,
+                    peak_memory: r.peak_memory,
+                    queue_s: meta.queue_s,
+                    worker_id: self.wid,
+                    device_class: self.class_name.to_string(),
+                    predicted_s: meta.predicted_s,
+                })
+            }
+            Err(e) => {
+                // failed rows share the session wall evenly with the
+                // rows still tracked — a whole-batch failure must not
+                // charge the worker B times its elapsed time
+                let share = wall_s / (self.meta.len() + 1) as f64;
+                let mut m = self.metrics.lock().unwrap();
+                if left_peers_behind {
+                    m.record_leave();
+                }
+                m.record_batch_member(self.wid, meta.queue_s, wall_s, share, None);
+                drop(m);
+                Err(e)
+            }
+        };
+        let _ = meta.reply.send(resp);
+    }
+
+    fn on_step(&mut self, live: usize, wall_s: f64) {
+        self.step_s_sum += wall_s;
+        self.steps_seen += 1;
+        self.metrics.lock().unwrap().record_step(live, wall_s);
+    }
+}
+
+/// The continuous-mode worker body: the blocking dequeue only *starts*
+/// a session — every later scheduling decision (joins, slot
+/// reclamation, preemption) flows through the [`PoolControl`] at
+/// denoise-step boundaries inside
+/// [`WorkerExecutor::execute_continuous`].
+fn continuous_worker_loop<E: WorkerExecutor>(
+    wid: usize,
+    class_idx: usize,
+    class_name: &str,
+    mut executor: E,
+    queue: &JobQueue<WorkItem>,
+    metrics: &Mutex<PoolMetrics>,
+    max_batch: usize,
+) {
+    while let Some(jobs) = queue.pop_batch_where(
+        max_batch,
+        |it: &WorkItem| it.class == class_idx,
+        |it: &WorkItem| it.req.variant.clone(),
+    ) {
+        let session_variant = jobs[0].item.req.variant.clone();
+        let mut control = PoolControl {
+            wid,
+            class_idx,
+            class_name,
+            session_variant,
+            queue,
+            metrics,
+            meta: HashMap::new(),
+            next_token: 0,
+            step_s_sum: 0.0,
+            steps_seen: 0,
+        };
+        let initial: Vec<ContinuousJob> =
+            jobs.into_iter().filter_map(|j| control.admit(j)).collect();
+        if initial.is_empty() {
+            continue; // every popped job had already expired
+        }
+        metrics.lock().unwrap().record_session(initial.len());
+        if let Err(e) = executor.execute_continuous(initial, &mut control) {
+            control.fail_remaining(&e);
         }
     }
 }
@@ -718,6 +1126,36 @@ mod tests {
         assert_eq!(resp.device_class, "default");
         assert!(resp.predicted_s.is_none());
         pool.with_metrics(|m| assert_eq!(m.classes[0].prediction_count(), 0));
+    }
+
+    #[test]
+    fn continuous_pool_serves_with_the_default_executor_fallback() {
+        // mocks don't override execute_continuous: the session runs its
+        // seed jobs run-to-completion, but the pool-side wiring (session
+        // accounting, admission, replies) is the continuous path
+        let classes = [("default".to_string(), 1usize)];
+        let pool =
+            WorkerPool::start_fleet_mode(&classes, 16, 4, true, |_wid, _c: usize, _n: &str| {
+                Ok(SleepExec { sleep: Duration::from_millis(2), default_steps: 3 })
+            })
+            .unwrap();
+        let rxs: Vec<_> = (0..5u64)
+            .map(|i| {
+                pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.device_class, "default");
+        }
+        pool.with_metrics(|m| {
+            assert!(m.sessions >= 1, "continuous sessions recorded");
+            assert_eq!(m.stage.requests_ok, 5);
+        });
+        let report = pool.metrics_report();
+        assert!(report.contains("continuous:"), "{report}");
     }
 
     #[test]

@@ -83,6 +83,16 @@ impl std::fmt::Display for AdmissionError {
     }
 }
 
+/// Snapshot of the job the policy would run next (see
+/// [`JobQueue::peek_where`]) — enough for a worker to judge deadline
+/// feasibility without dequeuing anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeekInfo {
+    pub priority: Priority,
+    pub deadline: Option<Instant>,
+    pub enqueued: Instant,
+}
+
 /// A scheduled unit of work.
 #[derive(Debug)]
 pub struct Job<T> {
@@ -142,12 +152,24 @@ impl<T> JobQueue<T> {
         priority: Priority,
         deadline: Option<Instant>,
     ) -> Result<(), AdmissionError> {
+        self.try_push(item, priority, deadline).map_err(|(_, e)| e)
+    }
+
+    /// [`Self::push`] that hands the item back on rejection — requeue
+    /// paths (preemption checkpoints) must be able to fail the caller
+    /// explicitly instead of silently dropping its reply channel.
+    pub fn try_push(
+        &self,
+        item: T,
+        priority: Priority,
+        deadline: Option<Instant>,
+    ) -> Result<(), (T, AdmissionError)> {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
-            return Err(AdmissionError::Closed);
+            return Err((item, AdmissionError::Closed));
         }
         if inner.jobs.len() >= self.capacity {
-            return Err(AdmissionError::Full { capacity: self.capacity });
+            return Err((item, AdmissionError::Full { capacity: self.capacity }));
         }
         let seq = inner.next_seq;
         inner.next_seq += 1;
@@ -233,47 +255,105 @@ impl<T> JobQueue<T> {
         let cap = max_batch.max(1);
         let mut inner = self.inner.lock().unwrap();
         loop {
-            // cap 1 (the default config) keeps the allocation-free
-            // single-pop scan; only real batching pays for the sort
-            if cap == 1 {
-                if let Some(i) = Self::next_index(&inner, &eligible) {
-                    return inner.jobs.remove(i).map(|j| vec![j]);
-                }
-            } else {
-                let mut order: Vec<usize> = (0..inner.jobs.len())
-                    .filter(|&i| eligible(&inner.jobs[i].item))
-                    .collect();
-                if !order.is_empty() {
-                    order.sort_by(|&a, &b| {
-                        Self::policy_cmp(&inner.jobs[a], &inner.jobs[b])
-                    });
-                    let head_key = key(&inner.jobs[order[0]].item);
-                    let mut picked: Vec<usize> = Vec::with_capacity(cap);
-                    for &i in &order {
-                        if picked.len() >= cap {
-                            break;
-                        }
-                        if key(&inner.jobs[i].item) == head_key {
-                            picked.push(i);
-                        }
-                    }
-                    // remove back-to-front so indices stay valid
-                    picked.sort_unstable();
-                    let mut batch = Vec::with_capacity(picked.len());
-                    for i in picked.into_iter().rev() {
-                        if let Some(j) = inner.jobs.remove(i) {
-                            batch.push(j);
-                        }
-                    }
-                    batch.reverse();
-                    return Some(batch);
-                }
+            let batch = Self::take_batch(&mut inner, cap, &eligible, &key, None);
+            if !batch.is_empty() {
+                return Some(batch);
             }
             if inner.closed {
                 return None;
             }
             inner = self.available.wait(inner).unwrap();
         }
+    }
+
+    /// Non-blocking [`Self::pop_batch_where`] for mid-flight joins: the
+    /// continuous-batching worker polls between denoise steps for up to
+    /// `max_batch` eligible jobs compatible with the *running* batch.
+    /// When `running_key` is `Some`, the selection is pinned to that
+    /// key — only matching jobs are taken, regardless of what heads the
+    /// policy order (an incompatible policy head stays queued for a
+    /// free worker; it never forces the in-flight batch to drain).
+    /// When `None`, the policy head picks the key as in
+    /// [`Self::pop_batch_where`].  Returns an empty vec instead of
+    /// waiting.
+    pub fn try_pop_batch_where<K: PartialEq>(
+        &self,
+        max_batch: usize,
+        eligible: impl Fn(&T) -> bool,
+        key: impl Fn(&T) -> K,
+        running_key: Option<&K>,
+    ) -> Vec<Job<T>> {
+        let cap = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        Self::take_batch(&mut inner, cap, &eligible, &key, running_key)
+    }
+
+    /// Selection shared by the blocking and non-blocking batch pops:
+    /// take up to `cap` eligible jobs matching `pinned` (or, when
+    /// `pinned` is `None`, matching the policy head's key), in policy
+    /// order, returned in FIFO order.  Empty when nothing matches.
+    fn take_batch<K: PartialEq>(
+        inner: &mut Inner<T>,
+        cap: usize,
+        eligible: &impl Fn(&T) -> bool,
+        key: &impl Fn(&T) -> K,
+        pinned: Option<&K>,
+    ) -> Vec<Job<T>> {
+        // cap 1 without a pin (the default config) keeps the
+        // allocation-free single-pop scan; only real batching pays for
+        // the sort
+        if cap == 1 && pinned.is_none() {
+            if let Some(i) = Self::next_index(inner, eligible) {
+                return inner.jobs.remove(i).into_iter().collect();
+            }
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..inner.jobs.len())
+            .filter(|&i| eligible(&inner.jobs[i].item))
+            .collect();
+        if order.is_empty() {
+            return Vec::new();
+        }
+        order.sort_by(|&a, &b| Self::policy_cmp(&inner.jobs[a], &inner.jobs[b]));
+        let head_owned;
+        let head_key: &K = match pinned {
+            Some(k) => k,
+            None => {
+                head_owned = key(&inner.jobs[order[0]].item);
+                &head_owned
+            }
+        };
+        let mut picked: Vec<usize> = Vec::with_capacity(cap);
+        for &i in &order {
+            if picked.len() >= cap {
+                break;
+            }
+            if key(&inner.jobs[i].item) == *head_key {
+                picked.push(i);
+            }
+        }
+        // remove back-to-front so indices stay valid
+        picked.sort_unstable();
+        let mut batch = Vec::with_capacity(picked.len());
+        for i in picked.into_iter().rev() {
+            if let Some(j) = inner.jobs.remove(i) {
+                batch.push(j);
+            }
+        }
+        batch.reverse();
+        batch
+    }
+
+    /// Scheduling snapshot of the job the policy would run next among
+    /// those passing `eligible`, without removing it — the continuous
+    /// worker uses this between steps to decide whether the queue head
+    /// needs a slot preempted to meet its deadline.
+    pub fn peek_where(&self, eligible: impl Fn(&T) -> bool) -> Option<PeekInfo> {
+        let inner = self.inner.lock().unwrap();
+        Self::next_index(&inner, eligible).map(|i| {
+            let j = &inner.jobs[i];
+            PeekInfo { priority: j.priority, deadline: j.deadline, enqueued: j.enqueued }
+        })
     }
 
     /// Non-blocking pop (tests, drain-on-shutdown).
@@ -468,6 +548,50 @@ mod tests {
         assert!(q.pop_batch_where(4, |it| it.0 == 1, |it| it.1).is_none());
         assert_eq!(q.depth(), 1, "the class-0 job is still there");
         assert!(q.pop_batch_where(4, |it| it.0 == 0, |it| it.1).is_some());
+    }
+
+    #[test]
+    fn try_pop_batch_where_pins_to_the_running_key() {
+        // item = (class, variant); an in-flight batch on variant 7
+        // polls for joiners: the higher-priority variant-9 head must
+        // neither be taken nor block the variant-7 jobs behind it
+        let q: JobQueue<(usize, u8)> = JobQueue::new(16);
+        q.push((0, 9), Priority::High, None).unwrap();
+        q.push((0, 7), Priority::Normal, None).unwrap();
+        q.push((0, 7), Priority::Normal, None).unwrap();
+        q.push((1, 7), Priority::Normal, None).unwrap();
+
+        let joins = q.try_pop_batch_where(4, |it| it.0 == 0, |it| it.1, Some(&7));
+        let variants: Vec<u8> = joins.iter().map(|j| j.item.1).collect();
+        assert_eq!(variants, vec![7, 7], "only compatible class-0 jobs join");
+        assert_eq!(q.depth(), 2, "the variant-9 head and class-1 job stay queued");
+
+        // nothing compatible left: empty, never blocks
+        assert!(q.try_pop_batch_where(4, |it| it.0 == 0, |it| it.1, Some(&7)).is_empty());
+
+        // without a pin it behaves like pop_batch_where's selection
+        let head = q.try_pop_batch_where(4, |it| it.0 == 0, |it| it.1, None);
+        assert_eq!(head.len(), 1);
+        assert_eq!(head[0].item, (0, 9));
+    }
+
+    #[test]
+    fn peek_where_reports_the_policy_head_without_removing_it() {
+        let q: JobQueue<(usize, u8)> = JobQueue::new(8);
+        assert!(q.peek_where(|_| true).is_none());
+        let now = Instant::now();
+        q.push((0, 1), Priority::Normal, None).unwrap();
+        q.push((0, 2), Priority::High, Some(now + Duration::from_secs(2))).unwrap();
+        q.push((1, 3), Priority::High, Some(now + Duration::from_secs(1))).unwrap();
+
+        let head = q.peek_where(|it| it.0 == 0).unwrap();
+        assert_eq!(head.priority, Priority::High);
+        assert_eq!(head.deadline, Some(now + Duration::from_secs(2)));
+        assert_eq!(q.depth(), 3, "peek never dequeues");
+
+        // the eligibility filter scopes the head to the caller's class
+        let other = q.peek_where(|it| it.0 == 1).unwrap();
+        assert_eq!(other.deadline, Some(now + Duration::from_secs(1)));
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //! that are honored end-to-end: `SubmitOptions` -> `GenerateRequest` ->
 //! `ExecOverrides` -> the denoise loop.
 //!
+//! By default (`config.continuous`) workers schedule *continuously*:
+//! compatible requests join an in-flight batch at denoise-step
+//! boundaries instead of waiting out its tail, and deadline pressure
+//! can preempt low-priority rows (see `pipeline::continuous`).
+//! `--no-continuous` restores run-to-completion batching.
+//!
 //! All workers load through one shared [`ArtifactStore`]: each
 //! `(component, tag)` is read, parsed and dequantized from disk exactly
 //! once per process no matter how many workers the fleet runs.  Once a
@@ -33,7 +39,10 @@ use crate::config::AppConfig;
 use crate::coordinator::pool::{ResponseReceiver, WorkerExecutor, WorkerPool};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
-use crate::pipeline::{BatchRequest, GenerateResult, PipelinedExecutor};
+use crate::pipeline::{
+    BatchKey, BatchRequest, ContinuousControl, ContinuousJob, GenerateResult,
+    PipelinedExecutor,
+};
 use crate::planner::{FleetRouter, FleetSpec, PlanRegistry};
 use crate::runtime::{ArtifactStore, Manifest};
 
@@ -42,6 +51,8 @@ use crate::runtime::{ArtifactStore, Manifest};
 struct PipelineWorker {
     executor: PipelinedExecutor,
     default_variant: String,
+    /// seat count for a continuous session's dynamic batch
+    max_batch: usize,
 }
 
 impl WorkerExecutor for PipelineWorker {
@@ -62,6 +73,28 @@ impl WorkerExecutor for PipelineWorker {
             })
             .collect();
         self.executor.generate_batch(&batch, &self.default_variant)
+    }
+
+    /// The real step-level continuous session: the seed jobs enter the
+    /// denoise loop, which calls back into `control` at every step
+    /// boundary for joins, slot reclamation and preemption (see
+    /// `pipeline::continuous`).
+    fn execute_continuous(
+        &mut self,
+        jobs: Vec<ContinuousJob>,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<()> {
+        let variant = jobs
+            .first()
+            .and_then(|j| j.req.overrides.variant.clone())
+            .unwrap_or_else(|| self.default_variant.clone());
+        let key = BatchKey {
+            variant,
+            weights_tag: self.executor.options.unet_weights.clone(),
+        };
+        self.executor
+            .run_continuous(&key, &self.default_variant, jobs, self.max_batch, control)
+            .map(|_| ())
     }
 }
 
@@ -124,17 +157,23 @@ impl Server {
         // each (component, tag) is read from disk once per process
         let store = Arc::new(ArtifactStore::new());
         let worker_store = Arc::clone(&store);
-        let pool = WorkerPool::start_fleet(
+        let max_batch = config.max_batch;
+        let pool = WorkerPool::start_fleet_mode(
             &classes,
             config.queue_depth,
             config.max_batch,
+            config.continuous,
             move |_wid, _class: usize, _name: &str| {
                 let executor = PipelinedExecutor::with_store(
                     manifest.clone(),
                     options.clone(),
                     Arc::clone(&worker_store),
                 )?;
-                Ok(PipelineWorker { executor, default_variant: variant.clone() })
+                Ok(PipelineWorker {
+                    executor,
+                    default_variant: variant.clone(),
+                    max_batch,
+                })
             },
         )?;
         Ok(Server {

@@ -35,7 +35,9 @@ COMMANDS:
              e.g. adreno740:2,bigcore:1 — plan-predicted service times
              drive admission and per-class routing; compatible
              concurrent requests share one CFG-batched UNet dispatch
-             per denoise step.  All workers load through one shared
+             per denoise step, joining and leaving the in-flight batch
+             at step boundaries (continuous batching; [--no-continuous]
+             restores run-to-completion).  All workers load through one shared
              host-artifact store, and [--warm-slots N] sets how many
              compiled executables each worker keeps across evictions
              for upload-only warm reloads; 0 disables)

@@ -10,7 +10,13 @@
 //!   requests on different schedules share dispatches until their
 //!   schedules run out, at which point they leave the batch and the
 //!   remaining stragglers continue (eventually solo) — no request ever
-//!   waits for a longer-scheduled peer.
+//!   waits for a longer-scheduled peer.  Under step-level continuous
+//!   batching ([`crate::pipeline::continuous`]) membership is fully
+//!   dynamic: rows also *join* mid-flight (each starting at its own
+//!   schedule head) and freed straggler slots are refilled from the
+//!   queue, with [`StepBuffers::repack`] rebuilding the composition at
+//!   the step boundary.  Only rows sharing a [`BatchKey`] ever share a
+//!   composition.
 //! * **The zero-realloc step plan** ([`StepBuffers`]): host staging
 //!   vectors and device buffers for the latent, timestep and context
 //!   activations are allocated once per batch composition.  Each step

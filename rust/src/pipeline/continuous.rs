@@ -1,0 +1,143 @@
+//! Step-level continuous batching: the row lifecycle contract between
+//! the executor (which owns the denoise loop) and the scheduler that
+//! feeds it (the pool's continuous worker loop, or a scripted control
+//! in tests).
+//!
+//! A *session* is one occupancy period of a worker's UNet: it starts
+//! with whatever compatible jobs the queue held at pop time and then,
+//! at every denoise-step boundary, may
+//!
+//! * **join** — splice newly queued compatible rows into the running
+//!   batch ([`ContinuousControl::poll_joins`]); a joiner starts at its
+//!   own schedule head, the in-flight rows are unaffected;
+//! * **leave** — retire rows whose schedule ended, decode them and
+//!   hand the freed slots to joiners instead of running the straggler
+//!   tail at partial occupancy;
+//! * **preempt** — checkpoint a low-priority row (latent + schedule
+//!   position, [`Checkpoint`]) and requeue it so an otherwise
+//!   infeasible-deadline queue head can take its slot
+//!   ([`ContinuousControl::preempt_victims`]).
+//!
+//! The invariant inherited from the micro-batch work (and pinned by
+//! its parity tests): a row's numerics never depend on its batch
+//! position, its batchmates, or when it joined — every row is
+//! bit-identical to a solo run with the same seed, and a
+//! preempted-then-resumed row is bit-identical to an uninterrupted
+//! one.  The checkpoint therefore carries everything the denoise
+//! arithmetic consumes (schedule, position, latent, guidance, encoded
+//! context) and nothing derived from batch composition.
+
+use crate::error::Result;
+use crate::pipeline::batch::{BatchKey, BatchRequest};
+use crate::pipeline::executor::GenerateResult;
+
+/// Mid-flight state of a preempted row — everything needed to resume
+/// the denoise loop bit-identically in a later session, with no
+/// re-encode (the context rides along) and no re-randomization (the
+/// latent is the checkpointed one, not a reseed).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// the row's full step schedule (descending timesteps)
+    pub ts: Vec<usize>,
+    /// next schedule index to run; steps `0..pos` are already applied
+    pub pos: usize,
+    /// latent after `pos` applied steps
+    pub latent: Vec<f32>,
+    pub guidance: f64,
+    /// encoded cond context for the row's prompt
+    pub cond: Vec<f32>,
+    /// worker-busy seconds already attributed to the row
+    pub busy_s: f64,
+    /// denoise wall seconds already attributed to the row
+    pub denoise_s: f64,
+}
+
+/// One request entering a continuous session, either fresh or resuming
+/// from a preemption checkpoint.  `token` is the caller's identity for
+/// the row in every control callback; the executor never interprets it.
+pub struct ContinuousJob {
+    pub req: BatchRequest,
+    pub token: u64,
+    pub resume: Option<Checkpoint>,
+}
+
+/// Scheduling-relevant view of a live row, handed to
+/// [`ContinuousControl::preempt_victims`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveRow {
+    pub token: u64,
+    pub steps_remaining: usize,
+}
+
+/// Counters for one continuous session (one worker occupancy period).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionStats {
+    /// UNet dispatches the session ran
+    pub steps: usize,
+    /// rows spliced in after the first dispatch
+    pub joins: usize,
+    /// rows that finished while batchmates stayed live
+    pub leaves: usize,
+    /// rows checkpointed and requeued
+    pub preemptions: usize,
+    /// rows admitted from a checkpoint
+    pub resumes: usize,
+    /// rows that reached a terminal outcome (decoded or failed)
+    pub completed: usize,
+    /// most rows live in any one dispatch
+    pub peak_occupancy: usize,
+}
+
+/// How the executor's continuous session talks to its scheduler.  The
+/// pool implements this against the shared [`JobQueue`]; tests script
+/// it for deterministic join/preempt timing.
+///
+/// [`JobQueue`]: crate::coordinator::JobQueue
+pub trait ContinuousControl {
+    /// Called at a step boundary with `slots` free seats (and when the
+    /// batch has drained entirely).  Returned jobs are spliced into
+    /// the batch before the next dispatch; they must be compatible
+    /// with `key` — the executor requeues any that are not, untouched.
+    fn poll_joins(&mut self, key: &BatchKey, slots: usize) -> Vec<ContinuousJob>;
+
+    /// Called after every dispatch with the live rows and the free
+    /// seat count.  Tokens returned are checkpointed and handed back
+    /// through [`Self::requeue`]; unknown tokens are ignored.  Return
+    /// none unless the queue head cannot meet its deadline otherwise.
+    fn preempt_victims(&mut self, live: &[LiveRow], free_slots: usize) -> Vec<u64>;
+
+    /// A job leaving the session without completing: a preemption
+    /// checkpoint (`resume` is `Some`), or an incompatible joiner
+    /// bounced untouched (`resume` as it arrived).
+    fn requeue(&mut self, job: ContinuousJob);
+
+    /// Terminal outcome for a row.
+    fn complete(&mut self, token: u64, result: Result<GenerateResult>);
+
+    /// Step telemetry: rows live in the dispatch and its wall seconds.
+    fn on_step(&mut self, _live: usize, _wall_s: f64) {}
+}
+
+/// A control that never joins or preempts: the session runs its
+/// initial rows to completion, collecting outcomes — run-to-completion
+/// semantics on the continuous machinery (tests, solo drivers).
+#[derive(Default)]
+pub struct NullControl {
+    pub completions: Vec<(u64, Result<GenerateResult>)>,
+}
+
+impl ContinuousControl for NullControl {
+    fn poll_joins(&mut self, _key: &BatchKey, _slots: usize) -> Vec<ContinuousJob> {
+        Vec::new()
+    }
+
+    fn preempt_victims(&mut self, _live: &[LiveRow], _free_slots: usize) -> Vec<u64> {
+        Vec::new()
+    }
+
+    fn requeue(&mut self, _job: ContinuousJob) {}
+
+    fn complete(&mut self, token: u64, result: Result<GenerateResult>) {
+        self.completions.push((token, result));
+    }
+}

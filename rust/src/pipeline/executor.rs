@@ -26,6 +26,15 @@
 //! per batch composition and rewritten in place each step — no per-step
 //! `clone()`s, `vec![t]`s, or fresh device buffers.
 //!
+//! On top of the run-to-completion batch path sits **step-level
+//! continuous batching** ([`PipelinedExecutor::run_continuous`]): a
+//! session whose row membership changes at step boundaries — joiners
+//! splice in, finished rows decode immediately and free their slot,
+//! low-priority rows checkpoint out under deadline pressure (see
+//! [`crate::pipeline::continuous`]).  Both paths share the same
+//! per-member arithmetic, so continuous rows keep the bit-identical-
+//! to-solo guarantee.
+//!
 //! Peak memory ~= unet + max(text_encoder, decoder) instead of the sum
 //! of all three (the non-pipelined baseline, also implemented here for
 //! the Fig. 4 / ablation comparison).
@@ -51,6 +60,9 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::pipeline::batch::{form_batches, BatchKey, BatchRequest, StepBuffers};
+use crate::pipeline::continuous::{
+    Checkpoint, ContinuousControl, ContinuousJob, LiveRow, SessionStats,
+};
 use crate::pipeline::loader::Prefetcher;
 use crate::pipeline::residency::{ResidencyManager, Retention};
 use crate::pipeline::trace::MemoryTrace;
@@ -152,6 +164,27 @@ impl LoadProfile {
         self.read_s + self.parse_s + self.dequant_s
     }
 
+    /// A batch member's slice of a shared load delta: the timed stages
+    /// are amortized evenly over the `n` members (so per-request
+    /// latency percentiles aren't skewed by whoever happened to be
+    /// listed first), while the integer load/hit counters stay whole
+    /// on the first member — fleet totals must count each load once,
+    /// not `n` fractional times.
+    pub fn share(&self, n: usize, first: bool) -> LoadProfile {
+        let n = n.max(1) as f64;
+        LoadProfile {
+            cold_loads: if first { self.cold_loads } else { 0 },
+            warm_reloads: if first { self.warm_reloads } else { 0 },
+            store_hits: if first { self.store_hits } else { 0 },
+            store_misses: if first { self.store_misses } else { 0 },
+            read_s: self.read_s / n,
+            parse_s: self.parse_s / n,
+            dequant_s: self.dequant_s / n,
+            compile_s: self.compile_s / n,
+            upload_s: self.upload_s / n,
+        }
+    }
+
     /// What accumulated since an `earlier` snapshot of the same
     /// profile (per-request deltas for the stage timings).
     pub fn since(&self, earlier: &LoadProfile) -> LoadProfile {
@@ -189,8 +222,17 @@ pub struct StageTimings {
     pub decoder_load_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
-    /// stage-level load accounting for this request.  Loads shared by
-    /// a micro-batch are charged to its *first* member so fleet-level
+    /// this request's time-weighted share of the worker's wall: each
+    /// dispatch's wall divided by the rows live *in that dispatch*,
+    /// plus the request's slice of the shared non-denoise stages.
+    /// Unlike `total_s / occupancy`, this stays truthful when rows
+    /// join and leave mid-flight.  0.0 from executors that predate the
+    /// accounting (mocks) — consumers fall back to formation-time
+    /// occupancy then.
+    pub busy_share_s: f64,
+    /// stage-level load accounting for this request.  Timed load work
+    /// shared by a micro-batch is amortized across its members; the
+    /// load *counters* are charged to the first member so fleet-level
     /// totals match what actually happened, not occupancy-multiplied.
     pub loads: LoadProfile,
 }
@@ -235,10 +277,32 @@ struct Member {
     cond: Vec<f32>,
 }
 
+/// One row of a continuous session: a [`Member`] plus the lifecycle
+/// state that lets it enter, leave, checkpoint and resume
+/// independently of its batchmates.
+struct LiveMember {
+    token: u64,
+    req: BatchRequest,
+    m: Member,
+    /// next schedule index to run (steps `0..pos` already applied)
+    pos: usize,
+    /// time-weighted worker share attributed so far (carried across
+    /// preemptions)
+    busy_s: f64,
+    /// denoise wall attributed so far (carried across preemptions)
+    denoise_s: f64,
+    /// admission into *this* session (total_s covers the current
+    /// session only; queue time is the scheduler's to account)
+    start: Instant,
+}
+
 struct StageOutput {
     image: Vec<f32>,
     latent: Vec<f32>,
     steps: usize,
+    /// time-weighted denoise share: Σ over the member's live steps of
+    /// step_wall / rows_live_that_step
+    busy_denoise_s: f64,
 }
 
 impl PipelinedExecutor {
@@ -503,16 +567,22 @@ impl PipelinedExecutor {
         tm.total_s = t_start.elapsed().as_secs_f64();
         let image_size = self.manifest.image_size;
         let peak = self.residency.peak();
-        // the group's load work (shared across the batch) is charged to
-        // the first surviving member so fleet totals stay truthful
-        let mut load_delta = Some(self.profile.since(&profile_before));
+        // the group's load work (shared across the batch) is amortized
+        // over the surviving members: timed stages split evenly, load
+        // counters whole on the first survivor (see LoadProfile::share)
+        let load_delta = self.profile.since(&profile_before);
+        let n_ok = stages.iter().filter(|s| s.is_ok()).count().max(1);
+        // the batch's non-denoise wall, split evenly for busy shares
+        let overhead_share = (tm.total_s - tm.denoise_s).max(0.0) / n_ok as f64;
+        let mut first_ok = true;
         Ok(stages
             .into_iter()
             .map(|s| {
                 s.map(|so| {
                     let mut t = tm.clone();
-                    t.loads = load_delta.take().unwrap_or_default();
+                    t.loads = load_delta.share(n_ok, std::mem::take(&mut first_ok));
                     t.denoise_steps = so.steps;
+                    t.busy_share_s = overhead_share + so.busy_denoise_s;
                     if max_steps > 0 {
                         t.denoise_s = tm.denoise_s * so.steps as f64 / max_steps as f64;
                     }
@@ -625,7 +695,10 @@ impl PipelinedExecutor {
         // force a repack (context upload + fresh step buffers) on entry
         // and whenever a member's schedule ends and the batch shrinks
         let mut live_count = usize::MAX;
+        // per-member time-weighted denoise shares (busy accounting)
+        let mut busy: Vec<f64> = vec![0.0; members.len()];
         for step in 0..max_steps {
+            let t_step = Instant::now();
             let n_live = members.iter().filter(|m| m.ts.len() > step).count();
             if n_live != live_count {
                 live_count = n_live;
@@ -660,6 +733,12 @@ impl PipelinedExecutor {
                 );
                 let t_prev = m.ts.get(step + 1).copied();
                 ddim.step(&mut m.latent, &m.eps, m.ts[step], t_prev);
+            }
+            let share = t_step.elapsed().as_secs_f64() / n_live.max(1) as f64;
+            for (i, m) in members.iter().enumerate() {
+                if m.ts.len() > step {
+                    busy[i] += share;
+                }
             }
 
             // charge the decoder prefetch as soon as its bytes land
@@ -706,13 +785,14 @@ impl PipelinedExecutor {
         let dec = decoder.expect("decoder loaded");
         let t0 = Instant::now();
         let mut outputs: Vec<Result<StageOutput>> = Vec::with_capacity(members.len());
-        for m in members {
+        for (i, m) in members.into_iter().enumerate() {
             let img = dec.run(engine, &[ActInput::F32(m.latent.clone())]);
             match img {
                 Ok(out) => outputs.push(Ok(StageOutput {
                     image: out.into_iter().next().unwrap_or_default(),
                     latent: m.latent,
                     steps: m.ts.len(),
+                    busy_denoise_s: busy[i],
                 })),
                 Err(e) => outputs.push(Err(e)),
             }
@@ -723,5 +803,421 @@ impl PipelinedExecutor {
         residency.mark("decoder-evicted");
 
         Ok((outputs, max_steps))
+    }
+
+    /// Run one *continuous* session: start with `initial` rows and,
+    /// at every denoise-step boundary, let the `control` splice in
+    /// compatible joiners (each starting at its own schedule head),
+    /// retire rows whose schedule ended (decoded immediately — their
+    /// slots are reclaimed, the straggler tail never runs alone just
+    /// because it popped that way), and checkpoint/requeue preemption
+    /// victims.  Outcomes are delivered through
+    /// [`ContinuousControl::complete`], not returned: rows finish at
+    /// different times and the caller may be feeding the session long
+    /// after the first completion.
+    ///
+    /// Numerics are the batched (= solo) ones: a row's result is
+    /// bit-identical to [`Self::generate_with`] with the same seed,
+    /// regardless of when it joined, who its batchmates were, or how
+    /// often it was preempted and resumed.
+    ///
+    /// An `Err` is a shared-stage failure: rows not yet completed were
+    /// neither decoded nor requeued, and the caller must fail them.
+    pub fn run_continuous(
+        &mut self,
+        key: &BatchKey,
+        default_variant: &str,
+        initial: Vec<ContinuousJob>,
+        max_batch: usize,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<SessionStats> {
+        // fail fast on an infeasible budget, as run_group does
+        if self.options.memory_budget != usize::MAX {
+            let needed = self.predicted_peak(&key.variant, &key.weights_tag)?;
+            if needed > self.options.memory_budget {
+                return Err(Error::Pipeline(format!(
+                    "infeasible under memory budget: stage sequence needs {:.1} MB \
+                     resident ({} variant, {} weights, pipelined={}), budget is {:.1} MB",
+                    needed as f64 / 1e6,
+                    key.variant,
+                    key.weights_tag,
+                    self.options.pipelined,
+                    self.options.memory_budget as f64 / 1e6,
+                )));
+            }
+        }
+        // legacy scalar-timestep artifacts cannot carry per-row
+        // schedules: run rows one at a time instead of refusing service
+        let cap = if crate::pipeline::batch::supports_microbatch(&self.manifest, &key.variant)
+        {
+            max_batch.max(1)
+        } else {
+            1
+        };
+        let unet_name = format!("unet_{}", key.variant);
+        let unet = self.acquire_component(&unet_name, &key.weights_tag)?;
+        let result = self.continuous_session(key, default_variant, &unet, initial, cap, control);
+        if result.is_err() {
+            // a failed session must not leak pins into the next one
+            self.residency.purge("text_encoder", AUX_TAG);
+            self.residency.purge("decoder", AUX_TAG);
+            self.uncond_ctx = None;
+        }
+        drop(unet);
+        let _ = self.residency.release(&unet_name, &key.weights_tag, Retention::Cache);
+        result
+    }
+
+    /// The session loop between UNet acquisition and drain: admit →
+    /// retire → recompose → dispatch → account → retire → preempt →
+    /// poll, until no row is live and the control has no joiners.
+    fn continuous_session(
+        &mut self,
+        key: &BatchKey,
+        default_variant: &str,
+        unet: &ResidentComponent,
+        initial: Vec<ContinuousJob>,
+        cap: usize,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<SessionStats> {
+        let mut stats = SessionStats::default();
+        let mut sb = StepBuffers::for_unet(unet, cap)?;
+        let mut live: Vec<LiveMember> = Vec::new();
+        let mut pending = initial;
+        // rolling load anchor: deltas are charged (amortized) to the
+        // rows completed at each flush
+        let mut anchor = self.profile.clone();
+        let mut ctx_host: Vec<f32> = Vec::new();
+        // composition changed since the last repack (join/leave/preempt)
+        let mut dirty = true;
+
+        loop {
+            // admit at most the free seats; the remainder stays pending
+            // for the next boundary (cap can be 1 on legacy artifacts
+            // even when the pop handed us more)
+            if !pending.is_empty() && live.len() < cap {
+                let take = (cap - live.len()).min(pending.len());
+                let wave: Vec<ContinuousJob> = pending.drain(..take).collect();
+                let before = live.len();
+                self.admit_continuous(wave, key, default_variant, &mut live, &mut stats, control)?;
+                dirty |= live.len() != before;
+            }
+            // a checkpoint resumed past its schedule end has nothing
+            // left to denoise: retire it before packing would index
+            // beyond the schedule
+            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, control)?;
+
+            if live.is_empty() {
+                if pending.is_empty() {
+                    pending = control.poll_joins(key, cap);
+                }
+                if pending.is_empty() {
+                    break;
+                }
+                continue;
+            }
+
+            if dirty {
+                let uncond = self
+                    .uncond_ctx
+                    .clone()
+                    .ok_or_else(|| Error::Runtime("uncond context missing".into()))?;
+                ctx_host.clear();
+                for lm in &live {
+                    // context rows per request: uncond then cond,
+                    // matching the solo CFG layout
+                    ctx_host.extend_from_slice(&uncond);
+                    ctx_host.extend_from_slice(&lm.m.cond);
+                }
+                sb.repack(&self.engine, unet, &ctx_host, live.len())?;
+                dirty = false;
+            }
+
+            let t_step = Instant::now();
+            for (k, lm) in live.iter().enumerate() {
+                sb.pack(k, &lm.m.latent, lm.m.ts[lm.pos] as f32);
+            }
+            {
+                // one CFG-batched UNet dispatch for every live row
+                let PipelinedExecutor { engine, ddim, .. } = self;
+                sb.dispatch(engine, unet)?;
+                let n = sb.row_elems();
+                let eps2 = &sb.out[0];
+                for (k, lm) in live.iter_mut().enumerate() {
+                    let base = 2 * k * n;
+                    let m = &mut lm.m;
+                    guide(
+                        &eps2[base..base + n],
+                        &eps2[base + n..base + 2 * n],
+                        m.guidance,
+                        &mut m.eps,
+                    );
+                    let t_prev = m.ts.get(lm.pos + 1).copied();
+                    ddim.step(&mut m.latent, &m.eps, m.ts[lm.pos], t_prev);
+                    lm.pos += 1;
+                }
+            }
+            let wall = t_step.elapsed().as_secs_f64();
+            stats.steps += 1;
+            let n_live = live.len();
+            for lm in &mut live {
+                lm.busy_s += wall / n_live as f64;
+                lm.denoise_s += wall;
+            }
+            control.on_step(n_live, wall);
+
+            // reclaim finished rows' slots before the boundary decisions
+            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, control)?;
+
+            // preemption: the control names victims (typically when the
+            // queue head's deadline is infeasible and no slot is free)
+            let rows: Vec<LiveRow> = live
+                .iter()
+                .map(|lm| LiveRow {
+                    token: lm.token,
+                    steps_remaining: lm.m.ts.len() - lm.pos,
+                })
+                .collect();
+            for token in control.preempt_victims(&rows, cap.saturating_sub(live.len())) {
+                let Some(at) = live.iter().position(|lm| lm.token == token) else {
+                    continue; // already retired or unknown: ignore
+                };
+                let LiveMember { token, req, m, pos, busy_s, denoise_s, .. } = live.remove(at);
+                stats.preemptions += 1;
+                dirty = true;
+                control.requeue(ContinuousJob {
+                    req,
+                    token,
+                    resume: Some(Checkpoint {
+                        ts: m.ts,
+                        pos,
+                        latent: m.latent,
+                        guidance: m.guidance,
+                        cond: m.cond,
+                        busy_s,
+                        denoise_s,
+                    }),
+                });
+            }
+
+            // refill freed seats at this boundary (leftover pending
+            // jobs keep their place ahead of fresh joiners)
+            let free = cap.saturating_sub(live.len());
+            if free > pending.len() {
+                let more = control.poll_joins(key, free - pending.len());
+                pending.extend(more);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Admit jobs into the live set: fresh rows are encoded (one
+    /// encoder acquire per admission wave, evicted after), resumed
+    /// rows are rebuilt from their checkpoints without touching the
+    /// encoder.  Jobs that resolve to a different executable than the
+    /// session's are bounced back untouched — reclaimed slots never
+    /// mix rows across [`BatchKey`]s.
+    fn admit_continuous(
+        &mut self,
+        jobs: Vec<ContinuousJob>,
+        key: &BatchKey,
+        default_variant: &str,
+        live: &mut Vec<LiveMember>,
+        stats: &mut SessionStats,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<()> {
+        let mut accepted: Vec<ContinuousJob> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let variant = job.req.overrides.variant.as_deref().unwrap_or(default_variant);
+            if variant != key.variant || self.options.unet_weights != key.weights_tag {
+                control.requeue(job);
+                continue;
+            }
+            accepted.push(job);
+        }
+        if accepted.is_empty() {
+            return Ok(());
+        }
+        let joined = stats.steps > 0;
+        // the encoder is needed for any fresh prompt, and for the
+        // uncond context when no earlier request cached it
+        let need_encoder =
+            self.uncond_ctx.is_none() || accepted.iter().any(|j| j.resume.is_none());
+        let text = if need_encoder {
+            Some(self.acquire_component("text_encoder", AUX_TAG)?)
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+        let seq = self.manifest.tokenizer.seq_len;
+        let vocab = self.manifest.tokenizer.vocab_size;
+        if self.uncond_ctx.is_none() {
+            let enc = text.as_ref().expect("encoder acquired for uncond");
+            let ids = tokenizer::encode("", vocab, seq);
+            let out = enc.run(&self.engine, &[ActInput::i32(ids)])?;
+            self.uncond_ctx = Some(Rc::new(out.into_iter().next().unwrap_or_default()));
+        }
+        let s = self.manifest.latent_size;
+        let c = self.manifest.latent_channels;
+        let n_latent = s * s * c;
+        let n_admitted = accepted.len();
+        for job in accepted {
+            let ContinuousJob { req, token, resume } = job;
+            let (m, pos, busy_s, denoise_s) = match resume {
+                Some(cp) => {
+                    stats.resumes += 1;
+                    let m = Member {
+                        ts: cp.ts,
+                        guidance: cp.guidance,
+                        latent: cp.latent,
+                        eps: vec![0f32; n_latent],
+                        cond: cp.cond,
+                    };
+                    (m, cp.pos, cp.busy_s, cp.denoise_s)
+                }
+                None => {
+                    let enc = text.as_ref().expect("encoder acquired for fresh rows");
+                    let num_steps =
+                        req.overrides.num_steps.unwrap_or(self.options.num_steps);
+                    let guidance = req
+                        .overrides
+                        .guidance_scale
+                        .unwrap_or(self.options.guidance_scale);
+                    let ids = tokenizer::encode(&req.prompt, vocab, seq);
+                    let cond = enc
+                        .run(&self.engine, &[ActInput::i32(ids)])?
+                        .into_iter()
+                        .next()
+                        .unwrap_or_default();
+                    let mut rng = Rng::new(req.seed);
+                    let m = Member {
+                        ts: self.ddim.timesteps(num_steps),
+                        guidance,
+                        latent: rng.normal_f32_vec(n_latent),
+                        eps: vec![0f32; n_latent],
+                        cond,
+                    };
+                    (m, 0, 0.0, 0.0)
+                }
+            };
+            if joined {
+                stats.joins += 1;
+            }
+            live.push(LiveMember {
+                token,
+                req,
+                m,
+                pos,
+                busy_s,
+                denoise_s,
+                start: Instant::now(),
+            });
+        }
+        // the admission wave's encode wall, split across its rows
+        let enc_share = t0.elapsed().as_secs_f64() / n_admitted as f64;
+        for lm in live.iter_mut().rev().take(n_admitted) {
+            lm.busy_s += enc_share;
+        }
+        if text.is_some() {
+            drop(text);
+            self.residency.release("text_encoder", AUX_TAG, Retention::Evict)?;
+            self.residency.mark("text-encoder-evicted");
+        }
+        stats.peak_occupancy = stats.peak_occupancy.max(live.len());
+        Ok(())
+    }
+
+    /// Remove rows whose schedule ended and flush them through the
+    /// decoder.  A leave is only counted when batchmates stay live —
+    /// the last rows out are just the session ending.
+    fn retire_finished(
+        &mut self,
+        live: &mut Vec<LiveMember>,
+        anchor: &mut LoadProfile,
+        dirty: &mut bool,
+        stats: &mut SessionStats,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<()> {
+        let mut finished: Vec<LiveMember> = Vec::new();
+        let mut i = 0;
+        while i < live.len() {
+            if live[i].pos >= live[i].m.ts.len() {
+                finished.push(live.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        if finished.is_empty() {
+            return Ok(());
+        }
+        if !live.is_empty() {
+            stats.leaves += finished.len();
+        }
+        *dirty = true;
+        self.flush_continuous(finished, anchor, stats, control)
+    }
+
+    /// Decode and complete a wave of finished rows: decoder acquired
+    /// (warm tier makes the repeat acquires upload-only), each row
+    /// decoded and delivered, decoder evicted again.  The session's
+    /// load delta since the last flush is amortized over the wave.
+    fn flush_continuous(
+        &mut self,
+        finished: Vec<LiveMember>,
+        anchor: &mut LoadProfile,
+        stats: &mut SessionStats,
+        control: &mut dyn ContinuousControl,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let dec = match self.acquire_component("decoder", AUX_TAG) {
+            Ok(d) => d,
+            Err(e) => {
+                // decoder never came up: these rows are lost either way,
+                // deliver the failure before surfacing it
+                for lm in finished {
+                    control.complete(lm.token, Err(e.clone()));
+                    stats.completed += 1;
+                }
+                return Err(e);
+            }
+        };
+        let dec_load_s = t0.elapsed().as_secs_f64();
+        let load_delta = self.profile.since(anchor);
+        let n = finished.len();
+        let image_size = self.manifest.image_size;
+        let peak = self.residency.peak();
+        let mut first_ok = true;
+        for lm in finished {
+            let token = lm.token;
+            let t_dec = Instant::now();
+            let img = dec.run(&self.engine, &[ActInput::F32(lm.m.latent.clone())]);
+            let decode_s = t_dec.elapsed().as_secs_f64();
+            let result = img.map(|out| {
+                let t = StageTimings {
+                    denoise_steps: lm.m.ts.len(),
+                    denoise_s: lm.denoise_s,
+                    decode_s,
+                    decoder_load_s: dec_load_s / n as f64,
+                    busy_share_s: lm.busy_s + decode_s + dec_load_s / n as f64,
+                    total_s: lm.start.elapsed().as_secs_f64(),
+                    loads: load_delta.share(n, std::mem::take(&mut first_ok)),
+                    ..Default::default()
+                };
+                GenerateResult {
+                    image: out.into_iter().next().unwrap_or_default(),
+                    image_size,
+                    latent: lm.m.latent,
+                    timings: t,
+                    peak_memory: peak,
+                }
+            });
+            control.complete(token, result);
+            stats.completed += 1;
+        }
+        *anchor = self.profile.clone();
+        drop(dec);
+        self.residency.release("decoder", AUX_TAG, Retention::Evict)?;
+        self.residency.mark("decoder-evicted");
+        Ok(())
     }
 }

@@ -1,9 +1,11 @@
 //! Pipelined execution (paper Sec. 3.3): memory ledger + occupancy
 //! trace, store-backed child-thread component prefetch, the shared
 //! component residency layer (with its warm executable tier), the
-//! cross-request micro-batcher, and the stage-interleaved executor.
+//! cross-request micro-batcher with its step-level continuous-batching
+//! row lifecycle, and the stage-interleaved executor.
 
 pub mod batch;
+pub mod continuous;
 pub mod executor;
 pub mod loader;
 pub mod memory;
@@ -11,6 +13,9 @@ pub mod residency;
 pub mod trace;
 
 pub use batch::{form_batches, BatchGroup, BatchKey, BatchRequest, StepBuffers};
+pub use continuous::{
+    Checkpoint, ContinuousControl, ContinuousJob, LiveRow, NullControl, SessionStats,
+};
 pub use executor::{
     ExecOptions, ExecOverrides, GenerateResult, LoadProfile, PipelinedExecutor,
     ResidentComponent, StageTimings,

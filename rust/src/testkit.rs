@@ -351,12 +351,13 @@ fn fmt_usize_arr(v: &[usize]) -> String {
 /// and the tier-1 smoke test.
 pub mod throughput {
     use std::path::Path;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
     use super::{fake_artifacts_dir, FakeArtifactSpec};
     use crate::config::AppConfig;
-    use crate::coordinator::Server;
+    use crate::coordinator::{Server, SubmitOptions};
     use crate::error::{Error, Result};
+    use crate::util::rng::Rng;
     use crate::util::stats::summarize;
 
     /// One measured operating point.
@@ -421,7 +422,18 @@ pub mod throughput {
             latencies.push(t0.elapsed().as_secs_f64());
         }
         let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
-        let occupancy = server.with_metrics(|m| m.mean_batch_occupancy());
+        // continuous sessions report rows-per-denoise-second (membership
+        // changes mid-flight, so formation-time occupancy undercounts a
+        // session that filled up via joins); run-to-completion pools
+        // only have the formation-time mean
+        let occupancy = server.with_metrics(|m| {
+            let tw = m.time_weighted_occupancy();
+            if tw > 0.0 {
+                tw
+            } else {
+                m.mean_batch_occupancy()
+            }
+        });
         Ok(Row {
             batch: max_batch,
             requests: wl.requests,
@@ -438,6 +450,181 @@ pub mod throughput {
     pub fn run_profile(label: &str, wl: &Workload, batches: &[usize]) -> Result<Vec<Row>> {
         let dir = fake_artifacts_dir(label, &wl.spec)?;
         batches.iter().map(|&b| run_at(&dir, wl, b)).collect()
+    }
+
+    /// One open-loop (Poisson arrivals) operating point for one
+    /// scheduling mode.
+    #[derive(Debug, Clone)]
+    pub struct OpenLoopRow {
+        /// step-level continuous batching vs run-to-completion
+        pub continuous: bool,
+        /// offered arrival rate (requests/s)
+        pub lambda_rps: f64,
+        /// offered load relative to the solo service rate
+        pub load_factor: f64,
+        pub requests: usize,
+        pub wall_s: f64,
+        pub p50_latency_s: f64,
+        pub p95_latency_s: f64,
+        pub p99_latency_s: f64,
+        pub mean_occupancy: f64,
+        pub joins: usize,
+        pub preemptions: usize,
+    }
+
+    /// Drive a 1-worker pool with *open-loop* Poisson arrivals at
+    /// `lambda_rps`: requests arrive on a schedule the server does not
+    /// control (deterministic exponential gaps from `seed`, so the
+    /// continuous and run-to-completion runs see identical traffic),
+    /// and each request's latency is measured the moment it completes.
+    /// Step schedules alternate short/long so an in-flight batch always
+    /// has straggler slots worth reclaiming.
+    pub fn run_open_loop(
+        artifacts: &Path,
+        wl: &Workload,
+        max_batch: usize,
+        lambda_rps: f64,
+        continuous: bool,
+        seed: u64,
+    ) -> Result<OpenLoopRow> {
+        let mut cfg = AppConfig::default();
+        cfg.artifacts_dir = artifacts.to_path_buf();
+        cfg.num_workers = 1;
+        cfg.queue_depth = wl.requests.max(1) * 2;
+        cfg.max_batch = max_batch;
+        cfg.num_steps = wl.steps;
+        cfg.continuous = continuous;
+        let mut server = Server::start(&cfg)?;
+
+        let mut rng = Rng::new(seed);
+        let gaps: Vec<f64> = (0..wl.requests)
+            .map(|_| {
+                let u = rng.next_f64();
+                -(1.0 - u).ln() / lambda_rps.max(1e-9)
+            })
+            .collect();
+        let short = (wl.steps / 2).max(2);
+        let long = wl.steps * 2;
+
+        let t0 = Instant::now();
+        let mut collectors = Vec::with_capacity(wl.requests);
+        let mut due_s = 0.0f64;
+        for (i, gap) in gaps.iter().enumerate() {
+            due_s += gap;
+            let due = t0 + Duration::from_secs_f64(due_s);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let opts = SubmitOptions {
+                num_steps: Some(if i % 2 == 0 { short } else { long }),
+                ..Default::default()
+            };
+            let arrival = Instant::now();
+            let rx = server.submit_with(&format!("open {i}"), i as u64, opts)?;
+            // per-request collector so completion is observed when it
+            // happens, not when an earlier channel unblocks
+            collectors.push(std::thread::spawn(move || -> Result<f64> {
+                rx.recv()
+                    .map_err(|_| Error::Runtime("worker dropped request".into()))??;
+                Ok(arrival.elapsed().as_secs_f64())
+            }));
+        }
+        let mut latencies = Vec::with_capacity(collectors.len());
+        for c in collectors {
+            let lat = c
+                .join()
+                .map_err(|_| Error::Runtime("latency collector panicked".into()))??;
+            latencies.push(lat);
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let s = summarize(&latencies);
+        let (occupancy, joins, preemptions) = server.with_metrics(|m| {
+            let tw = m.time_weighted_occupancy();
+            let occ = if tw > 0.0 { tw } else { m.mean_batch_occupancy() };
+            (occ, m.joins, m.preemptions)
+        });
+        Ok(OpenLoopRow {
+            continuous,
+            lambda_rps,
+            load_factor: 0.0, // filled by the sweep
+            requests: wl.requests,
+            wall_s,
+            p50_latency_s: s.p50,
+            p95_latency_s: s.p95,
+            p99_latency_s: s.p99,
+            mean_occupancy: occupancy,
+            joins,
+            preemptions,
+        })
+    }
+
+    /// Offered-load sweep, continuous vs run-to-completion on identical
+    /// arrival schedules.  The load unit is calibrated from a solo run:
+    /// `load_factor = 1.0` offers one request per measured solo service
+    /// time, so factors > 1 oversubscribe a run-to-completion worker.
+    pub fn run_open_loop_profile(
+        label: &str,
+        wl: &Workload,
+        max_batch: usize,
+        load_factors: &[f64],
+    ) -> Result<Vec<OpenLoopRow>> {
+        let dir = fake_artifacts_dir(label, &wl.spec)?;
+        let calib = Workload { requests: 2, ..wl.clone() };
+        let solo = run_at(&dir, &calib, 1)?;
+        let service_s = (solo.wall_s / calib.requests as f64).max(1e-6);
+        let mut rows = Vec::new();
+        for (k, &f) in load_factors.iter().enumerate() {
+            let lambda = f / service_s;
+            for continuous in [false, true] {
+                let mut row =
+                    run_open_loop(&dir, wl, max_batch, lambda, continuous, 42 + k as u64)?;
+                row.load_factor = f;
+                rows.push(row);
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Serialize closed-loop rows plus the open-loop sweep as the
+    /// BENCH_throughput.json payload (a superset of [`to_json`]'s).
+    pub fn to_json_with_open_loop(
+        rows: &[Row],
+        open: &[OpenLoopRow],
+        fast: bool,
+    ) -> String {
+        let closed = to_json(rows, fast);
+        let body: Vec<String> = open
+            .iter()
+            .map(|r| {
+                format!(
+                    concat!(
+                        "  {{\"continuous\": {}, \"lambda_rps\": {:.3}, ",
+                        "\"load_factor\": {:.3}, \"requests\": {}, ",
+                        "\"wall_s\": {:.6}, \"p50_latency_s\": {:.6}, ",
+                        "\"p95_latency_s\": {:.6}, \"p99_latency_s\": {:.6}, ",
+                        "\"mean_occupancy\": {:.3}, \"joins\": {}, ",
+                        "\"preemptions\": {}}}"
+                    ),
+                    r.continuous,
+                    r.lambda_rps,
+                    r.load_factor,
+                    r.requests,
+                    r.wall_s,
+                    r.p50_latency_s,
+                    r.p95_latency_s,
+                    r.p99_latency_s,
+                    r.mean_occupancy,
+                    r.joins,
+                    r.preemptions,
+                )
+            })
+            .collect();
+        let open_json = format!(",\n\"open_loop\": [\n{}\n]\n}}\n", body.join(",\n"));
+        // splice the open-loop section before the closing brace
+        let trimmed = closed.trim_end();
+        let without_close = trimmed.strip_suffix('}').unwrap_or(trimmed);
+        format!("{}{}", without_close.trim_end().trim_end_matches('\n'), open_json)
     }
 
     /// Serialize rows as the BENCH_throughput.json payload.

@@ -1,0 +1,336 @@
+//! Step-level continuous batching acceptance tests on the stub
+//! backend: a scripted [`ContinuousControl`] pins join/preempt timing
+//! to exact step boundaries, so dispatch counts, slot reuse and the
+//! bit-identical-to-solo invariant are all checked deterministically.
+//!
+//! Pinned invariants:
+//! * a row that joins an in-flight batch at step k is bit-identical to
+//!   a solo run with the same seed;
+//! * a preempted-then-resumed row is bit-identical to an uninterrupted
+//!   one, with no re-encode and no extra UNet dispatches overall;
+//! * reclaimed slots serve joiners (one dispatch per step index, at
+//!   the session's seat cap) and never mix rows across `BatchKey`s;
+//! * batch load time is amortized across members while the integer
+//!   load counters stay whole on the first member;
+//! * the server pool serves continuous sessions end-to-end and reports
+//!   them.
+
+use std::path::Path;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::error::Result;
+use mobile_diffusion::pipeline::{
+    BatchKey, BatchRequest, ContinuousControl, ContinuousJob, ExecOptions, ExecOverrides,
+    GenerateResult, LiveRow, PipelinedExecutor,
+};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::testkit::{self, FakeArtifactSpec};
+
+fn small_spec() -> FakeArtifactSpec {
+    FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    }
+}
+
+fn executor(dir: &Path, num_steps: usize) -> PipelinedExecutor {
+    let m = Manifest::load(dir).unwrap();
+    PipelinedExecutor::new(m, ExecOptions { num_steps, ..Default::default() }).unwrap()
+}
+
+fn key() -> BatchKey {
+    BatchKey { variant: "mobile".into(), weights_tag: "fp32".into() }
+}
+
+fn job(prompt: &str, seed: u64, token: u64, steps: usize) -> ContinuousJob {
+    ContinuousJob {
+        req: BatchRequest {
+            prompt: prompt.to_string(),
+            seed,
+            overrides: ExecOverrides { num_steps: Some(steps), ..Default::default() },
+        },
+        token,
+        resume: None,
+    }
+}
+
+fn solo(dir: &Path, prompt: &str, seed: u64, steps: usize) -> GenerateResult {
+    let mut ex = executor(dir, 20);
+    let ov = ExecOverrides { num_steps: Some(steps), ..Default::default() };
+    ex.generate_with(prompt, seed, "mobile", &ov).unwrap()
+}
+
+/// Scripts the scheduler side of a session: joiners release once the
+/// session has run their step count, preemptions fire at the boundary
+/// after theirs.
+#[derive(Default)]
+struct ScriptControl {
+    /// `(after_steps, job)` — released at the first boundary where the
+    /// session has run at least `after_steps` dispatches
+    joins: Vec<(usize, ContinuousJob)>,
+    /// `(after_steps, token)` — named as a victim at that boundary
+    preempts: Vec<(usize, u64)>,
+    steps: usize,
+    completions: Vec<(u64, Result<GenerateResult>)>,
+    requeued: Vec<ContinuousJob>,
+}
+
+impl ScriptControl {
+    fn result_of(&self, token: u64) -> &GenerateResult {
+        self.completions
+            .iter()
+            .find(|(t, _)| *t == token)
+            .unwrap_or_else(|| panic!("token {token} never completed"))
+            .1
+            .as_ref()
+            .unwrap()
+    }
+}
+
+impl ContinuousControl for ScriptControl {
+    fn poll_joins(&mut self, _key: &BatchKey, slots: usize) -> Vec<ContinuousJob> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.joins.len() && out.len() < slots {
+            if self.joins[i].0 <= self.steps {
+                out.push(self.joins.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn preempt_victims(&mut self, live: &[LiveRow], _free_slots: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.preempts.len() {
+            let (after, token) = self.preempts[i];
+            if after <= self.steps && live.iter().any(|r| r.token == token) {
+                out.push(token);
+                self.preempts.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn requeue(&mut self, job: ContinuousJob) {
+        self.requeued.push(job);
+    }
+
+    fn complete(&mut self, token: u64, result: Result<GenerateResult>) {
+        self.completions.push((token, result));
+    }
+
+    fn on_step(&mut self, _live: usize, _wall_s: f64) {
+        self.steps += 1;
+    }
+}
+
+#[test]
+fn joiner_at_a_step_boundary_is_bit_identical_to_solo() {
+    let dir = testkit::fake_artifacts_dir("cont_join", &small_spec()).unwrap();
+    let solo_a = solo(&dir, "an astronaut", 1, 4);
+    let solo_b = solo(&dir, "a lighthouse", 2, 6);
+
+    let mut ex = executor(&dir, 20);
+    let mut ctl = ScriptControl::default();
+    ctl.joins.push((1, job("a lighthouse", 2, 11, 6)));
+    let stats = ex
+        .run_continuous(&key(), "mobile", vec![job("an astronaut", 1, 10, 4)], 2, &mut ctl)
+        .unwrap();
+
+    // A runs dispatches 1..=4; B joins after dispatch 1 and runs 2..=7
+    assert_eq!(stats.steps, 7);
+    assert_eq!(stats.joins, 1);
+    assert_eq!(stats.peak_occupancy, 2);
+    assert_eq!(stats.completed, 2);
+    let st = ex.engine.device_stats();
+    assert_eq!(st.executions_of("unet_mobile"), 7, "one dispatch per step index");
+    assert_eq!(st.rows_of("unet_mobile"), 2 * (1 + 3 * 2 + 3), "CFG rows track occupancy");
+
+    let a = ctl.result_of(10);
+    assert_eq!(a.latent, solo_a.latent, "pre-join row unaffected by the splice");
+    assert_eq!(a.image, solo_a.image);
+    let b = ctl.result_of(11);
+    assert_eq!(b.latent, solo_b.latent, "joiner starts at its own schedule head");
+    assert_eq!(b.image, solo_b.image);
+    assert_eq!(b.timings.denoise_steps, 6);
+}
+
+#[test]
+fn preempted_row_resumes_bit_identically_in_a_later_session() {
+    let dir = testkit::fake_artifacts_dir("cont_preempt", &small_spec()).unwrap();
+    let uninterrupted = solo(&dir, "a bowl of ramen", 3, 8);
+
+    let mut ex = executor(&dir, 20);
+    let mut ctl = ScriptControl::default();
+    ctl.preempts.push((3, 7));
+    let s1 = ex
+        .run_continuous(&key(), "mobile", vec![job("a bowl of ramen", 3, 7, 8)], 2, &mut ctl)
+        .unwrap();
+    assert_eq!(s1.steps, 3, "preempted at the boundary after step 3");
+    assert_eq!(s1.preemptions, 1);
+    assert_eq!(s1.completed, 0);
+    assert!(ctl.completions.is_empty());
+
+    let resumed = ctl.requeued.pop().expect("victim was requeued");
+    assert!(ctl.requeued.is_empty());
+    {
+        let cp = resumed.resume.as_ref().expect("victim carries a checkpoint");
+        assert_eq!(cp.pos, 3, "checkpoint taken mid-schedule");
+        assert_eq!(cp.ts.len(), 8);
+    }
+
+    let s2 = ex
+        .run_continuous(&key(), "mobile", vec![resumed], 2, &mut ctl)
+        .unwrap();
+    assert_eq!(s2.steps, 5, "only the remaining schedule ran");
+    assert_eq!(s2.resumes, 1);
+    assert_eq!(s2.completed, 1);
+
+    let r = ctl.result_of(7);
+    assert_eq!(r.latent, uninterrupted.latent, "resume is bit-identical");
+    assert_eq!(r.image, uninterrupted.image);
+    assert_eq!(r.timings.denoise_steps, 8);
+    // across both sessions, exactly one uninterrupted run's dispatches
+    assert_eq!(ex.engine.device_stats().executions_of("unet_mobile"), 8);
+}
+
+#[test]
+fn incompatible_joiner_is_bounced_untouched() {
+    let dir = testkit::fake_artifacts_dir("cont_bounce", &small_spec()).unwrap();
+    let mut ex = executor(&dir, 20);
+    let mut ctl = ScriptControl::default();
+    let mut foreign = job("wrong lane", 5, 21, 4);
+    foreign.req.overrides.variant = Some("base".into());
+    ctl.joins.push((1, foreign));
+    let stats = ex
+        .run_continuous(&key(), "mobile", vec![job("right lane", 4, 20, 4)], 2, &mut ctl)
+        .unwrap();
+
+    assert_eq!(stats.joins, 0, "the foreign row never joined");
+    assert_eq!(stats.completed, 1);
+    let st = ex.engine.device_stats();
+    assert_eq!(st.executions_of("unet_base"), 0, "foreign executable never ran");
+    assert_eq!(ctl.requeued.len(), 1);
+    let bounced = &ctl.requeued[0];
+    assert_eq!(bounced.token, 21);
+    assert!(bounced.resume.is_none(), "bounced exactly as it arrived, not checkpointed");
+}
+
+#[test]
+fn reclaimed_slots_serve_joiners_and_everyone_matches_solo() {
+    let dir = testkit::fake_artifacts_dir("cont_reclaim", &small_spec()).unwrap();
+    let solo_short = solo(&dir, "short", 1, 3);
+    let solo_long = solo(&dir, "long", 2, 8);
+    let solo_late = solo(&dir, "late", 3, 4);
+
+    let mut ex = executor(&dir, 20);
+    let mut ctl = ScriptControl::default();
+    // "late" arrives exactly when "short" retires and frees its seat
+    ctl.joins.push((3, job("late", 3, 32, 4)));
+    let stats = ex
+        .run_continuous(
+            &key(),
+            "mobile",
+            vec![job("short", 1, 30, 3), job("long", 2, 31, 8)],
+            2,
+            &mut ctl,
+        )
+        .unwrap();
+
+    assert_eq!(stats.steps, 8);
+    assert_eq!(stats.peak_occupancy, 2, "the seat cap held through the handoff");
+    assert_eq!(stats.joins, 1);
+    assert_eq!(stats.leaves, 2, "short and late left while long stayed live");
+    assert_eq!(stats.completed, 3);
+    let st = ex.engine.device_stats();
+    assert_eq!(st.executions_of("unet_mobile"), 8, "one dispatch per step index");
+    // steps 1-3 at B=2, 4-7 at B=2 (late in short's seat), 8 at B=1
+    assert_eq!(st.rows_of("unet_mobile"), 2 * (3 * 2 + 4 * 2 + 1));
+
+    for (token, want) in [(30u64, &solo_short), (31, &solo_long), (32, &solo_late)] {
+        let r = ctl.result_of(token);
+        assert_eq!(r.latent, want.latent, "token {token}: reclaimed-slot parity");
+        assert_eq!(r.image, want.image, "token {token}");
+    }
+}
+
+#[test]
+fn batch_load_time_is_amortized_and_counters_stay_whole() {
+    let dir = testkit::fake_artifacts_dir("cont_amort", &small_spec()).unwrap();
+    let mut ex = executor(&dir, 3);
+    let reqs: Vec<BatchRequest> = (0..4)
+        .map(|i| BatchRequest {
+            prompt: format!("member {i}"),
+            seed: i as u64,
+            overrides: ExecOverrides::default(),
+        })
+        .collect();
+    let results = ex.generate_batch(&reqs, "mobile");
+    let members: Vec<GenerateResult> =
+        results.into_iter().map(|r| r.unwrap()).collect();
+
+    let first = &members[0].timings.loads;
+    let timed = first.read_s + first.parse_s + first.dequant_s + first.compile_s + first.upload_s;
+    assert!(timed > 0.0, "the cold batch paid real load time");
+    for (i, m) in members.iter().enumerate().skip(1) {
+        let l = &m.timings.loads;
+        // timed load work splits evenly — no member is charged the
+        // whole batch's loads just for being listed first
+        assert!((l.read_s - first.read_s).abs() < 1e-12, "member {i}");
+        assert!((l.parse_s - first.parse_s).abs() < 1e-12, "member {i}");
+        assert!((l.dequant_s - first.dequant_s).abs() < 1e-12, "member {i}");
+        assert!((l.compile_s - first.compile_s).abs() < 1e-12, "member {i}");
+        assert!((l.upload_s - first.upload_s).abs() < 1e-12, "member {i}");
+        // integer counters stay whole on the first member so fleet
+        // totals count each load once
+        assert_eq!(l.cold_loads + l.warm_reloads, 0, "member {i}");
+        assert_eq!(l.store_hits + l.store_misses, 0, "member {i}");
+    }
+    assert!(first.cold_loads >= 3, "encoder + unet + decoder charged once");
+}
+
+#[test]
+fn continuous_pool_serves_end_to_end_and_reports_sessions() {
+    let dir = testkit::fake_artifacts_dir("cont_pool", &small_spec()).unwrap();
+    let solo_first = solo(&dir, "prompt 0", 0, 3);
+
+    let mut cfg = AppConfig::default();
+    assert!(cfg.continuous, "continuous scheduling is the default");
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 3;
+    cfg.num_workers = 1;
+    cfg.max_batch = 4;
+    let mut server = Server::start(&cfg).unwrap();
+
+    let receivers: Vec<_> = (0..4)
+        .map(|i| server.submit(&format!("prompt {i}"), i as u64).unwrap())
+        .collect();
+    let mut first = None;
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.timings.denoise_steps, 3);
+        assert!(resp.image.iter().all(|v| v.is_finite()));
+        if i == 0 {
+            first = Some(resp);
+        }
+    }
+    let first = first.unwrap();
+    assert_eq!(
+        first.latent, solo_first.latent,
+        "a continuous-pool row is bit-identical to its solo run"
+    );
+    server.with_metrics(|m| {
+        assert!(m.sessions >= 1, "the pool ran continuous sessions");
+        assert_eq!(m.stage.requests_ok, 4);
+    });
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("continuous:"), "{report}");
+}
