@@ -1,0 +1,228 @@
+//! Goodput and tail latency under injected device faults on the stub
+//! backend.  Emits `BENCH_chaos.json` (repo root).
+//!
+//! Two workloads over the same synthetic artifacts and request mix:
+//!
+//! * **fault-free** — the baseline serving run;
+//! * **faulted** — three fixed fault seeds, each a schedule of one
+//!   guaranteed transient dispatch fault per worker device plus seeded
+//!   random transients and latency spikes; workers absorb them through
+//!   checkpoint retry and supervision.
+//!
+//! The claim is the *shape*: under faults every request still resolves
+//! exactly once (ok + failed == submitted), goodput stays positive,
+//! and the injected-fault/retry counters surface in the metrics.
+//! Absolute numbers are synthetic (stub backend).
+//!
+//!     cargo bench --bench chaos            # full workload
+//!     cargo bench --bench chaos -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
+
+const FAULT_SEEDS: [u64; 3] = [7, 19, 1234];
+
+struct RunStats {
+    ok: usize,
+    failed: usize,
+    goodput_rps: f64,
+    p50_s: f64,
+    p95_s: f64,
+    injected_transient: u64,
+    retries: usize,
+    worker_restarts: usize,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Serve `n` requests and measure client-observed completion: one
+/// receiver thread per request timestamps its own terminal reply, so
+/// tail latency is not skewed by in-order draining.
+fn run(cfg: &AppConfig, n: usize, expect_faults: bool) -> RunStats {
+    let mut server = Server::start(cfg).unwrap();
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let rx = server.submit(&format!("prompt {i}"), i as u64).unwrap();
+            (rx, Instant::now())
+        })
+        .collect();
+    let handles: Vec<_> = receivers
+        .into_iter()
+        .map(|(rx, submitted)| {
+            std::thread::spawn(move || {
+                let reply = rx.recv().expect("every request gets a terminal reply");
+                let latency_s = submitted.elapsed().as_secs_f64();
+                assert!(rx.recv().is_err(), "a request must never resolve twice");
+                (reply.is_ok(), latency_s)
+            })
+        })
+        .collect();
+    let outcomes: Vec<(bool, f64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let ok = outcomes.iter().filter(|(o, _)| *o).count();
+    let failed = outcomes.len() - ok;
+    let mut lat: Vec<f64> = outcomes.iter().map(|(_, l)| *l).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+
+    // injected counters are folded in at session boundaries, which may
+    // trail the last reply by a scheduling quantum: bound the wait
+    if expect_faults {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.with_metrics(|m| m.injected_transient == 0) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let (injected_transient, retries, worker_restarts) =
+        server.with_metrics(|m| (m.injected_transient, m.retries, m.worker_restarts));
+
+    RunStats {
+        ok,
+        failed,
+        goodput_rps: ok as f64 / wall_s.max(1e-12),
+        p50_s: quantile(&lat, 0.50),
+        p95_s: quantile(&lat, 0.95),
+        injected_transient,
+        retries,
+        worker_restarts,
+    }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast") || std::env::var("CHAOS_FAST").is_ok();
+    let n = if fast { 12 } else { 32 };
+    let spec = FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    };
+    let dir = fake_artifacts_dir("bench_chaos", &spec).unwrap();
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 4;
+    cfg.num_workers = 2;
+    cfg.max_batch = 4;
+    cfg.retry_backoff_ms = 1;
+    cfg.retry_limit = 6;
+
+    println!(
+        "== goodput and tail latency under injected faults (stub backend{}) ==",
+        if fast { ", fast mode" } else { "" }
+    );
+    println!("   {n} requests, 4 steps, 2 workers, retry budget 6\n");
+
+    let baseline = run(&cfg, n, false);
+    println!(
+        "{:>14} {:>10.1} req/s   p50 {:>7.1} ms   p95 {:>7.1} ms   {} ok",
+        "fault-free",
+        baseline.goodput_rps,
+        baseline.p50_s * 1e3,
+        baseline.p95_s * 1e3,
+        baseline.ok,
+    );
+
+    let mut faulted = Vec::with_capacity(FAULT_SEEDS.len());
+    for seed in FAULT_SEEDS {
+        let mut fcfg = cfg.clone();
+        fcfg.fault_seed = Some(seed);
+        fcfg.fault_spec = Some("dispatch:4:transient,rate:0.1,spike:7:1".into());
+        let stats = run(&fcfg, n, true);
+        println!(
+            "{:>14} {:>10.1} req/s   p50 {:>7.1} ms   p95 {:>7.1} ms   {} ok, {} failed, \
+             {} injected, {} retries, {} restarts",
+            format!("seed {seed}"),
+            stats.goodput_rps,
+            stats.p50_s * 1e3,
+            stats.p95_s * 1e3,
+            stats.ok,
+            stats.failed,
+            stats.injected_transient,
+            stats.retries,
+            stats.worker_restarts,
+        );
+        faulted.push((seed, stats));
+    }
+
+    let faulted_json: Vec<String> = faulted
+        .iter()
+        .map(|(seed, s)| {
+            format!(
+                concat!(
+                    "{{\"seed\": {seed}, \"goodput_rps\": {gp:.3}, ",
+                    "\"p50_s\": {p50:.6}, \"p95_s\": {p95:.6}, ",
+                    "\"ok\": {ok}, \"failed\": {failed}, ",
+                    "\"injected_transient\": {inj}, \"retries\": {ret}, ",
+                    "\"worker_restarts\": {restarts}}}"
+                ),
+                seed = seed,
+                gp = s.goodput_rps,
+                p50 = s.p50_s,
+                p95 = s.p95_s,
+                ok = s.ok,
+                failed = s.failed,
+                inj = s.injected_transient,
+                ret = s.retries,
+                restarts = s.worker_restarts,
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "\"backend\": \"xla-stub\",\n",
+            "\"fast\": {fast},\n",
+            "\"requests\": {n},\n",
+            "\"baseline\": {{\"goodput_rps\": {bgp:.3}, \"p50_s\": {bp50:.6}, ",
+            "\"p95_s\": {bp95:.6}, \"ok\": {bok}}},\n",
+            "\"faulted\": [\n{fj}\n]\n",
+            "}}\n"
+        ),
+        fast = fast,
+        n = n,
+        bgp = baseline.goodput_rps,
+        bp50 = baseline.p50_s,
+        bp95 = baseline.p95_s,
+        bok = baseline.ok,
+        fj = faulted_json.join(",\n"),
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_chaos.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("\nwrote {}", out.display());
+
+    if baseline.ok != n || baseline.failed != 0 {
+        eprintln!("FAIL: fault-free run lost requests ({} ok of {n})", baseline.ok);
+        std::process::exit(1);
+    }
+    for (seed, s) in &faulted {
+        if s.ok + s.failed != n {
+            eprintln!(
+                "FAIL: seed {seed}: {} ok + {} failed != {n} submitted (lost or duplicated)",
+                s.ok, s.failed
+            );
+            std::process::exit(1);
+        }
+        if s.injected_transient == 0 {
+            eprintln!("FAIL: seed {seed}: the fault schedule injected nothing");
+            std::process::exit(1);
+        }
+        if s.goodput_rps <= 0.0 {
+            eprintln!("FAIL: seed {seed}: zero goodput under faults");
+            std::process::exit(1);
+        }
+    }
+}

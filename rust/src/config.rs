@@ -41,6 +41,24 @@ pub struct AppConfig {
     /// denoise-step boundaries (joins, slot reclamation, deadline
     /// preemption) instead of running each batch to completion
     pub continuous: bool,
+    /// deterministic fault injection: seed for the device runtime's
+    /// fault plan (None = faults disabled unless `fault_spec` sets
+    /// exact trigger points)
+    pub fault_seed: Option<u64>,
+    /// probability [0,1] that a UNet dispatch fails with a transient
+    /// device error (drawn from the seeded stream)
+    pub fault_rate: f64,
+    /// exact fault schedule, e.g. "dispatch:3:transient,compile:1:oom"
+    /// (see the device runtime's `FaultPlan::parse`)
+    pub fault_spec: Option<String>,
+    /// transient-failure retries per request before failing the caller
+    pub retry_limit: usize,
+    /// base retry backoff in ms (doubles per attempt, capped at 16x)
+    pub retry_backoff_ms: u64,
+    /// consecutive faults that quarantine a device class
+    pub breaker_threshold: u32,
+    /// quarantine duration in ms before a half-open probe
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for AppConfig {
@@ -62,6 +80,13 @@ impl Default for AppConfig {
             fleet: None,
             warm_slots: 8,
             continuous: true,
+            fault_seed: None,
+            fault_rate: 0.0,
+            fault_spec: None,
+            retry_limit: 3,
+            retry_backoff_ms: 25,
+            breaker_threshold: 3,
+            breaker_cooldown_ms: 1000,
         }
     }
 }
@@ -136,6 +161,27 @@ impl AppConfig {
         if let Some(v) = j.get("continuous").as_bool() {
             self.continuous = v;
         }
+        if let Some(v) = j.get("fault_seed").as_i64() {
+            self.fault_seed = Some(v as u64);
+        }
+        if let Some(v) = j.get("fault_rate").as_f64() {
+            self.fault_rate = v;
+        }
+        if let Some(v) = j.get("fault_spec").as_str() {
+            self.fault_spec = Some(v.to_string());
+        }
+        if let Some(v) = j.get("retry_limit").as_usize() {
+            self.retry_limit = v;
+        }
+        if let Some(v) = j.get("retry_backoff_ms").as_i64() {
+            self.retry_backoff_ms = v as u64;
+        }
+        if let Some(v) = j.get("breaker_threshold").as_usize() {
+            self.breaker_threshold = v as u32;
+        }
+        if let Some(v) = j.get("breaker_cooldown_ms").as_i64() {
+            self.breaker_cooldown_ms = v as u64;
+        }
     }
 
     /// Parse `--key value` / `--flag` CLI arguments (after the
@@ -198,6 +244,39 @@ impl AppConfig {
                 }
                 "--fleet" => self.fleet = Some(take(&mut i)?),
                 "--no-continuous" => self.continuous = false,
+                "--fault-seed" => {
+                    self.fault_seed = Some(
+                        take(&mut i)?
+                            .parse()
+                            .map_err(|e| Error::Config(format!("--fault-seed: {e}")))?,
+                    );
+                }
+                "--fault-rate" => {
+                    self.fault_rate = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--fault-rate: {e}")))?;
+                }
+                "--fault-spec" => self.fault_spec = Some(take(&mut i)?),
+                "--retry-limit" => {
+                    self.retry_limit = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--retry-limit: {e}")))?;
+                }
+                "--retry-backoff-ms" => {
+                    self.retry_backoff_ms = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--retry-backoff-ms: {e}")))?;
+                }
+                "--breaker-threshold" => {
+                    self.breaker_threshold = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--breaker-threshold: {e}")))?;
+                }
+                "--breaker-cooldown-ms" => {
+                    self.breaker_cooldown_ms = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--breaker-cooldown-ms: {e}")))?;
+                }
                 "--warm-slots" => {
                     self.warm_slots = take(&mut i)?
                         .parse()
@@ -232,6 +311,12 @@ impl AppConfig {
             // fail fast on typos: resolve the spec against the planner
             // registry now rather than at server startup
             crate::planner::FleetSpec::parse(spec)?;
+        }
+        if !(0.0..=1.0).contains(&self.fault_rate) {
+            return Err(Error::Config(format!(
+                "--fault-rate must be in [0, 1], got {}",
+                self.fault_rate
+            )));
         }
         Ok(())
     }
@@ -332,6 +417,55 @@ mod tests {
         let j = Json::parse(r#"{"continuous": true}"#).unwrap();
         c.apply_json(&j);
         assert!(c.continuous);
+    }
+
+    #[test]
+    fn fault_and_supervision_flags_and_json() {
+        let mut c = AppConfig::default();
+        assert!(c.fault_seed.is_none(), "faults off by default");
+        assert_eq!(c.fault_rate, 0.0);
+        assert!(c.fault_spec.is_none());
+        assert_eq!(c.retry_limit, 3);
+        assert_eq!(c.retry_backoff_ms, 25);
+        assert_eq!(c.breaker_threshold, 3);
+        assert_eq!(c.breaker_cooldown_ms, 1000);
+
+        c.apply_args(&args(&[
+            "--fault-seed", "42", "--fault-rate", "0.25",
+            "--fault-spec", "dispatch:3:transient",
+            "--retry-limit", "5", "--retry-backoff-ms", "10",
+            "--breaker-threshold", "2", "--breaker-cooldown-ms", "500",
+        ]))
+        .unwrap();
+        assert_eq!(c.fault_seed, Some(42));
+        assert!((c.fault_rate - 0.25).abs() < 1e-12);
+        assert_eq!(c.fault_spec.as_deref(), Some("dispatch:3:transient"));
+        assert_eq!(c.retry_limit, 5);
+        assert_eq!(c.retry_backoff_ms, 10);
+        assert_eq!(c.breaker_threshold, 2);
+        assert_eq!(c.breaker_cooldown_ms, 500);
+
+        let mut c = AppConfig::default();
+        let j = Json::parse(
+            r#"{"fault_seed": 7, "fault_rate": 0.1, "fault_spec": "transfer:1:fatal",
+                "retry_limit": 1, "retry_backoff_ms": 5,
+                "breaker_threshold": 4, "breaker_cooldown_ms": 250}"#,
+        )
+        .unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.fault_seed, Some(7));
+        assert!((c.fault_rate - 0.1).abs() < 1e-12);
+        assert_eq!(c.fault_spec.as_deref(), Some("transfer:1:fatal"));
+        assert_eq!(c.retry_limit, 1);
+        assert_eq!(c.retry_backoff_ms, 5);
+        assert_eq!(c.breaker_threshold, 4);
+        assert_eq!(c.breaker_cooldown_ms, 250);
+
+        // fault rates outside [0, 1] fail validation
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--fault-rate", "1.5"])).is_err());
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--fault-rate", "-0.1"])).is_err());
     }
 
     #[test]

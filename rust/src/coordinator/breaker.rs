@@ -1,0 +1,272 @@
+//! Per-device-class circuit breakers: the degrading-admission half of
+//! the failure domain.
+//!
+//! Workers feed each class's breaker with the faults they observe
+//! (transient device errors, engine rebuilds after a panic or device
+//! loss); admission consults it before routing.  The state machine per
+//! class:
+//!
+//! * **Closed** — healthy.  `threshold` *consecutive* faults trip the
+//!   class (any success resets the streak, so a steady trickle of
+//!   retried-and-recovered faults never quarantines a mostly-healthy
+//!   device).
+//! * **Open** — quarantined for `cooldown`; admission routes around
+//!   the class ([`crate::planner::FleetRouter::route_observed_filtered`]).
+//! * **Half-open** — the cooldown elapsed; the class admits again as a
+//!   probe.  The first success closes it, the first fault re-trips it
+//!   for another cooldown.
+//!
+//! `admits` is a pure read (no state transition), so admission paths
+//! can consult it as a filter predicate any number of times without
+//! consuming probes; the transitions ride on the recorded outcomes.
+//! When *every* class is quarantined the server sheds all but the
+//! highest-priority load instead of queueing work no device will take
+//! (see `Server::submit_with`).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Observable state of one class's breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ClassState {
+    /// faults since the last success (trip trigger)
+    streak: u32,
+    /// quarantined until this instant; `None` = closed
+    open_until: Option<Instant>,
+    /// total faults ever recorded against the class
+    faults: u64,
+    /// times the class has been quarantined
+    trips: u64,
+}
+
+/// One breaker per device class, shared between the pool's workers
+/// (producers) and the server's admission path (consumer).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    classes: Vec<Mutex<ClassState>>,
+    threshold: u32,
+    cooldown: Duration,
+}
+
+impl CircuitBreaker {
+    /// `threshold` consecutive faults quarantine a class for
+    /// `cooldown` (both clamped to sane minimums).
+    pub fn new(num_classes: usize, threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            classes: (0..num_classes.max(1)).map(|_| Mutex::default()).collect(),
+            threshold: threshold.max(1),
+            cooldown,
+        }
+    }
+
+    fn state_of(s: &ClassState) -> BreakerState {
+        match s.open_until {
+            None => BreakerState::Closed,
+            Some(u) if Instant::now() < u => BreakerState::Open,
+            Some(_) => BreakerState::HalfOpen,
+        }
+    }
+
+    /// One observed fault (transient device error, injected or real).
+    /// Trips the class at `threshold` consecutive faults; re-trips a
+    /// half-open class immediately (the probe failed).
+    pub fn record_fault(&self, class: usize) {
+        let Some(m) = self.classes.get(class) else { return };
+        let mut s = m.lock().unwrap();
+        s.faults += 1;
+        match Self::state_of(&s) {
+            BreakerState::Open => {}
+            BreakerState::HalfOpen => {
+                s.open_until = Some(Instant::now() + self.cooldown);
+                s.trips += 1;
+            }
+            BreakerState::Closed => {
+                s.streak += 1;
+                if s.streak >= self.threshold {
+                    s.open_until = Some(Instant::now() + self.cooldown);
+                    s.trips += 1;
+                    s.streak = 0;
+                }
+            }
+        }
+    }
+
+    /// A worker engine rebuild (panic or device loss) — serious enough
+    /// to quarantine the class immediately, no streak required.
+    pub fn record_restart(&self, class: usize) {
+        let Some(m) = self.classes.get(class) else { return };
+        let mut s = m.lock().unwrap();
+        s.faults += 1;
+        if !matches!(Self::state_of(&s), BreakerState::Open) {
+            s.trips += 1;
+        }
+        s.open_until = Some(Instant::now() + self.cooldown);
+        s.streak = 0;
+    }
+
+    /// A served request: resets the fault streak; closes a half-open
+    /// class (the probe came back healthy).  Ignored while the class
+    /// is still inside its cooldown.
+    pub fn record_success(&self, class: usize) {
+        let Some(m) = self.classes.get(class) else { return };
+        let mut s = m.lock().unwrap();
+        s.streak = 0;
+        if matches!(Self::state_of(&s), BreakerState::HalfOpen) {
+            s.open_until = None;
+        }
+    }
+
+    pub fn state(&self, class: usize) -> BreakerState {
+        self.classes
+            .get(class)
+            .map_or(BreakerState::Closed, |m| Self::state_of(&m.lock().unwrap()))
+    }
+
+    /// Whether admission may route to the class: closed and half-open
+    /// (probe) classes admit, open ones do not.  Pure — consulting it
+    /// never transitions state.
+    pub fn admits(&self, class: usize) -> bool {
+        !matches!(self.state(class), BreakerState::Open)
+    }
+
+    /// Every class is quarantined (still inside its cooldown) — the
+    /// shed-load condition.
+    pub fn all_degraded(&self) -> bool {
+        self.classes
+            .iter()
+            .all(|m| matches!(Self::state_of(&m.lock().unwrap()), BreakerState::Open))
+    }
+
+    pub fn trips(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().trips)
+    }
+
+    pub fn faults(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().faults)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Force-quarantine a class (tests, operator kill switch).
+    pub fn trip_now(&self, class: usize) {
+        self.record_restart(class);
+    }
+
+    /// One report line, classes labelled by `names` (index order).
+    pub fn status_line(&self, names: &[String]) -> String {
+        let cells: Vec<String> = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let s = m.lock().unwrap();
+                let name = names.get(i).map(|n| n.as_str()).unwrap_or("?");
+                format!(
+                    "{name}={} ({} faults, {} trips)",
+                    Self::state_of(&s).as_str(),
+                    s.faults,
+                    s.trips,
+                )
+            })
+            .collect();
+        format!("breaker: {}\n", cells.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn breaker(threshold: u32, cooldown_ms: u64) -> CircuitBreaker {
+        CircuitBreaker::new(2, threshold, Duration::from_millis(cooldown_ms))
+    }
+
+    #[test]
+    fn trips_after_consecutive_faults_and_successes_reset_the_streak() {
+        let b = breaker(3, 10_000);
+        b.record_fault(0);
+        b.record_fault(0);
+        b.record_success(0); // streak broken
+        b.record_fault(0);
+        b.record_fault(0);
+        assert_eq!(b.state(0), BreakerState::Closed, "streak never hit 3");
+        assert!(b.admits(0));
+        b.record_fault(0);
+        assert_eq!(b.state(0), BreakerState::Open);
+        assert!(!b.admits(0));
+        assert_eq!(b.trips(0), 1);
+        assert_eq!(b.faults(0), 5);
+        // the other class is untouched
+        assert_eq!(b.state(1), BreakerState::Closed);
+        assert!(!b.all_degraded());
+    }
+
+    #[test]
+    fn cooldown_half_opens_then_success_closes_or_fault_retrips() {
+        let b = breaker(1, 20);
+        b.record_fault(0);
+        assert_eq!(b.state(0), BreakerState::Open);
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        assert!(b.admits(0), "half-open admits a probe");
+        // probe fails: straight back to open
+        b.record_fault(0);
+        assert_eq!(b.state(0), BreakerState::Open);
+        assert_eq!(b.trips(0), 2);
+        thread::sleep(Duration::from_millis(30));
+        // probe succeeds: closed again
+        b.record_success(0);
+        assert_eq!(b.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn restarts_quarantine_immediately_and_all_degraded_sheds() {
+        let b = breaker(100, 10_000);
+        b.record_restart(0);
+        assert_eq!(b.state(0), BreakerState::Open, "no streak needed");
+        assert!(!b.all_degraded(), "class 1 still healthy");
+        b.trip_now(1);
+        assert!(b.all_degraded());
+        let line = b.status_line(&["fast".to_string(), "slow".to_string()]);
+        assert!(line.contains("fast=open"), "{line}");
+        assert!(line.contains("slow=open"), "{line}");
+    }
+
+    #[test]
+    fn out_of_range_classes_are_ignored_not_panics() {
+        let b = breaker(1, 10);
+        b.record_fault(9);
+        b.record_success(9);
+        b.record_restart(9);
+        assert_eq!(b.trips(9), 0);
+        assert!(b.admits(9), "unknown classes default to admitting");
+    }
+
+    #[test]
+    fn success_during_cooldown_does_not_close_early() {
+        let b = breaker(1, 10_000);
+        b.record_fault(0);
+        b.record_success(0);
+        assert_eq!(b.state(0), BreakerState::Open, "cooldown is served in full");
+    }
+}

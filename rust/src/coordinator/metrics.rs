@@ -231,6 +231,28 @@ pub struct PoolMetrics {
     pub resumes: usize,
     /// UNet dispatches recorded by continuous sessions
     pub steps: usize,
+    /// faults injected by the device runtime's fault plan that
+    /// surfaced as transient errors (retryable)
+    pub injected_transient: u64,
+    /// injected faults that surfaced as fatal (device-lost) errors
+    pub injected_fatal: u64,
+    /// injected latency spikes (slow dispatches, not errors)
+    pub injected_spikes: u64,
+    /// requests requeued after a transient device fault
+    pub retries: usize,
+    /// requests failed because their retry budget was spent
+    pub retries_exhausted: usize,
+    /// worker executors rebuilt after a panic or device loss
+    pub worker_restarts: usize,
+    /// requests refused because every device class was quarantined
+    pub shed: usize,
+    /// reply slots dropped without a terminal reply (a worker died
+    /// mid-request); the drop guard converted each into an explicit
+    /// failure, so the count is diagnostic, not a leak
+    pub reply_orphaned: usize,
+    /// terminal replies that found no receiver (the caller had already
+    /// dropped its end) — the silent-leak signal
+    pub reply_dropped: usize,
     /// Σ step wall seconds (time-weighted occupancy denominator)
     step_time_s: f64,
     /// Σ step wall × rows live in that step (numerator)
@@ -271,6 +293,15 @@ impl PoolMetrics {
             preemptions: 0,
             resumes: 0,
             steps: 0,
+            injected_transient: 0,
+            injected_fatal: 0,
+            injected_spikes: 0,
+            retries: 0,
+            retries_exhausted: 0,
+            worker_restarts: 0,
+            shed: 0,
+            reply_orphaned: 0,
+            reply_dropped: 0,
             step_time_s: 0.0,
             step_row_time_s: 0.0,
             loads: LoadProfile::default(),
@@ -431,6 +462,58 @@ impl PoolMetrics {
         }
     }
 
+    /// Injected-fault deltas observed by a worker since its last
+    /// dispatch (the fault plan's counters, diffed by the pool).
+    pub fn record_injected(&mut self, transient: u64, fatal: u64, spikes: u64) {
+        self.injected_transient += transient;
+        self.injected_fatal += fatal;
+        self.injected_spikes += spikes;
+    }
+
+    /// One request requeued after a transient device fault.
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// One request failed with its retry budget spent.
+    pub fn record_retries_exhausted(&mut self) {
+        self.retries_exhausted += 1;
+    }
+
+    /// One worker executor rebuilt after a panic or device loss.
+    pub fn record_worker_restart(&mut self) {
+        self.worker_restarts += 1;
+    }
+
+    /// One request shed because every device class was quarantined.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// One reply slot dropped without a terminal reply (worker death);
+    /// the drop guard delivered an explicit failure in its place.
+    pub fn record_reply_orphaned(&mut self) {
+        self.reply_orphaned += 1;
+    }
+
+    /// One terminal reply that found its receiver already gone.
+    pub fn record_reply_dropped(&mut self) {
+        self.reply_dropped += 1;
+    }
+
+    /// Any failure-domain activity worth a report line?
+    fn faults_observed(&self) -> bool {
+        self.injected_transient > 0
+            || self.injected_fatal > 0
+            || self.injected_spikes > 0
+            || self.retries > 0
+            || self.retries_exhausted > 0
+            || self.worker_restarts > 0
+            || self.shed > 0
+            || self.reply_orphaned > 0
+            || self.reply_dropped > 0
+    }
+
     /// An expired job dropped at pop time.  It never executed, so it
     /// counts only toward the pool-level `expired` line — per-worker
     /// counters track executed requests and must sum to the fleet
@@ -504,6 +587,22 @@ impl PoolMetrics {
                 self.loads.dequant_s * 1e3,
                 self.loads.compile_s * 1e3,
                 self.loads.upload_s * 1e3,
+            ));
+        }
+        if self.faults_observed() {
+            out.push_str(&format!(
+                "faults: {} injected transient, {} injected fatal, {} spikes; \
+                 {} retries, {} exhausted, {} worker restarts, {} shed, \
+                 {} orphaned replies, {} dropped replies\n",
+                self.injected_transient,
+                self.injected_fatal,
+                self.injected_spikes,
+                self.retries,
+                self.retries_exhausted,
+                self.worker_restarts,
+                self.shed,
+                self.reply_orphaned,
+                self.reply_dropped,
             ));
         }
         let lat = self.latency_summary();
@@ -778,6 +877,37 @@ mod tests {
         p.record_executed(0, 0.1, 1.0, Some(&t));
         let report = p.report(0, 0);
         assert!(!report.contains("class default"), "{report}");
+    }
+
+    #[test]
+    fn fault_counters_surface_only_when_something_failed() {
+        let mut p = PoolMetrics::new(1);
+        let report = p.report(0, 0);
+        assert!(!report.contains("faults:"), "quiet fleets skip the line: {report}");
+
+        p.record_injected(3, 1, 2);
+        p.record_injected(1, 0, 0);
+        p.record_retry();
+        p.record_retry();
+        p.record_retries_exhausted();
+        p.record_worker_restart();
+        p.record_shed();
+        p.record_reply_orphaned();
+        p.record_reply_dropped();
+        assert_eq!(p.injected_transient, 4);
+        assert_eq!(p.injected_fatal, 1);
+        assert_eq!(p.injected_spikes, 2);
+        assert_eq!(p.retries, 2);
+        assert_eq!(p.retries_exhausted, 1);
+        assert_eq!(p.worker_restarts, 1);
+        assert_eq!(p.shed, 1);
+        assert_eq!(p.reply_orphaned, 1);
+        assert_eq!(p.reply_dropped, 1);
+
+        let report = p.report(0, 0);
+        assert!(report.contains("faults: 4 injected transient"), "{report}");
+        assert!(report.contains("2 retries, 1 exhausted, 1 worker restarts"), "{report}");
+        assert!(report.contains("1 shed"), "{report}");
     }
 
     #[test]

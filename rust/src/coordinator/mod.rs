@@ -1,18 +1,25 @@
 //! L3 coordinator: the serving stack — an admission-controlled,
-//! priority/deadline-aware job queue ([`queue`]), a pool of device
-//! workers each owning a pipelined executor ([`pool`], heterogeneous
-//! via [`crate::planner::FleetSpec`]), the fleet metrics ([`metrics`],
-//! including per-device-class predicted-vs-actual latency), and the
-//! front-door [`Server`] whose admission consults the planner.
+//! priority/deadline-aware job queue ([`queue`]), a pool of supervised
+//! device workers each owning a pipelined executor ([`pool`],
+//! heterogeneous via [`crate::planner::FleetSpec`]; panics and device
+//! loss rebuild the worker, transient faults retry from checkpoints),
+//! the per-device-class circuit breakers behind degrading admission
+//! ([`breaker`]), the fleet metrics ([`metrics`], including
+//! per-device-class predicted-vs-actual latency and fault counters),
+//! and the front-door [`Server`] whose admission consults the planner.
 
+pub mod breaker;
 pub mod metrics;
 pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod server;
 
+pub use breaker::{BreakerState, CircuitBreaker};
 pub use metrics::{ClassMetrics, Metrics, PoolMetrics, SampleWindow, WorkerStats};
-pub use pool::{ResponseReceiver, WorkItem, WorkerExecutor, WorkerPool};
+pub use pool::{
+    ReplySlot, ResponseReceiver, SupervisionOptions, WorkItem, WorkerExecutor, WorkerPool,
+};
 pub use queue::{AdmissionError, Job, JobQueue, PeekInfo, Priority};
 pub use request::{GenerateRequest, GenerateResponse, SubmitOptions};
 pub use server::Server;

@@ -23,16 +23,34 @@
 //!   preemption is paid back).  Expired jobs are dropped at admission
 //!   in both modes.
 //!
+//! Every worker is *supervised* ([`SupervisionOptions`]): its loop
+//! runs under `catch_unwind`, and a panic or a device-lost error
+//! rebuilds the executor from the factory (the shared artifact store
+//! stays warm) instead of silently shrinking the fleet.  The failure
+//! contract callers rely on is **exactly one terminal reply per
+//! submitted request**: every dequeued job's reply channel lives in a
+//! [`ReplySlot`] drop guard, so even a panic unwinding through a
+//! worker body fails the affected requests explicitly rather than
+//! stranding their callers on a dead channel.  Transient device
+//! faults ([`Error::is_transient`]) are retried with a bounded budget
+//! and exponential backoff — a retried job re-enters the queue behind
+//! a `not_before` gate and keeps its original priority and deadline.
+//! Each class's faults and restarts feed the shared
+//! [`CircuitBreaker`] so admission can route around a degrading
+//! device class.
+//!
 //! The pool is generic over [`WorkerExecutor`] so scheduling behaviour
-//! (fairness, admission, deadline drops, per-request overrides) is
-//! testable with mock executors and no device at all.
+//! (fairness, admission, deadline drops, per-request overrides,
+//! supervision) is testable with mock executors and no device at all.
 
 use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::breaker::CircuitBreaker;
 use crate::coordinator::metrics::PoolMetrics;
 use crate::coordinator::queue::{AdmissionError, Job, JobQueue, Priority};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
@@ -83,15 +101,119 @@ pub trait WorkerExecutor {
         }
         Ok(())
     }
+
+    /// Cumulative injected-fault counters from the executor's device
+    /// stats: `(transient, fatal, latency spikes)`.  The worker loops
+    /// diff these after every dispatch and fold the deltas into the
+    /// pool metrics.  The default (mocks, executors without fault
+    /// injection) reports nothing.
+    fn fault_counts(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
+}
+
+/// Fault-handling policy for a pool's workers: the retry budget and
+/// backoff for transient device errors, the engine-rebuild budget for
+/// panics and device loss, and the optional per-class circuit breaker
+/// those events feed.
+#[derive(Debug, Clone)]
+pub struct SupervisionOptions {
+    /// transient-failure retries per request (0 = fail on first fault)
+    pub retry_limit: u32,
+    /// delay before the first retry; doubles per attempt
+    pub retry_backoff: Duration,
+    /// ceiling on the exponential backoff
+    pub retry_backoff_cap: Duration,
+    /// executor rebuilds per worker (after a panic or device loss)
+    /// before the worker stays down for good
+    pub max_restarts: u32,
+    /// per-class breaker fed by faults and restarts; `None` disables
+    /// degrading admission (the pool still retries and restarts)
+    pub breaker: Option<Arc<CircuitBreaker>>,
+}
+
+impl Default for SupervisionOptions {
+    fn default() -> SupervisionOptions {
+        SupervisionOptions {
+            retry_limit: 3,
+            retry_backoff: Duration::from_millis(25),
+            retry_backoff_cap: Duration::from_millis(400),
+            max_restarts: 3,
+            breaker: None,
+        }
+    }
 }
 
 /// Channel on which a submitted request's response arrives.
 pub type ResponseReceiver = mpsc::Receiver<Result<GenerateResponse>>;
 
+/// The caller's reply channel wrapped in a terminal-outcome guard.
+///
+/// Invariant: every submitted request gets **exactly one** terminal
+/// reply.  The first [`send`](Self::send) wins and later sends are
+/// ignored (a row cannot be double-completed); dropping the slot
+/// without sending — a panic unwinding through a worker, a supervisor
+/// giving up on a rebuild — delivers an explicit failure instead of
+/// silently disconnecting the channel.  A receiver that went away
+/// (caller timed out and dropped its end) is counted, not ignored:
+/// it is the silent-leak signal the metrics expose.
+pub struct ReplySlot {
+    tx: mpsc::Sender<Result<GenerateResponse>>,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    sent: bool,
+}
+
+impl ReplySlot {
+    fn new(
+        tx: mpsc::Sender<Result<GenerateResponse>>,
+        metrics: Arc<Mutex<PoolMetrics>>,
+    ) -> ReplySlot {
+        ReplySlot { tx, metrics, sent: false }
+    }
+
+    /// Deliver the terminal outcome; later calls are no-ops.
+    pub fn send(&mut self, resp: Result<GenerateResponse>) {
+        if self.sent {
+            return;
+        }
+        self.sent = true;
+        if self.tx.send(resp).is_err() {
+            // the caller dropped its receiver: nothing to deliver to,
+            // but the fact must not vanish
+            if let Ok(mut m) = self.metrics.lock() {
+                m.record_reply_dropped();
+            }
+        }
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        if self.sent {
+            return;
+        }
+        self.sent = true;
+        let receiver_gone = self
+            .tx
+            .send(Err(Error::Runtime(
+                "worker died before replying; request abandoned".into(),
+            )))
+            .is_err();
+        // a panicking worker may have poisoned the metrics mutex —
+        // never panic inside a drop on the unwind path
+        if let Ok(mut m) = self.metrics.lock() {
+            m.record_reply_orphaned();
+            if receiver_gone {
+                m.record_reply_dropped();
+            }
+        }
+    }
+}
+
 /// A queued request plus the channel its response goes to.
 pub struct WorkItem {
     pub req: GenerateRequest,
-    pub reply: mpsc::Sender<Result<GenerateResponse>>,
+    pub reply: ReplySlot,
     /// worker class this job was routed to (0 in homogeneous pools);
     /// only workers of that class will drain it
     pub class: usize,
@@ -102,6 +224,16 @@ pub struct WorkItem {
     /// admits it resumes the denoise loop from here instead of
     /// re-encoding and re-seeding
     pub resume: Option<Checkpoint>,
+    /// transient-fault retries already spent on this request
+    pub attempts: u32,
+    /// retry-backoff gate: ineligible for dequeue until this instant
+    pub not_before: Option<Instant>,
+}
+
+impl WorkItem {
+    fn ready(&self) -> bool {
+        self.not_before.map_or(true, |t| t <= Instant::now())
+    }
 }
 
 /// Handle to a running worker pool.
@@ -111,6 +243,7 @@ pub struct WorkerPool {
     /// device-class name per class index ("default" when homogeneous)
     class_names: Vec<String>,
     handles: Vec<thread::JoinHandle<()>>,
+    breaker: Option<Arc<CircuitBreaker>>,
 }
 
 impl WorkerPool {
@@ -183,6 +316,32 @@ impl WorkerPool {
         E: WorkerExecutor + 'static,
         F: Fn(usize, usize, &str) -> Result<E> + Send + Sync + 'static,
     {
+        Self::start_supervised(
+            classes,
+            queue_capacity,
+            max_batch,
+            continuous,
+            SupervisionOptions::default(),
+            factory,
+        )
+    }
+
+    /// [`start_fleet_mode`](Self::start_fleet_mode) with an explicit
+    /// fault-handling policy.  The factory is kept for the pool's
+    /// lifetime: the supervisor re-invokes it (same worker id, class)
+    /// to rebuild a worker's executor after a panic or device loss.
+    pub fn start_supervised<E, F>(
+        classes: &[(String, usize)],
+        queue_capacity: usize,
+        max_batch: usize,
+        continuous: bool,
+        supervision: SupervisionOptions,
+        factory: F,
+    ) -> Result<WorkerPool>
+    where
+        E: WorkerExecutor + 'static,
+        F: Fn(usize, usize, &str) -> Result<E> + Send + Sync + 'static,
+    {
         let max_batch = max_batch.max(1);
         let class_names: Vec<String> = classes.iter().map(|(n, _)| n.clone()).collect();
         // (worker id, class index) assignments, classes in spec order
@@ -204,6 +363,7 @@ impl WorkerPool {
             let worker_metrics = Arc::clone(&metrics);
             let worker_factory = Arc::clone(&factory);
             let worker_ready = ready_tx.clone();
+            let worker_supervision = supervision.clone();
             let class_name = class_names[class_idx].clone();
             let spawned = thread::Builder::new()
                 .name(format!("md-worker-{wid}"))
@@ -219,27 +379,19 @@ impl WorkerPool {
                         }
                     };
                     drop(worker_ready);
-                    if continuous {
-                        continuous_worker_loop(
-                            wid,
-                            class_idx,
-                            &class_name,
-                            executor,
-                            &worker_queue,
-                            &worker_metrics,
-                            max_batch,
-                        );
-                    } else {
-                        worker_loop(
-                            wid,
-                            class_idx,
-                            &class_name,
-                            executor,
-                            &worker_queue,
-                            &worker_metrics,
-                            max_batch,
-                        );
-                    }
+                    let rebuild = || worker_factory(wid, class_idx, &class_name);
+                    supervise(
+                        wid,
+                        class_idx,
+                        &class_name,
+                        executor,
+                        &worker_queue,
+                        &worker_metrics,
+                        max_batch,
+                        continuous,
+                        &worker_supervision,
+                        rebuild,
+                    );
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -255,7 +407,13 @@ impl WorkerPool {
         }
         drop(ready_tx);
 
-        let pool = WorkerPool { queue, metrics, class_names, handles };
+        let pool = WorkerPool {
+            queue,
+            metrics,
+            class_names,
+            handles,
+            breaker: supervision.breaker,
+        };
         for _ in 0..n {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
@@ -301,13 +459,25 @@ impl WorkerPool {
         }
         let (tx, rx) = mpsc::channel();
         let absolute = deadline.map(|d| Instant::now() + d);
-        let item = WorkItem { req, reply: tx, class, predicted_s, resume: None };
-        match self.queue.push(item, priority, absolute) {
+        let item = WorkItem {
+            req,
+            reply: ReplySlot::new(tx, Arc::clone(&self.metrics)),
+            class,
+            predicted_s,
+            resume: None,
+            attempts: 0,
+            not_before: None,
+        };
+        match self.queue.try_push(item, priority, absolute) {
             Ok(()) => Ok(rx),
-            Err(e) => {
+            Err((item, e)) => {
                 if matches!(e, AdmissionError::Full { .. }) {
                     self.metrics.lock().unwrap().record_rejected_full();
                 }
+                // the slot never entered the queue: disarm its drop
+                // guard so the rejection is the one terminal reply
+                let mut item = item;
+                item.reply.sent = true;
                 Err(Error::Queue(e.to_string()))
             }
         }
@@ -317,6 +487,16 @@ impl WorkerPool {
     /// router decided before anything was queued).
     pub fn record_rejected_infeasible(&self) {
         self.metrics.lock().unwrap().record_rejected_infeasible();
+    }
+
+    /// Count one request shed because every device class is degraded.
+    pub fn record_shed(&self) {
+        self.metrics.lock().unwrap().record_shed();
+    }
+
+    /// The shared per-class breaker, when supervision configured one.
+    pub fn breaker(&self) -> Option<&Arc<CircuitBreaker>> {
+        self.breaker.as_ref()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -333,17 +513,51 @@ impl WorkerPool {
     }
 
     /// Fleet report: counters, queue depth, latency percentiles,
-    /// per-worker utilization, stage breakdown.
+    /// per-worker utilization, stage breakdown, breaker states.
     pub fn metrics_report(&self) -> String {
-        self.metrics
+        let mut report = self
+            .metrics
             .lock()
             .unwrap()
-            .report(self.queue.depth(), self.queue.max_depth())
+            .report(self.queue.depth(), self.queue.max_depth());
+        if let Some(b) = &self.breaker {
+            report.push_str(&b.status_line(&self.class_names));
+        }
+        report
     }
 
     /// Read-only access to the shared metrics (tests, dashboards).
     pub fn with_metrics<R>(&self, f: impl FnOnce(&PoolMetrics) -> R) -> R {
         f(&self.metrics.lock().unwrap())
+    }
+
+    /// Shut down without executing the backlog: close admission, fail
+    /// every queued job with an explicit terminal reply, then join the
+    /// workers (in-flight batches still finish).  The graceful `Drop`
+    /// path instead lets queued jobs drain; this is the
+    /// fail-fast path for operators who need the fleet down *now*.
+    pub fn shutdown_now(&mut self) {
+        self.queue.close();
+        // drain before joining: a worker mid-batch will not take these,
+        // and failing them first keeps shutdown latency bounded by the
+        // in-flight work only
+        self.drain_queue();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // a retry requeued behind a backoff gate during the join, or a
+        // job belonging to a class whose workers were already gone
+        self.drain_queue();
+    }
+
+    /// Fail every queued (not yet running) job with a terminal reply.
+    fn drain_queue(&self) {
+        while let Some(job) = self.queue.try_pop() {
+            let mut item = job.item;
+            let id = item.req.id;
+            item.reply
+                .send(Err(Error::Queue(format!("request {id} dropped: pool shut down"))));
+        }
     }
 }
 
@@ -353,7 +567,124 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // workers drain queued jobs of their own class before exiting;
+        // anything left belongs to a class whose workers gave up (a
+        // dead device) or re-entered the queue behind a backoff gate
+        // after the workers checked out — fail it, don't strand it
+        self.drain_queue();
     }
+}
+
+/// How a worker body ended: the queue closed (normal shutdown), or the
+/// device handle died and the executor must be rebuilt.
+enum LoopExit {
+    Closed,
+    DeviceLost,
+}
+
+/// Dequeue wait for the worker loops.  Short enough that a retry
+/// parked behind a `not_before` backoff gate is picked up promptly
+/// (the gate matures without any push waking the condvar), long
+/// enough to keep an idle fleet's wakeup load trivial.
+const RETRY_POLL: Duration = Duration::from_millis(25);
+
+/// Exponential retry backoff: `retry_backoff * 2^(attempt-1)`, capped.
+fn backoff_delay(opts: &SupervisionOptions, attempt: u32) -> Duration {
+    let shift = attempt.saturating_sub(1).min(16);
+    opts.retry_backoff
+        .saturating_mul(1u32 << shift)
+        .min(opts.retry_backoff_cap)
+}
+
+/// Fold the executor's cumulative injected-fault counters into the
+/// pool metrics as deltas (the counters survive across batches; the
+/// metrics must not double-count).
+fn absorb_faults(
+    seen: &mut (u64, u64, u64),
+    now: (u64, u64, u64),
+    metrics: &Mutex<PoolMetrics>,
+) {
+    let d = (
+        now.0.saturating_sub(seen.0),
+        now.1.saturating_sub(seen.1),
+        now.2.saturating_sub(seen.2),
+    );
+    *seen = now;
+    if d == (0, 0, 0) {
+        return;
+    }
+    if let Ok(mut m) = metrics.lock() {
+        m.record_injected(d.0, d.1, d.2);
+    }
+}
+
+/// The worker supervisor: runs the worker body under `catch_unwind`,
+/// rebuilding the executor from the factory after a panic or device
+/// loss (at most `opts.max_restarts` times).  The body's [`ReplySlot`]
+/// guards guarantee the requests in flight at the moment of a crash
+/// were already failed explicitly during the unwind — the supervisor
+/// only has to restore capacity, never to reconstruct who was owed an
+/// answer.
+fn supervise<E: WorkerExecutor>(
+    wid: usize,
+    class_idx: usize,
+    class_name: &str,
+    first: E,
+    queue: &JobQueue<WorkItem>,
+    metrics: &Mutex<PoolMetrics>,
+    max_batch: usize,
+    continuous: bool,
+    opts: &SupervisionOptions,
+    rebuild: impl Fn() -> Result<E>,
+) {
+    let mut executor = Some(first);
+    let mut restarts = 0u32;
+    loop {
+        let exec = match executor.take() {
+            Some(e) => e,
+            None => match rebuild() {
+                Ok(e) => e,
+                // the device never came back; the pool's drop drains
+                // whatever this class still had queued
+                Err(_) => return,
+            },
+        };
+        let body = AssertUnwindSafe(move || {
+            if continuous {
+                continuous_worker_loop(
+                    wid, class_idx, class_name, exec, queue, metrics, max_batch, opts,
+                )
+            } else {
+                worker_loop(wid, class_idx, class_name, exec, queue, metrics, max_batch, opts)
+            }
+        });
+        match panic::catch_unwind(body) {
+            Ok(LoopExit::Closed) => return,
+            Ok(LoopExit::DeviceLost) | Err(_) => {
+                if restarts >= opts.max_restarts {
+                    return;
+                }
+                restarts += 1;
+                if let Ok(mut m) = metrics.lock() {
+                    m.record_worker_restart();
+                }
+                if let Some(b) = &opts.breaker {
+                    b.record_restart(class_idx);
+                }
+            }
+        }
+    }
+}
+
+/// Per-member bookkeeping between dequeue and terminal outcome in the
+/// run-to-completion loop.
+struct RtcMeta {
+    reply: ReplySlot,
+    queue_s: f64,
+    predicted_s: Option<f64>,
+    attempts: u32,
+    priority: Priority,
+    deadline: Option<Instant>,
 }
 
 fn worker_loop<E: WorkerExecutor>(
@@ -364,28 +695,38 @@ fn worker_loop<E: WorkerExecutor>(
     queue: &JobQueue<WorkItem>,
     metrics: &Mutex<PoolMetrics>,
     max_batch: usize,
-) {
-    // a worker drains only jobs routed to its own device class; batch
-    // compatibility within the class: same requested variant (the
-    // executor re-checks and re-groups defensively)
-    while let Some(jobs) = queue.pop_batch_where(
-        max_batch,
-        |it: &WorkItem| it.class == class_idx,
-        |it: &WorkItem| it.req.variant.clone(),
-    ) {
+    opts: &SupervisionOptions,
+) -> LoopExit {
+    let mut fault_seen = executor.fault_counts();
+    loop {
+        // a worker drains only jobs routed to its own device class
+        // whose retry-backoff gate (if any) has matured; batch
+        // compatibility within the class: same requested variant (the
+        // executor re-checks and re-groups defensively).  The timeout
+        // re-scans because a parked retry becomes eligible with no
+        // push to wake the condvar.
+        let jobs = match queue.pop_batch_where_timeout(
+            max_batch,
+            |it: &WorkItem| it.class == class_idx && it.ready(),
+            |it: &WorkItem| it.req.variant.clone(),
+            RETRY_POLL,
+        ) {
+            None => return LoopExit::Closed,
+            Some(j) if j.is_empty() => continue, // a backoff gate may have matured
+            Some(j) => j,
+        };
         let mut reqs: Vec<GenerateRequest> = Vec::with_capacity(jobs.len());
-        let mut meta: Vec<(mpsc::Sender<Result<GenerateResponse>>, f64, Option<f64>)> =
-            Vec::with_capacity(jobs.len());
+        let mut meta: Vec<RtcMeta> = Vec::with_capacity(jobs.len());
         for job in jobs {
             let queue_s = job.enqueued.elapsed().as_secs_f64();
-            let WorkItem { req, reply, predicted_s, .. } = job.item;
+            let WorkItem { req, mut reply, predicted_s, attempts, .. } = job.item;
 
             // deadline-aware: don't burn a device slot on an expired
             // request (its batchmates still run)
             if let Some(d) = job.deadline {
                 if Instant::now() > d {
                     metrics.lock().unwrap().record_rejected_deadline();
-                    let _ = reply.send(Err(Error::Queue(format!(
+                    reply.send(Err(Error::Queue(format!(
                         "request {} expired after {queue_s:.3}s in queue",
                         req.id
                     ))));
@@ -393,7 +734,14 @@ fn worker_loop<E: WorkerExecutor>(
                 }
             }
             reqs.push(req);
-            meta.push((reply, queue_s, predicted_s));
+            meta.push(RtcMeta {
+                reply,
+                queue_s,
+                predicted_s,
+                attempts,
+                priority: job.priority,
+                deadline: job.deadline,
+            });
         }
         if reqs.is_empty() {
             continue;
@@ -404,6 +752,7 @@ fn worker_loop<E: WorkerExecutor>(
         let t0 = Instant::now();
         let mut results = executor.execute_batch(&reqs);
         let wall_s = t0.elapsed().as_secs_f64();
+        absorb_faults(&mut fault_seen, executor.fault_counts(), metrics);
         // fallback split when the executor reports no per-member busy
         // share (mocks): even division, which misattributes mixed-
         // schedule batches — a 3-step member that shared dispatches
@@ -424,10 +773,9 @@ fn worker_loop<E: WorkerExecutor>(
                 .collect();
         }
 
-        for ((req, (reply, queue_s, predicted_s)), result) in
-            reqs.into_iter().zip(meta).zip(results)
-        {
-            let resp = match result {
+        let mut device_lost = false;
+        for ((req, mut m), result) in reqs.into_iter().zip(meta).zip(results) {
+            match result {
                 Ok(r) => {
                     // the member's device occupancy: the executor's
                     // time-weighted measurement when it provides one
@@ -438,10 +786,10 @@ fn worker_loop<E: WorkerExecutor>(
                     } else {
                         even_share_s
                     };
-                    let mut m = metrics.lock().unwrap();
-                    m.record_batch_member(
+                    let mut mm = metrics.lock().unwrap();
+                    mm.record_batch_member(
                         wid,
-                        queue_s,
+                        m.queue_s,
                         wall_s,
                         busy_share_s,
                         Some(&r.timings),
@@ -454,8 +802,8 @@ fn worker_loop<E: WorkerExecutor>(
                     // Failures are excluded: an early error's
                     // microsecond wall would read as huge model
                     // drift when the model was never exercised.
-                    if let Some(p) = predicted_s {
-                        m.record_prediction(class_idx, p, busy_share_s);
+                    if let Some(p) = m.predicted_s {
+                        mm.record_prediction(class_idx, p, busy_share_s);
                     }
                     // measured-load feedback: the member's share of the
                     // batch's non-denoise time (its busy share minus
@@ -465,37 +813,87 @@ fn worker_loop<E: WorkerExecutor>(
                     // analog of the plan's overhead term; the router
                     // swaps the modeled constant for this mean once
                     // the (class, variant) has served enough requests
-                    m.record_class_overhead(
+                    mm.record_class_overhead(
                         class_idx,
                         req.variant.as_deref().unwrap_or("default"),
                         busy_share_s - r.timings.denoise_s,
                     );
-                    drop(m);
-                    Ok(GenerateResponse {
+                    drop(mm);
+                    if let Some(b) = &opts.breaker {
+                        b.record_success(class_idx);
+                    }
+                    m.reply.send(Ok(GenerateResponse {
                         id: req.id,
                         image: r.image,
                         image_size: r.image_size,
                         latent: r.latent,
                         timings: r.timings,
                         peak_memory: r.peak_memory,
-                        queue_s,
+                        queue_s: m.queue_s,
                         worker_id: wid,
                         device_class: class_name.to_string(),
-                        predicted_s,
-                    })
+                        predicted_s: m.predicted_s,
+                    }));
+                }
+                Err(e) if e.is_transient() || e.is_device_lost() => {
+                    // retryable: the fault feeds the breaker, and the
+                    // request re-enters the queue behind a backoff
+                    // gate with its original priority and deadline —
+                    // unless its budget is spent
+                    if e.is_device_lost() {
+                        device_lost = true;
+                    }
+                    if let Some(b) = &opts.breaker {
+                        b.record_fault(class_idx);
+                    }
+                    if m.attempts < opts.retry_limit {
+                        let attempts = m.attempts + 1;
+                        metrics.lock().unwrap().record_retry();
+                        let delay = backoff_delay(opts, attempts);
+                        let item = WorkItem {
+                            req,
+                            reply: m.reply,
+                            class: class_idx,
+                            predicted_s: m.predicted_s,
+                            resume: None,
+                            attempts,
+                            not_before: Some(Instant::now() + delay),
+                        };
+                        // a retried attempt is not a terminal outcome:
+                        // no batch-member record until it resolves
+                        if let Err((mut item, qe)) = queue.try_push(item, m.priority, m.deadline)
+                        {
+                            item.reply.send(Err(Error::Queue(format!(
+                                "request {} could not requeue after a device fault: {qe}",
+                                item.req.id
+                            ))));
+                        }
+                    } else {
+                        let mut mm = metrics.lock().unwrap();
+                        mm.record_retries_exhausted();
+                        mm.record_batch_member(wid, m.queue_s, wall_s, even_share_s, None);
+                        drop(mm);
+                        m.reply.send(Err(Error::Runtime(format!(
+                            "request {} gave up after {} attempts: {e}",
+                            req.id,
+                            m.attempts + 1
+                        ))));
+                    }
                 }
                 Err(e) => {
                     metrics.lock().unwrap().record_batch_member(
                         wid,
-                        queue_s,
+                        m.queue_s,
                         wall_s,
                         even_share_s,
                         None,
                     );
-                    Err(e)
+                    m.reply.send(Err(e));
                 }
-            };
-            let _ = reply.send(resp);
+            }
+        }
+        if device_lost {
+            return LoopExit::DeviceLost;
         }
     }
 }
@@ -504,7 +902,7 @@ fn worker_loop<E: WorkerExecutor>(
 /// terminal outcome (or requeue).
 struct JobMeta {
     req: GenerateRequest,
-    reply: mpsc::Sender<Result<GenerateResponse>>,
+    reply: ReplySlot,
     /// wait before this admission (a resumed row's earlier waits were
     /// spent; each admission accounts its own)
     queue_s: f64,
@@ -515,6 +913,8 @@ struct JobMeta {
     /// admitted from a checkpoint — never a preemption victim again,
     /// so two deadline bursts cannot ping-pong one row forever
     preempted: bool,
+    /// transient-fault retries already spent on this request
+    attempts: u32,
 }
 
 /// The pool's [`ContinuousControl`]: joins come from the shared queue
@@ -531,6 +931,7 @@ struct PoolControl<'a> {
     session_variant: Option<String>,
     queue: &'a JobQueue<WorkItem>,
     metrics: &'a Mutex<PoolMetrics>,
+    opts: &'a SupervisionOptions,
     meta: HashMap<u64, JobMeta>,
     next_token: u64,
     /// rolling denoise-step wall total, for deadline-feasibility ETAs
@@ -544,11 +945,11 @@ impl PoolControl<'_> {
     /// their scheduling state is kept for the terminal callbacks.
     fn admit(&mut self, job: Job<WorkItem>) -> Option<ContinuousJob> {
         let queue_s = job.enqueued.elapsed().as_secs_f64();
-        let WorkItem { req, reply, predicted_s, resume, .. } = job.item;
+        let WorkItem { req, mut reply, predicted_s, resume, attempts, .. } = job.item;
         if let Some(d) = job.deadline {
             if Instant::now() > d {
                 self.metrics.lock().unwrap().record_rejected_deadline();
-                let _ = reply.send(Err(Error::Queue(format!(
+                reply.send(Err(Error::Queue(format!(
                     "request {} expired after {queue_s:.3}s in queue",
                     req.id
                 ))));
@@ -574,6 +975,7 @@ impl PoolControl<'_> {
                 priority: job.priority,
                 deadline: job.deadline,
                 preempted,
+                attempts,
             },
         );
         Some(ContinuousJob { req: breq, token, resume })
@@ -584,10 +986,25 @@ impl PoolControl<'_> {
     /// worker's next session are unaffected.
     fn fail_remaining(&mut self, e: &Error) {
         let mut m = self.metrics.lock().unwrap();
-        for (_, meta) in self.meta.drain() {
+        for (_, mut meta) in self.meta.drain() {
             let wall_s = meta.admitted.elapsed().as_secs_f64();
             m.record_batch_member(self.wid, meta.queue_s, wall_s, 0.0, None);
-            let _ = meta.reply.send(Err(e.clone()));
+            meta.reply.send(Err(e.clone()));
+        }
+    }
+
+    /// A *transient* session-level failure: every row still tracked
+    /// goes back through the bounded-retry path instead of failing
+    /// outright.  The rows restart from their request (the session's
+    /// in-flight latents died with it); seeded generation keeps the
+    /// rerun bit-identical.
+    fn retry_remaining(&mut self, e: &Error) {
+        let tokens: Vec<u64> = self.meta.keys().copied().collect();
+        for token in tokens {
+            let m = &self.meta[&token];
+            let mut breq = BatchRequest::new(&m.req.prompt, m.req.seed);
+            breq.overrides = m.req.overrides();
+            self.retry(ContinuousJob { req: breq, token, resume: None }, e);
         }
     }
 }
@@ -601,7 +1018,7 @@ impl ContinuousControl for PoolControl<'_> {
         let variant = self.session_variant.clone();
         let jobs = self.queue.try_pop_batch_where(
             slots,
-            |it: &WorkItem| it.class == class,
+            |it: &WorkItem| it.class == class && it.ready(),
             |it: &WorkItem| it.req.variant.clone(),
             Some(&variant),
         );
@@ -681,17 +1098,76 @@ impl ContinuousControl for PoolControl<'_> {
             class: self.class_idx,
             predicted_s: meta.predicted_s,
             resume: job.resume,
+            attempts: meta.attempts,
+            not_before: None,
         };
-        if let Err((item, e)) = self.queue.try_push(item, priority, meta.deadline) {
-            let _ = item.reply.send(Err(Error::Queue(format!(
+        if let Err((mut item, e)) = self.queue.try_push(item, priority, meta.deadline) {
+            item.reply.send(Err(Error::Queue(format!(
                 "request {} displaced and could not requeue: {e}",
                 item.req.id
             ))));
         }
     }
 
+    fn retry(&mut self, job: ContinuousJob, cause: &Error) {
+        let Some(mut meta) = self.meta.remove(&job.token) else {
+            return;
+        };
+        if let Some(b) = &self.opts.breaker {
+            b.record_fault(self.class_idx);
+        }
+        let attempts = meta.attempts + 1;
+        if attempts > self.opts.retry_limit {
+            let wall_s = meta.admitted.elapsed().as_secs_f64();
+            let mut m = self.metrics.lock().unwrap();
+            m.record_retries_exhausted();
+            m.record_batch_member(self.wid, meta.queue_s, wall_s, 0.0, None);
+            drop(m);
+            meta.reply.send(Err(Error::Runtime(format!(
+                "request {} gave up after {attempts} attempts: {cause}",
+                meta.req.id
+            ))));
+            return;
+        }
+        self.metrics.lock().unwrap().record_retry();
+        let delay = backoff_delay(self.opts, attempts);
+        // the checkpoint (when the executor took one) rides along, so
+        // a fault-retried row resumes mid-schedule instead of redoing
+        // its applied steps; either way the numerics are bit-identical
+        // to an uninterrupted run
+        let item = WorkItem {
+            req: meta.req,
+            reply: meta.reply,
+            class: self.class_idx,
+            predicted_s: meta.predicted_s,
+            resume: job.resume,
+            attempts,
+            not_before: Some(Instant::now() + delay),
+        };
+        if let Err((mut item, e)) = self.queue.try_push(item, meta.priority, meta.deadline) {
+            item.reply.send(Err(Error::Queue(format!(
+                "request {} could not requeue after a device fault: {e}",
+                item.req.id
+            ))));
+        }
+    }
+
     fn complete(&mut self, token: u64, result: Result<GenerateResult>) {
-        let Some(meta) = self.meta.remove(&token) else {
+        if let Err(e) = &result {
+            // a retryable per-row failure reaches the terminal callback
+            // when the executor had no checkpoint to take (decode-stage
+            // faults, the default run-to-completion fallback): route it
+            // through the retry budget instead of failing the caller
+            if (e.is_transient() || e.is_device_lost()) && self.meta.contains_key(&token) {
+                let m = &self.meta[&token];
+                let mut breq = BatchRequest::new(&m.req.prompt, m.req.seed);
+                breq.overrides = m.req.overrides();
+                let cause = e.clone();
+                self.retry(ContinuousJob { req: breq, token, resume: None }, &cause);
+                return;
+            }
+        }
+        let Some(mut meta) = self.meta.remove(&token) else {
             return;
         };
         let wall_s = meta.admitted.elapsed().as_secs_f64();
@@ -729,6 +1205,9 @@ impl ContinuousControl for PoolControl<'_> {
                     busy_share_s - r.timings.denoise_s,
                 );
                 drop(m);
+                if let Some(b) = &self.opts.breaker {
+                    b.record_success(self.class_idx);
+                }
                 Ok(GenerateResponse {
                     id: meta.req.id,
                     image: r.image,
@@ -756,7 +1235,7 @@ impl ContinuousControl for PoolControl<'_> {
                 Err(e)
             }
         };
-        let _ = meta.reply.send(resp);
+        meta.reply.send(resp);
     }
 
     fn on_step(&mut self, live: usize, wall_s: f64) {
@@ -779,12 +1258,20 @@ fn continuous_worker_loop<E: WorkerExecutor>(
     queue: &JobQueue<WorkItem>,
     metrics: &Mutex<PoolMetrics>,
     max_batch: usize,
-) {
-    while let Some(jobs) = queue.pop_batch_where(
-        max_batch,
-        |it: &WorkItem| it.class == class_idx,
-        |it: &WorkItem| it.req.variant.clone(),
-    ) {
+    opts: &SupervisionOptions,
+) -> LoopExit {
+    let mut fault_seen = executor.fault_counts();
+    loop {
+        let jobs = match queue.pop_batch_where_timeout(
+            max_batch,
+            |it: &WorkItem| it.class == class_idx && it.ready(),
+            |it: &WorkItem| it.req.variant.clone(),
+            RETRY_POLL,
+        ) {
+            None => return LoopExit::Closed,
+            Some(j) if j.is_empty() => continue, // a backoff gate may have matured
+            Some(j) => j,
+        };
         let session_variant = jobs[0].item.req.variant.clone();
         let mut control = PoolControl {
             wid,
@@ -793,6 +1280,7 @@ fn continuous_worker_loop<E: WorkerExecutor>(
             session_variant,
             queue,
             metrics,
+            opts,
             meta: HashMap::new(),
             next_token: 0,
             step_s_sum: 0.0,
@@ -804,8 +1292,19 @@ fn continuous_worker_loop<E: WorkerExecutor>(
             continue; // every popped job had already expired
         }
         metrics.lock().unwrap().record_session(initial.len());
-        if let Err(e) = executor.execute_continuous(initial, &mut control) {
-            control.fail_remaining(&e);
+        let session = executor.execute_continuous(initial, &mut control);
+        absorb_faults(&mut fault_seen, executor.fault_counts(), metrics);
+        if let Err(e) = session {
+            if e.is_transient() || e.is_device_lost() {
+                // rows the session still tracked go through the retry
+                // budget (record_fault per row happens in retry)
+                control.retry_remaining(&e);
+            } else {
+                control.fail_remaining(&e);
+            }
+            if e.is_device_lost() {
+                return LoopExit::DeviceLost;
+            }
         }
     }
 }
@@ -814,6 +1313,7 @@ fn continuous_worker_loop<E: WorkerExecutor>(
 mod tests {
     use super::*;
     use crate::pipeline::StageTimings;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
     /// Mock executor: sleeps, then succeeds with the request's step
     /// count echoed into the timings.
@@ -845,6 +1345,16 @@ mod tests {
         default_steps: usize,
     ) -> impl Fn(usize) -> Result<SleepExec> + Send + Sync + 'static {
         move |_| Ok(SleepExec { sleep: Duration::from_millis(ms), default_steps })
+    }
+
+    fn quick_result(req: &GenerateRequest) -> GenerateResult {
+        GenerateResult {
+            image: vec![0.0; 4],
+            image_size: 2,
+            latent: vec![req.seed as f32],
+            timings: StageTimings { denoise_steps: 1, total_s: 0.001, ..Default::default() },
+            peak_memory: 1,
+        }
     }
 
     #[test]
@@ -1168,5 +1678,252 @@ mod tests {
             }
         });
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn shutdown_now_terminates_queued_and_in_flight_replies() {
+        let (started_tx, started_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let started_tx = Arc::new(Mutex::new(started_tx));
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let batches2 = Arc::clone(&batches);
+        let mut pool = WorkerPool::start_batched(1, 16, 1, move |_| {
+            Ok(BatchRecordExec {
+                started: started_tx.lock().unwrap().clone(),
+                gate: Arc::clone(&gate_rx),
+                batches: Arc::clone(&batches2),
+            })
+        })
+        .unwrap();
+
+        // job 1 is in flight, parked at the executor's gate
+        let rx_a = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        started_rx.recv().unwrap();
+        // three more queue up behind it
+        let queued: Vec<_> = (2..=4u64)
+            .map(|i| {
+                pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                    .unwrap()
+            })
+            .collect();
+        // release the in-flight batch while shutdown is underway; the
+        // queued jobs are drained before the join, so this never
+        // deadlocks on the gated worker
+        let release = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            let _ = gate_tx.send(());
+        });
+        pool.shutdown_now();
+        release.join().unwrap();
+
+        // the in-flight job finished; every queued job got exactly one
+        // terminal reply, none hang
+        assert!(rx_a.recv().unwrap().is_ok(), "in-flight batch still completes");
+        for rx in queued {
+            let err = rx.recv().unwrap().expect_err("queued job failed at shutdown");
+            assert!(err.to_string().contains("shut down"), "{err}");
+            assert!(rx.recv().is_err(), "exactly one terminal reply per request");
+        }
+        assert_eq!(batches.lock().unwrap().len(), 1, "queued jobs never executed");
+    }
+
+    /// Panics on request id 1, but only in its first incarnation —
+    /// rebuilt generations serve everything.
+    struct PanicOnceExec {
+        generation: usize,
+    }
+
+    impl WorkerExecutor for PanicOnceExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            if self.generation == 0 && req.id == 1 {
+                panic!("injected worker crash");
+            }
+            Ok(quick_result(req))
+        }
+    }
+
+    #[test]
+    fn a_worker_panic_is_supervised_and_never_strands_the_caller() {
+        let builds = Arc::new(AtomicUsize::new(0));
+        let builds2 = Arc::clone(&builds);
+        let pool = WorkerPool::start(1, 8, move |_| {
+            Ok(PanicOnceExec { generation: builds2.fetch_add(1, Ordering::SeqCst) })
+        })
+        .unwrap();
+
+        let rx1 = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        // the reply-slot drop guard fires during the unwind: an
+        // explicit failure, not a dead channel
+        let err = rx1.recv().unwrap().expect_err("crashed request fails explicitly");
+        assert!(err.to_string().contains("worker died"), "{err}");
+        assert!(rx1.recv().is_err(), "exactly one terminal reply");
+
+        // the supervisor rebuilt the executor; the pool still serves
+        let rx2 = pool
+            .submit(GenerateRequest::new(2, "p", 2), Priority::Normal, None)
+            .unwrap();
+        rx2.recv().unwrap().unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "factory re-ran for the rebuild");
+        pool.with_metrics(|m| {
+            assert_eq!(m.worker_restarts, 1);
+            assert_eq!(m.reply_orphaned, 1);
+        });
+    }
+
+    /// Fails each request's first `fails_before` attempts with a
+    /// transient error, then succeeds.
+    struct FlakyExec {
+        fails_before: u32,
+        calls: HashMap<u64, u32>,
+    }
+
+    impl WorkerExecutor for FlakyExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            let n = self.calls.entry(req.id).or_insert(0);
+            *n += 1;
+            if *n <= self.fails_before {
+                return Err(Error::Transient(format!("injected fault #{n}")));
+            }
+            Ok(quick_result(req))
+        }
+    }
+
+    #[test]
+    fn transient_failures_are_retried_with_backoff_until_success() {
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 3,
+            retry_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            8,
+            1,
+            false,
+            supervision,
+            |_wid, _c: usize, _n: &str| Ok(FlakyExec { fails_before: 2, calls: HashMap::new() }),
+        )
+        .unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 1, "third attempt succeeded");
+        pool.with_metrics(|m| {
+            assert_eq!(m.retries, 2);
+            assert_eq!(m.retries_exhausted, 0);
+            assert_eq!(m.stage.requests_ok, 1);
+            assert_eq!(m.stage.requests_failed, 0);
+        });
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_the_caller() {
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 1,
+            retry_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            8,
+            1,
+            false,
+            supervision,
+            |_wid, _c: usize, _n: &str| {
+                Ok(FlakyExec { fails_before: u32::MAX, calls: HashMap::new() })
+            },
+        )
+        .unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let err = rx.recv().unwrap().expect_err("budget spent");
+        assert!(err.to_string().contains("gave up"), "{err}");
+        pool.with_metrics(|m| {
+            assert_eq!(m.retries, 1);
+            assert_eq!(m.retries_exhausted, 1);
+            assert_eq!(m.stage.requests_failed, 1);
+        });
+    }
+
+    /// Loses the device on the first execute ever (shared flag survives
+    /// the rebuild), then serves normally.
+    struct LoseOnceExec {
+        tripped: Arc<AtomicBool>,
+    }
+
+    impl WorkerExecutor for LoseOnceExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            if !self.tripped.swap(true, Ordering::SeqCst) {
+                return Err(Error::DeviceLost("injected device loss".into()));
+            }
+            Ok(quick_result(req))
+        }
+    }
+
+    #[test]
+    fn device_loss_rebuilds_the_worker_and_the_request_survives() {
+        let tripped = Arc::new(AtomicBool::new(false));
+        let tripped2 = Arc::clone(&tripped);
+        let builds = Arc::new(AtomicUsize::new(0));
+        let builds2 = Arc::clone(&builds);
+        let pool = WorkerPool::start(1, 8, move |_| {
+            builds2.fetch_add(1, Ordering::SeqCst);
+            Ok(LoseOnceExec { tripped: Arc::clone(&tripped2) })
+        })
+        .unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        // device loss: the request is requeued (retry 1), the worker
+        // rebuilds its engine, and the rerun succeeds
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "engine rebuilt after device loss");
+        pool.with_metrics(|m| {
+            assert_eq!(m.worker_restarts, 1);
+            assert_eq!(m.retries, 1);
+        });
+    }
+
+    #[test]
+    fn pool_faults_trip_the_shared_breaker() {
+        let breaker = Arc::new(CircuitBreaker::new(1, 2, Duration::from_secs(60)));
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 0,
+            breaker: Some(Arc::clone(&breaker)),
+            ..Default::default()
+        };
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            8,
+            1,
+            false,
+            supervision,
+            |_wid, _c: usize, _n: &str| {
+                Ok(FlakyExec { fails_before: u32::MAX, calls: HashMap::new() })
+            },
+        )
+        .unwrap();
+        for i in 0..2u64 {
+            let rx = pool
+                .submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                .unwrap();
+            rx.recv().unwrap().expect_err("no retries: immediate failure");
+        }
+        assert!(!breaker.admits(0), "two consecutive faults tripped the class");
+        assert!(breaker.all_degraded());
+        pool.with_metrics(|m| assert_eq!(m.retries_exhausted, 2));
+        let report = pool.metrics_report();
+        assert!(report.contains("breaker: default=open"), "{report}");
     }
 }

@@ -266,6 +266,42 @@ impl<T> JobQueue<T> {
         }
     }
 
+    /// [`Self::pop_batch_where`] that waits at most `wait` for an
+    /// eligible job: `Some(batch)` on success, `Some(vec![])` on
+    /// timeout (queue still open — the caller re-evaluates its
+    /// eligibility filter and loops), `None` once closed and drained
+    /// of eligible jobs.  Workers whose eligibility depends on *time*
+    /// (retry-backoff `not_before` gates) use this: a job can become
+    /// eligible without any push to wake the condvar.
+    pub fn pop_batch_where_timeout<K: PartialEq>(
+        &self,
+        max_batch: usize,
+        eligible: impl Fn(&T) -> bool,
+        key: impl Fn(&T) -> K,
+        wait: Duration,
+    ) -> Option<Vec<Job<T>>> {
+        let cap = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let batch = Self::take_batch(&mut inner, cap, &eligible, &key, None);
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            if inner.closed {
+                return None;
+            }
+            let (guard, timeout) = self.available.wait_timeout(inner, wait).unwrap();
+            inner = guard;
+            if timeout.timed_out() {
+                let batch = Self::take_batch(&mut inner, cap, &eligible, &key, None);
+                if !batch.is_empty() {
+                    return Some(batch);
+                }
+                return if inner.closed { None } else { Some(Vec::new()) };
+            }
+        }
+    }
+
     /// Non-blocking [`Self::pop_batch_where`] for mid-flight joins: the
     /// continuous-batching worker polls between denoise steps for up to
     /// `max_batch` eligible jobs compatible with the *running* batch.
@@ -592,6 +628,39 @@ mod tests {
         // the eligibility filter scopes the head to the caller's class
         let other = q.peek_where(|it| it.0 == 1).unwrap();
         assert_eq!(other.deadline, Some(now + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn pop_batch_where_timeout_times_out_and_sees_late_eligibility() {
+        use std::sync::Arc;
+        let q: Arc<JobQueue<u32>> = Arc::new(JobQueue::new(8));
+        // empty queue: times out with an empty batch, queue still open
+        let b = q.pop_batch_where_timeout(4, |_| true, |_| (), Duration::from_millis(5));
+        assert!(matches!(b, Some(ref v) if v.is_empty()));
+        // a queued job that only becomes eligible later (a retry-backoff
+        // gate) is picked up by a subsequent timed-out scan with no push
+        // in between
+        q.push(7, Priority::Normal, None).unwrap();
+        let gate = Instant::now() + Duration::from_millis(30);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || loop {
+            match q2.pop_batch_where_timeout(
+                1,
+                |_| Instant::now() >= gate,
+                |_| (),
+                Duration::from_millis(10),
+            ) {
+                Some(b) if !b.is_empty() => return Some(b[0].item),
+                Some(_) => continue,
+                None => return None,
+            }
+        });
+        assert_eq!(h.join().unwrap(), Some(7));
+        // closed and drained: None
+        q.close();
+        assert!(q
+            .pop_batch_where_timeout(1, |_| true, |_| (), Duration::from_millis(5))
+            .is_none());
     }
 
     #[test]

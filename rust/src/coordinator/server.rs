@@ -34,9 +34,14 @@
 //! ([`crate::coordinator::metrics::ClassMetrics::observed_overhead_s`]).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::AppConfig;
-use crate::coordinator::pool::{ResponseReceiver, WorkerExecutor, WorkerPool};
+use crate::coordinator::breaker::CircuitBreaker;
+use crate::coordinator::pool::{
+    ResponseReceiver, SupervisionOptions, WorkerExecutor, WorkerPool,
+};
+use crate::coordinator::queue::Priority;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
 use crate::pipeline::{
@@ -95,6 +100,13 @@ impl WorkerExecutor for PipelineWorker {
         self.executor
             .run_continuous(&key, &self.default_variant, jobs, self.max_batch, control)
             .map(|_| ())
+    }
+
+    /// Cumulative injected-fault counters from this worker's device,
+    /// diffed by the pool into the fleet metrics.
+    fn fault_counts(&self) -> (u64, u64, u64) {
+        let s = self.executor.engine.device_stats();
+        (s.injected_transient(), s.injected_fatal(), s.injected_spikes())
     }
 }
 
@@ -158,17 +170,50 @@ impl Server {
         let store = Arc::new(ArtifactStore::new());
         let worker_store = Arc::clone(&store);
         let max_batch = config.max_batch;
-        let pool = WorkerPool::start_fleet_mode(
+
+        // deterministic fault injection: a seeded plan installed on
+        // every worker's device stats (each worker draws from the same
+        // seed, so a fixed (config, submission order) replays the same
+        // failures).  Empty plans are not installed at all.
+        let fault_plan = {
+            let seed = config.fault_seed.unwrap_or(0);
+            let mut plan = match &config.fault_spec {
+                Some(spec) => xla::FaultPlan::parse(spec, seed)
+                    .map_err(|e| Error::Config(format!("fault spec: {e}")))?,
+                None => xla::FaultPlan::seeded(seed),
+            };
+            if config.fault_rate > 0.0 {
+                plan = plan.transient_dispatch_rate(config.fault_rate);
+            }
+            if plan.is_empty() { None } else { Some(plan) }
+        };
+
+        let supervision = SupervisionOptions {
+            retry_limit: config.retry_limit as u32,
+            retry_backoff: Duration::from_millis(config.retry_backoff_ms),
+            breaker: Some(Arc::new(CircuitBreaker::new(
+                classes.len(),
+                config.breaker_threshold,
+                Duration::from_millis(config.breaker_cooldown_ms),
+            ))),
+            ..SupervisionOptions::default()
+        };
+
+        let pool = WorkerPool::start_supervised(
             &classes,
             config.queue_depth,
             config.max_batch,
             config.continuous,
+            supervision,
             move |_wid, _class: usize, _name: &str| {
                 let executor = PipelinedExecutor::with_store(
                     manifest.clone(),
                     options.clone(),
                     Arc::clone(&worker_store),
                 )?;
+                if let Some(plan) = &fault_plan {
+                    executor.engine.device_stats().set_fault_plan(Some(plan.clone()));
+                }
                 Ok(PipelineWorker {
                     executor,
                     default_variant: variant.clone(),
@@ -202,6 +247,18 @@ impl Server {
         seed: u64,
         opts: SubmitOptions,
     ) -> Result<ResponseReceiver> {
+        // degrading admission, last line: when *every* device class is
+        // quarantined, queueing more work just ages in a queue nothing
+        // drains — shed everything except high-priority load (which
+        // rides the breakers' half-open probes back to health)
+        if let Some(b) = self.pool.breaker() {
+            if b.all_degraded() && opts.priority != Priority::High {
+                self.pool.record_shed();
+                return Err(Error::Queue(
+                    "every device class is degraded; load shed".into(),
+                ));
+            }
+        }
         self.next_id += 1;
         let mut req = GenerateRequest::new(self.next_id, prompt, seed);
         req.num_steps = opts.num_steps;
@@ -230,7 +287,21 @@ impl Server {
                             .and_then(|c| c.observed_overhead_s(&variant))
                     })
                 };
-                match router.route_observed(&variant, steps, opts.deadline, &observed) {
+                // quarantined classes are routed around; high-priority
+                // requests ignore the breakers (they are the half-open
+                // probe traffic that re-admits a recovered class)
+                let breaker = self.pool.breaker();
+                let admit = |class: usize| match breaker {
+                    Some(b) if opts.priority != Priority::High => b.admits(class),
+                    _ => true,
+                };
+                match router.route_observed_filtered(
+                    &variant,
+                    steps,
+                    opts.deadline,
+                    &observed,
+                    &admit,
+                ) {
                     Ok(route) => self.pool.submit_routed(
                         req,
                         opts.priority,
@@ -280,6 +351,12 @@ impl Server {
     /// The admission router, when this server fronts a planned fleet.
     pub fn router(&self) -> Option<&FleetRouter> {
         self.router.as_ref()
+    }
+
+    /// The per-class circuit breakers behind degrading admission
+    /// (tests, dashboards, operator kill switch via `trip_now`).
+    pub fn breaker(&self) -> Option<&Arc<CircuitBreaker>> {
+        self.pool.breaker()
     }
 
     /// The fleet-shared host-artifact store (tests, dashboards).

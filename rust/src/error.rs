@@ -1,4 +1,15 @@
 //! Crate-wide error type (hand-rolled: no proc-macro deps offline).
+//!
+//! Errors split into two recovery classes the serving stack acts on
+//! (see DESIGN.md "Failure domains & recovery"):
+//!
+//! * **Transient** ([`Error::Transient`], [`Error::Oom`]) — the same
+//!   operation is expected to succeed on retry; the pool checkpoints
+//!   and requeues affected rows with bounded retry + backoff.
+//! * **Fatal** (everything else) — retrying is pointless; the row is
+//!   failed.  [`Error::DeviceLost`] is fatal *for the device*: its
+//!   in-flight rows are retried elsewhere and the worker restarts
+//!   with a fresh engine.
 
 use std::fmt;
 
@@ -13,6 +24,25 @@ pub enum Error {
     Config(String),
     Queue(String),
     Xla(String),
+    /// Recoverable device hiccup: retry after backoff.
+    Transient(String),
+    /// Device allocator exhausted; pressure may clear — retryable.
+    Oom(String),
+    /// The device handle is gone; the worker must rebuild its engine.
+    DeviceLost(String),
+}
+
+impl Error {
+    /// Whether the pool should retry the failed work (bounded, with
+    /// exponential backoff) instead of failing it outright.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Transient(_) | Error::Oom(_))
+    }
+
+    /// Whether the worker's engine is unusable and must be rebuilt.
+    pub fn is_device_lost(&self) -> bool {
+        matches!(self, Error::DeviceLost(_))
+    }
 }
 
 impl fmt::Display for Error {
@@ -27,6 +57,9 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Queue(m) => write!(f, "queue error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Transient(m) => write!(f, "transient device error: {m}"),
+            Error::Oom(m) => write!(f, "device oom: {m}"),
+            Error::DeviceLost(m) => write!(f, "device lost: {m}"),
         }
     }
 }
@@ -40,3 +73,18 @@ impl From<std::io::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_classes() {
+        assert!(Error::Transient("x".into()).is_transient());
+        assert!(Error::Oom("x".into()).is_transient());
+        assert!(!Error::DeviceLost("x".into()).is_transient());
+        assert!(Error::DeviceLost("x".into()).is_device_lost());
+        assert!(!Error::Xla("x".into()).is_transient());
+        assert!(!Error::Queue("x".into()).is_device_lost());
+    }
+}

@@ -27,7 +27,7 @@
 //! arithmetic consumes (schedule, position, latent, guidance, encoded
 //! context) and nothing derived from batch composition.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::pipeline::batch::{BatchKey, BatchRequest};
 use crate::pipeline::executor::GenerateResult;
 
@@ -110,6 +110,17 @@ pub trait ContinuousControl {
     /// checkpoint (`resume` is `Some`), or an incompatible joiner
     /// bounced untouched (`resume` as it arrived).
     fn requeue(&mut self, job: ContinuousJob);
+
+    /// A *transient* device failure checkpointed this row out of the
+    /// session (`resume` holds its progress; the step that faulted was
+    /// never applied, so resuming is bit-identical to an uninterrupted
+    /// run).  The default treats it like any other requeue; the pool
+    /// overrides it to enforce a bounded retry budget with exponential
+    /// backoff, failing rows whose budget is exhausted.
+    fn retry(&mut self, job: ContinuousJob, cause: &Error) {
+        let _ = cause;
+        self.requeue(job);
+    }
 
     /// Terminal outcome for a row.
     fn complete(&mut self, token: u64, result: Result<GenerateResult>);

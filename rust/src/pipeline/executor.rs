@@ -64,7 +64,7 @@ use crate::pipeline::continuous::{
     Checkpoint, ContinuousControl, ContinuousJob, LiveRow, SessionStats,
 };
 use crate::pipeline::loader::Prefetcher;
-use crate::pipeline::residency::{ResidencyManager, Retention};
+use crate::pipeline::residency::{PinGuard, ResidencyManager, Retention};
 use crate::pipeline::trace::MemoryTrace;
 use crate::runtime::{
     ActInput, ArtifactStore, Component, Engine, LoadStats, Manifest, WarmExecutable,
@@ -382,6 +382,32 @@ impl PipelinedExecutor {
             residency.take_warm(name, tag)
         };
         residency.acquire(name, tag, bytes, || {
+            let comp = manifest.component(name)?;
+            let (host, hit) = store.get_or_load(manifest, comp, tag)?;
+            let c = Component::load_from_host(engine, comp, &host, warm_exe, hit)?;
+            profile.record(&c.stats);
+            Ok(Rc::new(c))
+        })
+    }
+
+    /// [`Self::acquire_component`] with an RAII pin: the returned
+    /// guard balances the pin if the caller unwinds (error or panic)
+    /// before its explicit release — continuous sessions hold their
+    /// components through arbitrary user-request work, so their pins
+    /// must survive any exit path (see `residency::PinGuard`).
+    fn acquire_component_pinned(
+        &mut self,
+        name: &str,
+        tag: &str,
+    ) -> Result<(ResidentComponent, PinGuard)> {
+        let bytes = self.stored_bytes(name, tag)?;
+        let PipelinedExecutor { engine, manifest, residency, store, profile, .. } = self;
+        let warm_exe = if residency.contains(name, tag) {
+            None
+        } else {
+            residency.take_warm(name, tag)
+        };
+        residency.acquire_pinned(name, tag, bytes, || {
             let comp = manifest.component(name)?;
             let (host, hit) = store.get_or_load(manifest, comp, tag)?;
             let c = Component::load_from_host(engine, comp, &host, warm_exe, hit)?;
@@ -855,7 +881,9 @@ impl PipelinedExecutor {
             1
         };
         let unet_name = format!("unet_{}", key.variant);
-        let unet = self.acquire_component(&unet_name, &key.weights_tag)?;
+        // RAII pin: a panic unwinding through the session balances the
+        // UNet pin, so a restarted worker's residency never wedges
+        let (unet, unet_pin) = self.acquire_component_pinned(&unet_name, &key.weights_tag)?;
         let result = self.continuous_session(key, default_variant, &unet, initial, cap, control);
         if result.is_err() {
             // a failed session must not leak pins into the next one
@@ -864,6 +892,7 @@ impl PipelinedExecutor {
             self.uncond_ctx = None;
         }
         drop(unet);
+        unet_pin.disarm();
         let _ = self.residency.release(&unet_name, &key.weights_tag, Retention::Cache);
         result
     }
@@ -940,7 +969,37 @@ impl PipelinedExecutor {
             {
                 // one CFG-batched UNet dispatch for every live row
                 let PipelinedExecutor { engine, ddim, .. } = self;
-                sb.dispatch(engine, unet)?;
+                if let Err(e) = sb.dispatch(engine, unet) {
+                    if !e.is_transient() {
+                        return Err(e);
+                    }
+                    // transient device fault: the faulted step was never
+                    // applied, so every live row's state is exactly its
+                    // last good step.  Checkpoint them all out for
+                    // bounded retry (resuming is bit-identical to an
+                    // uninterrupted run) and keep the session alive.
+                    for lm in live.drain(..) {
+                        let LiveMember { token, req, m, pos, busy_s, denoise_s, .. } = lm;
+                        control.retry(
+                            ContinuousJob {
+                                req,
+                                token,
+                                resume: Some(Checkpoint {
+                                    ts: m.ts,
+                                    pos,
+                                    latent: m.latent,
+                                    guidance: m.guidance,
+                                    cond: m.cond,
+                                    busy_s,
+                                    denoise_s,
+                                }),
+                            },
+                            &e,
+                        );
+                    }
+                    dirty = true;
+                    continue;
+                }
                 let n = sb.row_elems();
                 let eps2 = &sb.out[0];
                 for (k, lm) in live.iter_mut().enumerate() {
@@ -1043,10 +1102,11 @@ impl PipelinedExecutor {
         // uncond context when no earlier request cached it
         let need_encoder =
             self.uncond_ctx.is_none() || accepted.iter().any(|j| j.resume.is_none());
-        let text = if need_encoder {
-            Some(self.acquire_component("text_encoder", AUX_TAG)?)
+        let (text, text_pin) = if need_encoder {
+            let (c, pin) = self.acquire_component_pinned("text_encoder", AUX_TAG)?;
+            (Some(c), Some(pin))
         } else {
-            None
+            (None, None)
         };
         let t0 = Instant::now();
         let seq = self.manifest.tokenizer.seq_len;
@@ -1118,8 +1178,9 @@ impl PipelinedExecutor {
         for lm in live.iter_mut().rev().take(n_admitted) {
             lm.busy_s += enc_share;
         }
-        if text.is_some() {
+        if let Some(pin) = text_pin {
             drop(text);
+            pin.disarm();
             self.residency.release("text_encoder", AUX_TAG, Retention::Evict)?;
             self.residency.mark("text-encoder-evicted");
         }
@@ -1169,7 +1230,7 @@ impl PipelinedExecutor {
         control: &mut dyn ContinuousControl,
     ) -> Result<()> {
         let t0 = Instant::now();
-        let dec = match self.acquire_component("decoder", AUX_TAG) {
+        let (dec, dec_pin) = match self.acquire_component_pinned("decoder", AUX_TAG) {
             Ok(d) => d,
             Err(e) => {
                 // decoder never came up: these rows are lost either way,
@@ -1216,6 +1277,7 @@ impl PipelinedExecutor {
         }
         *anchor = self.profile.clone();
         drop(dec);
+        dec_pin.disarm();
         self.residency.release("decoder", AUX_TAG, Retention::Evict)?;
         self.residency.mark("decoder-evicted");
         Ok(())

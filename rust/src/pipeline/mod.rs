@@ -22,5 +22,5 @@ pub use executor::{
 };
 pub use loader::{PrefetchedComponent, Prefetcher};
 pub use memory::MemoryLedger;
-pub use residency::{ResidencyManager, Retention};
+pub use residency::{PinGuard, ResidencyManager, Retention};
 pub use trace::{EventKind, MemoryTrace, TraceEvent};

@@ -35,6 +35,10 @@
 //! executor instantiates it with `C = Rc<runtime::Component>`,
 //! `W = runtime::WarmExecutable`.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::error::{Error, Result};
 use crate::pipeline::memory::MemoryLedger;
 use crate::pipeline::trace::MemoryTrace;
@@ -53,8 +57,6 @@ struct Entry<C> {
     name: String,
     tag: String,
     bytes: usize,
-    /// number of outstanding `acquire`s (reserve counts as one)
-    pins: usize,
     /// logical clock of the last acquire (LRU ordering)
     last_used: u64,
     /// `None` while reserved (prefetch charged but not yet fulfilled)
@@ -64,6 +66,91 @@ struct Entry<C> {
 impl<C> Entry<C> {
     fn label(&self) -> String {
         format!("{}:{}", self.name, self.tag)
+    }
+}
+
+/// Pin counts live *outside* the entries, behind an `Arc`, so a
+/// [`PinGuard`] can balance them from `Drop` even while the manager is
+/// mutably borrowed elsewhere on the stack — the property that makes
+/// pins panic-safe (a worker unwinding mid-`acquire` cannot strand a
+/// pinned component).
+#[derive(Debug, Default)]
+struct PinLedger {
+    counts: Mutex<BTreeMap<(String, String), usize>>,
+    /// pins balanced by a dropped (not disarmed) guard
+    auto_released: AtomicU64,
+}
+
+impl PinLedger {
+    fn pin(&self, name: &str, tag: &str) {
+        *self
+            .counts
+            .lock()
+            .unwrap()
+            .entry((name.to_string(), tag.to_string()))
+            .or_insert(0) += 1;
+    }
+
+    /// Decrement; `false` when no pin was outstanding.
+    fn unpin(&self, name: &str, tag: &str) -> bool {
+        let mut counts = self.counts.lock().unwrap();
+        let key = (name.to_string(), tag.to_string());
+        match counts.get_mut(&key) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                if *n == 0 {
+                    counts.remove(&key);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn clear(&self, name: &str, tag: &str) {
+        self.counts
+            .lock()
+            .unwrap()
+            .remove(&(name.to_string(), tag.to_string()));
+    }
+
+    fn count(&self, name: &str, tag: &str) -> usize {
+        *self
+            .counts
+            .lock()
+            .unwrap()
+            .get(&(name.to_string(), tag.to_string()))
+            .unwrap_or(&0)
+    }
+}
+
+/// An RAII pin over one `(component, tag)`: if dropped without
+/// [`PinGuard::disarm`] — an error unwind, a worker panic mid-request —
+/// the pin is released automatically, so the ledger always balances
+/// and the component stays evictable.  The happy path disarms the
+/// guard and calls [`ResidencyManager::release`] to pick a
+/// [`Retention`].
+#[derive(Debug)]
+pub struct PinGuard {
+    ledger: Arc<PinLedger>,
+    name: String,
+    tag: String,
+    armed: bool,
+}
+
+impl PinGuard {
+    /// Consume the guard without unpinning: the caller takes over the
+    /// pin and must balance it with an explicit `release`.
+    pub fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        if self.armed && self.ledger.unpin(&self.name, &self.tag) {
+            self.ledger.auto_released.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -81,6 +168,7 @@ struct WarmEntry<W> {
 pub struct ResidencyManager<C, W = ()> {
     ledger: MemoryLedger,
     entries: Vec<Entry<C>>,
+    pins: Arc<PinLedger>,
     clock: u64,
     warm: Vec<WarmEntry<W>>,
     warm_capacity: usize,
@@ -97,6 +185,7 @@ impl<C: Clone, W> ResidencyManager<C, W> {
         ResidencyManager {
             ledger: MemoryLedger::new(budget),
             entries: Vec::new(),
+            pins: Arc::new(PinLedger::default()),
             clock: 0,
             warm: Vec::new(),
             warm_capacity: 0,
@@ -213,11 +302,12 @@ impl<C: Clone, W> ResidencyManager<C, W> {
     /// its payload into the warm tier.
     /// Returns `(name, tag, bytes)` of the evicted component.
     pub fn evict_lru(&mut self) -> Option<(String, String, usize)> {
+        let pins = &self.pins;
         let idx = self
             .entries
             .iter()
             .enumerate()
-            .filter(|(_, e)| e.pins == 0)
+            .filter(|(_, e)| pins.count(&e.name, &e.tag) == 0)
             .min_by_key(|(_, e)| e.last_used)
             .map(|(i, _)| i)?;
         let e = self.entries.remove(idx);
@@ -258,9 +348,10 @@ impl<C: Clone, W> ResidencyManager<C, W> {
                     e.label()
                 )));
             }
-            e.pins += 1;
             e.last_used = now;
-            return Ok(e.payload.as_ref().expect("checked above").clone());
+            let c = e.payload.as_ref().expect("checked above").clone();
+            self.pins.pin(name, tag);
+            return Ok(c);
         }
         self.evict_to_fit(bytes);
         let label = format!("{name}:{tag}");
@@ -271,10 +362,10 @@ impl<C: Clone, W> ResidencyManager<C, W> {
                     name: name.to_string(),
                     tag: tag.to_string(),
                     bytes,
-                    pins: 1,
                     last_used: now,
                     payload: Some(c.clone()),
                 });
+                self.pins.pin(name, tag);
                 Ok(c)
             }
             Err(e) => {
@@ -284,6 +375,36 @@ impl<C: Clone, W> ResidencyManager<C, W> {
         }
     }
 
+    /// [`Self::acquire`] returning an RAII [`PinGuard`] alongside the
+    /// payload.  On the happy path the caller disarms the guard and
+    /// releases explicitly (choosing a [`Retention`]); on any unwind —
+    /// error return or panic — the dropped guard balances the pin, so
+    /// a worker dying mid-request can never strand a pinned component.
+    pub fn acquire_pinned(
+        &mut self,
+        name: &str,
+        tag: &str,
+        bytes: usize,
+        load: impl FnOnce() -> Result<C>,
+    ) -> Result<(C, PinGuard)> {
+        let c = self.acquire(name, tag, bytes, load)?;
+        Ok((
+            c,
+            PinGuard {
+                ledger: Arc::clone(&self.pins),
+                name: name.to_string(),
+                tag: tag.to_string(),
+                armed: true,
+            },
+        ))
+    }
+
+    /// Pins balanced by a dropped (not disarmed) [`PinGuard`] — each
+    /// one is a leak the RAII layer caught.
+    pub fn pins_auto_released(&self) -> u64 {
+        self.pins.auto_released.load(Ordering::Relaxed)
+    }
+
     /// Unpin `(name, tag)`.  With [`Retention::Evict`] the component is
     /// dropped (and the ledger credited) once no pins remain; with
     /// [`Retention::Cache`] it stays resident for reuse.
@@ -291,12 +412,12 @@ impl<C: Clone, W> ResidencyManager<C, W> {
         let i = self.index_of(name, tag).ok_or_else(|| {
             Error::Pipeline(format!("{name}:{tag}: release of non-resident component"))
         })?;
-        let e = &mut self.entries[i];
-        if e.pins == 0 {
-            return Err(Error::Pipeline(format!("{}: release without pin", e.label())));
+        if !self.pins.unpin(name, tag) {
+            return Err(Error::Pipeline(format!(
+                "{name}:{tag}: release without pin"
+            )));
         }
-        e.pins -= 1;
-        if retention == Retention::Evict && e.pins == 0 {
+        if retention == Retention::Evict && self.pins.count(name, tag) == 0 {
             let e = self.entries.remove(i);
             let _ = self.ledger.free(&e.label());
             if let Some(p) = e.payload.as_ref() {
@@ -321,10 +442,10 @@ impl<C: Clone, W> ResidencyManager<C, W> {
             name: name.to_string(),
             tag: tag.to_string(),
             bytes,
-            pins: 1,
             last_used: now,
             payload: None,
         });
+        self.pins.pin(name, tag);
         Ok(())
     }
 
@@ -348,6 +469,7 @@ impl<C: Clone, W> ResidencyManager<C, W> {
     /// component is trusted for reuse.
     pub fn purge(&mut self, name: &str, tag: &str) -> bool {
         self.warm.retain(|e| !(e.name == name && e.tag == tag));
+        self.pins.clear(name, tag);
         match self.index_of(name, tag) {
             Some(i) => {
                 let e = self.entries.remove(i);
@@ -365,6 +487,7 @@ impl<C: Clone, W> ResidencyManager<C, W> {
         })?;
         let e = self.entries.remove(i);
         let _ = self.ledger.free(&e.label());
+        self.pins.clear(name, tag);
         Ok(())
     }
 
@@ -373,9 +496,7 @@ impl<C: Clone, W> ResidencyManager<C, W> {
     }
 
     pub fn is_pinned(&self, name: &str, tag: &str) -> bool {
-        self.index_of(name, tag)
-            .map(|i| self.entries[i].pins > 0)
-            .unwrap_or(false)
+        self.index_of(name, tag).is_some() && self.pins.count(name, tag) > 0
     }
 
     /// Number of resident (cached or pinned) components.
@@ -548,6 +669,63 @@ mod tests {
         assert_eq!(r.evict_idle(), 300);
         assert_eq!(r.used(), 50);
         assert_eq!(r.resident_count(), 1);
+    }
+
+    #[test]
+    fn dropped_pin_guard_balances_the_ledger() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        {
+            let (c, _guard) = r.acquire_pinned("a", "fp32", 60, ok(1)).unwrap();
+            assert_eq!(c, 1);
+            assert!(r.is_pinned("a", "fp32"));
+            // guard dropped here without disarm — simulating an unwind
+        }
+        assert!(!r.is_pinned("a", "fp32"), "drop balanced the pin");
+        assert_eq!(r.pins_auto_released(), 1);
+        assert!(r.contains("a", "fp32"), "component stays resident");
+        // and is evictable again: budget pressure can reclaim it
+        r.acquire("b", "fp32", 60, ok(2)).unwrap();
+        assert!(!r.contains("a", "fp32"), "unpinned entry evicted for b");
+    }
+
+    #[test]
+    fn disarmed_pin_guard_hands_the_pin_to_release() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let (_c, guard) = r.acquire_pinned("a", "fp32", 60, ok(1)).unwrap();
+        guard.disarm();
+        assert!(r.is_pinned("a", "fp32"), "disarm keeps the pin");
+        assert_eq!(r.pins_auto_released(), 0);
+        r.release("a", "fp32", Retention::Evict).unwrap();
+        assert!(!r.contains("a", "fp32"));
+        assert_eq!(r.used(), 0);
+    }
+
+    #[test]
+    fn pin_guard_survives_a_purge_without_unbalancing() {
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let (_c, guard) = r.acquire_pinned("a", "fp32", 60, ok(1)).unwrap();
+        assert!(r.purge("a", "fp32"), "purge drops even pinned entries");
+        assert_eq!(r.used(), 0);
+        drop(guard); // pin already cleared by the purge: a no-op
+        assert_eq!(r.pins_auto_released(), 0);
+        // the slate is clean for a fresh acquire
+        r.acquire("a", "fp32", 60, ok(2)).unwrap();
+        assert!(r.is_pinned("a", "fp32"));
+    }
+
+    #[test]
+    fn panic_mid_request_cannot_strand_a_pin() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut r: ResidencyManager<u32> = ResidencyManager::new(100);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let (_c, _guard) = r.acquire_pinned("a", "fp32", 60, ok(1)).unwrap();
+            panic!("worker died mid-request");
+        }));
+        assert!(result.is_err());
+        assert!(!r.is_pinned("a", "fp32"), "unwind balanced the pin");
+        assert_eq!(r.pins_auto_released(), 1);
+        assert!(r.evict_lru().is_some(), "entry reclaimable after the panic");
+        assert_eq!(r.used(), 0);
     }
 
     #[test]

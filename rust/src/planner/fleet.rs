@@ -156,14 +156,35 @@ impl FleetRouter {
         deadline: Option<Duration>,
         observed_overhead: &dyn Fn(usize) -> Option<f64>,
     ) -> Result<Route> {
+        self.route_observed_filtered(variant, num_steps, deadline, observed_overhead, &|_| true)
+    }
+
+    /// Routing under degrading admission: classes for which
+    /// `admit(class)` is false (quarantined by their circuit breaker)
+    /// are skipped as if absent from the fleet.  A deadline only the
+    /// quarantined classes could meet is rejected as infeasible — the
+    /// healthy fleet is what the prediction has to hold on.  When
+    /// *every* class is filtered out the request is refused outright
+    /// (callers shed or queue it at their own policy).
+    pub fn route_observed_filtered(
+        &self,
+        variant: &str,
+        num_steps: usize,
+        deadline: Option<Duration>,
+        observed_overhead: &dyn Fn(usize) -> Option<f64>,
+        admit: &dyn Fn(usize) -> bool,
+    ) -> Result<Route> {
         let horizon = deadline.unwrap_or(FALLBACK_DEADLINE).as_secs_f64();
         let mut cheapest: Option<Route> = None;
-        let mut fastest = Route { class: 0, predicted_s: f64::INFINITY };
+        let mut fastest: Option<Route> = None;
         for (i, class) in self.fleet.classes.iter().enumerate() {
+            if !admit(i) {
+                continue;
+            }
             let plan = self.plans.plan(&class.device, variant)?;
             let predicted_s = plan.predict_service_with(num_steps, observed_overhead(i));
-            if predicted_s < fastest.predicted_s {
-                fastest = Route { class: i, predicted_s };
+            if fastest.map_or(true, |f: Route| predicted_s < f.predicted_s) {
+                fastest = Some(Route { class: i, predicted_s });
             }
             let is_cheaper = match cheapest {
                 Some(c) => predicted_s > c.predicted_s,
@@ -173,10 +194,16 @@ impl FleetRouter {
                 cheapest = Some(Route { class: i, predicted_s });
             }
         }
+        let Some(fastest) = fastest else {
+            return Err(Error::Queue(format!(
+                "every device class is quarantined; no route for {num_steps} steps \
+                 of '{variant}'"
+            )));
+        };
         match cheapest {
             Some(route) => Ok(route),
             // deadline-less work is never rejected: fall back to the
-            // fastest class even past the aging horizon
+            // fastest admitted class even past the aging horizon
             None if deadline.is_none() => Ok(fastest),
             None => Err(Error::Queue(format!(
                 "deadline {:.3}s infeasible: fastest class '{}' predicts {:.3}s \
@@ -282,6 +309,39 @@ mod tests {
             .unwrap();
         assert_eq!(route.class, 1, "measured overhead re-routed the request");
         assert!(route.predicted_s <= d);
+    }
+
+    #[test]
+    fn quarantined_classes_are_routed_around_or_refused() {
+        let r = two_class_router();
+        let no_overhead = |_: usize| None;
+
+        // un-filtered, a deadline-less request picks the cheap class 1
+        assert_eq!(r.route("mobile", 20, None).unwrap().class, 1);
+        // with class 1 quarantined, the same request lands on class 0
+        let only_fast = |class: usize| class == 0;
+        let route = r
+            .route_observed_filtered("mobile", 20, None, &no_overhead, &only_fast)
+            .unwrap();
+        assert_eq!(route.class, 0, "quarantine rerouted the request");
+
+        // a deadline only the fast (quarantined) class could meet is
+        // infeasible on the healthy remainder
+        let fast = r.predicted_s(0, "mobile", 20).unwrap();
+        let slow = r.predicted_s(1, "mobile", 20).unwrap();
+        let tight = Duration::from_secs_f64((fast + slow) / 2.0);
+        let only_slow = |class: usize| class == 1;
+        let err = r
+            .route_observed_filtered("mobile", 20, Some(tight), &no_overhead, &only_slow)
+            .unwrap_err();
+        assert!(err.to_string().contains("infeasible"), "{err}");
+
+        // every class quarantined: refused outright, even deadline-less
+        let none = |_: usize| false;
+        let err = r
+            .route_observed_filtered("mobile", 20, None, &no_overhead, &none)
+            .unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
     }
 
     #[test]

@@ -20,8 +20,16 @@ use crate::error::{Error, Result};
 use crate::runtime::artifact::{ComponentManifest, Manifest};
 use crate::runtime::store::{HostArtifact, HostLoadStats};
 
+/// Map a backend error into the crate taxonomy.  Injected faults (and,
+/// with real bindings, the PJRT status codes) carry a classification
+/// that decides retry vs fail vs worker restart — see `error.rs`.
 fn xerr(e: xla::Error) -> Error {
-    Error::Xla(e.to_string())
+    match e.fault_kind() {
+        Some(xla::FaultKind::Transient) => Error::Transient(e.to_string()),
+        Some(xla::FaultKind::Oom) => Error::Oom(e.to_string()),
+        Some(xla::FaultKind::DeviceLost) => Error::DeviceLost(e.to_string()),
+        Some(xla::FaultKind::Fatal) | None => Error::Xla(e.to_string()),
+    }
 }
 
 /// Shared PJRT client (CPU plugin).

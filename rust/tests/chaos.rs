@@ -1,0 +1,287 @@
+//! Chaos acceptance tests: the fault-injected device runtime under a
+//! deterministic fault schedule — transient dispatch faults, a worker
+//! panic, and a quarantined class.
+//!
+//! Pinned invariants:
+//! * every submitted request resolves **exactly once** — one terminal
+//!   reply per receiver, a second `recv` always disconnects, and the
+//!   ok/failed counters sum to the submission count (nothing lost,
+//!   nothing double-completed);
+//! * a row that was interrupted by an injected transient fault and
+//!   retried from its checkpoint is bit-identical to a fault-free run;
+//! * a worker panic is supervised (engine rebuilt, queue keeps
+//!   draining) and the in-flight caller gets an explicit error, never
+//!   a hang;
+//! * a class whose devices keep faulting is quarantined by its breaker
+//!   while healthy classes keep serving, and an all-degraded fleet
+//!   sheds everything except high-priority probe traffic;
+//! * the batching/continuous parity suites run with fault injection
+//!   *disabled* — nothing here touches them.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::{
+    BreakerState, CircuitBreaker, GenerateRequest, Priority, Server, SubmitOptions,
+    SupervisionOptions, WorkerExecutor, WorkerPool,
+};
+use mobile_diffusion::error::{Error, Result};
+use mobile_diffusion::pipeline::{
+    ExecOptions, ExecOverrides, GenerateResult, PipelinedExecutor, StageTimings,
+};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::testkit::{self, FakeArtifactSpec};
+
+fn small_spec() -> FakeArtifactSpec {
+    FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    }
+}
+
+/// Fault-free single-request baseline on a fresh executor.
+fn solo(dir: &Path, prompt: &str, seed: u64, steps: usize) -> GenerateResult {
+    let m = Manifest::load(dir).unwrap();
+    let mut ex =
+        PipelinedExecutor::new(m, ExecOptions { num_steps: 20, ..Default::default() }).unwrap();
+    let ov = ExecOverrides { num_steps: Some(steps), ..Default::default() };
+    ex.generate_with(prompt, seed, "mobile", &ov).unwrap()
+}
+
+/// Workers fold the device's injected-fault counters into the pool
+/// metrics at batch/session boundaries, which may land just *after*
+/// the last reply: bound the wait instead of racing it.
+fn wait_for(cond: impl Fn() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn faulted_cfg(dir: std::path::PathBuf) -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 4;
+    cfg.num_workers = 1;
+    cfg.max_batch = 4;
+    cfg.retry_backoff_ms = 1;
+    cfg
+}
+
+/// The headline guarantee, across three fixed fault seeds: a schedule
+/// of one guaranteed transient dispatch fault plus seeded random
+/// transients and latency spikes, and still every request gets exactly
+/// one terminal reply.
+#[test]
+fn every_request_resolves_exactly_once_under_seeded_faults() {
+    for seed in [7u64, 19, 1234] {
+        let dir =
+            testkit::fake_artifacts_dir(&format!("chaos_seed_{seed}"), &small_spec()).unwrap();
+        let mut cfg = faulted_cfg(dir);
+        cfg.fault_seed = Some(seed);
+        cfg.fault_spec = Some("dispatch:4:transient,rate:0.15,spike:5:1".into());
+        cfg.retry_limit = 6;
+        let mut server = Server::start(&cfg).unwrap();
+
+        let receivers: Vec<_> = (0..6)
+            .map(|i| server.submit(&format!("prompt {i}"), i as u64).unwrap())
+            .collect();
+        let (mut ok, mut failed) = (0usize, 0usize);
+        for rx in receivers {
+            match rx.recv().expect("every request gets a terminal reply") {
+                Ok(resp) => {
+                    assert!(resp.image.iter().all(|v| v.is_finite()), "seed {seed}");
+                    ok += 1;
+                }
+                Err(_) => failed += 1,
+            }
+            assert!(rx.recv().is_err(), "seed {seed}: a request must never resolve twice");
+        }
+        assert_eq!(ok + failed, 6, "seed {seed}: nothing lost, nothing duplicated");
+        server.with_metrics(|m| {
+            assert_eq!(
+                m.stage.requests_ok + m.stage.requests_failed,
+                6,
+                "seed {seed}: terminal accounting matches the submission count"
+            );
+            assert!(m.retries >= 1, "seed {seed}: faulted rows were retried, not dropped");
+        });
+        wait_for(
+            || server.with_metrics(|m| m.injected_transient >= 1),
+            "the scheduled dispatch fault to surface in the metrics",
+        );
+        let report = server.metrics_report().unwrap();
+        assert!(report.contains("faults:"), "{report}");
+        assert!(report.contains("breaker:"), "{report}");
+    }
+}
+
+/// The recovery-correctness half: rows interrupted by an injected
+/// transient dispatch fault and resumed from their checkpoint produce
+/// bit-identical latents and images to an uninterrupted run.
+#[test]
+fn retried_rows_are_bit_identical_to_a_fault_free_run() {
+    let dir = testkit::fake_artifacts_dir("chaos_parity", &small_spec()).unwrap();
+    let baselines: Vec<_> =
+        (0..3).map(|i| solo(&dir, &format!("prompt {i}"), i as u64, 4)).collect();
+
+    let mut cfg = faulted_cfg(dir);
+    // exactly one injected fault: the worker device's 4th dispatch
+    cfg.fault_spec = Some("dispatch:4:transient".into());
+    let mut server = Server::start(&cfg).unwrap();
+    let receivers: Vec<_> = (0..3)
+        .map(|i| server.submit(&format!("prompt {i}"), i as u64).unwrap())
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().expect("transient faults are absorbed by retry");
+        assert_eq!(
+            resp.latent, baselines[i].latent,
+            "row {i}: a retried row must be bit-identical to an uninterrupted run"
+        );
+        assert_eq!(resp.image, baselines[i].image, "row {i}: decoded image diverged");
+    }
+    server.with_metrics(|m| {
+        assert_eq!(m.stage.requests_ok, 3);
+        assert_eq!(m.stage.requests_failed, 0);
+        assert!(m.retries >= 1, "the interrupted rows went through the retry path");
+    });
+    wait_for(
+        || server.with_metrics(|m| m.injected_transient >= 1),
+        "the scheduled dispatch fault to surface in the metrics",
+    );
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("faults:"), "{report}");
+}
+
+/// Pool-level chaos: one worker panic plus a class whose device always
+/// faults.  The panic is supervised (executor rebuilt, later jobs keep
+/// flowing), the in-flight caller gets an explicit error, the faulting
+/// class exhausts its retry budget per request and is quarantined by
+/// the breaker — and every caller still gets exactly one reply.
+#[test]
+fn a_worker_panic_and_a_quarantined_class_never_lose_requests() {
+    struct ChaosExec {
+        class_idx: usize,
+        panicked: Arc<AtomicBool>,
+    }
+    impl WorkerExecutor for ChaosExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            if self.class_idx == 1 {
+                return Err(Error::Transient("injected device fault".into()));
+            }
+            if req.id == 2 && !self.panicked.swap(true, Ordering::SeqCst) {
+                panic!("injected worker crash");
+            }
+            Ok(GenerateResult {
+                image: vec![0.0; 4],
+                image_size: 2,
+                latent: vec![req.seed as f32],
+                timings: StageTimings { denoise_steps: 1, total_s: 0.001, ..Default::default() },
+                peak_memory: 1,
+            })
+        }
+    }
+
+    let breaker = Arc::new(CircuitBreaker::new(2, 2, Duration::from_secs(60)));
+    let panicked = Arc::new(AtomicBool::new(false));
+    let supervision = SupervisionOptions {
+        retry_limit: 1,
+        retry_backoff: Duration::from_millis(1),
+        breaker: Some(Arc::clone(&breaker)),
+        ..SupervisionOptions::default()
+    };
+    let classes = [("healthy".to_string(), 1), ("flaky".to_string(), 1)];
+    let pool = {
+        let panicked = Arc::clone(&panicked);
+        WorkerPool::start_supervised(&classes, 32, 1, false, supervision, move |_, class_idx, _| {
+            Ok(ChaosExec { class_idx, panicked: Arc::clone(&panicked) })
+        })
+        .unwrap()
+    };
+
+    // class 0 in submission order: ok, panic, ok (after the rebuild)
+    let healthy: Vec<_> = (1..=3)
+        .map(|i| {
+            pool.submit_routed(GenerateRequest::new(i, "p", i), Priority::Normal, None, 0, None)
+                .unwrap()
+        })
+        .collect();
+    // class 1: every attempt faults; the retry budget is exhausted
+    let flaky: Vec<_> = (10..=11)
+        .map(|i| {
+            pool.submit_routed(GenerateRequest::new(i, "p", i), Priority::Normal, None, 1, None)
+                .unwrap()
+        })
+        .collect();
+
+    for (i, rx) in healthy.into_iter().enumerate() {
+        let id = i as u64 + 1;
+        let reply = rx.recv().expect("supervised workers never strand a caller");
+        if id == 2 {
+            let err = reply.expect_err("the in-flight request of a crashed worker fails");
+            assert!(err.to_string().contains("worker died"), "{err}");
+        } else {
+            assert_eq!(reply.unwrap().id, id, "jobs around the crash are served");
+        }
+        assert!(rx.recv().is_err(), "exactly one reply per request");
+    }
+    for rx in flaky {
+        let err = rx.recv().unwrap().expect_err("a always-faulting class fails its callers");
+        assert!(err.to_string().contains("gave up"), "{err}");
+        assert!(rx.recv().is_err(), "exactly one reply per request");
+    }
+
+    assert!(panicked.load(Ordering::SeqCst), "the injected panic actually fired");
+    assert_eq!(breaker.state(1), BreakerState::Open, "the faulting class is quarantined");
+    assert!(breaker.admits(0), "the healthy class keeps admitting");
+    pool.with_metrics(|m| {
+        assert_eq!(m.worker_restarts, 1, "one supervised rebuild");
+        assert_eq!(m.retries, 2, "one retry per flaky-class request");
+        assert_eq!(m.retries_exhausted, 2);
+        assert_eq!(m.reply_orphaned, 1, "the crashed worker's in-flight request");
+    });
+    let report = pool.metrics_report();
+    assert!(report.contains("flaky=open"), "{report}");
+}
+
+/// Degrading admission, last line: with every class quarantined the
+/// server sheds normal load at the front door, while high-priority
+/// requests ride through as the half-open probe traffic.
+#[test]
+fn tripped_breakers_shed_normal_load_but_admit_high_priority_probes() {
+    let dir = testkit::fake_artifacts_dir("chaos_shed", &small_spec()).unwrap();
+    let mut cfg = faulted_cfg(dir);
+    cfg.num_steps = 3;
+    cfg.breaker_cooldown_ms = 60_000;
+    let mut server = Server::start(&cfg).unwrap();
+
+    // healthy fleet: a normal request is served
+    server.submit("warmup", 1).unwrap().recv().unwrap().unwrap();
+
+    // operator kill switch: quarantine the only class
+    server.breaker().expect("server pools run behind breakers").trip_now(0);
+
+    let err = server.submit("best effort", 2).unwrap_err();
+    assert!(err.to_string().contains("shed"), "{err}");
+
+    let rx = server
+        .submit_with("probe", 3, SubmitOptions::with_priority(Priority::High))
+        .unwrap();
+    rx.recv().unwrap().expect("high-priority probes are still served");
+
+    server.with_metrics(|m| {
+        assert_eq!(m.shed, 1, "the shed was counted");
+        assert_eq!(m.stage.requests_ok, 2, "warmup + probe");
+        assert_eq!(m.stage.requests_failed, 0, "shedding happens before the queue");
+    });
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("default=open"), "{report}");
+    assert!(report.contains("faults:"), "{report}");
+}

@@ -47,15 +47,28 @@ use std::sync::{Arc, Mutex};
 const STUB_MSG: &str =
     "PJRT unavailable: built against the vendored xla stub (see rust/vendor/xla)";
 
-/// Error type mirroring `xla::Error` (message-only in the stub).
+/// Error type mirroring `xla::Error`.  Injected faults additionally
+/// carry a [`FaultKind`] so the runtime can classify them without
+/// parsing the message.
 #[derive(Debug, Clone)]
 pub struct Error {
     message: String,
+    kind: Option<FaultKind>,
 }
 
 impl Error {
     pub fn new(message: impl Into<String>) -> Error {
-        Error { message: message.into() }
+        Error { message: message.into(), kind: None }
+    }
+
+    /// An injected-fault error carrying its classification.
+    pub fn fault(message: impl Into<String>, kind: FaultKind) -> Error {
+        Error { message: message.into(), kind: Some(kind) }
+    }
+
+    /// `Some` when this error came from the fault injector.
+    pub fn fault_kind(&self) -> Option<FaultKind> {
+        self.kind
     }
 }
 
@@ -79,6 +92,181 @@ pub enum ElementType {
     F32,
 }
 
+// --------------------------------------------------------------- faults
+
+/// Classification of an injected fault — the failure classes a real
+/// PJRT backend raises on flaky mobile hardware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Recoverable hiccup: the same operation is expected to succeed
+    /// on retry (driver timeout, bus glitch).
+    Transient,
+    /// Unrecoverable program or argument error; retrying is pointless.
+    Fatal,
+    /// The device handle is gone; the client must be rebuilt.
+    DeviceLost,
+    /// Device allocator exhausted.
+    Oom,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Fatal => "fatal",
+            FaultKind::DeviceLost => "device_lost",
+            FaultKind::Oom => "oom",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "transient" => Some(FaultKind::Transient),
+            "fatal" => Some(FaultKind::Fatal),
+            "device_lost" => Some(FaultKind::DeviceLost),
+            "oom" => Some(FaultKind::Oom),
+            _ => None,
+        }
+    }
+}
+
+/// Which client operation a fault targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    Compile,
+    Transfer,
+    Write,
+    Dispatch,
+}
+
+impl FaultOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultOp::Compile => "compile",
+            FaultOp::Transfer => "transfer",
+            FaultOp::Write => "write",
+            FaultOp::Dispatch => "dispatch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultOp> {
+        match s {
+            "compile" => Some(FaultOp::Compile),
+            "transfer" => Some(FaultOp::Transfer),
+            "write" => Some(FaultOp::Write),
+            "dispatch" => Some(FaultOp::Dispatch),
+            _ => None,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultOp::Compile => 0,
+            FaultOp::Transfer => 1,
+            FaultOp::Write => 2,
+            FaultOp::Dispatch => 3,
+        }
+    }
+}
+
+/// A deterministic fault schedule installed on a client via
+/// [`DeviceStats::set_fault_plan`].  Two mechanisms compose:
+///
+/// * **Scheduled faults** fail exactly the Nth occurrence of an
+///   operation (counted from 1, per client) with a chosen kind —
+///   tests pin exact failure points with these.
+/// * **Rate faults** fail a seeded pseudo-random subset of dispatches
+///   with transient errors — chaos runs use these for sustained
+///   background failure.  The subset is a pure function of
+///   `(seed, dispatch index)`, so the same seed always faults the
+///   same dispatches.
+///
+/// Latency spikes (`spike_every`/`spike_ms`) sleep without failing,
+/// modelling thermal throttling.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    scheduled: Vec<(FaultOp, u64, FaultKind)>,
+    dispatch_fault_rate: f64,
+    spike_every: u64,
+    spike_ms: u64,
+}
+
+impl FaultPlan {
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Fail the `nth` occurrence (1-based) of `op` with `kind`.
+    pub fn fail_nth(mut self, op: FaultOp, nth: u64, kind: FaultKind) -> FaultPlan {
+        self.scheduled.push((op, nth, kind));
+        self
+    }
+
+    /// Fail a seeded pseudo-random fraction of dispatches transiently.
+    pub fn transient_dispatch_rate(mut self, rate: f64) -> FaultPlan {
+        self.dispatch_fault_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Every `every`-th dispatch sleeps `ms` milliseconds.
+    pub fn latency_spike(mut self, every: u64, ms: u64) -> FaultPlan {
+        self.spike_every = every;
+        self.spike_ms = ms;
+        self
+    }
+
+    /// Parse a comma-separated spec: `op:nth:kind` entries plus the
+    /// pseudo-entries `rate:<f64>` and `spike:<every>:<ms>`, e.g.
+    /// `dispatch:5:transient,compile:2:fatal,rate:0.05,spike:8:2`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, Error> {
+        let mut plan = FaultPlan::seeded(seed);
+        for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            let bad = || Error::new(format!("bad fault spec entry: {entry:?}"));
+            match parts.as_slice() {
+                ["rate", r] => {
+                    plan.dispatch_fault_rate =
+                        r.parse::<f64>().map_err(|_| bad())?.clamp(0.0, 1.0);
+                }
+                ["spike", every, ms] => {
+                    plan.spike_every = every.parse().map_err(|_| bad())?;
+                    plan.spike_ms = ms.parse().map_err(|_| bad())?;
+                }
+                [op, nth, kind] => {
+                    let op = FaultOp::parse(op).ok_or_else(bad)?;
+                    let nth: u64 = nth.parse().map_err(|_| bad())?;
+                    let kind = FaultKind::parse(kind).ok_or_else(bad)?;
+                    plan.scheduled.push((op, nth, kind));
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan can never fire.
+    pub fn is_empty(&self) -> bool {
+        self.scheduled.is_empty() && self.dispatch_fault_rate == 0.0 && self.spike_every == 0
+    }
+}
+
+/// Installed plan + per-operation attempt counters.
+#[derive(Debug)]
+struct FaultState {
+    plan: FaultPlan,
+    attempts: [u64; 4],
+}
+
+impl FaultState {
+    /// Count an attempt of `op`; returns its 1-based index.
+    fn bump(&mut self, op: FaultOp) -> u64 {
+        let slot = &mut self.attempts[op.index()];
+        *slot += 1;
+        *slot
+    }
+}
+
 // --------------------------------------------------------------- stats
 
 /// Per-client device counters, exposed so tests can verify transfer
@@ -92,6 +280,10 @@ pub struct DeviceStats {
     compiles: AtomicU64,
     executions: Mutex<BTreeMap<String, u64>>,
     rows: Mutex<BTreeMap<String, u64>>,
+    injected_transient: AtomicU64,
+    injected_fatal: AtomicU64,
+    injected_spikes: AtomicU64,
+    faults: Mutex<Option<FaultState>>,
 }
 
 impl DeviceStats {
@@ -142,6 +334,88 @@ impl DeviceStats {
     fn record_execution(&self, name: &str, rows: u64) {
         *self.executions.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
         *self.rows.lock().unwrap().entry(name.to_string()).or_insert(0) += rows;
+    }
+
+    /// Install (or clear, with `None`) the client's fault schedule.
+    /// Attempt counters restart from zero; injected-fault counters are
+    /// monotone across plan swaps.
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        *self.faults.lock().unwrap() =
+            plan.map(|plan| FaultState { plan, attempts: [0; 4] });
+    }
+
+    /// Injected faults classified transient (retry expected to work).
+    pub fn injected_transient(&self) -> u64 {
+        self.injected_transient.load(Ordering::Relaxed)
+    }
+
+    /// Injected faults classified fatal (incl. device-lost and OOM).
+    pub fn injected_fatal(&self) -> u64 {
+        self.injected_fatal.load(Ordering::Relaxed)
+    }
+
+    /// Injected latency spikes (slept, did not fail).
+    pub fn injected_spikes(&self) -> u64 {
+        self.injected_spikes.load(Ordering::Relaxed)
+    }
+
+    /// All injected failures (transient + fatal; spikes excluded).
+    pub fn injected_faults(&self) -> u64 {
+        self.injected_transient() + self.injected_fatal()
+    }
+
+    /// Consult the fault plan before performing `op`.  Sleeps through a
+    /// scheduled latency spike, then either fails with the scheduled /
+    /// seeded fault or passes.
+    fn check_fault(&self, op: FaultOp, what: &str) -> Result<(), Error> {
+        let (fault, spike_ms, n) = {
+            let mut guard = self.faults.lock().unwrap();
+            let Some(state) = guard.as_mut() else { return Ok(()) };
+            let n = state.bump(op);
+            let mut fault = state
+                .plan
+                .scheduled
+                .iter()
+                .find(|&&(o, at, _)| o == op && at == n)
+                .map(|&(_, _, k)| k);
+            if fault.is_none()
+                && op == FaultOp::Dispatch
+                && state.plan.dispatch_fault_rate > 0.0
+            {
+                // seeded Bernoulli draw: pure function of (seed, n)
+                let h = fin(mix(mix(FNV_OFFSET, state.plan.seed), n));
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+                if u < state.plan.dispatch_fault_rate {
+                    fault = Some(FaultKind::Transient);
+                }
+            }
+            let spike_ms = if op == FaultOp::Dispatch
+                && state.plan.spike_every > 0
+                && n % state.plan.spike_every == 0
+            {
+                state.plan.spike_ms
+            } else {
+                0
+            };
+            (fault, spike_ms, n)
+        };
+        if spike_ms > 0 {
+            self.injected_spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_millis(spike_ms));
+        }
+        if let Some(kind) = fault {
+            match kind {
+                FaultKind::Transient => {
+                    self.injected_transient.fetch_add(1, Ordering::Relaxed)
+                }
+                _ => self.injected_fatal.fetch_add(1, Ordering::Relaxed),
+            };
+            return Err(Error::fault(
+                format!("injected {} fault: {} #{n} ({what})", kind.as_str(), op.as_str()),
+                kind,
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -299,6 +573,7 @@ impl PjRtBuffer {
     /// PJRT buffer).  The dtype and element count must match exactly;
     /// no reallocation happens on success.
     pub fn write_from_host<T: NativeType>(&mut self, v: &[T]) -> Result<(), Error> {
+        self.stats.check_fault(FaultOp::Write, "write_from_host")?;
         if !T::write_into(&mut self.data, v) {
             return Err(Error::new(format!(
                 "write_from_host: dtype/length mismatch (buffer holds {} elements)",
@@ -382,6 +657,7 @@ impl PjRtClient {
     }
 
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        self.stats.check_fault(FaultOp::Compile, "compile")?;
         match &comp.program {
             Some(p) => {
                 self.stats.compiles.fetch_add(1, Ordering::Relaxed);
@@ -400,6 +676,7 @@ impl PjRtClient {
         dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer, Error> {
+        self.stats.check_fault(FaultOp::Transfer, "buffer_from_host_buffer")?;
         let want: usize = dims.iter().product();
         if want != data.len() {
             return Err(Error::new(format!(
@@ -423,6 +700,7 @@ impl PjRtClient {
         dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer, Error> {
+        self.stats.check_fault(FaultOp::Transfer, "buffer_from_host_raw_bytes")?;
         let want: usize = dims.iter().product();
         let payload = match ty {
             ElementType::S8 => {
@@ -621,6 +899,7 @@ pub struct PjRtLoadedExecutable {
 impl PjRtLoadedExecutable {
     pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         let p = &self.program;
+        self.stats.check_fault(FaultOp::Dispatch, &p.name)?;
         if args.len() <= p.nweights {
             return Err(Error::new(format!(
                 "{}: {} args but program declares {} weights",
@@ -840,6 +1119,86 @@ mod tests {
         assert_ne!(a, run(0.2, 1.0), "weights matter");
         assert_ne!(a, run(0.1, 2.0), "inputs matter");
         assert!(a.iter().all(|v| (-0.5..=0.5).contains(v)));
+    }
+
+    #[test]
+    fn scheduled_faults_fire_at_exact_attempts() {
+        let c = client();
+        c.stats().set_fault_plan(Some(
+            FaultPlan::seeded(1)
+                .fail_nth(FaultOp::Dispatch, 2, FaultKind::Transient)
+                .fail_nth(FaultOp::Dispatch, 3, FaultKind::DeviceLost)
+                .fail_nth(FaultOp::Transfer, 4, FaultKind::Oom),
+        ));
+        let e = exe(&c, unet_program());
+        let w = c.buffer_from_host_buffer::<f32>(&[0.5; 4], &[4], None).unwrap();
+        let l = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[1, 2], None)
+            .unwrap();
+        let t = c.buffer_from_host_buffer::<f32>(&[9.0], &[1], None).unwrap();
+
+        assert!(e.execute_b(&[&w, &l, &t]).is_ok(), "dispatch #1 passes");
+        let err = e.execute_b(&[&w, &l, &t]).unwrap_err();
+        assert_eq!(err.fault_kind(), Some(FaultKind::Transient), "#2 faults");
+        let err = e.execute_b(&[&w, &l, &t]).unwrap_err();
+        assert_eq!(err.fault_kind(), Some(FaultKind::DeviceLost), "#3 faults");
+        assert!(e.execute_b(&[&w, &l, &t]).is_ok(), "#4 passes");
+
+        // transfer #4 (three uploads already happened above)
+        let err = c
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], None)
+            .unwrap_err();
+        assert_eq!(err.fault_kind(), Some(FaultKind::Oom));
+
+        assert_eq!(c.stats().injected_transient(), 1);
+        assert_eq!(c.stats().injected_fatal(), 2);
+        assert_eq!(c.stats().injected_faults(), 3);
+        // only successful dispatches were counted as executions
+        assert_eq!(c.stats().executions_of("unet"), 2);
+
+        // clearing the plan stops injection
+        c.stats().set_fault_plan(None);
+        assert!(e.execute_b(&[&w, &l, &t]).is_ok());
+    }
+
+    #[test]
+    fn rate_faults_are_seed_deterministic() {
+        let faulted = |seed: u64| -> Vec<bool> {
+            let c = client();
+            c.stats().set_fault_plan(Some(
+                FaultPlan::seeded(seed).transient_dispatch_rate(0.3),
+            ));
+            let e = exe(&c, unet_program());
+            let w =
+                c.buffer_from_host_buffer::<f32>(&[0.5; 4], &[4], None).unwrap();
+            let l = c
+                .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[1, 2], None)
+                .unwrap();
+            let t =
+                c.buffer_from_host_buffer::<f32>(&[9.0], &[1], None).unwrap();
+            (0..32).map(|_| e.execute_b(&[&w, &l, &t]).is_err()).collect()
+        };
+        let a = faulted(7);
+        assert_eq!(a, faulted(7), "same seed, same schedule");
+        assert_ne!(a, faulted(8), "different seed, different schedule");
+        assert!(a.iter().any(|&f| f), "rate 0.3 over 32 dispatches fires");
+        assert!(!a.iter().all(|&f| f), "and lets most through");
+    }
+
+    #[test]
+    fn fault_spec_parses_and_rejects_garbage() {
+        let p = FaultPlan::parse("dispatch:5:transient,compile:2:fatal,rate:0.1,spike:8:2", 3)
+            .unwrap();
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.scheduled.len(), 2);
+        assert_eq!(p.scheduled[0], (FaultOp::Dispatch, 5, FaultKind::Transient));
+        assert_eq!(p.dispatch_fault_rate, 0.1);
+        assert_eq!((p.spike_every, p.spike_ms), (8, 2));
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+        assert!(FaultPlan::parse("dispatch:x:transient", 0).is_err());
+        assert!(FaultPlan::parse("poke:1:transient", 0).is_err());
+        assert!(FaultPlan::parse("dispatch:1:weird", 0).is_err());
     }
 
     #[test]
