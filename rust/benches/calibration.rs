@@ -1,0 +1,231 @@
+//! Cold vs converged cost model, and what W8A8 buys (paper Sec. 3.2 +
+//! Sec. 3.4).  Emits `BENCH_calibration.json` (repo root).
+//!
+//! Two claims, both *shape* (absolute numbers are synthetic — stub
+//! backend, roofline-exact observations):
+//!
+//! * **calibration converges** — a fleet whose CPU class really runs
+//!   4x better than its shipped constants starts out misrouting a
+//!   tight-deadline request to the expensive GPU class; as dispatch
+//!   observations accumulate the predicted-vs-actual step error
+//!   collapses, the replan trigger fires, and the same request flips
+//!   to the truly-cheapest feasible class;
+//! * **W8A8 pays where the model says it does** — the int8 activation
+//!   charge halves the UNet's peak live activation in the ledger, and
+//!   toggling the stub's quantized round-trip on a real executor run
+//!   leaves the step loop intact (every dispatch counted).
+//!
+//!     cargo bench --bench calibration            # full workload
+//!     cargo bench --bench calibration -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mobile_diffusion::delegate::{w8a8_gain, OpClass, RoofParams};
+use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::planner::{
+    device_spec, model::unet_graph, CalibratedProfile, FleetCalibration, FleetRouter,
+    FleetSpec, Observation, PlanRegistry, MIN_CLASS_SAMPLES,
+};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
+
+fn fail(msg: &str) -> ! {
+    eprintln!("FAIL: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let rounds = if fast { 3 } else { 8 };
+    let steps = 20;
+
+    // ---- cold vs converged routing -------------------------------
+    let fleet = FleetSpec::parse("adreno740:1,bigcore:1").unwrap();
+    let cal = FleetCalibration::with_window(256);
+    let router = FleetRouter::with_calibration(fleet, Arc::new(PlanRegistry::new()), cal.clone());
+
+    let fast_pred = router.predicted_s(0, "mobile", steps).unwrap();
+    let slow_pred = router.predicted_s(1, "mobile", steps).unwrap();
+    let tight = Duration::from_secs_f64((fast_pred + slow_pred) / 2.0);
+    let cold_class = router.route("mobile", steps, Some(tight)).unwrap().class;
+
+    // ground truth: the CPU silicon runs 4x the shipped constants
+    let spec = device_spec("bigcore").unwrap();
+    let base = spec.delegate.clone();
+    let truth = RoofParams {
+        flops: base.flops * 4.0,
+        bandwidth: base.bandwidth * 4.0,
+        dispatch: base.dispatch / 4.0,
+    };
+    let truth_reg = PlanRegistry::new();
+    let actual_step = truth_reg
+        .replan(&spec, "mobile", &CalibratedProfile::uniform(base.clone(), truth))
+        .unwrap()
+        .step_latency_s;
+
+    let predicted = || router.plans().plan(&spec, "mobile").unwrap().step_latency_s;
+    let rel_err = |pred: f64| (pred - actual_step).abs() / actual_step;
+    let mut errs = vec![rel_err(predicted())];
+
+    println!("== online roofline calibration (stub fleet, 4x-off CPU class) ==");
+    println!("   cold: routed to class {cold_class}, step rel err {:.1}%\n", errs[0] * 100.0);
+
+    let per_round = 3 * MIN_CLASS_SAMPLES;
+    for round in 0..rounds {
+        for &class in OpClass::ALL {
+            for i in 0..per_round {
+                let k = round * per_round + i;
+                // alternate compute-bound, memory-bound, near-pure
+                // dispatch work so every parameter is identified
+                let (flops, bytes) = match k % 3 {
+                    0 => (1e9 * (1.0 + k as f64), 1e3),
+                    1 => (1e3, 1e7 * (1.0 + k as f64)),
+                    _ => (1e3, 1e3),
+                };
+                let seconds =
+                    truth.dispatch + (flops / truth.flops).max(bytes / truth.bandwidth);
+                cal.record("bigcore", &base, Observation { class, flops, bytes, seconds });
+            }
+        }
+        for line in router.apply_calibration() {
+            println!("   {line}");
+        }
+        errs.push(rel_err(predicted()));
+        println!(
+            "   round {:>2}: {:>4} obs/class, step rel err {:.2}%",
+            round + 1,
+            (round + 1) * per_round,
+            errs.last().unwrap() * 100.0
+        );
+    }
+    let converged_class = router.route("mobile", steps, Some(tight)).unwrap().class;
+    let replans = router.plans().replans();
+    println!(
+        "\n   converged: routed to class {converged_class}, {} replans, rel err {:.1}% -> {:.2}%\n",
+        replans,
+        errs[0] * 100.0,
+        errs.last().unwrap() * 100.0
+    );
+
+    // ---- W8A8 activation quantization ----------------------------
+    let adreno = device_spec("adreno740").unwrap();
+    let g = unet_graph("mobile").unwrap();
+    let gain_s = w8a8_gain(&g, &adreno.delegate);
+    let act_fp32: usize = g
+        .tensors
+        .iter()
+        .filter(|t| !t.is_const)
+        .map(|t| t.bytes())
+        .max()
+        .unwrap_or(0);
+    let act_int8: usize = g
+        .tensors
+        .iter()
+        .filter(|t| !t.is_const)
+        .map(|t| t.elems())
+        .max()
+        .unwrap_or(0);
+    let plan = PlanRegistry::new().plan(&adreno, "mobile").unwrap();
+
+    println!("== W8A8 activation quantization (mobile UNet on adreno740) ==");
+    println!(
+        "   modeled gain {:+.3} ms/dispatch-set, planner {} it",
+        gain_s * 1e3,
+        if plan.w8a8 { "enables" } else { "declines" }
+    );
+    println!(
+        "   peak live activation: fp16 {:.2} MB -> int8 {:.2} MB; plan peak {:.1} MB",
+        act_fp32 as f64 / 1e6,
+        act_int8 as f64 / 1e6,
+        plan.peak_memory as f64 / 1e6
+    );
+
+    // a real executor run with the stub's int8 round-trip toggled
+    let artifacts = FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    };
+    let dir = fake_artifacts_dir("bench_calibration", &artifacts).unwrap();
+    let num_steps = if fast { 4 } else { 8 };
+    let run = |quant: bool| {
+        let m = Manifest::load(&dir).unwrap();
+        let mut ex =
+            PipelinedExecutor::new(m, ExecOptions { num_steps, ..Default::default() }).unwrap();
+        ex.engine.device_stats().set_activation_quant(quant);
+        let r = ex.generate("calibration bench", 7, "mobile").unwrap();
+        let step_s = r.timings.denoise_s / r.timings.denoise_steps.max(1) as f64;
+        (step_s, ex.engine.device_stats().quantized_dispatches())
+    };
+    let (step_off, q_off) = run(false);
+    let (step_on, q_on) = run(true);
+    println!(
+        "   measured step: {:.3} ms off, {:.3} ms on ({} quantized dispatches)\n",
+        step_off * 1e3,
+        step_on * 1e3,
+        q_on
+    );
+
+    // ---- artifact ------------------------------------------------
+    let errs_json: Vec<String> = errs.iter().map(|e| format!("{e:.6}")).collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "\"backend\": \"xla-stub\",\n",
+            "\"fast\": {fast},\n",
+            "\"calibration\": {{\"cold_class\": {cold}, \"converged_class\": {conv}, ",
+            "\"actual_step_s\": {actual:.6}, \"replans\": {replans}, ",
+            "\"rel_err\": [{errs}]}},\n",
+            "\"w8a8\": {{\"gain_ms\": {gain:.4}, \"plan_enables\": {enables}, ",
+            "\"act_peak_fp16_bytes\": {afp}, \"act_peak_int8_bytes\": {ai8}, ",
+            "\"plan_peak_memory_bytes\": {ppeak}, ",
+            "\"measured_step_off_s\": {soff:.6}, \"measured_step_on_s\": {son:.6}, ",
+            "\"quantized_dispatches\": {qd}}}\n",
+            "}}\n"
+        ),
+        fast = fast,
+        cold = cold_class,
+        conv = converged_class,
+        actual = actual_step,
+        replans = replans,
+        errs = errs_json.join(", "),
+        gain = gain_s * 1e3,
+        enables = plan.w8a8,
+        afp = act_fp32,
+        ai8 = act_int8,
+        ppeak = plan.peak_memory,
+        soff = step_off,
+        son = step_on,
+        qd = q_on,
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_calibration.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("wrote {}", out.display());
+
+    // ---- shape enforcement ---------------------------------------
+    if cold_class != 0 {
+        fail("cold model must misroute the tight request to the GPU class");
+    }
+    if converged_class != 1 {
+        fail("converged model must flip the route to the truly-cheapest CPU class");
+    }
+    if replans == 0 {
+        fail("calibration never triggered a replan");
+    }
+    let (first, last) = (errs[0], *errs.last().unwrap());
+    if !(last < first * 0.2) {
+        fail(&format!("rel err did not collapse: {first:.4} -> {last:.4}"));
+    }
+    if act_int8 >= act_fp32 {
+        fail("int8 activation charge must undercut the fp16 charge");
+    }
+    if q_off != 0 || q_on == 0 {
+        fail(&format!("quantized dispatch counting off: {q_off} off-run, {q_on} on-run"));
+    }
+}

@@ -6,9 +6,39 @@
 use std::path::Path;
 
 use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
+use mobile_diffusion::planner::{device_spec, model::unet_graph};
 use mobile_diffusion::runtime::Manifest;
 
+/// The modeled ledger charge for the largest live activation, fp16 vs
+/// the W8A8 int8 buffer (1 byte/elem) — the planner swaps the charge
+/// whenever the cost model enables quantization on a (device, variant).
+fn w8a8_activation_charges() {
+    println!("== W8A8 activation charge (modeled, per UNet variant) ==");
+    for variant in ["base", "mobile"] {
+        let g = unet_graph(variant).unwrap();
+        let acts = g.tensors.iter().filter(|t| !t.is_const);
+        let fp16: usize = acts.clone().map(|t| t.bytes()).max().unwrap_or(0);
+        let int8: usize = acts.map(|t| t.elems()).max().unwrap_or(0);
+        let plan = mobile_diffusion::planner::PlanRegistry::new()
+            .plan(&device_spec("adreno740").unwrap(), variant)
+            .unwrap();
+        println!(
+            "   {variant:>6}: peak live activation {:.2} MB -> {:.2} MB int8 \
+             ({:.0}% saved); adreno740 plan: w8a8 {}, peak {:.1} MB",
+            fp16 as f64 / 1e6,
+            int8 as f64 / 1e6,
+            (fp16 - int8) as f64 / fp16.max(1) as f64 * 100.0,
+            if plan.w8a8 { "on" } else { "off" },
+            plan.peak_memory as f64 / 1e6
+        );
+        assert!(int8 < fp16, "int8 charge must undercut fp16");
+    }
+    println!();
+}
+
 fn main() {
+    w8a8_activation_charges();
+
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts/ not built; run `make artifacts`");

@@ -59,6 +59,11 @@ pub struct AppConfig {
     pub breaker_threshold: u32,
     /// quarantine duration in ms before a half-open probe
     pub breaker_cooldown_ms: u64,
+    /// observation-window size for online calibration: bounds the
+    /// per-op-class roofline fit windows and the per-class
+    /// predicted-vs-actual metric windows; also caps the
+    /// measured-overhead trust threshold
+    pub calib_window: usize,
 }
 
 impl Default for AppConfig {
@@ -87,6 +92,7 @@ impl Default for AppConfig {
             retry_backoff_ms: 25,
             breaker_threshold: 3,
             breaker_cooldown_ms: 1000,
+            calib_window: crate::planner::calibrate::DEFAULT_CALIB_WINDOW,
         }
     }
 }
@@ -181,6 +187,9 @@ impl AppConfig {
         }
         if let Some(v) = j.get("breaker_cooldown_ms").as_i64() {
             self.breaker_cooldown_ms = v as u64;
+        }
+        if let Some(v) = j.get("calib_window").as_usize() {
+            self.calib_window = v;
         }
     }
 
@@ -282,6 +291,11 @@ impl AppConfig {
                         .parse()
                         .map_err(|e| Error::Config(format!("--warm-slots: {e}")))?;
                 }
+                "--calib-window" => {
+                    self.calib_window = take(&mut i)?
+                        .parse()
+                        .map_err(|e| Error::Config(format!("--calib-window: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
@@ -311,6 +325,9 @@ impl AppConfig {
             // fail fast on typos: resolve the spec against the planner
             // registry now rather than at server startup
             crate::planner::FleetSpec::parse(spec)?;
+        }
+        if self.calib_window == 0 {
+            return Err(Error::Config("--calib-window must be at least 1".into()));
         }
         if !(0.0..=1.0).contains(&self.fault_rate) {
             return Err(Error::Config(format!(
@@ -466,6 +483,27 @@ mod tests {
         assert!(c.apply_args(&args(&["--fault-rate", "1.5"])).is_err());
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--fault-rate", "-0.1"])).is_err());
+    }
+
+    #[test]
+    fn calib_window_flag_json_and_validation() {
+        let mut c = AppConfig::default();
+        assert_eq!(
+            c.calib_window,
+            crate::planner::calibrate::DEFAULT_CALIB_WINDOW,
+            "calibration on by default with the library window"
+        );
+        c.apply_args(&args(&["--calib-window", "64"])).unwrap();
+        assert_eq!(c.calib_window, 64);
+
+        let j = Json::parse(r#"{"calib_window": 512}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.calib_window, 512);
+
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--calib-window", "0"])).is_err(), "zero window");
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--calib-window", "x"])).is_err(), "bad value");
     }
 
     #[test]

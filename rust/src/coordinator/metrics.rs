@@ -11,28 +11,42 @@ use std::time::Instant;
 use crate::pipeline::{LoadProfile, StageTimings};
 use crate::util::stats::{summarize, Summary};
 
-/// Cap on retained samples per series.  The serving loop is a daemon;
-/// unbounded per-request sample vectors would grow (and re-sort on
-/// every report) forever, so percentiles are computed over a sliding
-/// window of the most recent samples.
-const MAX_SAMPLES: usize = 4096;
+/// Default cap on retained samples per series (`--calib-window`
+/// overrides it per pool).  The serving loop is a daemon; unbounded
+/// per-request sample vectors would grow (and re-sort on every report)
+/// forever, so percentiles are computed over a sliding window of the
+/// most recent samples.
+pub const MAX_SAMPLES: usize = 4096;
 
 /// Fixed-capacity sliding window of latency samples.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SampleWindow {
     samples: Vec<f64>,
     /// overwrite cursor once the window is full
     next: usize,
+    /// retained-sample cap ([`MAX_SAMPLES`] unless configured)
+    cap: usize,
+}
+
+impl Default for SampleWindow {
+    fn default() -> Self {
+        SampleWindow::with_capacity(MAX_SAMPLES)
+    }
 }
 
 impl SampleWindow {
+    /// A window retaining at most `cap` samples (clamped to 1).
+    pub fn with_capacity(cap: usize) -> SampleWindow {
+        SampleWindow { samples: Vec::new(), next: 0, cap: cap.max(1) }
+    }
+
     pub fn push(&mut self, x: f64) {
-        if self.samples.len() < MAX_SAMPLES {
+        if self.samples.len() < self.cap {
             self.samples.push(x);
         } else {
             self.samples[self.next] = x;
         }
-        self.next = (self.next + 1) % MAX_SAMPLES;
+        self.next = (self.next + 1) % self.cap;
     }
 
     /// Order statistics over the retained window.
@@ -135,20 +149,34 @@ pub struct ClassMetrics {
     /// per-`(device, variant)` `overhead_s`, so one variant's cheap
     /// overhead never vouches for another's
     overhead_s: BTreeMap<String, SampleWindow>,
+    /// per-series retained-sample cap for this class's windows
+    window: usize,
+    /// served requests before a variant's measured overhead is trusted
+    min_overhead: usize,
 }
 
-/// Served requests a class must accumulate before its measured
-/// overhead replaces the planner's modeled constant.
-const MIN_OVERHEAD_SAMPLES: usize = 4;
+/// Default served requests a class must accumulate before its measured
+/// overhead replaces the planner's modeled constant (`--calib-window`
+/// shrinks it when the window is smaller).
+pub const MIN_OVERHEAD_SAMPLES: usize = 4;
 
 impl ClassMetrics {
     fn new(name: &str) -> ClassMetrics {
+        ClassMetrics::with_config(name, MAX_SAMPLES, MIN_OVERHEAD_SAMPLES)
+    }
+
+    /// A class row with explicit observation-window capacity and
+    /// overhead-trust threshold.
+    fn with_config(name: &str, window: usize, min_overhead: usize) -> ClassMetrics {
+        let window = window.max(1);
         ClassMetrics {
             name: name.to_string(),
-            predicted_s: SampleWindow::default(),
-            actual_s: SampleWindow::default(),
-            abs_rel_err: SampleWindow::default(),
+            predicted_s: SampleWindow::with_capacity(window),
+            actual_s: SampleWindow::with_capacity(window),
+            abs_rel_err: SampleWindow::with_capacity(window),
             overhead_s: BTreeMap::new(),
+            window,
+            min_overhead: min_overhead.max(1),
         }
     }
 
@@ -157,7 +185,7 @@ impl ClassMetrics {
     /// then — the planner keeps its modeled constant).
     pub fn observed_overhead_s(&self, variant: &str) -> Option<f64> {
         let w = self.overhead_s.get(variant)?;
-        if w.len() < MIN_OVERHEAD_SAMPLES {
+        if w.len() < self.min_overhead {
             return None;
         }
         Some(w.summary().mean)
@@ -172,7 +200,7 @@ impl ClassMetrics {
     pub fn observed_overheads(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
         self.overhead_s
             .iter()
-            .filter(|(_, w)| w.len() >= MIN_OVERHEAD_SAMPLES)
+            .filter(|(_, w)| w.len() >= self.min_overhead)
             .map(|(v, w)| (v.as_str(), w.summary().mean))
     }
 
@@ -278,10 +306,25 @@ impl PoolMetrics {
     /// Metrics for a heterogeneous pool: one [`ClassMetrics`] row per
     /// device class, in pool class-index order.
     pub fn with_classes(num_workers: usize, class_names: &[String]) -> PoolMetrics {
+        Self::with_classes_config(num_workers, class_names, MAX_SAMPLES, MIN_OVERHEAD_SAMPLES)
+    }
+
+    /// [`PoolMetrics::with_classes`] with explicit per-class
+    /// observation-window capacity and overhead-trust threshold
+    /// (`--calib-window`).
+    pub fn with_classes_config(
+        num_workers: usize,
+        class_names: &[String],
+        window: usize,
+        min_overhead: usize,
+    ) -> PoolMetrics {
         PoolMetrics {
             stage: Metrics::new(),
             workers: vec![WorkerStats::default(); num_workers],
-            classes: class_names.iter().map(|n| ClassMetrics::new(n)).collect(),
+            classes: class_names
+                .iter()
+                .map(|n| ClassMetrics::with_config(n, window, min_overhead))
+                .collect(),
             rejected_full: 0,
             rejected_infeasible: 0,
             rejected_deadline: 0,
@@ -455,9 +498,10 @@ impl PoolMetrics {
     /// observed mean — the measured-load feedback loop.
     pub fn record_class_overhead(&mut self, class: usize, variant: &str, overhead_s: f64) {
         if let Some(c) = self.classes.get_mut(class) {
+            let window = c.window;
             c.overhead_s
                 .entry(variant.to_string())
-                .or_default()
+                .or_insert_with(|| SampleWindow::with_capacity(window))
                 .push(overhead_s.max(0.0));
         }
     }
@@ -908,6 +952,22 @@ mod tests {
         assert!(report.contains("faults: 4 injected transient"), "{report}");
         assert!(report.contains("2 retries, 1 exhausted, 1 worker restarts"), "{report}");
         assert!(report.contains("1 shed"), "{report}");
+    }
+
+    #[test]
+    fn configured_windows_bound_class_series_and_trust_threshold() {
+        let mut p = PoolMetrics::with_classes_config(1, &["adreno740".to_string()], 8, 2);
+        p.record_class_overhead(0, "mobile", 0.5);
+        assert!(p.classes[0].observed_overhead_s("mobile").is_none());
+        p.record_class_overhead(0, "mobile", 0.5);
+        assert!(
+            p.classes[0].observed_overhead_s("mobile").is_some(),
+            "configured trust threshold of 2"
+        );
+        for i in 0..100 {
+            p.record_prediction(0, 1.0, 1.0 + i as f64);
+        }
+        assert_eq!(p.classes[0].prediction_count(), 8, "configured window bound");
     }
 
     #[test]

@@ -130,6 +130,9 @@ pub struct SupervisionOptions {
     /// per-class breaker fed by faults and restarts; `None` disables
     /// degrading admission (the pool still retries and restarts)
     pub breaker: Option<Arc<CircuitBreaker>>,
+    /// bound on the per-class metric sample windows (`--calib-window`);
+    /// also caps the measured-overhead trust threshold
+    pub metrics_window: usize,
 }
 
 impl Default for SupervisionOptions {
@@ -140,6 +143,7 @@ impl Default for SupervisionOptions {
             retry_backoff_cap: Duration::from_millis(400),
             max_restarts: 3,
             breaker: None,
+            metrics_window: crate::coordinator::metrics::MAX_SAMPLES,
         }
     }
 }
@@ -353,7 +357,13 @@ impl WorkerPool {
         }
         let n = assignments.len();
         let queue: Arc<JobQueue<WorkItem>> = Arc::new(JobQueue::new(queue_capacity));
-        let metrics = Arc::new(Mutex::new(PoolMetrics::with_classes(n, &class_names)));
+        let window = supervision.metrics_window.max(1);
+        let metrics = Arc::new(Mutex::new(PoolMetrics::with_classes_config(
+            n,
+            &class_names,
+            window,
+            crate::coordinator::metrics::MIN_OVERHEAD_SAMPLES.min(window),
+        )));
         let factory = Arc::new(factory);
 
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();

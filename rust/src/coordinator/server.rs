@@ -33,6 +33,7 @@
 //! overhead constant for the class's *measured* per-request overhead
 //! ([`crate::coordinator::metrics::ClassMetrics::observed_overhead_s`]).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -45,10 +46,10 @@ use crate::coordinator::queue::Priority;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
 use crate::pipeline::{
-    BatchKey, BatchRequest, ContinuousControl, ContinuousJob, GenerateResult,
-    PipelinedExecutor,
+    BatchKey, BatchRequest, ContinuousControl, ContinuousJob, DispatchObserver,
+    GenerateResult, PipelinedExecutor,
 };
-use crate::planner::{FleetRouter, FleetSpec, PlanRegistry};
+use crate::planner::{FleetCalibration, FleetRouter, FleetSpec, PlanRegistry};
 use crate::runtime::{ArtifactStore, Manifest};
 
 /// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
@@ -142,7 +143,11 @@ impl Server {
                         plans.plan(&class.device, v)?;
                     }
                 }
-                Some(FleetRouter::new(fleet, plans))
+                // online roofline calibration: workers stream dispatch
+                // observations here; the metrics report folds fitted
+                // models back into the plan cache (apply_calibration)
+                let calibration = FleetCalibration::with_window(config.calib_window);
+                Some(FleetRouter::with_calibration(fleet, plans, calibration))
             }
             None => None,
         };
@@ -154,6 +159,46 @@ impl Server {
                 .map(|c| (c.device.name.to_string(), c.count))
                 .collect(),
             None => vec![("default".to_string(), config.num_workers)],
+        };
+
+        // per-class dispatch observers: each fleet worker reports every
+        // dispatch's (modeled work signature, measured wall) into the
+        // shared calibration windows, and starts with the planner's
+        // W8A8 verdict for its default-variant plan applied to its
+        // device's activation-quant toggle
+        let observers: Vec<Option<(DispatchObserver, bool)>> = match &router {
+            Some(r) => r
+                .fleet()
+                .classes
+                .iter()
+                .map(|c| {
+                    let mut sigs = BTreeMap::new();
+                    let mut w8a8 = false;
+                    for &v in crate::planner::model::VARIANTS {
+                        if let Ok(p) = r.plans().plan(&c.device, v) {
+                            sigs.insert(
+                                v.to_string(),
+                                [p.text_sig, p.unet_sig, p.decode_sig],
+                            );
+                            if variant == v {
+                                w8a8 = p.w8a8;
+                            }
+                        }
+                    }
+                    r.calibration().map(|cal| {
+                        (
+                            DispatchObserver {
+                                sink: cal.clone(),
+                                class: c.device.name.to_string(),
+                                base: c.device.delegate.clone(),
+                                sigs,
+                            },
+                            w8a8,
+                        )
+                    })
+                })
+                .collect(),
+            None => vec![None; classes.len()],
         };
 
         // NOTE: every class's workers construct the same executor —
@@ -196,6 +241,7 @@ impl Server {
                 config.breaker_threshold,
                 Duration::from_millis(config.breaker_cooldown_ms),
             ))),
+            metrics_window: config.calib_window,
             ..SupervisionOptions::default()
         };
 
@@ -205,14 +251,20 @@ impl Server {
             config.max_batch,
             config.continuous,
             supervision,
-            move |_wid, _class: usize, _name: &str| {
-                let executor = PipelinedExecutor::with_store(
+            move |_wid, class: usize, _name: &str| {
+                let mut executor = PipelinedExecutor::with_store(
                     manifest.clone(),
                     options.clone(),
                     Arc::clone(&worker_store),
                 )?;
                 if let Some(plan) = &fault_plan {
                     executor.engine.device_stats().set_fault_plan(Some(plan.clone()));
+                }
+                if let Some(Some((obs, w8a8))) = observers.get(class) {
+                    executor.set_observer(obs.clone());
+                    if *w8a8 {
+                        executor.engine.device_stats().set_activation_quant(true);
+                    }
                 }
                 Ok(PipelineWorker {
                     executor,
@@ -372,15 +424,38 @@ impl Server {
             self.store.disk_loads(),
             self.store.hits(),
         ));
-        // the cost-gated pass schedule each (device class, variant)
-        // plan settled on — what the fleet actually runs per class
         if let Some(router) = &self.router {
+            // fold the live calibration stream into the plan cache and
+            // report what was re-planned because of it
+            for line in router.apply_calibration() {
+                out.push_str(&line);
+                out.push('\n');
+            }
+            // predicted-vs-actual drift per class: how far the fitted
+            // roofline has moved from the shipped constants
+            if let Some(cal) = router.calibration() {
+                for name in cal.class_names() {
+                    if let Some(p) = cal.profile(&name) {
+                        out.push_str(&format!(
+                            "calibration {name}: {} obs, {}/6 classes fitted, \
+                             divergence from shipped {:.0}%\n",
+                            cal.observations(&name),
+                            p.fitted_classes(),
+                            p.divergence() * 100.0,
+                        ));
+                    }
+                }
+            }
+            // the cost-gated pass schedule each (device class, variant)
+            // plan settled on — what the fleet actually runs per class
             for plan in router.plans().cached() {
                 out.push_str(&format!(
-                    "pass schedule {}/{}: {}\n",
+                    "pass schedule {}/{}: {}{}{}\n",
                     plan.device,
                     plan.variant,
                     crate::planner::schedule_display(&plan.unet_passes),
+                    if plan.w8a8 { ", w8a8 on" } else { "" },
+                    if plan.calibrated { " (calibrated)" } else { "" },
                 ));
             }
         }

@@ -35,6 +35,121 @@ pub struct DeviceProfile {
 /// 15.5 ms input-serialized conv measurement.
 pub const SPATIAL_CONV_EFF: f64 = 0.80;
 
+/// Roofline op classes.  Each class gets its own fitted (flops,
+/// bandwidth, dispatch) triple under online calibration — a conv
+/// pipeline and a reduction loop saturate very different fractions of
+/// a device's peak, and folding them into one effective rate is what
+/// made the shipped constants drift from measured hardware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpClass {
+    /// spatial + 1x1 convolutions
+    Conv,
+    /// fully-connected and batched matmuls
+    Matmul,
+    /// softmax (decomposed islands are classified op-by-op; the fused
+    /// kernel lands here)
+    Softmax,
+    /// mean / sum style reductions
+    Reduction,
+    /// pure elementwise chains
+    Elementwise,
+    /// reshapes, transposes, gathers — layout, not arithmetic
+    DataMovement,
+}
+
+impl OpClass {
+    pub const ALL: &'static [OpClass] = &[
+        OpClass::Conv,
+        OpClass::Matmul,
+        OpClass::Softmax,
+        OpClass::Reduction,
+        OpClass::Elementwise,
+        OpClass::DataMovement,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Conv => "conv",
+            OpClass::Matmul => "matmul",
+            OpClass::Softmax => "softmax",
+            OpClass::Reduction => "reduction",
+            OpClass::Elementwise => "elementwise",
+            OpClass::DataMovement => "data-movement",
+        }
+    }
+
+    /// Stable dense index (for per-class parameter tables).
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Conv => 0,
+            OpClass::Matmul => 1,
+            OpClass::Softmax => 2,
+            OpClass::Reduction => 3,
+            OpClass::Elementwise => 4,
+            OpClass::DataMovement => 5,
+        }
+    }
+
+    /// Classification of an operator kind.
+    pub fn of(ty: OpType) -> OpClass {
+        use OpType::*;
+        match ty {
+            Conv2d => OpClass::Conv,
+            FullyConnected | BatchMatmul => OpClass::Matmul,
+            Softmax | FusedSoftmax => OpClass::Softmax,
+            Mean | Sum => OpClass::Reduction,
+            Reshape | BroadcastTo | Transpose | Concatenation
+            | ResizeNearestNeighbor | Gather | StridedSlice | Split => {
+                OpClass::DataMovement
+            }
+            _ => OpClass::Elementwise,
+        }
+    }
+}
+
+/// Classify one graph op.
+pub fn op_class(op: &Op) -> OpClass {
+    OpClass::of(op.ty)
+}
+
+/// The roofline triple priced for one op class.
+#[derive(Debug, Clone, Copy)]
+pub struct RoofParams {
+    /// effective FLOP/s this class sustains
+    pub flops: f64,
+    /// effective bytes/s this class sustains
+    pub bandwidth: f64,
+    /// per-dispatch overhead, seconds
+    pub dispatch: f64,
+}
+
+/// A cost model the roofline functions can price against: the shipped
+/// [`DeviceProfile`] (one triple for every class) or an online
+/// calibration overlay (per-class fitted triples — see
+/// `planner::calibrate::CalibratedProfile`).  Structural knobs that are
+/// not fitted online (`cout_tile`) always come from the base profile.
+pub trait RooflineModel {
+    /// The shipped profile this model is anchored to.
+    fn base(&self) -> &DeviceProfile;
+
+    /// The (possibly fitted) roofline triple for `class`.
+    fn params(&self, class: OpClass) -> RoofParams;
+}
+
+impl RooflineModel for DeviceProfile {
+    fn base(&self) -> &DeviceProfile {
+        self
+    }
+
+    fn params(&self, _class: OpClass) -> RoofParams {
+        RoofParams {
+            flops: self.flops,
+            bandwidth: self.bandwidth,
+            dispatch: self.dispatch,
+        }
+    }
+}
+
 /// Adreno-740-class mobile GPU (OpenCL delegate).
 pub const GPU_ADRENO740: DeviceProfile = DeviceProfile {
     name: "mobile-gpu",
@@ -156,8 +271,14 @@ pub fn op_bytes(g: &Graph, op: &Op) -> f64 {
     (acts + weights + outs) as f64
 }
 
-/// Latency of a single op on a device.
+/// Latency of a single op on a device (shipped constants).
 pub fn op_latency(g: &Graph, op: &Op, dev: &DeviceProfile) -> f64 {
+    op_latency_on(g, op, dev)
+}
+
+/// Latency of a single op under an arbitrary roofline model.
+pub fn op_latency_on(g: &Graph, op: &Op, model: &dyn RooflineModel) -> f64 {
+    let params = model.params(op_class(op));
     let flops = op_flops(g, op);
     let bytes = op_bytes(g, op);
     // thin-output utilization penalty for the matmul/conv pipelines
@@ -166,7 +287,7 @@ pub fn op_latency(g: &Graph, op: &Op, dev: &DeviceProfile) -> f64 {
     let util = match op.ty {
         OpType::Conv2d | OpType::FullyConnected => {
             let cout = *g.tensor(op.outputs[0]).shape.last().unwrap_or(&1);
-            let thin = (cout as f64 / dev.cout_tile as f64).min(1.0);
+            let thin = (cout as f64 / model.base().cout_tile as f64).min(1.0);
             let spatial = if op.ty == OpType::Conv2d
                 && op.attr_i("kernel").unwrap_or(1) > 1
             {
@@ -180,11 +301,11 @@ pub fn op_latency(g: &Graph, op: &Op, dev: &DeviceProfile) -> f64 {
     };
     // reshapes are metadata-only views on the delegate
     if op.ty == OpType::Reshape {
-        return dev.dispatch;
+        return params.dispatch;
     }
-    let compute = flops / (dev.flops * util.max(1e-3));
-    let memory = bytes / dev.bandwidth;
-    dev.dispatch + compute.max(memory)
+    let compute = flops / (params.flops * util.max(1e-3));
+    let memory = bytes / params.bandwidth;
+    params.dispatch + compute.max(memory)
 }
 
 #[derive(Debug, Clone, Default)]
@@ -210,6 +331,17 @@ pub fn partition_cost(
     gpu: &DeviceProfile,
     cpu: &DeviceProfile,
 ) -> CostBreakdown {
+    partition_cost_on(g, p, gpu, cpu)
+}
+
+/// End-to-end latency of a partitioned graph under arbitrary roofline
+/// models for the delegate and the fallback device.
+pub fn partition_cost_on(
+    g: &Graph,
+    p: &Partition,
+    gpu: &dyn RooflineModel,
+    cpu: &dyn RooflineModel,
+) -> CostBreakdown {
     let mut out = CostBreakdown {
         transitions: p.num_transitions(),
         cpu_ops: p.cpu_op_count(),
@@ -224,7 +356,7 @@ pub fn partition_cost(
         // the GPU delegate fuses chains of elementwise ops into one
         // kernel (no intermediate HBM round-trips, one dispatch)
         let fuse = seg.device == Device::Gpu;
-        let t = segment_cost(g, &seg.ops, dev, fuse);
+        let t = segment_cost_on(g, &seg.ops, dev, fuse);
         match seg.device {
             Device::Gpu => out.gpu_time += t,
             Device::Cpu => out.cpu_time += t,
@@ -236,19 +368,29 @@ pub fn partition_cost(
     out
 }
 
+/// Cost of a run of ops on one device (shipped constants).
+pub fn segment_cost(g: &Graph, ops: &[usize], dev: &DeviceProfile, fuse: bool) -> f64 {
+    segment_cost_on(g, ops, dev, fuse)
+}
+
 /// Cost of a run of ops on one device, optionally fusing consecutive
 /// elementwise ops (one dispatch, intermediates stay in registers; only
 /// the chain's external inputs and final output touch memory).
-pub fn segment_cost(g: &Graph, ops: &[usize], dev: &DeviceProfile, fuse: bool) -> f64 {
+pub fn segment_cost_on(
+    g: &Graph,
+    ops: &[usize],
+    model: &dyn RooflineModel,
+    fuse: bool,
+) -> f64 {
     if !fuse {
-        return ops.iter().map(|&i| op_latency(g, &g.ops[i], dev)).sum();
+        return ops.iter().map(|&i| op_latency_on(g, &g.ops[i], model)).sum();
     }
     let mut total = 0.0;
     let mut i = 0;
     while i < ops.len() {
         let op = &g.ops[ops[i]];
         if !op.ty.is_elementwise() {
-            total += op_latency(g, op, dev);
+            total += op_latency_on(g, op, model);
             i += 1;
             continue;
         }
@@ -277,9 +419,10 @@ pub fn segment_cost(g: &Graph, ops: &[usize], dev: &DeviceProfile, fuse: bool) -
             .iter()
             .map(|&t| g.tensor(t).bytes())
             .sum::<usize>();
-        let compute = flops / dev.flops;
-        let memory = external_bytes as f64 / dev.bandwidth;
-        total += dev.dispatch + compute.max(memory);
+        let params = model.params(OpClass::Elementwise);
+        let compute = flops / params.flops;
+        let memory = external_bytes as f64 / params.bandwidth;
+        total += params.dispatch + compute.max(memory);
         i = j;
     }
     total
@@ -292,15 +435,139 @@ pub fn graph_cost(
     gpu: &DeviceProfile,
     cpu: &DeviceProfile,
 ) -> CostBreakdown {
+    graph_cost_on(g, rules, gpu, cpu)
+}
+
+/// Partition with `rules`, then cost under arbitrary roofline models.
+pub fn graph_cost_on(
+    g: &Graph,
+    rules: &RuleSet,
+    gpu: &dyn RooflineModel,
+    cpu: &dyn RooflineModel,
+) -> CostBreakdown {
     let p = Partition::new(g, rules);
-    partition_cost(g, &p, gpu, cpu)
+    partition_cost_on(g, &p, gpu, cpu)
 }
 
 /// Cost of running the whole graph on one device (custom kernels / NPU
 /// comparators: complete coverage by construction, elementwise fused).
 pub fn single_device_cost(g: &Graph, dev: &DeviceProfile) -> f64 {
+    single_device_cost_on(g, dev)
+}
+
+/// Single-device whole-graph cost under an arbitrary roofline model.
+pub fn single_device_cost_on(g: &Graph, model: &dyn RooflineModel) -> f64 {
     let ops: Vec<usize> = (0..g.ops.len()).collect();
-    segment_cost(g, &ops, dev, true)
+    segment_cost_on(g, &ops, model, true)
+}
+
+/// Per-op-class aggregate of one graph: op count, raw work, and modeled
+/// latency under two models (shipped vs calibrated) — the payload of
+/// `analyze --per-op` and of the per-dispatch observations the executor
+/// emits.
+#[derive(Debug, Clone, Default)]
+pub struct ClassBreakdownRow {
+    pub ops: usize,
+    pub flops: f64,
+    pub bytes: f64,
+    pub modeled_s: f64,
+    pub calibrated_s: f64,
+}
+
+/// Aggregate `g` per op class, pricing each op under `shipped` and
+/// `calibrated` (pass the same model twice for a single-column view).
+/// Rows are indexed by [`OpClass::index`]; classes absent from the
+/// graph have `ops == 0`.
+pub fn class_breakdown(
+    g: &Graph,
+    shipped: &dyn RooflineModel,
+    calibrated: &dyn RooflineModel,
+) -> [ClassBreakdownRow; 6] {
+    let mut rows: [ClassBreakdownRow; 6] = Default::default();
+    for op in &g.ops {
+        let row = &mut rows[op_class(op).index()];
+        row.ops += 1;
+        row.flops += op_flops(g, op);
+        row.bytes += op_bytes(g, op);
+        row.modeled_s += op_latency_on(g, op, shipped);
+        row.calibrated_s += op_latency_on(g, op, calibrated);
+    }
+    rows
+}
+
+/// Activation bytes an op streams (non-const inputs + outputs) — the
+/// traffic W8A8 shrinks 4x; weight bytes are untouched (they are
+/// already stored int8 where the paper quantized them).
+fn op_act_bytes(g: &Graph, op: &Op) -> f64 {
+    let acts: usize = g.act_inputs(op).map(|t| t.bytes()).sum();
+    let outs: usize = op.outputs.iter().map(|&t| g.tensor(t).bytes()).sum();
+    (acts + outs) as f64
+}
+
+/// Latency of `op` with its memory traffic overridden to `bytes`
+/// (compute side unchanged) — the comparison point for pricing W8A8.
+fn op_latency_bytes(g: &Graph, op: &Op, model: &dyn RooflineModel, bytes: f64) -> f64 {
+    if op.ty == OpType::Reshape {
+        return model.params(op_class(op)).dispatch;
+    }
+    let params = model.params(op_class(op));
+    let flops = op_flops(g, op);
+    let util = match op.ty {
+        OpType::Conv2d | OpType::FullyConnected => {
+            let cout = *g.tensor(op.outputs[0]).shape.last().unwrap_or(&1);
+            let thin = (cout as f64 / model.base().cout_tile as f64).min(1.0);
+            let spatial = if op.ty == OpType::Conv2d
+                && op.attr_i("kernel").unwrap_or(1) > 1
+            {
+                SPATIAL_CONV_EFF
+            } else {
+                1.0
+            };
+            thin * spatial
+        }
+        _ => 1.0,
+    };
+    let compute = flops / (params.flops * util.max(1e-3));
+    let memory = bytes.max(0.0) / params.bandwidth;
+    params.dispatch + compute.max(memory)
+}
+
+/// Modeled end-to-end gain (seconds; positive = win) of running the
+/// graph with W8A8 activations under `model`: every op's activation
+/// traffic shrinks to 1 byte/elem (weights unchanged), minus the
+/// quant/dequant passes at the graph boundary (one streaming pass over
+/// the graph inputs and outputs, two extra dispatches).  Under the
+/// shipped GPU constants the UNet is compute-bound and the gain is
+/// negative; a calibration that lowers effective bandwidth flips it —
+/// which is why this is a planner decision, not a CLI flag.
+pub fn w8a8_gain(g: &Graph, model: &dyn RooflineModel) -> f64 {
+    let mut gain = 0.0;
+    for op in &g.ops {
+        if op.ty == OpType::Reshape {
+            continue;
+        }
+        let acts = op_act_bytes(g, op);
+        let full = op_latency_on(g, op, model);
+        let quant = op_latency_bytes(g, op, model, op_bytes(g, op) - 0.75 * acts);
+        gain += full - quant;
+    }
+    // boundary quant/dequant: graph inputs quantized once, graph
+    // outputs dequantized once (elementwise streaming passes)
+    let producers = g.producers();
+    let consumers = g.consumers();
+    let mut io_bytes = 0.0;
+    for t in &g.tensors {
+        if t.is_const {
+            continue;
+        }
+        let is_input = producers[t.id].is_none() && !consumers[t.id].is_empty();
+        let is_output = producers[t.id].is_some() && consumers[t.id].is_empty();
+        if is_input || is_output {
+            io_bytes += t.bytes() as f64;
+        }
+    }
+    let p = model.params(OpClass::Elementwise);
+    gain - (2.0 * p.dispatch + 2.0 * io_bytes / p.bandwidth)
 }
 
 /// Latency of one serialized conv configuration (paper Fig. 1b study):

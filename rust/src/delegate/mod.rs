@@ -10,9 +10,11 @@ pub mod partition;
 pub mod rules;
 
 pub use cost::{
-    graph_cost, op_latency, partition_cost, segment_cost, single_device_cost,
-    CostBreakdown, DeviceProfile, CPU_BIGCORE, GPU_ADRENO740,
-    GPU_CUSTOM_KERNELS, NPU_HEXAGON,
+    class_breakdown, graph_cost, graph_cost_on, op_class, op_latency,
+    op_latency_on, partition_cost, segment_cost, single_device_cost,
+    single_device_cost_on, w8a8_gain, ClassBreakdownRow, CostBreakdown,
+    DeviceProfile, OpClass, RoofParams, RooflineModel, CPU_BIGCORE,
+    GPU_ADRENO740, GPU_CUSTOM_KERNELS, NPU_HEXAGON,
 };
 pub use partition::{Device, Partition, Segment};
 pub use rules::{RuleSet, Verdict};

@@ -43,7 +43,10 @@ COMMANDS:
              for upload-only warm reloads; 0 disables)
   analyze    delegate report           <graph.json> [--device NAME]
              (also prints the planner's cost-gated pass schedule for
-              the device class)
+              the device class; [--per-op] adds a per-op-class table of
+              modeled vs calibrated latency, flops and bytes, with the
+              calibrated column priced by a self-fit round-trip of the
+              online roofline calibrator)
   passes     pass-pipeline report      <graph.json> [--device NAME]
              [--only name,name,...] runs a registry subset;
              [--list] prints the registered passes and exits
@@ -218,7 +221,21 @@ fn modeled_cost_line(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> String {
 }
 
 fn cmd_analyze(args: &[String]) -> R {
-    let (g, spec) = load_graph_cmd("analyze", args)?;
+    // peel --per-op off before the shared graph loader
+    let mut per_op = false;
+    let rest: Vec<String> = args
+        .iter()
+        .filter(|a| {
+            if a.as_str() == "--per-op" {
+                per_op = true;
+                false
+            } else {
+                true
+            }
+        })
+        .cloned()
+        .collect();
+    let (g, spec) = load_graph_cmd("analyze", &rest)?;
     let rules = RuleSet::default();
     println!("{g}");
     let failures = rules.failures(&g);
@@ -240,7 +257,71 @@ fn cmd_analyze(args: &[String]) -> R {
         planned.rewrites,
         planned.cost_s * 1e3
     );
+    if per_op {
+        print_per_op_breakdown(&g, &spec);
+    }
     Ok(())
+}
+
+/// The `analyze --per-op` table: per-op-class work and latency, with
+/// the calibrated column priced by a *self-fit round-trip* — the online
+/// calibrator is fed roofline-exact synthetic dispatches of this
+/// graph's own per-class work under the shipped constants, so the two
+/// columns differ only by fit error (a smoke test of the calibration
+/// layer with no serving traffic required).
+fn print_per_op_breakdown(g: &Graph, spec: &DeviceSpec) {
+    use mobile_diffusion::delegate::{class_breakdown, w8a8_gain, OpClass, RooflineModel};
+    use mobile_diffusion::planner::{Calibrator, Observation, MIN_CLASS_SAMPLES};
+
+    let shipped = &spec.delegate;
+    let base_rows = class_breakdown(g, shipped, shipped);
+    let mut cal = Calibrator::new(shipped.clone());
+    for (i, row) in base_rows.iter().enumerate() {
+        if row.ops == 0 {
+            continue;
+        }
+        let class = OpClass::ALL[i];
+        let p = shipped.params(class);
+        let (f0, b0) = (row.flops / row.ops as f64, row.bytes / row.ops as f64);
+        for k in 1..=(3 * MIN_CLASS_SAMPLES) {
+            // vary the compute/memory mix so rate, bandwidth and the
+            // dispatch floor are all identifiable from the stream
+            let (f, b) = match k % 3 {
+                0 => (f0 * k as f64, b0),
+                1 => (f0, b0 * k as f64),
+                _ => (f0 * 1e-3, b0 * 1e-3),
+            };
+            let seconds = p.dispatch + (f / p.flops).max(b / p.bandwidth);
+            cal.record(Observation { class, flops: f, bytes: b, seconds });
+        }
+    }
+    let prof = cal.fit();
+    let rows = class_breakdown(g, shipped, &prof);
+    println!("per-op-class breakdown on {} (calibrated = self-fit round-trip):", spec.name);
+    println!(
+        "  {:<14} {:>5} {:>12} {:>12} {:>12} {:>12}",
+        "class", "ops", "gflops", "mb-moved", "modeled-ms", "calib-ms"
+    );
+    for (i, row) in rows.iter().enumerate() {
+        if row.ops == 0 {
+            continue;
+        }
+        println!(
+            "  {:<14} {:>5} {:>12.3} {:>12.2} {:>12.3} {:>12.3}",
+            OpClass::ALL[i].name(),
+            row.ops,
+            row.flops / 1e9,
+            row.bytes / 1e6,
+            row.modeled_s * 1e3,
+            row.calibrated_s * 1e3,
+        );
+    }
+    let gain = w8a8_gain(g, shipped);
+    println!(
+        "  w8a8 activation gain: {:+.3} ms ({})",
+        gain * 1e3,
+        if gain > 0.0 { "planner enables" } else { "planner declines" }
+    );
 }
 
 fn cmd_passes(args: &[String]) -> R {

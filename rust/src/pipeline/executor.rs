@@ -54,11 +54,14 @@
 //! [`StageTimings::loads`] up into the pool metrics and back into the
 //! planner's overhead term.
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::delegate::DeviceProfile;
 use crate::error::{Error, Result};
+use crate::planner::{FleetCalibration, Observation, StageSig};
 use crate::pipeline::batch::{form_batches, BatchKey, BatchRequest, StepBuffers};
 use crate::pipeline::continuous::{
     Checkpoint, ContinuousControl, ContinuousJob, LiveRow, SessionStats,
@@ -202,6 +205,41 @@ impl LoadProfile {
     }
 }
 
+/// Feeds the online roofline calibrator: one latency observation per
+/// device dispatch, tagged with the planner's modeled work signature
+/// for this worker's device class (see
+/// [`crate::planner::Calibrator`]).  Installed by the serving layer on
+/// fleet workers; executors without one record nothing.
+#[derive(Clone)]
+pub struct DispatchObserver {
+    /// fleet-shared calibration windows, keyed by device class
+    pub sink: FleetCalibration,
+    /// registry name of the class this worker's dispatches calibrate
+    pub class: String,
+    /// shipped roofline constants of the class (the fit's anchor)
+    pub base: DeviceProfile,
+    /// `[text, unet, decode]` stage signatures per variant
+    pub sigs: BTreeMap<String, [StageSig; 3]>,
+}
+
+impl DispatchObserver {
+    /// Record one dispatch; `rows` scales the batch-1 signature to the
+    /// work actually dispatched.
+    fn observe(&self, sig: &StageSig, rows: usize, seconds: f64) {
+        let r = rows.max(1) as f64;
+        self.sink.record(
+            &self.class,
+            &self.base,
+            Observation {
+                class: sig.class,
+                flops: sig.flops * r,
+                bytes: sig.bytes * r,
+                seconds,
+            },
+        );
+    }
+}
+
 /// Per-request overrides of the configured [`ExecOptions`] defaults —
 /// a request on a distilled schedule can run 4 steps while the server
 /// default stays 20.
@@ -265,6 +303,8 @@ pub struct PipelinedExecutor {
     /// ([`AUX_TAG`]), so one slot covers the (component, tag) key; a
     /// multi-precision encoder would widen this to a keyed map.
     uncond_ctx: Option<Rc<Vec<f32>>>,
+    /// per-dispatch latency sink for online roofline calibration
+    observer: Option<DispatchObserver>,
 }
 
 /// One request's denoise-loop state inside a batch.
@@ -343,7 +383,19 @@ impl PipelinedExecutor {
             profile: LoadProfile::default(),
             ddim,
             uncond_ctx: None,
+            observer: None,
         })
+    }
+
+    /// Install the calibration sink this executor reports each
+    /// dispatch's (work signature, wall) to.
+    pub fn set_observer(&mut self, observer: DispatchObserver) {
+        self.observer = Some(observer);
+    }
+
+    /// The installed calibration sink, if any.
+    pub fn observer(&self) -> Option<&DispatchObserver> {
+        self.observer.as_ref()
     }
 
     /// The shared host-artifact store this executor loads through.
@@ -573,7 +625,7 @@ impl PipelinedExecutor {
         let unet = self.acquire_component(&unet_name, &key.weights_tag)?;
         tm.unet_load_s = t0.elapsed().as_secs_f64();
 
-        let result = self.run_group_stages(reqs, indices, unet, &mut tm);
+        let result = self.run_group_stages(key, reqs, indices, unet, &mut tm);
         if result.is_err() {
             // a failed group must not leak pins into the next one; the
             // purged encoder takes its cached uncond context with it
@@ -630,11 +682,18 @@ impl PipelinedExecutor {
     /// dispatches the batch ran (`max_steps` over member schedules).
     fn run_group_stages(
         &mut self,
+        key: &BatchKey,
         reqs: &[BatchRequest],
         indices: &[usize],
         unet: ResidentComponent,
         tm: &mut StageTimings,
     ) -> Result<(Vec<Result<StageOutput>>, usize)> {
+        // [text, unet, decode] work signatures for this variant, when a
+        // calibration sink is installed and the planner priced the pair
+        let sigs: Option<[StageSig; 3]> = self
+            .observer
+            .as_ref()
+            .and_then(|o| o.sigs.get(&key.variant).copied());
         // ---- non-pipelined baseline: everything resident up front ------
         let decoder_bytes = self.stored_bytes("decoder", AUX_TAG)?;
         let decoder_manifest = self.manifest.component("decoder")?.clone();
@@ -656,9 +715,11 @@ impl PipelinedExecutor {
         // the uncond ("") context depends only on the encoder weights:
         // one dispatch the first time, a cache hit for every request
         // after — each generation costs one encoder dispatch, not two
+        let mut enc_dispatches = indices.len();
         let uncond = match self.uncond_ctx.clone() {
             Some(c) => c,
             None => {
+                enc_dispatches += 1;
                 let ids = tokenizer::encode("", vocab, seq);
                 let out = text.run(&self.engine, &[ActInput::i32(ids)])?;
                 let rc = Rc::new(out.into_iter().next().unwrap_or_default());
@@ -694,6 +755,11 @@ impl PipelinedExecutor {
             });
         }
         tm.text_encode_s = t0.elapsed().as_secs_f64();
+        if let (Some(o), Some(s)) = (&self.observer, &sigs) {
+            // per-dispatch wall: the encode stage ran enc_dispatches
+            // equal forward passes
+            o.observe(&s[0], 1, tm.text_encode_s / enc_dispatches.max(1) as f64);
+        }
 
         drop(text);
         self.residency.release("text_encoder", AUX_TAG, Retention::Evict)?;
@@ -713,7 +779,7 @@ impl PipelinedExecutor {
         let mut prefetch_charged = false;
 
         let t0 = Instant::now();
-        let PipelinedExecutor { engine, residency, ddim, profile, .. } = self;
+        let PipelinedExecutor { engine, residency, ddim, profile, observer, .. } = self;
 
         let mut sb = StepBuffers::for_unet(&unet, members.len())?;
         let max_steps = members.iter().map(|m| m.ts.len()).max().unwrap_or(0);
@@ -741,7 +807,11 @@ impl PipelinedExecutor {
                 sb.pack(k, &m.latent, m.ts[step] as f32);
             }
             // one CFG-batched UNet dispatch for the whole live batch
+            let t_disp = Instant::now();
             sb.dispatch(engine, &unet)?;
+            if let (Some(o), Some(s)) = (observer.as_ref(), &sigs) {
+                o.observe(&s[1], n_live, t_disp.elapsed().as_secs_f64());
+            }
 
             let n = sb.row_elems();
             let eps2 = &sb.out[0];
@@ -812,7 +882,11 @@ impl PipelinedExecutor {
         let t0 = Instant::now();
         let mut outputs: Vec<Result<StageOutput>> = Vec::with_capacity(members.len());
         for (i, m) in members.into_iter().enumerate() {
+            let t_dec = Instant::now();
             let img = dec.run(engine, &[ActInput::F32(m.latent.clone())]);
+            if let (Some(o), Some(s)) = (observer.as_ref(), &sigs) {
+                o.observe(&s[2], 1, t_dec.elapsed().as_secs_f64());
+            }
             match img {
                 Ok(out) => outputs.push(Ok(StageOutput {
                     image: out.into_iter().next().unwrap_or_default(),
@@ -909,6 +983,10 @@ impl PipelinedExecutor {
         cap: usize,
         control: &mut dyn ContinuousControl,
     ) -> Result<SessionStats> {
+        let sigs: Option<[StageSig; 3]> = self
+            .observer
+            .as_ref()
+            .and_then(|o| o.sigs.get(&key.variant).copied());
         let mut stats = SessionStats::default();
         let mut sb = StepBuffers::for_unet(unet, cap)?;
         let mut live: Vec<LiveMember> = Vec::new();
@@ -934,7 +1012,7 @@ impl PipelinedExecutor {
             // a checkpoint resumed past its schedule end has nothing
             // left to denoise: retire it before packing would index
             // beyond the schedule
-            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, control)?;
+            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, sigs, control)?;
 
             if live.is_empty() {
                 if pending.is_empty() {
@@ -968,7 +1046,8 @@ impl PipelinedExecutor {
             }
             {
                 // one CFG-batched UNet dispatch for every live row
-                let PipelinedExecutor { engine, ddim, .. } = self;
+                let PipelinedExecutor { engine, ddim, observer, .. } = self;
+                let t_disp = Instant::now();
                 if let Err(e) = sb.dispatch(engine, unet) {
                     if !e.is_transient() {
                         return Err(e);
@@ -1000,6 +1079,9 @@ impl PipelinedExecutor {
                     dirty = true;
                     continue;
                 }
+                if let (Some(o), Some(s)) = (observer.as_ref(), &sigs) {
+                    o.observe(&s[1], live.len(), t_disp.elapsed().as_secs_f64());
+                }
                 let n = sb.row_elems();
                 let eps2 = &sb.out[0];
                 for (k, lm) in live.iter_mut().enumerate() {
@@ -1026,7 +1108,7 @@ impl PipelinedExecutor {
             control.on_step(n_live, wall);
 
             // reclaim finished rows' slots before the boundary decisions
-            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, control)?;
+            self.retire_finished(&mut live, &mut anchor, &mut dirty, &mut stats, sigs, control)?;
 
             // preemption: the control names victims (typically when the
             // queue head's deadline is infeasible and no slot is free)
@@ -1111,7 +1193,9 @@ impl PipelinedExecutor {
         let t0 = Instant::now();
         let seq = self.manifest.tokenizer.seq_len;
         let vocab = self.manifest.tokenizer.vocab_size;
+        let mut enc_dispatches = accepted.iter().filter(|j| j.resume.is_none()).count();
         if self.uncond_ctx.is_none() {
+            enc_dispatches += 1;
             let enc = text.as_ref().expect("encoder acquired for uncond");
             let ids = tokenizer::encode("", vocab, seq);
             let out = enc.run(&self.engine, &[ActInput::i32(ids)])?;
@@ -1173,8 +1257,16 @@ impl PipelinedExecutor {
                 start: Instant::now(),
             });
         }
+        let enc_wall = t0.elapsed().as_secs_f64();
+        if enc_dispatches > 0 {
+            if let Some(o) = &self.observer {
+                if let Some(s) = o.sigs.get(&key.variant) {
+                    o.observe(&s[0], 1, enc_wall / enc_dispatches as f64);
+                }
+            }
+        }
         // the admission wave's encode wall, split across its rows
-        let enc_share = t0.elapsed().as_secs_f64() / n_admitted as f64;
+        let enc_share = enc_wall / n_admitted as f64;
         for lm in live.iter_mut().rev().take(n_admitted) {
             lm.busy_s += enc_share;
         }
@@ -1197,6 +1289,7 @@ impl PipelinedExecutor {
         anchor: &mut LoadProfile,
         dirty: &mut bool,
         stats: &mut SessionStats,
+        sigs: Option<[StageSig; 3]>,
         control: &mut dyn ContinuousControl,
     ) -> Result<()> {
         let mut finished: Vec<LiveMember> = Vec::new();
@@ -1215,7 +1308,7 @@ impl PipelinedExecutor {
             stats.leaves += finished.len();
         }
         *dirty = true;
-        self.flush_continuous(finished, anchor, stats, control)
+        self.flush_continuous(finished, anchor, stats, sigs, control)
     }
 
     /// Decode and complete a wave of finished rows: decoder acquired
@@ -1227,6 +1320,7 @@ impl PipelinedExecutor {
         finished: Vec<LiveMember>,
         anchor: &mut LoadProfile,
         stats: &mut SessionStats,
+        sigs: Option<[StageSig; 3]>,
         control: &mut dyn ContinuousControl,
     ) -> Result<()> {
         let t0 = Instant::now();
@@ -1253,6 +1347,9 @@ impl PipelinedExecutor {
             let t_dec = Instant::now();
             let img = dec.run(&self.engine, &[ActInput::F32(lm.m.latent.clone())]);
             let decode_s = t_dec.elapsed().as_secs_f64();
+            if let (Some(o), Some(s)) = (&self.observer, &sigs) {
+                o.observe(&s[2], 1, decode_s);
+            }
             let result = img.map(|out| {
                 let t = StageTimings {
                     denoise_steps: lm.m.ts.len(),

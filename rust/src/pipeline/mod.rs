@@ -17,8 +17,8 @@ pub use continuous::{
     Checkpoint, ContinuousControl, ContinuousJob, LiveRow, NullControl, SessionStats,
 };
 pub use executor::{
-    ExecOptions, ExecOverrides, GenerateResult, LoadProfile, PipelinedExecutor,
-    ResidentComponent, StageTimings,
+    DispatchObserver, ExecOptions, ExecOverrides, GenerateResult, LoadProfile,
+    PipelinedExecutor, ResidentComponent, StageTimings,
 };
 pub use loader::{PrefetchedComponent, Prefetcher};
 pub use memory::MemoryLedger;

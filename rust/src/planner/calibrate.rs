@@ -1,0 +1,466 @@
+//! Online roofline calibration: fit per-op-class device parameters
+//! from the live dispatch stream.
+//!
+//! The shipped [`DeviceProfile`] constants are educated guesses; real
+//! silicon sustains different effective rates per op class (a conv
+//! pipeline and a reduction loop saturate different fractions of
+//! peak), and thermal state moves them at runtime.  Each executor
+//! dispatch emits an [`Observation`] — the op class it was dominated
+//! by, the modeled work (flops, bytes), and the measured wall — into a
+//! per-device-class [`Calibrator`], which keeps a bounded window per
+//! op class and fits an effective roofline triple (flops rate,
+//! bandwidth, dispatch overhead) by alternating classification and
+//! re-estimation: under the current fit each observation is either
+//! compute- or memory-bound, compute-bound samples re-estimate the
+//! flops rate, memory-bound ones the bandwidth, and the residual
+//! re-estimates the dispatch floor.  A few iterations converge for
+//! roofline-shaped data (pinned by a property test).
+//!
+//! The result is a [`CalibratedProfile`]: the shipped profile overlaid
+//! with fitted per-class triples, implementing
+//! [`RooflineModel`] so every cost function
+//! (`op_latency_on`, `plan_graph_cal`, `w8a8_gain`) prices against
+//! measured numbers.  [`FleetCalibration`] is the shared handle the
+//! executors write and the router reads; when a class's fitted model
+//! diverges from what its plans were last built against by more than
+//! [`REPLAN_DIVERGENCE`], `FleetRouter::apply_calibration` rebuilds
+//! the affected `(device, variant)` plans so pass schedules, W8A8
+//! gating and admission routing track the hardware.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::delegate::{DeviceProfile, OpClass, RoofParams, RooflineModel};
+
+/// Default bounded window of observations kept per op class
+/// (`--calib-window`).
+pub const DEFAULT_CALIB_WINDOW: usize = 256;
+
+/// Observations a class needs before its fit is trusted — below this
+/// the shipped constants keep pricing the class.
+pub const MIN_CLASS_SAMPLES: usize = 8;
+
+/// Relative divergence between a fitted model and the model a plan was
+/// built against beyond which the plan registry re-plans the pair.
+pub const REPLAN_DIVERGENCE: f64 = 0.25;
+
+/// Alternating-projection iterations of the windowed fit.
+const FIT_ITERS: usize = 6;
+
+/// One measured dispatch: the modeled work and the measured wall.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub class: OpClass,
+    /// modeled FLOPs the dispatch performed
+    pub flops: f64,
+    /// modeled bytes the dispatch moved
+    pub bytes: f64,
+    /// measured wall seconds
+    pub seconds: f64,
+}
+
+/// Bounded (flops, bytes, seconds) window for one op class.
+#[derive(Debug, Clone, Default)]
+struct ClassWindow {
+    obs: VecDeque<(f64, f64, f64)>,
+}
+
+impl ClassWindow {
+    fn push(&mut self, flops: f64, bytes: f64, seconds: f64, cap: usize) {
+        if self.obs.len() >= cap.max(1) {
+            self.obs.pop_front();
+        }
+        self.obs.push_back((flops, bytes, seconds));
+    }
+}
+
+/// Fit one class window against roofline structure
+/// `t = dispatch + max(flops/F, bytes/B)`.
+fn fit_class(obs: &VecDeque<(f64, f64, f64)>, start: RoofParams) -> RoofParams {
+    let mut p = start;
+    for _ in 0..FIT_ITERS {
+        // ratio estimators (Σwork / Σtime): the big samples dominate
+        // both sums, so near-pure-dispatch observations cannot drag
+        // the fitted rates the way a mean-of-rates would
+        let (mut f_sum, mut f_work) = (0.0, 0.0);
+        let (mut b_sum, mut b_work) = (0.0, 0.0);
+        for &(f, b, t) in obs {
+            let work = (t - p.dispatch).max(t * 1e-3).max(1e-12);
+            // classify under the current fit
+            let comp = f / p.flops.max(1e-9);
+            let mem = b / p.bandwidth.max(1e-9);
+            if comp <= 0.0 && mem <= 0.0 {
+                continue;
+            }
+            if comp >= mem {
+                f_sum += f;
+                f_work += work;
+            } else {
+                b_sum += b;
+                b_work += work;
+            }
+        }
+        if f_sum > 0.0 && f_work > 0.0 {
+            p.flops = (f_sum / f_work).max(1e-9);
+        }
+        if b_sum > 0.0 && b_work > 0.0 {
+            p.bandwidth = (b_sum / b_work).max(1e-9);
+        }
+        // dispatch floor: read it off the dispatch-dominated samples
+        // (modeled work under half the wall); when every sample is
+        // work-dominated, fall back to the mean positive residual
+        let (mut disp_sum, mut disp_n) = (0.0, 0.0);
+        let mut resid_sum = 0.0;
+        for &(f, b, t) in obs {
+            let work = (f / p.flops).max(b / p.bandwidth);
+            resid_sum += (t - work).max(0.0);
+            if work < t * 0.5 {
+                disp_sum += t - work;
+                disp_n += 1.0;
+            }
+        }
+        p.dispatch = if disp_n > 0.0 {
+            (disp_sum / disp_n).max(0.0)
+        } else {
+            (resid_sum / obs.len().max(1) as f64).max(0.0)
+        };
+    }
+    p
+}
+
+/// Windowed per-op-class roofline fitter for one device class.
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    base: DeviceProfile,
+    window: usize,
+    min_samples: usize,
+    classes: [ClassWindow; 6],
+    total: u64,
+}
+
+impl Calibrator {
+    pub fn new(base: DeviceProfile) -> Calibrator {
+        Calibrator::with_window(base, DEFAULT_CALIB_WINDOW)
+    }
+
+    /// A calibrator keeping at most `window` observations per op class.
+    pub fn with_window(base: DeviceProfile, window: usize) -> Calibrator {
+        Calibrator {
+            base,
+            window: window.max(1),
+            min_samples: MIN_CLASS_SAMPLES.min(window.max(1)),
+            classes: Default::default(),
+            total: 0,
+        }
+    }
+
+    pub fn base(&self) -> &DeviceProfile {
+        &self.base
+    }
+
+    /// Record one dispatch.  Non-finite or non-positive walls are
+    /// dropped — a faulted dispatch carries no cost signal.
+    pub fn record(&mut self, obs: Observation) {
+        if !obs.seconds.is_finite()
+            || obs.seconds <= 0.0
+            || !obs.flops.is_finite()
+            || !obs.bytes.is_finite()
+            || obs.flops < 0.0
+            || obs.bytes < 0.0
+        {
+            return;
+        }
+        self.classes[obs.class.index()].push(obs.flops, obs.bytes, obs.seconds, self.window);
+        self.total += 1;
+    }
+
+    /// Observations accepted over this calibrator's lifetime (monotone;
+    /// the windows themselves are bounded).
+    pub fn observations(&self) -> u64 {
+        self.total
+    }
+
+    /// Observations currently windowed for `class`.
+    pub fn class_samples(&self, class: OpClass) -> usize {
+        self.classes[class.index()].obs.len()
+    }
+
+    /// Fit the calibrated overlay: classes with at least
+    /// `min_samples` windowed observations get fitted triples, the
+    /// rest keep the shipped constants.
+    pub fn fit(&self) -> CalibratedProfile {
+        let shipped = RoofParams {
+            flops: self.base.flops,
+            bandwidth: self.base.bandwidth,
+            dispatch: self.base.dispatch,
+        };
+        let mut fitted: [Option<RoofParams>; 6] = [None; 6];
+        for class in OpClass::ALL {
+            let w = &self.classes[class.index()];
+            if w.obs.len() >= self.min_samples {
+                fitted[class.index()] = Some(fit_class(&w.obs, shipped));
+            }
+        }
+        CalibratedProfile { base: self.base.clone(), fitted }
+    }
+}
+
+/// The shipped profile overlaid with per-op-class fitted triples.
+#[derive(Debug, Clone)]
+pub struct CalibratedProfile {
+    base: DeviceProfile,
+    fitted: [Option<RoofParams>; 6],
+}
+
+impl CalibratedProfile {
+    /// An overlay with no fits — prices identically to `base`.
+    pub fn uncalibrated(base: DeviceProfile) -> CalibratedProfile {
+        CalibratedProfile { base, fitted: [None; 6] }
+    }
+
+    /// An overlay applying one fitted triple to *every* class (tests,
+    /// benches, property generators).
+    pub fn uniform(base: DeviceProfile, params: RoofParams) -> CalibratedProfile {
+        CalibratedProfile { base, fitted: [Some(params); 6] }
+    }
+
+    pub fn fitted(&self, class: OpClass) -> Option<RoofParams> {
+        self.fitted[class.index()]
+    }
+
+    /// Number of op classes with trusted fits.
+    pub fn fitted_classes(&self) -> usize {
+        self.fitted.iter().filter(|f| f.is_some()).count()
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.fitted_classes() > 0
+    }
+
+    /// Largest relative deviation of any fitted parameter from the
+    /// shipped constants — the re-plan trigger metric.  0 when nothing
+    /// is fitted (or the fits agree exactly).
+    pub fn divergence(&self) -> f64 {
+        let rel = |fitted: f64, shipped: f64| {
+            if shipped.abs() < 1e-12 {
+                if fitted.abs() < 1e-12 {
+                    0.0
+                } else {
+                    1.0
+                }
+            } else {
+                (fitted - shipped).abs() / shipped.abs()
+            }
+        };
+        let mut worst: f64 = 0.0;
+        for f in self.fitted.iter().flatten() {
+            worst = worst
+                .max(rel(f.flops, self.base.flops))
+                .max(rel(f.bandwidth, self.base.bandwidth))
+                .max(rel(f.dispatch, self.base.dispatch));
+        }
+        worst
+    }
+}
+
+impl RooflineModel for CalibratedProfile {
+    fn base(&self) -> &DeviceProfile {
+        &self.base
+    }
+
+    fn params(&self, class: OpClass) -> RoofParams {
+        self.fitted[class.index()].unwrap_or(RoofParams {
+            flops: self.base.flops,
+            bandwidth: self.base.bandwidth,
+            dispatch: self.base.dispatch,
+        })
+    }
+}
+
+/// Shared fleet-wide calibration state: one [`Calibrator`] per device
+/// class, written by the executors (one observation per dispatch) and
+/// read by the router when it decides whether to re-plan.  Cheap to
+/// clone — all clones share the same state.
+#[derive(Debug, Clone)]
+pub struct FleetCalibration {
+    inner: Arc<Mutex<BTreeMap<String, Calibrator>>>,
+    window: usize,
+}
+
+impl FleetCalibration {
+    pub fn new() -> FleetCalibration {
+        FleetCalibration::with_window(DEFAULT_CALIB_WINDOW)
+    }
+
+    pub fn with_window(window: usize) -> FleetCalibration {
+        FleetCalibration { inner: Arc::new(Mutex::new(BTreeMap::new())), window: window.max(1) }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Record one dispatch for `class_name` (registry device-class
+    /// name), lazily creating its calibrator anchored at `base`.
+    pub fn record(&self, class_name: &str, base: &DeviceProfile, obs: Observation) {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .entry(class_name.to_string())
+            .or_insert_with(|| Calibrator::with_window(base.clone(), self.window))
+            .record(obs);
+    }
+
+    /// Lifetime observation count for `class_name` (0 if never seen).
+    pub fn observations(&self, class_name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(class_name)
+            .map(|c| c.observations())
+            .unwrap_or(0)
+    }
+
+    /// The current fitted overlay for `class_name`, if any dispatches
+    /// were recorded.  The overlay may still be uncalibrated (no class
+    /// reached `MIN_CLASS_SAMPLES`).
+    pub fn profile(&self, class_name: &str) -> Option<CalibratedProfile> {
+        self.inner.lock().unwrap().get(class_name).map(|c| c.fit())
+    }
+
+    /// Class names with any recorded observations, sorted.
+    pub fn class_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+impl Default for FleetCalibration {
+    fn default() -> Self {
+        FleetCalibration::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delegate::GPU_ADRENO740;
+
+    fn true_params() -> RoofParams {
+        RoofParams { flops: 0.6e12, bandwidth: 12e9, dispatch: 40e-6 }
+    }
+
+    /// Exact roofline latency under `p`.
+    fn latency(p: RoofParams, flops: f64, bytes: f64) -> f64 {
+        p.dispatch + (flops / p.flops).max(bytes / p.bandwidth)
+    }
+
+    fn feed(cal: &mut Calibrator, p: RoofParams, n: usize) {
+        for i in 0..n {
+            // alternate compute-bound, memory-bound and near-pure
+            // dispatch work so every parameter is identified
+            let (flops, bytes) = match i % 3 {
+                0 => (1e9 * (1.0 + i as f64), 1e3),
+                1 => (1e3, 1e7 * (1.0 + i as f64)),
+                _ => (1e3, 1e3),
+            };
+            cal.record(Observation {
+                class: OpClass::Conv,
+                flops,
+                bytes,
+                seconds: latency(p, flops, bytes),
+            });
+        }
+    }
+
+    #[test]
+    fn fit_recovers_a_known_profile() {
+        let mut cal = Calibrator::new(GPU_ADRENO740);
+        let truth = true_params();
+        feed(&mut cal, truth, 48);
+        let prof = cal.fit();
+        let fitted = prof.fitted(OpClass::Conv).expect("enough samples");
+        assert!((fitted.flops - truth.flops).abs() / truth.flops < 0.05, "{fitted:?}");
+        assert!(
+            (fitted.bandwidth - truth.bandwidth).abs() / truth.bandwidth < 0.05,
+            "{fitted:?}"
+        );
+        assert!(
+            (fitted.dispatch - truth.dispatch).abs() / truth.dispatch < 0.25,
+            "{fitted:?}"
+        );
+        // classes never observed keep the shipped constants
+        assert!(prof.fitted(OpClass::Matmul).is_none());
+        let p = prof.params(OpClass::Matmul);
+        assert_eq!(p.flops, GPU_ADRENO740.flops);
+    }
+
+    #[test]
+    fn below_min_samples_the_shipped_constants_hold() {
+        let mut cal = Calibrator::new(GPU_ADRENO740);
+        feed(&mut cal, true_params(), MIN_CLASS_SAMPLES - 1);
+        let prof = cal.fit();
+        assert!(!prof.is_calibrated());
+        assert_eq!(prof.divergence(), 0.0);
+        let p = prof.params(OpClass::Conv);
+        assert_eq!(p.bandwidth, GPU_ADRENO740.bandwidth);
+    }
+
+    #[test]
+    fn windows_are_bounded_and_slide() {
+        let mut cal = Calibrator::with_window(GPU_ADRENO740, 16);
+        feed(&mut cal, true_params(), 500);
+        assert_eq!(cal.class_samples(OpClass::Conv), 16);
+        assert_eq!(cal.observations(), 500);
+    }
+
+    #[test]
+    fn bogus_observations_are_dropped() {
+        let mut cal = Calibrator::new(GPU_ADRENO740);
+        for seconds in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            cal.record(Observation { class: OpClass::Conv, flops: 1.0, bytes: 1.0, seconds });
+        }
+        cal.record(Observation {
+            class: OpClass::Conv,
+            flops: f64::NAN,
+            bytes: 1.0,
+            seconds: 1.0,
+        });
+        assert_eq!(cal.observations(), 0);
+    }
+
+    #[test]
+    fn divergence_grows_with_the_gap_from_shipped() {
+        let close = CalibratedProfile::uniform(
+            GPU_ADRENO740,
+            RoofParams {
+                flops: GPU_ADRENO740.flops * 1.01,
+                bandwidth: GPU_ADRENO740.bandwidth,
+                dispatch: GPU_ADRENO740.dispatch,
+            },
+        );
+        let far = CalibratedProfile::uniform(
+            GPU_ADRENO740,
+            RoofParams {
+                flops: GPU_ADRENO740.flops,
+                bandwidth: GPU_ADRENO740.bandwidth / 4.0,
+                dispatch: GPU_ADRENO740.dispatch,
+            },
+        );
+        assert!(close.divergence() < 0.05);
+        assert!(far.divergence() > REPLAN_DIVERGENCE);
+    }
+
+    #[test]
+    fn fleet_calibration_is_shared_across_clones() {
+        let fleet = FleetCalibration::with_window(32);
+        let clone = fleet.clone();
+        clone.record(
+            "adreno740",
+            &GPU_ADRENO740,
+            Observation { class: OpClass::Conv, flops: 1e9, bytes: 1e6, seconds: 1e-3 },
+        );
+        assert_eq!(fleet.observations("adreno740"), 1);
+        assert_eq!(fleet.class_names(), vec!["adreno740".to_string()]);
+        assert!(fleet.profile("adreno740").is_some());
+        assert!(fleet.profile("bigcore").is_none());
+    }
+}

@@ -16,12 +16,14 @@
 //!   of expiring in the queue; deadline-less requests are never
 //!   rejected (the fastest class takes them as a last resort).
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::queue::FALLBACK_DEADLINE;
 use crate::error::{Error, Result};
 
+use super::calibrate::{FleetCalibration, REPLAN_DIVERGENCE};
 use super::plan::PlanRegistry;
 use super::registry::{device_names, device_spec, DeviceSpec};
 
@@ -108,11 +110,33 @@ pub struct Route {
 pub struct FleetRouter {
     fleet: FleetSpec,
     plans: Arc<PlanRegistry>,
+    /// shared per-class roofline calibration (None = routing runs on
+    /// shipped constants forever)
+    calibration: Option<FleetCalibration>,
+    /// divergence each class's cached plans were last built under —
+    /// the hysteresis state of the re-plan trigger
+    applied: Mutex<BTreeMap<String, f64>>,
 }
 
 impl FleetRouter {
     pub fn new(fleet: FleetSpec, plans: Arc<PlanRegistry>) -> FleetRouter {
-        FleetRouter { fleet, plans }
+        FleetRouter { fleet, plans, calibration: None, applied: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// A router whose plans track a shared calibration stream: call
+    /// [`FleetRouter::apply_calibration`] periodically (the metrics
+    /// report does) to fold fitted models back into the plan cache.
+    pub fn with_calibration(
+        fleet: FleetSpec,
+        plans: Arc<PlanRegistry>,
+        calibration: FleetCalibration,
+    ) -> FleetRouter {
+        FleetRouter {
+            fleet,
+            plans,
+            calibration: Some(calibration),
+            applied: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn fleet(&self) -> &FleetSpec {
@@ -121,6 +145,71 @@ impl FleetRouter {
 
     pub fn plans(&self) -> &Arc<PlanRegistry> {
         &self.plans
+    }
+
+    pub fn calibration(&self) -> Option<&FleetCalibration> {
+        self.calibration.as_ref()
+    }
+
+    /// Fold the calibration stream back into the plan cache: for every
+    /// fleet class whose fitted model has moved more than
+    /// [`REPLAN_DIVERGENCE`] away from the model its cached plans were
+    /// built under, rebuild those `(device, variant)` plans against the
+    /// fitted overlay.  Returns human-readable lines describing what
+    /// was re-planned (empty when nothing crossed the threshold) — the
+    /// metrics report prints them verbatim.
+    pub fn apply_calibration(&self) -> Vec<String> {
+        let Some(cal) = &self.calibration else {
+            return Vec::new();
+        };
+        let mut lines = Vec::new();
+        let cached = self.plans.cached();
+        let mut applied = self.applied.lock().unwrap();
+        for class in &self.fleet.classes {
+            let name = class.device.name;
+            let Some(profile) = cal.profile(name) else { continue };
+            if !profile.is_calibrated() {
+                continue;
+            }
+            let div = profile.divergence();
+            let last = applied.get(name).copied().unwrap_or(0.0);
+            if (div - last).abs() <= REPLAN_DIVERGENCE {
+                continue;
+            }
+            let variants: Vec<String> = cached
+                .iter()
+                .filter(|p| p.device == name)
+                .map(|p| p.variant.clone())
+                .collect();
+            let mut class_lines = Vec::new();
+            let mut replanned = 0usize;
+            for variant in &variants {
+                match self.plans.replan(&class.device, variant, &profile) {
+                    Ok(p) => {
+                        replanned += 1;
+                        class_lines.push(format!(
+                            "  replanned {}/{}: step {:.3} ms, w8a8 {}",
+                            name,
+                            variant,
+                            p.step_latency_s * 1e3,
+                            if p.w8a8 { "on" } else { "off" },
+                        ));
+                    }
+                    Err(e) => class_lines.push(format!("  replan {name}/{variant} failed: {e}")),
+                }
+            }
+            if replanned > 0 {
+                applied.insert(name.to_string(), div);
+                lines.push(format!(
+                    "calibration {name}: divergence {:.0}% (plans built at {:.0}%), {} obs",
+                    div * 100.0,
+                    last * 100.0,
+                    cal.observations(name),
+                ));
+                lines.extend(class_lines);
+            }
+        }
+        lines
     }
 
     /// Plan-predicted service time of `(variant, num_steps)` on a class.
@@ -349,5 +438,60 @@ mod tests {
         let r = two_class_router();
         let err = r.route("huge", 20, None).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn calibration_replans_and_reroutes_to_the_truly_cheapest_class() {
+        use crate::delegate::OpClass;
+        use crate::planner::calibrate::{FleetCalibration, Observation, MIN_CLASS_SAMPLES};
+
+        let fleet = FleetSpec::parse("adreno740:1,bigcore:1").unwrap();
+        let cal = FleetCalibration::with_window(128);
+        let r = FleetRouter::with_calibration(fleet, Arc::new(PlanRegistry::new()), cal.clone());
+
+        let fast = r.predicted_s(0, "mobile", 20).unwrap();
+        let slow = r.predicted_s(1, "mobile", 20).unwrap();
+        let tight = Duration::from_secs_f64((fast + slow) / 2.0);
+        // under shipped constants only the GPU class fits the deadline,
+        // so the request is (mis)routed to the expensive fast silicon
+        assert_eq!(r.route("mobile", 20, Some(tight)).unwrap().class, 0);
+        // with nothing recorded, applying calibration is a no-op
+        assert!(r.apply_calibration().is_empty());
+
+        // the CPU silicon actually runs 4x better than the shipped
+        // guess on every op class: synthesize roofline-exact dispatch
+        // observations from the true triple
+        let base = r.fleet().classes[1].device.delegate.clone();
+        let (tf, tb, td) = (base.flops * 4.0, base.bandwidth * 4.0, base.dispatch / 4.0);
+        for &class in OpClass::ALL {
+            for i in 0..(3 * MIN_CLASS_SAMPLES) {
+                let (flops, bytes) = match i % 3 {
+                    0 => (1e9 * (1.0 + i as f64), 1e3),
+                    1 => (1e3, 1e7 * (1.0 + i as f64)),
+                    _ => (1e3, 1e3),
+                };
+                let seconds = td + (flops / tf).max(bytes / tb);
+                cal.record("bigcore", &base, Observation { class, flops, bytes, seconds });
+            }
+        }
+
+        let lines = r.apply_calibration();
+        assert!(
+            lines.iter().any(|l| l.contains("calibration bigcore")),
+            "replan trigger fired: {lines:?}"
+        );
+        let slow_cal = r.predicted_s(1, "mobile", 20).unwrap();
+        assert!(slow_cal < slow / 2.0, "calibrated plan is much cheaper: {slow_cal} vs {slow}");
+        assert!(slow_cal > fast, "the CPU class stays the cheaper (slower) silicon");
+
+        // same request, same deadline: the truly-cheapest class now
+        // wins because the measured model says it is feasible
+        let route = r.route("mobile", 20, Some(tight)).unwrap();
+        assert_eq!(route.class, 1, "calibration flipped the routing decision");
+        assert!(route.predicted_s <= tight.as_secs_f64());
+
+        // hysteresis: a second application with no new evidence is quiet
+        assert!(r.apply_calibration().is_empty());
+        assert!(r.plans().replans() >= 1);
     }
 }

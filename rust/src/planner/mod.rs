@@ -17,16 +17,25 @@
 //!   the cheapest worker class that meets its deadline.  Routing takes
 //!   measured per-class request overheads (loads + encode + decode)
 //!   over the modeled constant once the fleet has served enough
-//!   requests ([`FleetRouter::route_observed`]).
+//!   requests ([`FleetRouter::route_observed`]);
+//! * [`calibrate`] — online roofline calibration: per-op-class fits
+//!   over the live dispatch stream ([`Calibrator`]), the resulting
+//!   [`CalibratedProfile`] overlay, and the shared [`FleetCalibration`]
+//!   handle whose divergence drives `PlanRegistry` re-planning.
 
+pub mod calibrate;
 pub mod fleet;
 pub mod model;
 pub mod plan;
 pub mod registry;
 
+pub use calibrate::{
+    CalibratedProfile, Calibrator, FleetCalibration, Observation,
+    DEFAULT_CALIB_WINDOW, MIN_CLASS_SAMPLES, REPLAN_DIVERGENCE,
+};
 pub use fleet::{FleetRouter, FleetSpec, Route, WorkerClassSpec};
 pub use plan::{
-    modeled_cost_s, plan_graph, plan_graph_with, schedule_display, ExecutionPlan,
-    PlanRegistry, PlannedGraph,
+    modeled_cost_cal, modeled_cost_s, plan_graph, plan_graph_cal, plan_graph_with,
+    schedule_display, ExecutionPlan, PlanRegistry, PlannedGraph, StageSig,
 };
 pub use registry::{device_names, device_spec, registered_devices, DeviceSpec};

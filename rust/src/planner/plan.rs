@@ -14,13 +14,18 @@
 //! unplanned graph, which is the invariant the property tests pin.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::delegate::{graph_cost, single_device_cost, RuleSet};
+use crate::delegate::{
+    class_breakdown, graph_cost, graph_cost_on, single_device_cost,
+    single_device_cost_on, w8a8_gain, OpClass, RooflineModel, RuleSet,
+};
 use crate::error::Result;
 use crate::graph::Graph;
 use crate::passes::PassRegistry;
 
+use super::calibrate::CalibratedProfile;
 use super::model;
 use super::registry::DeviceSpec;
 
@@ -31,9 +36,26 @@ const CFG_ROWS: f64 = 2.0;
 /// class: delegate-partitioned for paired classes, single-device for
 /// complete-coverage classes.
 pub fn modeled_cost_s(g: &Graph, rules: &RuleSet, spec: &DeviceSpec) -> f64 {
+    modeled_cost_cal(g, rules, spec, None)
+}
+
+/// [`modeled_cost_s`] with the primary device optionally priced by a
+/// calibrated overlay instead of the shipped constants.  The CPU
+/// fallback of paired classes keeps its shipped profile — calibration
+/// windows are keyed by the class's primary device.
+pub fn modeled_cost_cal(
+    g: &Graph,
+    rules: &RuleSet,
+    spec: &DeviceSpec,
+    cal: Option<&CalibratedProfile>,
+) -> f64 {
+    let model: &dyn RooflineModel = match cal {
+        Some(c) => c,
+        None => &spec.delegate,
+    };
     match &spec.fallback {
-        Some(cpu) => graph_cost(g, rules, &spec.delegate, cpu).total(),
-        None => single_device_cost(g, &spec.delegate),
+        Some(cpu) => graph_cost_on(g, rules, model, cpu).total(),
+        None => single_device_cost_on(g, model),
     }
 }
 
@@ -79,8 +101,22 @@ pub fn plan_graph_with(
     spec: &DeviceSpec,
     registry: &PassRegistry,
 ) -> PlannedGraph {
+    plan_graph_cal(g, rules, spec, registry, None)
+}
+
+/// [`plan_graph_with`] pricing pass trials against a calibrated
+/// overlay.  The accept gate is unchanged (coverage must not decrease,
+/// modeled latency must not increase), so the never-worse invariant
+/// holds under *any* roofline model — a property test pins this.
+pub fn plan_graph_cal(
+    g: &Graph,
+    rules: &RuleSet,
+    spec: &DeviceSpec,
+    registry: &PassRegistry,
+    cal: Option<&CalibratedProfile>,
+) -> PlannedGraph {
     let mut current = g.clone();
-    let mut cost_s = modeled_cost_s(&current, rules, spec);
+    let mut cost_s = modeled_cost_cal(&current, rules, spec, cal);
     let mut coverage = rules.coverage(&current);
     let mut rewrites = 0usize;
     let mut passes_used = Vec::new();
@@ -91,7 +127,7 @@ pub fn plan_graph_with(
         if n == 0 {
             continue;
         }
-        let cand_cost = modeled_cost_s(&candidate, rules, spec);
+        let cand_cost = modeled_cost_cal(&candidate, rules, spec, cal);
         let cand_cov = rules.coverage(&candidate);
         if cand_cov >= coverage && cand_cost <= cost_s {
             current = candidate;
@@ -103,6 +139,35 @@ pub fn plan_graph_with(
     }
 
     PlannedGraph { graph: current, cost_s, coverage, rewrites, passes_used }
+}
+
+/// The modeled work signature of one component dispatch at batch 1:
+/// what the executor reports alongside each measured wall so the
+/// calibrator can fit (work → latency).  `class` is the op class that
+/// dominates the component's modeled latency.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSig {
+    pub class: OpClass,
+    /// modeled FLOPs of one forward pass at batch 1
+    pub flops: f64,
+    /// modeled bytes moved by one forward pass at batch 1
+    pub bytes: f64,
+}
+
+fn stage_sig(g: &Graph, dev: &crate::delegate::DeviceProfile) -> StageSig {
+    let rows = class_breakdown(g, dev, dev);
+    let mut class = OpClass::Elementwise;
+    let mut dominant = -1.0;
+    let (mut flops, mut bytes) = (0.0, 0.0);
+    for (i, row) in rows.iter().enumerate() {
+        flops += row.flops;
+        bytes += row.bytes;
+        if row.modeled_s > dominant {
+            dominant = row.modeled_s;
+            class = OpClass::ALL[i];
+        }
+    }
+    StageSig { class, flops, bytes }
 }
 
 /// What the scheduler needs to know about running one `(device class,
@@ -128,6 +193,19 @@ pub struct ExecutionPlan {
     pub rewrites: usize,
     /// accepted passes on the UNet, pipeline order
     pub unet_passes: Vec<&'static str>,
+    /// W8A8 activation quantization pays on this pair: the pricing
+    /// model says the bandwidth saved across the planned UNet beats
+    /// the boundary quant/dequant cost ([`w8a8_gain`] > 0)
+    pub w8a8: bool,
+    /// true when this plan was priced against a calibrated overlay
+    /// rather than the shipped constants
+    pub calibrated: bool,
+    /// work signature of one UNet denoise row (batch 1)
+    pub unet_sig: StageSig,
+    /// work signature of one text-encoder forward pass
+    pub text_sig: StageSig,
+    /// work signature of one decoder forward pass
+    pub decode_sig: StageSig,
 }
 
 fn weight_bytes(g: &Graph) -> usize {
@@ -143,17 +221,54 @@ fn peak_activation_bytes(g: &Graph) -> usize {
         .unwrap_or(0)
 }
 
+/// Largest live activation charged at int8 width — what the ledger
+/// holds when the plan enables W8A8 activation quantization.
+fn peak_activation_bytes_int8(g: &Graph) -> usize {
+    g.tensors
+        .iter()
+        .filter(|t| !t.is_const)
+        .map(|t| t.elems() * crate::quant::activations::INT8_BYTES_PER_ELEM)
+        .max()
+        .unwrap_or(0)
+}
+
 impl ExecutionPlan {
-    /// Plan every component of `variant` for `spec`.
+    /// Plan every component of `variant` for `spec` under the shipped
+    /// cost constants.
     pub fn build(spec: &DeviceSpec, variant: &str, rules: &RuleSet) -> Result<ExecutionPlan> {
+        ExecutionPlan::build_cal(spec, variant, rules, None)
+    }
+
+    /// [`ExecutionPlan::build`] pricing against a calibrated overlay:
+    /// pass gating, the W8A8 decision, and the predicted latencies all
+    /// use the fitted per-op-class parameters where available.
+    pub fn build_cal(
+        spec: &DeviceSpec,
+        variant: &str,
+        rules: &RuleSet,
+        cal: Option<&CalibratedProfile>,
+    ) -> Result<ExecutionPlan> {
+        let registry = PassRegistry::standard();
         let (unet, text, dec) = model::component_graphs(variant)?;
-        let unet_p = plan_graph(&unet, rules, spec);
-        let text_p = plan_graph(&text, rules, spec);
-        let dec_p = plan_graph(&dec, rules, spec);
+        let unet_p = plan_graph_cal(&unet, rules, spec, &registry, cal);
+        let text_p = plan_graph_cal(&text, rules, spec, &registry, cal);
+        let dec_p = plan_graph_cal(&dec, rules, spec, &registry, cal);
         let coverage = if spec.is_single_device() { 1.0 } else { unet_p.coverage };
+        let model: &dyn RooflineModel = match cal {
+            Some(c) => c,
+            None => &spec.delegate,
+        };
+        let w8a8 = w8a8_gain(&unet_p.graph, model) > 0.0;
+        // W8A8 buys ledger headroom too: int8 activation buffers are
+        // charged at 1 byte/elem instead of their fp32 width
+        let act_peak = if w8a8 {
+            peak_activation_bytes_int8(&unet_p.graph)
+        } else {
+            peak_activation_bytes(&unet_p.graph)
+        };
         let peak_memory = weight_bytes(&unet_p.graph)
             + weight_bytes(&text_p.graph).max(weight_bytes(&dec_p.graph))
-            + peak_activation_bytes(&unet_p.graph);
+            + act_peak;
         Ok(ExecutionPlan {
             device: spec.name.to_string(),
             variant: variant.to_string(),
@@ -163,6 +278,11 @@ impl ExecutionPlan {
             peak_memory,
             rewrites: unet_p.rewrites + text_p.rewrites + dec_p.rewrites,
             unet_passes: unet_p.passes_used,
+            w8a8,
+            calibrated: cal.map(|c| c.is_calibrated()).unwrap_or(false),
+            unet_sig: stage_sig(&unet_p.graph, &spec.delegate),
+            text_sig: stage_sig(&text_p.graph, &spec.delegate),
+            decode_sig: stage_sig(&dec_p.graph, &spec.delegate),
         })
     }
 
@@ -190,6 +310,7 @@ impl ExecutionPlan {
 pub struct PlanRegistry {
     rules: RuleSet,
     plans: Mutex<BTreeMap<(String, String), Arc<ExecutionPlan>>>,
+    replans: AtomicU64,
 }
 
 impl PlanRegistry {
@@ -198,7 +319,7 @@ impl PlanRegistry {
     }
 
     pub fn with_rules(rules: RuleSet) -> PlanRegistry {
-        PlanRegistry { rules, plans: Mutex::new(BTreeMap::new()) }
+        PlanRegistry { rules, plans: Mutex::new(BTreeMap::new()), replans: AtomicU64::new(0) }
     }
 
     /// The cached plan for `(spec, variant)`, building it on first use.
@@ -211,6 +332,31 @@ impl PlanRegistry {
         let built = Arc::new(ExecutionPlan::build(spec, variant, &self.rules)?);
         let mut plans = self.plans.lock().unwrap();
         Ok(Arc::clone(plans.entry(key).or_insert(built)))
+    }
+
+    /// Rebuild `(spec, variant)` against a calibrated overlay and swap
+    /// the result into the cache, invalidating whatever was there.
+    /// Callers (the fleet router) decide *when* — typically when the
+    /// overlay's divergence from the model the cached plan was built
+    /// under crosses [`super::calibrate::REPLAN_DIVERGENCE`].
+    pub fn replan(
+        &self,
+        spec: &DeviceSpec,
+        variant: &str,
+        cal: &CalibratedProfile,
+    ) -> Result<Arc<ExecutionPlan>> {
+        let key = (spec.name.to_string(), variant.to_string());
+        // build outside the lock, same as plan()
+        let built = Arc::new(ExecutionPlan::build_cal(spec, variant, &self.rules, Some(cal))?);
+        self.plans.lock().unwrap().insert(key, Arc::clone(&built));
+        self.replans.fetch_add(1, Ordering::Relaxed);
+        Ok(built)
+    }
+
+    /// Calibration-triggered plan swaps performed over this registry's
+    /// lifetime.
+    pub fn replans(&self) -> u64 {
+        self.replans.load(Ordering::Relaxed)
     }
 
     /// Number of cached plans.

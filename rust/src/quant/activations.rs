@@ -1,0 +1,99 @@
+//! W8A8 activation quantization: per-tensor symmetric int8 scales for
+//! *activation* tensors, the runtime companion of the per-channel
+//! weight quantization in [`super`].
+//!
+//! Weights quantize offline per output channel; activations are only
+//! known at runtime, so they get a single per-tensor scale derived
+//! from a recorded absolute-maximum range.  The stub backend's outputs
+//! live in `[-0.5, 0.5)` by construction, so the testkit stamps every
+//! STUBHLO program with [`stub_activation_scale`]; a real deployment
+//! would record ranges during a calibration pass.  The planner turns
+//! the mode on per `(device, variant)` only where the calibrated cost
+//! model prices the bandwidth saving above the quant/dequant boundary
+//! cost ([`crate::delegate::w8a8_gain`]).
+
+/// Bytes per int8-quantized activation element — what the memory
+/// ledger charges for activation buffers under W8A8 (fp32 charges 4).
+pub const INT8_BYTES_PER_ELEM: usize = 1;
+
+/// Absolute-maximum range of stub-backend activations: every output
+/// element is in `[-0.5, 0.5)` by construction of the interpreter.
+pub const STUB_ACT_AMAX: f32 = 0.5;
+
+/// Per-tensor symmetric scale covering `[-amax, amax]` with int8.
+pub fn scale_for_amax(amax: f32) -> f32 {
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// The per-tensor scale the testkit writes into STUBHLO `aquant`
+/// lines.
+pub fn stub_activation_scale() -> f32 {
+    scale_for_amax(STUB_ACT_AMAX)
+}
+
+/// Worst-case round-trip error for values within the recorded range.
+pub fn tolerance(scale: f32) -> f32 {
+    scale * 0.5
+}
+
+/// Per-tensor symmetric int8 quantization.
+pub fn quantize_per_tensor(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8).collect()
+}
+
+pub fn dequantize_per_tensor(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_is_within_tolerance_for_in_range_values() {
+        let scale = stub_activation_scale();
+        let x: Vec<f32> = (0..256).map(|i| (i as f32 / 255.0) - 0.5).collect();
+        let dq = dequantize_per_tensor(&quantize_per_tensor(&x, scale), scale);
+        let tol = tolerance(scale);
+        for (a, b) in x.iter().zip(&dq) {
+            assert!((a - b).abs() <= tol + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_values_saturate_instead_of_wrapping() {
+        let scale = scale_for_amax(1.0);
+        let q = quantize_per_tensor(&[10.0, -10.0], scale);
+        assert_eq!(q, vec![127, -127]);
+    }
+
+    #[test]
+    fn zero_range_degrades_to_unit_scale() {
+        assert_eq!(scale_for_amax(0.0), 1.0);
+        assert_eq!(scale_for_amax(-1.0), 1.0);
+    }
+
+    #[test]
+    fn property_quantized_activations_never_overflow() {
+        crate::util::miniprop::forall("w8a8 bounds", 50, |g| {
+            let n = g.usize_in(1, 64);
+            let amax = g.f64_in(0.01, 10.0) as f32;
+            let x = g.f32_vec(n, amax);
+            let scale = scale_for_amax(amax);
+            let q = quantize_per_tensor(&x, scale);
+            assert!(q.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+            let dq = dequantize_per_tensor(&q, scale);
+            let tol = tolerance(scale);
+            for (a, b) in x.iter().zip(&dq) {
+                // in-range values round-trip within half a step;
+                // clamped ones stop at the range edge
+                let bound = if a.abs() <= amax { tol + 1e-6 } else { a.abs() - 127.0 * scale + tol };
+                assert!((a - b).abs() <= bound.max(tol + 1e-6), "{a} vs {b}");
+            }
+        });
+    }
+}

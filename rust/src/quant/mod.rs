@@ -2,8 +2,12 @@
 //! round-trips, structured pruning accounting, and the block-wise
 //! reconstruction-error metric.
 
+pub mod activations;
 pub mod weights;
 
+pub use activations::{
+    dequantize_per_tensor, quantize_per_tensor, scale_for_amax, stub_activation_scale,
+};
 pub use weights::{Payload, WeightFile, WeightTensor};
 
 /// Per-output-channel symmetric int8 quantization (the Rust mirror of

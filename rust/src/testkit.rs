@@ -137,12 +137,17 @@ pub fn write_fake_artifacts(dir: &Path, spec: &FakeArtifactSpec) -> Result<()> {
         },
     ];
 
+    // per-tensor activation range for W8A8: stub outputs live in
+    // [-0.5, 0.5), so one scale covers every component (a real
+    // exporter would record ranges during a calibration pass)
+    let aquant = crate::quant::stub_activation_scale();
+
     let mut comp_json = Vec::new();
     for comp in &comps {
         let hlo_file = format!("{}.hlo.txt", comp.name);
         std::fs::write(
             dir.join(&hlo_file),
-            format!("STUBHLO v1\n{}", comp.program),
+            format!("STUBHLO v1\n{}aquant {aquant}\n", comp.program),
         )
         .map_err(|e| Error::Io(format!("{hlo_file}: {e}")))?;
 

@@ -4,12 +4,19 @@
 //! * the raw pass pipeline never *decreases* delegation coverage;
 //! * the planner's cost-gated plan never decreases coverage **and**
 //!   never increases modeled latency (the gate enforces it per pass,
-//!   whatever the pipeline does on a given device class).
+//!   whatever the pipeline does on a given device class);
+//! * the calibration fit recovers any plausible true roofline from
+//!   roofline-exact dispatch observations;
+//! * the same never-worse contract holds under *any* calibrated
+//!   overlay, not just the shipped constants.
 
-use mobile_diffusion::delegate::RuleSet;
+use mobile_diffusion::delegate::{OpClass, RoofParams, RuleSet, GPU_ADRENO740};
 use mobile_diffusion::graph::builder::random_graph;
 use mobile_diffusion::passes;
-use mobile_diffusion::planner::{modeled_cost_s, plan_graph, registered_devices};
+use mobile_diffusion::planner::{
+    modeled_cost_cal, modeled_cost_s, plan_graph, plan_graph_cal, registered_devices,
+    CalibratedProfile, Calibrator, Observation,
+};
 use mobile_diffusion::util::miniprop::forall;
 use mobile_diffusion::util::rng::Rng;
 
@@ -60,6 +67,95 @@ fn planner_never_increases_modeled_latency_on_any_device() {
             assert!(
                 planned.cost_s <= cost_before + 1e-12,
                 "device {}: planned cost {} > {} (seed {seed:#x}, {n_ops} ops, passes {:?})",
+                spec.name,
+                planned.cost_s,
+                cost_before,
+                planned.passes_used
+            );
+        }
+    });
+}
+
+#[test]
+fn calibration_fit_recovers_any_plausible_true_roofline() {
+    // synthesize roofline-exact dispatch observations from a random
+    // "true" device triple and check the alternating fit walks from
+    // the shipped constants to the truth
+    forall("calibration fit converges", 30, |prop| {
+        let truth = RoofParams {
+            flops: prop.f64_in(1e10, 1e12),
+            bandwidth: prop.f64_in(1e9, 1e11),
+            dispatch: prop.f64_in(1e-6, 1e-4),
+        };
+        let mut cal = Calibrator::new(GPU_ADRENO740);
+        for i in 0..48 {
+            // alternate compute-bound, memory-bound and near-pure
+            // dispatch work, scaled to the truth so every parameter
+            // is identified whatever triple was drawn
+            let (flops, bytes) = match i % 3 {
+                0 => (truth.flops * 1e-3 * (1.0 + i as f64), 1.0),
+                1 => (1.0, truth.bandwidth * 1e-3 * (1.0 + i as f64)),
+                _ => (1.0, 1.0),
+            };
+            let seconds =
+                truth.dispatch + (flops / truth.flops).max(bytes / truth.bandwidth);
+            cal.record(Observation { class: OpClass::Matmul, flops, bytes, seconds });
+        }
+        let fitted = cal
+            .fit()
+            .fitted(OpClass::Matmul)
+            .expect("48 samples clear the per-class minimum");
+        assert!(
+            (fitted.flops - truth.flops).abs() / truth.flops < 0.05,
+            "flops: fitted {fitted:?} vs truth {truth:?}"
+        );
+        assert!(
+            (fitted.bandwidth - truth.bandwidth).abs() / truth.bandwidth < 0.05,
+            "bandwidth: fitted {fitted:?} vs truth {truth:?}"
+        );
+        assert!(
+            (fitted.dispatch - truth.dispatch).abs() / truth.dispatch < 0.10,
+            "dispatch: fitted {fitted:?} vs truth {truth:?}"
+        );
+    });
+}
+
+#[test]
+fn planner_never_worse_under_any_calibrated_overlay() {
+    // the never-worse contract must hold when the cost gate prices
+    // ops through an arbitrary calibrated overlay, not just the
+    // shipped constants — calibration can flip *which* passes pay
+    // off, never make the plan regress
+    let rules = RuleSet::default();
+    let registry = passes::PassRegistry::standard();
+    forall("calibrated plan never worse", 30, |prop| {
+        let seed = prop.seed();
+        let n_ops = prop.usize_in(5, 22);
+        let params = RoofParams {
+            flops: prop.f64_in(1e10, 2e12),
+            bandwidth: prop.f64_in(1e9, 1e11),
+            dispatch: prop.f64_in(1e-7, 1e-4),
+        };
+        let g = random_graph(&mut Rng::new(seed), n_ops);
+        for spec in registered_devices() {
+            let cal = CalibratedProfile::uniform(spec.delegate.clone(), params);
+            let cost_before = modeled_cost_cal(&g, &rules, &spec, Some(&cal));
+            let cov_before = rules.coverage(&g);
+            let planned = plan_graph_cal(&g, &rules, &spec, &registry, Some(&cal));
+            planned
+                .graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(
+                planned.coverage >= cov_before - 1e-12,
+                "device {}: calibrated coverage {} < {} (seed {seed:#x}, {params:?})",
+                spec.name,
+                planned.coverage,
+                cov_before
+            );
+            assert!(
+                planned.cost_s <= cost_before + 1e-12,
+                "device {}: calibrated cost {} > {} (seed {seed:#x}, {params:?}, passes {:?})",
                 spec.name,
                 planned.cost_s,
                 cost_before,

@@ -41,7 +41,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 const STUB_MSG: &str =
@@ -284,6 +284,14 @@ pub struct DeviceStats {
     injected_fatal: AtomicU64,
     injected_spikes: AtomicU64,
     faults: Mutex<Option<FaultState>>,
+    /// W8A8 activation quantization toggle: when set, programs that
+    /// declare an `aquant` scale round-trip their outputs through int8
+    /// (quantize -> dequantize at the graph boundary).  Off by default
+    /// — the planner enables it per client where the cost model says
+    /// the bandwidth saving pays.
+    activation_quant: AtomicBool,
+    /// dispatches whose outputs went through the int8 round-trip
+    quantized_dispatches: AtomicU64,
 }
 
 impl DeviceStats {
@@ -334,6 +342,22 @@ impl DeviceStats {
     fn record_execution(&self, name: &str, rows: u64) {
         *self.executions.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
         *self.rows.lock().unwrap().entry(name.to_string()).or_insert(0) += rows;
+    }
+
+    /// Enable or disable W8A8 activation quantization on this client.
+    /// Only programs carrying an `aquant` scale are affected.
+    pub fn set_activation_quant(&self, on: bool) {
+        self.activation_quant.store(on, Ordering::Relaxed);
+    }
+
+    /// Current W8A8 toggle state.
+    pub fn activation_quant(&self) -> bool {
+        self.activation_quant.load(Ordering::Relaxed)
+    }
+
+    /// Dispatches whose outputs were int8 round-tripped.
+    pub fn quantized_dispatches(&self) -> u64 {
+        self.quantized_dispatches.load(Ordering::Relaxed)
     }
 
     /// Install (or clear, with `None`) the client's fault schedule.
@@ -778,6 +802,11 @@ struct Program {
     nweights: usize,
     seed: u64,
     out: OutSpec,
+    /// per-tensor symmetric int8 scale for W8A8 activation
+    /// quantization: when the client toggle is on, outputs are rounded
+    /// to `scale`-sized steps (quantize to int8, dequantize at the
+    /// boundary).  None = the program never quantizes.
+    aquant: Option<f32>,
 }
 
 impl Program {
@@ -792,6 +821,7 @@ impl Program {
         let mut nweights = None;
         let mut seed = 0u64;
         let mut out = None;
+        let mut aquant = None;
         for line in lines {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -825,6 +855,14 @@ impl Program {
                         _ => return Err(bad()),
                     })
                 }
+                "aquant" => {
+                    let s: f32 =
+                        tok.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+                    if !(s.is_finite() && s > 0.0) {
+                        return Err(bad());
+                    }
+                    aquant = Some(s);
+                }
                 _ => return Err(bad()),
             }
         }
@@ -834,6 +872,7 @@ impl Program {
             nweights: nweights.ok_or_else(|| Error::new("STUBHLO: missing nweights"))?,
             seed,
             out: out.ok_or_else(|| Error::new("STUBHLO: missing out"))?,
+            aquant,
         })
     }
 }
@@ -960,6 +999,14 @@ impl PjRtLoadedExecutable {
             }
         };
 
+        // fp32 digests above are untouched by quantization: the int8
+        // round-trip happens at the graph *output* boundary, after the
+        // deterministic function of weights and activations.
+        let quant = match p.aquant {
+            Some(s) if self.stats.activation_quant() => Some(s),
+            _ => None,
+        };
+
         let mut out = vec![0f32; rows * rowlen];
         for r in 0..rows {
             let mut rd = FNV_OFFSET;
@@ -980,6 +1027,13 @@ impl PjRtLoadedExecutable {
             for (j, slot) in row.iter_mut().enumerate() {
                 *slot = unit(fin(base ^ (j as u64).wrapping_mul(GOLDEN)));
             }
+        }
+
+        if let Some(s) = quant {
+            for v in &mut out {
+                *v = (*v / s).round().clamp(-127.0, 127.0) * s;
+            }
+            self.stats.quantized_dispatches.fetch_add(1, Ordering::Relaxed);
         }
 
         self.stats.record_execution(&p.name, rows as u64);
@@ -1119,6 +1173,65 @@ mod tests {
         assert_ne!(a, run(0.2, 1.0), "weights matter");
         assert_ne!(a, run(0.1, 2.0), "inputs matter");
         assert!(a.iter().all(|v| (-0.5..=0.5).contains(v)));
+    }
+
+    #[test]
+    fn activation_quant_round_trips_outputs_within_half_a_step() {
+        let quant_program = || {
+            Program::parse(
+                "STUBHLO v1\nname unet\nmode rowwise\nnweights 1\nseed 7\n\
+                 out like 0\naquant 0.00390625\n",
+            )
+            .unwrap()
+        };
+        let scale = 0.00390625f32;
+        let run = |c: &PjRtClient, p: Program| -> Vec<f32> {
+            let e = exe(c, p);
+            let w = c.buffer_from_host_buffer::<f32>(&[0.5; 4], &[4], None).unwrap();
+            let l = c
+                .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0, 4.0], &[2, 2], None)
+                .unwrap();
+            let t = c.buffer_from_host_buffer::<f32>(&[9.0, 9.0], &[2], None).unwrap();
+            e.execute_b(&[&w, &l, &t]).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap()
+                .to_tuple()
+                .unwrap()[0]
+                .to_vec::<f32>()
+                .unwrap()
+        };
+
+        // toggle off: an aquant program runs full precision
+        let c = client();
+        let full = run(&c, quant_program());
+        assert_eq!(full, run(&c, unet_program()), "off = bit-identical to fp32");
+        assert_eq!(c.stats().quantized_dispatches(), 0);
+
+        // toggle on: outputs snap to the int8 grid, within scale/2
+        c.stats().set_activation_quant(true);
+        assert!(c.stats().activation_quant());
+        let q = run(&c, quant_program());
+        assert_ne!(full, q, "quantization changed the bits");
+        for (a, b) in full.iter().zip(&q) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-7, "{a} vs {b}");
+            let steps = b / scale;
+            assert!((steps - steps.round()).abs() < 1e-3, "on the grid: {b}");
+        }
+        assert_eq!(c.stats().quantized_dispatches(), 1);
+
+        // programs without a scale are untouched even when toggled on
+        assert_eq!(run(&c, unet_program()), full);
+        assert_eq!(c.stats().quantized_dispatches(), 1);
+
+        // bad scales fail to parse
+        assert!(Program::parse(
+            "STUBHLO v1\nname x\nmode whole\nnweights 0\nout elems 1\naquant 0\n"
+        )
+        .is_err());
+        assert!(Program::parse(
+            "STUBHLO v1\nname x\nmode whole\nnweights 0\nout elems 1\naquant nah\n"
+        )
+        .is_err());
     }
 
     #[test]
