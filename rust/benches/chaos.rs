@@ -7,7 +7,10 @@
 //! * **faulted** — three fixed fault seeds, each a schedule of one
 //!   guaranteed transient dispatch fault per worker device plus seeded
 //!   random transients and latency spikes; workers absorb them through
-//!   checkpoint retry and supervision.
+//!   checkpoint retry and supervision;
+//! * **oom-heavy** — a schedule of guaranteed device-OOM dispatch
+//!   faults: workers climb the memory-pressure degradation ladder and
+//!   requeue the affected rows *degraded*, never verbatim.
 //!
 //! The claim is the *shape*: under faults every request still resolves
 //! exactly once (ok + failed == submitted), goodput stays positive,
@@ -25,6 +28,9 @@ use mobile_diffusion::coordinator::Server;
 use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
 
 const FAULT_SEEDS: [u64; 3] = [7, 19, 1234];
+/// Seed for the OOM-heavy schedule (the seed only drives the random
+/// transient stream; the OOMs themselves are scheduled, not drawn).
+const OOM_SEED: u64 = 77;
 
 struct RunStats {
     ok: usize,
@@ -35,6 +41,8 @@ struct RunStats {
     injected_transient: u64,
     retries: usize,
     worker_restarts: usize,
+    ooms: usize,
+    degraded_retries: usize,
 }
 
 fn quantile(sorted: &[f64], q: f64) -> f64 {
@@ -84,8 +92,10 @@ fn run(cfg: &AppConfig, n: usize, expect_faults: bool) -> RunStats {
             std::thread::sleep(Duration::from_millis(5));
         }
     }
-    let (injected_transient, retries, worker_restarts) =
-        server.with_metrics(|m| (m.injected_transient, m.retries, m.worker_restarts));
+    let (injected_transient, retries, worker_restarts, ooms, degraded_retries) = server
+        .with_metrics(|m| {
+            (m.injected_transient, m.retries, m.worker_restarts, m.ooms, m.degraded_retries)
+        });
 
     RunStats {
         ok,
@@ -96,6 +106,8 @@ fn run(cfg: &AppConfig, n: usize, expect_faults: bool) -> RunStats {
         injected_transient,
         retries,
         worker_restarts,
+        ooms,
+        degraded_retries,
     }
 }
 
@@ -155,6 +167,27 @@ fn main() {
         faulted.push((seed, stats));
     }
 
+    // OOM-heavy schedule: guaranteed device-OOM dispatch faults per
+    // worker device.  Injected OOMs land in `injected_fatal`/`ooms`,
+    // not `injected_transient`, so the transient wait loop is skipped
+    // (OOMs are counted in the worker loop before the terminal reply).
+    let mut ocfg = cfg.clone();
+    ocfg.fault_seed = Some(OOM_SEED);
+    ocfg.fault_spec = Some("dispatch:3:oom,dispatch:11:oom".into());
+    let oom = run(&ocfg, n, false);
+    println!(
+        "{:>14} {:>10.1} req/s   p50 {:>7.1} ms   p95 {:>7.1} ms   {} ok, {} failed, \
+         {} ooms, {} degraded retries",
+        "oom-heavy",
+        oom.goodput_rps,
+        oom.p50_s * 1e3,
+        oom.p95_s * 1e3,
+        oom.ok,
+        oom.failed,
+        oom.ooms,
+        oom.degraded_retries,
+    );
+
     let faulted_json: Vec<String> = faulted
         .iter()
         .map(|(seed, s)| {
@@ -164,7 +197,8 @@ fn main() {
                     "\"p50_s\": {p50:.6}, \"p95_s\": {p95:.6}, ",
                     "\"ok\": {ok}, \"failed\": {failed}, ",
                     "\"injected_transient\": {inj}, \"retries\": {ret}, ",
-                    "\"worker_restarts\": {restarts}}}"
+                    "\"worker_restarts\": {restarts}, ",
+                    "\"ooms\": {ooms}, \"degraded_retries\": {deg}}}"
                 ),
                 seed = seed,
                 gp = s.goodput_rps,
@@ -175,6 +209,8 @@ fn main() {
                 inj = s.injected_transient,
                 ret = s.retries,
                 restarts = s.worker_restarts,
+                ooms = s.ooms,
+                deg = s.degraded_retries,
             )
         })
         .collect();
@@ -186,7 +222,12 @@ fn main() {
             "\"requests\": {n},\n",
             "\"baseline\": {{\"goodput_rps\": {bgp:.3}, \"p50_s\": {bp50:.6}, ",
             "\"p95_s\": {bp95:.6}, \"ok\": {bok}}},\n",
-            "\"faulted\": [\n{fj}\n]\n",
+            "\"faulted\": [\n{fj}\n],\n",
+            "\"oom_heavy\": {{\"seed\": {oseed}, \"goodput_rps\": {ogp:.3}, ",
+            "\"p50_s\": {op50:.6}, \"p95_s\": {op95:.6}, ",
+            "\"ok\": {ook}, \"failed\": {ofailed}, ",
+            "\"ooms\": {ooms}, \"degraded_retries\": {odeg}, ",
+            "\"retries\": {oret}}}\n",
             "}}\n"
         ),
         fast = fast,
@@ -196,6 +237,15 @@ fn main() {
         bp95 = baseline.p95_s,
         bok = baseline.ok,
         fj = faulted_json.join(",\n"),
+        oseed = OOM_SEED,
+        ogp = oom.goodput_rps,
+        op50 = oom.p50_s,
+        op95 = oom.p95_s,
+        ook = oom.ok,
+        ofailed = oom.failed,
+        ooms = oom.ooms,
+        odeg = oom.degraded_retries,
+        oret = oom.retries,
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_chaos.json");
     if let Err(e) = std::fs::write(&out, &json) {
@@ -224,5 +274,20 @@ fn main() {
             eprintln!("FAIL: seed {seed}: zero goodput under faults");
             std::process::exit(1);
         }
+    }
+    if oom.ok + oom.failed != n {
+        eprintln!(
+            "FAIL: oom-heavy: {} ok + {} failed != {n} submitted (lost or duplicated)",
+            oom.ok, oom.failed
+        );
+        std::process::exit(1);
+    }
+    if oom.ooms == 0 {
+        eprintln!("FAIL: oom-heavy: the fault schedule injected no device OOMs");
+        std::process::exit(1);
+    }
+    if oom.goodput_rps <= 0.0 {
+        eprintln!("FAIL: oom-heavy: zero goodput under memory pressure");
+        std::process::exit(1);
     }
 }

@@ -1,0 +1,254 @@
+//! Serving behaviour under device memory pressure on the stub
+//! backend.  Emits `BENCH_pressure.json` (repo root).
+//!
+//! Two runs over the same synthetic artifacts and request mix:
+//!
+//! * **uncapped** — capacity mode off, the reference goodput;
+//! * **capped** — `--device-mem` calibrated *between* a 1-wide and a
+//!   4-wide working set, so multi-row sessions OOM organically and the
+//!   workers climb the degradation ladder (shrink seats, shed the warm
+//!   tier, W8A8 under the learned budget) instead of retrying verbatim.
+//!
+//! The claim is the *shape*: under a capacity cap every request still
+//! resolves exactly once via degraded retries, the OOM/degraded
+//! counters surface, and the governor walks away with a learned
+//! effective budget at or below the shipped one.  Absolute numbers are
+//! synthetic (stub backend).
+//!
+//!     cargo bench --bench pressure            # full workload
+//!     cargo bench --bench pressure -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::time::Instant;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::Server;
+use mobile_diffusion::pipeline::{BatchRequest, ExecOptions, PipelinedExecutor};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
+
+struct RunStats {
+    ok: usize,
+    failed: usize,
+    goodput_rps: f64,
+    p50_s: f64,
+    p95_s: f64,
+    ooms: usize,
+    degraded_retries: usize,
+    shipped_budget: usize,
+    effective_budget: usize,
+    level: u8,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Measure the device-byte peak of a `width`-wide fault-free batch on
+/// a fresh uncapped executor — the calibration for the capacity cap.
+fn measured_peak(dir: &Path, width: usize) -> u64 {
+    let m = Manifest::load(dir).unwrap();
+    let mut ex =
+        PipelinedExecutor::new(m, ExecOptions { num_steps: 4, ..Default::default() }).unwrap();
+    let batch: Vec<BatchRequest> =
+        (0..width).map(|i| BatchRequest::new(&format!("prompt {i}"), i as u64)).collect();
+    for r in ex.generate_batch(&batch, "mobile") {
+        r.unwrap();
+    }
+    ex.engine.device_stats().mem_peak()
+}
+
+/// Serve `n` requests, one receiver thread per request, and fold in
+/// the pool metrics plus the governor's learned budget.
+fn run(cfg: &AppConfig, n: usize) -> RunStats {
+    let mut server = Server::start(cfg).unwrap();
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let rx = server.submit(&format!("prompt {i}"), i as u64).unwrap();
+            (rx, Instant::now())
+        })
+        .collect();
+    let handles: Vec<_> = receivers
+        .into_iter()
+        .map(|(rx, submitted)| {
+            std::thread::spawn(move || {
+                let reply = rx.recv().expect("every request gets a terminal reply");
+                let latency_s = submitted.elapsed().as_secs_f64();
+                assert!(rx.recv().is_err(), "a request must never resolve twice");
+                (reply.is_ok(), latency_s)
+            })
+        })
+        .collect();
+    let outcomes: Vec<(bool, f64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let ok = outcomes.iter().filter(|(o, _)| *o).count();
+    let failed = outcomes.len() - ok;
+    let mut lat: Vec<f64> = outcomes.iter().map(|(_, l)| *l).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+
+    let (ooms, degraded_retries) = server.with_metrics(|m| (m.ooms, m.degraded_retries));
+    let gov = server.pressure();
+    RunStats {
+        ok,
+        failed,
+        goodput_rps: ok as f64 / wall_s.max(1e-12),
+        p50_s: quantile(&lat, 0.50),
+        p95_s: quantile(&lat, 0.95),
+        ooms,
+        degraded_retries,
+        shipped_budget: gov.shipped_budget(0),
+        effective_budget: gov.effective_budget(0),
+        level: gov.level(0),
+    }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast") || std::env::var("PRESSURE_FAST").is_ok();
+    let n = if fast { 8 } else { 24 };
+    let spec = FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    };
+    let dir = fake_artifacts_dir("bench_pressure", &spec).unwrap();
+
+    let peak1 = measured_peak(&dir, 1);
+    let peak4 = measured_peak(&dir, 4);
+    // one row fits with margin; two or more rows exceed the cap
+    let cap = peak1 + (peak4 - peak1) / 4;
+
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 4;
+    cfg.num_workers = 1;
+    cfg.max_batch = 4;
+    cfg.retry_backoff_ms = 1;
+    cfg.retry_limit = 4;
+    // a finite planner budget gives the governor a shipped byte figure
+    cfg.memory_budget_mb = 64.0;
+
+    println!(
+        "== serving under device memory pressure (stub backend{}) ==",
+        if fast { ", fast mode" } else { "" }
+    );
+    println!(
+        "   {n} requests, 4 steps, 1 worker, seat cap 4; device cap {cap} B \
+         (1-wide peak {peak1} B, 4-wide peak {peak4} B)\n"
+    );
+
+    let uncapped = run(&cfg, n);
+    println!(
+        "{:>10} {:>10.1} req/s   p50 {:>7.1} ms   p95 {:>7.1} ms   {} ok",
+        "uncapped",
+        uncapped.goodput_rps,
+        uncapped.p50_s * 1e3,
+        uncapped.p95_s * 1e3,
+        uncapped.ok,
+    );
+
+    let mut ccfg = cfg.clone();
+    ccfg.device_mem_mb = Some(cap as f64 / 1e6);
+    let capped = run(&ccfg, n);
+    println!(
+        "{:>10} {:>10.1} req/s   p50 {:>7.1} ms   p95 {:>7.1} ms   {} ok, {} failed, \
+         {} ooms, {} degraded retries, budget {} -> {} B (rung {})",
+        "capped",
+        capped.goodput_rps,
+        capped.p50_s * 1e3,
+        capped.p95_s * 1e3,
+        capped.ok,
+        capped.failed,
+        capped.ooms,
+        capped.degraded_retries,
+        capped.shipped_budget,
+        capped.effective_budget,
+        capped.level,
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "\"backend\": \"xla-stub\",\n",
+            "\"fast\": {fast},\n",
+            "\"requests\": {n},\n",
+            "\"device_cap_bytes\": {cap},\n",
+            "\"peak1_bytes\": {peak1},\n",
+            "\"peak4_bytes\": {peak4},\n",
+            "\"uncapped\": {{\"goodput_rps\": {ugp:.3}, \"p50_s\": {up50:.6}, ",
+            "\"p95_s\": {up95:.6}, \"ok\": {uok}}},\n",
+            "\"capped\": {{\"goodput_rps\": {cgp:.3}, \"p50_s\": {cp50:.6}, ",
+            "\"p95_s\": {cp95:.6}, \"ok\": {cok}, \"failed\": {cfailed}, ",
+            "\"ooms\": {cooms}, \"degraded_retries\": {cdeg}, ",
+            "\"shipped_budget\": {cship}, \"effective_budget\": {ceff}, ",
+            "\"level\": {clevel}}}\n",
+            "}}\n"
+        ),
+        fast = fast,
+        n = n,
+        cap = cap,
+        peak1 = peak1,
+        peak4 = peak4,
+        ugp = uncapped.goodput_rps,
+        up50 = uncapped.p50_s,
+        up95 = uncapped.p95_s,
+        uok = uncapped.ok,
+        cgp = capped.goodput_rps,
+        cp50 = capped.p50_s,
+        cp95 = capped.p95_s,
+        cok = capped.ok,
+        cfailed = capped.failed,
+        cooms = capped.ooms,
+        cdeg = capped.degraded_retries,
+        cship = capped.shipped_budget,
+        ceff = capped.effective_budget,
+        clevel = capped.level,
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_pressure.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("\nwrote {}", out.display());
+
+    if uncapped.ok != n || uncapped.failed != 0 {
+        eprintln!("FAIL: uncapped run lost requests ({} ok of {n})", uncapped.ok);
+        std::process::exit(1);
+    }
+    if uncapped.ooms != 0 {
+        eprintln!("FAIL: uncapped run hit {} OOMs with capacity mode off", uncapped.ooms);
+        std::process::exit(1);
+    }
+    if capped.ok != n {
+        eprintln!(
+            "FAIL: capped: {} ok + {} failed of {n} — degraded retries must absorb the cap",
+            capped.ok, capped.failed
+        );
+        std::process::exit(1);
+    }
+    if capped.ooms == 0 {
+        eprintln!("FAIL: capped: the capacity cap never bit (calibration off?)");
+        std::process::exit(1);
+    }
+    if capped.degraded_retries == 0 {
+        eprintln!("FAIL: capped: OOM'd rows were not retried degraded");
+        std::process::exit(1);
+    }
+    if capped.effective_budget > capped.shipped_budget {
+        eprintln!(
+            "FAIL: capped: learned budget {} exceeds shipped {}",
+            capped.effective_budget, capped.shipped_budget
+        );
+        std::process::exit(1);
+    }
+    if capped.goodput_rps <= 0.0 {
+        eprintln!("FAIL: capped: zero goodput under memory pressure");
+        std::process::exit(1);
+    }
+}

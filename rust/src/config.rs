@@ -64,6 +64,13 @@ pub struct AppConfig {
     /// predicted-vs-actual metric windows; also caps the
     /// measured-overhead trust threshold
     pub calib_window: usize,
+    /// capacity-accounted device memory in MB: the stub charges live
+    /// buffer bytes against this cap and fails allocations beyond it
+    /// with a real OOM (None = unlimited, the default).  Distinct from
+    /// `memory_budget_mb`, which is the *planner's* residency budget —
+    /// setting this below the working set is how OOM recovery is
+    /// exercised end-to-end
+    pub device_mem_mb: Option<f64>,
 }
 
 impl Default for AppConfig {
@@ -93,6 +100,7 @@ impl Default for AppConfig {
             breaker_threshold: 3,
             breaker_cooldown_ms: 1000,
             calib_window: crate::planner::calibrate::DEFAULT_CALIB_WINDOW,
+            device_mem_mb: None,
         }
     }
 }
@@ -190,6 +198,9 @@ impl AppConfig {
         }
         if let Some(v) = j.get("calib_window").as_usize() {
             self.calib_window = v;
+        }
+        if let Some(v) = j.get("device_mem_mb").as_f64() {
+            self.device_mem_mb = Some(v);
         }
     }
 
@@ -296,6 +307,13 @@ impl AppConfig {
                         .parse()
                         .map_err(|e| Error::Config(format!("--calib-window: {e}")))?;
                 }
+                "--device-mem" => {
+                    self.device_mem_mb = Some(
+                        take(&mut i)?
+                            .parse()
+                            .map_err(|e| Error::Config(format!("--device-mem: {e}")))?,
+                    );
+                }
                 other => {
                     return Err(Error::Config(format!("unknown flag {other}")));
                 }
@@ -334,6 +352,13 @@ impl AppConfig {
                 "--fault-rate must be in [0, 1], got {}",
                 self.fault_rate
             )));
+        }
+        if let Some(mb) = self.device_mem_mb {
+            if mb.is_nan() || mb <= 0.0 {
+                return Err(Error::Config(format!(
+                    "--device-mem must be positive MB, got {mb}"
+                )));
+            }
         }
         Ok(())
     }
@@ -504,6 +529,26 @@ mod tests {
         assert!(c.apply_args(&args(&["--calib-window", "0"])).is_err(), "zero window");
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--calib-window", "x"])).is_err(), "bad value");
+    }
+
+    #[test]
+    fn device_mem_flag_json_and_validation() {
+        let mut c = AppConfig::default();
+        assert!(c.device_mem_mb.is_none(), "unlimited device memory by default");
+        c.apply_args(&args(&["--device-mem", "48"])).unwrap();
+        assert_eq!(c.device_mem_mb, Some(48.0));
+
+        let mut c = AppConfig::default();
+        let j = Json::parse(r#"{"device_mem_mb": 12.5}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.device_mem_mb, Some(12.5));
+
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--device-mem", "0"])).is_err(), "zero cap");
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--device-mem", "-4"])).is_err(), "negative cap");
+        let mut c = AppConfig::default();
+        assert!(c.apply_args(&args(&["--device-mem", "tiny"])).is_err(), "bad value");
     }
 
     #[test]

@@ -270,6 +270,12 @@ pub struct PoolMetrics {
     pub retries: usize,
     /// requests failed because their retry budget was spent
     pub retries_exhausted: usize,
+    /// device OOMs observed by workers; each climbs the class's
+    /// memory-pressure ladder (see `coordinator::pressure`)
+    pub ooms: usize,
+    /// requests requeued *degraded* after an OOM — the pool never
+    /// retries OOM'd work on an unchanged plan
+    pub degraded_retries: usize,
     /// worker executors rebuilt after a panic or device loss
     pub worker_restarts: usize,
     /// requests refused because every device class was quarantined
@@ -341,6 +347,8 @@ impl PoolMetrics {
             injected_spikes: 0,
             retries: 0,
             retries_exhausted: 0,
+            ooms: 0,
+            degraded_retries: 0,
             worker_restarts: 0,
             shed: 0,
             reply_orphaned: 0,
@@ -524,6 +532,16 @@ impl PoolMetrics {
         self.retries_exhausted += 1;
     }
 
+    /// One device OOM observed (capacity or injected).
+    pub fn record_oom(&mut self) {
+        self.ooms += 1;
+    }
+
+    /// One request requeued degraded after an OOM.
+    pub fn record_degraded_retry(&mut self) {
+        self.degraded_retries += 1;
+    }
+
     /// One worker executor rebuilt after a panic or device loss.
     pub fn record_worker_restart(&mut self) {
         self.worker_restarts += 1;
@@ -552,6 +570,8 @@ impl PoolMetrics {
             || self.injected_spikes > 0
             || self.retries > 0
             || self.retries_exhausted > 0
+            || self.ooms > 0
+            || self.degraded_retries > 0
             || self.worker_restarts > 0
             || self.shed > 0
             || self.reply_orphaned > 0
@@ -636,13 +656,16 @@ impl PoolMetrics {
         if self.faults_observed() {
             out.push_str(&format!(
                 "faults: {} injected transient, {} injected fatal, {} spikes; \
-                 {} retries, {} exhausted, {} worker restarts, {} shed, \
+                 {} retries, {} exhausted, {} ooms, {} degraded retries, \
+                 {} worker restarts, {} shed, \
                  {} orphaned replies, {} dropped replies\n",
                 self.injected_transient,
                 self.injected_fatal,
                 self.injected_spikes,
                 self.retries,
                 self.retries_exhausted,
+                self.ooms,
+                self.degraded_retries,
                 self.worker_restarts,
                 self.shed,
                 self.reply_orphaned,
@@ -934,6 +957,8 @@ mod tests {
         p.record_retry();
         p.record_retry();
         p.record_retries_exhausted();
+        p.record_oom();
+        p.record_degraded_retry();
         p.record_worker_restart();
         p.record_shed();
         p.record_reply_orphaned();
@@ -943,6 +968,8 @@ mod tests {
         assert_eq!(p.injected_spikes, 2);
         assert_eq!(p.retries, 2);
         assert_eq!(p.retries_exhausted, 1);
+        assert_eq!(p.ooms, 1);
+        assert_eq!(p.degraded_retries, 1);
         assert_eq!(p.worker_restarts, 1);
         assert_eq!(p.shed, 1);
         assert_eq!(p.reply_orphaned, 1);
@@ -950,8 +977,19 @@ mod tests {
 
         let report = p.report(0, 0);
         assert!(report.contains("faults: 4 injected transient"), "{report}");
-        assert!(report.contains("2 retries, 1 exhausted, 1 worker restarts"), "{report}");
-        assert!(report.contains("1 shed"), "{report}");
+        assert!(
+            report.contains("2 retries, 1 exhausted, 1 ooms, 1 degraded retries"),
+            "{report}"
+        );
+        assert!(report.contains("1 worker restarts, 1 shed"), "{report}");
+    }
+
+    #[test]
+    fn an_oom_alone_surfaces_the_fault_line() {
+        let mut p = PoolMetrics::new(1);
+        p.record_oom();
+        let report = p.report(0, 0);
+        assert!(report.contains("1 ooms, 0 degraded retries"), "{report}");
     }
 
     #[test]

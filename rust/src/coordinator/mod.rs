@@ -4,13 +4,16 @@
 //! heterogeneous via [`crate::planner::FleetSpec`]; panics and device
 //! loss rebuild the worker, transient faults retry from checkpoints),
 //! the per-device-class circuit breakers behind degrading admission
-//! ([`breaker`]), the fleet metrics ([`metrics`], including
+//! ([`breaker`]), the memory-pressure governor whose learned budgets
+//! cap admission after OOM ([`pressure`]), the fleet metrics
+//! ([`metrics`], including
 //! per-device-class predicted-vs-actual latency and fault counters),
 //! and the front-door [`Server`] whose admission consults the planner.
 
 pub mod breaker;
 pub mod metrics;
 pub mod pool;
+pub mod pressure;
 pub mod queue;
 pub mod request;
 pub mod server;
@@ -20,6 +23,7 @@ pub use metrics::{ClassMetrics, Metrics, PoolMetrics, SampleWindow, WorkerStats}
 pub use pool::{
     ReplySlot, ResponseReceiver, SupervisionOptions, WorkItem, WorkerExecutor, WorkerPool,
 };
+pub use pressure::{PressureGovernor, PressureOptions};
 pub use queue::{AdmissionError, Job, JobQueue, PeekInfo, Priority};
 pub use request::{GenerateRequest, GenerateResponse, SubmitOptions};
 pub use server::Server;

@@ -52,6 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::breaker::CircuitBreaker;
 use crate::coordinator::metrics::PoolMetrics;
+use crate::coordinator::pressure::PressureGovernor;
 use crate::coordinator::queue::{AdmissionError, Job, JobQueue, Priority};
 use crate::coordinator::request::{GenerateRequest, GenerateResponse};
 use crate::error::{Error, Result};
@@ -96,10 +97,38 @@ pub trait WorkerExecutor {
             })
             .collect();
         let results = self.execute_batch(&reqs);
+        let mut oom: Option<Error> = None;
         for (job, result) in jobs.into_iter().zip(results) {
-            control.complete(job.token, result);
+            match result {
+                Err(e) if e.is_oom() => {
+                    // hold the row back (it stays tracked in the
+                    // control's metadata) and surface the OOM as the
+                    // session outcome, so the worker loop degrades the
+                    // executor before the row runs again — an OOM'd
+                    // plan is never retried verbatim
+                    oom = Some(e);
+                }
+                other => control.complete(job.token, other),
+            }
         }
-        Ok(())
+        match oom {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Step down one rung of the memory-degradation ladder after a
+    /// device OOM.  `level` is the class's new ladder rung (1-based)
+    /// and `effective_budget` the governor's learned byte budget.
+    /// Return `Some(description)` when the executor actually changed
+    /// something (shrunk batches, shed residency, re-planned under the
+    /// reduced budget) — the pool only requeues OOM'd work after a
+    /// *changed* plan; a `None` (the default: mocks, executors with
+    /// nothing left to give up) fails the work instead of retrying a
+    /// plan that just proved too big.
+    fn degrade(&mut self, level: u8, effective_budget: usize) -> Option<String> {
+        let _ = (level, effective_budget);
+        None
     }
 
     /// Cumulative injected-fault counters from the executor's device
@@ -130,6 +159,11 @@ pub struct SupervisionOptions {
     /// per-class breaker fed by faults and restarts; `None` disables
     /// degrading admission (the pool still retries and restarts)
     pub breaker: Option<Arc<CircuitBreaker>>,
+    /// per-class memory-pressure governor: OOMs climb its degradation
+    /// ladder (shrinking seat caps and learned budgets) and sustained
+    /// success re-probes upward; `None` means an OOM fails the request
+    /// after the executor's one-shot [`WorkerExecutor::degrade`]
+    pub pressure: Option<Arc<PressureGovernor>>,
     /// bound on the per-class metric sample windows (`--calib-window`);
     /// also caps the measured-overhead trust threshold
     pub metrics_window: usize,
@@ -143,6 +177,7 @@ impl Default for SupervisionOptions {
             retry_backoff_cap: Duration::from_millis(400),
             max_restarts: 3,
             breaker: None,
+            pressure: None,
             metrics_window: crate::coordinator::metrics::MAX_SAMPLES,
         }
     }
@@ -715,8 +750,16 @@ fn worker_loop<E: WorkerExecutor>(
         // executor re-checks and re-groups defensively).  The timeout
         // re-scans because a parked retry becomes eligible with no
         // push to wake the condvar.
+        //
+        // under memory pressure the governor's ladder rung halves the
+        // seat cap per level (recomputed every dequeue, so the cap
+        // recovers as the rung decays)
+        let seats = opts
+            .pressure
+            .as_ref()
+            .map_or(max_batch, |g| (max_batch >> g.level(class_idx).min(6)).max(1));
         let jobs = match queue.pop_batch_where_timeout(
-            max_batch,
+            seats,
             |it: &WorkItem| it.class == class_idx && it.ready(),
             |it: &WorkItem| it.req.variant.clone(),
             RETRY_POLL,
@@ -784,6 +827,10 @@ fn worker_loop<E: WorkerExecutor>(
         }
 
         let mut device_lost = false;
+        // one OOM event per batch climbs the ladder once, however many
+        // rows it faulted; `Some(desc)` remembers whether the executor
+        // actually degraded (the gate on requeueing OOM'd rows)
+        let mut oom_state: Option<Option<String>> = None;
         for ((req, mut m), result) in reqs.into_iter().zip(meta).zip(results) {
             match result {
                 Ok(r) => {
@@ -832,6 +879,9 @@ fn worker_loop<E: WorkerExecutor>(
                     if let Some(b) = &opts.breaker {
                         b.record_success(class_idx);
                     }
+                    if let Some(g) = &opts.pressure {
+                        g.on_success(class_idx);
+                    }
                     m.reply.send(Ok(GenerateResponse {
                         id: req.id,
                         image: r.image,
@@ -844,6 +894,74 @@ fn worker_loop<E: WorkerExecutor>(
                         device_class: class_name.to_string(),
                         predicted_s: m.predicted_s,
                     }));
+                }
+                Err(e) if e.is_oom() => {
+                    // out of device memory: never retried verbatim.
+                    // The first OOM'd row of the batch climbs the
+                    // class's pressure ladder and asks the executor to
+                    // degrade; rows are requeued only when the
+                    // executor changed something, so the retry runs a
+                    // *different* plan than the one that just OOM'd.
+                    if let Some(b) = &opts.breaker {
+                        b.record_fault(class_idx);
+                    }
+                    if oom_state.is_none() {
+                        metrics.lock().unwrap().record_oom();
+                        let (level, effective) = match &opts.pressure {
+                            Some(g) => {
+                                let level = g.on_oom(class_idx);
+                                (level, g.effective_budget(class_idx))
+                            }
+                            None => (1, usize::MAX),
+                        };
+                        oom_state = Some(executor.degrade(level, effective));
+                    }
+                    let degraded = oom_state.as_ref().and_then(|d| d.as_ref());
+                    if degraded.is_some() && m.attempts < opts.retry_limit {
+                        let attempts = m.attempts + 1;
+                        {
+                            let mut mm = metrics.lock().unwrap();
+                            mm.record_retry();
+                            mm.record_degraded_retry();
+                        }
+                        if let Some(g) = &opts.pressure {
+                            g.record_degraded(class_idx);
+                        }
+                        let delay = backoff_delay(opts, attempts);
+                        let item = WorkItem {
+                            req,
+                            reply: m.reply,
+                            class: class_idx,
+                            predicted_s: m.predicted_s,
+                            resume: None,
+                            attempts,
+                            not_before: Some(Instant::now() + delay),
+                        };
+                        if let Err((mut item, qe)) = queue.try_push(item, m.priority, m.deadline)
+                        {
+                            item.reply.send(Err(Error::Queue(format!(
+                                "request {} could not requeue after a device OOM: {qe}",
+                                item.req.id
+                            ))));
+                        }
+                    } else {
+                        let why = if degraded.is_some() {
+                            "retry budget spent"
+                        } else {
+                            "no degradation left"
+                        };
+                        let mut mm = metrics.lock().unwrap();
+                        if m.attempts >= opts.retry_limit {
+                            mm.record_retries_exhausted();
+                        }
+                        mm.record_batch_member(wid, m.queue_s, wall_s, even_share_s, None);
+                        drop(mm);
+                        m.reply.send(Err(Error::Runtime(format!(
+                            "request {} out of device memory ({why}, {} attempts): {e}",
+                            req.id,
+                            m.attempts + 1
+                        ))));
+                    }
                 }
                 Err(e) if e.is_transient() || e.is_device_lost() => {
                     // retryable: the fault feeds the breaker, and the
@@ -1139,7 +1257,21 @@ impl ContinuousControl for PoolControl<'_> {
             ))));
             return;
         }
-        self.metrics.lock().unwrap().record_retry();
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.record_retry();
+            // an OOM'd row only reaches here after the worker degraded
+            // the executor (checkpoint-drain or held-back rows), so
+            // this requeue runs a changed plan — count it as such
+            if cause.is_oom() {
+                m.record_degraded_retry();
+            }
+        }
+        if cause.is_oom() {
+            if let Some(g) = &self.opts.pressure {
+                g.record_degraded(self.class_idx);
+            }
+        }
         let delay = backoff_delay(self.opts, attempts);
         // the checkpoint (when the executor took one) rides along, so
         // a fault-retried row resumes mid-schedule instead of redoing
@@ -1218,6 +1350,9 @@ impl ContinuousControl for PoolControl<'_> {
                 if let Some(b) = &self.opts.breaker {
                     b.record_success(self.class_idx);
                 }
+                if let Some(g) = &self.opts.pressure {
+                    g.on_success(self.class_idx);
+                }
                 Ok(GenerateResponse {
                     id: meta.req.id,
                     image: r.image,
@@ -1272,8 +1407,15 @@ fn continuous_worker_loop<E: WorkerExecutor>(
 ) -> LoopExit {
     let mut fault_seen = executor.fault_counts();
     loop {
+        // ladder rung halves the session's seed seats, same as the
+        // run-to-completion loop (the executor's own join cap shrinks
+        // separately via `degrade`)
+        let seats = opts
+            .pressure
+            .as_ref()
+            .map_or(max_batch, |g| (max_batch >> g.level(class_idx).min(6)).max(1));
         let jobs = match queue.pop_batch_where_timeout(
-            max_batch,
+            seats,
             |it: &WorkItem| it.class == class_idx && it.ready(),
             |it: &WorkItem| it.req.variant.clone(),
             RETRY_POLL,
@@ -1305,7 +1447,32 @@ fn continuous_worker_loop<E: WorkerExecutor>(
         let session = executor.execute_continuous(initial, &mut control);
         absorb_faults(&mut fault_seen, executor.fault_counts(), metrics);
         if let Err(e) = session {
-            if e.is_transient() || e.is_device_lost() {
+            if e.is_oom() {
+                // the session ran out of device memory.  The pipelined
+                // executor already checkpoint-drained its live rows
+                // back into the queue (their requeues were counted as
+                // degraded retries); rows still tracked here faulted
+                // before a checkpoint existed (admission/encode, or
+                // the default mock path's held-back rows).  Climb the
+                // ladder once, degrade the executor, and only requeue
+                // the leftovers if something actually changed.
+                if let Some(b) = &opts.breaker {
+                    b.record_fault(class_idx);
+                }
+                metrics.lock().unwrap().record_oom();
+                let (level, effective) = match &opts.pressure {
+                    Some(g) => {
+                        let level = g.on_oom(class_idx);
+                        (level, g.effective_budget(class_idx))
+                    }
+                    None => (1, usize::MAX),
+                };
+                if executor.degrade(level, effective).is_some() {
+                    control.retry_remaining(&e);
+                } else {
+                    control.fail_remaining(&e);
+                }
+            } else if e.is_transient() || e.is_device_lost() {
                 // rows the session still tracked go through the retry
                 // budget (record_fault per row happens in retry)
                 control.retry_remaining(&e);
@@ -1862,6 +2029,192 @@ mod tests {
             assert_eq!(m.retries_exhausted, 1);
             assert_eq!(m.stage.requests_failed, 1);
         });
+    }
+
+    /// OOMs each request's first `fails_before` attempts, then
+    /// succeeds — a device that recovers once the plan is degraded.
+    /// `execute` calls are counted so tests can pin down exactly how
+    /// many times an OOM'd request hit the device.
+    struct OomExec {
+        fails_before: u32,
+        calls: HashMap<u64, u32>,
+        executions: Arc<AtomicUsize>,
+        /// whether `degrade` has anything left to give up
+        can_degrade: bool,
+        degraded_to: Arc<Mutex<Vec<(u8, usize)>>>,
+    }
+
+    impl WorkerExecutor for OomExec {
+        fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+            self.executions.fetch_add(1, Ordering::SeqCst);
+            let n = self.calls.entry(req.id).or_insert(0);
+            *n += 1;
+            if *n <= self.fails_before {
+                return Err(Error::Oom(format!("allocator refused attempt #{n}")));
+            }
+            Ok(quick_result(req))
+        }
+
+        fn degrade(&mut self, level: u8, effective_budget: usize) -> Option<String> {
+            if !self.can_degrade {
+                return None;
+            }
+            self.degraded_to.lock().unwrap().push((level, effective_budget));
+            Some(format!("rung {level}"))
+        }
+    }
+
+    #[test]
+    fn oom_is_retried_degraded_and_completes() {
+        let gov = Arc::new(PressureGovernor::new(
+            vec![1_000_000],
+            crate::coordinator::pressure::PressureOptions::default(),
+        ));
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 3,
+            retry_backoff: Duration::from_millis(1),
+            pressure: Some(Arc::clone(&gov)),
+            ..Default::default()
+        };
+        let degraded_to = Arc::new(Mutex::new(Vec::new()));
+        let d2 = Arc::clone(&degraded_to);
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            8,
+            1,
+            false,
+            supervision,
+            move |_wid, _c: usize, _n: &str| {
+                Ok(OomExec {
+                    fails_before: 1,
+                    calls: HashMap::new(),
+                    executions: Arc::new(AtomicUsize::new(0)),
+                    can_degrade: true,
+                    degraded_to: Arc::clone(&d2),
+                })
+            },
+        )
+        .unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let resp = rx.recv().unwrap().expect("degraded retry succeeds");
+        assert_eq!(resp.id, 1);
+        assert!(rx.recv().is_err(), "exactly one terminal reply");
+        pool.with_metrics(|m| {
+            assert_eq!(m.ooms, 1);
+            assert_eq!(m.degraded_retries, 1);
+            assert_eq!(m.retries, 1);
+            assert_eq!(m.retries_exhausted, 0);
+            assert_eq!(m.stage.requests_ok, 1);
+        });
+        // the governor climbed one rung and shrank the learned budget
+        assert_eq!(gov.ooms(0), 1);
+        assert_eq!(gov.degraded(0), 1);
+        assert!(gov.effective_budget(0) < 1_000_000);
+        // the executor was told the new rung and budget before the retry
+        let seen = degraded_to.lock().unwrap().clone();
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0].0, 1);
+        assert_eq!(seen[0].1, gov.effective_budget(0));
+        let report = pool.metrics_report();
+        assert!(report.contains("1 ooms, 1 degraded retries"), "{report}");
+    }
+
+    #[test]
+    fn oom_without_degradation_fails_fast_never_verbatim() {
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 3,
+            retry_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let executions = Arc::new(AtomicUsize::new(0));
+        let e2 = Arc::clone(&executions);
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            8,
+            1,
+            false,
+            supervision,
+            move |_wid, _c: usize, _n: &str| {
+                Ok(OomExec {
+                    fails_before: u32::MAX,
+                    calls: HashMap::new(),
+                    executions: Arc::clone(&e2),
+                    can_degrade: false,
+                    degraded_to: Arc::new(Mutex::new(Vec::new())),
+                })
+            },
+        )
+        .unwrap();
+        let rx = pool
+            .submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None)
+            .unwrap();
+        let err = rx.recv().unwrap().expect_err("nothing left to degrade");
+        assert!(err.to_string().contains("no degradation left"), "{err}");
+        assert_eq!(
+            executions.load(Ordering::SeqCst),
+            1,
+            "an OOM'd plan must never re-run unchanged"
+        );
+        pool.with_metrics(|m| {
+            assert_eq!(m.ooms, 1);
+            assert_eq!(m.degraded_retries, 0);
+            assert_eq!(m.retries, 0, "no verbatim retry was attempted");
+            assert_eq!(m.stage.requests_failed, 1);
+        });
+    }
+
+    #[test]
+    fn continuous_session_oom_holds_rows_back_and_retries_degraded() {
+        let gov = Arc::new(PressureGovernor::new(
+            vec![1_000_000],
+            crate::coordinator::pressure::PressureOptions::default(),
+        ));
+        let classes = [("default".to_string(), 1usize)];
+        let supervision = SupervisionOptions {
+            retry_limit: 3,
+            retry_backoff: Duration::from_millis(1),
+            pressure: Some(Arc::clone(&gov)),
+            ..Default::default()
+        };
+        let pool = WorkerPool::start_supervised(
+            &classes,
+            16,
+            4,
+            true,
+            supervision,
+            move |_wid, _c: usize, _n: &str| {
+                Ok(OomExec {
+                    fails_before: 1,
+                    calls: HashMap::new(),
+                    executions: Arc::new(AtomicUsize::new(0)),
+                    can_degrade: true,
+                    degraded_to: Arc::new(Mutex::new(Vec::new())),
+                })
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..3u64)
+            .map(|i| {
+                pool.submit(GenerateRequest::new(i, "p", i), Priority::Normal, None)
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().expect("every row resolves after degrade");
+            assert_eq!(resp.id, i as u64);
+            assert!(rx.recv().is_err(), "exactly one terminal reply");
+        }
+        pool.with_metrics(|m| {
+            assert!(m.ooms >= 1, "ooms={}", m.ooms);
+            assert!(m.degraded_retries >= 1, "degraded={}", m.degraded_retries);
+            assert_eq!(m.stage.requests_ok, 3);
+            assert_eq!(m.stage.requests_failed, 0);
+        });
+        assert!(gov.ooms(0) >= 1);
     }
 
     /// Loses the device on the first execute ever (shared flag survives

@@ -1,0 +1,355 @@
+//! Per-device-class memory-pressure governor: the learning half of
+//! OOM recovery (DESIGN.md "Memory pressure & degradation ladder").
+//!
+//! The shipped memory budget is a spec-sheet number; the headroom a
+//! device actually grants varies by phone and OS version.  Workers
+//! report every `Error::Oom` here; the governor climbs a degradation
+//! ladder for the class and records a *learned* `effective_budget`
+//! that admission consults instead of the shipped figure:
+//!
+//! * **on_oom** — ladder level rises one rung (capped at
+//!   [`MAX_LEVEL`]) and the effective budget shrinks geometrically
+//!   (`shrink` per OOM, floored at `floor * shipped`).  The worker
+//!   translates the rung into a concrete degradation — smaller batch
+//!   seat cap, evicted warm tier and residency, W8A8 under a reduced
+//!   ledger budget — before retrying.  OOM work is *never* retried on
+//!   an unchanged plan (`Error::is_oom`).
+//! * **on_success** — breaker-style hysteresis: after `probe_streak`
+//!   consecutive OOM-free completions the ladder steps back down one
+//!   rung and the budget re-probes upward, restoring the shipped
+//!   budget when the ladder reaches the ground.
+//!
+//! Admission consumes the learned budget through [`admits_peak`]:
+//! `FleetRouter` filters out classes whose planned `peak_memory` no
+//! longer fits, so requests reroute to classes with real headroom
+//! instead of being fed to an exhausted allocator.
+//!
+//! [`admits_peak`]: PressureGovernor::admits_peak
+
+use std::sync::Mutex;
+
+/// Deepest ladder rung.  Rungs map to worker-side degradations:
+/// 1 = halve the batch seat cap, 2 = also shed warm/idle residency,
+/// 3 = also force W8A8 and re-plan under the learned budget.
+pub const MAX_LEVEL: u8 = 3;
+
+/// Governor tuning.  Defaults shrink aggressively (OOM is expensive)
+/// and re-probe conservatively (an unwarranted probe re-OOMs).
+#[derive(Debug, Clone, Copy)]
+pub struct PressureOptions {
+    /// Multiplier applied to the effective budget per OOM (in (0,1)).
+    pub shrink: f64,
+    /// The effective budget never drops below `floor * shipped`.
+    pub floor: f64,
+    /// Consecutive OOM-free completions before stepping one rung back
+    /// down and re-probing the budget upward.
+    pub probe_streak: u64,
+}
+
+impl Default for PressureOptions {
+    fn default() -> PressureOptions {
+        PressureOptions { shrink: 0.8, floor: 0.25, probe_streak: 24 }
+    }
+}
+
+#[derive(Debug)]
+struct ClassPressure {
+    /// The budget the deployment shipped with (`usize::MAX` = none).
+    shipped: usize,
+    /// The learned budget capping admission; starts at `shipped`.
+    effective: usize,
+    /// Current degradation-ladder rung (0 = undegraded).
+    level: u8,
+    /// OOMs observed against the class.
+    ooms: u64,
+    /// Degraded retries issued after those OOMs.
+    degraded: u64,
+    /// Consecutive OOM-free completions since the last OOM or probe.
+    streak: u64,
+    /// Upward re-probes taken.
+    probes: u64,
+}
+
+/// One ladder per device class, shared between the pool's workers
+/// (producers of OOM/success events) and the server's admission path
+/// (consumer of the learned budgets).
+#[derive(Debug)]
+pub struct PressureGovernor {
+    classes: Vec<Mutex<ClassPressure>>,
+    opts: PressureOptions,
+}
+
+impl PressureGovernor {
+    /// One class per entry of `shipped` (the per-class planned memory
+    /// budget in bytes; `usize::MAX` for unbudgeted deployments —
+    /// the ladder and counters still work, only the byte figure stays
+    /// unbounded).
+    pub fn new(shipped: Vec<usize>, opts: PressureOptions) -> PressureGovernor {
+        let shipped = if shipped.is_empty() { vec![usize::MAX] } else { shipped };
+        PressureGovernor {
+            classes: shipped
+                .into_iter()
+                .map(|s| {
+                    Mutex::new(ClassPressure {
+                        shipped: s,
+                        effective: s,
+                        level: 0,
+                        ooms: 0,
+                        degraded: 0,
+                        streak: 0,
+                        probes: 0,
+                    })
+                })
+                .collect(),
+            opts,
+        }
+    }
+
+    /// One observed `Error::Oom` against the class: climb a rung,
+    /// shrink the learned budget, reset the probe streak.  Returns the
+    /// rung the worker should degrade to before retrying.
+    pub fn on_oom(&self, class: usize) -> u8 {
+        let Some(m) = self.classes.get(class) else { return 1 };
+        let mut s = m.lock().unwrap();
+        s.ooms += 1;
+        s.streak = 0;
+        s.level = (s.level + 1).min(MAX_LEVEL);
+        if s.shipped != usize::MAX {
+            let floor = (s.shipped as f64 * self.opts.floor) as usize;
+            let shrunk = (s.effective as f64 * self.opts.shrink) as usize;
+            s.effective = shrunk.max(floor).max(1);
+        }
+        s.level
+    }
+
+    /// One OOM-free completion.  After `probe_streak` of them the
+    /// ladder steps down a rung and the budget re-probes upward;
+    /// reaching the ground restores the shipped budget in full.
+    pub fn on_success(&self, class: usize) {
+        let Some(m) = self.classes.get(class) else { return };
+        let mut s = m.lock().unwrap();
+        if s.level == 0 {
+            return;
+        }
+        s.streak += 1;
+        if s.streak < self.opts.probe_streak {
+            return;
+        }
+        s.streak = 0;
+        s.level -= 1;
+        s.probes += 1;
+        if s.shipped != usize::MAX {
+            s.effective = if s.level == 0 {
+                s.shipped
+            } else {
+                ((s.effective as f64 / self.opts.shrink) as usize).min(s.shipped)
+            };
+        }
+    }
+
+    /// A degraded retry was issued for the class (metrics only).
+    pub fn record_degraded(&self, class: usize) {
+        if let Some(m) = self.classes.get(class) {
+            m.lock().unwrap().degraded += 1;
+        }
+    }
+
+    /// Whether a plan with the given `peak_memory` fits the class's
+    /// *learned* headroom.  Pure — consulting it never transitions
+    /// state, so admission can use it as a filter predicate.
+    pub fn admits_peak(&self, class: usize, peak: usize) -> bool {
+        self.effective_budget(class) >= peak
+    }
+
+    /// The learned budget capping admission for the class.
+    pub fn effective_budget(&self, class: usize) -> usize {
+        self.classes
+            .get(class)
+            .map_or(usize::MAX, |m| m.lock().unwrap().effective)
+    }
+
+    /// The budget the deployment shipped with.
+    pub fn shipped_budget(&self, class: usize) -> usize {
+        self.classes
+            .get(class)
+            .map_or(usize::MAX, |m| m.lock().unwrap().shipped)
+    }
+
+    /// Current degradation-ladder rung (0 = undegraded).
+    pub fn level(&self, class: usize) -> u8 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().level)
+    }
+
+    pub fn ooms(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().ooms)
+    }
+
+    pub fn degraded(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().degraded)
+    }
+
+    pub fn probes(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |m| m.lock().unwrap().probes)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Any class has seen memory pressure (is degraded now, or ever
+    /// OOM'd) — the report-line trigger.
+    pub fn any_pressure(&self) -> bool {
+        self.classes.iter().any(|m| {
+            let s = m.lock().unwrap();
+            s.level > 0 || s.ooms > 0
+        })
+    }
+
+    /// One report line, classes labelled by `names` (index order).
+    pub fn status_line(&self, names: &[String]) -> String {
+        let cells: Vec<String> = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let s = m.lock().unwrap();
+                let name = names.get(i).map(|n| n.as_str()).unwrap_or("?");
+                format!(
+                    "{name}=L{} ({} ooms, {} degraded, budget {}/{})",
+                    s.level,
+                    s.ooms,
+                    s.degraded,
+                    fmt_budget(s.effective),
+                    fmt_budget(s.shipped),
+                )
+            })
+            .collect();
+        format!("pressure: {}\n", cells.join(", "))
+    }
+}
+
+fn fmt_budget(bytes: usize) -> String {
+    if bytes == usize::MAX {
+        "unbounded".to_string()
+    } else {
+        format!("{:.1}MB", bytes as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gov(shipped: usize, probe_streak: u64) -> PressureGovernor {
+        PressureGovernor::new(
+            vec![shipped],
+            PressureOptions { probe_streak, ..PressureOptions::default() },
+        )
+    }
+
+    #[test]
+    fn ooms_climb_the_ladder_and_shrink_the_learned_budget() {
+        let g = gov(1_000_000, 4);
+        assert_eq!(g.effective_budget(0), 1_000_000);
+        assert!(g.admits_peak(0, 1_000_000));
+        assert!(!g.any_pressure());
+        assert_eq!(g.on_oom(0), 1);
+        assert_eq!(g.on_oom(0), 2);
+        assert_eq!(g.on_oom(0), 3);
+        assert_eq!(g.on_oom(0), 3, "level saturates at MAX_LEVEL");
+        assert_eq!(g.ooms(0), 4);
+        assert!(g.any_pressure());
+        let eff = g.effective_budget(0);
+        assert!(eff < 1_000_000, "budget shrank: {eff}");
+        assert!(!g.admits_peak(0, 1_000_000), "shipped peak no longer admitted");
+        assert!(g.admits_peak(0, eff), "the learned budget itself admits");
+        assert_eq!(g.shipped_budget(0), 1_000_000, "shipped figure untouched");
+    }
+
+    #[test]
+    fn budget_converges_to_the_floor_not_zero() {
+        let g = gov(1_000_000, 4);
+        for _ in 0..64 {
+            g.on_oom(0);
+        }
+        assert_eq!(
+            g.effective_budget(0),
+            250_000,
+            "floored at floor * shipped"
+        );
+    }
+
+    #[test]
+    fn hysteresis_reprobes_upward_and_restores_shipped_at_ground() {
+        let g = gov(1_000_000, 3);
+        g.on_oom(0);
+        g.on_oom(0);
+        let degraded = g.effective_budget(0);
+        assert_eq!(g.level(0), 2);
+        // two successes: not enough for a probe
+        g.on_success(0);
+        g.on_success(0);
+        assert_eq!(g.level(0), 2);
+        assert_eq!(g.effective_budget(0), degraded);
+        // third completes the streak: one rung down, budget up
+        g.on_success(0);
+        assert_eq!(g.level(0), 1);
+        assert!(g.effective_budget(0) > degraded);
+        assert_eq!(g.probes(0), 1);
+        // an OOM mid-streak resets progress
+        g.on_success(0);
+        g.on_oom(0);
+        assert_eq!(g.level(0), 2);
+        for _ in 0..6 {
+            g.on_success(0);
+        }
+        assert_eq!(g.level(0), 0, "fully recovered");
+        assert_eq!(
+            g.effective_budget(0),
+            1_000_000,
+            "ground rung restores the shipped budget"
+        );
+        // successes at ground level are free: no underflow, no probes
+        g.on_success(0);
+        assert_eq!(g.level(0), 0);
+    }
+
+    #[test]
+    fn unbudgeted_deployments_keep_ladder_and_counters_only() {
+        let g = gov(usize::MAX, 2);
+        assert_eq!(g.on_oom(0), 1);
+        assert_eq!(g.effective_budget(0), usize::MAX, "no byte figure to shrink");
+        assert!(g.admits_peak(0, usize::MAX));
+        g.record_degraded(0);
+        assert_eq!(g.degraded(0), 1);
+        let line = g.status_line(&["cpu".to_string()]);
+        assert!(line.contains("cpu=L1"), "{line}");
+        assert!(line.contains("1 ooms, 1 degraded"), "{line}");
+        assert!(line.contains("unbounded/unbounded"), "{line}");
+    }
+
+    #[test]
+    fn out_of_range_classes_are_ignored_not_panics() {
+        let g = gov(1000, 2);
+        assert_eq!(g.on_oom(9), 1, "unknown class degrades conservatively");
+        g.on_success(9);
+        g.record_degraded(9);
+        assert_eq!(g.ooms(9), 0);
+        assert!(g.admits_peak(9, usize::MAX), "unknown classes admit");
+        assert_eq!(g.num_classes(), 1);
+    }
+
+    #[test]
+    fn status_line_reports_learned_vs_shipped_budget() {
+        let g = PressureGovernor::new(
+            vec![2_000_000, 1_000_000],
+            PressureOptions::default(),
+        );
+        g.on_oom(1);
+        let line = g.status_line(&["fast".to_string(), "slow".to_string()]);
+        assert!(line.starts_with("pressure: "), "{line}");
+        assert!(line.contains("fast=L0 (0 ooms, 0 degraded, budget 2.0MB/2.0MB)"), "{line}");
+        assert!(line.contains("slow=L1"), "{line}");
+        assert!(line.contains("0.8MB/1.0MB"), "{line}");
+    }
+}

@@ -42,6 +42,7 @@ use crate::coordinator::breaker::CircuitBreaker;
 use crate::coordinator::pool::{
     ResponseReceiver, SupervisionOptions, WorkerExecutor, WorkerPool,
 };
+use crate::coordinator::pressure::{PressureGovernor, PressureOptions};
 use crate::coordinator::queue::Priority;
 use crate::coordinator::request::{GenerateRequest, GenerateResponse, SubmitOptions};
 use crate::error::{Error, Result};
@@ -59,6 +60,10 @@ struct PipelineWorker {
     default_variant: String,
     /// seat count for a continuous session's dynamic batch
     max_batch: usize,
+    /// configured seat count before any memory-pressure degradation,
+    /// so `degrade`'s halving is cumulative-from-shipped, not
+    /// cumulative-from-current (and recovery can restore it)
+    base_batch: usize,
 }
 
 impl WorkerExecutor for PipelineWorker {
@@ -109,6 +114,39 @@ impl WorkerExecutor for PipelineWorker {
         let s = self.executor.engine.device_stats();
         (s.injected_transient(), s.injected_fatal(), s.injected_spikes())
     }
+
+    /// The degradation ladder, one rung per OOM (see
+    /// `coordinator::pressure`):
+    ///
+    /// 1. shrink the continuous session's seat cap (halved per rung) —
+    ///    fewer concurrent rows means a smaller CFG-batched dispatch;
+    /// 2. shed warm-tier and non-pinned residency, so the retry starts
+    ///    from the smallest live set the pipeline can run with;
+    /// 3. force W8A8 activations and re-plan the executor under the
+    ///    governor's learned budget, the lowest-memory configuration
+    ///    this executor has.
+    ///
+    /// Rung 1 always changes *something*, so an OOM'd request is
+    /// always retried at least once — on a genuinely different plan.
+    fn degrade(&mut self, level: u8, effective_budget: usize) -> Option<String> {
+        let mut actions = Vec::new();
+        self.max_batch = (self.base_batch >> level).max(1);
+        actions.push(format!("seat cap {}", self.max_batch));
+        if level >= 2 {
+            let evicted = self.executor.shed_memory();
+            actions.push(format!("shed {evicted} resident components"));
+        }
+        if level >= 3 {
+            self.executor.engine.device_stats().set_activation_quant(true);
+            if effective_budget < self.executor.options.memory_budget {
+                let installed = self.executor.rebase_budget(effective_budget);
+                actions.push(format!("w8a8 + budget {installed} B"));
+            } else {
+                actions.push("w8a8".to_string());
+            }
+        }
+        Some(actions.join(", "))
+    }
 }
 
 pub struct Server {
@@ -118,6 +156,10 @@ pub struct Server {
     default_steps: usize,
     /// plan-driven admission routing; `None` for homogeneous pools
     router: Option<FleetRouter>,
+    /// per-class memory-pressure governor: learned budgets from OOM
+    /// events cap admission, and its ladder level drives worker
+    /// degradation
+    pressure: Arc<PressureGovernor>,
     /// process-wide host-artifact cache shared by every worker
     store: Arc<ArtifactStore>,
 }
@@ -215,6 +257,7 @@ impl Server {
         let store = Arc::new(ArtifactStore::new());
         let worker_store = Arc::clone(&store);
         let max_batch = config.max_batch;
+        let device_mem_mb = config.device_mem_mb;
 
         // deterministic fault injection: a seeded plan installed on
         // every worker's device stats (each worker draws from the same
@@ -233,6 +276,29 @@ impl Server {
             if plan.is_empty() { None } else { Some(plan) }
         };
 
+        // the governor's shipped per-class budget: the worst-case
+        // modeled resident peak across the class's priced plans, or
+        // the configured executor budget for homogeneous pools.  OOMs
+        // shrink the learned budget below this; sustained success
+        // probes it back up (never past shipped).
+        let shipped: Vec<usize> = match &router {
+            Some(r) => r
+                .fleet()
+                .classes
+                .iter()
+                .map(|c| {
+                    crate::planner::model::VARIANTS
+                        .iter()
+                        .filter_map(|v| r.plans().plan(&c.device, v).ok())
+                        .map(|p| p.peak_memory)
+                        .max()
+                        .unwrap_or(usize::MAX)
+                })
+                .collect(),
+            None => vec![options.memory_budget; classes.len()],
+        };
+        let pressure = Arc::new(PressureGovernor::new(shipped, PressureOptions::default()));
+
         let supervision = SupervisionOptions {
             retry_limit: config.retry_limit as u32,
             retry_backoff: Duration::from_millis(config.retry_backoff_ms),
@@ -241,6 +307,7 @@ impl Server {
                 config.breaker_threshold,
                 Duration::from_millis(config.breaker_cooldown_ms),
             ))),
+            pressure: Some(Arc::clone(&pressure)),
             metrics_window: config.calib_window,
             ..SupervisionOptions::default()
         };
@@ -260,6 +327,15 @@ impl Server {
                 if let Some(plan) = &fault_plan {
                     executor.engine.device_stats().set_fault_plan(Some(plan.clone()));
                 }
+                // capacity-accounted device memory: live buffer bytes
+                // are charged against this cap and allocations beyond
+                // it fail with a real (uninjected) OOM
+                if let Some(mb) = device_mem_mb {
+                    executor
+                        .engine
+                        .device_stats()
+                        .set_device_mem(Some((mb * 1e6) as u64));
+                }
                 if let Some(Some((obs, w8a8))) = observers.get(class) {
                     executor.set_observer(obs.clone());
                     if *w8a8 {
@@ -270,6 +346,7 @@ impl Server {
                     executor,
                     default_variant: variant.clone(),
                     max_batch,
+                    base_batch: max_batch,
                 })
             },
         )?;
@@ -279,6 +356,7 @@ impl Server {
             default_variant: config.variant.clone(),
             default_steps: config.num_steps,
             router,
+            pressure,
             store,
         })
     }
@@ -347,12 +425,22 @@ impl Server {
                     Some(b) if opts.priority != Priority::High => b.admits(class),
                     _ => true,
                 };
-                match router.route_observed_filtered(
+                // learned memory headroom: a class that has OOM'd gets
+                // its governor budget enforced at admission, so plans
+                // that cannot fit are rerouted (or refused) instead of
+                // discovered mid-denoise
+                let gov = &self.pressure;
+                let headroom = |class: usize| match gov.effective_budget(class) {
+                    usize::MAX => None,
+                    b => Some(b),
+                };
+                match router.route_pressure_filtered(
                     &variant,
                     steps,
                     opts.deadline,
                     &observed,
                     &admit,
+                    &headroom,
                 ) {
                     Ok(route) => self.pool.submit_routed(
                         req,
@@ -416,8 +504,18 @@ impl Server {
         &self.store
     }
 
+    /// The per-class memory-pressure governor (tests, dashboards).
+    pub fn pressure(&self) -> &Arc<PressureGovernor> {
+        &self.pressure
+    }
+
     pub fn metrics_report(&self) -> Result<String> {
         let mut out = self.pool.metrics_report();
+        // memory pressure: only interesting once something OOM'd (or a
+        // ladder is still unwinding); a quiet fleet stays quiet
+        if self.pressure.any_pressure() {
+            out.push_str(&self.pressure.status_line(self.pool.class_names()));
+        }
         out.push_str(&format!(
             "artifact store: {} cached, {} disk loads, {} hits\n",
             self.store.cached(),

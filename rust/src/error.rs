@@ -1,11 +1,17 @@
 //! Crate-wide error type (hand-rolled: no proc-macro deps offline).
 //!
-//! Errors split into two recovery classes the serving stack acts on
-//! (see DESIGN.md "Failure domains & recovery"):
+//! Errors split into three recovery classes the serving stack acts on
+//! (see DESIGN.md "Failure domains & recovery" and "Memory pressure &
+//! degradation ladder"):
 //!
-//! * **Transient** ([`Error::Transient`], [`Error::Oom`]) — the same
-//!   operation is expected to succeed on retry; the pool checkpoints
-//!   and requeues affected rows with bounded retry + backoff.
+//! * **Transient** ([`Error::Transient`]) — the same operation is
+//!   expected to succeed on retry; the pool checkpoints and requeues
+//!   affected rows with bounded retry + backoff.
+//! * **Out of memory** ([`Error::Oom`]) — the device allocator is
+//!   exhausted.  Retrying the *identical* plan against the same
+//!   exhausted device is pointless; the pool retries only after the
+//!   memory-pressure governor has degraded the plan (smaller seat cap,
+//!   evicted residency, reduced effective budget) — never verbatim.
 //! * **Fatal** (everything else) — retrying is pointless; the row is
 //!   failed.  [`Error::DeviceLost`] is fatal *for the device*: its
 //!   in-flight rows are retried elsewhere and the worker restarts
@@ -26,17 +32,28 @@ pub enum Error {
     Xla(String),
     /// Recoverable device hiccup: retry after backoff.
     Transient(String),
-    /// Device allocator exhausted; pressure may clear — retryable.
+    /// Device allocator exhausted.  Not a garden-variety transient:
+    /// retrying the identical plan re-exhausts the same device, so the
+    /// pool only retries *degraded* (see `coordinator::pressure`).
     Oom(String),
     /// The device handle is gone; the worker must rebuild its engine.
     DeviceLost(String),
 }
 
 impl Error {
-    /// Whether the pool should retry the failed work (bounded, with
-    /// exponential backoff) instead of failing it outright.
+    /// Whether the pool should retry the failed work verbatim
+    /// (bounded, with exponential backoff) instead of failing it
+    /// outright.  OOM is deliberately *not* transient: an unchanged
+    /// plan re-exhausts the same allocator, so it retries only through
+    /// the degradation path ([`Self::is_oom`]).
     pub fn is_transient(&self) -> bool {
-        matches!(self, Error::Transient(_) | Error::Oom(_))
+        matches!(self, Error::Transient(_))
+    }
+
+    /// Whether the device allocator was exhausted — recoverable, but
+    /// only by retrying a *degraded* plan, never the identical one.
+    pub fn is_oom(&self) -> bool {
+        matches!(self, Error::Oom(_))
     }
 
     /// Whether the worker's engine is unusable and must be rebuilt.
@@ -81,7 +98,13 @@ mod tests {
     #[test]
     fn recovery_classes() {
         assert!(Error::Transient("x".into()).is_transient());
-        assert!(Error::Oom("x".into()).is_transient());
+        assert!(
+            !Error::Oom("x".into()).is_transient(),
+            "OOM must never be retried verbatim on an unchanged plan"
+        );
+        assert!(Error::Oom("x".into()).is_oom());
+        assert!(!Error::Transient("x".into()).is_oom());
+        assert!(!Error::DeviceLost("x".into()).is_oom());
         assert!(!Error::DeviceLost("x".into()).is_transient());
         assert!(Error::DeviceLost("x".into()).is_device_lost());
         assert!(!Error::Xla("x".into()).is_transient());

@@ -31,7 +31,10 @@ COMMANDS:
              [--artifacts DIR] [--guidance X] [--config FILE.json]
   serve      prompts from stdin, metrics on EOF (same flags, plus
              [--workers N] [--queue-depth N] [--max-batch N] for the
-             worker pool and [--fleet SPEC] for a heterogeneous fleet,
+             worker pool, [--device-mem MB] for a capacity-accounted
+             device memory cap (OOM arises organically and workers
+             recover through the degradation ladder), and
+             [--fleet SPEC] for a heterogeneous fleet,
              e.g. adreno740:2,bigcore:1 — plan-predicted service times
              drive admission and per-class routing; compatible
              concurrent requests share one CFG-batched UNet dispatch
@@ -46,7 +49,8 @@ COMMANDS:
               the device class; [--per-op] adds a per-op-class table of
               modeled vs calibrated latency, flops and bytes, with the
               calibrated column priced by a self-fit round-trip of the
-              online roofline calibrator)
+              online roofline calibrator, plus the memory-pressure
+              degradation ladder: effective vs shipped budget per rung)
   passes     pass-pipeline report      <graph.json> [--device NAME]
              [--only name,name,...] runs a registry subset;
              [--list] prints the registered passes and exits
@@ -259,6 +263,7 @@ fn cmd_analyze(args: &[String]) -> R {
     );
     if per_op {
         print_per_op_breakdown(&g, &spec);
+        print_pressure_ladder(&g, &spec);
     }
     Ok(())
 }
@@ -322,6 +327,49 @@ fn print_per_op_breakdown(g: &Graph, spec: &DeviceSpec) {
         gain * 1e3,
         if gain > 0.0 { "planner enables" } else { "planner declines" }
     );
+}
+
+/// The `analyze --per-op` ladder table: what the memory-pressure
+/// governor would grant this class at each degradation rung, against a
+/// shipped budget proxied by the graph's own working set on the device
+/// (bytes moved under the shipped profile).  At serve time the same
+/// governor learns the effective budget from real OOMs instead — this
+/// table is the static schedule it walks.
+fn print_pressure_ladder(g: &Graph, spec: &DeviceSpec) {
+    use mobile_diffusion::coordinator::pressure::{PressureGovernor, PressureOptions, MAX_LEVEL};
+    use mobile_diffusion::delegate::class_breakdown;
+
+    let rows = class_breakdown(g, &spec.delegate, &spec.delegate);
+    let shipped = rows.iter().map(|r| r.bytes).sum::<f64>() as usize;
+    if shipped == 0 {
+        return;
+    }
+    let opts = PressureOptions::default();
+    let floor = opts.floor;
+    let gov = PressureGovernor::new(vec![shipped], opts);
+    println!(
+        "degradation ladder on {} (shipped budget {:.2} MB, floor {:.0}%):",
+        spec.name,
+        shipped as f64 / 1e6,
+        floor * 100.0
+    );
+    println!("  {:<6} {:>14} {:>12}  {}", "rung", "effective-mb", "of-shipped", "action");
+    for rung in 1..=MAX_LEVEL {
+        gov.on_oom(0);
+        let action = match rung {
+            1 => "shrink continuous seat cap",
+            2 => "+ shed warm tier & non-pinned residency",
+            _ => "+ force W8A8, re-plan under learned budget",
+        };
+        let eff = gov.effective_budget(0);
+        println!(
+            "  {:<6} {:>14.2} {:>11.0}%  {}",
+            rung,
+            eff as f64 / 1e6,
+            eff as f64 / shipped as f64 * 100.0,
+            action
+        );
+    }
 }
 
 fn cmd_passes(args: &[String]) -> R {

@@ -484,6 +484,27 @@ impl PipelinedExecutor {
         self.residency.evict_idle()
     }
 
+    /// Shed every reclaimable byte (memory-pressure ladder rung 2):
+    /// clear the warm executable tier, then evict all idle resident
+    /// components.  Pinned components survive.  Returns the resident
+    /// bytes freed (warm entries are accounted outside the ledger).
+    pub fn shed_memory(&mut self) -> usize {
+        self.residency.clear_warm();
+        self.evict_idle()
+    }
+
+    /// Rebase the executor's memory budget to the governor's learned
+    /// effective budget (ladder rung 3: re-plan under pressure).  The
+    /// ledger clamps to live allocations, so shrinking below residency
+    /// only blocks new acquisitions until evictions catch up; the
+    /// fail-fast feasibility checks use the new figure immediately.
+    /// Returns the budget actually installed.
+    pub fn rebase_budget(&mut self, bytes: usize) -> usize {
+        let installed = self.residency.set_budget(bytes);
+        self.options.memory_budget = installed;
+        installed
+    }
+
     /// The Fig. 4 occupancy trace.
     pub fn memory_trace(&self) -> &MemoryTrace {
         self.residency.trace()
@@ -1049,14 +1070,14 @@ impl PipelinedExecutor {
                 let PipelinedExecutor { engine, ddim, observer, .. } = self;
                 let t_disp = Instant::now();
                 if let Err(e) = sb.dispatch(engine, unet) {
-                    if !e.is_transient() {
+                    if !e.is_transient() && !e.is_oom() {
                         return Err(e);
                     }
-                    // transient device fault: the faulted step was never
+                    // transient fault or OOM: the faulted step was never
                     // applied, so every live row's state is exactly its
                     // last good step.  Checkpoint them all out for
                     // bounded retry (resuming is bit-identical to an
-                    // uninterrupted run) and keep the session alive.
+                    // uninterrupted run).
                     for lm in live.drain(..) {
                         let LiveMember { token, req, m, pos, busy_s, denoise_s, .. } = lm;
                         control.retry(
@@ -1076,6 +1097,14 @@ impl PipelinedExecutor {
                             &e,
                         );
                     }
+                    if e.is_oom() {
+                        // An exhausted allocator will not recover by
+                        // re-dispatching the same batch: surface the OOM
+                        // so the worker degrades (pressure ladder) before
+                        // a fresh session resumes the checkpointed rows.
+                        return Err(e);
+                    }
+                    // transient: keep the session alive and retry here.
                     dirty = true;
                     continue;
                 }

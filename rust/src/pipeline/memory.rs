@@ -69,6 +69,23 @@ impl MemoryLedger {
         self.trace.push(TraceEvent::mark(label, self.used));
     }
 
+    /// Bytes still allocatable before the budget is hit.
+    pub fn headroom(&self) -> usize {
+        self.budget.saturating_sub(self.used)
+    }
+
+    /// Rebase the budget (memory-pressure governor shrinking a class's
+    /// effective budget, or re-probing it back up).  Live allocations
+    /// are never invalidated: the budget is clamped to at least the
+    /// current `used`, so `used <= budget` holds across the change —
+    /// shrinking below residency only blocks *new* allocations until
+    /// evictions catch up.  Returns the budget actually installed.
+    pub fn set_budget(&mut self, bytes: usize) -> usize {
+        self.budget = bytes.max(self.used);
+        self.mark("budget-rebased");
+        self.budget
+    }
+
     pub fn used(&self) -> usize {
         self.used
     }
@@ -142,6 +159,33 @@ mod tests {
     }
 
     #[test]
+    fn headroom_tracks_budget_minus_used() {
+        let mut m = MemoryLedger::new(1000);
+        assert_eq!(m.headroom(), 1000);
+        m.alloc("unet", 600).unwrap();
+        assert_eq!(m.headroom(), 400);
+        assert_eq!(MemoryLedger::unbounded().headroom(), usize::MAX);
+    }
+
+    #[test]
+    fn set_budget_clamps_to_live_allocations() {
+        let mut m = MemoryLedger::new(1000);
+        m.alloc("unet", 600).unwrap();
+        // shrink below residency: clamped, new allocs blocked
+        assert_eq!(m.set_budget(100), 600);
+        assert_eq!(m.headroom(), 0);
+        assert!(m.alloc("text", 1).is_err());
+        // eviction restores headroom under the reduced budget
+        m.free("unet").unwrap();
+        assert_eq!(m.set_budget(100), 100);
+        m.alloc("small", 100).unwrap();
+        // re-probe upward
+        assert_eq!(m.set_budget(1000), 1000);
+        m.alloc("text", 300).unwrap();
+        assert_eq!(m.used(), 400);
+    }
+
+    #[test]
     fn property_used_equals_sum_and_never_exceeds_budget() {
         crate::util::miniprop::forall("ledger invariants", 100, |g| {
             let budget = g.usize_in(100, 10_000);
@@ -163,6 +207,42 @@ mod tests {
                 assert_eq!(m.used(), sum);
                 assert!(m.used() <= budget);
                 assert!(m.peak() >= m.used());
+            }
+        });
+    }
+
+    #[test]
+    fn property_invariants_hold_across_interleaved_set_budget() {
+        crate::util::miniprop::forall("ledger budget rebase invariants", 100, |g| {
+            let mut m = MemoryLedger::new(g.usize_in(100, 10_000));
+            let mut live: Vec<(String, usize)> = Vec::new();
+            let mut last_peak = 0usize;
+            for i in 0..g.usize_in(1, 40) {
+                match g.usize_in(0, 3) {
+                    0 | 1 => {
+                        let sz = g.usize_in(1, 2000);
+                        let name = format!("c{i}");
+                        if m.alloc(&name, sz).is_ok() {
+                            live.push((name, sz));
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let (name, _) = live.remove(idx);
+                        m.free(&name).unwrap();
+                    }
+                    _ => {
+                        // governor-style rebase, shrinking or probing up
+                        m.set_budget(g.usize_in(50, 12_000));
+                    }
+                }
+                let sum: usize = live.iter().map(|(_, s)| s).sum();
+                assert_eq!(m.used(), sum);
+                assert!(m.used() <= m.budget, "used must track the live budget");
+                assert_eq!(m.headroom(), m.budget - m.used());
+                assert!(m.peak() >= m.used());
+                assert!(m.peak() >= last_peak, "peak stays monotone across rebase");
+                last_peak = m.peak();
             }
         });
     }

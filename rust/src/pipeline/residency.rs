@@ -508,6 +508,30 @@ impl<C: Clone, W> ResidencyManager<C, W> {
         self.ledger.budget
     }
 
+    /// Rebase the device memory budget (the memory-pressure governor
+    /// shrinking a class's effective budget, or re-probing upward).
+    /// Resident components are never invalidated; see
+    /// [`MemoryLedger::set_budget`].  Returns the installed budget.
+    pub fn set_budget(&mut self, bytes: usize) -> usize {
+        self.ledger.set_budget(bytes)
+    }
+
+    /// Bytes still allocatable before the budget is hit.
+    pub fn headroom(&self) -> usize {
+        self.ledger.headroom()
+    }
+
+    /// Drop every warm (evicted, host-side) executable remnant —
+    /// degradation-ladder rung: warm remnants are not ledger-charged,
+    /// but they do hold *device-adjacent host* state the pressure
+    /// governor sheds before shrinking budgets.  Returns how many
+    /// remnants were dropped.
+    pub fn clear_warm(&mut self) -> usize {
+        let n = self.warm.len();
+        self.warm.clear();
+        n
+    }
+
     pub fn used(&self) -> usize {
         self.ledger.used()
     }
@@ -742,6 +766,27 @@ mod tests {
     /// payload itself.
     fn warm_mgr(budget: usize, cap: usize) -> ResidencyManager<u32, u32> {
         ResidencyManager::with_warm_tier(budget, cap, |c: &u32| *c)
+    }
+
+    #[test]
+    fn set_budget_and_clear_warm_support_the_pressure_ladder() {
+        let mut r = warm_mgr(100, 4);
+        r.acquire("text_encoder", "fp32", 60, ok(7)).unwrap();
+        r.release("text_encoder", "fp32", Retention::Evict).unwrap();
+        assert_eq!(r.warm_len(), 1);
+        assert_eq!(r.clear_warm(), 1, "warm remnants shed under pressure");
+        assert_eq!(r.warm_len(), 0);
+
+        r.acquire("unet_mobile", "fp32", 80, ok(1)).unwrap();
+        // shrink below residency: clamped to the pinned bytes
+        assert_eq!(r.set_budget(40), 80);
+        assert_eq!(r.headroom(), 0);
+        r.release("unet_mobile", "fp32", Retention::Evict).unwrap();
+        assert_eq!(r.set_budget(40), 40);
+        assert_eq!(r.budget(), 40);
+        // re-probe upward restores the shipped budget
+        assert_eq!(r.set_budget(100), 100);
+        assert_eq!(r.headroom(), 100);
     }
 
     #[test]

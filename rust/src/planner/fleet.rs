@@ -263,14 +263,48 @@ impl FleetRouter {
         observed_overhead: &dyn Fn(usize) -> Option<f64>,
         admit: &dyn Fn(usize) -> bool,
     ) -> Result<Route> {
+        self.route_pressure_filtered(
+            variant,
+            num_steps,
+            deadline,
+            observed_overhead,
+            admit,
+            &|_| None,
+        )
+    }
+
+    /// Routing under memory pressure as well: `headroom(class)`
+    /// supplies the class's *learned* effective memory budget in bytes
+    /// (`None` = no governor watching that class).  A class whose
+    /// plan's `peak_memory` no longer fits its learned budget is
+    /// skipped like a quarantined one — the request reroutes to a
+    /// class with real headroom instead of being fed to an allocator
+    /// the governor already saw exhaust.  When memory filtering alone
+    /// rejected every class the error says so.
+    pub fn route_pressure_filtered(
+        &self,
+        variant: &str,
+        num_steps: usize,
+        deadline: Option<Duration>,
+        observed_overhead: &dyn Fn(usize) -> Option<f64>,
+        admit: &dyn Fn(usize) -> bool,
+        headroom: &dyn Fn(usize) -> Option<usize>,
+    ) -> Result<Route> {
         let horizon = deadline.unwrap_or(FALLBACK_DEADLINE).as_secs_f64();
         let mut cheapest: Option<Route> = None;
         let mut fastest: Option<Route> = None;
+        let mut over_budget = 0usize;
         for (i, class) in self.fleet.classes.iter().enumerate() {
             if !admit(i) {
                 continue;
             }
             let plan = self.plans.plan(&class.device, variant)?;
+            if let Some(budget) = headroom(i) {
+                if plan.peak_memory > budget {
+                    over_budget += 1;
+                    continue;
+                }
+            }
             let predicted_s = plan.predict_service_with(num_steps, observed_overhead(i));
             if fastest.map_or(true, |f: Route| predicted_s < f.predicted_s) {
                 fastest = Some(Route { class: i, predicted_s });
@@ -284,6 +318,12 @@ impl FleetRouter {
             }
         }
         let Some(fastest) = fastest else {
+            if over_budget > 0 {
+                return Err(Error::Queue(format!(
+                    "no admitted device class has memory headroom for '{variant}': \
+                     {over_budget} over their learned budget, the rest quarantined"
+                )));
+            }
             return Err(Error::Queue(format!(
                 "every device class is quarantined; no route for {num_steps} steps \
                  of '{variant}'"
@@ -431,6 +471,45 @@ mod tests {
             .route_observed_filtered("mobile", 20, None, &no_overhead, &none)
             .unwrap_err();
         assert!(err.to_string().contains("quarantined"), "{err}");
+    }
+
+    #[test]
+    fn learned_memory_budgets_reroute_or_refuse() {
+        let r = two_class_router();
+        let no_overhead = |_: usize| None;
+        let all = |_: usize| true;
+        let peak = |class: usize| {
+            r.plans()
+                .plan(&r.fleet().classes[class].device, "mobile")
+                .unwrap()
+                .peak_memory
+        };
+        let (p0, p1) = (peak(0), peak(1));
+
+        // budgets above both peaks change nothing
+        let roomy = move |_: usize| Some(p0.max(p1) + 1);
+        let base = r.route("mobile", 20, None).unwrap().class;
+        let route = r
+            .route_pressure_filtered("mobile", 20, None, &no_overhead, &all, &roomy)
+            .unwrap();
+        assert_eq!(route.class, base);
+
+        // the cheap class's learned budget dropped below its peak:
+        // the request reroutes to the class with headroom
+        let squeezed = move |class: usize| if class == base { Some(p1.min(p0) / 2) } else { None };
+        let route = r
+            .route_pressure_filtered("mobile", 20, None, &no_overhead, &all, &squeezed)
+            .unwrap();
+        assert_ne!(route.class, base, "pressure rerouted the request");
+
+        // every class over budget: refused with a memory message,
+        // even deadline-less
+        let none = |_: usize| Some(0usize);
+        let err = r
+            .route_pressure_filtered("mobile", 20, None, &no_overhead, &all, &none)
+            .unwrap_err();
+        assert!(err.to_string().contains("memory headroom"), "{err}");
+        assert!(matches!(err, Error::Queue(_)), "{err}");
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Memory-pressure acceptance tests: capacity-driven OOM recovery
+//! through the learned degradation ladder.
+//!
+//! Pinned invariants:
+//! * with the device's capacity mode set *between* a 1-wide and a
+//!   4-wide working set, OOM arises organically mid-batch — and every
+//!   submitted request still resolves **exactly once**, because OOM'd
+//!   rows are retried *degraded* (smaller seat cap, shed residency,
+//!   W8A8 under the learned budget), never verbatim;
+//! * an executor with nothing left to give up fails its OOM'd request
+//!   immediately — zero verbatim retries against an exhausted
+//!   allocator;
+//! * the governor's learned budget converges below the injected
+//!   capacity and re-probes upward after a sustained OOM-free streak
+//!   (breaker-style hysteresis), restoring the shipped budget at the
+//!   ground rung;
+//! * the batching/continuous/chaos parity suites run with capacity
+//!   mode *off* — nothing here touches them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mobile_diffusion::config::AppConfig;
+use mobile_diffusion::coordinator::{
+    GenerateRequest, PressureGovernor, PressureOptions, Priority, Server, SupervisionOptions,
+    WorkerExecutor, WorkerPool,
+};
+use mobile_diffusion::error::{Error, Result};
+use mobile_diffusion::pipeline::{
+    BatchRequest, ExecOptions, GenerateResult, PipelinedExecutor, StageTimings,
+};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::testkit::{self, FakeArtifactSpec};
+
+fn small_spec() -> FakeArtifactSpec {
+    FakeArtifactSpec {
+        unet_weight_elems: 4_096,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    }
+}
+
+/// Measure the device-byte peak of a `width`-wide fault-free batch on
+/// a fresh uncapped executor — the calibration for the capacity cap.
+fn measured_peak(dir: &std::path::Path, width: usize) -> u64 {
+    let m = Manifest::load(dir).unwrap();
+    let mut ex =
+        PipelinedExecutor::new(m, ExecOptions { num_steps: 4, ..Default::default() }).unwrap();
+    let batch: Vec<BatchRequest> =
+        (0..width).map(|i| BatchRequest::new(&format!("prompt {i}"), i as u64)).collect();
+    for r in ex.generate_batch(&batch, "mobile") {
+        r.unwrap();
+    }
+    ex.engine.device_stats().mem_peak()
+}
+
+/// The headline guarantee: a capacity cap sized so one row fits but a
+/// wide batch cannot, and still every request completes exactly once —
+/// the OOM is absorbed by checkpoint + degraded retry, and the
+/// governor walks away with a learned budget below the shipped one.
+#[test]
+fn capacity_oom_recovers_via_degraded_retries_and_learns_a_budget() {
+    let dir = testkit::fake_artifacts_dir("pressure_e2e", &small_spec()).unwrap();
+    let peak1 = measured_peak(&dir, 1);
+    let peak4 = measured_peak(&dir, 4);
+    assert!(
+        peak4 > peak1,
+        "a 4-wide batch must need more device bytes than a single row ({peak1} vs {peak4})"
+    );
+    // one row fits with margin; two or more rows exceed the cap, so
+    // the first multi-row session OOMs deterministically
+    let cap = peak1 + (peak4 - peak1) / 4;
+
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = 4;
+    cfg.num_workers = 1;
+    cfg.max_batch = 4;
+    cfg.retry_limit = 4;
+    cfg.retry_backoff_ms = 1;
+    // a finite planner budget gives the governor a shipped byte figure
+    // to shrink from (unbudgeted deployments keep ladder/counters only)
+    cfg.memory_budget_mb = 64.0;
+    cfg.device_mem_mb = Some(cap as f64 / 1e6);
+    let mut server = Server::start(&cfg).unwrap();
+
+    let receivers: Vec<_> =
+        (0..6).map(|i| server.submit(&format!("prompt {i}"), i as u64).unwrap()).collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .expect("every request gets a terminal reply")
+            .unwrap_or_else(|e| panic!("request {i} must complete via degraded retry: {e}"));
+        assert!(resp.image.iter().all(|v| v.is_finite()), "request {i}");
+        assert!(rx.recv().is_err(), "request {i} must never resolve twice");
+    }
+
+    server.with_metrics(|m| {
+        assert_eq!(m.stage.requests_ok, 6, "all six completed");
+        assert_eq!(m.stage.requests_failed, 0);
+        assert!(m.ooms >= 1, "the capacity cap actually bit: ooms={}", m.ooms);
+        assert!(
+            m.degraded_retries >= 1,
+            "OOM'd rows came back degraded: degraded_retries={}",
+            m.degraded_retries
+        );
+    });
+    let gov = server.pressure();
+    assert!(gov.ooms(0) >= 1);
+    assert!(
+        gov.effective_budget(0) < gov.shipped_budget(0),
+        "the governor learned a budget below shipped"
+    );
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("pressure:"), "{report}");
+    assert!(report.contains("ooms"), "{report}");
+}
+
+/// OOMs until `degrade` has been called, then succeeds — the mock
+/// analog of a device whose allocator recovers once the plan shrinks.
+struct OomUntilDegradedExec {
+    degraded: bool,
+    executions: Arc<AtomicUsize>,
+}
+
+impl WorkerExecutor for OomUntilDegradedExec {
+    fn execute(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+        self.executions.fetch_add(1, Ordering::SeqCst);
+        if !self.degraded {
+            return Err(Error::Oom("allocator exhausted".into()));
+        }
+        Ok(GenerateResult {
+            image: vec![0.0; 4],
+            image_size: 2,
+            latent: vec![req.seed as f32],
+            timings: StageTimings { denoise_steps: 1, total_s: 0.001, ..Default::default() },
+            peak_memory: 1,
+        })
+    }
+
+    fn degrade(&mut self, _level: u8, _effective_budget: usize) -> Option<String> {
+        self.degraded = true;
+        Some("shrunk".into())
+    }
+}
+
+/// Same allocator, but nothing left to give up: `degrade` declines.
+struct NoHeadroomExec {
+    executions: Arc<AtomicUsize>,
+}
+
+impl WorkerExecutor for NoHeadroomExec {
+    fn execute(&mut self, _req: &GenerateRequest) -> Result<GenerateResult> {
+        self.executions.fetch_add(1, Ordering::SeqCst);
+        Err(Error::Oom("allocator exhausted".into()))
+    }
+}
+
+/// The never-verbatim contract at pool level: a degradable executor
+/// completes OOM'd work on the changed plan, while an executor that
+/// cannot degrade fails its caller after exactly one device attempt —
+/// where a transient-style verbatim retry loop would have burned the
+/// whole retry budget against the same exhausted allocator.
+#[test]
+fn degraded_retry_completes_where_verbatim_retry_would_exhaust() {
+    let classes = [("default".to_string(), 1usize)];
+    let supervision = SupervisionOptions {
+        retry_limit: 3,
+        retry_backoff: Duration::from_millis(1),
+        pressure: Some(Arc::new(PressureGovernor::new(
+            vec![1_000_000],
+            PressureOptions::default(),
+        ))),
+        ..SupervisionOptions::default()
+    };
+
+    // degradable: the OOM is absorbed
+    let execs = Arc::new(AtomicUsize::new(0));
+    let e2 = Arc::clone(&execs);
+    let pool = WorkerPool::start_supervised(
+        &classes,
+        8,
+        1,
+        false,
+        supervision.clone(),
+        move |_, _c: usize, _n: &str| {
+            Ok(OomUntilDegradedExec { degraded: false, executions: Arc::clone(&e2) })
+        },
+    )
+    .unwrap();
+    let rx = pool.submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None).unwrap();
+    let resp = rx.recv().unwrap().expect("the degraded retry completes");
+    assert_eq!(resp.id, 1);
+    assert!(rx.recv().is_err(), "exactly one terminal reply");
+    assert_eq!(execs.load(Ordering::SeqCst), 2, "one OOM attempt + one degraded attempt");
+    pool.with_metrics(|m| {
+        assert_eq!(m.ooms, 1);
+        assert_eq!(m.degraded_retries, 1);
+        assert_eq!(m.stage.requests_ok, 1);
+    });
+
+    // undegradable: fail fast, never re-run the identical plan
+    let execs = Arc::new(AtomicUsize::new(0));
+    let e2 = Arc::clone(&execs);
+    let pool = WorkerPool::start_supervised(
+        &classes,
+        8,
+        1,
+        false,
+        supervision,
+        move |_, _c: usize, _n: &str| Ok(NoHeadroomExec { executions: Arc::clone(&e2) }),
+    )
+    .unwrap();
+    let rx = pool.submit(GenerateRequest::new(1, "p", 1), Priority::Normal, None).unwrap();
+    let err = rx.recv().unwrap().expect_err("nothing left to degrade");
+    assert!(err.to_string().contains("no degradation left"), "{err}");
+    assert!(rx.recv().is_err(), "exactly one terminal reply");
+    assert_eq!(
+        execs.load(Ordering::SeqCst),
+        1,
+        "an OOM'd plan is never retried verbatim: the allocator saw exactly one attempt"
+    );
+    pool.with_metrics(|m| {
+        assert_eq!(m.retries, 0, "zero verbatim retries");
+        assert_eq!(m.stage.requests_failed, 1);
+    });
+}
+
+/// The learning loop in isolation: against a device whose true
+/// capacity is below the shipped budget, repeated OOMs converge the
+/// learned budget under that capacity (never under the floor), and a
+/// sustained OOM-free streak re-probes it back up to shipped.
+#[test]
+fn learned_budget_converges_below_capacity_and_reprobes_upward() {
+    let shipped = 1_000_000usize;
+    let true_capacity = 400_000usize; // what the device actually grants
+    let gov = PressureGovernor::new(
+        vec![shipped],
+        PressureOptions { probe_streak: 3, ..PressureOptions::default() },
+    );
+
+    // every admission above the true capacity OOMs; the governor
+    // shrinks until admission stops over-committing
+    let mut rounds = 0;
+    while gov.effective_budget(0) > true_capacity {
+        gov.on_oom(0);
+        rounds += 1;
+        assert!(rounds < 32, "the ladder must converge, not oscillate");
+    }
+    assert!(gov.effective_budget(0) <= true_capacity, "admission now fits the device");
+    assert!(
+        gov.effective_budget(0) >= (shipped as f64 * 0.25) as usize,
+        "the floor keeps the class serving"
+    );
+    assert!(!gov.admits_peak(0, shipped), "shipped-sized plans are now filtered");
+    assert!(gov.admits_peak(0, gov.effective_budget(0)));
+
+    // hysteresis: each full OOM-free streak steps one rung down and
+    // probes the budget upward; the ground rung restores shipped
+    let mut budgets = vec![gov.effective_budget(0)];
+    for _ in 0..(mobile_diffusion::coordinator::pressure::MAX_LEVEL as usize) {
+        for _ in 0..3 {
+            gov.on_success(0);
+        }
+        budgets.push(gov.effective_budget(0));
+    }
+    assert!(
+        budgets.windows(2).all(|w| w[0] <= w[1]),
+        "re-probing is monotone upward: {budgets:?}"
+    );
+    assert_eq!(gov.level(0), 0, "fully recovered");
+    assert_eq!(gov.effective_budget(0), shipped, "ground rung restores the shipped budget");
+    assert!(gov.probes(0) >= 1);
+}
+
+/// Capacity accounting is per client: ledger-style charge on creation,
+/// credit on drop, with the peak watermark the e2e test calibrates
+/// against.  (The stub's own tests cover rejection; this pins the
+/// public surface integration tests rely on.)
+#[test]
+fn device_capacity_mode_tracks_live_bytes_and_lifts() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let stats = client.stats();
+    assert_eq!(stats.device_mem(), None, "unlimited by default");
+    stats.set_device_mem(Some(64));
+    let buf = client.buffer_from_host_buffer(&[1.0f32; 8], &[8], None).unwrap(); // 32 B
+    assert_eq!(stats.mem_used(), 32);
+    assert!(
+        client.buffer_from_host_buffer(&[1.0f32; 12], &[12], None).is_err(),
+        "48 B over the cap"
+    );
+    assert_eq!(stats.oom_rejections(), 1);
+    drop(buf);
+    assert_eq!(stats.mem_used(), 0, "dropped buffers credit their bytes back");
+    stats.set_device_mem(None);
+    let _big = client.buffer_from_host_buffer(&[1.0f32; 64], &[64], None).unwrap();
+    assert!(stats.mem_peak() >= 256, "peak watermark survives");
+}

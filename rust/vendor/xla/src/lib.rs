@@ -292,6 +292,18 @@ pub struct DeviceStats {
     activation_quant: AtomicBool,
     /// dispatches whose outputs went through the int8 round-trip
     quantized_dispatches: AtomicU64,
+    /// Device memory capacity in bytes (0 = unlimited).  With a cap
+    /// set, buffer creations and dispatch outputs that would push
+    /// accounted usage past it fail with an OOM fault — capacity
+    /// pressure, not a scheduled fault, so runs stay reproducible.
+    mem_cap: AtomicU64,
+    /// Bytes currently held by live buffers on this client.
+    mem_used: AtomicU64,
+    /// High-water mark of `mem_used`.
+    mem_peak: AtomicU64,
+    /// Allocations rejected by the capacity accountant (distinct from
+    /// the scheduled `injected_*` fault counters).
+    oom_rejections: AtomicU64,
 }
 
 impl DeviceStats {
@@ -358,6 +370,64 @@ impl DeviceStats {
     /// Dispatches whose outputs were int8 round-tripped.
     pub fn quantized_dispatches(&self) -> u64 {
         self.quantized_dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Install (or clear, with `None`) a device memory capacity in
+    /// bytes.  Live buffers keep their charge across the change; a cap
+    /// below current usage only rejects *new* allocations until drops
+    /// free enough.
+    pub fn set_device_mem(&self, cap: Option<u64>) {
+        self.mem_cap.store(cap.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// Configured device memory capacity, if any.
+    pub fn device_mem(&self) -> Option<u64> {
+        match self.mem_cap.load(Ordering::Relaxed) {
+            0 => None,
+            cap => Some(cap),
+        }
+    }
+
+    /// Bytes currently held by live buffers.
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of buffer bytes held at once.
+    pub fn mem_peak(&self) -> u64 {
+        self.mem_peak.load(Ordering::Relaxed)
+    }
+
+    /// Allocations rejected for exceeding the device memory capacity.
+    pub fn oom_rejections(&self) -> u64 {
+        self.oom_rejections.load(Ordering::Relaxed)
+    }
+
+    /// Account `bytes` of device memory for a new allocation.  Usage
+    /// and peak are tracked even without a cap so tests can calibrate
+    /// real footprints; with a cap, allocations past it are rejected
+    /// with an OOM fault and leave usage untouched.
+    fn charge(&self, bytes: u64, what: &str) -> Result<(), Error> {
+        let used = self.mem_used.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        let cap = self.mem_cap.load(Ordering::Relaxed);
+        if cap > 0 && used > cap {
+            self.mem_used.fetch_sub(bytes, Ordering::Relaxed);
+            self.oom_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::fault(
+                format!(
+                    "device memory exhausted: {what} needs {bytes} B with {} of {cap} B in use",
+                    used - bytes
+                ),
+                FaultKind::Oom,
+            ));
+        }
+        self.mem_peak.fetch_max(used, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release `bytes` previously charged (buffer drop).
+    fn credit(&self, bytes: u64) {
+        self.mem_used.fetch_sub(bytes, Ordering::Relaxed);
     }
 
     /// Install (or clear, with `None`) the client's fault schedule.
@@ -581,7 +651,15 @@ pub struct PjRtDevice {
 pub struct PjRtBuffer {
     data: BufData,
     dims: Vec<usize>,
+    /// Device bytes charged at creation, credited back on drop.
+    bytes: u64,
     stats: Arc<DeviceStats>,
+}
+
+impl Drop for PjRtBuffer {
+    fn drop(&mut self) {
+        self.stats.credit(self.bytes);
+    }
 }
 
 impl PjRtBuffer {
@@ -708,11 +786,13 @@ impl PjRtClient {
                 data.len()
             )));
         }
-        self.stats
-            .record_transfer((std::mem::size_of_val(data)) as u64);
+        let bytes = std::mem::size_of_val(data) as u64;
+        self.stats.charge(bytes, "buffer_from_host_buffer")?;
+        self.stats.record_transfer(bytes);
         Ok(PjRtBuffer {
             data: T::to_data(data),
             dims: dims.to_vec(),
+            bytes,
             stats: Arc::clone(&self.stats),
         })
     }
@@ -754,10 +834,13 @@ impl PjRtClient {
                 )
             }
         };
-        self.stats.record_transfer(data.len() as u64);
+        let bytes = data.len() as u64;
+        self.stats.charge(bytes, "buffer_from_host_raw_bytes")?;
+        self.stats.record_transfer(bytes);
         Ok(PjRtBuffer {
             data: payload,
             dims: dims.to_vec(),
+            bytes,
             stats: Arc::clone(&self.stats),
         })
     }
@@ -1036,10 +1119,13 @@ impl PjRtLoadedExecutable {
             self.stats.quantized_dispatches.fetch_add(1, Ordering::Relaxed);
         }
 
+        let bytes = (4 * rows * rowlen) as u64;
+        self.stats.charge(bytes, &format!("{} output", p.name))?;
         self.stats.record_execution(&p.name, rows as u64);
         Ok(vec![vec![PjRtBuffer {
             data: BufData::Tuple(vec![out]),
             dims: vec![rows, rowlen],
+            bytes,
             stats: Arc::clone(&self.stats),
         }]])
     }
@@ -1312,6 +1398,76 @@ mod tests {
         assert!(FaultPlan::parse("dispatch:x:transient", 0).is_err());
         assert!(FaultPlan::parse("poke:1:transient", 0).is_err());
         assert!(FaultPlan::parse("dispatch:1:weird", 0).is_err());
+    }
+
+    #[test]
+    fn memory_accounting_tracks_live_buffers_even_uncapped() {
+        let c = client();
+        assert_eq!(c.stats().device_mem(), None);
+        let a = c
+            .buffer_from_host_buffer::<f32>(&[0.0; 4], &[4], None)
+            .unwrap();
+        let b = c
+            .buffer_from_host_buffer::<f32>(&[0.0; 2], &[2], None)
+            .unwrap();
+        assert_eq!(c.stats().mem_used(), 24);
+        assert_eq!(c.stats().mem_peak(), 24);
+        drop(a);
+        assert_eq!(c.stats().mem_used(), 8);
+        assert_eq!(c.stats().mem_peak(), 24, "peak is a high-water mark");
+        drop(b);
+        assert_eq!(c.stats().mem_used(), 0);
+        assert_eq!(c.stats().oom_rejections(), 0);
+    }
+
+    #[test]
+    fn capacity_cap_rejects_with_oom_and_recovers_on_drop() {
+        let c = client();
+        c.stats().set_device_mem(Some(24));
+        assert_eq!(c.stats().device_mem(), Some(24));
+        let a = c
+            .buffer_from_host_buffer::<f32>(&[0.0; 4], &[4], None)
+            .unwrap();
+        // 16 of 24 B in use: a 12 B upload must fail, organically
+        let err = c
+            .buffer_from_host_buffer::<f32>(&[0.0; 3], &[3], None)
+            .unwrap_err();
+        assert_eq!(err.fault_kind(), Some(FaultKind::Oom));
+        assert_eq!(c.stats().oom_rejections(), 1);
+        assert_eq!(c.stats().mem_used(), 16, "rejected alloc left no charge");
+        assert_eq!(
+            c.stats().injected_fatal(),
+            0,
+            "capacity OOM is not a scheduled fault"
+        );
+        // dropping the resident buffer restores headroom
+        drop(a);
+        assert!(c.buffer_from_host_buffer::<f32>(&[0.0; 3], &[3], None).is_ok());
+        // clearing the cap lifts the limit but keeps accounting
+        c.stats().set_device_mem(None);
+        assert!(c.buffer_from_host_buffer::<f32>(&[0.0; 64], &[64], None).is_ok());
+    }
+
+    #[test]
+    fn dispatch_outputs_are_charged_and_can_oom() {
+        let c = client();
+        let e = exe(&c, unet_program());
+        let w = c.buffer_from_host_buffer::<f32>(&[0.5; 4], &[4], None).unwrap();
+        let l = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[1, 2], None)
+            .unwrap();
+        let t = c.buffer_from_host_buffer::<f32>(&[9.0], &[1], None).unwrap();
+        let inputs = c.stats().mem_used();
+        // out like 0 => 2 elements = 8 B for the output tuple
+        c.stats().set_device_mem(Some(inputs + 4));
+        let err = e.execute_b(&[&w, &l, &t]).unwrap_err();
+        assert_eq!(err.fault_kind(), Some(FaultKind::Oom));
+        assert_eq!(c.stats().executions_of("unet"), 0, "OOM'd dispatch not counted");
+        c.stats().set_device_mem(Some(inputs + 8));
+        let out = e.execute_b(&[&w, &l, &t]).unwrap();
+        assert_eq!(c.stats().mem_used(), inputs + 8);
+        drop(out);
+        assert_eq!(c.stats().mem_used(), inputs);
     }
 
     #[test]
