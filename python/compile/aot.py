@@ -157,6 +157,20 @@ def scheduler_manifest() -> dict:
         eps = 0.1 * latent
         latent = scheduler.ddim_step(latent, eps, t, t_prev, acp)
         trace.append([float(v) for v in latent])
+    # golden multistep trace: same latent0/surrogate, full 8-step
+    # DPM-Solver++(2M) schedule (history accumulates, so the whole
+    # schedule is traced — a prefix would not pin the second-order path)
+    ms_ts = scheduler.timesteps(cfg, num_steps=8)
+    latent = latent0.copy()
+    eps_prev, t_last = None, -1
+    multistep_trace = []
+    for i, t in enumerate(ms_ts):
+        t_prev = ms_ts[i + 1] if i + 1 < len(ms_ts) else -1
+        eps = 0.1 * latent
+        latent = scheduler.dpm2m_step(latent, eps, eps_prev, t, t_prev,
+                                      t_last, acp)
+        eps_prev, t_last = eps, t
+        multistep_trace.append([float(v) for v in latent])
     return {
         "num_train_timesteps": cfg.num_train_timesteps,
         "beta_start": cfg.beta_start,
@@ -169,6 +183,7 @@ def scheduler_manifest() -> dict:
             "latent0": [float(v) for v in latent0],
             "eps_scale": 0.1,
             "trace": trace,
+            "multistep_trace": multistep_trace,
         },
     }
 

@@ -1,24 +1,33 @@
-"""DDIM sampler (Song et al. 2021) + distilled step schedules.
+"""Samplers (DDIM + DPM-Solver++ multistep) + distilled step schedules.
 
 This is the *reference* implementation the Rust scheduler
 (rust/src/scheduler/) is validated against: ``aot.py`` dumps the full
-alphas_cumprod table and a golden 20-step trace into the manifest, and
-Rust tests replay them bit-for-bit (f64 -> f32 at the boundary).
+alphas_cumprod table, a golden 20-step DDIM trace and a golden 8-step
+multistep trace into the manifest, and Rust tests replay them
+bit-for-bit (f64 -> f32 at the boundary).
 
 The paper reduces to "20 effective denoising steps" via progressive
 distillation (Salimans & Ho 2022; Meng et al. 2023).  We do not train a
 distilled student (out of scope of the deployment system — see DESIGN.md
-substitutions); the schedule machinery below supports both the plain
-DDIM stride schedule and the halved progressive schedules the distilled
-checkpoints would consume, which is the part the serving system touches.
+substitutions); the schedule machinery below supports the plain DDIM
+stride schedule, the halved progressive schedules the distilled
+checkpoints would consume, and a second-order multistep solver
+(DPM-Solver++(2M) style, Lu et al. 2022) in eps form — the parts the
+serving system touches.
 """
 
+import dataclasses
 import math
 from typing import List
 
 import numpy as np
 
 from .config import SchedulerConfig
+
+# teacher schedule length of the distilled family: both distilled
+# members (8-step, 4-step) are exact halving levels of one 32-step
+# teacher.  Must match DISTILL_BASE_STEPS on the Rust side.
+DISTILL_BASE_STEPS = 32
 
 
 def betas(cfg: SchedulerConfig) -> np.ndarray:
@@ -52,6 +61,16 @@ def progressive_timesteps(cfg: SchedulerConfig, halvings: int) -> List[int]:
     return timesteps(cfg, num_steps=n)
 
 
+def distilled_timesteps(cfg: SchedulerConfig, halvings: int) -> List[int]:
+    """Schedule of a distilled student: ``halvings`` halving levels of
+    the fixed :data:`DISTILL_BASE_STEPS`-step teacher, regardless of the
+    configured inference count (the serving side's distilled8 is 2
+    halvings, distilled4 is 3).  Mirrors
+    ``Ddim::progressive_timesteps_from`` on the Rust side."""
+    teacher = dataclasses.replace(cfg, num_inference_steps=DISTILL_BASE_STEPS)
+    return progressive_timesteps(teacher, halvings)
+
+
 def ddim_step(latent: np.ndarray, eps: np.ndarray, t: int, t_prev: int,
               acp: np.ndarray) -> np.ndarray:
     """One deterministic (eta = 0) DDIM update."""
@@ -59,6 +78,35 @@ def ddim_step(latent: np.ndarray, eps: np.ndarray, t: int, t_prev: int,
     a_prev = acp[t_prev] if t_prev >= 0 else 1.0
     x0 = (latent - math.sqrt(1.0 - a_t) * eps) / math.sqrt(a_t)
     return math.sqrt(a_prev) * x0 + math.sqrt(1.0 - a_prev) * eps
+
+
+def dpm2m_step(latent: np.ndarray, eps: np.ndarray, eps_prev, t: int,
+               t_prev: int, t_last: int, acp: np.ndarray) -> np.ndarray:
+    """One DPM-Solver++(2M)-style second-order multistep update, eps
+    form.  ``eps_prev`` is the previous step's guided eps prediction
+    (``None`` at the schedule head) made at timestep ``t_last``; the
+    noise estimate is extrapolated linearly in log-SNR across the last
+    two schedule points and applied with the first-order transfer — so
+    the history-less path is exactly :func:`ddim_step`, as is the final
+    step to t=0 (``t_prev < 0``), whose log-SNR step is unbounded.
+    Must stay bit-identical to ``Dpm2mSolver::step`` on the Rust side.
+    """
+    if eps_prev is None or t_prev < 0 or t_last < 0:
+        return ddim_step(latent, eps, t, t_prev, acp)
+    a_t = acp[t]
+    a_prev = acp[t_prev]
+    a_last = acp[t_last]
+
+    def lam(a):
+        return math.log(math.sqrt(a) / math.sqrt(1.0 - a))
+
+    h = lam(a_prev) - lam(a_t)
+    h_last = lam(a_t) - lam(a_last)
+    r = h_last / h
+    c = 1.0 / (2.0 * r)
+    d = (1.0 + c) * eps - c * eps_prev
+    x0 = (latent - math.sqrt(1.0 - a_t) * d) / math.sqrt(a_t)
+    return math.sqrt(a_prev) * x0 + math.sqrt(1.0 - a_prev) * d
 
 
 def guide(eps_uncond: np.ndarray, eps_cond: np.ndarray, scale: float) -> np.ndarray:
@@ -82,4 +130,23 @@ def sample(unet_call, latent: np.ndarray, context2: np.ndarray,
         eps2 = unet_call(latent2, t)
         eps = guide(eps2[0:1], eps2[1:2], cfg.guidance_scale)
         latent = ddim_step(latent, eps, t, t_prev, acp)
+    return latent
+
+
+def sample_multistep(unet_call, latent: np.ndarray, context2: np.ndarray,
+                     cfg: SchedulerConfig, num_steps: int = None) -> np.ndarray:
+    """Full deterministic DPM-Solver++(2M) loop: :func:`sample` with the
+    second-order update and a one-deep eps history.  Mirrors the Rust
+    multistep denoise loop exactly (first step and final step run first
+    order)."""
+    acp = alphas_cumprod(cfg)
+    ts = timesteps(cfg, num_steps)
+    eps_prev, t_last = None, -1
+    for i, t in enumerate(ts):
+        t_prev = ts[i + 1] if i + 1 < len(ts) else -1
+        latent2 = np.concatenate([latent, latent], axis=0)
+        eps2 = unet_call(latent2, t)
+        eps = guide(eps2[0:1], eps2[1:2], cfg.guidance_scale)
+        latent = dpm2m_step(latent, eps, eps_prev, t, t_prev, t_last, acp)
+        eps_prev, t_last = eps, t
     return latent

@@ -1,4 +1,6 @@
-"""DDIM scheduler reference: math invariants + golden compatibility."""
+"""Sampler reference: math invariants + golden compatibility."""
+
+import math
 
 import numpy as np
 import pytest
@@ -35,6 +37,20 @@ class TestSchedule:
         with pytest.raises(ValueError):
             scheduler.progressive_timesteps(CFG, 12)
 
+    def test_distilled_timesteps_halve_the_fixed_teacher(self):
+        """The distilled family halves a 32-step teacher regardless of
+        the configured inference count (matches the Rust samplers)."""
+        for halvings, want in [(0, 32), (1, 16), (2, 8), (3, 4)]:
+            ts = scheduler.distilled_timesteps(CFG, halvings)
+            assert len(ts) == want
+            assert ts[-1] == 0
+            assert ts == sorted(ts, reverse=True)
+        # distilled8 / distilled4 are exactly these levels
+        assert len(scheduler.distilled_timesteps(CFG, 2)) == 8
+        assert len(scheduler.distilled_timesteps(CFG, 3)) == 4
+        with pytest.raises(ValueError):
+            scheduler.distilled_timesteps(CFG, 6)
+
 
 class TestDdimStep:
     def test_zero_eps_converges_to_x0(self):
@@ -64,6 +80,54 @@ class TestDdimStep:
         eps = np.array([0.2, 0.4])
         out = scheduler.ddim_step(latent, eps, 300, 300, acp)
         np.testing.assert_allclose(out, latent, rtol=1e-10)
+
+
+class TestDpm2mStep:
+    def test_no_history_is_exactly_ddim(self):
+        acp = scheduler.alphas_cumprod(CFG)
+        latent = np.array([1.0, -2.0, 0.5])
+        eps = np.array([0.3, -1.2, 2.0])
+        out = scheduler.dpm2m_step(latent, eps, None, 500, 450, -1, acp)
+        np.testing.assert_array_equal(
+            out, scheduler.ddim_step(latent, eps, 500, 450, acp))
+
+    def test_final_step_is_first_order(self):
+        acp = scheduler.alphas_cumprod(CFG)
+        latent = np.array([1.0, -2.0, 0.5])
+        eps = np.array([0.3, -1.2, 2.0])
+        prev = np.array([0.1, 0.2, 0.3])
+        out = scheduler.dpm2m_step(latent, eps, prev, 50, -1, 100, acp)
+        np.testing.assert_array_equal(
+            out, scheduler.ddim_step(latent, eps, 50, -1, acp))
+
+    def test_constant_eps_collapses_to_first_order(self):
+        """With eps_prev == eps the extrapolated estimate D equals eps,
+        so the second-order update is the DDIM update exactly."""
+        acp = scheduler.alphas_cumprod(CFG)
+        latent = np.array([0.9, -1.1])
+        eps = np.array([0.7, -0.4])
+        out = scheduler.dpm2m_step(latent, eps, eps.copy(), 500, 450, 550, acp)
+        np.testing.assert_allclose(
+            out, scheduler.ddim_step(latent, eps, 500, 450, acp), rtol=1e-12)
+
+    def test_second_order_matches_reference_formula(self):
+        acp = scheduler.alphas_cumprod(CFG)
+        t_last, t, t_prev = 550, 500, 450
+        latent = np.array([1.0, -2.0])
+        eps = np.array([0.3, -1.2])
+        prev = np.array([0.5, -1.0])
+        out = scheduler.dpm2m_step(latent, eps, prev, t, t_prev, t_last, acp)
+
+        def lam(a):
+            return math.log(math.sqrt(a) / math.sqrt(1.0 - a))
+
+        h = lam(acp[t_prev]) - lam(acp[t])
+        h_last = lam(acp[t]) - lam(acp[t_last])
+        c = h / (2.0 * h_last)
+        d = (1.0 + c) * eps - c * prev
+        x0 = (latent - math.sqrt(1.0 - acp[t]) * d) / math.sqrt(acp[t])
+        want = math.sqrt(acp[t_prev]) * x0 + math.sqrt(1.0 - acp[t_prev]) * d
+        np.testing.assert_allclose(out, want, rtol=1e-12)
 
 
 class TestGuidance:
@@ -106,3 +170,33 @@ class TestSampleLoop:
         out = scheduler.sample(lambda l, t: 0.05 * l, latent,
                                np.zeros((2, 1, 1)), CFG, num_steps=5)
         assert np.isfinite(out).all()
+
+    def test_multistep_diverges_from_ddim_then_lands_close(self):
+        """Same surrogate UNet, 8 steps: the multistep loop must change
+        the trajectory (second order is real) yet land near the DDIM
+        endpoint (it estimates the same ODE solution)."""
+        latent = np.array([[1.0, -0.5, 0.25, 2.0]])
+        ctx = np.zeros((2, 1, 1))
+
+        def unet_call(lat2, t):
+            return 0.1 * lat2
+
+        a = scheduler.sample(unet_call, latent.copy(), ctx, CFG, num_steps=8)
+        b = scheduler.sample_multistep(unet_call, latent.copy(), ctx, CFG,
+                                       num_steps=8)
+        assert np.abs(a - b).max() > 0, "second order must differ"
+        np.testing.assert_allclose(b, a, rtol=0.2)
+
+    def test_multistep_single_step_equals_ddim(self):
+        """A one-step schedule never accumulates history, so the two
+        loops are identical."""
+        latent = np.array([[0.4, -0.7]])
+        ctx = np.zeros((2, 1, 1))
+
+        def unet_call(lat2, t):
+            return 0.05 * lat2
+
+        a = scheduler.sample(unet_call, latent.copy(), ctx, CFG, num_steps=1)
+        b = scheduler.sample_multistep(unet_call, latent.copy(), ctx, CFG,
+                                       num_steps=1)
+        np.testing.assert_array_equal(a, b)

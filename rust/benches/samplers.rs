@@ -1,0 +1,176 @@
+//! Few-step sampler family vs the 50-step DDIM baseline (paper: "20
+//! effective denoising steps" via distillation; here the serving-side
+//! claim).  Emits `BENCH_samplers.json` (repo root).
+//!
+//! The claim is *shape* (absolute numbers are synthetic — stub
+//! backend): at matched batch width, an 8-step request (DPM-Solver++
+//! multistep or the distilled 8-step schedule) completes in at most
+//! 1/4 of the 50-step DDIM wall-clock, and every sampler still issues
+//! exactly one UNet dispatch per step index for the whole batch.
+//!
+//!     cargo bench --bench samplers            # full workload
+//!     cargo bench --bench samplers -- --fast  # CI smoke mode
+
+use std::path::Path;
+use std::time::Instant;
+
+use mobile_diffusion::pipeline::{BatchRequest, ExecOptions, ExecOverrides, PipelinedExecutor};
+use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::scheduler::Sampler;
+use mobile_diffusion::testkit::{fake_artifacts_dir, FakeArtifactSpec};
+
+fn fail(msg: &str) -> ! {
+    eprintln!("FAIL: {msg}");
+    std::process::exit(1);
+}
+
+const BATCH: usize = 4;
+
+struct Row {
+    name: &'static str,
+    requested: usize,
+    steps: usize,
+    wall_s: f64,
+    dispatches: u64,
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let reps = if fast { 2 } else { 5 };
+    let spec = FakeArtifactSpec {
+        unet_weight_elems: 16_384,
+        encoder_weight_elems: 512,
+        decoder_weight_elems: 512,
+        ..Default::default()
+    };
+    let dir = fake_artifacts_dir("bench_samplers", &spec).unwrap();
+
+    // (sampler, requested steps): the distilled members pin their own
+    // count, so they are driven at the 50-step default to show it
+    let configs = [
+        (Sampler::Ddim, 50usize),
+        (Sampler::Dpm2m, 8),
+        (Sampler::Distilled8, 50),
+        (Sampler::Distilled4, 50),
+    ];
+
+    println!("== few-step samplers vs 50-step DDIM (stub backend, B={BATCH}) ==");
+    let mut rows: Vec<Row> = Vec::new();
+    for (sampler, requested) in configs {
+        let effective = sampler.effective_steps(requested);
+        let mut best = f64::INFINITY;
+        let mut dispatches = 0u64;
+        for _ in 0..reps {
+            let m = Manifest::load(&dir).unwrap();
+            let mut ex =
+                PipelinedExecutor::new(m, ExecOptions { num_steps: 50, ..Default::default() })
+                    .unwrap();
+            // warm the weight caches so the measurement is the step loop
+            let warm = ExecOverrides { num_steps: Some(1), ..Default::default() };
+            ex.generate_with("samplers bench warmup", 0, "mobile", &warm).unwrap();
+
+            let reqs: Vec<BatchRequest> = (0..BATCH)
+                .map(|i| BatchRequest {
+                    prompt: format!("bench prompt {i}"),
+                    seed: i as u64 + 1,
+                    overrides: ExecOverrides {
+                        num_steps: Some(requested),
+                        sampler: Some(sampler),
+                        ..Default::default()
+                    },
+                })
+                .collect();
+            let before = ex.engine.device_stats().executions_of("unet_mobile");
+            let t0 = Instant::now();
+            let results = ex.generate_batch(&reqs, "mobile");
+            let dt = t0.elapsed().as_secs_f64();
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(r) if r.timings.denoise_steps != effective => fail(&format!(
+                        "{}: request {i} ran {} steps, wanted {effective}",
+                        sampler.name(),
+                        r.timings.denoise_steps
+                    )),
+                    Ok(_) => {}
+                    Err(e) => fail(&format!("{}: request {i} failed: {e}", sampler.name())),
+                }
+            }
+            dispatches = ex.engine.device_stats().executions_of("unet_mobile") - before;
+            best = best.min(dt);
+        }
+        println!(
+            "   {:<12} requested {:>2} -> {:>2} steps: {:>8.3} ms wall, {} dispatches",
+            sampler.name(),
+            requested,
+            effective,
+            best * 1e3,
+            dispatches
+        );
+        rows.push(Row {
+            name: sampler.name(),
+            requested,
+            steps: effective,
+            wall_s: best,
+            dispatches,
+        });
+    }
+
+    let baseline = rows[0].wall_s;
+    println!();
+    for r in rows.iter().skip(1) {
+        println!("   {:<12} speedup vs ddim@50: {:.2}x", r.name, baseline / r.wall_s);
+    }
+
+    // ---- artifact ------------------------------------------------
+    let row_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "  {{\"sampler\": \"{}\", \"requested_steps\": {}, ",
+                    "\"effective_steps\": {}, \"wall_s\": {:.6}, ",
+                    "\"unet_dispatches\": {}, \"speedup_vs_ddim50\": {:.3}}}"
+                ),
+                r.name,
+                r.requested,
+                r.steps,
+                r.wall_s,
+                r.dispatches,
+                baseline / r.wall_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"backend\": \"xla-stub\",\n\"fast\": {fast},\n\"batch\": {BATCH},\n\"rows\": [\n{}\n]\n}}\n",
+        row_json.join(",\n")
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_samplers.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    println!("\nwrote {}", out.display());
+
+    // ---- shape enforcement ---------------------------------------
+    for r in &rows {
+        if r.dispatches != r.steps as u64 {
+            fail(&format!(
+                "{}: {} UNet dispatches for {} steps at B={BATCH} — batching broke",
+                r.name, r.dispatches, r.steps
+            ));
+        }
+    }
+    for r in rows.iter().filter(|r| r.steps == 8) {
+        let speedup = baseline / r.wall_s;
+        if speedup < 4.0 {
+            fail(&format!(
+                "{}: 8-step speedup vs 50-step DDIM must be >= 4x, got {speedup:.2}x",
+                r.name
+            ));
+        }
+    }
+    let d4 = rows.iter().find(|r| r.name == "distilled4").unwrap();
+    if baseline / d4.wall_s < 4.0 {
+        fail("distilled4 must beat the 50-step baseline by >= 4x");
+    }
+}

@@ -17,6 +17,10 @@ pub struct AppConfig {
     pub memory_budget_mb: f64,
     pub pipelined: bool,
     pub num_steps: usize,
+    /// "ddim" | "dpm2m" | "distilled4" | "distilled8" — the default
+    /// sampler for requests that don't override it (see
+    /// `scheduler::Sampler`)
+    pub sampler: String,
     pub guidance_scale: f64,
     pub seed: u64,
     pub prompt: String,
@@ -82,6 +86,7 @@ impl Default for AppConfig {
             memory_budget_mb: f64::INFINITY,
             pipelined: true,
             num_steps: 20,
+            sampler: "ddim".into(),
             guidance_scale: 7.5,
             seed: 0,
             prompt: "a photograph of an astronaut riding a horse".into(),
@@ -116,6 +121,7 @@ impl AppConfig {
             pipelined: self.pipelined,
             unet_weights: self.unet_weights.clone(),
             num_steps: self.num_steps,
+            sampler: crate::scheduler::Sampler::parse(&self.sampler).unwrap_or_default(),
             guidance_scale: self.guidance_scale,
             warm_slots: self.warm_slots,
         }
@@ -147,6 +153,9 @@ impl AppConfig {
         }
         if let Some(v) = j.get("num_steps").as_usize() {
             self.num_steps = v;
+        }
+        if let Some(v) = j.get("sampler").as_str() {
+            self.sampler = v.to_string();
         }
         if let Some(v) = j.get("guidance_scale").as_f64() {
             self.guidance_scale = v;
@@ -235,6 +244,7 @@ impl AppConfig {
                         .parse()
                         .map_err(|e| Error::Config(format!("--steps: {e}")))?;
                 }
+                "--sampler" => self.sampler = take(&mut i)?,
                 "--guidance" => {
                     self.guidance_scale = take(&mut i)?
                         .parse()
@@ -338,6 +348,13 @@ impl AppConfig {
         }
         if !["fp32", "int8", "int8_pruned"].contains(&self.unet_weights.as_str()) {
             return Err(Error::Config(format!("bad weights {}", self.unet_weights)));
+        }
+        if crate::scheduler::Sampler::parse(&self.sampler).is_none() {
+            return Err(Error::Config(format!(
+                "bad sampler {} (known: {})",
+                self.sampler,
+                crate::scheduler::Sampler::names().join(", ")
+            )));
         }
         if let Some(spec) = &self.fleet {
             // fail fast on typos: resolve the spec against the planner
@@ -549,6 +566,29 @@ mod tests {
         assert!(c.apply_args(&args(&["--device-mem", "-4"])).is_err(), "negative cap");
         let mut c = AppConfig::default();
         assert!(c.apply_args(&args(&["--device-mem", "tiny"])).is_err(), "bad value");
+    }
+
+    #[test]
+    fn sampler_flag_json_and_validation() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.sampler, "ddim", "first-order DDIM by default");
+        assert_eq!(c.exec_options().sampler, crate::scheduler::Sampler::Ddim);
+        c.apply_args(&args(&["--sampler", "dpm2m"])).unwrap();
+        assert_eq!(c.sampler, "dpm2m");
+        assert_eq!(c.exec_options().sampler, crate::scheduler::Sampler::Dpm2m);
+
+        let j = Json::parse(r#"{"sampler": "distilled8"}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.sampler, "distilled8");
+        assert_eq!(
+            c.exec_options().sampler,
+            crate::scheduler::Sampler::Distilled8
+        );
+
+        let mut c = AppConfig::default();
+        let err = c.apply_args(&args(&["--sampler", "euler"])).unwrap_err();
+        assert!(err.to_string().contains("bad sampler"), "{err}");
+        assert!(err.to_string().contains("distilled4"), "lists the family: {err}");
     }
 
     #[test]

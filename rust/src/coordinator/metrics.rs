@@ -280,6 +280,9 @@ pub struct PoolMetrics {
     pub worker_restarts: usize,
     /// requests refused because every device class was quarantined
     pub shed: usize,
+    /// admitted requests per resolved sampler (the sampler that actually
+    /// priced the request at routing, post default-resolution)
+    pub samplers: BTreeMap<String, u64>,
     /// reply slots dropped without a terminal reply (a worker died
     /// mid-request); the drop guard converted each into an explicit
     /// failure, so the count is diagnostic, not a leak
@@ -351,6 +354,7 @@ impl PoolMetrics {
             degraded_retries: 0,
             worker_restarts: 0,
             shed: 0,
+            samplers: BTreeMap::new(),
             reply_orphaned: 0,
             reply_dropped: 0,
             step_time_s: 0.0,
@@ -552,6 +556,11 @@ impl PoolMetrics {
         self.shed += 1;
     }
 
+    /// One admitted request counted against its resolved sampler.
+    pub fn record_sampler(&mut self, name: &str) {
+        *self.samplers.entry(name.to_string()).or_insert(0) += 1;
+    }
+
     /// One reply slot dropped without a terminal reply (worker death);
     /// the drop guard delivered an explicit failure in its place.
     pub fn record_reply_orphaned(&mut self) {
@@ -635,6 +644,14 @@ impl PoolMetrics {
                 self.resumes,
                 self.time_weighted_occupancy(),
             ));
+        }
+        if !self.samplers.is_empty() {
+            let counts: Vec<String> = self
+                .samplers
+                .iter()
+                .map(|(name, n)| format!("{name}={n}"))
+                .collect();
+            out.push_str(&format!("samplers: {}\n", counts.join(" ")));
         }
         if self.loads.loads() > 0 {
             out.push_str(&format!(
@@ -982,6 +999,20 @@ mod tests {
             "{report}"
         );
         assert!(report.contains("1 worker restarts, 1 shed"), "{report}");
+    }
+
+    #[test]
+    fn sampler_counts_surface_only_when_recorded() {
+        let mut p = PoolMetrics::new(1);
+        let report = p.report(0, 0);
+        assert!(!report.contains("samplers:"), "{report}");
+
+        p.record_sampler("ddim");
+        p.record_sampler("dpm2m");
+        p.record_sampler("dpm2m");
+        assert_eq!(p.samplers["dpm2m"], 2);
+        let report = p.report(0, 0);
+        assert!(report.contains("samplers: ddim=1 dpm2m=2"), "{report}");
     }
 
     #[test]

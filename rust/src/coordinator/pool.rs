@@ -60,6 +60,7 @@ use crate::pipeline::{
     BatchKey, BatchRequest, Checkpoint, ContinuousControl, ContinuousJob, GenerateResult,
     LiveRow,
 };
+use crate::scheduler::Sampler;
 
 /// What a pool worker runs for each job.  Implemented by the pipelined
 /// executor wrapper in the server, and by mocks in tests.
@@ -539,6 +540,11 @@ impl WorkerPool {
         self.metrics.lock().unwrap().record_shed();
     }
 
+    /// Count one admitted request against its resolved sampler.
+    pub fn record_sampler(&self, name: &str) {
+        self.metrics.lock().unwrap().record_sampler(name);
+    }
+
     /// The shared per-class breaker, when supervision configured one.
     pub fn breaker(&self) -> Option<&Arc<CircuitBreaker>> {
         self.breaker.as_ref()
@@ -746,10 +752,10 @@ fn worker_loop<E: WorkerExecutor>(
     loop {
         // a worker drains only jobs routed to its own device class
         // whose retry-backoff gate (if any) has matured; batch
-        // compatibility within the class: same requested variant (the
-        // executor re-checks and re-groups defensively).  The timeout
-        // re-scans because a parked retry becomes eligible with no
-        // push to wake the condvar.
+        // compatibility within the class: same requested (variant,
+        // sampler) pair (the executor re-checks and re-groups
+        // defensively).  The timeout re-scans because a parked retry
+        // becomes eligible with no push to wake the condvar.
         //
         // under memory pressure the governor's ladder rung halves the
         // seat cap per level (recomputed every dequeue, so the cap
@@ -761,7 +767,7 @@ fn worker_loop<E: WorkerExecutor>(
         let jobs = match queue.pop_batch_where_timeout(
             seats,
             |it: &WorkItem| it.class == class_idx && it.ready(),
-            |it: &WorkItem| it.req.variant.clone(),
+            |it: &WorkItem| (it.req.variant.clone(), it.req.sampler),
             RETRY_POLL,
         ) {
             None => return LoopExit::Closed,
@@ -1054,9 +1060,10 @@ struct PoolControl<'a> {
     wid: usize,
     class_idx: usize,
     class_name: &'a str,
-    /// the raw requested variant of the session head — the same
-    /// compatibility key run-to-completion batching groups by
+    /// the raw requested (variant, sampler) of the session head — the
+    /// same compatibility key run-to-completion batching groups by
     session_variant: Option<String>,
+    session_sampler: Option<Sampler>,
     queue: &'a JobQueue<WorkItem>,
     metrics: &'a Mutex<PoolMetrics>,
     opts: &'a SupervisionOptions,
@@ -1143,12 +1150,12 @@ impl ContinuousControl for PoolControl<'_> {
             return Vec::new();
         }
         let class = self.class_idx;
-        let variant = self.session_variant.clone();
+        let session_key = (self.session_variant.clone(), self.session_sampler);
         let jobs = self.queue.try_pop_batch_where(
             slots,
             |it: &WorkItem| it.class == class && it.ready(),
-            |it: &WorkItem| it.req.variant.clone(),
-            Some(&variant),
+            |it: &WorkItem| (it.req.variant.clone(), it.req.sampler),
+            Some(&session_key),
         );
         let joined: Vec<ContinuousJob> =
             jobs.into_iter().filter_map(|j| self.admit(j)).collect();
@@ -1170,10 +1177,10 @@ impl ContinuousControl for PoolControl<'_> {
         }
         let class = self.class_idx;
         let variant = self.session_variant.clone();
-        let head = match self
-            .queue
-            .peek_where(|it: &WorkItem| it.class == class && it.req.variant == variant)
-        {
+        let sampler = self.session_sampler;
+        let head = match self.queue.peek_where(|it: &WorkItem| {
+            it.class == class && it.req.variant == variant && it.req.sampler == sampler
+        }) {
             Some(h) => h,
             None => return Vec::new(),
         };
@@ -1417,7 +1424,7 @@ fn continuous_worker_loop<E: WorkerExecutor>(
         let jobs = match queue.pop_batch_where_timeout(
             seats,
             |it: &WorkItem| it.class == class_idx && it.ready(),
-            |it: &WorkItem| it.req.variant.clone(),
+            |it: &WorkItem| (it.req.variant.clone(), it.req.sampler),
             RETRY_POLL,
         ) {
             None => return LoopExit::Closed,
@@ -1425,11 +1432,13 @@ fn continuous_worker_loop<E: WorkerExecutor>(
             Some(j) => j,
         };
         let session_variant = jobs[0].item.req.variant.clone();
+        let session_sampler = jobs[0].item.req.sampler;
         let mut control = PoolControl {
             wid,
             class_idx,
             class_name,
             session_variant,
+            session_sampler,
             queue,
             metrics,
             opts,

@@ -4,6 +4,7 @@ use std::time::Duration;
 
 use crate::coordinator::queue::Priority;
 use crate::pipeline::{ExecOverrides, StageTimings};
+use crate::scheduler::Sampler;
 
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
@@ -16,6 +17,8 @@ pub struct GenerateRequest {
     pub variant: Option<String>,
     /// override the configured guidance scale
     pub guidance_scale: Option<f64>,
+    /// override the configured sampler (solver + schedule family)
+    pub sampler: Option<Sampler>,
 }
 
 impl GenerateRequest {
@@ -27,6 +30,7 @@ impl GenerateRequest {
             num_steps: None,
             variant: None,
             guidance_scale: None,
+            sampler: None,
         }
     }
 
@@ -36,6 +40,7 @@ impl GenerateRequest {
             num_steps: self.num_steps,
             variant: self.variant.clone(),
             guidance_scale: self.guidance_scale,
+            sampler: self.sampler,
         }
     }
 }
@@ -51,6 +56,12 @@ pub struct SubmitOptions {
     pub num_steps: Option<usize>,
     pub variant: Option<String>,
     pub guidance_scale: Option<f64>,
+    /// sampler token ("ddim" | "dpm2m" | "distilled4" | "distilled8");
+    /// validated at admission — an unknown token is a config error.
+    /// Admission routing prices the request at the sampler's
+    /// *effective* step count, so a distilled8 request is feasible
+    /// under deadlines a 50-step DDIM run can never meet.
+    pub sampler: Option<String>,
 }
 
 impl SubmitOptions {
@@ -98,9 +109,11 @@ mod tests {
         let mut r = GenerateRequest::new(2, "hi", 1);
         r.num_steps = Some(4);
         r.variant = Some("base".into());
+        r.sampler = Some(Sampler::Dpm2m);
         let ov = r.overrides();
         assert_eq!(ov.num_steps, Some(4));
         assert_eq!(ov.variant.as_deref(), Some("base"));
+        assert_eq!(ov.sampler, Some(Sampler::Dpm2m));
     }
 
     #[test]

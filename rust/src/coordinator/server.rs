@@ -52,6 +52,7 @@ use crate::pipeline::{
 };
 use crate::planner::{FleetCalibration, FleetRouter, FleetSpec, PlanRegistry};
 use crate::runtime::{ArtifactStore, Manifest};
+use crate::scheduler::Sampler;
 
 /// Adapts a [`PipelinedExecutor`] to the pool's worker interface,
 /// applying per-request overrides against the configured defaults.
@@ -102,6 +103,10 @@ impl WorkerExecutor for PipelineWorker {
         let key = BatchKey {
             variant,
             weights_tag: self.executor.options.unet_weights.clone(),
+            sampler: jobs
+                .first()
+                .and_then(|j| j.req.overrides.sampler)
+                .unwrap_or(self.executor.options.sampler),
         };
         self.executor
             .run_continuous(&key, &self.default_variant, jobs, self.max_batch, control)
@@ -154,6 +159,7 @@ pub struct Server {
     next_id: u64,
     default_variant: String,
     default_steps: usize,
+    default_sampler: Sampler,
     /// plan-driven admission routing; `None` for homogeneous pools
     router: Option<FleetRouter>,
     /// per-class memory-pressure governor: learned budgets from OOM
@@ -172,6 +178,7 @@ impl Server {
         // parse the manifest on the caller thread for early errors
         let manifest = Manifest::load(&config.artifacts_dir)?;
         let options = config.exec_options();
+        let default_sampler = options.sampler;
         let variant = config.variant.clone();
 
         let router = match &config.fleet {
@@ -355,6 +362,7 @@ impl Server {
             next_id: 0,
             default_variant: config.variant.clone(),
             default_steps: config.num_steps,
+            default_sampler,
             router,
             pressure,
             store,
@@ -399,13 +407,32 @@ impl Server {
             .clone()
             .or_else(|| Some(self.default_variant.clone()));
         req.guidance_scale = opts.guidance_scale;
+        // validate + resolve the sampler at admission, like the
+        // variant: an unknown token is a config error before anything
+        // queues, and "explicit default" groups with "no override"
+        let sampler = match &opts.sampler {
+            Some(token) => Sampler::parse(token).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown sampler {token:?} (expected one of: {})",
+                    Sampler::names().join(", ")
+                ))
+            })?,
+            None => self.default_sampler,
+        };
+        req.sampler = Some(sampler);
         match &self.router {
             Some(router) => {
                 let variant = req
                     .variant
                     .clone()
                     .unwrap_or_else(|| self.default_variant.clone());
-                let steps = req.num_steps.unwrap_or(self.default_steps);
+                // price the request at the sampler's *effective* step
+                // count: a distilled 8-step schedule routes (and is
+                // deadline-checked) as 8 steps even when the configured
+                // count is 50 — this is what makes tight deadlines
+                // feasible for few-step requests
+                let steps = sampler
+                    .effective_steps(req.num_steps.unwrap_or(self.default_steps));
                 // measured-load feedback: once a (class, variant) has
                 // served enough requests, its observed per-request
                 // overhead replaces the plan's modeled constant here
@@ -442,13 +469,17 @@ impl Server {
                     &admit,
                     &headroom,
                 ) {
-                    Ok(route) => self.pool.submit_routed(
-                        req,
-                        opts.priority,
-                        opts.deadline,
-                        route.class,
-                        Some(route.predicted_s),
-                    ),
+                    Ok(route) => {
+                        let rx = self.pool.submit_routed(
+                            req,
+                            opts.priority,
+                            opts.deadline,
+                            route.class,
+                            Some(route.predicted_s),
+                        )?;
+                        self.pool.record_sampler(sampler.name());
+                        Ok(rx)
+                    }
                     Err(e) => {
                         // only genuine infeasibility counts toward the
                         // metric; config errors (unknown variant) don't
@@ -459,7 +490,11 @@ impl Server {
                     }
                 }
             }
-            None => self.pool.submit(req, opts.priority, opts.deadline),
+            None => {
+                let rx = self.pool.submit(req, opts.priority, opts.deadline)?;
+                self.pool.record_sampler(sampler.name());
+                Ok(rx)
+            }
         }
     }
 

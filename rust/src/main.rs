@@ -27,6 +27,7 @@ USAGE: mobile-diffusion <COMMAND> [FLAGS]
 COMMANDS:
   generate   generate one image        [--prompt S] [--seed N] [--steps N]
              [--variant base|mobile] [--weights fp32|int8|int8_pruned]
+             [--sampler ddim|dpm2m|distilled4|distilled8]
              [--budget-mb X] [--no-pipeline] [--out FILE.png]
              [--artifacts DIR] [--guidance X] [--config FILE.json]
   serve      prompts from stdin, metrics on EOF (same flags, plus
@@ -46,7 +47,12 @@ COMMANDS:
              for upload-only warm reloads; 0 disables)
   analyze    delegate report           <graph.json> [--device NAME]
              (also prints the planner's cost-gated pass schedule for
-              the device class; [--per-op] adds a per-op-class table of
+              the device class, and a per-sampler service-time table —
+              what every device class is predicted to take for a
+              50-step DDIM request vs the few-step solver family
+              (dpm2m@8, distilled4/8), i.e. the headroom step-aware
+              admission prices deadlines against;
+              [--per-op] adds a per-op-class table of
               modeled vs calibrated latency, flops and bytes, with the
               calibrated column priced by a self-fit round-trip of the
               online roofline calibrator, plus the memory-pressure
@@ -261,11 +267,57 @@ fn cmd_analyze(args: &[String]) -> R {
         planned.rewrites,
         planned.cost_s * 1e3
     );
+    print_sampler_service_times();
     if per_op {
         print_per_op_breakdown(&g, &spec);
         print_pressure_ladder(&g, &spec);
     }
     Ok(())
+}
+
+/// The `analyze` sampler table: plan-predicted service time per device
+/// class for the nominal 50-step DDIM request against each few-step
+/// operating point (dpm2m at 8 requested steps; the distilled
+/// schedules pin their own effective counts regardless of the request).
+/// This is exactly what step-aware admission prices deadlines with, so
+/// the table shows which deadlines each class can only meet few-step.
+fn print_sampler_service_times() {
+    use mobile_diffusion::planner::PlanRegistry;
+    use mobile_diffusion::scheduler::Sampler;
+
+    // (sampler, requested steps): the baseline request is 50 steps;
+    // dpm2m is shown at its few-step operating point
+    let points = [
+        (Sampler::Ddim, 50usize),
+        (Sampler::Dpm2m, 8),
+        (Sampler::Distilled4, 50),
+        (Sampler::Distilled8, 50),
+    ];
+    let plans = PlanRegistry::new();
+    println!("predicted service time per sampler (variant mobile):");
+    println!(
+        "  {:<12} {:>9} {:>9}  per-class predicted ms",
+        "sampler", "requested", "effective"
+    );
+    for (sampler, requested) in points {
+        let steps = sampler.effective_steps(requested);
+        let mut cells: Vec<String> = Vec::new();
+        for name in planner::device_names() {
+            let Some(spec) = planner::device_spec(name) else { continue };
+            let Ok(plan) = plans.plan(&spec, "mobile") else { continue };
+            cells.push(format!(
+                "{name} {:.1}",
+                plan.predict_service_s(steps) * 1e3
+            ));
+        }
+        println!(
+            "  {:<12} {:>9} {:>9}  {}",
+            sampler.name(),
+            requested,
+            steps,
+            cells.join("   ")
+        );
+    }
 }
 
 /// The `analyze --per-op` table: per-op-class work and latency, with

@@ -3,14 +3,17 @@
 //! Two pieces live here:
 //!
 //! * **Batch formation** ([`form_batches`]): concurrent requests are
-//!   compatible when they run the same UNet executable — same
-//!   `(variant, weights_tag)` [`BatchKey`].  Step counts and guidance
-//!   scales do *not* split batches: guidance is applied on the host per
-//!   request, and the stepwise loop passes a per-CFG-row timestep, so
-//!   requests on different schedules share dispatches until their
-//!   schedules run out, at which point they leave the batch and the
-//!   remaining stragglers continue (eventually solo) — no request ever
-//!   waits for a longer-scheduled peer.  Under step-level continuous
+//!   compatible when they run the same UNet executable *and* the same
+//!   solver — same `(variant, weights_tag, sampler)` [`BatchKey`].
+//!   Step counts and guidance scales do *not* split batches: guidance
+//!   is applied on the host per request, and the stepwise loop passes
+//!   a per-CFG-row timestep, so requests on different schedules share
+//!   dispatches until their schedules run out, at which point they
+//!   leave the batch and the remaining stragglers continue (eventually
+//!   solo) — no request ever waits for a longer-scheduled peer.
+//!   Samplers *do* split batches: a multistep row carries solver state
+//!   (its eps history) whose update order is part of the numerics, so
+//!   only solver-compatible rows ever share CFG dispatches.  Under step-level continuous
 //!   batching ([`crate::pipeline::continuous`]) membership is fully
 //!   dynamic: rows also *join* mid-flight (each starting at its own
 //!   schedule head) and freed straggler slots are refilled from the
@@ -39,6 +42,7 @@
 use crate::error::{Error, Result};
 use crate::pipeline::executor::ExecOverrides;
 use crate::runtime::{write_buffer_f32, Component, Engine, Manifest};
+use crate::scheduler::Sampler;
 
 /// One generation request inside a micro-batch.
 #[derive(Debug, Clone)]
@@ -58,12 +62,13 @@ impl BatchRequest {
     }
 }
 
-/// Requests sharing a key run the same UNet executable and may share
-/// denoise dispatches.
+/// Requests sharing a key run the same UNet executable with the same
+/// solver and may share denoise dispatches.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub variant: String,
     pub weights_tag: String,
+    pub sampler: Sampler,
 }
 
 /// A formed batch: positions into the submitted request slice, all
@@ -81,6 +86,7 @@ pub fn form_batches(
     reqs: &[BatchRequest],
     default_variant: &str,
     weights_tag: &str,
+    default_sampler: Sampler,
     max_batch: usize,
 ) -> Vec<BatchGroup> {
     let cap = max_batch.max(1);
@@ -93,6 +99,7 @@ pub fn form_batches(
                 .clone()
                 .unwrap_or_else(|| default_variant.to_string()),
             weights_tag: weights_tag.to_string(),
+            sampler: r.overrides.sampler.unwrap_or(default_sampler),
         };
         match groups
             .iter_mut()
@@ -269,18 +276,19 @@ mod tests {
     #[test]
     fn compatible_requests_group_up_to_max_batch() {
         let reqs: Vec<BatchRequest> = (0..5).map(|_| req(None)).collect();
-        let groups = form_batches(&reqs, "mobile", "fp32", 4);
+        let groups = form_batches(&reqs, "mobile", "fp32", Sampler::Ddim, 4);
         assert_eq!(groups.len(), 2);
         assert_eq!(groups[0].indices, vec![0, 1, 2, 3]);
         assert_eq!(groups[1].indices, vec![4]);
         assert_eq!(groups[0].key.variant, "mobile");
         assert_eq!(groups[0].key.weights_tag, "fp32");
+        assert_eq!(groups[0].key.sampler, Sampler::Ddim);
     }
 
     #[test]
     fn incompatible_variants_split_groups() {
         let reqs = vec![req(None), req(Some("base")), req(Some("mobile")), req(Some("base"))];
-        let groups = form_batches(&reqs, "mobile", "fp32", 8);
+        let groups = form_batches(&reqs, "mobile", "fp32", Sampler::Ddim, 8);
         // default variant "mobile" groups with the explicit "mobile"
         assert_eq!(groups.len(), 2);
         assert_eq!(groups[0].key.variant, "mobile");
@@ -296,15 +304,34 @@ mod tests {
         a.overrides.num_steps = Some(4);
         let mut b = req(None);
         b.overrides.num_steps = Some(20);
-        let groups = form_batches(&[a, b], "mobile", "fp32", 4);
+        let groups = form_batches(&[a, b], "mobile", "fp32", Sampler::Ddim, 4);
         assert_eq!(groups.len(), 1);
         assert_eq!(groups[0].indices, vec![0, 1]);
     }
 
     #[test]
+    fn mismatched_samplers_split_groups() {
+        // solver state makes samplers part of the compatibility key;
+        // an explicit default sampler still groups with no-override
+        let mut a = req(None);
+        a.overrides.sampler = Some(Sampler::Dpm2m);
+        let b = req(None);
+        let mut c = req(None);
+        c.overrides.sampler = Some(Sampler::Ddim);
+        let mut d = req(None);
+        d.overrides.sampler = Some(Sampler::Dpm2m);
+        let groups = form_batches(&[a, b, c, d], "mobile", "fp32", Sampler::Ddim, 8);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].key.sampler, Sampler::Dpm2m);
+        assert_eq!(groups[0].indices, vec![0, 3]);
+        assert_eq!(groups[1].key.sampler, Sampler::Ddim);
+        assert_eq!(groups[1].indices, vec![1, 2]);
+    }
+
+    #[test]
     fn max_batch_zero_is_treated_as_one() {
         let reqs = vec![req(None), req(None)];
-        let groups = form_batches(&reqs, "mobile", "fp32", 0);
+        let groups = form_batches(&reqs, "mobile", "fp32", Sampler::Ddim, 0);
         assert_eq!(groups.len(), 2);
     }
 }

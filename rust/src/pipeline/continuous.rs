@@ -25,7 +25,11 @@
 //! preempted-then-resumed row is bit-identical to an uninterrupted
 //! one.  The checkpoint therefore carries everything the denoise
 //! arithmetic consumes (schedule, position, latent, guidance, encoded
-//! context) and nothing derived from batch composition.
+//! context, and the solver's eps history for multistep samplers) and
+//! nothing derived from batch composition.  Solver state is restored
+//! from the checkpoint, never recomputed: a multistep row resumed
+//! mid-schedule extrapolates from exactly the eps prediction it would
+//! have held uninterrupted.
 
 use crate::error::{Error, Result};
 use crate::pipeline::batch::{BatchKey, BatchRequest};
@@ -46,6 +50,12 @@ pub struct Checkpoint {
     pub guidance: f64,
     /// encoded cond context for the row's prompt
     pub cond: Vec<f32>,
+    /// the solver's bounded history of previous (guided) eps
+    /// predictions, oldest first — empty for first-order samplers.
+    /// Part of the row's numerics, so it checkpoints and resumes
+    /// rather than being rebuilt (rebuilding would need the already-
+    /// consumed latents).
+    pub history: Vec<Vec<f32>>,
     /// worker-busy seconds already attributed to the row
     pub busy_s: f64,
     /// denoise wall seconds already attributed to the row

@@ -7,8 +7,9 @@
 //! 2. acquire the text encoder, encode each request's cond prompt (the
 //!    uncond `""` context is computed once and cached across requests
 //!    per weights tag), evict it;
-//! 3. start the decoder prefetch on a child thread and run the DDIM
-//!    denoise loop, polling the prefetch between steps;
+//! 3. start the decoder prefetch on a child thread and run the denoise
+//!    loop (each row advanced by its [`Sampler`]'s solver), polling the
+//!    prefetch between steps;
 //! 4. finalize the decoder (device compile + upload), decode each
 //!    request, evict.
 //!
@@ -72,7 +73,7 @@ use crate::pipeline::trace::MemoryTrace;
 use crate::runtime::{
     ActInput, ArtifactStore, Component, Engine, LoadStats, Manifest, WarmExecutable,
 };
-use crate::scheduler::{guide, Ddim};
+use crate::scheduler::{guide, Ddim, Sampler};
 use crate::tokenizer;
 use crate::util::rng::Rng;
 
@@ -94,6 +95,8 @@ pub struct ExecOptions {
     pub unet_weights: String,
     pub num_steps: usize,
     pub guidance_scale: f64,
+    /// default solver for requests without a sampler override
+    pub sampler: Sampler,
     /// compiled executables kept per worker across evictions (the warm
     /// reload tier); 0 disables warm reuse entirely
     pub warm_slots: usize,
@@ -107,6 +110,7 @@ impl Default for ExecOptions {
             unet_weights: "fp32".into(),
             num_steps: 20,
             guidance_scale: 7.5,
+            sampler: Sampler::Ddim,
             warm_slots: 8,
         }
     }
@@ -248,6 +252,8 @@ pub struct ExecOverrides {
     pub num_steps: Option<usize>,
     pub variant: Option<String>,
     pub guidance_scale: Option<f64>,
+    /// solver selection; distilled members also pin the step count
+    pub sampler: Option<Sampler>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -309,12 +315,39 @@ pub struct PipelinedExecutor {
 
 /// One request's denoise-loop state inside a batch.
 struct Member {
+    /// the solver advancing this row
+    sampler: Sampler,
     /// per-request step schedule (descending timesteps)
     ts: Vec<usize>,
     guidance: f64,
     latent: Vec<f32>,
     eps: Vec<f32>,
     cond: Vec<f32>,
+    /// the solver's bounded history of previous eps predictions
+    /// (oldest first; empty for first-order samplers)
+    history: Vec<Vec<f32>>,
+}
+
+impl Member {
+    /// One solver update at schedule index `pos`, then record this
+    /// step's eps into the bounded history.  `ts[pos - 1]` is the
+    /// timestep the newest history entry was predicted at — recovered
+    /// from the checkpointed `(ts, pos)` on resume, so a resumed row
+    /// runs exactly the uninterrupted arithmetic.
+    fn advance(&mut self, ddim: &Ddim, pos: usize) {
+        let t_prev = self.ts.get(pos + 1).copied();
+        let t_last = if pos > 0 { Some(self.ts[pos - 1]) } else { None };
+        self.sampler.step(
+            ddim,
+            &mut self.latent,
+            &self.eps,
+            &self.history,
+            self.ts[pos],
+            t_prev,
+            t_last,
+        );
+        self.sampler.remember(&mut self.history, &self.eps);
+    }
 }
 
 /// One row of a continuous session: a [`Member`] plus the lifecycle
@@ -556,6 +589,7 @@ impl PipelinedExecutor {
             reqs,
             default_variant,
             &self.options.unet_weights,
+            self.options.sampler,
             reqs.len().max(1),
         );
         for g in &groups {
@@ -768,11 +802,13 @@ impl PipelinedExecutor {
                 .unwrap_or_default();
             let mut rng = Rng::new(r.seed);
             members.push(Member {
-                ts: self.ddim.timesteps(num_steps),
+                sampler: key.sampler,
+                ts: key.sampler.schedule(&self.ddim, num_steps),
                 guidance,
                 latent: rng.normal_f32_vec(n_latent),
                 eps: vec![0f32; n_latent],
                 cond,
+                history: Vec::new(),
             });
         }
         tm.text_encode_s = t0.elapsed().as_secs_f64();
@@ -848,8 +884,7 @@ impl PipelinedExecutor {
                     m.guidance,
                     &mut m.eps,
                 );
-                let t_prev = m.ts.get(step + 1).copied();
-                ddim.step(&mut m.latent, &m.eps, m.ts[step], t_prev);
+                m.advance(ddim, step);
             }
             let share = t_step.elapsed().as_secs_f64() / n_live.max(1) as f64;
             for (i, m) in members.iter().enumerate() {
@@ -1090,6 +1125,7 @@ impl PipelinedExecutor {
                                     latent: m.latent,
                                     guidance: m.guidance,
                                     cond: m.cond,
+                                    history: m.history,
                                     busy_s,
                                     denoise_s,
                                 }),
@@ -1122,8 +1158,8 @@ impl PipelinedExecutor {
                         m.guidance,
                         &mut m.eps,
                     );
-                    let t_prev = m.ts.get(lm.pos + 1).copied();
-                    ddim.step(&mut m.latent, &m.eps, m.ts[lm.pos], t_prev);
+                    let pos = lm.pos;
+                    m.advance(ddim, pos);
                     lm.pos += 1;
                 }
             }
@@ -1164,6 +1200,7 @@ impl PipelinedExecutor {
                         latent: m.latent,
                         guidance: m.guidance,
                         cond: m.cond,
+                        history: m.history,
                         busy_s,
                         denoise_s,
                     }),
@@ -1199,7 +1236,11 @@ impl PipelinedExecutor {
         let mut accepted: Vec<ContinuousJob> = Vec::with_capacity(jobs.len());
         for job in jobs {
             let variant = job.req.overrides.variant.as_deref().unwrap_or(default_variant);
-            if variant != key.variant || self.options.unet_weights != key.weights_tag {
+            let sampler = job.req.overrides.sampler.unwrap_or(self.options.sampler);
+            if variant != key.variant
+                || self.options.unet_weights != key.weights_tag
+                || sampler != key.sampler
+            {
                 control.requeue(job);
                 continue;
             }
@@ -1239,12 +1280,18 @@ impl PipelinedExecutor {
             let (m, pos, busy_s, denoise_s) = match resume {
                 Some(cp) => {
                     stats.resumes += 1;
+                    // solver state (the eps history) is restored from
+                    // the checkpoint, never recomputed — resuming a
+                    // multistep row mid-schedule is bit-identical to
+                    // its uninterrupted run
                     let m = Member {
+                        sampler: key.sampler,
                         ts: cp.ts,
                         guidance: cp.guidance,
                         latent: cp.latent,
                         eps: vec![0f32; n_latent],
                         cond: cp.cond,
+                        history: cp.history,
                     };
                     (m, cp.pos, cp.busy_s, cp.denoise_s)
                 }
@@ -1264,11 +1311,13 @@ impl PipelinedExecutor {
                         .unwrap_or_default();
                     let mut rng = Rng::new(req.seed);
                     let m = Member {
-                        ts: self.ddim.timesteps(num_steps),
+                        sampler: key.sampler,
+                        ts: key.sampler.schedule(&self.ddim, num_steps),
                         guidance,
                         latent: rng.normal_f32_vec(n_latent),
                         eps: vec![0f32; n_latent],
                         cond,
+                        history: Vec::new(),
                     };
                     (m, 0, 0.0, 0.0)
                 }

@@ -62,6 +62,10 @@ pub struct GoldenTrace {
     pub latent0: Vec<f64>,
     pub eps_scale: f64,
     pub trace: Vec<Vec<f64>>,
+    /// golden DPM-Solver++(2M) trace: the full 8-step multistep
+    /// schedule over the same `latent0`/surrogate (empty in manifests
+    /// built before the sampler family)
+    pub multistep_trace: Vec<Vec<f64>>,
 }
 
 #[derive(Debug, Clone)]
@@ -192,6 +196,20 @@ impl Manifest {
                 trace: s
                     .get("golden")
                     .get("trace")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_f64())
+                            .collect()
+                    })
+                    .collect(),
+                multistep_trace: s
+                    .get("golden")
+                    .get("multistep_trace")
                     .as_arr()
                     .unwrap_or(&[])
                     .iter()

@@ -1,13 +1,18 @@
-//! DDIM sampler + distilled step schedules (the Rust mirror of
+//! Samplers + distilled step schedules (the Rust mirror of
 //! python/compile/scheduler.py; validated against the manifest's golden
-//! trace in rust/tests/).
+//! traces in rust/tests/).
 //!
-//! The denoise loop lives here: the coordinator calls
-//! [`Ddim::timesteps`], runs the CFG-batched UNet executable per step,
-//! applies [`guide`] + [`Ddim::step`].  The paper's "20 effective
-//! denoising steps" come from progressive distillation (Salimans & Ho
-//! 2022); the serving system consumes the halved schedules via
-//! [`Ddim::progressive_timesteps`].
+//! The denoise loop lives here: the executor builds a row's schedule
+//! through its [`Sampler`], runs the CFG-batched UNet executable per
+//! step, applies [`guide`] + [`Sampler::step`].  [`Ddim`] holds the
+//! beta/alpha tables and the first-order update every solver shares;
+//! the sampler family (first-order DDIM, the DPM-Solver++(2M)-style
+//! multistep solver, and the distilled 4/8-step schedules from
+//! progressive distillation, Salimans & Ho 2022) lives in [`sampler`].
+
+pub mod sampler;
+
+pub use sampler::{Sampler, Solver, DISTILL_BASE_STEPS};
 
 #[derive(Debug, Clone)]
 pub struct SchedulerParams {
@@ -70,7 +75,19 @@ impl Ddim {
 
     /// Progressive-distillation schedule: `halvings` halves the count.
     pub fn progressive_timesteps(&self, halvings: u32) -> Option<Vec<usize>> {
-        let n = self.params.num_inference_steps >> halvings;
+        self.progressive_timesteps_from(self.params.num_inference_steps, halvings)
+    }
+
+    /// Progressive-distillation schedule from an explicit teacher step
+    /// count (the distilled sampler family halves a fixed
+    /// [`DISTILL_BASE_STEPS`]-step teacher regardless of the configured
+    /// inference count).  `None` once the halvings exhaust the base.
+    pub fn progressive_timesteps_from(
+        &self,
+        base: usize,
+        halvings: u32,
+    ) -> Option<Vec<usize>> {
+        let n = base >> halvings.min(usize::BITS - 1);
         if n == 0 {
             return None;
         }

@@ -1,0 +1,483 @@
+//! The sampler family: one trait, three solvers.
+//!
+//! [`Sampler`] is the *identity* threaded through the serving stack —
+//! request overrides, batch keys, checkpoints, routing — and each
+//! identity resolves to a [`Solver`] implementing the actual numerics:
+//!
+//! * [`DdimSolver`] — the first-order deterministic DDIM update
+//!   ([`Ddim::step`], unchanged numerics; bit-parity with the seed
+//!   pipeline is pinned by the batching/continuous test suites);
+//! * [`Dpm2mSolver`] — a DPM-Solver++(2M)-style second-order multistep
+//!   solver.  It carries a bounded history of previous eps predictions
+//!   per row; with history it extrapolates the noise estimate across
+//!   the last two schedule points, without (the first step of a
+//!   schedule, or the final step to t=0) it degrades to the first-order
+//!   update — which is exactly the DDIM step, so the degraded path
+//!   shares DDIM's arithmetic line for line;
+//! * [`DistilledSolver`] — the distilled few-step family (4/8-step):
+//!   progressive-distillation students take the halved schedules of a
+//!   [`DISTILL_BASE_STEPS`]-step teacher
+//!   ([`Ddim::progressive_timesteps_from`]) and are sampled with the
+//!   first-order update they were distilled for (Salimans & Ho 2022).
+//!   Their step count is *fixed* by the sampler, which is what makes
+//!   tight deadlines feasible at admission: the router prices the
+//!   request at the distilled count, not the configured default.
+//!
+//! Solver state (the eps history) is part of a row, not of the batch:
+//! it rides [`Checkpoint`]s across preemptions and retries so a resumed
+//! row is bit-identical to an uninterrupted one — the history is
+//! restored, never recomputed.
+//!
+//! [`Checkpoint`]: crate::pipeline::continuous::Checkpoint
+
+use crate::scheduler::Ddim;
+
+/// Teacher schedule length of the distilled family: progressive
+/// distillation halves a 32-step teacher (32 → 16 → 8 → 4), so both
+/// distilled members are exact halving levels of one base schedule.
+pub const DISTILL_BASE_STEPS: usize = 32;
+
+/// Sampler identity carried by requests, batch keys and checkpoints.
+/// Rows only share CFG dispatches with rows of the same sampler (see
+/// [`crate::pipeline::batch::BatchKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Sampler {
+    /// first-order DDIM at the requested step count (the seed default)
+    #[default]
+    Ddim,
+    /// DPM-Solver++(2M)-style multistep at the requested step count
+    Dpm2m,
+    /// distilled 4-step schedule (3 halvings of the 32-step teacher)
+    Distilled4,
+    /// distilled 8-step schedule (2 halvings of the 32-step teacher)
+    Distilled8,
+}
+
+impl Sampler {
+    pub const ALL: [Sampler; 4] =
+        [Sampler::Ddim, Sampler::Dpm2m, Sampler::Distilled4, Sampler::Distilled8];
+
+    /// The config/CLI token (also the metrics label).
+    pub fn name(self) -> &'static str {
+        self.solver().name()
+    }
+
+    /// Parse a config/CLI token.
+    pub fn parse(name: &str) -> Option<Sampler> {
+        Sampler::ALL.into_iter().find(|s| s.name() == name)
+    }
+
+    /// Known tokens, for error messages.
+    pub fn names() -> Vec<&'static str> {
+        Sampler::ALL.iter().map(|s| s.name()).collect()
+    }
+
+    /// The numerics behind this identity.
+    pub fn solver(self) -> &'static dyn Solver {
+        match self {
+            Sampler::Ddim => &DdimSolver,
+            Sampler::Dpm2m => &Dpm2mSolver,
+            Sampler::Distilled4 => &DISTILLED4,
+            Sampler::Distilled8 => &DISTILLED8,
+        }
+    }
+
+    /// Denoise steps a request asking for `requested` actually runs —
+    /// what admission routing must price (distilled members pin it).
+    pub fn effective_steps(self, requested: usize) -> usize {
+        self.solver().effective_steps(requested)
+    }
+
+    /// Bounded per-row history of previous eps predictions the solver
+    /// consumes (0 for first-order members).
+    pub fn history_len(self) -> usize {
+        self.solver().history_len()
+    }
+
+    /// Step schedule for a request asking for `requested` steps.
+    pub fn schedule(self, ddim: &Ddim, requested: usize) -> Vec<usize> {
+        self.solver().schedule(ddim, requested)
+    }
+
+    /// One in-place solver update over the latent (see
+    /// [`Solver::step`]).
+    pub fn step(
+        self,
+        ddim: &Ddim,
+        latent: &mut [f32],
+        eps: &[f32],
+        history: &[Vec<f32>],
+        t: usize,
+        t_prev: Option<usize>,
+        t_last: Option<usize>,
+    ) {
+        self.solver().step(ddim, latent, eps, history, t, t_prev, t_last)
+    }
+
+    /// Record this step's eps prediction into the row's bounded
+    /// history (oldest first).  A zero-history solver records nothing;
+    /// at capacity the oldest entry's allocation is recycled so the
+    /// steady-state denoise loop stays allocation-free.
+    pub fn remember(self, history: &mut Vec<Vec<f32>>, eps: &[f32]) {
+        let cap = self.history_len();
+        if cap == 0 {
+            return;
+        }
+        if history.len() >= cap {
+            let mut old = history.remove(0);
+            old.resize(eps.len(), 0.0);
+            old.copy_from_slice(eps);
+            history.push(old);
+        } else {
+            history.push(eps.to_vec());
+        }
+    }
+}
+
+/// One member of the sampler family: how to build a row's schedule and
+/// advance its latent.  `history` holds the row's previous (guided) eps
+/// predictions, oldest first; `t_last` is the timestep the newest
+/// history entry was predicted at (`None` at a schedule head).
+pub trait Solver {
+    fn name(&self) -> &'static str;
+
+    /// Schedule of descending train timesteps for a request asking for
+    /// `requested` steps.
+    fn schedule(&self, ddim: &Ddim, requested: usize) -> Vec<usize>;
+
+    /// Steps actually run for a `requested` count (== schedule length).
+    fn effective_steps(&self, requested: usize) -> usize {
+        requested
+    }
+
+    /// Previous eps predictions [`Solver::step`] consumes.
+    fn history_len(&self) -> usize {
+        0
+    }
+
+    /// Advance `latent` from `t` to `t_prev` (`None` = the clean
+    /// endpoint, alpha-bar 1) given this step's eps prediction.
+    fn step(
+        &self,
+        ddim: &Ddim,
+        latent: &mut [f32],
+        eps: &[f32],
+        history: &[Vec<f32>],
+        t: usize,
+        t_prev: Option<usize>,
+        t_last: Option<usize>,
+    );
+}
+
+/// The seed pipeline's first-order DDIM — numerics untouched.
+pub struct DdimSolver;
+
+impl Solver for DdimSolver {
+    fn name(&self) -> &'static str {
+        "ddim"
+    }
+
+    fn schedule(&self, ddim: &Ddim, requested: usize) -> Vec<usize> {
+        ddim.timesteps(requested)
+    }
+
+    fn step(
+        &self,
+        ddim: &Ddim,
+        latent: &mut [f32],
+        eps: &[f32],
+        _history: &[Vec<f32>],
+        t: usize,
+        t_prev: Option<usize>,
+        _t_last: Option<usize>,
+    ) {
+        ddim.step(latent, eps, t, t_prev);
+    }
+}
+
+/// DPM-Solver++(2M)-style second-order multistep solver in eps form.
+///
+/// With one remembered eps prediction the update extrapolates the
+/// noise estimate linearly in log-SNR across the last two schedule
+/// points (`D = (1 + 1/(2r)) eps_t - 1/(2r) eps_last`, `r` the
+/// log-SNR step ratio) and applies the first-order transfer with `D`
+/// in place of `eps` — so the history-less path (`D = eps`) *is* the
+/// DDIM step.  The final step to the clean endpoint also runs first
+/// order: its log-SNR step is unbounded, and lower-order final steps
+/// are the standard stabilization for few-step schedules.
+pub struct Dpm2mSolver;
+
+impl Solver for Dpm2mSolver {
+    fn name(&self) -> &'static str {
+        "dpm2m"
+    }
+
+    fn schedule(&self, ddim: &Ddim, requested: usize) -> Vec<usize> {
+        ddim.timesteps(requested)
+    }
+
+    fn history_len(&self) -> usize {
+        1
+    }
+
+    fn step(
+        &self,
+        ddim: &Ddim,
+        latent: &mut [f32],
+        eps: &[f32],
+        history: &[Vec<f32>],
+        t: usize,
+        t_prev: Option<usize>,
+        t_last: Option<usize>,
+    ) {
+        assert_eq!(latent.len(), eps.len());
+        let (prev_eps, t_last) = match (history.last(), t_last, t_prev) {
+            (Some(p), Some(tl), Some(_)) => (p, tl),
+            // schedule head (no history) or final step (unbounded
+            // log-SNR step): degrade to first order == DDIM
+            _ => return ddim.step(latent, eps, t, t_prev),
+        };
+        assert_eq!(prev_eps.len(), eps.len());
+        let a_t = ddim.alphas_cumprod[t];
+        let a_prev = t_prev.map(|p| ddim.alphas_cumprod[p]).unwrap_or(1.0);
+        let a_last = ddim.alphas_cumprod[t_last];
+        // log-SNR lambda(t) = ln(alpha_t / sigma_t); schedules are
+        // strictly descending in t, so both half-steps are positive
+        let lam = |a: f64| (a.sqrt() / (1.0 - a).sqrt()).ln();
+        let h = lam(a_prev) - lam(a_t);
+        let h_last = lam(a_t) - lam(a_last);
+        let r = h_last / h;
+        let c = 1.0 / (2.0 * r);
+        let sqrt_at = a_t.sqrt();
+        let sqrt_1mat = (1.0 - a_t).sqrt();
+        let sqrt_aprev = a_prev.sqrt();
+        let sqrt_1maprev = (1.0 - a_prev).sqrt();
+        for (i, (l, &e)) in latent.iter_mut().zip(eps).enumerate() {
+            let d = (1.0 + c) * e as f64 - c * prev_eps[i] as f64;
+            let x0 = (*l as f64 - sqrt_1mat * d) / sqrt_at;
+            *l = (sqrt_aprev * x0 + sqrt_1maprev * d) as f32;
+        }
+    }
+}
+
+/// A distilled few-step student: fixed halved schedule of the
+/// [`DISTILL_BASE_STEPS`]-step teacher, sampled with the first-order
+/// update it was distilled for.
+pub struct DistilledSolver {
+    name: &'static str,
+    halvings: u32,
+    steps: usize,
+}
+
+static DISTILLED4: DistilledSolver =
+    DistilledSolver { name: "distilled4", halvings: 3, steps: 4 };
+static DISTILLED8: DistilledSolver =
+    DistilledSolver { name: "distilled8", halvings: 2, steps: 8 };
+
+impl Solver for DistilledSolver {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn schedule(&self, ddim: &Ddim, _requested: usize) -> Vec<usize> {
+        ddim.progressive_timesteps_from(DISTILL_BASE_STEPS, self.halvings)
+            .expect("distilled halving level within the teacher schedule")
+    }
+
+    fn effective_steps(&self, _requested: usize) -> usize {
+        self.steps
+    }
+
+    fn step(
+        &self,
+        ddim: &Ddim,
+        latent: &mut [f32],
+        eps: &[f32],
+        _history: &[Vec<f32>],
+        t: usize,
+        t_prev: Option<usize>,
+        _t_last: Option<usize>,
+    ) {
+        ddim.step(latent, eps, t, t_prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SchedulerParams;
+
+    fn ddim() -> Ddim {
+        Ddim::new(SchedulerParams::default())
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for s in Sampler::ALL {
+            assert_eq!(Sampler::parse(s.name()), Some(s));
+        }
+        assert_eq!(Sampler::parse("euler"), None);
+        assert_eq!(Sampler::default(), Sampler::Ddim);
+    }
+
+    #[test]
+    fn schedules_and_effective_steps() {
+        let d = ddim();
+        assert_eq!(Sampler::Ddim.schedule(&d, 50).len(), 50);
+        assert_eq!(Sampler::Dpm2m.schedule(&d, 50).len(), 50);
+        assert_eq!(Sampler::Distilled8.schedule(&d, 50).len(), 8);
+        assert_eq!(Sampler::Distilled4.schedule(&d, 50).len(), 4);
+        assert_eq!(Sampler::Ddim.effective_steps(50), 50);
+        assert_eq!(Sampler::Dpm2m.effective_steps(8), 8);
+        assert_eq!(Sampler::Distilled8.effective_steps(50), 8);
+        assert_eq!(Sampler::Distilled4.effective_steps(50), 4);
+        for s in Sampler::ALL {
+            let ts = s.schedule(&d, 50);
+            assert_eq!(ts.len(), s.effective_steps(50), "{}", s.name());
+            assert!(ts.windows(2).all(|w| w[0] > w[1]), "{}", s.name());
+            assert_eq!(*ts.last().unwrap(), 0, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn distilled_schedules_match_teacher_halvings() {
+        // every distilled member IS a progressive_timesteps halving
+        // level of the 32-step teacher — the previously dead path
+        let d = ddim();
+        let teacher = Ddim::new(SchedulerParams {
+            num_inference_steps: DISTILL_BASE_STEPS,
+            ..SchedulerParams::default()
+        });
+        assert_eq!(
+            Sampler::Distilled8.schedule(&d, 20),
+            teacher.progressive_timesteps(2).unwrap()
+        );
+        assert_eq!(
+            Sampler::Distilled4.schedule(&d, 20),
+            teacher.progressive_timesteps(3).unwrap()
+        );
+    }
+
+    #[test]
+    fn every_halving_level_of_the_distill_base() {
+        // 32 → 16 → 8 → 4 → 2 → 1 → exhausted
+        let d = ddim();
+        for (h, want) in [(0u32, 32usize), (1, 16), (2, 8), (3, 4), (4, 2), (5, 1)] {
+            let ts = d.progressive_timesteps_from(DISTILL_BASE_STEPS, h).unwrap();
+            assert_eq!(ts.len(), want, "halvings = {h}");
+            assert_eq!(*ts.last().unwrap(), 0, "halvings = {h}");
+            assert!(ts.windows(2).all(|w| w[0] > w[1]), "halvings = {h}");
+        }
+        assert!(d.progressive_timesteps_from(DISTILL_BASE_STEPS, 6).is_none());
+        assert!(d.progressive_timesteps_from(DISTILL_BASE_STEPS, 31).is_none());
+    }
+
+    #[test]
+    fn dpm2m_without_history_is_exactly_ddim() {
+        let d = ddim();
+        let eps = [0.3f32, -1.2, 2.0];
+        let mut a = vec![1.0f32, -2.0, 0.5];
+        let mut b = a.clone();
+        Sampler::Dpm2m.step(&d, &mut a, &eps, &[], 500, Some(450), None);
+        d.step(&mut b, &eps, 500, Some(450));
+        assert_eq!(a, b, "history-less 2M must share DDIM's arithmetic");
+    }
+
+    #[test]
+    fn dpm2m_final_step_is_first_order() {
+        let d = ddim();
+        let eps = [0.3f32, -1.2, 2.0];
+        let hist = vec![vec![0.1f32, 0.2, 0.3]];
+        let mut a = vec![1.0f32, -2.0, 0.5];
+        let mut b = a.clone();
+        Sampler::Dpm2m.step(&d, &mut a, &eps, &hist, 50, None, Some(100));
+        d.step(&mut b, &eps, 50, None);
+        assert_eq!(a, b, "the final step degrades to first order");
+    }
+
+    #[test]
+    fn dpm2m_with_constant_eps_matches_ddim() {
+        // constant noise estimate: the extrapolation D collapses to
+        // eps, so second order equals first order exactly
+        let d = ddim();
+        let eps = [0.7f32, -0.4];
+        let hist = vec![eps.to_vec()];
+        let mut a = vec![0.9f32, -1.1];
+        let mut b = a.clone();
+        Sampler::Dpm2m.step(&d, &mut a, &eps, &hist, 500, Some(450), Some(550));
+        d.step(&mut b, &eps, 500, Some(450));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dpm2m_second_order_matches_reference_formula() {
+        let d = ddim();
+        let (t_last, t, t_prev) = (550usize, 500usize, 450usize);
+        let eps = [0.3f32, -1.2];
+        let prev = [0.5f32, -1.0];
+        let x = [1.0f32, -2.0];
+        let mut got = x.to_vec();
+        Sampler::Dpm2m.step(
+            &d,
+            &mut got,
+            &eps,
+            &[prev.to_vec()],
+            t,
+            Some(t_prev),
+            Some(t_last),
+        );
+        let acp = &d.alphas_cumprod;
+        let lam = |a: f64| (a.sqrt() / (1.0 - a).sqrt()).ln();
+        let h = lam(acp[t_prev]) - lam(acp[t]);
+        let h_last = lam(acp[t]) - lam(acp[t_last]);
+        let c = h / (2.0 * h_last);
+        for i in 0..2 {
+            let dd = (1.0 + c) * eps[i] as f64 - c * prev[i] as f64;
+            let x0 = (x[i] as f64 - (1.0 - acp[t]).sqrt() * dd) / acp[t].sqrt();
+            let want = (acp[t_prev].sqrt() * x0 + (1.0 - acp[t_prev]).sqrt() * dd) as f32;
+            assert!((got[i] - want).abs() < 1e-6, "elem {i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn remember_is_bounded_and_recycles() {
+        let mut h: Vec<Vec<f32>> = Vec::new();
+        Sampler::Ddim.remember(&mut h, &[1.0, 2.0]);
+        assert!(h.is_empty(), "zero-history solvers record nothing");
+        Sampler::Dpm2m.remember(&mut h, &[1.0, 2.0]);
+        assert_eq!(h, vec![vec![1.0, 2.0]]);
+        Sampler::Dpm2m.remember(&mut h, &[3.0, 4.0]);
+        assert_eq!(h, vec![vec![3.0, 4.0]], "bounded at history_len");
+    }
+
+    #[test]
+    fn multistep_trajectory_diverges_from_ddim_then_lands_close() {
+        // same surrogate UNet (eps := 0.1 * latent), 8 steps: the two
+        // solvers must agree on step one (no history), then differ
+        let d = ddim();
+        let ts = Sampler::Dpm2m.schedule(&d, 8);
+        let run = |sampler: Sampler| -> Vec<f32> {
+            let mut latent = vec![1.0f32, -0.5, 0.25, 2.0];
+            let mut history: Vec<Vec<f32>> = Vec::new();
+            for (i, &t) in ts.iter().enumerate() {
+                let eps: Vec<f32> = latent.iter().map(|v| 0.1 * v).collect();
+                let t_prev = ts.get(i + 1).copied();
+                let t_last = if i > 0 { Some(ts[i - 1]) } else { None };
+                sampler.step(&d, &mut latent, &eps, &history, t, t_prev, t_last);
+                sampler.remember(&mut history, &eps);
+            }
+            latent
+        };
+        let a = run(Sampler::Ddim);
+        let b = run(Sampler::Dpm2m);
+        assert_ne!(a, b, "second order must actually change the trajectory");
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 0.2 * x.abs().max(1.0),
+                "solvers should land near each other: {x} vs {y}"
+            );
+        }
+    }
+}

@@ -256,7 +256,8 @@ pub fn write_fake_artifacts(dir: &Path, spec: &FakeArtifactSpec) -> Result<()> {
             "  \"guidance_scale\": {gs:.1},\n",
             "  \"alphas_cumprod\": [{alphas}],\n",
             "  \"timesteps\": [{timesteps}],\n",
-            "  \"golden\": {{\"latent0\": [], \"eps_scale\": 0.1, \"trace\": []}}\n",
+            "  \"golden\": {{\"latent0\": [], \"eps_scale\": 0.1, \"trace\": [], ",
+            "\"multistep_trace\": []}}\n",
             "}},\n",
             "\"tokenizer\": {{\"vocab_size\": {vocab}, \"seq_len\": {seq}, ",
             "\"golden\": []}}\n",

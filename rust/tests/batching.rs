@@ -21,6 +21,7 @@ use mobile_diffusion::pipeline::{
     BatchRequest, ExecOptions, ExecOverrides, PipelinedExecutor,
 };
 use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::scheduler::Sampler;
 use mobile_diffusion::testkit::{self, throughput, FakeArtifactSpec};
 
 fn small_spec() -> FakeArtifactSpec {
@@ -93,6 +94,67 @@ fn batched_b4_matches_solo_bit_for_bit_with_one_dispatch_per_step() {
         assert_eq!(r.latent, solo_latents[i], "request {i}: latents bit-identical");
         assert_eq!(r.image, solo_images[i], "request {i}: images bit-identical");
         assert_eq!(r.timings.denoise_steps, steps);
+    }
+}
+
+#[test]
+fn every_sampler_is_batch_invariant_bit_for_bit() {
+    // acceptance: batch-of-4 equals four solo runs for EVERY member of
+    // the sampler family — the multistep eps history and the distilled
+    // fixed schedules must be per-row state, invisible to batching
+    let dir = testkit::fake_artifacts_dir("samplerparity", &small_spec()).unwrap();
+    let steps = 6;
+    let prompts = ["an astronaut", "a lighthouse", "a bowl of ramen", "a puppy"];
+    let mut ddim_latents: Vec<Vec<f32>> = Vec::new();
+
+    for sampler in Sampler::ALL {
+        let ov = |_: usize| ExecOverrides { sampler: Some(sampler), ..Default::default() };
+
+        let mut solo = Vec::new();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let mut ex = executor(&dir, steps);
+            solo.push(ex.generate_with(prompt, i as u64 + 1, "mobile", &ov(i)).unwrap());
+        }
+
+        let mut ex = executor(&dir, steps);
+        let reqs: Vec<BatchRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| batch_req(p, i as u64 + 1, ov(i)))
+            .collect();
+        let results = ex.generate_batch(&reqs, "mobile");
+        let want_steps = sampler.effective_steps(steps);
+        let stats = ex.engine.device_stats();
+        assert_eq!(
+            stats.executions_of("unet_mobile"),
+            want_steps as u64,
+            "{}: one dispatch per step for the whole batch",
+            sampler.name()
+        );
+        for (i, r) in results.into_iter().enumerate() {
+            let r = r.unwrap();
+            assert_eq!(r.timings.denoise_steps, want_steps, "{} request {i}", sampler.name());
+            assert_eq!(
+                r.latent,
+                solo[i].latent,
+                "{} request {i}: batched latent bit-identical to solo",
+                sampler.name()
+            );
+            assert_eq!(
+                r.image,
+                solo[i].image,
+                "{} request {i}: batched image bit-identical to solo",
+                sampler.name()
+            );
+            match sampler {
+                Sampler::Ddim => ddim_latents.push(r.latent),
+                Sampler::Dpm2m => assert_ne!(
+                    r.latent, ddim_latents[i],
+                    "request {i}: the second-order solver must change the trajectory"
+                ),
+                _ => {}
+            }
+        }
     }
 }
 

@@ -34,6 +34,7 @@ use mobile_diffusion::pipeline::{
     ExecOptions, ExecOverrides, GenerateResult, PipelinedExecutor, StageTimings,
 };
 use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::scheduler::Sampler;
 use mobile_diffusion::testkit::{self, FakeArtifactSpec};
 
 fn small_spec() -> FakeArtifactSpec {
@@ -158,6 +159,69 @@ fn retried_rows_are_bit_identical_to_a_fault_free_run() {
     );
     let report = server.metrics_report().unwrap();
     assert!(report.contains("faults:"), "{report}");
+}
+
+/// The same recovery guarantee under the second-order sampler: a dpm2m
+/// row interrupted mid-schedule by an injected transient fault resumes
+/// from a checkpoint that carries its eps history, so the retried row
+/// is bit-identical to a fault-free run — and terminal accounting is
+/// exact.
+#[test]
+fn retried_multistep_rows_resume_with_history_bit_identically() {
+    let dir = testkit::fake_artifacts_dir("chaos_dpm2m", &small_spec()).unwrap();
+    let baselines: Vec<_> = (0..3)
+        .map(|i| {
+            let m = Manifest::load(&dir).unwrap();
+            let mut ex = PipelinedExecutor::new(
+                m,
+                ExecOptions { num_steps: 20, ..Default::default() },
+            )
+            .unwrap();
+            let ov = ExecOverrides {
+                num_steps: Some(6),
+                sampler: Some(Sampler::Dpm2m),
+                ..Default::default()
+            };
+            ex.generate_with(&format!("prompt {i}"), i as u64, "mobile", &ov).unwrap()
+        })
+        .collect();
+
+    let mut cfg = faulted_cfg(dir);
+    // exactly one injected fault: the worker device's 4th dispatch,
+    // which lands mid-schedule where the eps history is non-empty
+    cfg.fault_spec = Some("dispatch:4:transient".into());
+    let mut server = Server::start(&cfg).unwrap();
+    let receivers: Vec<_> = (0..3)
+        .map(|i| {
+            let opts = SubmitOptions {
+                num_steps: Some(6),
+                sampler: Some("dpm2m".into()),
+                ..Default::default()
+            };
+            server.submit_with(&format!("prompt {i}"), i as u64, opts).unwrap()
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().expect("transient faults are absorbed by retry");
+        assert_eq!(resp.timings.denoise_steps, 6, "row {i}");
+        assert_eq!(
+            resp.latent, baselines[i].latent,
+            "row {i}: a retried multistep row must restore its eps history, not recompute it"
+        );
+        assert_eq!(resp.image, baselines[i].image, "row {i}: decoded image diverged");
+        assert!(rx.recv().is_err(), "row {i}: exactly one terminal reply");
+    }
+    server.with_metrics(|m| {
+        assert_eq!(m.stage.requests_ok, 3, "terminal accounting exact");
+        assert_eq!(m.stage.requests_failed, 0);
+        assert!(m.retries >= 1, "the interrupted rows went through the retry path");
+    });
+    wait_for(
+        || server.with_metrics(|m| m.injected_transient >= 1),
+        "the scheduled dispatch fault to surface in the metrics",
+    );
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("samplers: dpm2m=3"), "{report}");
 }
 
 /// Pool-level chaos: one worker panic plus a class whose device always

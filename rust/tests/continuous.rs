@@ -25,6 +25,7 @@ use mobile_diffusion::pipeline::{
     GenerateResult, LiveRow, PipelinedExecutor,
 };
 use mobile_diffusion::runtime::Manifest;
+use mobile_diffusion::scheduler::Sampler;
 use mobile_diffusion::testkit::{self, FakeArtifactSpec};
 
 fn small_spec() -> FakeArtifactSpec {
@@ -42,7 +43,11 @@ fn executor(dir: &Path, num_steps: usize) -> PipelinedExecutor {
 }
 
 fn key() -> BatchKey {
-    BatchKey { variant: "mobile".into(), weights_tag: "fp32".into() }
+    BatchKey {
+        variant: "mobile".into(),
+        weights_tag: "fp32".into(),
+        sampler: Sampler::Ddim,
+    }
 }
 
 fn job(prompt: &str, seed: u64, token: u64, steps: usize) -> ContinuousJob {
@@ -200,6 +205,76 @@ fn preempted_row_resumes_bit_identically_in_a_later_session() {
     assert_eq!(r.timings.denoise_steps, 8);
     // across both sessions, exactly one uninterrupted run's dispatches
     assert_eq!(ex.engine.device_stats().executions_of("unet_mobile"), 8);
+}
+
+#[test]
+fn multistep_row_joins_preempts_and_resumes_bit_identically() {
+    // acceptance: the second-order solver's eps history is row state —
+    // it rides the checkpoint, so a multistep row spliced into a live
+    // batch, preempted mid-schedule and resumed in a later session is
+    // bit-identical to an uninterrupted run
+    let dir = testkit::fake_artifacts_dir("cont_dpm2m", &small_spec()).unwrap();
+    let dpm_key = BatchKey {
+        variant: "mobile".into(),
+        weights_tag: "fp32".into(),
+        sampler: Sampler::Dpm2m,
+    };
+    let dpm_job = |prompt: &str, seed: u64, token: u64, steps: usize| {
+        let mut j = job(prompt, seed, token, steps);
+        j.req.overrides.sampler = Some(Sampler::Dpm2m);
+        j
+    };
+    let dpm_solo = |prompt: &str, seed: u64, steps: usize| {
+        let mut ex = executor(&dir, 20);
+        let ov = ExecOverrides {
+            num_steps: Some(steps),
+            sampler: Some(Sampler::Dpm2m),
+            ..Default::default()
+        };
+        ex.generate_with(prompt, seed, "mobile", &ov).unwrap()
+    };
+    let solo_a = dpm_solo("an astronaut", 1, 8);
+    let solo_b = dpm_solo("a lighthouse", 2, 6);
+
+    let mut ex = executor(&dir, 20);
+    let mut ctl = ScriptControl::default();
+    ctl.joins.push((1, dpm_job("a lighthouse", 2, 41, 6)));
+    ctl.preempts.push((3, 40));
+    let s1 = ex
+        .run_continuous(&dpm_key, "mobile", vec![dpm_job("an astronaut", 1, 40, 8)], 2, &mut ctl)
+        .unwrap();
+    // A runs dispatches 1..=3 then is preempted; B joins after dispatch
+    // 1 and runs 2..=7 to completion
+    assert_eq!(s1.joins, 1);
+    assert_eq!(s1.preemptions, 1);
+    assert_eq!(s1.steps, 7);
+    assert_eq!(s1.completed, 1);
+
+    let resumed = ctl.requeued.pop().expect("victim was requeued");
+    {
+        let cp = resumed.resume.as_ref().expect("victim carries a checkpoint");
+        assert_eq!(cp.pos, 3, "checkpoint taken mid-schedule");
+        assert_eq!(cp.ts.len(), 8);
+        assert_eq!(cp.history.len(), 1, "the eps history rides the checkpoint");
+        assert!(!cp.history[0].is_empty());
+    }
+
+    let s2 = ex
+        .run_continuous(&dpm_key, "mobile", vec![resumed], 2, &mut ctl)
+        .unwrap();
+    assert_eq!(s2.steps, 5, "only the remaining schedule ran");
+    assert_eq!(s2.resumes, 1);
+    assert_eq!(s2.completed, 1);
+
+    let a = ctl.result_of(40);
+    assert_eq!(a.latent, solo_a.latent, "resumed multistep row is bit-identical");
+    assert_eq!(a.image, solo_a.image);
+    assert_eq!(a.timings.denoise_steps, 8);
+    let b = ctl.result_of(41);
+    assert_eq!(b.latent, solo_b.latent, "multistep joiner is bit-identical");
+    assert_eq!(b.image, solo_b.image);
+    // co-batched dispatches: 7 in session one + 5 on resume
+    assert_eq!(ex.engine.device_stats().executions_of("unet_mobile"), 12);
 }
 
 #[test]

@@ -102,6 +102,66 @@ fn two_class_fleet_routes_rejects_and_reports() {
 }
 
 #[test]
+fn deadline_infeasible_for_50_step_ddim_is_served_by_the_distilled_sampler() {
+    // acceptance: a deadline no class can meet at 50 DDIM steps is
+    // rejected at admission, but the same deadline with the distilled
+    // 8-step sampler is admitted and served — the router prices the
+    // request at the sampler's effective step count, ~8/50 of the cost
+    let steps = 50usize;
+    let (fast50, slow50) = predictions(steps);
+    let (fast8, _slow8) = predictions(8);
+    assert!(fast50 < slow50);
+    assert!(fast8 < fast50, "8 steps must out-predict 50 ({fast8} vs {fast50})");
+
+    let dir = testkit::fake_artifacts_dir("fleet_sampler", &small_spec()).unwrap();
+    let mut cfg = AppConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.num_steps = steps;
+    cfg.queue_depth = 16;
+    cfg.fleet = Some("adreno740:1,bigcore:1".into());
+    let mut server = Server::start(&cfg).unwrap();
+
+    // below even the FAST class's 50-step prediction, above the fast
+    // class's 8-step prediction
+    let deadline = Duration::from_secs_f64((fast8 + fast50) / 2.0);
+
+    // 50-step DDIM: infeasible on every class, never queued
+    let opts = SubmitOptions { deadline: Some(deadline), ..Default::default() };
+    let err = server
+        .generate_with("ddim under a distilled-only deadline", 1, opts)
+        .expect_err("no class serves 50 DDIM steps inside the deadline");
+    assert!(err.to_string().contains("infeasible"), "{err}");
+
+    // the same deadline with the distilled 8-step sampler is feasible
+    let opts = SubmitOptions {
+        deadline: Some(deadline),
+        sampler: Some("distilled8".into()),
+        ..Default::default()
+    };
+    let resp = server.generate_with("distilled8 makes it feasible", 2, opts).unwrap();
+    assert_eq!(resp.timings.denoise_steps, 8, "the distilled schedule actually ran");
+    let predicted = resp.predicted_s.expect("planned fleets carry predictions");
+    let plans = PlanRegistry::new();
+    let want = plans
+        .plan(&device_spec(&resp.device_class).unwrap(), "mobile")
+        .unwrap()
+        .predict_service_s(8);
+    assert!(
+        (predicted - want).abs() < 1e-9,
+        "priced at the 8-step prediction: {predicted} vs {want}"
+    );
+    assert!(predicted <= deadline.as_secs_f64());
+
+    server.with_metrics(|m| {
+        assert_eq!(m.rejected_infeasible, 1, "the DDIM request was rejected at admission");
+        assert_eq!(m.stage.requests_ok, 1);
+        assert_eq!(m.stage.requests_failed, 0);
+    });
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("samplers: distilled8=1"), "{report}");
+}
+
+#[test]
 fn fleet_respects_variant_overrides_in_routing() {
     let dir = testkit::fake_artifacts_dir("fleet_variant", &small_spec()).unwrap();
     let mut cfg = AppConfig::default();

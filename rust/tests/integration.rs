@@ -14,7 +14,7 @@ use mobile_diffusion::passes;
 use mobile_diffusion::pipeline::{ExecOptions, PipelinedExecutor};
 use mobile_diffusion::quant::WeightFile;
 use mobile_diffusion::runtime::{ActInput, Component, Engine, Manifest};
-use mobile_diffusion::scheduler::Ddim;
+use mobile_diffusion::scheduler::{Ddim, Sampler};
 use mobile_diffusion::tokenizer;
 use mobile_diffusion::util::stats;
 
@@ -94,6 +94,38 @@ fn scheduler_matches_python_golden_trace() {
         let eps: Vec<f32> = latent.iter().map(|&v| v * g.eps_scale as f32).collect();
         let t_prev = ts.get(i + 1).copied();
         ddim.step(&mut latent, &eps, ts[i], t_prev);
+        for (a, &b) in latent.iter().zip(row) {
+            assert!((*a as f64 - b).abs() < 1e-4, "step {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn scheduler_matches_python_golden_multistep_trace() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let g = &m.scheduler.golden;
+    if g.multistep_trace.is_empty() {
+        eprintln!("skipping: manifest predates the sampler family");
+        return;
+    }
+    let ddim = Ddim::from_alphas(m.scheduler.params.clone(), m.scheduler.alphas_cumprod.clone());
+
+    // golden DPM-Solver++(2M) replay: the full 8-step schedule with the
+    // same eps := eps_scale * latent surrogate; the whole schedule is
+    // checked because the eps history makes later rows depend on every
+    // earlier one
+    let sampler = Sampler::Dpm2m;
+    let ts = sampler.schedule(&ddim, 8);
+    assert_eq!(g.multistep_trace.len(), ts.len());
+    let mut latent: Vec<f32> = g.latent0.iter().map(|&v| v as f32).collect();
+    let mut history: Vec<Vec<f32>> = Vec::new();
+    for (i, row) in g.multistep_trace.iter().enumerate() {
+        let eps: Vec<f32> = latent.iter().map(|&v| v * g.eps_scale as f32).collect();
+        let t_prev = ts.get(i + 1).copied();
+        let t_last = if i > 0 { Some(ts[i - 1]) } else { None };
+        sampler.step(&ddim, &mut latent, &eps, &history, ts[i], t_prev, t_last);
+        sampler.remember(&mut history, &eps);
         for (a, &b) in latent.iter().zip(row) {
             assert!((*a as f64 - b).abs() < 1e-4, "step {i}: {a} vs {b}");
         }
